@@ -1,0 +1,186 @@
+//! End-to-end driver: every layer of the stack on one real workload.
+//!
+//! 1. **Train** (Layer 3): a 10-class TM (1280 clauses) on a synthetic
+//!    MNIST-like dataset, logging the accuracy curve and epoch times for
+//!    the indexed vs naive evaluators.
+//! 2. **Serve** (Layers 1–3): register the trained machine with the
+//!    coordinator twice — `cpu` (clause-indexed Rust hot path) and
+//!    `xla` (the AOT-compiled JAX/Pallas artifact through PJRT) — then
+//!    drive concurrent batched clients against both, reporting
+//!    throughput, latency quantiles, and cross-backend agreement.
+//!
+//! The model shape (784 features, 1280 clauses, 10 classes) matches the
+//! `tm_b32_f784_c1280_m10` artifact emitted by `make artifacts`; without
+//! artifacts the XLA route is skipped with a notice.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_train_serve
+//! ```
+//!
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use tsetlin_index::coordinator::{
+    BatchPolicy, Coordinator, CpuBackend, ServeBackend as _, XlaBackend,
+};
+use tsetlin_index::data::synth::{image_dataset, ImageStyle};
+use tsetlin_index::data::Dataset;
+use tsetlin_index::eval::Backend;
+use tsetlin_index::runtime::{Manifest, Runtime};
+use tsetlin_index::tm::io::DenseModel;
+use tsetlin_index::tm::params::TMParams;
+use tsetlin_index::tm::trainer::Trainer;
+use tsetlin_index::util::Rng;
+
+const FEATURES: usize = 784;
+const CLAUSES_TOTAL: usize = 1280;
+const CLASSES: usize = 10;
+
+fn train_phase(train: &Dataset, test: &Dataset) -> Trainer {
+    println!("== phase 1: training ({} train / {} test samples) ==", train.len(), test.len());
+    let params = TMParams::from_total_clauses(CLASSES, CLAUSES_TOTAL, FEATURES)
+        .with_threshold(25)
+        .with_s(5.0)
+        .with_seed(42);
+
+    // A/B the two evaluators on identical trajectories.
+    let mut indexed = Trainer::new(params.clone(), Backend::Indexed);
+    let mut naive = Trainer::new(params, Backend::Naive);
+    for epoch in 1..=6 {
+        let mut order_rng = Rng::new(1000 + epoch);
+        let order = train.epoch_order(&mut order_rng);
+        let t0 = Instant::now();
+        indexed.train_epoch(train.iter_order(&order));
+        let t_idx = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        naive.train_epoch(train.iter_order(&order));
+        let t_nv = t0.elapsed().as_secs_f64();
+        let acc = indexed.accuracy(test.iter());
+        println!(
+            "epoch {epoch}: accuracy {acc:.3}  epoch-time indexed {t_idx:.2}s / naive {t_nv:.2}s (speedup {:.2}x)  clause-len {:.1}",
+            t_nv / t_idx,
+            indexed.tm.mean_clause_length()
+        );
+    }
+    assert_eq!(
+        indexed.tm.bank(0).states(),
+        naive.tm.bank(0).states(),
+        "backends must train identical machines"
+    );
+    indexed
+}
+
+fn serve_phase(trainer: Trainer, test: &Dataset) {
+    println!("\n== phase 2: serving ==");
+    let tm = trainer.tm;
+    let dense = DenseModel::from_tm(&tm);
+    let mut coord = Coordinator::new();
+    coord.register(
+        "cpu",
+        Box::new(CpuBackend::new(tm.clone(), Backend::Indexed)),
+        BatchPolicy {
+            max_batch: 32,
+            max_wait: std::time::Duration::from_micros(200),
+        },
+    );
+
+    let artifacts = std::path::Path::new("artifacts");
+    let mut have_xla = false;
+    if artifacts.join("manifest.json").exists() {
+        let dense_for_worker = dense.clone();
+        let res = coord.register_with(
+            "xla",
+            move || {
+                let manifest = Manifest::load("artifacts")?;
+                let meta = manifest
+                    .pick(32, FEATURES, CLAUSES_TOTAL, CLASSES)
+                    .ok_or_else(|| anyhow::anyhow!("no matching artifact variant"))?
+                    .clone();
+                let rt = Runtime::cpu()?;
+                let exe = rt.load_artifact(&manifest.hlo_path(&meta), meta)?;
+                let mut be = XlaBackend::new(rt, exe, &dense_for_worker)?;
+                // warm the executable (first run includes PJRT setup)
+                let warm = vec![tsetlin_index::util::BitVec::ones(2 * FEATURES)];
+                let _ = be.infer_batch(&warm)?;
+                Ok(Box::new(be) as _)
+            },
+            BatchPolicy {
+                max_batch: 32,
+                max_wait: std::time::Duration::from_millis(1),
+            },
+        );
+        match res {
+            Ok(()) => have_xla = true,
+            Err(e) => println!("xla route unavailable: {e:#}"),
+        }
+    } else {
+        println!("artifacts/ missing — run `make artifacts` for the XLA route");
+    }
+
+    let handle = coord.handle();
+    let routes: Vec<&str> = if have_xla { vec!["cpu", "xla"] } else { vec!["cpu"] };
+    for route in &routes {
+        let requests = 2000usize.min(test.len() * 10);
+        let clients = 8;
+        let counter = Arc::new(AtomicUsize::new(0));
+        let correct = Arc::new(AtomicUsize::new(0));
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for _ in 0..clients {
+                let handle = handle.clone();
+                let counter = Arc::clone(&counter);
+                let correct = Arc::clone(&correct);
+                let test = &test;
+                let route: String = route.to_string();
+                scope.spawn(move || loop {
+                    let i = counter.fetch_add(1, Ordering::Relaxed);
+                    if i >= requests {
+                        break;
+                    }
+                    let idx = i % test.len();
+                    let p = handle.infer(&route, test.literals(idx).clone()).unwrap();
+                    if p.class == test.label(idx) {
+                        correct.fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        let secs = t0.elapsed().as_secs_f64();
+        let m = coord.metrics(route).unwrap();
+        println!(
+            "route {route:<4}: {requests} reqs in {secs:.2}s = {:.0} req/s | p50 {}us p99 {}us | mean batch {:.1} | accuracy {:.3}",
+            requests as f64 / secs,
+            m.latency_quantile_us(0.5).unwrap_or(0),
+            m.latency_quantile_us(0.99).unwrap_or(0),
+            m.mean_batch_size(),
+            correct.load(Ordering::Relaxed) as f64 / requests as f64,
+        );
+    }
+
+    // cross-backend agreement on a sample of requests
+    if have_xla {
+        let agree = (0..200)
+            .filter(|&i| {
+                let lits = test.literals(i % test.len()).clone();
+                let a = handle.infer("cpu", lits.clone()).unwrap();
+                let b = handle.infer("xla", lits).unwrap();
+                a.class == b.class && a.scores == b.scores
+            })
+            .count();
+        println!("cpu/xla agreement: {agree}/200 (scores bit-identical)");
+        assert_eq!(agree, 200, "backends disagree!");
+    }
+    coord.shutdown();
+}
+
+fn main() {
+    let all = image_dataset(ImageStyle::Digits, CLASSES, 2600, 1, 42);
+    let train = all.slice(0, 2000);
+    let test = all.slice(2000, 2600);
+    let trainer = train_phase(&train, &test);
+    serve_phase(trainer, &test);
+    println!("\ne2e OK");
+}

@@ -1,0 +1,67 @@
+//! IMDb-style sentiment analysis — the paper's sparsest, highest-payoff
+//! workload (up to 15x inference speedup at 20k clauses).
+//!
+//! Trains a two-class TM on a Zipf bag-of-words (or a real exported BoW
+//! file via `--bow-file` semantics of the `tmi` CLI), then compares
+//! inference cost across all three CPU backends at growing clause
+//! counts — a miniature of the paper's Fig. 6.
+//!
+//! ```bash
+//! cargo run --release --example imdb_sentiment
+//! ```
+
+use tsetlin_index::data::synth::bow;
+use tsetlin_index::eval::Backend;
+use tsetlin_index::tm::params::TMParams;
+use tsetlin_index::tm::trainer::Trainer;
+use tsetlin_index::util::timer::time_it;
+use tsetlin_index::util::Rng;
+
+fn main() {
+    let features = 5000;
+    let train = bow(features, 600, 21);
+    let test = bow(features, 300, 22);
+    println!(
+        "IMDb-like BoW: {} features, density {:.1}%, {} train / {} test docs\n",
+        features,
+        train.mean_feature_density() * 100.0,
+        train.len(),
+        test.len()
+    );
+
+    for total_clauses in [200usize, 500, 1000, 2000] {
+        let params = TMParams::from_total_clauses(2, total_clauses, features)
+            .with_threshold(20)
+            .with_s(8.0);
+        let mut trainer = Trainer::new(params, Backend::Indexed);
+        let mut order_rng = Rng::new(5);
+        let mut train_s = 0.0;
+        for _ in 0..2 {
+            let order = train.epoch_order(&mut order_rng);
+            let (_, s) = time_it(|| trainer.train_epoch(train.iter_order(&order)));
+            train_s = s; // keep last epoch (clause lengths in regime)
+        }
+        let acc = trainer.accuracy(test.iter());
+
+        let mut line = format!(
+            "clauses {total_clauses:>5}  acc {acc:.3}  train/epoch {train_s:>7.2}s  inference: "
+        );
+        let mut naive_time = 0.0;
+        for backend in [Backend::Naive, Backend::BitPacked, Backend::Indexed] {
+            let mut clf = Trainer::from_machine(trainer.tm.clone(), backend);
+            let (_, secs) = time_it(|| clf.accuracy(test.iter()));
+            if backend == Backend::Naive {
+                naive_time = secs;
+            }
+            line += &format!(
+                "{} {:.3}s ({:.1}x)  ",
+                backend.name(),
+                secs,
+                naive_time / secs
+            );
+        }
+        println!("{line}");
+    }
+    println!("\n(speedup = naive time / backend time; the paper's Table 2 pattern —");
+    println!(" indexed inference pulls away as clauses grow — should be visible.)");
+}

@@ -1,0 +1,70 @@
+//! Noisy XOR — the canonical TM benchmark (Granmo 2018), plus the
+//! interpretability payoff: print the learned clauses and check they
+//! are exactly the XOR minterms.
+//!
+//! y = x0 XOR x1, with 10 distractor features and flipped labels on a
+//! noise fraction of training samples. A plain TM must learn the four
+//! minterm clauses x0∧¬x1, ¬x0∧x1 (positive) / x0∧x1, ¬x0∧¬x1
+//! (negative) despite the noise — non-linearly separable, the case
+//! §1/Fig. 1 calls out.
+//!
+//! ```bash
+//! cargo run --release --example noisy_xor
+//! ```
+
+use tsetlin_index::data::Dataset;
+use tsetlin_index::eval::Backend;
+use tsetlin_index::tm::interpret;
+use tsetlin_index::tm::params::TMParams;
+use tsetlin_index::tm::trainer::Trainer;
+use tsetlin_index::util::Rng;
+
+const FEATURES: usize = 12; // x0, x1 + 10 distractors
+const NOISE: f64 = 0.15;
+
+fn xor_data(n: usize, noisy: bool, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut rows = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let bits: Vec<bool> = (0..FEATURES).map(|_| rng.bern(0.5)).collect();
+        let mut y = (bits[0] ^ bits[1]) as usize;
+        if noisy && rng.bern(NOISE) {
+            y = 1 - y;
+        }
+        rows.push(bits);
+        labels.push(y);
+    }
+    Dataset::from_rows("noisy-xor", FEATURES, 2, &rows, labels)
+}
+
+fn main() {
+    let train = xor_data(5000, true, 1);
+    let test = xor_data(2000, false, 2);
+
+    let params = TMParams::new(2, 20, FEATURES)
+        .with_threshold(15)
+        .with_s(3.9)
+        .with_seed(4);
+    let mut tr = Trainer::new(params, Backend::Indexed);
+    let mut order_rng = Rng::new(3);
+    for epoch in 1..=30 {
+        let order = train.epoch_order(&mut order_rng);
+        tr.train_epoch(train.iter_order(&order));
+        if epoch % 10 == 0 {
+            println!(
+                "epoch {epoch:>2}: noise-free test accuracy {:.3}",
+                tr.accuracy(test.iter())
+            );
+        }
+    }
+    let acc = tr.accuracy(test.iter());
+    println!("\nfinal accuracy on noise-free XOR: {acc:.3} (label noise was {NOISE})");
+    assert!(acc > 0.95, "TM should see through the label noise");
+
+    println!("\nlearned clauses (class 1 = XOR true), top 6 by specificity:");
+    for line in interpret::top_clauses(&tr.tm, 1, 6, None) {
+        println!("  {line}");
+    }
+    println!("\nexpected minterms: x0 ∧ ¬x1 and ¬x0 ∧ x1 dominate the positive polarity.");
+}

@@ -1,0 +1,58 @@
+//! Quickstart: train a clause-indexed Tsetlin Machine on a synthetic
+//! MNIST-like dataset, evaluate it, save it, reload it, and classify a
+//! sample — the whole public API in ~60 lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use tsetlin_index::data::synth::{image_dataset, ImageStyle};
+use tsetlin_index::eval::Backend;
+use tsetlin_index::tm::io;
+use tsetlin_index::tm::params::TMParams;
+use tsetlin_index::tm::trainer::Trainer;
+use tsetlin_index::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Data: 10-class 28x28 synthetic digits, 1-bit binarized (784
+    //    features). Swap in `data::mnist::load_idx` for real MNIST.
+    let all = image_dataset(ImageStyle::Digits, 10, 2400, 1, 42);
+    let train = all.slice(0, 2000);
+    let test = all.slice(2000, 2400);
+
+    // 2. Machine: 100 clauses/class, the paper's indexed evaluator.
+    let params = TMParams::new(10, 100, train.features)
+        .with_threshold(20)
+        .with_s(5.0);
+    let mut trainer = Trainer::new(params, Backend::Indexed);
+
+    // 3. Train a few epochs.
+    let mut order_rng = Rng::new(7);
+    for epoch in 1..=5 {
+        let order = train.epoch_order(&mut order_rng);
+        let t0 = std::time::Instant::now();
+        trainer.train_epoch(train.iter_order(&order));
+        println!(
+            "epoch {epoch}: {:.2}s, accuracy {:.3}, mean clause length {:.1}",
+            t0.elapsed().as_secs_f64(),
+            trainer.accuracy(test.iter()),
+            trainer.tm.mean_clause_length(),
+        );
+    }
+
+    // 4. Persist and reload.
+    let path = std::env::temp_dir().join("quickstart.tm");
+    io::save(&trainer.tm, &path)?;
+    let reloaded = io::load(&path)?;
+    println!("saved + reloaded model: {} bytes", std::fs::metadata(&path)?.len());
+
+    // 5. Classify one sample with a fresh evaluator (any backend reads
+    //    the same machine).
+    let mut clf = Trainer::from_machine(reloaded, Backend::Indexed);
+    let predicted = clf.predict(test.literals(0));
+    println!(
+        "sample 0: predicted class {predicted}, true class {}",
+        test.label(0)
+    );
+    Ok(())
+}

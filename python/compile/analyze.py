@@ -1,0 +1,118 @@
+"""L1/L2 performance analysis: HLO cost model + VMEM/MXU estimates.
+
+Run after `make artifacts` to produce the §Perf numbers for Layers 1–2
+(EXPERIMENTS.md). Two parts:
+
+* **XLA cost analysis** of each lowered variant (FLOPs, bytes accessed,
+  fusion count) — catches redundant recomputation and broken fusion at
+  the L2 level.
+* **Analytical TPU estimate** for the Pallas kernel: VMEM working set
+  per grid step and MXU utilization bound from the tile shapes. The CPU
+  interpret-mode wallclock is NOT a TPU proxy (DESIGN.md), so the
+  real-hardware story is stated as arithmetic: bytes streamed vs FLOPs
+  vs the 16 MiB VMEM budget.
+
+Usage: cd python && python -m compile.analyze
+"""
+
+import jax
+import numpy as np
+
+from . import model
+from .kernels import clause_eval
+
+
+def hlo_cost(fn, *shapes):
+    """Compile and return XLA's cost analysis dict."""
+    lowered = jax.jit(fn).lower(*shapes)
+    compiled = lowered.compile()
+    try:
+        return compiled.cost_analysis()
+    except Exception:
+        return {}
+
+
+def analyze_variant(batch, features, clauses, classes, fused=True):
+    args = model.example_args(batch, features, clauses, classes)
+    fn = model.tm_forward if fused else model.tm_forward_unfused
+    cost = hlo_cost(fn, *args)
+    if isinstance(cost, list):  # some jax versions return [dict]
+        cost = cost[0]
+    flops = cost.get("flops", float("nan"))
+    bytes_ = cost.get("bytes accessed", float("nan"))
+    # analytic contraction cost: (B x 2o) @ (2o x n) MACs
+    mac_flops = 2.0 * batch * 2 * features * clauses
+    return {
+        "name": f"b{batch}_f{features}_c{clauses}_m{classes}{'':s}"
+        + ("" if fused else "_unfused"),
+        "xla_flops": flops,
+        "xla_bytes": bytes_,
+        "contraction_flops": mac_flops,
+        "flops_ratio": flops / mac_flops if mac_flops else float("nan"),
+    }
+
+
+def vmem_report(batch, features, clauses, classes):
+    """VMEM working set + MXU bound for the fused kernel's tiling."""
+    bb = clause_eval.DEFAULT_BLOCK_B
+    bk = clause_eval.DEFAULT_BLOCK_K
+    n = clauses
+    m = classes
+    f32 = 4
+    lit_tile = bb * bk * f32
+    inc_tile = bk * n * f32
+    acc = bb * n * f32
+    pol = n * m * f32
+    count = n * f32
+    out = bb * m * f32
+    total = lit_tile + inc_tile + acc + pol + count + out
+    # double-buffer the streamed operands (lit + inc)
+    total_db = total + lit_tile + inc_tile
+    # MXU: 128x128 systolic; utilization bound = how full the tiles are
+    util_b = min(bb, 128) / 128 if bb < 128 else 1.0
+    util = util_b  # k and n dims exceed 128 here
+    return {
+        "tile_bytes": total,
+        "tile_bytes_double_buffered": total_db,
+        "vmem_budget": 16 << 20,
+        "fits": total_db < (16 << 20),
+        "mxu_utilization_bound": util,
+    }
+
+
+def main():
+    print("== L2: XLA cost analysis of AOT variants ==")
+    for b, f, c, m, fused in [
+        (32, 784, 1280, 10, True),
+        (32, 784, 1280, 10, False),
+        (32, 256, 512, 2, True),
+    ]:
+        r = analyze_variant(b, f, c, m, fused)
+        print(
+            f"  {r['name']:<32} xla_flops={r['xla_flops']:.3e} "
+            f"contraction={r['contraction_flops']:.3e} "
+            f"ratio={r['flops_ratio']:.3f} bytes={r['xla_bytes']:.3e}"
+        )
+    print(
+        "\n  ratio ~1.0 => no redundant recompute; fused < unfused bytes =>\n"
+        "  the vote epilogue stayed in registers/VMEM instead of HBM."
+    )
+
+    print("\n== L1: Pallas kernel VMEM/MXU estimate (fused variant) ==")
+    for b, f, c, m in [(32, 784, 1280, 10), (32, 256, 512, 2)]:
+        r = vmem_report(b, f, c, m)
+        print(
+            f"  b{b}_f{f}_c{c}_m{m}: tile {r['tile_bytes']/1024:.0f} KiB "
+            f"(x2 buf {r['tile_bytes_double_buffered']/1024:.0f} KiB) "
+            f"of {r['vmem_budget']>>20} MiB VMEM -> fits={r['fits']}, "
+            f"MXU bound {r['mxu_utilization_bound']:.2f} (batch-limited)"
+        )
+    print(
+        "\n  note: batch=32 fills 32/128 MXU rows; serve with batch>=128 on\n"
+        "  real TPUs for full systolic occupancy (artifact variants are a\n"
+        "  build-time knob)."
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""AOT entry point: lower the L2 model to HLO text artifacts.
+
+Run once at build time (``make artifacts``); the Rust runtime loads the
+resulting ``artifacts/*.hlo.txt`` via ``HloModuleProto::from_text_file``
+and never touches Python again.
+
+HLO *text* — not ``lowered.compile().serialize()`` and not a serialized
+HloModuleProto — is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids that the crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+A ``manifest.json`` records every variant's shapes so the Rust artifact
+registry can pick an executable by (batch, features, clauses, classes) and
+marshal buffers without re-deriving shapes from HLO.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (name, batch, features, clauses_total, classes, fused)
+# Shapes chosen for the serving demo + the backend ablation bench; the
+# datasets' full 20k-clause configs run on the Rust CPU paths (that is the
+# paper's own setting), the XLA backend handles the batched-serving sizes.
+DEFAULT_VARIANTS = [
+    ("tm_b32_f784_c1280_m10", 32, 784, 1280, 10, True),
+    ("tm_b1_f784_c1280_m10", 1, 784, 1280, 10, True),
+    ("tm_b32_f784_c1280_m10_unfused", 32, 784, 1280, 10, False),
+    ("tm_b32_f256_c512_m2", 32, 256, 512, 2, True),
+    ("tm_b8_f128_c128_m4", 8, 128, 128, 4, True),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(batch, features, clauses, classes, fused=True) -> str:
+    fn = model.tm_forward if fused else model.tm_forward_unfused
+    args = model.example_args(batch, features, clauses, classes)
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--variant",
+        action="append",
+        default=None,
+        metavar="NAME:B:F:C:M[:unfused]",
+        help="extra variant spec; may repeat",
+    )
+    args = ap.parse_args()
+
+    variants = list(DEFAULT_VARIANTS)
+    for spec in args.variant or []:
+        parts = spec.split(":")
+        name, b, f, c, m = parts[0], *map(int, parts[1:5])
+        fused = len(parts) < 6 or parts[5] != "unfused"
+        variants.append((name, b, f, c, m, fused))
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "variants": []}
+    for name, b, f, c, m, fused in variants:
+        text = lower_variant(b, f, c, m, fused)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(text)
+        manifest["variants"].append(
+            {
+                "name": name,
+                "file": f"{name}.hlo.txt",
+                "batch": b,
+                "features": f,
+                "clauses": c,
+                "classes": m,
+                "fused": fused,
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    print(f"wrote manifest with {len(manifest['variants'])} variants")
+
+
+if __name__ == "__main__":
+    main()

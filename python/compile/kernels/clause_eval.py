@@ -1,0 +1,170 @@
+"""Layer-1 Pallas kernel: Tsetlin-Machine clause evaluation by falsification.
+
+The paper evaluates clauses on a CPU by walking per-literal inclusion
+*lists* — pointer chasing that a TPU cannot express. The same insight
+("count falsifying literals; a clause is true iff the count is zero") maps
+onto the MXU as a dense contraction:
+
+    falsified[b, j] = sum_k include[k, j] * (1 - literal[b, k])
+
+which is a (B, 2o) x (2o, n) matmul over the 0/1 include-mask. This kernel
+tiles that contraction for VMEM:
+
+  * grid = (B/Bb, n/Bn, 2o/Bk); the k axis is innermost so each (i, j)
+    output tile stays resident in VMEM across the whole reduction —
+    falsification counts never round-trip to HBM mid-reduction.
+  * the literal tile (Bb, Bk) and include tile (Bk, Bn) stream through
+    VMEM; with the default blocks the working set is
+    Bb*Bk + Bk*Bn + Bb*Bn floats = (32*512 + 512*256 + 32*256)*4B ≈ 0.6 MiB,
+    comfortably inside the ~16 MiB VMEM budget with room for
+    double-buffering the streamed operands.
+  * on a real MXU the operands would be bf16 with f32 accumulation; counts
+    are small integers (≤ 2o ≤ 40000) so f32 accumulation is exact.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; correctness is validated against ``ref.py`` and the real-TPU
+performance story is an analytical estimate (DESIGN.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Default VMEM tile shape. Bk is the streamed reduction depth; Bb x Bn is
+# the resident accumulator tile.
+DEFAULT_BLOCK_B = 32
+DEFAULT_BLOCK_N = 256
+DEFAULT_BLOCK_K = 512
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _falsify_kernel(lit_ref, inc_ref, out_ref):
+    """One (i, j, k) grid step: accumulate falsification counts.
+
+    out_ref is the (Bb, Bn) accumulator tile, revisited for every k; the
+    first k step zero-initialises it.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # Complement of the literal tile: 1 where the literal is FALSE.
+    comp = 1.0 - lit_ref[...]
+    out_ref[...] += jnp.dot(comp, inc_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_n", "block_k"))
+def falsified_counts(
+    literals,
+    include,
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+):
+    """(B, 2o) literals x (2o, n) include-mask -> (B, n) falsified counts.
+
+    Shapes need not be multiples of the block sizes; inputs are
+    zero-padded. Padding is semantically inert: padded literal columns are
+    set to 1 (a true literal never falsifies) and padded include
+    rows/columns are 0.
+    """
+    b, k = literals.shape
+    k2, n = include.shape
+    assert k == k2, f"literal width {k} != include rows {k2}"
+
+    bp, kp, np_ = _ceil_to(b, block_b), _ceil_to(k, block_k), _ceil_to(n, block_n)
+    lit_p = jnp.pad(literals, ((0, bp - b), (0, kp - k)), constant_values=1.0)
+    inc_p = jnp.pad(include, ((0, kp - k), (0, np_ - n)))
+
+    grid = (bp // block_b, np_ // block_n, kp // block_k)
+    out = pl.pallas_call(
+        _falsify_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bp, np_), jnp.float32),
+        interpret=True,
+    )(lit_p, inc_p)
+    return out[:b, :n]
+
+
+def _fused_kernel(lit_ref, inc_ref, count_ref, pol_ref, out_ref, acc_ref):
+    """Fused variant: falsify + threshold + vote, one kernel.
+
+    Grid = (B/Bb, 2o/Bk) — the clause axis is NOT tiled (whole rows of the
+    include-mask stream through), so the ==0 epilogue and the polarity
+    vote run per batch-tile without clause outputs ever touching HBM.
+    ``acc_ref`` is the (Bb, n) VMEM scratch accumulator.
+    """
+    k = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    comp = 1.0 - lit_ref[...]
+    acc_ref[...] += jnp.dot(comp, inc_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        alive = count_ref[...] > 0.5
+        clause_out = jnp.where((acc_ref[...] < 0.5) & alive[None, :], 1.0, 0.0)
+        out_ref[...] = jnp.dot(
+            clause_out, pol_ref[...], preferred_element_type=jnp.float32
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_k"))
+def class_scores_fused(
+    literals,
+    include,
+    count,
+    polarity,
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    block_k: int = DEFAULT_BLOCK_K,
+):
+    """(B, m) class scores with the vote epilogue fused into the kernel.
+
+    Clause outputs live only in VMEM scratch — the paper's "don't
+    materialise per-clause work" idea, TPU edition. Applicable while
+    Bb * n * 4B fits VMEM alongside the streamed tiles (n ≤ ~64k).
+    """
+    b, k = literals.shape
+    k2, n = include.shape
+    m = polarity.shape[1]
+    assert k == k2 and polarity.shape[0] == n and count.shape == (n,)
+
+    bp, kp = _ceil_to(b, block_b), _ceil_to(k, block_k)
+    lit_p = jnp.pad(literals, ((0, bp - b), (0, kp - k)), constant_values=1.0)
+    inc_p = jnp.pad(include, ((0, kp - k), (0, 0)))
+
+    grid = (bp // block_b, kp // block_k)
+    out = pl.pallas_call(
+        _fused_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_k), lambda i, kk: (i, kk)),
+            pl.BlockSpec((block_k, n), lambda i, kk: (kk, 0)),
+            pl.BlockSpec((n,), lambda i, kk: (0,)),
+            pl.BlockSpec((n, m), lambda i, kk: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, m), lambda i, kk: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, m), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_b, n), jnp.float32)],
+        interpret=True,
+    )(lit_p, inc_p, count, polarity)
+    return out[:b, :]

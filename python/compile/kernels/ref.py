@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the clause-evaluation kernel.
+
+This is the CORE correctness signal for Layer 1: the Pallas kernel in
+``clause_eval.py`` must agree with these functions exactly (they are exact
+small-integer computations carried in f32, so ``assert_allclose`` with
+rtol=0 is appropriate).
+
+Semantics (paper §2–§3, re-expressed densely — see DESIGN.md
+§Hardware-Adaptation):
+
+  falsified[b, j] = sum_k include[k, j] * (1 - literal[b, k])
+  clause_out[b, j] = 1  iff  falsified[b, j] == 0 and count[j] > 0
+  score[b, i]     = sum_j polarity[j, i] * clause_out[b, j]
+
+``include`` is the dense (2o, n_total) 0/1 include-mask — the transpose of
+the paper's inclusion lists. ``count[j]`` is the number of included
+literals of clause j; empty clauses vote 0 at inference time (standard TM
+convention). ``polarity`` is (n_total, m) with +1/-1 at (j, class(j)) and 0
+elsewhere, so the vote reduction is a second matmul.
+"""
+
+import jax.numpy as jnp
+
+
+def falsified_counts(literals, include):
+    """(B, 2o) x (2o, n) -> (B, n) count of included-but-false literals."""
+    return (1.0 - literals) @ include
+
+
+def clause_outputs(literals, include, count):
+    """0/1 clause outputs with the empty-clause-votes-zero convention."""
+    fals = falsified_counts(literals, include)
+    alive = count > 0.5
+    return jnp.where((fals < 0.5) & alive[None, :], 1.0, 0.0)
+
+
+def class_scores(literals, include, count, polarity):
+    """(B, m) class vote sums — the quantity eq. (3) argmaxes over."""
+    out = clause_outputs(literals, include, count)
+    return out @ polarity
+
+
+def predict(literals, include, count, polarity):
+    return jnp.argmax(class_scores(literals, include, count, polarity), axis=-1)

@@ -1,0 +1,57 @@
+"""Layer-2 JAX model: dense Tsetlin-Machine forward pass.
+
+This is the compute graph the Rust runtime executes for batched inference
+(the "dense vectorized baseline" of DESIGN.md and the XLA backend of the
+serving coordinator). It calls the Layer-1 Pallas kernel for the
+falsification contraction and adds the vote/argmax epilogue.
+
+The TM state is passed IN as dense arrays (the Rust side owns the TA
+states and densifies its include-masks when it refreshes the XLA model):
+
+  literals  (B, 2o) f32 0/1 — batch literal values [x, ¬x]
+  include   (2o, n) f32 0/1 — include-mask over all classes' clauses
+  count     (n,)    f32     — included-literal count per clause
+  polarity  (n, m)  f32     — ±1 at (clause, its class), 0 elsewhere
+
+Outputs are a tuple (scores, prediction) so one executable serves both the
+vote-margin path (the coordinator applies its own thresholding) and the
+plain classification path.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import clause_eval
+
+
+def tm_forward(literals, include, count, polarity):
+    """Class scores (B, m) and argmax predictions (B,) as int32."""
+    scores = clause_eval.class_scores_fused(literals, include, count, polarity)
+    pred = jnp.argmax(scores, axis=-1).astype(jnp.int32)
+    return scores, pred
+
+
+def tm_forward_unfused(literals, include, count, polarity):
+    """Same semantics, tiled (unfused) kernel + XLA-side epilogue.
+
+    Used for the L1 ablation (fused vs unfused) and as a fallback when the
+    clause axis exceeds the fused kernel's VMEM budget.
+    """
+    fals = clause_eval.falsified_counts(literals, include)
+    alive = count > 0.5
+    out = jnp.where((fals < 0.5) & alive[None, :], 1.0, 0.0)
+    scores = out @ polarity
+    pred = jnp.argmax(scores, axis=-1).astype(jnp.int32)
+    return scores, pred
+
+
+def example_args(batch: int, features: int, clauses_total: int, classes: int):
+    """ShapeDtypeStructs for AOT lowering of either forward."""
+    import jax
+
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((batch, 2 * features), f32),
+        jax.ShapeDtypeStruct((2 * features, clauses_total), f32),
+        jax.ShapeDtypeStruct((clauses_total,), f32),
+        jax.ShapeDtypeStruct((clauses_total, classes), f32),
+    )

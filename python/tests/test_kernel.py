@@ -1,0 +1,149 @@
+"""L1 correctness: Pallas kernel vs pure-jnp oracle.
+
+The computations are exact (small-integer arithmetic in f32), so equality
+is asserted with zero tolerance. Hypothesis sweeps shapes, block sizes and
+densities; fixed seeds keep the suite deterministic.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import clause_eval as ce
+from compile.kernels import ref
+
+
+def make_problem(rng, batch, features, clauses, classes, density):
+    lits = rng.integers(0, 2, (batch, 2 * features)).astype(np.float32)
+    inc = (rng.random((2 * features, clauses)) < density).astype(np.float32)
+    count = inc.sum(0).astype(np.float32)
+    pol = np.zeros((clauses, classes), np.float32)
+    for j in range(clauses):
+        pol[j, j % classes] = 1.0 if (j // classes) % 2 == 0 else -1.0
+    return lits, inc, count, pol
+
+
+@pytest.mark.parametrize("batch,features,clauses", [
+    (1, 16, 8),
+    (3, 100, 37),       # nothing divides the block sizes
+    (32, 784, 640),     # MNIST-shaped
+    (5, 513, 257),      # just past block boundaries
+    (64, 64, 1024),     # clause-heavy
+])
+def test_falsified_counts_matches_ref(batch, features, clauses):
+    rng = np.random.default_rng(42)
+    lits, inc, _, _ = make_problem(rng, batch, features, clauses, 2, 0.05)
+    got = ce.falsified_counts(jnp.asarray(lits), jnp.asarray(inc))
+    want = ref.falsified_counts(lits, inc)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("batch,features,clauses,classes", [
+    (1, 16, 8, 2),
+    (7, 100, 37, 4),
+    (32, 784, 1280, 10),  # the serving artifact shape
+    (9, 300, 50, 3),
+])
+def test_fused_scores_match_ref(batch, features, clauses, classes):
+    rng = np.random.default_rng(7)
+    lits, inc, count, pol = make_problem(rng, batch, features, clauses, classes, 0.08)
+    got = ce.class_scores_fused(
+        jnp.asarray(lits), jnp.asarray(inc), jnp.asarray(count), jnp.asarray(pol)
+    )
+    want = ref.class_scores(lits, inc, count, pol)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_empty_clause_votes_zero():
+    """Standard TM convention: a clause with no includes outputs 0."""
+    lits = np.ones((2, 8), np.float32)
+    inc = np.zeros((8, 4), np.float32)
+    inc[0, 1] = 1.0  # clause 1 includes literal 0 (true) -> clause out 1
+    count = inc.sum(0).astype(np.float32)
+    pol = np.ones((4, 1), np.float32)
+    got = np.asarray(ce.class_scores_fused(
+        jnp.asarray(lits), jnp.asarray(inc), jnp.asarray(count), jnp.asarray(pol)))
+    # only clause 1 alive and true -> score 1, empty clauses contribute 0
+    np.testing.assert_array_equal(got, np.ones((2, 1), np.float32))
+
+
+def test_all_literals_false_falsifies_everything():
+    lits = np.zeros((3, 10), np.float32)
+    inc = np.ones((10, 6), np.float32)
+    count = inc.sum(0).astype(np.float32)
+    pol = np.ones((6, 2), np.float32)
+    got = np.asarray(ce.class_scores_fused(
+        jnp.asarray(lits), jnp.asarray(inc), jnp.asarray(count), jnp.asarray(pol)))
+    np.testing.assert_array_equal(got, np.zeros((3, 2), np.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    batch=st.integers(1, 40),
+    features=st.integers(1, 300),
+    clauses=st.integers(1, 300),
+    classes=st.integers(1, 8),
+    density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31),
+)
+def test_hypothesis_fused_vs_ref(batch, features, clauses, classes, density, seed):
+    rng = np.random.default_rng(seed)
+    lits, inc, count, pol = make_problem(rng, batch, features, clauses, classes, density)
+    got = ce.class_scores_fused(
+        jnp.asarray(lits), jnp.asarray(inc), jnp.asarray(count), jnp.asarray(pol)
+    )
+    want = ref.class_scores(lits, inc, count, pol)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    batch=st.integers(1, 16),
+    features=st.integers(1, 200),
+    clauses=st.integers(1, 200),
+    block_b=st.sampled_from([8, 16, 32]),
+    block_k=st.sampled_from([64, 128, 512]),
+    block_n=st.sampled_from([64, 128, 256]),
+    seed=st.integers(0, 2**31),
+)
+def test_hypothesis_block_size_invariance(
+    batch, features, clauses, block_b, block_k, block_n, seed
+):
+    """Tiling must never change the numbers."""
+    rng = np.random.default_rng(seed)
+    lits, inc, _, _ = make_problem(rng, batch, features, clauses, 2, 0.1)
+    got = ce.falsified_counts(
+        jnp.asarray(lits), jnp.asarray(inc),
+        block_b=block_b, block_k=block_k, block_n=block_n,
+    )
+    want = ref.falsified_counts(lits, inc)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_weighted_polarity_matrix():
+    """Weighted TMs encode ±weight in the polarity matrix; the kernel's
+    vote epilogue must carry arbitrary integer magnitudes exactly."""
+    rng = np.random.default_rng(21)
+    lits, inc, count, pol = make_problem(rng, 9, 120, 48, 5, 0.08)
+    weights = rng.integers(1, 40, 48).astype(np.float32)
+    pol = pol * weights[:, None]
+    got = ce.class_scores_fused(
+        jnp.asarray(lits), jnp.asarray(inc), jnp.asarray(count), jnp.asarray(pol)
+    )
+    want = ref.class_scores(lits, inc, count, pol)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fused_int_dtype_inputs_rejected_gracefully():
+    """Kernel contract is f32; int inputs should either work or raise."""
+    lits = np.ones((2, 8), np.int32)
+    inc = np.zeros((8, 4), np.float32)
+    count = inc.sum(0).astype(np.float32)
+    pol = np.ones((4, 1), np.float32)
+    try:
+        ce.class_scores_fused(
+            jnp.asarray(lits).astype(jnp.float32), jnp.asarray(inc),
+            jnp.asarray(count), jnp.asarray(pol))
+    except Exception as exc:  # pragma: no cover
+        pytest.fail(f"f32-cast path must work: {exc}")

@@ -1,0 +1,80 @@
+"""L2 model-level tests: forward semantics, fused/unfused agreement, AOT."""
+
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+from tests.test_kernel import make_problem
+
+
+@pytest.mark.parametrize("batch,features,clauses,classes", [
+    (4, 64, 40, 5),
+    (32, 784, 1280, 10),
+])
+def test_fused_and_unfused_agree(batch, features, clauses, classes):
+    rng = np.random.default_rng(3)
+    lits, inc, count, pol = make_problem(rng, batch, features, clauses, classes, 0.06)
+    a = [jnp.asarray(x) for x in (lits, inc, count, pol)]
+    s1, p1 = model.tm_forward(*a)
+    s2, p2 = model.tm_forward_unfused(*a)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+
+
+def test_predictions_are_argmax_of_scores():
+    rng = np.random.default_rng(11)
+    lits, inc, count, pol = make_problem(rng, 16, 128, 96, 6, 0.1)
+    scores, pred = model.tm_forward(
+        jnp.asarray(lits), jnp.asarray(inc), jnp.asarray(count), jnp.asarray(pol)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(pred), np.argmax(np.asarray(scores), axis=-1)
+    )
+
+
+def test_scores_match_oracle_end_to_end():
+    rng = np.random.default_rng(5)
+    lits, inc, count, pol = make_problem(rng, 8, 200, 64, 3, 0.07)
+    scores, _ = model.tm_forward(
+        jnp.asarray(lits), jnp.asarray(inc), jnp.asarray(count), jnp.asarray(pol)
+    )
+    want = ref.class_scores(lits, inc, count, pol)
+    np.testing.assert_array_equal(np.asarray(scores), np.asarray(want))
+
+
+def test_lower_variant_produces_hlo_text():
+    text = aot.lower_variant(2, 16, 8, 2)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # dense contraction must survive lowering as a real dot
+    assert "dot(" in text or "dot." in text
+
+
+def test_lower_variant_unfused_differs():
+    fused = aot.lower_variant(2, 16, 8, 2, fused=True)
+    unfused = aot.lower_variant(2, 16, 8, 2, fused=False)
+    assert fused != unfused
+
+
+def test_manifest_consistent_with_artifacts():
+    """If artifacts/ exists (built by `make artifacts`), validate it."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    man_path = os.path.join(art, "manifest.json")
+    if not os.path.exists(man_path):
+        pytest.skip("artifacts not built")
+    with open(man_path) as fh:
+        man = json.load(fh)
+    assert man["format"] == "hlo-text"
+    for v in man["variants"]:
+        path = os.path.join(art, v["file"])
+        assert os.path.exists(path), v["file"]
+        with open(path) as fh:
+            head = fh.read(64)
+        assert "HloModule" in head
+        for key in ("batch", "features", "clauses", "classes"):
+            assert v[key] > 0

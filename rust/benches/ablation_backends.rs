@@ -1,0 +1,117 @@
+//! Ablation (not in the paper): what part of the indexed speedup is
+//! "skip the work" vs "the baseline is scalar"?
+//!
+//! Compares inference cost on one trained machine across:
+//!   naive      — the paper's baseline (scalar TA-state scan)
+//!   bitpacked  — 64-way bit-parallel scan (a stronger baseline)
+//!   indexed    — the paper's contribution
+//!   xla        — the dense AOT kernel via PJRT (Layers 1/2), if
+//!                `artifacts/` is built and a variant matches
+//!
+//! ```bash
+//! make artifacts && cargo bench --bench ablation_backends
+//! ```
+
+mod bench_util;
+
+use bench_util::bench;
+use tsetlin_index::data::synth::{image_dataset, ImageStyle};
+use tsetlin_index::eval::Backend;
+use tsetlin_index::runtime::{Manifest, Runtime};
+use tsetlin_index::tm::io::DenseModel;
+use tsetlin_index::tm::params::TMParams;
+use tsetlin_index::tm::trainer::Trainer;
+use tsetlin_index::util::Rng;
+
+const FEATURES: usize = 784;
+const CLAUSES_TOTAL: usize = 1280;
+const CLASSES: usize = 10;
+
+fn main() {
+    // Train one machine at the artifact shape.
+    let all = image_dataset(ImageStyle::Digits, CLASSES, 1200, 1, 42);
+    let train = all.slice(0, 1000);
+    let test = all.slice(1000, 1200);
+    let params = TMParams::from_total_clauses(CLASSES, CLAUSES_TOTAL, FEATURES)
+        .with_threshold(25)
+        .with_s(5.0);
+    let mut trainer = Trainer::new(params, Backend::Indexed);
+    let mut order_rng = Rng::new(1);
+    for _ in 0..3 {
+        let order = train.epoch_order(&mut order_rng);
+        trainer.train_epoch(train.iter_order(&order));
+    }
+    println!(
+        "ablation_backends: o={FEATURES} total-clauses={CLAUSES_TOTAL} m={CLASSES}, mean clause len {:.1}, {} test samples\n",
+        trainer.tm.mean_clause_length(),
+        test.len()
+    );
+
+    let mut naive_s = 0.0;
+    for backend in [Backend::Naive, Backend::BitPacked, Backend::Indexed] {
+        let mut clf = Trainer::from_machine(trainer.tm.clone(), backend);
+        let (min, _) = bench(1, 5, || clf.accuracy(test.iter()));
+        if backend == Backend::Naive {
+            naive_s = min;
+        }
+        println!(
+            "{:<10} {:>8.2} ms / pass   {:>8.1} samples/ms   speedup vs naive {:>5.2}x",
+            backend.name(),
+            min * 1e3,
+            test.len() as f64 / (min * 1e3),
+            naive_s / min
+        );
+    }
+
+    // XLA route (batched) if artifacts exist.
+    match Manifest::load("artifacts") {
+        Err(_) => println!("\nxla        (skipped: run `make artifacts` first)"),
+        Ok(manifest) => {
+            let dense = DenseModel::from_tm(&trainer.tm);
+            let Some(meta) = manifest
+                .pick(32, FEATURES, CLAUSES_TOTAL, CLASSES)
+                .cloned()
+            else {
+                println!("\nxla        (skipped: no matching artifact variant)");
+                return;
+            };
+            let rt = Runtime::cpu().expect("PJRT CPU client");
+            let exe = rt.load_artifact(&manifest.hlo_path(&meta), meta).unwrap();
+            let prepared = rt.prepare_model(&exe, &dense).unwrap();
+            let batch = exe.meta.batch;
+            // pre-pack the literal batches
+            let n_lit = 2 * FEATURES;
+            let batches: Vec<(Vec<f32>, usize)> = (0..test.len())
+                .step_by(batch)
+                .map(|start| {
+                    let rows = batch.min(test.len() - start);
+                    let mut lits = vec![0f32; rows * n_lit];
+                    for b in 0..rows {
+                        for k in test.literals(start + b).iter_ones() {
+                            lits[b * n_lit + k] = 1.0;
+                        }
+                    }
+                    (lits, rows)
+                })
+                .collect();
+            let (min, _) = bench(1, 5, || {
+                let mut correct = 0usize;
+                for (i, (lits, rows)) in batches.iter().enumerate() {
+                    let fwd = exe.run(&rt, &prepared, lits, *rows).unwrap();
+                    for b in 0..*rows {
+                        if fwd.predictions[b] as usize == test.label(i * batch + b) {
+                            correct += 1;
+                        }
+                    }
+                }
+                correct
+            });
+            println!(
+                "xla        {:>8.2} ms / pass   {:>8.1} samples/ms   speedup vs naive {:>5.2}x   (batch={batch}, dense f32 matmul)",
+                min * 1e3,
+                test.len() as f64 / (min * 1e3),
+                naive_s / min
+            );
+        }
+    }
+}

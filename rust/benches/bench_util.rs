@@ -1,0 +1,39 @@
+//! Shared helpers for the hand-rolled bench binaries (the offline build
+//! has no criterion; see DESIGN.md §Substitutions). Methodology:
+//! warmup + N timed repetitions, report min/mean — min is the
+//! low-noise statistic for CPU-bound kernels.
+
+use std::time::Instant;
+
+/// Time `f` over `reps` repetitions after `warmup` untimed runs.
+/// Returns (min_secs, mean_secs).
+#[allow(dead_code)]
+pub fn bench<T>(warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> (f64, f64) {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let min = times.iter().copied().fold(f64::INFINITY, f64::min);
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    (min, mean)
+}
+
+/// ops/sec formatting.
+#[allow(dead_code)]
+pub fn rate(ops: usize, secs: f64) -> String {
+    let r = ops as f64 / secs;
+    if r > 1e9 {
+        format!("{:.2} Gop/s", r / 1e9)
+    } else if r > 1e6 {
+        format!("{:.2} Mop/s", r / 1e6)
+    } else if r > 1e3 {
+        format!("{:.2} Kop/s", r / 1e3)
+    } else {
+        format!("{r:.1} op/s")
+    }
+}

@@ -1,0 +1,80 @@
+//! Micro-bench: single-class clause evaluation throughput across the
+//! three CPU backends, over clause-density and clause-count sweeps.
+//!
+//! This isolates the quantity the paper's §3 Remarks reason about —
+//! evaluation work per sample — from training noise. Expect: naive ∝
+//! clauses × literals (early-exit helps at high density), bitpacked ∝
+//! clauses × literals/64, indexed ∝ falsified-literal list mass.
+//!
+//! ```bash
+//! cargo bench --bench eval_micro
+//! ```
+
+mod bench_util;
+
+use bench_util::{bench, rate};
+use tsetlin_index::eval::Backend;
+use tsetlin_index::tm::bank::ClauseBank;
+use tsetlin_index::tm::params::TMParams;
+use tsetlin_index::util::{BitVec, Rng};
+
+/// Build a bank with `clauses` clauses of ~`clause_len` random literals.
+fn make_bank(rng: &mut Rng, clauses: usize, n_lit: usize, clause_len: usize) -> ClauseBank {
+    let mut bank = ClauseBank::new(clauses, n_lit);
+    for j in 0..clauses {
+        let mut placed = 0;
+        while placed < clause_len {
+            let k = rng.below(n_lit as u32) as usize;
+            if !bank.include(j, k) {
+                bank.set_state(j, k, 1);
+                placed += 1;
+            }
+        }
+    }
+    bank
+}
+
+fn main() {
+    let mut rng = Rng::new(42);
+    println!("eval_micro: single-class score() throughput (min over 5 reps)\n");
+    println!(
+        "{:<30} {:>14} {:>14} {:>14}",
+        "config", "naive", "bitpacked", "indexed"
+    );
+
+    for &(features, clauses, clause_len) in &[
+        (784usize, 200usize, 58usize), // MNIST-shaped
+        (784, 2000, 58),
+        (5000, 200, 116), // IMDb-shaped
+        (5000, 1000, 116),
+        (784, 2000, 8), // short clauses: indexing's best case
+    ] {
+        let n_lit = 2 * features;
+        let bank = make_bank(&mut rng, clauses, n_lit, clause_len);
+        let params = TMParams::new(2, clauses, features);
+        // realistic input: half the literals false
+        let samples: Vec<BitVec> = (0..64)
+            .map(|_| {
+                let bits: Vec<bool> = (0..features).map(|_| rng.bern(0.5)).collect();
+                let mut lits = bits.clone();
+                lits.extend(bits.iter().map(|b| !b));
+                BitVec::from_bools(&lits)
+            })
+            .collect();
+
+        let mut row = format!("{:<30}", format!("o={features} n={clauses} len={clause_len}"));
+        for backend in [Backend::Naive, Backend::BitPacked, Backend::Indexed] {
+            let mut ev = backend.make(&params);
+            ev.rebuild(&bank);
+            let (min, _) = bench(2, 5, || {
+                let mut acc = 0i32;
+                for s in &samples {
+                    acc = acc.wrapping_add(ev.score(&bank, s));
+                }
+                acc
+            });
+            row += &format!(" {:>14}", rate(samples.len(), min));
+        }
+        println!("{row}");
+    }
+}

@@ -1,0 +1,72 @@
+//! Micro-bench: index maintenance — the paper's O(1) insert/delete —
+//! under dense and sparse position stores, plus full rebuild cost.
+//!
+//! The training tables hinge on maintenance staying negligible next to
+//! feedback; this bench pins the per-flip cost in nanoseconds.
+//!
+//! ```bash
+//! cargo bench --bench index_ops
+//! ```
+
+mod bench_util;
+
+use bench_util::{bench, rate};
+use tsetlin_index::index::ClassIndex;
+use tsetlin_index::tm::bank::ClauseBank;
+use tsetlin_index::util::Rng;
+
+fn bench_store(label: &str, mut index: ClassIndex, clauses: usize, n_lit: usize) {
+    let mut rng = Rng::new(7);
+    // steady-state flip churn: random alternating insert/delete pairs
+    let flips: Vec<(u32, u32)> = (0..10_000)
+        .map(|_| (rng.below(clauses as u32), rng.below(n_lit as u32)))
+        .collect();
+    let (min, _) = bench(1, 5, || {
+        for &(j, k) in &flips {
+            index.insert(j, k, 2, 1); // count>1: vote baseline untouched
+            index.delete(j, k, 1, 1);
+        }
+    });
+    println!(
+        "{label:<42} {:>14} per insert+delete pair",
+        rate(flips.len(), min)
+    );
+}
+
+fn main() {
+    println!("index_ops: inclusion-list maintenance (min over 5 reps)\n");
+    // MNIST-shaped (dense position matrix fits easily)
+    bench_store(
+        "dense  o=784  n=2000 (MNIST-shaped)",
+        ClassIndex::new(2000, 1568),
+        2000,
+        1568,
+    );
+    // IMDb-shaped — dense store at 1000 clauses (160 MB matrix)...
+    let n_lit = 40_000;
+    let mut dense = ClassIndex::new(1000, n_lit);
+    assert!(dense.position_store().is_dense());
+    bench_store("dense  o=20000 n=1000 (IMDb-shaped)", dense.clone(), 1000, n_lit);
+    // ...and the sparse store past the dense budget (paper-full scale)
+    let mut sparse = ClassIndex::new(10_000, n_lit);
+    assert!(!sparse.position_store().is_dense());
+    bench_store("sparse o=20000 n=10000 (paper-full IMDb)", sparse.clone(), 10_000, n_lit);
+
+    // rebuild cost (model load path)
+    let mut rng = Rng::new(9);
+    let mut bank = ClauseBank::new(2000, 1568);
+    for j in 0..2000 {
+        for _ in 0..58 {
+            let k = rng.below(1568) as usize;
+            bank.set_state(j, k, 1);
+        }
+    }
+    let (min, _) = bench(1, 3, || {
+        dense.rebuild(&bank);
+    });
+    println!("\nrebuild o=784 n=2000 len~58: {:.2} ms", min * 1e3);
+    let (min, _) = bench(1, 3, || {
+        sparse.rebuild(&bank);
+    });
+    println!("rebuild same bank, sparse store: {:.2} ms", min * 1e3);
+}

@@ -1,0 +1,36 @@
+//! Regenerates **Table 1** (MNIST indexing speedups) and the data for
+//! **Figures 3–4** (epoch time vs clause count).
+//!
+//! Scale via `TMI_SCALE=quick|standard|paper` (default quick). Output:
+//! paper-layout markdown table + CSVs under `results/`.
+//!
+//! ```bash
+//! TMI_SCALE=standard cargo bench --bench table1_mnist
+//! ```
+
+use std::path::Path;
+
+use tsetlin_index::bench_harness::figures::write_figures;
+use tsetlin_index::bench_harness::report::write_csv;
+use tsetlin_index::bench_harness::tables::{run_table, Scale, TableId};
+
+fn main() {
+    let scale = Scale::from_env();
+    eprintln!(
+        "table1_mnist: clauses {:?} x levels {:?}, {} train / {} test samples",
+        scale.clause_grid, scale.image_levels, scale.train_samples, scale.test_samples
+    );
+    let data_dir = std::env::var("TMI_DATA_DIR").ok();
+    let table = run_table(
+        TableId::Mnist,
+        &scale,
+        data_dir.as_deref().map(Path::new),
+        |cell| eprintln!("  {cell}"),
+    );
+    println!("{}", table.render_markdown());
+    let out = Path::new("results");
+    let (headers, rows) = table.csv_rows();
+    write_csv(&out.join("table1.csv"), &headers, &rows).unwrap();
+    let figs = write_figures(&table, out).unwrap();
+    eprintln!("wrote results/table1.csv + {}", figs.join(", "));
+}

@@ -1,0 +1,32 @@
+//! Regenerates **Table 2** (IMDb indexing speedups) and the data for
+//! **Figures 5–6**.
+//!
+//! The paper's qualitative claims for this workload: inference speedup
+//! is the largest of the three datasets (13–15x at 20k clauses), while
+//! *training* is slightly SLOWER with indexing (~0.85–1.0x) — index
+//! maintenance outweighs the eval savings on very sparse BoW data.
+//!
+//! ```bash
+//! TMI_SCALE=standard cargo bench --bench table2_imdb
+//! ```
+
+use std::path::Path;
+
+use tsetlin_index::bench_harness::figures::write_figures;
+use tsetlin_index::bench_harness::report::write_csv;
+use tsetlin_index::bench_harness::tables::{run_table, Scale, TableId};
+
+fn main() {
+    let scale = Scale::from_env();
+    eprintln!(
+        "table2_imdb: clauses {:?} x features {:?}, {} train / {} test samples",
+        scale.clause_grid, scale.bow_features, scale.train_samples, scale.test_samples
+    );
+    let table = run_table(TableId::Imdb, &scale, None, |cell| eprintln!("  {cell}"));
+    println!("{}", table.render_markdown());
+    let out = Path::new("results");
+    let (headers, rows) = table.csv_rows();
+    write_csv(&out.join("table2.csv"), &headers, &rows).unwrap();
+    let figs = write_figures(&table, out).unwrap();
+    eprintln!("wrote results/table2.csv + {}", figs.join(", "));
+}

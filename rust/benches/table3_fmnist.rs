@@ -1,0 +1,37 @@
+//! Regenerates **Table 3** (Fashion-MNIST indexing speedups) and the
+//! data for **Figures 7–8**.
+//!
+//! Fashion-MNIST sits between MNIST and IMDb: denser images → longer
+//! clauses → smaller (but still several-fold) inference speedups, and
+//! training speedups that only materialize at higher clause counts.
+//!
+//! ```bash
+//! TMI_SCALE=standard cargo bench --bench table3_fmnist
+//! ```
+
+use std::path::Path;
+
+use tsetlin_index::bench_harness::figures::write_figures;
+use tsetlin_index::bench_harness::report::write_csv;
+use tsetlin_index::bench_harness::tables::{run_table, Scale, TableId};
+
+fn main() {
+    let scale = Scale::from_env();
+    eprintln!(
+        "table3_fmnist: clauses {:?} x levels {:?}, {} train / {} test samples",
+        scale.clause_grid, scale.image_levels, scale.train_samples, scale.test_samples
+    );
+    let data_dir = std::env::var("TMI_DATA_DIR").ok();
+    let table = run_table(
+        TableId::Fashion,
+        &scale,
+        data_dir.as_deref().map(Path::new),
+        |cell| eprintln!("  {cell}"),
+    );
+    println!("{}", table.render_markdown());
+    let out = Path::new("results");
+    let (headers, rows) = table.csv_rows();
+    write_csv(&out.join("table3.csv"), &headers, &rows).unwrap();
+    let figs = write_figures(&table, out).unwrap();
+    eprintln!("wrote results/table3.csv + {}", figs.join(", "));
+}

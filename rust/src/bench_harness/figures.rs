@@ -1,0 +1,159 @@
+//! Figures 3–8: average epoch time (train / inference) as a function of
+//! clause count, indexed vs unindexed, one series per feature size.
+//!
+//! The figures plot exactly the measurements the tables tabulate, so a
+//! [`TableResult`] renders directly into figure CSVs — one file per
+//! figure, one row per clause count, one column pair per feature size.
+//! The paper's qualitative claims to verify: both series grow ~linearly
+//! in clause count with similar slopes, and the indexed series sits
+//! several-fold lower at inference.
+
+use std::path::Path;
+
+use crate::bench_harness::report::write_csv;
+use crate::bench_harness::tables::{TableId, TableResult};
+
+/// Which time series a figure plots.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Train,
+    Inference,
+}
+
+/// Paper figure ids and their (table, phase) mapping.
+pub fn figure_spec(fig: usize) -> Option<(TableId, Phase)> {
+    match fig {
+        3 => Some((TableId::Mnist, Phase::Train)),
+        4 => Some((TableId::Mnist, Phase::Inference)),
+        5 => Some((TableId::Imdb, Phase::Train)),
+        6 => Some((TableId::Imdb, Phase::Inference)),
+        7 => Some((TableId::Fashion, Phase::Train)),
+        8 => Some((TableId::Fashion, Phase::Inference)),
+        _ => None,
+    }
+}
+
+/// Render one figure's CSV: `clauses, <f>_naive_s, <f>_indexed_s, ...`
+pub fn figure_csv(table: &TableResult, phase: Phase) -> (Vec<String>, Vec<Vec<String>>) {
+    let mut headers = vec!["clauses".to_string()];
+    for label in &table.col_labels {
+        headers.push(format!("f{label}_naive_s"));
+        headers.push(format!("f{label}_indexed_s"));
+    }
+    let rows: Vec<Vec<String>> = table
+        .clause_grid
+        .iter()
+        .enumerate()
+        .map(|(r, &clauses)| {
+            let mut row = vec![clauses.to_string()];
+            for col in &table.cells {
+                let cell = &col[r];
+                let (naive, indexed) = match phase {
+                    Phase::Train => {
+                        (cell.baseline.train_epoch_s, cell.indexed.train_epoch_s)
+                    }
+                    Phase::Inference => (cell.baseline.test_s, cell.indexed.test_s),
+                };
+                row.push(format!("{naive:.6}"));
+                row.push(format!("{indexed:.6}"));
+            }
+            row
+        })
+        .collect();
+    (headers, rows)
+}
+
+/// Write both figures derived from one table (e.g. Figs. 3+4 from
+/// Table 1's cells) into `out_dir/figN_<name>.csv`.
+pub fn write_figures(table: &TableResult, out_dir: &Path) -> std::io::Result<Vec<String>> {
+    let (figs, name) = match table.id {
+        TableId::Mnist => ([3usize, 4], "mnist"),
+        TableId::Imdb => ([5, 6], "imdb"),
+        TableId::Fashion => ([7, 8], "fmnist"),
+    };
+    let mut written = Vec::new();
+    for fig in figs {
+        let (_, phase) = figure_spec(fig).unwrap();
+        let (headers, rows) = figure_csv(table, phase);
+        let header_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+        let path = out_dir.join(format!(
+            "fig{fig}_{name}_{}.csv",
+            match phase {
+                Phase::Train => "train",
+                Phase::Inference => "inference",
+            }
+        ));
+        write_csv(&path, &header_refs, &rows)?;
+        written.push(path.display().to_string());
+    }
+    Ok(written)
+}
+
+/// Check the paper's qualitative claim on a series: time grows roughly
+/// linearly with clause count (R² of a least-squares line).
+pub fn linearity_r2(clauses: &[usize], times: &[f64]) -> f64 {
+    assert_eq!(clauses.len(), times.len());
+    let n = clauses.len() as f64;
+    if n < 2.0 {
+        return 1.0;
+    }
+    let xs: Vec<f64> = clauses.iter().map(|&c| c as f64).collect();
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = times.iter().sum::<f64>() / n;
+    let sxy: f64 = xs.iter().zip(times).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let sxx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    let syy: f64 = times.iter().map(|y| (y - my) * (y - my)).sum();
+    if sxx == 0.0 || syy == 0.0 {
+        return 1.0;
+    }
+    (sxy * sxy) / (sxx * syy)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_harness::tables::{run_table, Scale};
+
+    #[test]
+    fn figure_mapping_is_complete() {
+        for fig in 3..=8 {
+            assert!(figure_spec(fig).is_some(), "figure {fig}");
+        }
+        assert!(figure_spec(1).is_none());
+        assert!(figure_spec(9).is_none());
+    }
+
+    #[test]
+    fn figures_from_micro_table() {
+        let scale = Scale {
+            train_samples: 50,
+            test_samples: 30,
+            clause_grid: vec![20, 40],
+            image_levels: vec![1],
+            bow_features: vec![200],
+            warmup_epochs: 0,
+            timed_epochs: 1,
+        };
+        let t = run_table(TableId::Mnist, &scale, None, |_| {});
+        let (headers, rows) = figure_csv(&t, Phase::Train);
+        assert_eq!(headers, vec!["clauses", "f784_naive_s", "f784_indexed_s"]);
+        assert_eq!(rows.len(), 2);
+        let dir = std::env::temp_dir().join(format!("tmi-figs-{}", std::process::id()));
+        let written = write_figures(&t, &dir).unwrap();
+        assert_eq!(written.len(), 2);
+        assert!(written[0].contains("fig3_mnist_train"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn r2_of_perfect_line_is_one() {
+        let r2 = linearity_r2(&[1, 2, 3, 4], &[2.0, 4.0, 6.0, 8.0]);
+        assert!((r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn r2_of_noise_is_low() {
+        let r2 = linearity_r2(&[1, 2, 3, 4, 5, 6], &[5.0, 1.0, 4.0, 2.0, 5.0, 1.0]);
+        assert!(r2 < 0.5, "r2={r2}");
+    }
+}

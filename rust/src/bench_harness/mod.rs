@@ -1,0 +1,20 @@
+//! Bench harness: regenerates every table and figure of the paper's
+//! evaluation section (§4) on this machine.
+//!
+//! * [`speedup`] — the core measurement: train/inference epoch times for
+//!   a (dataset, clauses, features) cell under two backends; speedup =
+//!   t_unindexed / t_indexed (the paper's Tables 1–3 cells).
+//! * [`tables`] — the three table grids (M1–M4, I1–I4, F1–F4).
+//! * [`figures`] — epoch-time-vs-clauses series (Figs. 3–8) as CSV.
+//! * [`report`] — markdown/CSV emission.
+//!
+//! Absolute seconds depend on the machine; the paper's *shape* —
+//! who wins, by what factor, where the crossovers sit — is what the
+//! harness is expected to reproduce (see EXPERIMENTS.md).
+
+pub mod figures;
+pub mod report;
+pub mod speedup;
+pub mod tables;
+
+pub use speedup::{measure_speedup, ExpConfig, SpeedupResult};

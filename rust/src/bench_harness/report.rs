@@ -1,0 +1,83 @@
+//! Markdown / CSV emission for harness results.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Render a GitHub-flavoured markdown table.
+pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "| {} |", headers.join(" | "));
+    let _ = writeln!(
+        out,
+        "|{}|",
+        headers.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+    );
+    for row in rows {
+        let _ = writeln!(out, "| {} |", row.join(" | "));
+    }
+    out
+}
+
+/// Write a CSV file (no quoting needed for our numeric payloads).
+pub fn write_csv(path: &Path, headers: &[&str], rows: &[Vec<String>]) -> std::io::Result<()> {
+    let mut text = String::new();
+    let _ = writeln!(text, "{}", headers.join(","));
+    for row in rows {
+        let _ = writeln!(text, "{}", row.join(","));
+    }
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, text)
+}
+
+/// Format a float with 2 decimals (paper table style).
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+/// Format seconds with adaptive precision.
+pub fn secs(x: f64) -> String {
+    if x < 0.001 {
+        format!("{:.1}us", x * 1e6)
+    } else if x < 1.0 {
+        format!("{:.2}ms", x * 1e3)
+    } else {
+        format!("{x:.2}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_shape() {
+        let t = markdown_table(
+            &["a", "b"],
+            &[vec!["1".into(), "2".into()], vec!["3".into(), "4".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[0], "| a | b |");
+        assert_eq!(lines[1], "|---|---|");
+        assert_eq!(lines[3], "| 3 | 4 |");
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let p = std::env::temp_dir().join(format!("tmi-csv-{}.csv", std::process::id()));
+        write_csv(&p, &["x", "y"], &[vec!["1".into(), "2.5".into()]]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "x,y\n1,2.5\n");
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(f2(3.14159), "3.14");
+        assert_eq!(secs(0.0000005), "0.5us");
+        assert_eq!(secs(0.5), "500.00ms");
+        assert_eq!(secs(2.0), "2.00s");
+    }
+}

@@ -1,0 +1,173 @@
+//! The core speedup measurement (one cell of Tables 1–3).
+//!
+//! Protocol: for each backend, train `warmup_epochs` (untimed — lets
+//! clause lengths reach a representative regime, as the paper's
+//! averages over full training runs do), then time `timed_epochs` of
+//! training and one inference pass over the test set. Training is
+//! deterministic given the seed, so both backends traverse *identical*
+//! machines — the comparison isolates pure evaluation/maintenance cost.
+
+use crate::data::Dataset;
+use crate::eval::Backend;
+use crate::tm::params::TMParams;
+use crate::tm::trainer::Trainer;
+use crate::util::timer::time_it;
+use crate::util::Rng;
+
+/// One experiment cell.
+#[derive(Clone, Debug)]
+pub struct ExpConfig {
+    pub name: String,
+    pub total_clauses: usize,
+    pub threshold: u32,
+    pub s: f64,
+    pub seed: u64,
+    pub warmup_epochs: usize,
+    pub timed_epochs: usize,
+}
+
+impl ExpConfig {
+    pub fn new(name: impl Into<String>, total_clauses: usize) -> Self {
+        ExpConfig {
+            name: name.into(),
+            total_clauses,
+            threshold: 25,
+            s: 6.0,
+            seed: 42,
+            warmup_epochs: 1,
+            timed_epochs: 1,
+        }
+    }
+}
+
+/// Timings for one backend on one cell.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BackendTimes {
+    /// Seconds per timed training epoch (mean).
+    pub train_epoch_s: f64,
+    /// Seconds for one inference pass over the test set.
+    pub test_s: f64,
+    /// Test accuracy after training (sanity: backends must agree).
+    pub accuracy: f64,
+}
+
+/// One full cell: a backend pair and the derived speedups.
+#[derive(Clone, Debug)]
+pub struct SpeedupResult {
+    pub name: String,
+    pub features: usize,
+    pub total_clauses: usize,
+    pub baseline: BackendTimes,
+    pub indexed: BackendTimes,
+    /// `baseline.train / indexed.train` (paper's "Train" columns).
+    pub train_speedup: f64,
+    /// `baseline.test / indexed.test` (paper's "Test" columns).
+    pub test_speedup: f64,
+    /// Mean learned clause length (paper §3 Remarks statistic).
+    pub mean_clause_length: f64,
+}
+
+/// Train + time one backend on a cell.
+pub fn run_backend(
+    cfg: &ExpConfig,
+    backend: Backend,
+    train: &Dataset,
+    test: &Dataset,
+) -> (BackendTimes, Trainer) {
+    let params = TMParams::from_total_clauses(train.classes, cfg.total_clauses, train.features)
+        .with_threshold(cfg.threshold)
+        .with_s(cfg.s)
+        .with_seed(cfg.seed);
+    let mut trainer = Trainer::new(params, backend);
+    // Epoch order must be identical across backends: derive it from the
+    // experiment seed, not the trainer's internal stream.
+    let mut order_rng = Rng::new(cfg.seed ^ 0x0def_ace0);
+    for _ in 0..cfg.warmup_epochs {
+        let order = train.epoch_order(&mut order_rng);
+        trainer.train_epoch(train.iter_order(&order));
+    }
+    let mut train_total = 0.0;
+    for _ in 0..cfg.timed_epochs.max(1) {
+        let order = train.epoch_order(&mut order_rng);
+        let (_, secs) = time_it(|| trainer.train_epoch(train.iter_order(&order)));
+        train_total += secs;
+    }
+    let (accuracy, test_s) = time_it(|| trainer.accuracy(test.iter()));
+    (
+        BackendTimes {
+            train_epoch_s: train_total / cfg.timed_epochs.max(1) as f64,
+            test_s,
+            accuracy,
+        },
+        trainer,
+    )
+}
+
+/// Measure one cell: `baseline_backend` (paper: naive) vs indexed.
+pub fn measure_speedup_vs(
+    cfg: &ExpConfig,
+    baseline_backend: Backend,
+    train: &Dataset,
+    test: &Dataset,
+) -> SpeedupResult {
+    let (baseline, _) = run_backend(cfg, baseline_backend, train, test);
+    let (indexed, trainer) = run_backend(cfg, Backend::Indexed, train, test);
+    assert!(
+        (baseline.accuracy - indexed.accuracy).abs() < 1e-12,
+        "backends diverged: {} vs {} — evaluation is broken",
+        baseline.accuracy,
+        indexed.accuracy
+    );
+    SpeedupResult {
+        name: cfg.name.clone(),
+        features: train.features,
+        total_clauses: cfg.total_clauses,
+        train_speedup: baseline.train_epoch_s / indexed.train_epoch_s,
+        test_speedup: baseline.test_s / indexed.test_s,
+        mean_clause_length: trainer.tm.mean_clause_length(),
+        baseline,
+        indexed,
+    }
+}
+
+/// Paper-default cell: naive baseline vs indexed.
+pub fn measure_speedup(cfg: &ExpConfig, train: &Dataset, test: &Dataset) -> SpeedupResult {
+    measure_speedup_vs(cfg, Backend::Naive, train, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn speedup_cell_runs_and_backends_agree() {
+        let all = synth::image_dataset(synth::ImageStyle::Digits, 4, 260, 1, 3);
+        let train = all.slice(0, 200);
+        let test = all.slice(200, 260);
+        let cfg = ExpConfig::new("smoke", 80);
+        let r = measure_speedup(&cfg, &train, &test);
+        assert!(r.baseline.train_epoch_s > 0.0);
+        assert!(r.indexed.test_s > 0.0);
+        assert!(r.train_speedup.is_finite());
+        assert_eq!(r.features, 784);
+        // accuracies asserted equal inside measure_speedup
+    }
+
+    #[test]
+    fn indexed_inference_wins_at_scale() {
+        // A clause-heavy cell where indexing must win at inference
+        // (the paper's central claim). Small sample count keeps it fast.
+        let all = synth::bow(2000, 160, 7);
+        let train = all.slice(0, 120);
+        let test = all.slice(120, 160);
+        let mut cfg = ExpConfig::new("idx-wins", 400);
+        cfg.warmup_epochs = 1;
+        let r = measure_speedup(&cfg, &train, &test);
+        assert!(
+            r.test_speedup > 1.0,
+            "indexed inference should beat naive at 400 clauses x 2000 features, got {}",
+            r.test_speedup
+        );
+    }
+}

@@ -1,0 +1,326 @@
+//! Tables 1–3: the speedup grids (clauses × features) for MNIST-, IMDb-
+//! and Fashion-MNIST-shaped workloads.
+//!
+//! A table run produces the full cell matrix once; the figure renderers
+//! ([`crate::bench_harness::figures`]) re-use the same cells (the
+//! paper's figures plot the very measurements its tables tabulate).
+//!
+//! The paper's grid (20k clauses, 60k samples, 400+ epoch-minutes per
+//! cell) is scaled by a [`Scale`]: `quick` for CI-sized smoke runs,
+//! `standard` for the EXPERIMENTS.md numbers, `paper` for the full grid.
+//! Speedup *ratios* are sample-count independent once clause lengths
+//! reach regime (each sample costs the same), which is what warmup
+//! epochs establish.
+
+use std::path::Path;
+
+use crate::bench_harness::report::{f2, markdown_table};
+use crate::bench_harness::speedup::{measure_speedup, ExpConfig, SpeedupResult};
+use crate::data::mnist::{self, Split};
+use crate::data::synth::ImageStyle;
+use crate::data::{imdb, Dataset};
+
+/// Which paper table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TableId {
+    /// Table 1: MNIST, features 784/1568/2352/3136 (1–4 grey levels).
+    Mnist,
+    /// Table 2: IMDb, features 5000/10000/15000/20000.
+    Imdb,
+    /// Table 3: Fashion-MNIST, features 784–3136.
+    Fashion,
+}
+
+impl TableId {
+    pub fn title(self) -> &'static str {
+        match self {
+            TableId::Mnist => "Table 1: indexing speedup on MNIST",
+            TableId::Imdb => "Table 2: indexing speedup on IMDb",
+            TableId::Fashion => "Table 3: indexing speedup on Fashion-MNIST",
+        }
+    }
+}
+
+/// Grid scaling.
+#[derive(Clone, Debug)]
+pub struct Scale {
+    pub train_samples: usize,
+    pub test_samples: usize,
+    pub clause_grid: Vec<usize>,
+    /// Image grey levels (Tables 1/3) — paper: 1..=4.
+    pub image_levels: Vec<usize>,
+    /// BoW vocabulary sizes (Table 2) — paper: 5k/10k/15k/20k.
+    pub bow_features: Vec<usize>,
+    pub warmup_epochs: usize,
+    pub timed_epochs: usize,
+}
+
+impl Scale {
+    /// Smoke-test scale (~seconds per table).
+    pub fn quick() -> Self {
+        Scale {
+            train_samples: 150,
+            test_samples: 150,
+            clause_grid: vec![100, 200],
+            image_levels: vec![1, 2],
+            bow_features: vec![500, 1000],
+            warmup_epochs: 1,
+            timed_epochs: 1,
+        }
+    }
+
+    /// The EXPERIMENTS.md scale (~minutes per table): large enough for
+    /// the paper's asymptotic behaviour to show.
+    pub fn standard() -> Self {
+        Scale {
+            train_samples: 1000,
+            test_samples: 1000,
+            clause_grid: vec![500, 1000, 2000, 5000],
+            image_levels: vec![1, 2, 3, 4],
+            bow_features: vec![2500, 5000, 10000],
+            warmup_epochs: 1,
+            timed_epochs: 1,
+        }
+    }
+
+    /// The paper's full grid (hours).
+    pub fn paper() -> Self {
+        Scale {
+            train_samples: 60000,
+            test_samples: 10000,
+            clause_grid: vec![1000, 2000, 5000, 10000, 20000],
+            image_levels: vec![1, 2, 3, 4],
+            bow_features: vec![5000, 10000, 15000, 20000],
+            warmup_epochs: 1,
+            timed_epochs: 1,
+        }
+    }
+
+    /// Scale chosen by `TMI_SCALE` env var (quick|standard|paper).
+    pub fn from_env() -> Self {
+        match std::env::var("TMI_SCALE").as_deref() {
+            Ok("paper") => Self::paper(),
+            Ok("standard") => Self::standard(),
+            _ => Self::quick(),
+        }
+    }
+}
+
+/// One feature configuration (a column pair of the table).
+#[derive(Clone, Debug)]
+pub struct FeatureCol {
+    pub label: String,
+    pub train: Dataset,
+    pub test: Dataset,
+}
+
+/// All cells of one table.
+#[derive(Clone, Debug)]
+pub struct TableResult {
+    pub id: TableId,
+    /// `cells[col][row]` — column = feature config, row = clause count.
+    pub cells: Vec<Vec<SpeedupResult>>,
+    pub col_labels: Vec<String>,
+    pub clause_grid: Vec<usize>,
+}
+
+/// Build the feature-column datasets for a table.
+pub fn feature_columns(id: TableId, scale: &Scale, data_dir: Option<&Path>) -> Vec<FeatureCol> {
+    match id {
+        TableId::Mnist | TableId::Fashion => {
+            let style = if id == TableId::Mnist {
+                ImageStyle::Digits
+            } else {
+                ImageStyle::Fashion
+            };
+            let seed = if id == TableId::Mnist { 101 } else { 103 };
+            scale
+                .image_levels
+                .iter()
+                .map(|&levels| {
+                    let train = mnist::load_or_synthesize(
+                        data_dir,
+                        style,
+                        Split::Train,
+                        levels,
+                        scale.train_samples,
+                        seed,
+                    );
+                    let test = mnist::load_or_synthesize(
+                        data_dir,
+                        style,
+                        Split::Test,
+                        levels,
+                        scale.test_samples,
+                        seed,
+                    );
+                    FeatureCol {
+                        label: format!("{}", levels * 784),
+                        train,
+                        test,
+                    }
+                })
+                .collect()
+        }
+        TableId::Imdb => scale
+            .bow_features
+            .iter()
+            .map(|&features| {
+                let train =
+                    imdb::load_or_synthesize(None, features, scale.train_samples, 0, 102);
+                let test =
+                    imdb::load_or_synthesize(None, features, scale.test_samples, 1, 102);
+                FeatureCol {
+                    label: format!("{features}"),
+                    train,
+                    test,
+                }
+            })
+            .collect(),
+    }
+}
+
+/// Run all cells of one table.
+pub fn run_table(
+    id: TableId,
+    scale: &Scale,
+    data_dir: Option<&Path>,
+    mut progress: impl FnMut(&str),
+) -> TableResult {
+    let cols = feature_columns(id, scale, data_dir);
+    let mut cells = Vec::with_capacity(cols.len());
+    for col in &cols {
+        let mut col_cells = Vec::with_capacity(scale.clause_grid.len());
+        for &clauses in &scale.clause_grid {
+            let mut cfg = ExpConfig::new(
+                format!("{:?}-f{}-c{}", id, col.label, clauses),
+                clauses,
+            );
+            cfg.warmup_epochs = scale.warmup_epochs;
+            cfg.timed_epochs = scale.timed_epochs;
+            progress(&cfg.name);
+            col_cells.push(measure_speedup(&cfg, &col.train, &col.test));
+        }
+        cells.push(col_cells);
+    }
+    TableResult {
+        id,
+        col_labels: cols.iter().map(|c| c.label.clone()).collect(),
+        clause_grid: scale.clause_grid.clone(),
+        cells,
+    }
+}
+
+impl TableResult {
+    /// Paper-layout markdown: rows = clauses, column pairs = features
+    /// (Train | Test speedups).
+    pub fn render_markdown(&self) -> String {
+        let mut headers: Vec<String> = vec!["Clauses".into()];
+        for label in &self.col_labels {
+            headers.push(format!("f={label} Train"));
+            headers.push(format!("f={label} Test"));
+        }
+        let header_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+        let rows: Vec<Vec<String>> = self
+            .clause_grid
+            .iter()
+            .enumerate()
+            .map(|(r, &clauses)| {
+                let mut row = vec![clauses.to_string()];
+                for col in &self.cells {
+                    row.push(f2(col[r].train_speedup));
+                    row.push(f2(col[r].test_speedup));
+                }
+                row
+            })
+            .collect();
+        format!("{}\n{}", self.id.title(), markdown_table(&header_refs, &rows))
+    }
+
+    /// Flat CSV rows: one per cell, with raw times (feeds the figures).
+    pub fn csv_rows(&self) -> (Vec<&'static str>, Vec<Vec<String>>) {
+        let headers = vec![
+            "dataset",
+            "features",
+            "clauses",
+            "naive_train_s",
+            "indexed_train_s",
+            "naive_test_s",
+            "indexed_test_s",
+            "train_speedup",
+            "test_speedup",
+            "accuracy",
+            "mean_clause_length",
+        ];
+        let mut rows = Vec::new();
+        for (c, col) in self.cells.iter().enumerate() {
+            for cell in col {
+                rows.push(vec![
+                    format!("{:?}", self.id),
+                    self.col_labels[c].clone(),
+                    cell.total_clauses.to_string(),
+                    format!("{:.6}", cell.baseline.train_epoch_s),
+                    format!("{:.6}", cell.indexed.train_epoch_s),
+                    format!("{:.6}", cell.baseline.test_s),
+                    format!("{:.6}", cell.indexed.test_s),
+                    f2(cell.train_speedup),
+                    f2(cell.test_speedup),
+                    format!("{:.4}", cell.indexed.accuracy),
+                    f2(cell.mean_clause_length),
+                ]);
+            }
+        }
+        (headers, rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn micro_scale() -> Scale {
+        Scale {
+            train_samples: 60,
+            test_samples: 40,
+            clause_grid: vec![20, 40],
+            image_levels: vec![1],
+            bow_features: vec![300],
+            warmup_epochs: 1,
+            timed_epochs: 1,
+        }
+    }
+
+    #[test]
+    fn runs_micro_mnist_table() {
+        let t = run_table(TableId::Mnist, &micro_scale(), None, |_| {});
+        assert_eq!(t.cells.len(), 1);
+        assert_eq!(t.cells[0].len(), 2);
+        let md = t.render_markdown();
+        assert!(md.contains("Table 1"));
+        assert!(md.contains("| 20 |"));
+        let (h, rows) = t.csv_rows();
+        assert_eq!(h.len(), rows[0].len());
+        assert_eq!(rows.len(), 2);
+    }
+
+    #[test]
+    fn runs_micro_imdb_table() {
+        let t = run_table(TableId::Imdb, &micro_scale(), None, |_| {});
+        assert_eq!(t.col_labels, vec!["300"]);
+        assert!(t.cells[0][0].indexed.test_s > 0.0);
+    }
+
+    #[test]
+    fn fashion_uses_fashion_style() {
+        let cols = feature_columns(TableId::Fashion, &micro_scale(), None);
+        assert!(cols[0].train.name.contains("fashion"));
+        let cols = feature_columns(TableId::Mnist, &micro_scale(), None);
+        assert!(cols[0].train.name.contains("mnist"));
+    }
+
+    #[test]
+    fn scale_from_env_default_is_quick() {
+        std::env::remove_var("TMI_SCALE");
+        assert_eq!(Scale::from_env().train_samples, Scale::quick().train_samples);
+    }
+}

@@ -1,0 +1,278 @@
+//! Serving backends: CPU (indexed/naive/bitpacked evaluators) and XLA
+//! (AOT artifact).
+//!
+//! A backend turns a batch of literal vectors into per-request
+//! predictions. The CPU backend is the paper's system — clause-indexed
+//! falsification on the Rust hot path; the XLA backend runs the
+//! Layer-1/2 dense kernel through PJRT with device-resident model
+//! buffers.
+
+use anyhow::Result;
+
+use crate::eval;
+use crate::runtime::{PreparedModel, Runtime, TmExecutable};
+use crate::tm::classifier::MultiClassTM;
+use crate::tm::io::DenseModel;
+use crate::tm::trainer::Trainer;
+use crate::util::BitVec;
+
+/// One scored request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scored {
+    pub prediction: usize,
+    pub scores: Vec<i32>,
+}
+
+/// A serving backend for one model.
+///
+/// Deliberately NOT `Send`: PJRT handles are thread-pinned (`Rc`
+/// internals), so the coordinator constructs each backend *inside* its
+/// worker thread via a `Send` factory closure
+/// ([`crate::coordinator::Coordinator::register_with`]).
+pub trait Backend {
+    /// Score a batch of literal vectors.
+    fn infer_batch(&mut self, batch: &[BitVec]) -> Result<Vec<Scored>>;
+    /// Literal width this backend expects.
+    fn n_literals(&self) -> usize;
+    fn name(&self) -> String;
+}
+
+/// CPU backend: the trained machine + a chosen evaluator.
+///
+/// With `replicas > 1` the machine is cloned per replica and batches
+/// are split across scoped threads — evaluator scratch (generation
+/// stamps) is per-replica, so replicas never contend. Memory cost is
+/// one machine copy per replica; latency scales with
+/// `batch / replicas` for large batches.
+pub struct CpuBackend {
+    replicas: Vec<Trainer>,
+}
+
+impl CpuBackend {
+    pub fn new(tm: MultiClassTM, backend: eval::Backend) -> Self {
+        Self::new_parallel(tm, backend, 1)
+    }
+
+    pub fn new_parallel(tm: MultiClassTM, backend: eval::Backend, replicas: usize) -> Self {
+        let replicas = replicas.max(1);
+        CpuBackend {
+            replicas: (0..replicas)
+                .map(|_| Trainer::from_machine(tm.clone(), backend))
+                .collect(),
+        }
+    }
+
+    fn score_one(trainer: &mut Trainer, lits: &BitVec) -> Scored {
+        let scores = trainer.scores(lits);
+        let prediction = scores
+            .iter()
+            .enumerate()
+            .max_by_key(|&(i, &s)| (s, std::cmp::Reverse(i)))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        Scored { prediction, scores }
+    }
+}
+
+impl Backend for CpuBackend {
+    fn infer_batch(&mut self, batch: &[BitVec]) -> Result<Vec<Scored>> {
+        let n_rep = self.replicas.len();
+        // below ~4 items per replica, thread spawn overhead dominates
+        if n_rep == 1 || batch.len() < 4 * n_rep {
+            let tr = &mut self.replicas[0];
+            return Ok(batch.iter().map(|l| Self::score_one(tr, l)).collect());
+        }
+        let chunk = batch.len().div_ceil(n_rep);
+        let mut out: Vec<Vec<Scored>> = Vec::with_capacity(n_rep);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .replicas
+                .iter_mut()
+                .zip(batch.chunks(chunk))
+                .map(|(tr, items)| {
+                    scope.spawn(move || {
+                        items
+                            .iter()
+                            .map(|l| Self::score_one(tr, l))
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            for h in handles {
+                out.push(h.join().expect("replica thread panicked"));
+            }
+        });
+        Ok(out.into_iter().flatten().collect())
+    }
+
+    fn n_literals(&self) -> usize {
+        self.replicas[0].tm.params.n_literals()
+    }
+
+    fn name(&self) -> String {
+        let base = format!("cpu-{}", self.replicas[0].backend().name());
+        if self.replicas.len() == 1 {
+            base
+        } else {
+            format!("{base}x{}", self.replicas.len())
+        }
+    }
+}
+
+/// XLA backend: compiled artifact + device-resident model buffers.
+pub struct XlaBackend {
+    rt: Runtime,
+    exe: TmExecutable,
+    prepared: PreparedModel,
+    n_literals: usize,
+    classes: usize,
+}
+
+impl XlaBackend {
+    pub fn new(rt: Runtime, exe: TmExecutable, model: &DenseModel) -> Result<Self> {
+        let prepared = rt.prepare_model(&exe, model)?;
+        Ok(XlaBackend {
+            n_literals: model.n_literals,
+            classes: model.classes,
+            rt,
+            exe,
+            prepared,
+        })
+    }
+
+    fn literals_to_f32(&self, batch: &[BitVec]) -> Vec<f32> {
+        let mut out = vec![0f32; batch.len() * self.n_literals];
+        for (b, lits) in batch.iter().enumerate() {
+            let row = &mut out[b * self.n_literals..(b + 1) * self.n_literals];
+            for k in lits.iter_ones() {
+                row[k] = 1.0;
+            }
+        }
+        out
+    }
+}
+
+impl Backend for XlaBackend {
+    fn infer_batch(&mut self, batch: &[BitVec]) -> Result<Vec<Scored>> {
+        let max = self.exe.meta.batch;
+        let mut out = Vec::with_capacity(batch.len());
+        // chunk oversized batches to the artifact's batch dimension
+        for chunk in batch.chunks(max) {
+            let lits = self.literals_to_f32(chunk);
+            let fwd = self.exe.run(&self.rt, &self.prepared, &lits, chunk.len())?;
+            for b in 0..chunk.len() {
+                out.push(Scored {
+                    prediction: fwd.predictions[b] as usize,
+                    scores: fwd.scores[b * self.classes..(b + 1) * self.classes]
+                        .iter()
+                        .map(|&s| s as i32)
+                        .collect(),
+                });
+            }
+        }
+        Ok(out)
+    }
+
+    fn n_literals(&self) -> usize {
+        self.n_literals
+    }
+
+    fn name(&self) -> String {
+        format!("xla-{}", self.exe.meta.name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::params::TMParams;
+    use crate::util::Rng;
+
+    fn toy_model() -> MultiClassTM {
+        let params = TMParams::new(2, 10, 8);
+        let mut tr = Trainer::new(params, eval::Backend::Indexed);
+        let mut rng = Rng::new(3);
+        let samples: Vec<(BitVec, usize)> = (0..200)
+            .map(|_| {
+                let y = rng.bern(0.5) as usize;
+                let bits: Vec<bool> =
+                    (0..8).map(|k| if k == 0 { y == 0 } else { rng.bern(0.5) }).collect();
+                let mut l = bits.clone();
+                l.extend(bits.iter().map(|b| !b));
+                (BitVec::from_bools(&l), y)
+            })
+            .collect();
+        for _ in 0..5 {
+            tr.train_epoch(samples.iter().map(|(l, y)| (l, *y)));
+        }
+        tr.tm
+    }
+
+    #[test]
+    fn cpu_backend_scores_batches() {
+        let tm = toy_model();
+        let mut be = CpuBackend::new(tm, eval::Backend::Indexed);
+        assert_eq!(be.n_literals(), 16);
+        assert_eq!(be.name(), "cpu-indexed");
+        // class 0 signature: feature 0 set
+        let mut bits = vec![false; 8];
+        bits[0] = true;
+        let mut l = bits.clone();
+        l.extend(bits.iter().map(|b| !b));
+        let pos = BitVec::from_bools(&l);
+        let bits = vec![false; 8];
+        let mut l = bits.clone();
+        l.extend(bits.iter().map(|b| !b));
+        let neg = BitVec::from_bools(&l);
+        let scored = be.infer_batch(&[pos, neg]).unwrap();
+        assert_eq!(scored.len(), 2);
+        assert_eq!(scored[0].prediction, 0);
+        assert_eq!(scored[1].prediction, 1);
+        assert_eq!(scored[0].scores.len(), 2);
+    }
+
+    #[test]
+    fn parallel_replicas_agree_with_serial() {
+        let tm = toy_model();
+        let mut rng = Rng::new(17);
+        let batch: Vec<BitVec> = (0..64)
+            .map(|_| {
+                let bits: Vec<bool> = (0..8).map(|_| rng.bern(0.5)).collect();
+                let mut l = bits.clone();
+                l.extend(bits.iter().map(|b| !b));
+                BitVec::from_bools(&l)
+            })
+            .collect();
+        let mut serial = CpuBackend::new(tm.clone(), eval::Backend::Indexed);
+        let mut par = CpuBackend::new_parallel(tm, eval::Backend::Indexed, 4);
+        assert_eq!(par.name(), "cpu-indexedx4");
+        assert_eq!(
+            serial.infer_batch(&batch).unwrap(),
+            par.infer_batch(&batch).unwrap()
+        );
+        // tiny batch takes the serial fast path but must still answer
+        assert_eq!(par.infer_batch(&batch[..2]).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn cpu_backends_agree() {
+        let tm = toy_model();
+        let mut rng = Rng::new(9);
+        let batch: Vec<BitVec> = (0..20)
+            .map(|_| {
+                let bits: Vec<bool> = (0..8).map(|_| rng.bern(0.5)).collect();
+                let mut l = bits.clone();
+                l.extend(bits.iter().map(|b| !b));
+                BitVec::from_bools(&l)
+            })
+            .collect();
+        let mut a = CpuBackend::new(tm.clone(), eval::Backend::Indexed);
+        let mut b = CpuBackend::new(tm.clone(), eval::Backend::Naive);
+        let mut c = CpuBackend::new(tm, eval::Backend::BitPacked);
+        let ra = a.infer_batch(&batch).unwrap();
+        let rb = b.infer_batch(&batch).unwrap();
+        let rc = c.infer_batch(&batch).unwrap();
+        assert_eq!(ra, rb);
+        assert_eq!(ra, rc);
+    }
+}

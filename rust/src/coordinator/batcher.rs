@@ -1,0 +1,148 @@
+//! Dynamic batching: collect-until-full-or-deadline.
+//!
+//! The worker blocks for the first request, then drains the queue until
+//! either `max_batch` items are held or `max_wait` has elapsed since the
+//! first item — the standard size/deadline policy (vLLM-style), tuned
+//! per backend: the XLA backend wants full batches (one `execute` per
+//! batch), the CPU backend prefers short waits (per-item cost is flat).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Size/deadline batching policy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 32,
+            max_wait: Duration::from_micros(500),
+        }
+    }
+}
+
+/// Outcome of one collection round.
+pub enum Collected<T> {
+    /// A non-empty batch.
+    Batch(Vec<T>),
+    /// The channel closed and no items remain: shut down.
+    Disconnected,
+}
+
+/// Collect one batch according to `policy`. Blocks for the first item.
+pub fn collect<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Collected<T> {
+    let first = match rx.recv() {
+        Ok(item) => item,
+        Err(_) => return Collected::Disconnected,
+    };
+    let mut batch = Vec::with_capacity(policy.max_batch);
+    batch.push(first);
+    let deadline = Instant::now() + policy.max_wait;
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break, // flush what we hold
+        }
+    }
+    Collected::Batch(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn collects_up_to_max_batch() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let policy = BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(50),
+        };
+        match collect(&rx, &policy) {
+            Collected::Batch(b) => assert_eq!(b, vec![0, 1, 2, 3]),
+            _ => panic!("expected batch"),
+        }
+        match collect(&rx, &policy) {
+            Collected::Batch(b) => assert_eq!(b, vec![4, 5, 6, 7]),
+            _ => panic!("expected batch"),
+        }
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        let policy = BatchPolicy {
+            max_batch: 100,
+            max_wait: Duration::from_millis(5),
+        };
+        let t0 = Instant::now();
+        match collect(&rx, &policy) {
+            Collected::Batch(b) => assert_eq!(b, vec![1]),
+            _ => panic!("expected batch"),
+        }
+        assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn disconnect_before_any_item() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        assert!(matches!(
+            collect(&rx, &BatchPolicy::default()),
+            Collected::Disconnected
+        ));
+    }
+
+    #[test]
+    fn disconnect_flushes_held_items() {
+        let (tx, rx) = channel();
+        tx.send(7).unwrap();
+        tx.send(8).unwrap();
+        drop(tx);
+        let policy = BatchPolicy {
+            max_batch: 10,
+            max_wait: Duration::from_secs(5), // must not wait this long
+        };
+        let t0 = Instant::now();
+        match collect(&rx, &policy) {
+            Collected::Batch(b) => assert_eq!(b, vec![7, 8]),
+            _ => panic!("expected batch"),
+        }
+        assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn blocks_for_first_item_then_batches_stragglers() {
+        let (tx, rx) = channel();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            tx.send(1).unwrap();
+            tx.send(2).unwrap();
+        });
+        let policy = BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(50),
+        };
+        match collect(&rx, &policy) {
+            Collected::Batch(b) => {
+                assert!(!b.is_empty() && b[0] == 1);
+            }
+            _ => panic!("expected batch"),
+        }
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,132 @@
+//! Lock-free serving metrics: counters + a fixed-bucket latency
+//! histogram (power-of-two microsecond buckets).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+const BUCKETS: usize = 24; // 1us .. ~8s
+
+/// Shared metrics for one model route.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub completed: AtomicU64,
+    pub errors: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_items: AtomicU64,
+    latency_us: [AtomicU64; BUCKETS],
+}
+
+/// Point-in-time copy for reporting.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub completed: u64,
+    pub errors: u64,
+    pub batches: u64,
+    pub batched_items: u64,
+    pub latency_buckets_us: Vec<(u64, u64)>, // (upper_bound_us, count)
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    fn bucket(us: u64) -> usize {
+        (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1)
+    }
+
+    pub fn record_latency(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        self.latency_us[Self::bucket(us)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, items: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_items.fetch_add(items as u64, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_items: self.batched_items.load(Ordering::Relaxed),
+            latency_buckets_us: self
+                .latency_us
+                .iter()
+                .enumerate()
+                .map(|(i, c)| (1u64 << (i + 1), c.load(Ordering::Relaxed)))
+                .filter(|(_, c)| *c > 0)
+                .collect(),
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// Approximate quantile from the histogram (upper bucket bounds).
+    pub fn latency_quantile_us(&self, q: f64) -> Option<u64> {
+        let total: u64 = self.latency_buckets_us.iter().map(|(_, c)| c).sum();
+        if total == 0 {
+            return None;
+        }
+        let target = ((total as f64) * q).ceil() as u64;
+        let mut seen = 0;
+        for &(bound, count) in &self.latency_buckets_us {
+            seen += count;
+            if seen >= target {
+                return Some(bound);
+            }
+        }
+        self.latency_buckets_us.last().map(|&(b, _)| b)
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_items as f64 / self.batches as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(Metrics::bucket(0), 0);
+        assert_eq!(Metrics::bucket(1), 0);
+        assert_eq!(Metrics::bucket(2), 1);
+        assert_eq!(Metrics::bucket(3), 1);
+        assert_eq!(Metrics::bucket(1024), 10);
+        assert_eq!(Metrics::bucket(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn snapshot_reflects_counts() {
+        let m = Metrics::new();
+        m.requests.fetch_add(3, Ordering::Relaxed);
+        m.record_batch(2);
+        m.record_batch(4);
+        m.record_latency(Duration::from_micros(100));
+        m.record_latency(Duration::from_micros(90));
+        m.record_latency(Duration::from_millis(10));
+        let s = m.snapshot();
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.batches, 2);
+        assert!((s.mean_batch_size() - 3.0).abs() < 1e-12);
+        // 2 fast + 1 slow: p50 lands in the ~128us bucket
+        assert_eq!(s.latency_quantile_us(0.5), Some(128));
+        assert!(s.latency_quantile_us(0.99).unwrap() >= 8192);
+    }
+
+    #[test]
+    fn empty_quantile_is_none() {
+        assert_eq!(Metrics::new().snapshot().latency_quantile_us(0.5), None);
+    }
+}

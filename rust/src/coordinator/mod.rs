@@ -1,0 +1,26 @@
+//! Serving coordinator: router, dynamic batcher, backend workers,
+//! metrics.
+//!
+//! Layer-3 of the stack. The vendored offline environment has no tokio,
+//! so the coordinator is built directly on `std::thread` + channels
+//! (DESIGN.md §Substitutions): one worker thread per registered model,
+//! each running a collect-then-execute dynamic-batching loop; a shared
+//! handle routes requests by model name and blocks on a per-request
+//! completion channel. An optional line-oriented TCP front end exposes
+//! the same router over the network.
+//!
+//! Backends:
+//! * [`backend::CpuBackend`] — the paper's system: clause-indexed
+//!   evaluation on the Rust hot path (also naive/bitpacked for A/B).
+//! * [`backend::XlaBackend`] — the AOT-compiled XLA executable
+//!   (Layer 1/2), device-resident model buffers, true batched scoring.
+
+pub mod backend;
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+
+pub use backend::{Backend as ServeBackend, CpuBackend, XlaBackend};
+pub use batcher::BatchPolicy;
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use server::{Coordinator, InferError, Prediction};

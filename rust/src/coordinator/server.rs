@@ -1,0 +1,609 @@
+//! The coordinator: model registry, per-model worker threads, routing
+//! handle, and a line-oriented TCP front end.
+//!
+//! Request flow: `CoordinatorHandle::infer` routes by model name to the
+//! model's queue; the worker thread batches requests
+//! ([`crate::coordinator::batcher`]), runs the backend, and answers each
+//! request through its completion channel. Metrics are recorded per
+//! route.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::coordinator::backend::{Backend, Scored};
+use crate::coordinator::batcher::{collect, BatchPolicy, Collected};
+use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
+use crate::util::BitVec;
+
+/// A completed inference.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Prediction {
+    pub class: usize,
+    pub scores: Vec<i32>,
+}
+
+/// Why an inference failed.
+#[derive(Clone, Debug, PartialEq)]
+pub enum InferError {
+    UnknownModel(String),
+    WrongWidth { expected: usize, got: usize },
+    BackendError(String),
+    ShuttingDown,
+}
+
+impl std::fmt::Display for InferError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            InferError::UnknownModel(m) => write!(f, "unknown model '{m}'"),
+            InferError::WrongWidth { expected, got } => {
+                write!(f, "literal width {got}, model expects {expected}")
+            }
+            InferError::BackendError(e) => write!(f, "backend error: {e}"),
+            InferError::ShuttingDown => write!(f, "coordinator shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for InferError {}
+
+struct Request {
+    literals: BitVec,
+    enqueued: Instant,
+    resp: SyncSender<Result<Prediction, InferError>>,
+}
+
+/// Queue message: a request, or an explicit stop sentinel.
+///
+/// A sentinel (not channel disconnection) drives shutdown: routing
+/// handles hold `Sender` clones with arbitrary lifetimes, so the worker
+/// cannot rely on `recv()` erroring out.
+enum Msg {
+    Infer(Request),
+    Shutdown,
+}
+
+struct Route {
+    queue: Sender<Msg>,
+    n_literals: usize,
+    metrics: Arc<Metrics>,
+    worker: Option<JoinHandle<()>>,
+}
+
+/// The serving coordinator. Register models, then `handle()` for a
+/// cloneable routing handle.
+pub struct Coordinator {
+    routes: HashMap<String, Route>,
+}
+
+impl Coordinator {
+    pub fn new() -> Self {
+        Coordinator {
+            routes: HashMap::new(),
+        }
+    }
+
+    /// Register a model whose backend is `Send` (CPU backends).
+    pub fn register(
+        &mut self,
+        name: impl Into<String>,
+        backend: Box<dyn Backend + Send>,
+        policy: BatchPolicy,
+    ) {
+        self.register_with(name, move || Ok(backend as Box<dyn Backend>), policy)
+            .expect("infallible factory");
+    }
+
+    /// Register a model via a factory executed *inside* the worker
+    /// thread — required for PJRT-backed backends, whose handles are
+    /// thread-pinned. Blocks until the factory has run; a factory error
+    /// is returned here and no route is created.
+    pub fn register_with(
+        &mut self,
+        name: impl Into<String>,
+        factory: impl FnOnce() -> anyhow::Result<Box<dyn Backend>> + Send + 'static,
+        policy: BatchPolicy,
+    ) -> anyhow::Result<()> {
+        let name = name.into();
+        let metrics = Arc::new(Metrics::new());
+        let metrics_worker = Arc::clone(&metrics);
+        let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
+        let (ready_tx, ready_rx) = sync_channel::<anyhow::Result<usize>>(1);
+        let worker = std::thread::Builder::new()
+            .name(format!("tmi-worker-{name}"))
+            .spawn(move || {
+                let mut backend = match factory() {
+                    Ok(b) => {
+                        let _ = ready_tx.send(Ok(b.n_literals()));
+                        b
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                loop {
+                    match collect(&rx, &policy) {
+                        Collected::Disconnected => break,
+                        Collected::Batch(msgs) => {
+                            let mut stop = false;
+                            let reqs: Vec<Request> = msgs
+                                .into_iter()
+                                .filter_map(|m| match m {
+                                    Msg::Infer(r) => Some(r),
+                                    Msg::Shutdown => {
+                                        stop = true;
+                                        None
+                                    }
+                                })
+                                .collect();
+                            if reqs.is_empty() {
+                                if stop {
+                                    break;
+                                }
+                                continue;
+                            }
+                            metrics_worker.record_batch(reqs.len());
+                            let lits: Vec<BitVec> =
+                                reqs.iter().map(|r| r.literals.clone()).collect();
+                            match backend.infer_batch(&lits) {
+                                Ok(scored) => {
+                                    for (req, s) in reqs.into_iter().zip(scored) {
+                                        let Scored { prediction, scores } = s;
+                                        metrics_worker
+                                            .completed
+                                            .fetch_add(1, Ordering::Relaxed);
+                                        metrics_worker
+                                            .record_latency(req.enqueued.elapsed());
+                                        let _ = req.resp.send(Ok(Prediction {
+                                            class: prediction,
+                                            scores,
+                                        }));
+                                    }
+                                }
+                                Err(e) => {
+                                    let msg = e.to_string();
+                                    for req in reqs {
+                                        metrics_worker
+                                            .errors
+                                            .fetch_add(1, Ordering::Relaxed);
+                                        let _ = req.resp.send(Err(
+                                            InferError::BackendError(msg.clone()),
+                                        ));
+                                    }
+                                }
+                            }
+                            if stop {
+                                break;
+                            }
+                        }
+                    }
+                }
+            })
+            .expect("spawning worker thread");
+        let n_literals = ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("worker died before reporting readiness"))??;
+        self.routes.insert(
+            name,
+            Route {
+                queue: tx,
+                n_literals,
+                metrics,
+                worker: Some(worker),
+            },
+        );
+        Ok(())
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.routes.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    pub fn metrics(&self, model: &str) -> Option<MetricsSnapshot> {
+        self.routes.get(model).map(|r| r.metrics.snapshot())
+    }
+
+    /// Cloneable request handle (cheap: Arc-backed).
+    pub fn handle(&self) -> CoordinatorHandle {
+        CoordinatorHandle {
+            routes: Arc::new(
+                self.routes
+                    .iter()
+                    .map(|(name, r)| {
+                        (
+                            name.clone(),
+                            HandleRoute {
+                                queue: Mutex::new(r.queue.clone()),
+                                n_literals: r.n_literals,
+                                metrics: Arc::clone(&r.metrics),
+                            },
+                        )
+                    })
+                    .collect(),
+            ),
+        }
+    }
+
+    /// Send stop sentinels and join workers. Requests already queued
+    /// before the sentinel are still answered.
+    pub fn shutdown(mut self) {
+        for route in self.routes.values() {
+            let _ = route.queue.send(Msg::Shutdown);
+        }
+        for (_, mut route) in self.routes.drain() {
+            drop(route.queue);
+            if let Some(w) = route.worker.take() {
+                let _ = w.join();
+            }
+        }
+    }
+}
+
+impl Default for Coordinator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+struct HandleRoute {
+    queue: Mutex<Sender<Msg>>,
+    n_literals: usize,
+    metrics: Arc<Metrics>,
+}
+
+/// Cloneable, thread-safe routing handle.
+#[derive(Clone)]
+pub struct CoordinatorHandle {
+    routes: Arc<HashMap<String, HandleRoute>>,
+}
+
+impl CoordinatorHandle {
+    /// Blocking inference against a registered model.
+    pub fn infer(&self, model: &str, literals: BitVec) -> Result<Prediction, InferError> {
+        let route = self
+            .routes
+            .get(model)
+            .ok_or_else(|| InferError::UnknownModel(model.to_string()))?;
+        if literals.len() != route.n_literals {
+            return Err(InferError::WrongWidth {
+                expected: route.n_literals,
+                got: literals.len(),
+            });
+        }
+        route.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let (resp_tx, resp_rx) = sync_channel(1);
+        let req = Request {
+            literals,
+            enqueued: Instant::now(),
+            resp: resp_tx,
+        };
+        route
+            .queue
+            .lock()
+            .expect("queue lock poisoned")
+            .send(Msg::Infer(req))
+            .map_err(|_| InferError::ShuttingDown)?;
+        resp_rx.recv().map_err(|_| InferError::ShuttingDown)?
+    }
+
+    /// Convenience: infer from a raw feature row (builds `[x, ¬x]`).
+    pub fn infer_features(
+        &self,
+        model: &str,
+        features: &[bool],
+    ) -> Result<Prediction, InferError> {
+        let lits = crate::data::Dataset::literals_from_bools(features);
+        self.infer(model, lits)
+    }
+}
+
+/// Line protocol for the TCP front end:
+///
+/// ```text
+/// -> <model> <01-bitstring of raw features>\n
+/// <- ok <class> <score_0> <score_1> ...\n   |   err <message>\n
+/// ```
+pub fn serve_tcp(
+    listener: TcpListener,
+    handle: CoordinatorHandle,
+    stop: Arc<AtomicBool>,
+) -> std::io::Result<()> {
+    listener.set_nonblocking(true)?;
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _addr)) => {
+                let h = handle.clone();
+                let stop_conn = Arc::clone(&stop);
+                conns.push(std::thread::spawn(move || {
+                    let _ = handle_conn(stream, h, stop_conn);
+                }));
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    for c in conns {
+        let _ = c.join();
+    }
+    Ok(())
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    handle: CoordinatorHandle,
+    stop: Arc<AtomicBool>,
+) -> std::io::Result<()> {
+    // Periodic read timeout so idle connections observe shutdown.
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = loop {
+            match reader.read_line(&mut line) {
+                Ok(n) => break n,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    if stop.load(Ordering::Relaxed) {
+                        return Ok(());
+                    }
+                    // keep any partial line already buffered and retry
+                }
+                Err(e) => return Err(e),
+            }
+        };
+        if n == 0 {
+            return Ok(()); // client closed
+        }
+        let reply = match parse_request_line(&line) {
+            Ok((model, features)) => match handle.infer_features(model, &features) {
+                Ok(p) => {
+                    let scores: Vec<String> =
+                        p.scores.iter().map(|s| s.to_string()).collect();
+                    format!("ok {} {}\n", p.class, scores.join(" "))
+                }
+                Err(e) => format!("err {e}\n"),
+            },
+            Err(e) => format!("err {e}\n"),
+        };
+        stream.write_all(reply.as_bytes())?;
+    }
+}
+
+fn parse_request_line(line: &str) -> Result<(&str, Vec<bool>), String> {
+    let line = line.trim();
+    let (model, bits) = line
+        .split_once(' ')
+        .ok_or_else(|| "expected '<model> <bits>'".to_string())?;
+    let features: Result<Vec<bool>, String> = bits
+        .chars()
+        .map(|c| match c {
+            '0' => Ok(false),
+            '1' => Ok(true),
+            other => Err(format!("bad bit '{other}'")),
+        })
+        .collect();
+    Ok((model, features?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::CpuBackend;
+    use crate::eval;
+    use crate::tm::params::TMParams;
+    use crate::tm::trainer::Trainer;
+    use crate::util::Rng;
+
+    fn toy_backend() -> Box<dyn Backend + Send> {
+        let params = TMParams::new(2, 10, 8);
+        let mut tr = Trainer::new(params, eval::Backend::Indexed);
+        let mut rng = Rng::new(3);
+        let samples: Vec<(BitVec, usize)> = (0..200)
+            .map(|_| {
+                let y = rng.bern(0.5) as usize;
+                let bits: Vec<bool> =
+                    (0..8).map(|k| if k == 0 { y == 0 } else { rng.bern(0.5) }).collect();
+                let mut l = bits.clone();
+                l.extend(bits.iter().map(|b| !b));
+                (BitVec::from_bools(&l), y)
+            })
+            .collect();
+        for _ in 0..5 {
+            tr.train_epoch(samples.iter().map(|(l, y)| (l, *y)));
+        }
+        Box::new(CpuBackend::new(tr.tm, eval::Backend::Indexed))
+    }
+
+    fn class0_features() -> Vec<bool> {
+        let mut f = vec![false; 8];
+        f[0] = true;
+        f
+    }
+
+    #[test]
+    fn register_infer_shutdown() {
+        let mut coord = Coordinator::new();
+        coord.register("toy", toy_backend(), BatchPolicy::default());
+        let h = coord.handle();
+        let p = h.infer_features("toy", &class0_features()).unwrap();
+        assert_eq!(p.class, 0);
+        assert_eq!(p.scores.len(), 2);
+        let m = coord.metrics("toy").unwrap();
+        assert_eq!(m.requests, 1);
+        assert_eq!(m.completed, 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn unknown_model_and_wrong_width() {
+        let mut coord = Coordinator::new();
+        coord.register("toy", toy_backend(), BatchPolicy::default());
+        let h = coord.handle();
+        assert!(matches!(
+            h.infer_features("nope", &class0_features()),
+            Err(InferError::UnknownModel(_))
+        ));
+        assert!(matches!(
+            h.infer("toy", BitVec::zeros(4)),
+            Err(InferError::WrongWidth { expected: 16, got: 4 })
+        ));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_all_answered() {
+        let mut coord = Coordinator::new();
+        coord.register(
+            "toy",
+            toy_backend(),
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: std::time::Duration::from_millis(2),
+            },
+        );
+        let h = coord.handle();
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..25 {
+                        let p = h.infer_features("toy", &class0_features()).unwrap();
+                        assert_eq!(p.class, 0);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let m = coord.metrics("toy").unwrap();
+        assert_eq!(m.completed, 200);
+        assert!(m.batches <= 200);
+        coord.shutdown();
+    }
+
+    /// Backend that fails every batch — exercises the error path.
+    struct FailingBackend;
+    impl Backend for FailingBackend {
+        fn infer_batch(
+            &mut self,
+            _batch: &[BitVec],
+        ) -> anyhow::Result<Vec<crate::coordinator::backend::Scored>> {
+            anyhow::bail!("injected backend failure")
+        }
+        fn n_literals(&self) -> usize {
+            4
+        }
+        fn name(&self) -> String {
+            "failing".into()
+        }
+    }
+
+    #[test]
+    fn backend_errors_propagate_and_are_counted() {
+        let mut coord = Coordinator::new();
+        coord.register("bad", Box::new(FailingBackend), BatchPolicy::default());
+        let h = coord.handle();
+        for _ in 0..3 {
+            match h.infer("bad", BitVec::zeros(4)) {
+                Err(InferError::BackendError(msg)) => {
+                    assert!(msg.contains("injected"), "{msg}")
+                }
+                other => panic!("expected backend error, got {other:?}"),
+            }
+        }
+        let m = coord.metrics("bad").unwrap();
+        assert_eq!(m.errors, 3);
+        assert_eq!(m.completed, 0);
+        // coordinator still serves other routes and shuts down cleanly
+        coord.register("toy", toy_backend(), BatchPolicy::default());
+        let h = coord.handle();
+        assert!(h.infer_features("toy", &class0_features()).is_ok());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn failing_factory_creates_no_route() {
+        let mut coord = Coordinator::new();
+        let res = coord.register_with(
+            "broken",
+            || anyhow::bail!("cannot construct"),
+            BatchPolicy::default(),
+        );
+        assert!(res.is_err());
+        assert!(coord.models().is_empty());
+        let h = coord.handle();
+        assert!(matches!(
+            h.infer("broken", BitVec::zeros(4)),
+            Err(InferError::UnknownModel(_))
+        ));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn infer_after_shutdown_reports_shutting_down() {
+        let mut coord = Coordinator::new();
+        coord.register("toy", toy_backend(), BatchPolicy::default());
+        let h = coord.handle();
+        coord.shutdown();
+        // worker is gone; the stale handle must fail, not hang
+        let r = h.infer_features("toy", &class0_features());
+        assert!(matches!(r, Err(InferError::ShuttingDown)), "{r:?}");
+    }
+
+    #[test]
+    fn parse_request_line_cases() {
+        let (m, f) = parse_request_line("toy 1010\n").unwrap();
+        assert_eq!(m, "toy");
+        assert_eq!(f, vec![true, false, true, false]);
+        assert!(parse_request_line("justmodel").is_err());
+        assert!(parse_request_line("toy 10x1").is_err());
+    }
+
+    #[test]
+    fn tcp_round_trip() {
+        let mut coord = Coordinator::new();
+        coord.register("toy", toy_backend(), BatchPolicy::default());
+        let handle = coord.handle();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let server = std::thread::spawn(move || serve_tcp(listener, handle, stop2));
+
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.write_all(b"toy 10000000\n").unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        assert!(reply.starts_with("ok 0 "), "reply: {reply}");
+
+        conn.write_all(b"missing 1\n").unwrap();
+        reply.clear();
+        reader.read_line(&mut reply).unwrap();
+        assert!(reply.starts_with("err "), "reply: {reply}");
+
+        stop.store(true, Ordering::Relaxed);
+        drop(conn);
+        drop(reader); // the try_clone half also holds the socket open
+        server.join().unwrap().unwrap();
+        coord.shutdown();
+    }
+}

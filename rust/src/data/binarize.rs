@@ -1,0 +1,80 @@
+//! k-threshold grey-level binarization (paper §4).
+//!
+//! M1/F1 use one threshold per pixel (784 features); M2–M4 / F2–F4 use
+//! 2–4 evenly-spaced thresholds, giving 1568 / 2352 / 3136 features.
+//! Layout is level-major: feature `g * pixels + p` is
+//! `image[p] >= threshold(g)` — the same unary ("thermometer") code the
+//! TM literature uses.
+
+/// Threshold for grey level `g` of `levels` (1-based spacing over 0..=255).
+#[inline]
+pub fn threshold(g: usize, levels: usize) -> u8 {
+    (((g + 1) * 256) / (levels + 1)) as u8
+}
+
+/// Binarize one image into `levels * pixels` booleans.
+pub fn binarize_image(image: &[u8], levels: usize) -> Vec<bool> {
+    let mut out = Vec::with_capacity(levels * image.len());
+    for g in 0..levels {
+        let t = threshold(g, levels);
+        out.extend(image.iter().map(|&p| p >= t));
+    }
+    out
+}
+
+/// Binarize a batch of images.
+pub fn binarize_images(images: &[Vec<u8>], levels: usize) -> Vec<Vec<bool>> {
+    images.iter().map(|im| binarize_image(im, levels)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thresholds_are_evenly_spaced() {
+        assert_eq!(threshold(0, 1), 128);
+        assert_eq!(threshold(0, 3), 64);
+        assert_eq!(threshold(1, 3), 128);
+        assert_eq!(threshold(2, 3), 192);
+    }
+
+    #[test]
+    fn single_level_is_simple_threshold() {
+        let img = vec![0u8, 127, 128, 255];
+        let b = binarize_image(&img, 1);
+        assert_eq!(b, vec![false, false, true, true]);
+    }
+
+    #[test]
+    fn feature_count_scales_with_levels() {
+        let img = vec![100u8; 784];
+        for levels in 1..=4 {
+            assert_eq!(binarize_image(&img, levels).len(), levels * 784);
+        }
+    }
+
+    #[test]
+    fn thermometer_property_is_monotone() {
+        // if a pixel clears level g, it clears all lower levels
+        let img: Vec<u8> = (0..=255).step_by(5).map(|v| v as u8).collect();
+        let levels = 4;
+        let bits = binarize_image(&img, levels);
+        let pixels = img.len();
+        for p in 0..pixels {
+            for g in 1..levels {
+                if bits[g * pixels + p] {
+                    assert!(bits[(g - 1) * pixels + p], "pixel {p} level {g}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let imgs = vec![vec![10u8, 200], vec![255u8, 0]];
+        let batch = binarize_images(&imgs, 2);
+        assert_eq!(batch[0], binarize_image(&imgs[0], 2));
+        assert_eq!(batch[1], binarize_image(&imgs[1], 2));
+    }
+}

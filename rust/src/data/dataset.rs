@@ -1,0 +1,209 @@
+//! Labelled Boolean dataset with precomputed literal vectors.
+
+use crate::util::{BitVec, Rng};
+
+/// A labelled dataset. Each sample is stored as its full **literal
+/// vector** of length `2o` (`[x, ¬x]`), which is what every evaluator
+/// consumes — the negated half is precomputed once at load time.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub features: usize,
+    pub classes: usize,
+    samples: Vec<BitVec>,
+    labels: Vec<usize>,
+}
+
+impl Dataset {
+    /// Build from raw feature rows (`rows[i].len() == features`).
+    pub fn from_rows(
+        name: impl Into<String>,
+        features: usize,
+        classes: usize,
+        rows: &[Vec<bool>],
+        labels: Vec<usize>,
+    ) -> Self {
+        assert_eq!(rows.len(), labels.len());
+        let samples = rows
+            .iter()
+            .map(|row| {
+                assert_eq!(row.len(), features);
+                Self::literals_from_bools(row)
+            })
+            .collect();
+        for &y in &labels {
+            assert!(y < classes, "label {y} out of range");
+        }
+        Dataset {
+            name: name.into(),
+            features,
+            classes,
+            samples,
+            labels,
+        }
+    }
+
+    /// `[x, ¬x]` literal vector from a feature row.
+    pub fn literals_from_bools(row: &[bool]) -> BitVec {
+        let o = row.len();
+        let mut lits = BitVec::zeros(2 * o);
+        for (k, &b) in row.iter().enumerate() {
+            if b {
+                lits.set(k);
+            } else {
+                lits.set(o + k);
+            }
+        }
+        lits
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    #[inline]
+    pub fn literals(&self, i: usize) -> &BitVec {
+        &self.samples[i]
+    }
+
+    #[inline]
+    pub fn label(&self, i: usize) -> usize {
+        self.labels[i]
+    }
+
+    /// Iterate `(literals, label)` pairs in index order.
+    pub fn iter(&self) -> impl Iterator<Item = (&BitVec, usize)> {
+        self.samples.iter().zip(self.labels.iter().copied())
+    }
+
+    /// Iterate in a caller-provided order (epoch shuffling).
+    pub fn iter_order<'a>(
+        &'a self,
+        order: &'a [usize],
+    ) -> impl Iterator<Item = (&'a BitVec, usize)> + 'a {
+        order.iter().map(move |&i| (&self.samples[i], self.labels[i]))
+    }
+
+    /// Shuffled index order for one epoch.
+    pub fn epoch_order(&self, rng: &mut Rng) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..self.len()).collect();
+        rng.shuffle(&mut order);
+        order
+    }
+
+    /// First `n` samples as a new dataset (bench subsets).
+    pub fn take(&self, n: usize) -> Dataset {
+        self.slice(0, n)
+    }
+
+    /// Samples `[start, end)` as a new dataset (train/test splits).
+    pub fn slice(&self, start: usize, end: usize) -> Dataset {
+        let end = end.min(self.len());
+        let start = start.min(end);
+        Dataset {
+            name: self.name.clone(),
+            features: self.features,
+            classes: self.classes,
+            samples: self.samples[start..end].to_vec(),
+            labels: self.labels[start..end].to_vec(),
+        }
+    }
+
+    /// Fraction of literals that are FALSE per sample — the quantity the
+    /// indexed walk's work is proportional to. Always exactly 0.5 for
+    /// `[x, ¬x]` literal vectors; kept for datasets built from raw rows.
+    pub fn mean_false_literal_fraction(&self) -> f64 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        let total: usize = self
+            .samples
+            .iter()
+            .map(|s| s.len() - s.count_ones())
+            .sum();
+        total as f64 / (self.samples.len() * 2 * self.features) as f64
+    }
+
+    /// Fraction of raw *features* set (document density for BoW data).
+    pub fn mean_feature_density(&self) -> f64 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        let total: usize = self
+            .samples
+            .iter()
+            .map(|s| (0..self.features).filter(|&k| s.get(k)).count())
+            .sum();
+        total as f64 / (self.samples.len() * self.features) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset::from_rows(
+            "t",
+            3,
+            2,
+            &[
+                vec![true, false, true],
+                vec![false, false, false],
+            ],
+            vec![0, 1],
+        )
+    }
+
+    #[test]
+    fn literal_layout_is_x_then_not_x() {
+        let d = tiny();
+        let l = d.literals(0);
+        assert_eq!(l.len(), 6);
+        assert!(l.get(0) && !l.get(1) && l.get(2)); // x
+        assert!(!l.get(3) && l.get(4) && !l.get(5)); // ¬x
+    }
+
+    #[test]
+    fn exactly_half_literals_true() {
+        let d = tiny();
+        for i in 0..d.len() {
+            assert_eq!(d.literals(i).count_ones(), 3);
+        }
+        assert!((d.mean_false_literal_fraction() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn feature_density() {
+        let d = tiny();
+        // 2 of 3 + 0 of 3 = 2/6
+        assert!((d.mean_feature_density() - 2.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn epoch_order_is_permutation() {
+        let d = tiny();
+        let mut rng = Rng::new(1);
+        let ord = d.epoch_order(&mut rng);
+        let mut s = ord.clone();
+        s.sort_unstable();
+        assert_eq!(s, vec![0, 1]);
+    }
+
+    #[test]
+    fn take_truncates() {
+        let d = tiny();
+        assert_eq!(d.take(1).len(), 1);
+        assert_eq!(d.take(10).len(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn label_out_of_range_panics() {
+        Dataset::from_rows("t", 1, 2, &[vec![true]], vec![5]);
+    }
+}

@@ -1,0 +1,188 @@
+//! MNIST / Fashion-MNIST loading: IDX format parser with synthetic
+//! fallback.
+//!
+//! Looks for the standard four files (`train-images-idx3-ubyte`, etc.,
+//! uncompressed) under a data directory. If absent, falls back to the
+//! calibrated synthetic generator — every experiment runs either way
+//! (DESIGN.md §Substitutions).
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::data::binarize::binarize_images;
+use crate::data::dataset::Dataset;
+use crate::data::synth::{self, ImageStyle};
+
+/// Parse an IDX images file (magic 0x00000803).
+pub fn parse_idx_images(bytes: &[u8]) -> Result<Vec<Vec<u8>>> {
+    ensure!(bytes.len() >= 16, "idx images: truncated header");
+    let magic = u32::from_be_bytes(bytes[0..4].try_into().unwrap());
+    ensure!(magic == 0x0000_0803, "idx images: bad magic {magic:#x}");
+    let count = u32::from_be_bytes(bytes[4..8].try_into().unwrap()) as usize;
+    let rows = u32::from_be_bytes(bytes[8..12].try_into().unwrap()) as usize;
+    let cols = u32::from_be_bytes(bytes[12..16].try_into().unwrap()) as usize;
+    let pixels = rows * cols;
+    ensure!(
+        bytes.len() == 16 + count * pixels,
+        "idx images: size mismatch ({} != {})",
+        bytes.len(),
+        16 + count * pixels
+    );
+    Ok((0..count)
+        .map(|i| bytes[16 + i * pixels..16 + (i + 1) * pixels].to_vec())
+        .collect())
+}
+
+/// Parse an IDX labels file (magic 0x00000801).
+pub fn parse_idx_labels(bytes: &[u8]) -> Result<Vec<usize>> {
+    ensure!(bytes.len() >= 8, "idx labels: truncated header");
+    let magic = u32::from_be_bytes(bytes[0..4].try_into().unwrap());
+    ensure!(magic == 0x0000_0801, "idx labels: bad magic {magic:#x}");
+    let count = u32::from_be_bytes(bytes[4..8].try_into().unwrap()) as usize;
+    ensure!(bytes.len() == 8 + count, "idx labels: size mismatch");
+    Ok(bytes[8..].iter().map(|&b| b as usize).collect())
+}
+
+/// Which split to load.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Test,
+}
+
+/// Load real IDX files from `dir` and binarize with `levels` thresholds.
+pub fn load_idx(dir: &Path, split: Split, levels: usize) -> Result<Dataset> {
+    let (img_name, lbl_name) = match split {
+        Split::Train => ("train-images-idx3-ubyte", "train-labels-idx1-ubyte"),
+        Split::Test => ("t10k-images-idx3-ubyte", "t10k-labels-idx1-ubyte"),
+    };
+    let images = std::fs::read(dir.join(img_name))
+        .with_context(|| format!("reading {img_name}"))?;
+    let labels = std::fs::read(dir.join(lbl_name))
+        .with_context(|| format!("reading {lbl_name}"))?;
+    let images = parse_idx_images(&images)?;
+    let labels = parse_idx_labels(&labels)?;
+    ensure!(images.len() == labels.len(), "images/labels count mismatch");
+    if let Some(&bad) = labels.iter().find(|&&y| y > 9) {
+        bail!("label {bad} out of range for a 10-class set");
+    }
+    let features = levels * images[0].len();
+    let rows = binarize_images(&images, levels);
+    Ok(Dataset::from_rows(
+        format!("idx-{}-L{levels}", dir.display()),
+        features,
+        10,
+        &rows,
+        labels,
+    ))
+}
+
+/// Load real data if `dir` contains IDX files, else synthesize.
+///
+/// `style` selects the synthetic profile (Digits ≙ MNIST, Fashion ≙
+/// F-MNIST); `samples` caps the returned size either way (the bench
+/// harness uses fixed subsets for comparable epoch timings).
+pub fn load_or_synthesize(
+    dir: Option<&Path>,
+    style: ImageStyle,
+    split: Split,
+    levels: usize,
+    samples: usize,
+    seed: u64,
+) -> Dataset {
+    if let Some(dir) = dir {
+        if let Ok(ds) = load_idx(dir, split, levels) {
+            return ds.take(samples);
+        }
+    }
+    // disjoint sample streams for train/test from one prototype set
+    let (extra, skip) = match split {
+        Split::Train => (0, 0),
+        Split::Test => (samples, samples),
+    };
+    let _ = extra;
+    let all = synth::image_dataset(style, 10, samples + skip, levels, seed);
+    all.slice(skip, skip + samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idx_images_bytes(imgs: &[Vec<u8>], rows: usize, cols: usize) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(&0x0000_0803u32.to_be_bytes());
+        b.extend_from_slice(&(imgs.len() as u32).to_be_bytes());
+        b.extend_from_slice(&(rows as u32).to_be_bytes());
+        b.extend_from_slice(&(cols as u32).to_be_bytes());
+        for im in imgs {
+            b.extend_from_slice(im);
+        }
+        b
+    }
+
+    fn idx_labels_bytes(labels: &[u8]) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(&0x0000_0801u32.to_be_bytes());
+        b.extend_from_slice(&(labels.len() as u32).to_be_bytes());
+        b.extend_from_slice(labels);
+        b
+    }
+
+    #[test]
+    fn parses_crafted_idx_images() {
+        let imgs = vec![vec![1u8, 2, 3, 4], vec![5, 6, 7, 8]];
+        let bytes = idx_images_bytes(&imgs, 2, 2);
+        assert_eq!(parse_idx_images(&bytes).unwrap(), imgs);
+    }
+
+    #[test]
+    fn parses_crafted_idx_labels() {
+        let bytes = idx_labels_bytes(&[3, 1, 4]);
+        assert_eq!(parse_idx_labels(&bytes).unwrap(), vec![3, 1, 4]);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        let imgs = vec![vec![1u8, 2, 3, 4]];
+        let mut bytes = idx_images_bytes(&imgs, 2, 2);
+        bytes[3] = 0x99;
+        assert!(parse_idx_images(&bytes).is_err());
+        let bytes = idx_images_bytes(&imgs, 2, 2);
+        assert!(parse_idx_images(&bytes[..bytes.len() - 1]).is_err());
+        assert!(parse_idx_labels(&[0, 0]).is_err());
+    }
+
+    #[test]
+    fn load_idx_roundtrip_via_tempdir() {
+        let dir = std::env::temp_dir().join(format!("tmi-idx-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let imgs = vec![vec![0u8; 4], vec![255u8; 4]];
+        std::fs::write(
+            dir.join("train-images-idx3-ubyte"),
+            idx_images_bytes(&imgs, 2, 2),
+        )
+        .unwrap();
+        std::fs::write(dir.join("train-labels-idx1-ubyte"), idx_labels_bytes(&[0, 7]))
+            .unwrap();
+        let ds = load_idx(&dir, Split::Train, 2).unwrap();
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds.features, 8);
+        assert_eq!(ds.label(1), 7);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fallback_synthesizes_disjoint_splits() {
+        let train = load_or_synthesize(None, ImageStyle::Digits, Split::Train, 1, 50, 9);
+        let test = load_or_synthesize(None, ImageStyle::Digits, Split::Test, 1, 50, 9);
+        assert_eq!(train.len(), 50);
+        assert_eq!(test.len(), 50);
+        // same prototypes, different samples
+        let same = (0..50)
+            .filter(|&i| train.literals(i) == test.literals(i))
+            .count();
+        assert!(same < 5, "{same} identical samples across splits");
+    }
+}

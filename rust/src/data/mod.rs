@@ -1,0 +1,20 @@
+//! Datasets: representation, binarization, loaders, and calibrated
+//! synthetic generators.
+//!
+//! The paper evaluates on MNIST (M1–M4), Fashion-MNIST (F1–F4) and IMDb
+//! (I1–I4). Real MNIST/F-MNIST IDX files are loaded when present under a
+//! data directory; otherwise the [`synth`] generators produce structured
+//! stand-ins calibrated to the paper's reported statistics (mean clause
+//! length ≈58 on M1, ≈116 on IMDb; see DESIGN.md §Substitutions). The
+//! speedup experiments depend on (features, clauses, literal/clause
+//! sparsity), not on label semantics, so the substitution preserves the
+//! measured behaviour.
+
+pub mod binarize;
+pub mod dataset;
+pub mod imdb;
+pub mod mnist;
+pub mod synth;
+
+pub use binarize::binarize_images;
+pub use dataset::Dataset;

@@ -1,0 +1,179 @@
+//! Bit-parallel baseline: packed include-masks, 64 literals per AND.
+//!
+//! Not in the paper — included as an ablation (DESIGN.md): the indexed
+//! evaluator's win over the naive scan is partly "lists skip work" and
+//! partly "the naive scan is scalar". This backend isolates the second
+//! factor: a clause is falsified iff any word of
+//! `include_mask & !literals` is non-zero.
+//!
+//! The masks are derived state, kept in sync through the [`FlipSink`]
+//! hooks — its maintenance cost is one bit-op per flip, cheaper than the
+//! index's list surgery.
+
+use crate::eval::traits::{Evaluator, FlipSink};
+use crate::tm::bank::ClauseBank;
+use crate::util::BitVec;
+
+/// Packed include-mask evaluator.
+pub struct BitPackedEval {
+    /// One mask of `2o` bits per clause.
+    masks: Vec<BitVec>,
+    n_literals: usize,
+}
+
+impl BitPackedEval {
+    pub fn new(params: &crate::tm::params::TMParams) -> Self {
+        BitPackedEval {
+            masks: (0..params.clauses_per_class)
+                .map(|_| BitVec::zeros(params.n_literals()))
+                .collect(),
+            n_literals: params.n_literals(),
+        }
+    }
+
+    #[inline]
+    fn clause_out(&self, j: usize, literals: &BitVec) -> bool {
+        let mask_words = self.masks[j].words();
+        let lit_words = literals.words();
+        debug_assert_eq!(mask_words.len(), lit_words.len());
+        for (m, l) in mask_words.iter().zip(lit_words) {
+            // included literal that is false -> falsified
+            if m & !l != 0 {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+impl FlipSink for BitPackedEval {
+    fn on_include(&mut self, j: u32, k: u32, _new_count: u32, _weight: u32) {
+        self.masks[j as usize].set(k as usize);
+    }
+    fn on_exclude(&mut self, j: u32, k: u32, _new_count: u32, _weight: u32) {
+        self.masks[j as usize].clear(k as usize);
+    }
+}
+
+impl Evaluator for BitPackedEval {
+    fn score(&mut self, bank: &ClauseBank, literals: &BitVec) -> i32 {
+        let mut score = 0;
+        for j in 0..bank.clauses() {
+            if bank.count(j) > 0 && self.clause_out(j, literals) {
+                score += bank.vote(j);
+            }
+        }
+        score
+    }
+
+    fn eval_train(&mut self, bank: &ClauseBank, literals: &BitVec, out: &mut BitVec) -> i32 {
+        debug_assert_eq!(out.len(), bank.clauses());
+        let mut score = 0;
+        for j in 0..bank.clauses() {
+            let o = self.clause_out(j, literals);
+            out.assign(j, o);
+            if o {
+                score += bank.vote(j);
+            }
+        }
+        score
+    }
+
+    fn rebuild(&mut self, bank: &ClauseBank) {
+        self.n_literals = bank.n_literals();
+        self.masks = (0..bank.clauses())
+            .map(|j| {
+                let mut m = BitVec::zeros(bank.n_literals());
+                for k in bank.included_literals(j) {
+                    m.set(k);
+                }
+                m
+            })
+            .collect();
+    }
+
+    fn name(&self) -> &'static str {
+        "bitpacked"
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::traits::reference_score;
+    use crate::tm::params::TMParams;
+    use crate::util::Rng;
+
+    fn random_setup(
+        rng: &mut Rng,
+        clauses: usize,
+        n_lit: usize,
+        density: f64,
+    ) -> (ClauseBank, BitPackedEval) {
+        let mut b = ClauseBank::new(clauses, n_lit);
+        for j in 0..clauses {
+            for k in 0..n_lit {
+                if rng.bern(density) {
+                    b.set_state(j, k, 2);
+                }
+            }
+        }
+        let params = TMParams::new(2, clauses, n_lit / 2);
+        let mut ev = BitPackedEval::new(&params);
+        ev.rebuild(&b);
+        (b, ev)
+    }
+
+    #[test]
+    fn matches_reference_after_rebuild() {
+        let mut rng = Rng::new(10);
+        for trial in 0..40 {
+            let (bank, mut ev) = random_setup(&mut rng, 12, 64, 0.2);
+            let lits =
+                BitVec::from_bools(&(0..64).map(|_| rng.bern(0.6)).collect::<Vec<_>>());
+            assert_eq!(
+                ev.score(&bank, &lits),
+                reference_score(&bank, &lits, false),
+                "trial {trial}"
+            );
+            let mut out = BitVec::zeros(12);
+            assert_eq!(
+                ev.eval_train(&bank, &lits, &mut out),
+                reference_score(&bank, &lits, true)
+            );
+        }
+    }
+
+    #[test]
+    fn flip_hooks_keep_masks_in_sync() {
+        let params = TMParams::new(2, 4, 8);
+        let mut bank = ClauseBank::new(4, 16);
+        let mut ev = BitPackedEval::new(&params);
+        // simulate a flip sequence through the hooks + bank together
+        bank.set_state(1, 5, 0);
+        ev.on_include(1, 5, bank.count(1), 1);
+        let mut lits = BitVec::ones(16);
+        assert_eq!(ev.score(&bank, &lits), -1); // clause 1 (-) fires
+        lits.clear(5);
+        assert_eq!(ev.score(&bank, &lits), 0); // falsified
+        bank.set_state(1, 5, -1);
+        ev.on_exclude(1, 5, bank.count(1), 1);
+        assert_eq!(ev.score(&bank, &lits), 0); // empty again
+    }
+
+    #[test]
+    fn partial_last_word_handled() {
+        // 2o = 70: exercises the tail-masking path
+        let mut rng = Rng::new(11);
+        let (bank, mut ev) = random_setup(&mut rng, 6, 70, 0.3);
+        for _ in 0..20 {
+            let lits =
+                BitVec::from_bools(&(0..70).map(|_| rng.bern(0.5)).collect::<Vec<_>>());
+            assert_eq!(ev.score(&bank, &lits), reference_score(&bank, &lits, false));
+        }
+    }
+}

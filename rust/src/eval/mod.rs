@@ -1,0 +1,62 @@
+//! Clause evaluation strategies behind a common trait.
+//!
+//! * [`naive`] — the paper's unindexed comparator: per-clause scan over
+//!   all `2o` TA actions, early-exit on the first falsifying literal.
+//! * [`bitpacked`] — 64-way bit-parallel scan over packed include-masks;
+//!   an "honest modern baseline" ablation the paper does not include.
+//! * The *indexed* evaluator (the paper's contribution) lives in
+//!   [`crate::index`] and implements the same trait.
+
+pub mod bitpacked;
+pub mod naive;
+pub mod traits;
+
+pub use bitpacked::BitPackedEval;
+pub use naive::NaiveEval;
+pub use traits::{Evaluator, FlipSink};
+
+use crate::index::IndexedEval;
+use crate::tm::params::TMParams;
+
+/// Evaluation backend selector (CLI / bench-harness level).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Exhaustive TA-action scan (paper's baseline).
+    Naive,
+    /// Bit-parallel include-mask scan (ablation).
+    BitPacked,
+    /// Inclusion-list + position-matrix index (paper's contribution).
+    Indexed,
+}
+
+impl Backend {
+    pub fn make(self, params: &TMParams) -> Box<dyn Evaluator + Send> {
+        match self {
+            Backend::Naive => Box::new(NaiveEval::new(params)),
+            Backend::BitPacked => Box::new(BitPackedEval::new(params)),
+            Backend::Indexed => Box::new(IndexedEval::new(params)),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Naive => "naive",
+            Backend::BitPacked => "bitpacked",
+            Backend::Indexed => "indexed",
+        }
+    }
+
+    pub const ALL: [Backend; 3] = [Backend::Naive, Backend::BitPacked, Backend::Indexed];
+}
+
+impl std::str::FromStr for Backend {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "naive" => Ok(Backend::Naive),
+            "bitpacked" => Ok(Backend::BitPacked),
+            "indexed" => Ok(Backend::Indexed),
+            other => Err(format!("unknown backend '{other}' (naive|bitpacked|indexed)")),
+        }
+    }
+}

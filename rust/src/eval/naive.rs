@@ -1,0 +1,143 @@
+//! The paper's unindexed baseline: exhaustive TA-action scan.
+//!
+//! "…the TM must scan through all the actions of the team of TAs
+//! responsible for the clause" (§3). Early exit on the first falsifying
+//! literal gives the baseline its best case — the paper's §3 Remarks
+//! compare against exactly this worst-case-`2o`-per-clause scan.
+
+use crate::eval::traits::{Evaluator, FlipSink};
+use crate::tm::bank::ClauseBank;
+use crate::util::BitVec;
+
+/// Stateless exhaustive evaluator (reads TA states directly; no derived
+/// structures, hence zero maintenance cost during training).
+pub struct NaiveEval;
+
+impl NaiveEval {
+    pub fn new(_params: &crate::tm::params::TMParams) -> Self {
+        NaiveEval
+    }
+
+    /// Clause output: scan the state row; false on the first included
+    /// literal that the sample sets to 0.
+    #[inline]
+    fn clause_out(bank: &ClauseBank, j: usize, literals: &BitVec) -> bool {
+        for (k, &s) in bank.row(j).iter().enumerate() {
+            if s >= 0 && !literals.get(k) {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+impl FlipSink for NaiveEval {
+    fn on_include(&mut self, _j: u32, _k: u32, _new_count: u32, _weight: u32) {}
+    fn on_exclude(&mut self, _j: u32, _k: u32, _new_count: u32, _weight: u32) {}
+}
+
+impl Evaluator for NaiveEval {
+    fn score(&mut self, bank: &ClauseBank, literals: &BitVec) -> i32 {
+        let mut score = 0;
+        for j in 0..bank.clauses() {
+            if bank.count(j) > 0 && Self::clause_out(bank, j, literals) {
+                score += bank.vote(j);
+            }
+        }
+        score
+    }
+
+    fn eval_train(&mut self, bank: &ClauseBank, literals: &BitVec, out: &mut BitVec) -> i32 {
+        debug_assert_eq!(out.len(), bank.clauses());
+        let mut score = 0;
+        for j in 0..bank.clauses() {
+            // training convention: empty clause outputs 1
+            let o = Self::clause_out(bank, j, literals);
+            out.assign(j, o);
+            if o {
+                score += bank.vote(j);
+            }
+        }
+        score
+    }
+
+    fn rebuild(&mut self, _bank: &ClauseBank) {}
+
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::traits::reference_score;
+    use crate::tm::params::TMParams;
+    use crate::util::Rng;
+
+    fn random_bank(rng: &mut Rng, clauses: usize, n_lit: usize, density: f64) -> ClauseBank {
+        let mut b = ClauseBank::new(clauses, n_lit);
+        for j in 0..clauses {
+            for k in 0..n_lit {
+                if rng.bern(density) {
+                    b.set_state(j, k, (rng.below(20) as i8) - 5);
+                }
+            }
+        }
+        b
+    }
+
+    fn random_lits(rng: &mut Rng, n: usize, p: f64) -> BitVec {
+        BitVec::from_bools(&(0..n).map(|_| rng.bern(p)).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn matches_reference_on_random_machines() {
+        let mut rng = Rng::new(8);
+        let params = TMParams::new(2, 10, 16);
+        let mut ev = NaiveEval::new(&params);
+        for trial in 0..50 {
+            let bank = random_bank(&mut rng, 10, 32, 0.3);
+            let lits = random_lits(&mut rng, 32, 0.5);
+            assert_eq!(
+                ev.score(&bank, &lits),
+                reference_score(&bank, &lits, false),
+                "trial {trial}"
+            );
+            let mut out = BitVec::zeros(10);
+            assert_eq!(
+                ev.eval_train(&bank, &lits, &mut out),
+                reference_score(&bank, &lits, true),
+                "train trial {trial}"
+            );
+        }
+    }
+
+    #[test]
+    fn train_outputs_match_clause_semantics() {
+        let mut bank = ClauseBank::new(4, 4);
+        bank.set_state(0, 0, 0); // clause 0 includes lit 0
+        bank.set_state(1, 1, 0); // clause 1 includes lit 1
+        let lits = BitVec::from_bools(&[true, false, true, true]);
+        let params = TMParams::new(2, 4, 2);
+        let mut ev = NaiveEval::new(&params);
+        let mut out = BitVec::zeros(4);
+        ev.eval_train(&bank, &lits, &mut out);
+        assert!(out.get(0)); // satisfied
+        assert!(!out.get(1)); // falsified by lit 1
+        assert!(out.get(2)); // empty -> 1 in training
+        assert!(out.get(3));
+    }
+
+    #[test]
+    fn empty_machine_scores_zero_at_inference() {
+        let bank = ClauseBank::new(6, 8);
+        let params = TMParams::new(2, 6, 4);
+        let mut ev = NaiveEval::new(&params);
+        assert_eq!(ev.score(&bank, &BitVec::ones(8)), 0);
+    }
+}

@@ -1,0 +1,105 @@
+//! The evaluator contract shared by the baselines and the paper's index.
+
+use crate::tm::bank::ClauseBank;
+use crate::util::BitVec;
+
+/// Receiver of include/exclude flip events from TA feedback.
+///
+/// The indexed evaluator maintains its inclusion lists here (the paper's
+/// O(1) insert/delete); the bit-parallel baseline keeps its packed masks
+/// in sync; the naive baseline ignores flips entirely (it reads TA
+/// states directly) — which is exactly why it pays no maintenance
+/// overhead, the effect the training tables measure.
+pub trait FlipSink {
+    /// Literal `k` of clause `j` just became included; `new_count` is
+    /// the clause's include-count after the flip, `weight` its current
+    /// clause weight (1 for plain TMs).
+    fn on_include(&mut self, j: u32, k: u32, new_count: u32, weight: u32);
+    /// Literal `k` of clause `j` just became excluded.
+    fn on_exclude(&mut self, j: u32, k: u32, new_count: u32, weight: u32);
+    /// Clause `j`'s weight changed by `delta` (weighted TMs only);
+    /// `nonempty` is whether the clause currently has included literals.
+    fn on_weight(&mut self, _j: u32, _delta: i32, _nonempty: bool) {}
+}
+
+/// A clause-evaluation strategy for one class's clause bank.
+///
+/// Both entry points must agree with the reference semantics:
+///
+/// * **inference** (`score`): clause output is 1 iff the clause is
+///   non-empty and none of its included literals is false; the score is
+///   the polarity-weighted sum (eq. 2/3 of the paper).
+/// * **training** (`eval_train`): identical except *empty clauses output
+///   1* (the standard TM learning convention, so fresh clauses can
+///   receive Type I feedback); per-clause outputs are materialized into
+///   `out` for the feedback step.
+pub trait Evaluator: FlipSink {
+    /// Inference-mode class score. `&mut self` because implementations
+    /// may use internal scratch (generation stamps).
+    fn score(&mut self, bank: &ClauseBank, literals: &BitVec) -> i32;
+
+    /// Training-mode evaluation: fill `out` (length = `bank.clauses()`)
+    /// with clause outputs and return the score implied by them.
+    fn eval_train(&mut self, bank: &ClauseBank, literals: &BitVec, out: &mut BitVec) -> i32;
+
+    /// Rebuild any derived state from the bank (after model load).
+    fn rebuild(&mut self, bank: &ClauseBank);
+
+    /// Backend name (diagnostics).
+    fn name(&self) -> &'static str;
+
+    /// Downcast hook (e.g. to reach the index for statistics).
+    fn as_any(&self) -> &dyn std::any::Any;
+}
+
+/// A sink that drops flips (naive evaluator, tests).
+pub struct NoopSink;
+
+impl FlipSink for NoopSink {
+    fn on_include(&mut self, _j: u32, _k: u32, _new_count: u32, _weight: u32) {}
+    fn on_exclude(&mut self, _j: u32, _k: u32, _new_count: u32, _weight: u32) {}
+}
+
+/// Reference scoring used by tests: direct transcription of the trait's
+/// documented semantics (weighted votes), shared by every
+/// implementation's test module.
+pub fn reference_score(bank: &ClauseBank, literals: &BitVec, training: bool) -> i32 {
+    let mut score = 0;
+    for j in 0..bank.clauses() {
+        let empty = bank.count(j) == 0;
+        let out = if empty {
+            training
+        } else {
+            bank.included_literals(j).all(|k| literals.get(k))
+        };
+        if out {
+            score += bank.vote(j);
+        }
+    }
+    score
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_score_empty_clause_conventions() {
+        let bank = ClauseBank::new(2, 4);
+        let lits = BitVec::ones(4);
+        // inference: empty clauses vote 0
+        assert_eq!(reference_score(&bank, &lits, false), 0);
+        // training: empty clauses vote their polarity (+1 - 1 = 0 here)
+        assert_eq!(reference_score(&bank, &lits, true), 0);
+    }
+
+    #[test]
+    fn reference_score_single_clause() {
+        let mut bank = ClauseBank::new(2, 4);
+        bank.set_state(0, 1, 0); // clause 0 (+) includes literal 1
+        let mut lits = BitVec::ones(4);
+        assert_eq!(reference_score(&bank, &lits, false), 1);
+        lits.clear(1);
+        assert_eq!(reference_score(&bank, &lits, false), 0);
+    }
+}

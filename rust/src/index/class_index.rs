@@ -1,0 +1,497 @@
+//! Inclusion lists + position matrix: the paper's index (§3), and the
+//! falsification evaluator built on it.
+//!
+//! For each literal `k` the list `L_k` holds the clause ids that
+//! *include* `k`. Evaluation walks only the input's **false** literals
+//! and knocks out the clauses in their lists; everything never touched
+//! stays true. Maintenance (paper's insertion/deletion algebra):
+//!
+//! ```text
+//! insert:  n_k += 1;  L_k[n_k] = j;  M[j][k] = n_k
+//! delete:  p = M[j][k];  L_k[p] = L_k[n_k];  M[L_k[p]][k] = p;
+//!          n_k -= 1;  M[j][k] = NA
+//! ```
+//!
+//! Both are O(1); `Vec::push`/swap-remove realize exactly this.
+
+use crate::eval::traits::{Evaluator, FlipSink};
+use crate::index::liststore::ListStore;
+use crate::index::position::PositionStore;
+use crate::tm::bank::ClauseBank;
+use crate::tm::params::TMParams;
+use crate::util::BitVec;
+
+/// The index for one class: `2o` inclusion lists, the position matrix,
+/// and the incrementally-maintained inference vote baseline.
+#[derive(Clone, Debug)]
+pub struct ClassIndex {
+    /// `L_k` for every literal `k` (flat matrix or nested fallback).
+    lists: ListStore,
+    /// `M[j][k]` — position of clause `j` in `L_k`.
+    pos: PositionStore,
+    /// Literals whose inclusion list is non-empty. The falsification
+    /// walk intersects this with the input's false-literal words, so
+    /// empty lists are skipped 64 at a time (perf pass, §Perf — the big
+    /// lever for sparse machines, where most lists are empty).
+    nonempty: BitVec,
+    /// Weighted vote sum over *non-empty* clauses: the all-true
+    /// inference score before any falsification.
+    vote_alive: i32,
+    /// Weighted vote sum over all clauses (training baseline; constant
+    /// for plain TMs, weight-maintained for weighted TMs).
+    vote_all: i32,
+}
+
+impl ClassIndex {
+    pub fn new(clauses: usize, n_literals: usize) -> Self {
+        ClassIndex {
+            lists: ListStore::auto(clauses, n_literals),
+            pos: PositionStore::auto(clauses, n_literals),
+            nonempty: BitVec::zeros(n_literals),
+            vote_alive: 0,
+            vote_all: (0..clauses).map(ClauseBank::polarity).sum(),
+        }
+    }
+
+    /// O(1) insertion (TA flipped exclude -> include).
+    #[inline]
+    pub fn insert(&mut self, j: u32, k: u32, new_count: u32, weight: u32) {
+        debug_assert!(self.pos.get(j, k).is_none(), "duplicate insert ({j},{k})");
+        let p = self.lists.push(k as usize, j);
+        self.pos.set(j, k, p);
+        if p == 0 {
+            self.nonempty.set(k as usize);
+        }
+        if new_count == 1 {
+            self.vote_alive += ClauseBank::polarity(j as usize) * weight as i32;
+        }
+    }
+
+    /// O(1) deletion by swap-with-last (TA flipped include -> exclude).
+    #[inline]
+    pub fn delete(&mut self, j: u32, k: u32, new_count: u32, weight: u32) {
+        let p = self
+            .pos
+            .remove(j, k)
+            .expect("delete of unindexed (clause, literal)");
+        if let Some(moved) = self.lists.swap_remove(k as usize, p) {
+            self.pos.set(moved, k, p);
+        }
+        if self.lists.lens()[k as usize] == 0 {
+            self.nonempty.clear(k as usize);
+        }
+        if new_count == 0 {
+            self.vote_alive -= ClauseBank::polarity(j as usize) * weight as i32;
+        }
+    }
+
+    /// Weight change of clause `j` (weighted TMs): adjust the vote
+    /// baselines without touching any list.
+    #[inline]
+    pub fn weight_changed(&mut self, j: u32, delta: i32, nonempty: bool) {
+        let d = ClauseBank::polarity(j as usize) * delta;
+        self.vote_all += d;
+        if nonempty {
+            self.vote_alive += d;
+        }
+    }
+
+    /// Iterate the indices of FALSE literals whose list is non-empty:
+    /// `(!literals & nonempty)`, word-parallel.
+    #[inline]
+    pub fn walk_false_nonempty<'a>(
+        &'a self,
+        literals: &'a BitVec,
+    ) -> impl Iterator<Item = usize> + 'a {
+        literals
+            .words()
+            .iter()
+            .zip(self.nonempty.words())
+            .enumerate()
+            .flat_map(|(wi, (&lw, &ne))| {
+                // nonempty's tail bits are 0, masking !lw's padding.
+                let mut w = !lw & ne;
+                std::iter::from_fn(move || {
+                    if w == 0 {
+                        return None;
+                    }
+                    let bit = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    Some(wi * 64 + bit)
+                })
+            })
+    }
+
+    #[inline]
+    pub fn list(&self, k: usize) -> &[u32] {
+        self.lists.row(k)
+    }
+
+    /// Contiguous list lengths (the walk's skip-empty fast path).
+    #[inline]
+    pub fn list_lens(&self) -> &[u32] {
+        self.lists.lens()
+    }
+
+    pub fn n_literals(&self) -> usize {
+        self.lists.n_literals()
+    }
+
+    pub fn vote_alive(&self) -> i32 {
+        self.vote_alive
+    }
+
+    pub fn vote_all(&self) -> i32 {
+        self.vote_all
+    }
+
+    pub fn position_store(&self) -> &PositionStore {
+        &self.pos
+    }
+
+    /// Rebuild from a bank (model load / backend switch).
+    pub fn rebuild(&mut self, bank: &ClauseBank) {
+        let clauses = bank.clauses();
+        let n_lit = bank.n_literals();
+        self.lists = ListStore::auto(clauses, n_lit);
+        self.pos = PositionStore::auto(clauses, n_lit);
+        self.nonempty = BitVec::zeros(n_lit);
+        self.vote_all = (0..clauses).map(|j| bank.vote(j)).sum();
+        self.vote_alive = 0;
+        for j in 0..clauses {
+            if bank.count(j) > 0 {
+                self.vote_alive += bank.vote(j);
+            }
+            for k in bank.included_literals(j) {
+                let p = self.lists.push(k, j as u32);
+                self.pos.set(j as u32, k as u32, p);
+                if p == 0 {
+                    self.nonempty.set(k);
+                }
+            }
+        }
+    }
+
+    /// Full structural invariant check (tests & debug builds):
+    /// the lists/matrix pair is a bijection consistent with the bank.
+    #[doc(hidden)]
+    pub fn check_invariants(&self, bank: &ClauseBank) -> Result<(), String> {
+        // 1. every list entry has a matching position
+        for k in 0..self.lists.n_literals() {
+            let list = self.lists.row(k);
+            for (p, &j) in list.iter().enumerate() {
+                if self.pos.get(j, k as u32) != Some(p as u32) {
+                    return Err(format!("M[{j}][{k}] != {p}"));
+                }
+                if !bank.include(j as usize, k) {
+                    return Err(format!("list {k} holds non-included clause {j}"));
+                }
+            }
+        }
+        // 2. every inclusion in the bank is listed exactly once
+        for j in 0..bank.clauses() {
+            for k in bank.included_literals(j) {
+                match self.pos.get(j as u32, k as u32) {
+                    Some(p) => {
+                        if self.lists.row(k).get(p as usize) != Some(&(j as u32)) {
+                            return Err(format!("L_{k}[{p}] != {j}"));
+                        }
+                    }
+                    None => return Err(format!("missing index entry ({j},{k})")),
+                }
+            }
+        }
+        // 3. list sizes sum to total inclusions
+        let listed: usize = self.lists.lens().iter().map(|&l| l as usize).sum();
+        let included: usize = (0..bank.clauses()).map(|j| bank.count(j) as usize).sum();
+        if listed != included {
+            return Err(format!("listed {listed} != included {included}"));
+        }
+        // 4. vote baselines
+        if self.vote_alive != bank.vote_alive() {
+            return Err(format!(
+                "vote_alive {} != bank {}",
+                self.vote_alive,
+                bank.vote_alive()
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// The paper's evaluator: index + falsification walk.
+///
+/// Scratch (`gen`, `cur_gen`) deduplicates knock-outs without clearing an
+/// n-bit array per evaluation: a clause is "already falsified in this
+/// evaluation" iff its stamp equals the current generation.
+pub struct IndexedEval {
+    index: ClassIndex,
+    gen: Vec<u32>,
+    cur_gen: u32,
+    /// Reusable buffer of walk targets (enables prefetch lookahead).
+    walk_buf: Vec<u32>,
+}
+
+/// Prefetch the cache line at `p` (no-op off x86_64).
+#[inline(always)]
+fn prefetch(p: *const u32) {
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        core::arch::x86_64::_mm_prefetch(p as *const i8, core::arch::x86_64::_MM_HINT_T0);
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = p;
+}
+
+impl IndexedEval {
+    pub fn new(params: &TMParams) -> Self {
+        IndexedEval {
+            index: ClassIndex::new(params.clauses_per_class, params.n_literals()),
+            gen: vec![0; params.clauses_per_class],
+            cur_gen: 0,
+            walk_buf: Vec::new(),
+        }
+    }
+
+    pub fn index(&self) -> &ClassIndex {
+        &self.index
+    }
+
+    #[inline]
+    fn next_gen(&mut self) -> u32 {
+        self.cur_gen = self.cur_gen.wrapping_add(1);
+        if self.cur_gen == 0 {
+            // wrapped: stamps from 4 billion evals ago could collide
+            self.gen.fill(0);
+            self.cur_gen = 1;
+        }
+        self.cur_gen
+    }
+}
+
+impl FlipSink for IndexedEval {
+    #[inline]
+    fn on_include(&mut self, j: u32, k: u32, new_count: u32, weight: u32) {
+        self.index.insert(j, k, new_count, weight);
+    }
+    #[inline]
+    fn on_exclude(&mut self, j: u32, k: u32, new_count: u32, weight: u32) {
+        self.index.delete(j, k, new_count, weight);
+    }
+    #[inline]
+    fn on_weight(&mut self, j: u32, delta: i32, nonempty: bool) {
+        self.index.weight_changed(j, delta, nonempty);
+    }
+}
+
+impl Evaluator for IndexedEval {
+    fn score(&mut self, bank: &ClauseBank, literals: &BitVec) -> i32 {
+        let gen = self.next_gen();
+        let mut score = self.index.vote_alive;
+        // Word-parallel walk (only FALSE literals with NON-EMPTY lists)
+        // + software prefetch 8 rows ahead: the row reads are the
+        // walk's cache-miss budget (perf pass, §Perf).
+        self.walk_buf.clear();
+        self.walk_buf
+            .extend(self.index.walk_false_nonempty(literals).map(|k| k as u32));
+        const LOOKAHEAD: usize = 8;
+        for (i, &k) in self.walk_buf.iter().enumerate() {
+            if let Some(&kn) = self.walk_buf.get(i + LOOKAHEAD) {
+                prefetch(self.index.lists.row_ptr(kn as usize));
+            }
+            for &j in self.index.lists.row(k as usize) {
+                let stamp = &mut self.gen[j as usize];
+                if *stamp != gen {
+                    *stamp = gen;
+                    score -= bank.vote(j as usize);
+                }
+            }
+        }
+        score
+    }
+
+    fn eval_train(&mut self, bank: &ClauseBank, literals: &BitVec, out: &mut BitVec) -> i32 {
+        debug_assert_eq!(out.len(), bank.clauses());
+        // all clauses start true (empty ones output 1 during training and
+        // appear in no list, so they survive the walk — correct).
+        out.set_all();
+        let mut score = self.index.vote_all;
+        for k in self.index.walk_false_nonempty(literals) {
+            for &j in self.index.lists.row(k) {
+                let j = j as usize;
+                if out.get(j) {
+                    out.clear(j);
+                    score -= bank.vote(j);
+                }
+            }
+        }
+        score
+    }
+
+    fn rebuild(&mut self, bank: &ClauseBank) {
+        self.index.rebuild(bank);
+        self.gen = vec![0; bank.clauses()];
+        self.cur_gen = 0;
+    }
+
+    fn name(&self) -> &'static str {
+        "indexed"
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::traits::reference_score;
+    use crate::util::Rng;
+
+    fn random_machine(
+        rng: &mut Rng,
+        clauses: usize,
+        n_lit: usize,
+        density: f64,
+    ) -> (ClauseBank, IndexedEval) {
+        let mut bank = ClauseBank::new(clauses, n_lit);
+        for j in 0..clauses {
+            for k in 0..n_lit {
+                if rng.bern(density) {
+                    bank.set_state(j, k, 1);
+                }
+            }
+        }
+        let params = TMParams::new(2, clauses, n_lit / 2);
+        let mut ev = IndexedEval::new(&params);
+        ev.rebuild(&bank);
+        (bank, ev)
+    }
+
+    #[test]
+    fn paper_step_by_step_example() {
+        // Fig. 2 walk-through: class 1 with clauses C1+, C1-, C2+, C2-
+        // over features x1, x2 (literals: x1=0, x2=1, ¬x1=2, ¬x2=3).
+        // Our ids: C1+ = 0 (+), C1- = 1 (-), C2+ = 2 (+), C2- = 3 (-).
+        let mut bank = ClauseBank::new(4, 4);
+        // From Fig. 2 left, class 1 lists:
+        //  x1: C1+, C1-, C2+     x2: C1-, C2-    ¬x1: C2-, C1-    ¬x2: C2+
+        let inclusions: &[(usize, usize)] = &[
+            (0, 0), (1, 0), (2, 0), // x1
+            (1, 1), (3, 1),         // x2
+            (3, 2), (1, 2),         // ¬x1
+            (2, 3),                 // ¬x2
+        ];
+        for &(j, k) in inclusions {
+            bank.set_state(j, k, 0);
+        }
+        let params = TMParams::new(2, 4, 2);
+        let mut ev = IndexedEval::new(&params);
+        ev.rebuild(&bank);
+        ev.index.check_invariants(&bank).unwrap();
+
+        // x = (1, 0): literals x1=1, x2=0, ¬x1=0, ¬x2=1.
+        let lits = BitVec::from_bools(&[true, false, false, true]);
+        // Paper: final class score = 2 (C1-, C2- falsified; C1+, C2+ true).
+        assert_eq!(ev.score(&bank, &lits), 2);
+        assert_eq!(ev.score(&bank, &lits), 2); // scratch reuse is clean
+    }
+
+    #[test]
+    fn paper_deletion_example() {
+        // Continue Fig. 2: delete C1+ (id 0) from L_{x1}; C2+ (id 2,
+        // last in the list) must take its slot and M must be updated.
+        let mut bank = ClauseBank::new(4, 4);
+        for &(j, k) in &[(0usize, 0usize), (1, 0), (2, 0)] {
+            bank.set_state(j, k, 0);
+        }
+        let params = TMParams::new(2, 4, 2);
+        let mut ev = IndexedEval::new(&params);
+        ev.rebuild(&bank);
+        assert_eq!(ev.index.list(0), &[0, 1, 2]);
+
+        bank.set_state(0, 0, -1);
+        ev.on_exclude(0, 0, bank.count(0), 1);
+        assert_eq!(ev.index.list(0), &[2, 1]); // last element moved to front
+        ev.index.check_invariants(&bank).unwrap();
+
+        // and insertion appends at the end
+        bank.set_state(0, 1, 0);
+        ev.on_include(0, 1, bank.count(0), 1);
+        assert_eq!(ev.index.list(1), &[0]);
+        ev.index.check_invariants(&bank).unwrap();
+    }
+
+    #[test]
+    fn score_matches_reference_on_random_machines() {
+        let mut rng = Rng::new(13);
+        for trial in 0..60 {
+            let (bank, mut ev) = random_machine(&mut rng, 16, 40, 0.15);
+            let lits =
+                BitVec::from_bools(&(0..40).map(|_| rng.bern(0.5)).collect::<Vec<_>>());
+            assert_eq!(
+                ev.score(&bank, &lits),
+                reference_score(&bank, &lits, false),
+                "trial {trial}"
+            );
+            let mut out = BitVec::zeros(16);
+            assert_eq!(
+                ev.eval_train(&bank, &lits, &mut out),
+                reference_score(&bank, &lits, true),
+                "train {trial}"
+            );
+            // outputs themselves must match the semantics
+            for j in 0..16 {
+                let want = if bank.count(j) == 0 {
+                    true
+                } else {
+                    bank.included_literals(j).all(|k| lits.get(k))
+                };
+                assert_eq!(out.get(j), want, "clause {j} trial {trial}");
+            }
+        }
+    }
+
+    #[test]
+    fn maintenance_tracks_random_flips() {
+        let mut rng = Rng::new(14);
+        let (mut bank, mut ev) = random_machine(&mut rng, 10, 24, 0.1);
+        for _ in 0..5000 {
+            let j = rng.below(10) as usize;
+            let k = rng.below(24) as usize;
+            if rng.bern(0.5) {
+                if bank.bump_up(j, k) == crate::tm::bank::Flip::Included {
+                    ev.on_include(j as u32, k as u32, bank.count(j), bank.weight(j));
+                }
+            } else if bank.bump_down(j, k) == crate::tm::bank::Flip::Excluded {
+                ev.on_exclude(j as u32, k as u32, bank.count(j), bank.weight(j));
+            }
+        }
+        ev.index.check_invariants(&bank).unwrap();
+        // and evaluation still agrees with the reference
+        let lits = BitVec::from_bools(&(0..24).map(|_| rng.bern(0.5)).collect::<Vec<_>>());
+        assert_eq!(ev.score(&bank, &lits), reference_score(&bank, &lits, false));
+    }
+
+    #[test]
+    fn generation_wraparound_is_safe() {
+        let mut rng = Rng::new(15);
+        let (bank, mut ev) = random_machine(&mut rng, 8, 16, 0.2);
+        ev.cur_gen = u32::MAX - 2;
+        let lits = BitVec::from_bools(&(0..16).map(|_| rng.bern(0.5)).collect::<Vec<_>>());
+        let want = reference_score(&bank, &lits, false);
+        for _ in 0..6 {
+            assert_eq!(ev.score(&bank, &lits), want);
+        }
+    }
+
+    #[test]
+    fn all_true_input_gives_vote_alive() {
+        let mut rng = Rng::new(16);
+        let (bank, mut ev) = random_machine(&mut rng, 12, 20, 0.2);
+        let lits = BitVec::ones(20);
+        assert_eq!(ev.score(&bank, &lits), ev.index.vote_alive());
+        assert_eq!(ev.index.vote_alive(), bank.vote_alive());
+    }
+}

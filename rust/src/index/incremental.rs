@@ -1,0 +1,224 @@
+//! Incremental evaluation — the paper's §5 further work, implemented.
+//!
+//! > "we intend to investigate how clause indexing can speed up Monte
+//! > Carlo tree search for board games, by exploiting the incremental
+//! > changes of the board position from parent to child node."
+//!
+//! The index makes this natural: keep a per-clause **falsified-literal
+//! counter**. Flipping one literal `k` touches exactly the clauses in
+//! `L_k` — falsified count ±1, and only 0↔1 transitions move the score.
+//! Scoring a child position after `d` literal flips costs
+//! `O(Σ |L_k| over the d flipped literals)` instead of a full
+//! re-evaluation — for board games `d` is 1–4 per move while `2o` is
+//! the whole board encoding.
+//!
+//! The evaluator tracks one class; a game engine keeps `m` of them (see
+//! `examples/mcts_search.rs`).
+
+use crate::index::class_index::ClassIndex;
+use crate::tm::bank::ClauseBank;
+use crate::util::BitVec;
+
+/// Incremental single-class scorer positioned at a concrete literal
+/// assignment. Created from a [`ClassIndex`] + bank; moves via
+/// [`IncrementalEval::flip`] / [`IncrementalEval::set_literal`].
+#[derive(Clone, Debug)]
+pub struct IncrementalEval {
+    /// Falsified-literal count per clause.
+    fals: Vec<u32>,
+    /// Signed weighted vote per clause, snapshotted at construction
+    /// (weights do not change during search).
+    votes: Vec<i32>,
+    /// Current literal assignment.
+    literals: BitVec,
+    /// Current inference score (empty clauses vote 0).
+    score: i32,
+    flips_applied: u64,
+}
+
+impl IncrementalEval {
+    /// Initialize at `literals` (one full evaluation via the index).
+    pub fn new(index: &ClassIndex, bank: &ClauseBank, literals: &BitVec) -> Self {
+        assert_eq!(literals.len(), bank.n_literals());
+        let votes: Vec<i32> = (0..bank.clauses()).map(|j| bank.vote(j)).collect();
+        let mut fals = vec![0u32; bank.clauses()];
+        let mut score = index.vote_alive();
+        for k in index.walk_false_nonempty(literals) {
+            for &j in index.list(k) {
+                let f = &mut fals[j as usize];
+                *f += 1;
+                if *f == 1 {
+                    score -= votes[j as usize];
+                }
+            }
+        }
+        IncrementalEval {
+            fals,
+            votes,
+            literals: literals.clone(),
+            score,
+            flips_applied: 0,
+        }
+    }
+
+    /// Current inference score.
+    #[inline]
+    pub fn score(&self) -> i32 {
+        self.score
+    }
+
+    /// Current literal assignment.
+    pub fn literals(&self) -> &BitVec {
+        &self.literals
+    }
+
+    pub fn flips_applied(&self) -> u64 {
+        self.flips_applied
+    }
+
+    /// Toggle literal `k`. Cost: `O(|L_k|)`.
+    pub fn flip(&mut self, index: &ClassIndex, k: usize) {
+        let now_true = !self.literals.get(k);
+        self.literals.assign(k, now_true);
+        self.flips_applied += 1;
+        if now_true {
+            // literal became true: clauses in L_k lose one falsifier
+            for &j in index.list(k) {
+                let f = &mut self.fals[j as usize];
+                *f -= 1;
+                if *f == 0 {
+                    self.score += self.votes[j as usize];
+                }
+            }
+        } else {
+            for &j in index.list(k) {
+                let f = &mut self.fals[j as usize];
+                *f += 1;
+                if *f == 1 {
+                    self.score -= self.votes[j as usize];
+                }
+            }
+        }
+    }
+
+    /// Set literal `k` to `value` (no-op if already there).
+    pub fn set_literal(&mut self, index: &ClassIndex, k: usize, value: bool) {
+        if self.literals.get(k) != value {
+            self.flip(index, k);
+        }
+    }
+
+    /// Set *feature* `f` (of `o`) to `value`, updating both the feature
+    /// literal `f` and its negation `o + f` consistently.
+    pub fn set_feature(&mut self, index: &ClassIndex, o: usize, f: usize, value: bool) {
+        self.set_literal(index, f, value);
+        self.set_literal(index, o + f, !value);
+    }
+
+    /// Verify against a from-scratch evaluation (tests).
+    #[doc(hidden)]
+    pub fn check(&self, index: &ClassIndex, bank: &ClauseBank) -> Result<(), String> {
+        let fresh = IncrementalEval::new(index, bank, &self.literals);
+        if fresh.score != self.score {
+            return Err(format!("score drift: {} vs fresh {}", self.score, fresh.score));
+        }
+        if fresh.fals != self.fals {
+            return Err("falsified-count drift".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::Evaluator;
+    use crate::index::IndexedEval;
+    use crate::tm::params::TMParams;
+    use crate::util::Rng;
+
+    fn random_machine(
+        rng: &mut Rng,
+        clauses: usize,
+        n_lit: usize,
+        density: f64,
+    ) -> (ClauseBank, IndexedEval) {
+        let mut bank = ClauseBank::new(clauses, n_lit);
+        for j in 0..clauses {
+            for k in 0..n_lit {
+                if rng.bern(density) {
+                    bank.set_state(j, k, 1);
+                }
+            }
+        }
+        let params = TMParams::new(2, clauses, n_lit / 2);
+        let mut ev = IndexedEval::new(&params);
+        ev.rebuild(&bank);
+        (bank, ev)
+    }
+
+    #[test]
+    fn initial_score_matches_full_eval() {
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            let (bank, mut ev) = random_machine(&mut rng, 12, 30, 0.15);
+            let lits =
+                BitVec::from_bools(&(0..30).map(|_| rng.bern(0.5)).collect::<Vec<_>>());
+            let inc = IncrementalEval::new(ev.index(), &bank, &lits);
+            assert_eq!(inc.score(), ev.score(&bank, &lits));
+        }
+    }
+
+    #[test]
+    fn flips_track_full_eval() {
+        let mut rng = Rng::new(4);
+        let (bank, mut ev) = random_machine(&mut rng, 16, 40, 0.12);
+        let lits = BitVec::from_bools(&(0..40).map(|_| rng.bern(0.5)).collect::<Vec<_>>());
+        let mut inc = IncrementalEval::new(ev.index(), &bank, &lits);
+        for step in 0..500 {
+            let k = rng.below(40) as usize;
+            inc.flip(ev.index(), k);
+            assert_eq!(
+                inc.score(),
+                ev.score(&bank, inc.literals()),
+                "step {step} flip {k}"
+            );
+        }
+        inc.check(ev.index(), &bank).unwrap();
+        assert_eq!(inc.flips_applied(), 500);
+    }
+
+    #[test]
+    fn set_feature_keeps_literal_pair_consistent() {
+        let mut rng = Rng::new(5);
+        let (bank, mut ev) = random_machine(&mut rng, 8, 20, 0.2);
+        let o = 10;
+        // start from all-features-false: x=0, ¬x=1
+        let mut bools = vec![false; 20];
+        for f in 0..o {
+            bools[o + f] = true;
+        }
+        let lits = BitVec::from_bools(&bools);
+        let mut inc = IncrementalEval::new(ev.index(), &bank, &lits);
+        inc.set_feature(ev.index(), o, 3, true);
+        assert!(inc.literals().get(3));
+        assert!(!inc.literals().get(13));
+        assert_eq!(inc.score(), ev.score(&bank, inc.literals()));
+        // idempotent
+        let before = inc.flips_applied();
+        inc.set_feature(ev.index(), o, 3, true);
+        assert_eq!(inc.flips_applied(), before);
+        inc.check(ev.index(), &bank).unwrap();
+    }
+
+    #[test]
+    fn incremental_is_cheap_for_small_diffs() {
+        // structural check: a flip touches exactly |L_k| clauses
+        let mut rng = Rng::new(6);
+        let (bank, ev) = random_machine(&mut rng, 10, 24, 0.3);
+        let lits = BitVec::ones(24);
+        let inc = IncrementalEval::new(ev.index(), &bank, &lits);
+        // all literals true -> nothing falsified -> score == vote_alive
+        assert_eq!(inc.score(), ev.index().vote_alive());
+    }
+}

@@ -1,0 +1,215 @@
+//! Inclusion-list storage.
+//!
+//! Perf-pass note (EXPERIMENTS.md §Perf): the first implementation used
+//! `Vec<Vec<u32>>`. The falsification walk visits ~`o` lists per sample,
+//! and most of them are *empty* for sparse machines — yet each visit
+//! loaded a scattered 24-byte Vec header, and every non-empty walk
+//! chased a separate heap allocation. The paper's own layout (Fig. 2
+//! left: fixed-capacity rows of one matrix, `n_k` sizes alongside) is
+//! the cache-friendly answer:
+//!
+//! * [`ListStore::Flat`] — one `2o x n` u32 matrix; row `k` holds
+//!   `L_k` in `entries[k*cap .. k*cap+lens[k]]`. The `lens` array is a
+//!   contiguous u32 vector, so "skip empty list" costs a sequential
+//!   4-byte read instead of a header miss.
+//! * [`ListStore::Nested`] — `Vec<Vec<u32>>` fallback (plus the same
+//!   fast `lens` array) for shapes where the flat matrix would exceed
+//!   the memory budget (paper-full IMDb: 40k literals x 10k clauses).
+//!
+//! Both preserve the paper's O(1) append / swap-delete exactly.
+
+/// Budget above which the flat matrix gives way to nested vectors.
+pub const FLAT_BUDGET_BYTES: usize = 256 << 20;
+
+/// Per-literal inclusion lists with O(1) append and swap-delete.
+#[derive(Clone, Debug)]
+pub enum ListStore {
+    /// Paper-faithful fixed-capacity rows (`cap` = clauses per class).
+    Flat {
+        cap: usize,
+        lens: Vec<u32>,
+        entries: Vec<u32>,
+    },
+    /// Heap-per-list fallback for very large shapes.
+    Nested { lens: Vec<u32>, lists: Vec<Vec<u32>> },
+}
+
+impl ListStore {
+    /// Pick flat when `n_literals * clauses * 4` fits the budget.
+    pub fn auto(clauses: usize, n_literals: usize) -> Self {
+        if n_literals * clauses * 4 <= FLAT_BUDGET_BYTES {
+            ListStore::Flat {
+                cap: clauses,
+                lens: vec![0; n_literals],
+                entries: vec![0; n_literals * clauses],
+            }
+        } else {
+            ListStore::Nested {
+                lens: vec![0; n_literals],
+                lists: vec![Vec::new(); n_literals],
+            }
+        }
+    }
+
+    #[inline]
+    pub fn n_literals(&self) -> usize {
+        match self {
+            ListStore::Flat { lens, .. } | ListStore::Nested { lens, .. } => lens.len(),
+        }
+    }
+
+    /// Contiguous list lengths — the walk's skip-empty fast path.
+    #[inline]
+    pub fn lens(&self) -> &[u32] {
+        match self {
+            ListStore::Flat { lens, .. } | ListStore::Nested { lens, .. } => lens,
+        }
+    }
+
+    /// The clause ids of `L_k`.
+    #[inline]
+    pub fn row(&self, k: usize) -> &[u32] {
+        match self {
+            ListStore::Flat { cap, lens, entries } => {
+                &entries[k * cap..k * cap + lens[k] as usize]
+            }
+            ListStore::Nested { lists, .. } => &lists[k],
+        }
+    }
+
+    /// Address of row `k`'s first entry (software prefetch only).
+    #[inline]
+    pub fn row_ptr(&self, k: usize) -> *const u32 {
+        match self {
+            ListStore::Flat { cap, entries, .. } => unsafe { entries.as_ptr().add(k * cap) },
+            ListStore::Nested { lists, .. } => lists[k].as_ptr(),
+        }
+    }
+
+    /// Append clause `j` to `L_k`; returns its position.
+    #[inline]
+    pub fn push(&mut self, k: usize, j: u32) -> u32 {
+        match self {
+            ListStore::Flat { cap, lens, entries } => {
+                let len = lens[k] as usize;
+                debug_assert!(len < *cap, "list {k} overflow");
+                entries[k * *cap + len] = j;
+                lens[k] += 1;
+                len as u32
+            }
+            ListStore::Nested { lens, lists } => {
+                lists[k].push(j);
+                lens[k] += 1;
+                (lists[k].len() - 1) as u32
+            }
+        }
+    }
+
+    /// Swap-delete position `p` of `L_k`; returns the clause id that was
+    /// moved into `p` (None if `p` was the last slot).
+    #[inline]
+    pub fn swap_remove(&mut self, k: usize, p: u32) -> Option<u32> {
+        match self {
+            ListStore::Flat { cap, lens, entries } => {
+                let len = lens[k] as usize;
+                debug_assert!((p as usize) < len);
+                let row = &mut entries[k * *cap..k * *cap + len];
+                let last = row[len - 1];
+                lens[k] -= 1;
+                if p as usize != len - 1 {
+                    row[p as usize] = last;
+                    Some(last)
+                } else {
+                    None
+                }
+            }
+            ListStore::Nested { lens, lists } => {
+                let list = &mut lists[k];
+                let last = *list.last().expect("swap_remove on empty list");
+                let was_last = p as usize == list.len() - 1;
+                list.swap_remove(p as usize);
+                lens[k] -= 1;
+                if was_last {
+                    None
+                } else {
+                    Some(last)
+                }
+            }
+        }
+    }
+
+    pub fn is_flat(&self) -> bool {
+        matches!(self, ListStore::Flat { .. })
+    }
+
+    pub fn footprint_bytes(&self) -> usize {
+        match self {
+            ListStore::Flat { entries, lens, .. } => (entries.len() + lens.len()) * 4,
+            ListStore::Nested { lists, lens } => {
+                lens.len() * 4 + lists.iter().map(|l| l.capacity() * 4 + 24).sum::<usize>()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn exercise(mut s: ListStore) {
+        assert_eq!(s.row(3), &[] as &[u32]);
+        assert_eq!(s.push(3, 10), 0);
+        assert_eq!(s.push(3, 11), 1);
+        assert_eq!(s.push(3, 12), 2);
+        assert_eq!(s.row(3), &[10, 11, 12]);
+        assert_eq!(s.lens()[3], 3);
+        // delete middle: last moves in
+        assert_eq!(s.swap_remove(3, 0), Some(12));
+        assert_eq!(s.row(3), &[12, 11]);
+        // delete last: nothing moves
+        assert_eq!(s.swap_remove(3, 1), None);
+        assert_eq!(s.row(3), &[12]);
+        assert_eq!(s.lens()[3], 1);
+        // other rows untouched
+        assert_eq!(s.lens()[2], 0);
+    }
+
+    #[test]
+    fn flat_semantics() {
+        let s = ListStore::auto(8, 16);
+        assert!(s.is_flat());
+        exercise(s);
+    }
+
+    #[test]
+    fn nested_semantics() {
+        let s = ListStore::auto(100_000, 100_000);
+        assert!(!s.is_flat());
+        exercise(s);
+    }
+
+    #[test]
+    fn flat_and_nested_agree_under_fuzz() {
+        let mut rng = Rng::new(55);
+        let mut flat = ListStore::auto(32, 20);
+        let mut nested = ListStore::Nested {
+            lens: vec![0; 20],
+            lists: vec![Vec::new(); 20],
+        };
+        assert!(flat.is_flat() && !nested.is_flat());
+        for _ in 0..20_000 {
+            let k = rng.below(20) as usize;
+            if rng.bern(0.55) {
+                if flat.lens()[k] < 32 {
+                    let j = rng.below(32);
+                    assert_eq!(flat.push(k, j), nested.push(k, j));
+                }
+            } else if flat.lens()[k] > 0 {
+                let p = rng.below(flat.lens()[k]);
+                assert_eq!(flat.swap_remove(k, p), nested.swap_remove(k, p));
+            }
+            assert_eq!(flat.row(k), nested.row(k));
+        }
+    }
+}

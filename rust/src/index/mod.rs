@@ -1,0 +1,20 @@
+//! Clause indexing — the paper's contribution (§3).
+//!
+//! * [`position`] — the position matrix `M` with a dense and a sparse
+//!   (hash) representation behind one interface.
+//! * [`class_index`] — per-class inclusion lists `L_k` + `M`, O(1)
+//!   insert/delete, and the falsification-driven evaluator.
+//! * [`stats`] — occupancy statistics backing the §3 "Remarks"
+//!   work-ratio analysis.
+
+pub mod class_index;
+pub mod incremental;
+pub mod liststore;
+pub mod position;
+pub mod stats;
+
+pub use class_index::{ClassIndex, IndexedEval};
+pub use incremental::IncrementalEval;
+pub use liststore::ListStore;
+pub use position::PositionStore;
+pub use stats::IndexStats;

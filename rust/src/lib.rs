@@ -1,0 +1,45 @@
+//! # tsetlin-index
+//!
+//! A production-grade reproduction of *"Increasing the Inference and
+//! Learning Speed of Tsetlin Machines with Clause Indexing"* (Gorji,
+//! Granmo, Glimsdal, Edwards, Goodwin — 2020).
+//!
+//! The crate implements the full Tsetlin Machine substrate (TA teams,
+//! clause banks, Type I/II feedback, multi-class training) together with
+//! the paper's contribution: **clause indexing** — per-literal inclusion
+//! lists plus a position matrix supporting O(1) insert/delete — which
+//! evaluates clauses by *falsification* instead of exhaustive scanning.
+//!
+//! Architecture (see `DESIGN.md`):
+//!
+//! * [`tm`] — the machine itself: parameters, clause banks, feedback,
+//!   multi-class classifier and trainer.
+//! * [`index`] — the paper's indexing structure and the falsification
+//!   evaluator.
+//! * [`eval`] — baseline evaluators (the paper's exhaustive scan, plus a
+//!   bit-parallel ablation) behind a common trait.
+//! * [`data`] — datasets: IDX/MNIST loading, k-threshold binarization,
+//!   calibrated synthetic generators (MNIST-like, Fashion-like, IMDb-like
+//!   bag-of-words).
+//! * [`runtime`] — PJRT executor loading AOT-compiled XLA artifacts
+//!   produced by `python/compile/aot.py` (Layer 1/2 of the stack).
+//! * [`coordinator`] — tokio serving layer: router, dynamic batcher,
+//!   CPU-indexed and XLA backends, metrics.
+//! * [`bench_harness`] — regenerates every table and figure of the
+//!   paper's evaluation section.
+//! * [`util`] — deterministic RNG, bit vectors, a compact hash map, and
+//!   timing helpers (no external deps on the hot path).
+
+pub mod bench_harness;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod index;
+pub mod runtime;
+pub mod tm;
+pub mod util;
+
+pub use eval::Backend;
+pub use tm::classifier::MultiClassTM;
+pub use tm::params::TMParams;
+pub use tm::trainer::Trainer;

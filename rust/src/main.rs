@@ -1,0 +1,382 @@
+//! `tmi` — clause-indexed Tsetlin Machine CLI (Layer-3 entry point).
+//!
+//! ```text
+//! tmi train       train a model on a (real or synthetic) dataset
+//! tmi eval        evaluate a saved model
+//! tmi table       regenerate paper Table 1/2/3 (+ the figure CSVs)
+//! tmi work-ratio  §3 Remarks: measured work-ratio statistics
+//! tmi serve       serving coordinator (CPU and/or XLA backends) over TCP
+//! tmi info        PJRT platform + artifact manifest
+//! ```
+//!
+//! Argument parsing is hand-rolled (`--key value` / `--flag`): the
+//! offline build has no clap (DESIGN.md §Substitutions).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use tsetlin_index::bench_harness::figures::write_figures;
+use tsetlin_index::bench_harness::tables::{run_table, Scale, TableId};
+use tsetlin_index::coordinator::server::serve_tcp;
+use tsetlin_index::coordinator::{BatchPolicy, Coordinator, CpuBackend, XlaBackend};
+use tsetlin_index::data::mnist::Split;
+use tsetlin_index::data::synth::ImageStyle;
+use tsetlin_index::data::{imdb, mnist, Dataset};
+use tsetlin_index::eval::Backend;
+use tsetlin_index::runtime::{Manifest, Runtime};
+use tsetlin_index::tm::io::{self, DenseModel};
+use tsetlin_index::tm::params::TMParams;
+use tsetlin_index::tm::trainer::Trainer;
+use tsetlin_index::util::Rng;
+
+/// `--key value` / `--flag` argument bag.
+struct Args {
+    values: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut values = HashMap::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    values.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                bail!("unexpected positional argument '{a}'");
+            }
+        }
+        Ok(Args { values, flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(String::as_str)
+    }
+
+    fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad value for --{key}: '{v}'")),
+        }
+    }
+
+    fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+fn load_dataset(args: &Args, split: Split) -> Result<Dataset> {
+    let name = args.get_or("dataset", "mnist");
+    let data_dir = args.get("data-dir").map(PathBuf::from);
+    let samples = args.parse_or(
+        "samples",
+        if split == Split::Train { 1000 } else { 500 },
+    )?;
+    let seed: u64 = args.parse_or("seed", 42)?;
+    match name.as_str() {
+        "mnist" | "fashion" => {
+            let levels = args.parse_or("levels", 1)?;
+            let style = if name == "mnist" {
+                ImageStyle::Digits
+            } else {
+                ImageStyle::Fashion
+            };
+            Ok(mnist::load_or_synthesize(
+                data_dir.as_deref(),
+                style,
+                split,
+                levels,
+                samples,
+                seed,
+            ))
+        }
+        "imdb" => {
+            let features = args.parse_or("features", 5000)?;
+            let tag = if split == Split::Train { 0 } else { 1 };
+            Ok(imdb::load_or_synthesize(
+                args.get("bow-file").map(Path::new),
+                features,
+                samples,
+                tag,
+                seed,
+            ))
+        }
+        other => bail!("unknown dataset '{other}' (mnist|fashion|imdb)"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let train = load_dataset(args, Split::Train)?;
+    let test = load_dataset(args, Split::Test)?;
+    let clauses: usize = args.parse_or("clauses", 1000)?;
+    let epochs: usize = args.parse_or("epochs", 5)?;
+    let backend: Backend = args
+        .get_or("backend", "indexed")
+        .parse()
+        .map_err(anyhow::Error::msg)?;
+    let params = TMParams::from_total_clauses(train.classes, clauses, train.features)
+        .with_threshold(args.parse_or("threshold", 25)?)
+        .with_s(args.parse_or("s", 6.0)?)
+        .with_seed(args.parse_or("seed", 42)?)
+        .with_weighted(args.has_flag("weighted"));
+    eprintln!(
+        "training {} epochs on {} ({} samples, {} features, {} classes, {} clauses/class, backend={})",
+        epochs,
+        train.name,
+        train.len(),
+        train.features,
+        train.classes,
+        params.clauses_per_class,
+        backend.name()
+    );
+    let mut trainer = Trainer::new(params, backend);
+    let mut order_rng = Rng::new(args.parse_or("seed", 42u64)? ^ 0x0def_ace0);
+    for epoch in 0..epochs {
+        let order = train.epoch_order(&mut order_rng);
+        let t0 = std::time::Instant::now();
+        trainer.train_epoch(train.iter_order(&order));
+        let train_s = t0.elapsed().as_secs_f64();
+        let t0 = std::time::Instant::now();
+        let acc = trainer.accuracy(test.iter());
+        let test_s = t0.elapsed().as_secs_f64();
+        println!(
+            "epoch {:>3}  train {:.2}s  test {:.2}s  accuracy {:.4}  mean-clause-len {:.1}",
+            epoch + 1,
+            train_s,
+            test_s,
+            acc,
+            trainer.tm.mean_clause_length()
+        );
+    }
+    if let Some(out) = args.get("out") {
+        io::save(&trainer.tm, out)?;
+        eprintln!("saved model to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model_path = args.get("model").context("--model required")?;
+    let tm = io::load(model_path)?;
+    let test = load_dataset(args, Split::Test)?;
+    let backend: Backend = args
+        .get_or("backend", "indexed")
+        .parse()
+        .map_err(anyhow::Error::msg)?;
+    let mut trainer = Trainer::from_machine(tm, backend);
+    let t0 = std::time::Instant::now();
+    let acc = trainer.accuracy(test.iter());
+    println!(
+        "accuracy {:.4} on {} ({} samples) in {:.3}s [{}]",
+        acc,
+        test.name,
+        test.len(),
+        t0.elapsed().as_secs_f64(),
+        backend.name()
+    );
+    Ok(())
+}
+
+fn cmd_table(args: &Args) -> Result<()> {
+    let id = match args.get_or("id", "1").as_str() {
+        "1" => TableId::Mnist,
+        "2" => TableId::Imdb,
+        "3" => TableId::Fashion,
+        other => bail!("bad --id '{other}' (1|2|3)"),
+    };
+    let scale = match args.get_or("scale", "env").as_str() {
+        "quick" => Scale::quick(),
+        "standard" => Scale::standard(),
+        "paper" => Scale::paper(),
+        _ => Scale::from_env(),
+    };
+    let data_dir = args.get("data-dir").map(PathBuf::from);
+    let table = run_table(id, &scale, data_dir.as_deref(), |cell| {
+        eprintln!("  running {cell}");
+    });
+    println!("{}", table.render_markdown());
+    if let Some(out_dir) = args.get("out-dir") {
+        let out_dir = Path::new(out_dir);
+        let (headers, rows) = table.csv_rows();
+        let csv = out_dir.join(format!("table{}.csv", args.get_or("id", "1")));
+        tsetlin_index::bench_harness::report::write_csv(&csv, &headers, &rows)?;
+        let figs = write_figures(&table, out_dir)?;
+        eprintln!("wrote {} and figures: {}", csv.display(), figs.join(", "));
+    }
+    Ok(())
+}
+
+fn cmd_work_ratio(args: &Args) -> Result<()> {
+    let train = load_dataset(args, Split::Train)?;
+    let clauses: usize = args.parse_or("clauses", 1000)?;
+    let epochs: usize = args.parse_or("epochs", 3)?;
+    let params = TMParams::from_total_clauses(train.classes, clauses, train.features)
+        .with_threshold(args.parse_or("threshold", 25)?)
+        .with_s(args.parse_or("s", 6.0)?);
+    let mut trainer = Trainer::new(params, Backend::Indexed);
+    let mut order_rng = Rng::new(0x0def_ace0);
+    for _ in 0..epochs {
+        let order = train.epoch_order(&mut order_rng);
+        trainer.train_epoch(train.iter_order(&order));
+    }
+    let stats = trainer.index_stats().unwrap();
+    println!(
+        "{:>6} {:>10} {:>12} {:>14} {:>12} {:>12}",
+        "class", "clauses", "mean-len", "mean-list-len", "work-ratio", "max-list"
+    );
+    for (i, st) in stats.iter().enumerate() {
+        println!(
+            "{:>6} {:>10} {:>12.1} {:>14.1} {:>12.4} {:>12}",
+            i,
+            st.clauses,
+            st.mean_clause_length,
+            st.mean_list_length,
+            st.work_ratio,
+            st.max_list_length
+        );
+    }
+    let mean_ratio = stats.iter().map(|s| s.work_ratio).sum::<f64>() / stats.len() as f64;
+    println!(
+        "\noverall: mean clause length {:.1}, mean work ratio {:.4} (paper §3: ~0.02 MNIST, ~0.006 IMDb)",
+        trainer.tm.mean_clause_length(),
+        mean_ratio
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model_path = args.get("model").context("--model required")?.to_string();
+    let tm = io::load(&model_path)?;
+    let backend: Backend = args
+        .get_or("backend", "indexed")
+        .parse()
+        .map_err(anyhow::Error::msg)?;
+    let mut coord = Coordinator::new();
+    coord.register(
+        "cpu",
+        Box::new(CpuBackend::new_parallel(
+            tm.clone(),
+            backend,
+            args.parse_or("parallel", 1)?,
+        )),
+        BatchPolicy::default(),
+    );
+    if let Some(artifacts) = args.get("artifacts") {
+        let artifacts = artifacts.to_string();
+        let dense = DenseModel::from_tm(&tm);
+        let batch: usize = args.parse_or("xla-batch", 32)?;
+        let registered = coord.register_with(
+            "xla",
+            move || {
+                let manifest = Manifest::load(&artifacts)?;
+                let meta = manifest
+                    .pick(batch, dense.features, dense.clauses_total, dense.classes)
+                    .with_context(|| {
+                        format!(
+                            "no artifact variant for (features={}, clauses={}, classes={})",
+                            dense.features, dense.clauses_total, dense.classes
+                        )
+                    })?
+                    .clone();
+                let rt = Runtime::cpu()?;
+                let exe = rt.load_artifact(&manifest.hlo_path(&meta), meta)?;
+                Ok(Box::new(XlaBackend::new(rt, exe, &dense)?) as _)
+            },
+            BatchPolicy {
+                max_batch: batch,
+                max_wait: std::time::Duration::from_millis(2),
+            },
+        );
+        match registered {
+            Ok(()) => eprintln!("registered XLA route 'xla'"),
+            Err(e) => eprintln!("XLA route unavailable: {e:#}"),
+        }
+    }
+    let listen = args.get_or("listen", "127.0.0.1:7070");
+    let listener =
+        std::net::TcpListener::bind(&listen).with_context(|| format!("binding {listen}"))?;
+    eprintln!(
+        "serving models {:?} on {listen} (protocol: '<model> <feature-bits>\\n')",
+        coord.models()
+    );
+    let handle = coord.handle();
+    let stop = Arc::new(AtomicBool::new(false));
+    serve_tcp(listener, handle, stop)?;
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    match Runtime::cpu() {
+        Ok(rt) => println!("pjrt platform: {}", rt.platform()),
+        Err(e) => println!("pjrt unavailable: {e:#}"),
+    }
+    let dir = args.get_or("artifacts", "artifacts");
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts in {dir}:");
+            for v in &m.variants {
+                println!(
+                    "  {:<36} batch={:<3} features={:<5} clauses={:<6} classes={:<2} fused={}",
+                    v.name, v.batch, v.features, v.clauses, v.classes, v.fused
+                );
+            }
+        }
+        Err(e) => println!("no artifact manifest in {dir}: {e:#}"),
+    }
+    Ok(())
+}
+
+const USAGE: &str = "usage: tmi <train|eval|table|work-ratio|serve|info> [--key value ...]
+  train      --dataset mnist|fashion|imdb [--levels N|--features N] --clauses N
+             --epochs N [--backend naive|bitpacked|indexed] [--out model.tm]
+             [--samples N] [--data-dir DIR] [--threshold T] [--s S] [--seed N]
+             [--weighted]   (integer clause weights, paper ref [8])
+  eval       --model model.tm --dataset ... [--backend B]
+  table      --id 1|2|3 [--scale quick|standard|paper] [--out-dir results/]
+  work-ratio --dataset ... --clauses N [--epochs N]
+  serve      --model model.tm [--artifacts artifacts/] [--listen host:port]
+             [--parallel N]  (CPU batch parallelism: N machine replicas)
+  info       [--artifacts artifacts/]";
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        eprintln!("{USAGE}");
+        std::process::exit(2);
+    };
+    let args = Args::parse(&argv[1..])?;
+    if args.has_flag("help") {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "table" => cmd_table(&args),
+        "work-ratio" => cmd_work_ratio(&args),
+        "serve" => cmd_serve(&args),
+        "info" => cmd_info(&args),
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}

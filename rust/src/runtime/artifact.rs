@@ -1,0 +1,169 @@
+//! Artifact manifest: what `python/compile/aot.py` produced.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+/// One AOT-lowered model variant.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VariantMeta {
+    pub name: String,
+    pub file: String,
+    pub batch: usize,
+    pub features: usize,
+    pub clauses: usize,
+    pub classes: usize,
+    pub fused: bool,
+}
+
+impl VariantMeta {
+    pub fn n_literals(&self) -> usize {
+        2 * self.features
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let str_field = |name: &str| -> Result<String> {
+            Ok(v.get(name)
+                .and_then(Json::as_str)
+                .with_context(|| format!("variant missing string '{name}'"))?
+                .to_string())
+        };
+        let num_field = |name: &str| -> Result<usize> {
+            v.get(name)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("variant missing uint '{name}'"))
+        };
+        Ok(VariantMeta {
+            name: str_field("name")?,
+            file: str_field("file")?,
+            batch: num_field("batch")?,
+            features: num_field("features")?,
+            clauses: num_field("clauses")?,
+            classes: num_field("classes")?,
+            fused: v.get("fused").and_then(Json::as_bool).unwrap_or(true),
+        })
+    }
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: Vec<VariantMeta>,
+}
+
+impl Manifest {
+    pub fn parse(dir: &Path, text: &str) -> Result<Self> {
+        let v = Json::parse(text).context("parsing manifest.json")?;
+        match v.get("format").and_then(Json::as_str) {
+            Some("hlo-text") => {}
+            other => bail!("unsupported artifact format {other:?}"),
+        }
+        let variants = v
+            .get("variants")
+            .and_then(Json::as_arr)
+            .context("manifest missing 'variants'")?
+            .iter()
+            .map(VariantMeta::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            variants,
+        })
+    }
+
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&VariantMeta> {
+        self.variants.iter().find(|v| v.name == name)
+    }
+
+    /// Pick the smallest-batch fused variant that fits a model shape and
+    /// can hold `batch` rows.
+    pub fn pick(
+        &self,
+        batch: usize,
+        features: usize,
+        clauses: usize,
+        classes: usize,
+    ) -> Option<&VariantMeta> {
+        self.variants
+            .iter()
+            .filter(|v| {
+                v.fused
+                    && v.features == features
+                    && v.clauses == clauses
+                    && v.classes == classes
+                    && v.batch >= batch
+            })
+            .min_by_key(|v| v.batch)
+    }
+
+    pub fn hlo_path(&self, v: &VariantMeta) -> PathBuf {
+        self.dir.join(&v.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text",
+      "variants": [
+        {"name": "a", "file": "a.hlo.txt", "batch": 32, "features": 784,
+         "clauses": 1280, "classes": 10, "fused": true, "sha256": "x"},
+        {"name": "b", "file": "b.hlo.txt", "batch": 1, "features": 784,
+         "clauses": 1280, "classes": 10, "fused": true, "sha256": "y"},
+        {"name": "c", "file": "c.hlo.txt", "batch": 32, "features": 784,
+         "clauses": 1280, "classes": 10, "fused": false, "sha256": "z"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert_eq!(m.variants.len(), 3);
+        assert_eq!(m.by_name("a").unwrap().batch, 32);
+        assert_eq!(m.by_name("a").unwrap().n_literals(), 1568);
+        assert!(m.by_name("missing").is_none());
+    }
+
+    #[test]
+    fn pick_prefers_smallest_sufficient_batch() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert_eq!(m.pick(1, 784, 1280, 10).unwrap().name, "b");
+        assert_eq!(m.pick(2, 784, 1280, 10).unwrap().name, "a");
+        assert_eq!(m.pick(32, 784, 1280, 10).unwrap().name, "a");
+        assert!(m.pick(64, 784, 1280, 10).is_none());
+        assert!(m.pick(1, 100, 1280, 10).is_none());
+    }
+
+    #[test]
+    fn pick_skips_unfused() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert_ne!(m.pick(32, 784, 1280, 10).unwrap().name, "c");
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        assert!(Manifest::parse(Path::new("/tmp"), r#"{"format":"proto"}"#).is_err());
+        assert!(Manifest::parse(Path::new("/tmp"), "{}").is_err());
+        assert!(Manifest::parse(Path::new("/tmp"), "not json").is_err());
+    }
+
+    #[test]
+    fn hlo_path_joins_dir() {
+        let m = Manifest::parse(Path::new("/art"), SAMPLE).unwrap();
+        let v = m.by_name("a").unwrap();
+        assert_eq!(m.hlo_path(v), PathBuf::from("/art/a.hlo.txt"));
+    }
+}

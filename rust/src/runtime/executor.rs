@@ -1,0 +1,196 @@
+//! Compile + execute HLO artifacts on the PJRT CPU client.
+//!
+//! Follows the load_hlo reference pattern: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → `execute`. The
+//! lowered model takes `(literals, include, count, polarity)` and returns
+//! the 2-tuple `(scores, predictions)` (see `python/compile/model.py`).
+//!
+//! For serving, the three model arrays are uploaded to device once
+//! ([`PreparedModel`]) and only the literal batch moves per request
+//! (`execute_b` over PJRT buffers).
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::runtime::artifact::VariantMeta;
+use crate::tm::io::DenseModel;
+
+/// Shared PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// CPU PJRT client (the only backend in this environment; real-TPU
+    /// use would swap in `PjRtClient::tpu`).
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact.
+    pub fn load_artifact(&self, hlo_path: &Path, meta: VariantMeta) -> Result<TmExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(hlo_path)
+            .with_context(|| format!("parsing HLO text {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", meta.name))?;
+        Ok(TmExecutable { exe, meta })
+    }
+
+    /// Upload a dense model to device-resident buffers for `exe`.
+    pub fn prepare_model(
+        &self,
+        exe: &TmExecutable,
+        model: &DenseModel,
+    ) -> Result<PreparedModel> {
+        let m = &exe.meta;
+        ensure!(
+            model.n_literals == m.n_literals()
+                && model.clauses_total == m.clauses
+                && model.classes == m.classes,
+            "model shape ({}, {}, {}) does not match artifact {} ({}, {}, {})",
+            model.n_literals,
+            model.clauses_total,
+            model.classes,
+            m.name,
+            m.n_literals(),
+            m.clauses,
+            m.classes,
+        );
+        let include = self.client.buffer_from_host_buffer(
+            &model.include,
+            &[model.n_literals, model.clauses_total],
+            None,
+        )?;
+        let count =
+            self.client
+                .buffer_from_host_buffer(&model.count, &[model.clauses_total], None)?;
+        let polarity = self.client.buffer_from_host_buffer(
+            &model.polarity,
+            &[model.clauses_total, model.classes],
+            None,
+        )?;
+        Ok(PreparedModel {
+            include,
+            count,
+            polarity,
+        })
+    }
+}
+
+/// One compiled model variant.
+pub struct TmExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: VariantMeta,
+}
+
+/// Device-resident model arrays (uploaded once per model refresh).
+pub struct PreparedModel {
+    include: xla::PjRtBuffer,
+    count: xla::PjRtBuffer,
+    polarity: xla::PjRtBuffer,
+}
+
+/// Result of one batched forward pass.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Forward {
+    /// Row-major `(batch, classes)` vote scores.
+    pub scores: Vec<f32>,
+    /// Argmax predictions, length `batch`.
+    pub predictions: Vec<i32>,
+    pub batch: usize,
+    pub classes: usize,
+}
+
+impl TmExecutable {
+    /// Run a literal batch against a prepared (device-resident) model.
+    ///
+    /// `literals` is row-major `(rows, 2o)` with `rows <= meta.batch`;
+    /// short batches are padded with all-true rows and truncated on
+    /// return (an all-true row satisfies every clause — harmless).
+    pub fn run(
+        &self,
+        rt: &Runtime,
+        prepared: &PreparedModel,
+        literals: &[f32],
+        rows: usize,
+    ) -> Result<Forward> {
+        let m = &self.meta;
+        let n_lit = m.n_literals();
+        ensure!(rows > 0, "empty batch");
+        ensure!(rows <= m.batch, "batch {rows} exceeds artifact batch {}", m.batch);
+        ensure!(
+            literals.len() == rows * n_lit,
+            "literal buffer {} != rows {rows} x {n_lit}",
+            literals.len()
+        );
+        let mut padded;
+        let data = if rows == m.batch {
+            literals
+        } else {
+            padded = vec![1.0f32; m.batch * n_lit];
+            padded[..literals.len()].copy_from_slice(literals);
+            &padded[..]
+        };
+        let lit_buf = rt
+            .client
+            .buffer_from_host_buffer(data, &[m.batch, n_lit], None)?;
+        let result = self.exe.execute_b(&[
+            &lit_buf,
+            &prepared.include,
+            &prepared.count,
+            &prepared.polarity,
+        ])?;
+        let out = result[0][0].to_literal_sync()?;
+        let (scores_lit, preds_lit) = out.to_tuple2()?;
+        let mut scores = scores_lit.to_vec::<f32>()?;
+        let mut predictions = preds_lit.to_vec::<i32>()?;
+        scores.truncate(rows * m.classes);
+        predictions.truncate(rows);
+        Ok(Forward {
+            scores,
+            predictions,
+            batch: rows,
+            classes: m.classes,
+        })
+    }
+
+    /// Convenience: upload model arrays per call (tests, one-shot runs).
+    pub fn run_unprepared(
+        &self,
+        rt: &Runtime,
+        model: &DenseModel,
+        literals: &[f32],
+        rows: usize,
+    ) -> Result<Forward> {
+        let prepared = rt.prepare_model(self, model)?;
+        self.run(rt, &prepared, literals, rows)
+    }
+}
+
+// Runtime round-trip tests live in rust/tests/runtime_roundtrip.rs (they
+// need artifacts/ built by `make artifacts`); unit tests here cover the
+// padding/validation logic that doesn't touch PJRT.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_shape_contract() {
+        let f = Forward {
+            scores: vec![0.0; 6],
+            predictions: vec![0; 2],
+            batch: 2,
+            classes: 3,
+        };
+        assert_eq!(f.scores.len(), f.batch * f.classes);
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: load and execute AOT-compiled XLA artifacts.
+//!
+//! `python/compile/aot.py` lowers the Layer-2 JAX model (which embeds
+//! the Layer-1 Pallas kernel) to HLO *text*; this module loads those
+//! artifacts through the `xla` crate (PJRT C API, CPU plugin) and runs
+//! them from Rust — Python is never on the request path.
+//!
+//! * [`artifact`] — `manifest.json` parsing + variant selection.
+//! * [`executor`] — compile + execute with device-resident model
+//!   buffers (`include` / `count` / `polarity` uploaded once, literal
+//!   batches streamed per request).
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::{Manifest, VariantMeta};
+pub use executor::{PreparedModel, Runtime, TmExecutable};

@@ -1,0 +1,343 @@
+//! Per-class clause bank: the TA state machine of §2.
+//!
+//! Each clause `j` owns one Tsetlin Automaton per literal `k`; the TA's
+//! integer state decides the literal's inclusion. States are stored as
+//! `i8` (256-state automata, the standard choice): `state >= 0` means
+//! *include*. Increment/decrement saturate; crossing the `-1 / 0`
+//! boundary is an include/exclude **flip** — the event the paper's index
+//! maintains its inclusion lists on.
+//!
+//! Polarity is interleaved: even clause ids vote `+1`, odd vote `-1`
+//! (equivalent to the paper's half/half split, but keeps the polarity
+//! computation a single AND on the hot path).
+
+/// Result of a TA state bump: did the literal's inclusion change?
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Flip {
+    /// No inclusion change.
+    None,
+    /// The literal just became included (exclude -> include).
+    Included,
+    /// The literal just became excluded (include -> exclude).
+    Excluded,
+}
+
+/// TA states and include-counts for one class's `n` clauses over `2o`
+/// literals.
+#[derive(Clone, Debug)]
+pub struct ClauseBank {
+    clauses: usize,
+    n_literals: usize,
+    /// Clause-major TA states: `states[j * 2o + k]`; include iff `>= 0`.
+    states: Vec<i8>,
+    /// Included-literal count per clause (the paper's clause "size").
+    include_count: Vec<u32>,
+    /// Integer clause weights (Weighted TM, Phoulady et al. 2020 — the
+    /// compression extension the paper cites as [8]). Plain TMs keep
+    /// every weight at 1, making weighted voting a strict generalization.
+    weights: Vec<u32>,
+}
+
+impl ClauseBank {
+    /// Fresh bank: every TA starts at `-1`, i.e. *exclude*, one step from
+    /// the decision boundary — the standard initialization, and exactly
+    /// the state the paper's index construction assumes (all inclusion
+    /// lists empty).
+    pub fn new(clauses: usize, n_literals: usize) -> Self {
+        ClauseBank {
+            clauses,
+            n_literals,
+            states: vec![-1; clauses * n_literals],
+            include_count: vec![0; clauses],
+            weights: vec![1; clauses],
+        }
+    }
+
+    /// Clause weight (1 for plain TMs).
+    #[inline]
+    pub fn weight(&self, j: usize) -> u32 {
+        self.weights[j]
+    }
+
+    /// Signed weighted vote of clause `j`: `polarity * weight`.
+    #[inline]
+    pub fn vote(&self, j: usize) -> i32 {
+        Self::polarity(j) * self.weights[j] as i32
+    }
+
+    /// Increment clause weight (Type Ia in the weighted TM), returning
+    /// the new weight.
+    #[inline]
+    pub fn weight_up(&mut self, j: usize) -> u32 {
+        let w = &mut self.weights[j];
+        *w = w.saturating_add(1);
+        *w
+    }
+
+    /// Decrement clause weight toward the floor of 1 (Type II),
+    /// returning the new weight.
+    #[inline]
+    pub fn weight_down(&mut self, j: usize) -> u32 {
+        let w = &mut self.weights[j];
+        if *w > 1 {
+            *w -= 1;
+        }
+        *w
+    }
+
+    /// Force a weight (model loading / tests).
+    pub fn set_weight(&mut self, j: usize, w: u32) {
+        assert!(w >= 1, "weights have a floor of 1");
+        self.weights[j] = w;
+    }
+
+    pub fn weights(&self) -> &[u32] {
+        &self.weights
+    }
+
+    #[inline]
+    pub fn clauses(&self) -> usize {
+        self.clauses
+    }
+
+    #[inline]
+    pub fn n_literals(&self) -> usize {
+        self.n_literals
+    }
+
+    /// Vote weight of clause `j`: +1 for even ids, -1 for odd.
+    #[inline]
+    pub fn polarity(j: usize) -> i32 {
+        1 - 2 * ((j & 1) as i32)
+    }
+
+    #[inline]
+    pub fn state(&self, j: usize, k: usize) -> i8 {
+        self.states[j * self.n_literals + k]
+    }
+
+    /// Does clause `j` include literal `k`?
+    #[inline]
+    pub fn include(&self, j: usize, k: usize) -> bool {
+        self.states[j * self.n_literals + k] >= 0
+    }
+
+    /// Number of included literals of clause `j`.
+    #[inline]
+    pub fn count(&self, j: usize) -> u32 {
+        self.include_count[j]
+    }
+
+    /// Raw state row of clause `j` (the naive evaluator scans this).
+    #[inline]
+    pub fn row(&self, j: usize) -> &[i8] {
+        &self.states[j * self.n_literals..(j + 1) * self.n_literals]
+    }
+
+    /// Move the TA of (j, k) one step toward *include*. Saturates.
+    #[inline]
+    pub fn bump_up(&mut self, j: usize, k: usize) -> Flip {
+        let s = &mut self.states[j * self.n_literals + k];
+        if *s == i8::MAX {
+            return Flip::None;
+        }
+        *s += 1;
+        if *s == 0 {
+            self.include_count[j] += 1;
+            Flip::Included
+        } else {
+            Flip::None
+        }
+    }
+
+    /// Move the TA of (j, k) one step toward *exclude*. Saturates.
+    #[inline]
+    pub fn bump_down(&mut self, j: usize, k: usize) -> Flip {
+        let s = &mut self.states[j * self.n_literals + k];
+        if *s == i8::MIN {
+            return Flip::None;
+        }
+        *s -= 1;
+        if *s == -1 {
+            self.include_count[j] -= 1;
+            Flip::Excluded
+        } else {
+            Flip::None
+        }
+    }
+
+    /// Force a TA state (model loading / tests). Recomputes the count.
+    pub fn set_state(&mut self, j: usize, k: usize, v: i8) {
+        let idx = j * self.n_literals + k;
+        let was = self.states[idx] >= 0;
+        self.states[idx] = v;
+        let is = v >= 0;
+        match (was, is) {
+            (false, true) => self.include_count[j] += 1,
+            (true, false) => self.include_count[j] -= 1,
+            _ => {}
+        }
+    }
+
+    /// Iterate the included literal ids of clause `j`.
+    pub fn included_literals(&self, j: usize) -> impl Iterator<Item = usize> + '_ {
+        self.row(j)
+            .iter()
+            .enumerate()
+            .filter(|(_, &s)| s >= 0)
+            .map(|(k, _)| k)
+    }
+
+    /// Weighted vote sum over non-empty clauses — the indexed
+    /// evaluator's inference baseline (recomputed; the index maintains
+    /// it incrementally).
+    pub fn vote_alive(&self) -> i32 {
+        (0..self.clauses)
+            .filter(|&j| self.include_count[j] > 0)
+            .map(|j| self.vote(j))
+            .sum()
+    }
+
+    /// Weighted vote sum over all clauses — the training baseline
+    /// (empty clauses output 1 during learning).
+    pub fn vote_all(&self) -> i32 {
+        (0..self.clauses).map(|j| self.vote(j)).sum()
+    }
+
+    /// Mean included-literal count over non-empty clauses (paper §3
+    /// Remarks reports ~58 for MNIST, ~116 for IMDb).
+    pub fn mean_clause_length(&self) -> f64 {
+        let non_empty: Vec<u32> = self
+            .include_count
+            .iter()
+            .copied()
+            .filter(|&c| c > 0)
+            .collect();
+        if non_empty.is_empty() {
+            return 0.0;
+        }
+        non_empty.iter().map(|&c| c as f64).sum::<f64>() / non_empty.len() as f64
+    }
+
+    /// Access raw states (serialization).
+    pub fn states(&self) -> &[i8] {
+        &self.states
+    }
+
+    /// Verify `include_count` against the states (test/debug invariant).
+    #[doc(hidden)]
+    pub fn check_counts(&self) -> bool {
+        (0..self.clauses).all(|j| {
+            self.include_count[j] as usize == self.row(j).iter().filter(|&&s| s >= 0).count()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_bank_is_all_exclude() {
+        let b = ClauseBank::new(4, 10);
+        for j in 0..4 {
+            assert_eq!(b.count(j), 0);
+            for k in 0..10 {
+                assert!(!b.include(j, k));
+                assert_eq!(b.state(j, k), -1);
+            }
+        }
+        assert_eq!(b.vote_alive(), 0);
+        assert_eq!(b.vote_all(), 0); // interleaved polarity sums to 0
+    }
+
+    #[test]
+    fn polarity_interleaves() {
+        assert_eq!(ClauseBank::polarity(0), 1);
+        assert_eq!(ClauseBank::polarity(1), -1);
+        assert_eq!(ClauseBank::polarity(2), 1);
+    }
+
+    #[test]
+    fn bump_up_flips_exactly_at_boundary() {
+        let mut b = ClauseBank::new(2, 4);
+        assert_eq!(b.bump_up(0, 1), Flip::Included);
+        assert_eq!(b.count(0), 1);
+        assert!(b.include(0, 1));
+        // further bumps: no flip
+        assert_eq!(b.bump_up(0, 1), Flip::None);
+        assert_eq!(b.count(0), 1);
+    }
+
+    #[test]
+    fn bump_down_flips_exactly_at_boundary() {
+        let mut b = ClauseBank::new(2, 4);
+        b.bump_up(0, 1); // -> 0, included
+        b.bump_up(0, 1); // -> 1
+        assert_eq!(b.bump_down(0, 1), Flip::None); // 1 -> 0, still included
+        assert_eq!(b.bump_down(0, 1), Flip::Excluded); // 0 -> -1
+        assert_eq!(b.count(0), 0);
+        assert!(!b.include(0, 1));
+    }
+
+    #[test]
+    fn saturation_at_extremes() {
+        let mut b = ClauseBank::new(1, 1);
+        for _ in 0..300 {
+            b.bump_up(0, 0);
+        }
+        assert_eq!(b.state(0, 0), i8::MAX);
+        assert_eq!(b.bump_up(0, 0), Flip::None);
+        for _ in 0..300 {
+            b.bump_down(0, 0);
+        }
+        assert_eq!(b.state(0, 0), i8::MIN);
+        assert_eq!(b.bump_down(0, 0), Flip::None);
+        assert!(b.check_counts());
+    }
+
+    #[test]
+    fn set_state_maintains_counts() {
+        let mut b = ClauseBank::new(2, 4);
+        b.set_state(0, 2, 5);
+        assert_eq!(b.count(0), 1);
+        b.set_state(0, 2, -3);
+        assert_eq!(b.count(0), 0);
+        b.set_state(0, 2, -3); // no-op transition
+        assert_eq!(b.count(0), 0);
+        assert!(b.check_counts());
+    }
+
+    #[test]
+    fn included_literals_iterates_correctly() {
+        let mut b = ClauseBank::new(1, 6);
+        b.set_state(0, 1, 0);
+        b.set_state(0, 4, 3);
+        let got: Vec<usize> = b.included_literals(0).collect();
+        assert_eq!(got, vec![1, 4]);
+    }
+
+    #[test]
+    fn vote_alive_counts_only_nonempty() {
+        let mut b = ClauseBank::new(4, 4);
+        b.bump_up(0, 0); // clause 0 (+1) non-empty
+        b.bump_up(3, 2); // clause 3 (-1) non-empty
+        b.bump_up(3, 3);
+        assert_eq!(b.vote_alive(), 0); // +1 - 1
+        b.bump_up(2, 0); // clause 2 (+1)
+        assert_eq!(b.vote_alive(), 1);
+    }
+
+    #[test]
+    fn mean_clause_length_ignores_empty() {
+        let mut b = ClauseBank::new(3, 8);
+        for k in 0..4 {
+            b.bump_up(0, k);
+        }
+        for k in 0..2 {
+            b.bump_up(1, k);
+        }
+        // clause 2 empty
+        assert!((b.mean_clause_length() - 3.0).abs() < 1e-12);
+    }
+}

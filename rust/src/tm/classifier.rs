@@ -1,0 +1,90 @@
+//! Multi-class Tsetlin Machine: one clause bank per class, argmax vote
+//! (eq. 3; with indexing, eq. 4).
+
+use crate::tm::bank::ClauseBank;
+use crate::tm::params::TMParams;
+
+/// The machine state proper: parameters + per-class TA banks. Evaluation
+/// strategy is deliberately *not* part of this struct — the paper's whole
+/// point is that the same machine can be driven by different evaluators
+/// (see [`crate::eval::Backend`]); [`crate::tm::trainer::Trainer`] binds
+/// the two together.
+#[derive(Clone, Debug)]
+pub struct MultiClassTM {
+    pub params: TMParams,
+    banks: Vec<ClauseBank>,
+}
+
+impl MultiClassTM {
+    pub fn new(params: TMParams) -> Self {
+        params.validate().expect("invalid TM parameters");
+        let banks = (0..params.classes)
+            .map(|_| ClauseBank::new(params.clauses_per_class, params.n_literals()))
+            .collect();
+        MultiClassTM { params, banks }
+    }
+
+    #[inline]
+    pub fn bank(&self, class: usize) -> &ClauseBank {
+        &self.banks[class]
+    }
+
+    #[inline]
+    pub fn bank_mut(&mut self, class: usize) -> &mut ClauseBank {
+        &mut self.banks[class]
+    }
+
+    pub fn banks(&self) -> &[ClauseBank] {
+        &self.banks
+    }
+
+    pub fn classes(&self) -> usize {
+        self.params.classes
+    }
+
+    /// Mean clause length across all classes (paper §3 Remarks metric).
+    pub fn mean_clause_length(&self) -> f64 {
+        let per: Vec<f64> = self
+            .banks
+            .iter()
+            .map(|b| b.mean_clause_length())
+            .filter(|&l| l > 0.0)
+            .collect();
+        if per.is_empty() {
+            0.0
+        } else {
+            per.iter().sum::<f64>() / per.len() as f64
+        }
+    }
+
+    /// Total TA memory in bytes (the paper's footprint model: 1 byte/TA).
+    pub fn ta_memory_bytes(&self) -> usize {
+        self.params.classes * self.params.clauses_per_class * self.params.n_literals()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_shapes() {
+        let tm = MultiClassTM::new(TMParams::new(10, 20, 784));
+        assert_eq!(tm.classes(), 10);
+        assert_eq!(tm.bank(0).clauses(), 20);
+        assert_eq!(tm.bank(9).n_literals(), 1568);
+        assert_eq!(tm.ta_memory_bytes(), 10 * 20 * 1568);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid TM parameters")]
+    fn invalid_params_panic() {
+        MultiClassTM::new(TMParams::new(1, 20, 784));
+    }
+
+    #[test]
+    fn fresh_machine_has_zero_clause_length() {
+        let tm = MultiClassTM::new(TMParams::new(2, 4, 8));
+        assert_eq!(tm.mean_clause_length(), 0.0);
+    }
+}

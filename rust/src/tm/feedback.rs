@@ -1,0 +1,240 @@
+//! Type I / Type II feedback — the TM learning rules (§2 of the paper,
+//! following the reference formulation of Granmo 2018).
+//!
+//! Every TA bump is routed through the bank so include/exclude *flips*
+//! are detected and forwarded to the evaluator's [`FlipSink`] — that is
+//! where the paper's index maintenance happens, and it is the only
+//! difference between training with and without indexing.
+
+use crate::eval::traits::FlipSink;
+use crate::tm::bank::{ClauseBank, Flip};
+use crate::util::rng::{prob_to_threshold, Rng};
+use crate::util::BitVec;
+
+/// Precomputed Bernoulli thresholds for the specificity `s`.
+#[derive(Clone, Copy, Debug)]
+pub struct FeedbackCtx {
+    /// P = 1/s as a u32 threshold (forget/penalize draw).
+    pub p_forget: u32,
+    /// P = (s-1)/s as a u32 threshold (memorize/reward draw).
+    pub p_memorize: u32,
+    /// Reinforce true-positive literals with probability 1.
+    pub boost_true_positive: bool,
+    /// Weighted TM (paper ref [8]): clause weights move with feedback.
+    pub weighted: bool,
+}
+
+impl FeedbackCtx {
+    pub fn new(s: f64, boost_true_positive: bool, weighted: bool) -> Self {
+        FeedbackCtx {
+            p_forget: prob_to_threshold(1.0 / s),
+            p_memorize: prob_to_threshold((s - 1.0) / s),
+            boost_true_positive,
+            weighted,
+        }
+    }
+}
+
+#[inline]
+fn forward_flip(sink: &mut dyn FlipSink, bank: &ClauseBank, j: usize, k: usize, flip: Flip) {
+    match flip {
+        Flip::None => {}
+        Flip::Included => sink.on_include(j as u32, k as u32, bank.count(j), bank.weight(j)),
+        Flip::Excluded => sink.on_exclude(j as u32, k as u32, bank.count(j), bank.weight(j)),
+    }
+}
+
+/// Type I feedback: combats false negatives — reinforces clauses toward
+/// matching the current sample (frequent-pattern capture).
+///
+/// * clause output 1: true literals are memorized (state toward include,
+///   prob 1 with boosting else (s-1)/s); false literals are gently
+///   forgotten (prob 1/s).
+/// * clause output 0: every literal is gently forgotten (prob 1/s).
+pub fn type_i(
+    bank: &mut ClauseBank,
+    sink: &mut dyn FlipSink,
+    rng: &mut Rng,
+    ctx: &FeedbackCtx,
+    j: usize,
+    clause_out: bool,
+    literals: &BitVec,
+) {
+    let n_lit = bank.n_literals();
+    if clause_out {
+        // Weighted TM, Type Ia: a clause that fires while its class is
+        // reinforced earns vote weight (integer additive variant).
+        if ctx.weighted {
+            bank.weight_up(j);
+            sink.on_weight(j as u32, 1, bank.count(j) > 0);
+        }
+        for k in 0..n_lit {
+            if literals.get(k) {
+                if ctx.boost_true_positive || rng.bern_threshold(ctx.p_memorize) {
+                    let f = bank.bump_up(j, k);
+                    forward_flip(sink, bank, j, k, f);
+                }
+            } else if rng.bern_threshold(ctx.p_forget) {
+                let f = bank.bump_down(j, k);
+                forward_flip(sink, bank, j, k, f);
+            }
+        }
+    } else {
+        for k in 0..n_lit {
+            if rng.bern_threshold(ctx.p_forget) {
+                let f = bank.bump_down(j, k);
+                forward_flip(sink, bank, j, k, f);
+            }
+        }
+    }
+}
+
+/// Type II feedback: combats false positives — when a clause fires on a
+/// sample of the wrong class, every currently-*excluded* false literal
+/// is pushed one step toward inclusion, so the clause learns to be
+/// falsified by such samples in the future. Deterministic (no s-draws).
+pub fn type_ii(
+    bank: &mut ClauseBank,
+    sink: &mut dyn FlipSink,
+    ctx: &FeedbackCtx,
+    j: usize,
+    clause_out: bool,
+    literals: &BitVec,
+) {
+    if !clause_out {
+        return;
+    }
+    // Weighted TM: a clause firing on the wrong class sheds vote weight
+    // (floor 1) before learning to be falsified.
+    if ctx.weighted {
+        let before = bank.weight(j);
+        let after = bank.weight_down(j);
+        if after < before {
+            sink.on_weight(j as u32, -1, bank.count(j) > 0);
+        }
+    }
+    let n_lit = bank.n_literals();
+    for k in 0..n_lit {
+        if !literals.get(k) && !bank.include(j, k) {
+            let f = bank.bump_up(j, k);
+            forward_flip(sink, bank, j, k, f);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::traits::NoopSink;
+
+    fn lits(bits: &[bool]) -> BitVec {
+        BitVec::from_bools(bits)
+    }
+
+    fn plain_ctx() -> FeedbackCtx {
+        FeedbackCtx::new(4.0, true, false)
+    }
+
+    #[test]
+    fn type_ii_includes_falsifying_literals_only() {
+        let mut bank = ClauseBank::new(2, 4);
+        let mut sink = NoopSink;
+        let x = lits(&[true, false, true, false]);
+        type_ii(&mut bank, &mut sink, &plain_ctx(), 0, true, &x);
+        // false literals 1 and 3, both excluded -> bumped to include
+        assert!(bank.include(0, 1));
+        assert!(bank.include(0, 3));
+        assert!(!bank.include(0, 0));
+        assert!(!bank.include(0, 2));
+    }
+
+    #[test]
+    fn type_ii_noop_when_clause_output_zero() {
+        let mut bank = ClauseBank::new(2, 4);
+        let mut sink = NoopSink;
+        let x = lits(&[false, false, false, false]);
+        type_ii(&mut bank, &mut sink, &plain_ctx(), 0, false, &x);
+        assert_eq!(bank.count(0), 0);
+    }
+
+    #[test]
+    fn type_ii_skips_already_included() {
+        let mut bank = ClauseBank::new(2, 4);
+        bank.set_state(0, 1, 3); // already included, state 3
+        let mut sink = NoopSink;
+        let x = lits(&[true, false, true, true]);
+        type_ii(&mut bank, &mut sink, &plain_ctx(), 0, true, &x);
+        assert_eq!(bank.state(0, 1), 3); // untouched
+    }
+
+    #[test]
+    fn type_i_with_boost_memorizes_true_literals_deterministically() {
+        let mut bank = ClauseBank::new(2, 4);
+        let mut sink = NoopSink;
+        let ctx = FeedbackCtx::new(1e12, true, false); // p_forget ~ 0
+        let mut rng = Rng::new(1);
+        let x = lits(&[true, true, false, false]);
+        type_i(&mut bank, &mut sink, &mut rng, &ctx, 0, true, &x);
+        assert!(bank.include(0, 0));
+        assert!(bank.include(0, 1));
+        assert!(!bank.include(0, 2));
+        assert!(!bank.include(0, 3));
+    }
+
+    #[test]
+    fn type_i_clause_zero_forgets_at_rate_one_over_s() {
+        // s = 1 -> p_forget = 1: every literal decremented.
+        let mut bank = ClauseBank::new(2, 4);
+        bank.set_state(0, 0, 0); // included at the boundary
+        let mut sink = NoopSink;
+        let ctx = FeedbackCtx::new(1.0, true, false);
+        let mut rng = Rng::new(2);
+        let x = lits(&[true, true, true, true]);
+        type_i(&mut bank, &mut sink, &mut rng, &ctx, 0, false, &x);
+        assert!(!bank.include(0, 0)); // 0 -> -1: flip to exclude
+        assert_eq!(bank.state(0, 1), -2);
+    }
+
+    #[test]
+    fn type_i_statistical_forget_rate() {
+        // With clause_out=0 and s=4, each literal decrements w.p. 1/4.
+        let s = 4.0;
+        let trials = 20_000usize;
+        let mut bank = ClauseBank::new(2, trials);
+        let mut sink = NoopSink;
+        let ctx = FeedbackCtx::new(s, true, false);
+        let mut rng = Rng::new(3);
+        let x = BitVec::ones(trials);
+        type_i(&mut bank, &mut sink, &mut rng, &ctx, 0, false, &x);
+        let dec = (0..trials).filter(|&k| bank.state(0, k) == -2).count();
+        let rate = dec as f64 / trials as f64;
+        assert!((rate - 0.25).abs() < 0.02, "rate={rate}");
+    }
+
+    /// Flip events reaching the sink must mirror bank transitions.
+    struct CountingSink {
+        inc: Vec<(u32, u32)>,
+        exc: Vec<(u32, u32)>,
+    }
+    impl FlipSink for CountingSink {
+        fn on_include(&mut self, j: u32, k: u32, _c: u32, _w: u32) {
+            self.inc.push((j, k));
+        }
+        fn on_exclude(&mut self, j: u32, k: u32, _c: u32, _w: u32) {
+            self.exc.push((j, k));
+        }
+    }
+
+    #[test]
+    fn flips_are_forwarded_to_sink() {
+        let mut bank = ClauseBank::new(2, 3);
+        let mut sink = CountingSink { inc: vec![], exc: vec![] };
+        let x = lits(&[false, false, false]);
+        type_ii(&mut bank, &mut sink, &plain_ctx(), 1, true, &x);
+        assert_eq!(sink.inc, vec![(1, 0), (1, 1), (1, 2)]);
+        assert!(sink.exc.is_empty());
+        // repeated type_ii: states move deeper into include, no new flips
+        type_ii(&mut bank, &mut sink, &plain_ctx(), 1, true, &x);
+        assert_eq!(sink.inc.len(), 3);
+    }
+}

@@ -1,0 +1,115 @@
+//! Clause introspection — the TM's interpretability story (§1: clauses
+//! have "an interpretable form (e.g., if X satisfies condition A and
+//! not condition B then Y = 1)").
+
+use crate::tm::bank::ClauseBank;
+use crate::tm::classifier::MultiClassTM;
+
+/// Render clause `j` as a conjunction over named features.
+/// Literals `k < o` print as the feature, `k >= o` as its negation.
+pub fn clause_string(bank: &ClauseBank, j: usize, names: Option<&[String]>) -> String {
+    let o = bank.n_literals() / 2;
+    let name = |f: usize| -> String {
+        match names {
+            Some(ns) => ns[f].clone(),
+            None => format!("x{f}"),
+        }
+    };
+    let mut parts: Vec<String> = Vec::new();
+    for k in bank.included_literals(j) {
+        if k < o {
+            parts.push(name(k));
+        } else {
+            parts.push(format!("¬{}", name(k - o)));
+        }
+    }
+    if parts.is_empty() {
+        return "⊤ (empty)".to_string();
+    }
+    parts.join(" ∧ ")
+}
+
+/// One formatted line per clause: id, polarity, weight, body.
+pub fn describe_clause(bank: &ClauseBank, j: usize, names: Option<&[String]>) -> String {
+    format!(
+        "C{}{} (w={}): {}",
+        j / 2 + 1,
+        if ClauseBank::polarity(j) > 0 { "+" } else { "-" },
+        bank.weight(j),
+        clause_string(bank, j, names)
+    )
+}
+
+/// The `top_n` strongest clauses of a class, by weight then by length
+/// (longer = more specific); skips empty clauses.
+pub fn top_clauses(
+    tm: &MultiClassTM,
+    class: usize,
+    top_n: usize,
+    names: Option<&[String]>,
+) -> Vec<String> {
+    let bank = tm.bank(class);
+    let mut ids: Vec<usize> = (0..bank.clauses()).filter(|&j| bank.count(j) > 0).collect();
+    ids.sort_by_key(|&j| std::cmp::Reverse((bank.weight(j), bank.count(j))));
+    ids.truncate(top_n);
+    ids.iter().map(|&j| describe_clause(bank, j, names)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::params::TMParams;
+
+    fn bank_with(incl: &[(usize, usize)]) -> ClauseBank {
+        let mut b = ClauseBank::new(4, 8); // o = 4
+        for &(j, k) in incl {
+            b.set_state(j, k, 0);
+        }
+        b
+    }
+
+    #[test]
+    fn renders_positive_and_negated_literals() {
+        let b = bank_with(&[(0, 1), (0, 6)]);
+        assert_eq!(clause_string(&b, 0, None), "x1 ∧ ¬x2");
+    }
+
+    #[test]
+    fn renders_named_features() {
+        let b = bank_with(&[(1, 0), (1, 4)]);
+        let names: Vec<String> = ["good", "bad", "plot", "acting"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert_eq!(clause_string(&b, 1, Some(&names)), "good ∧ ¬good");
+    }
+
+    #[test]
+    fn empty_clause_renders_top() {
+        let b = bank_with(&[]);
+        assert_eq!(clause_string(&b, 0, None), "⊤ (empty)");
+    }
+
+    #[test]
+    fn describe_includes_polarity_and_weight() {
+        let mut b = bank_with(&[(0, 0), (1, 2)]);
+        b.set_weight(1, 5);
+        assert_eq!(describe_clause(&b, 0, None), "C1+ (w=1): x0");
+        assert_eq!(describe_clause(&b, 1, None), "C1- (w=5): x2");
+    }
+
+    #[test]
+    fn top_clauses_orders_by_weight_then_length() {
+        let mut tm = MultiClassTM::new(TMParams::new(2, 4, 4));
+        let bank = tm.bank_mut(0);
+        bank.set_state(0, 0, 0); // len 1, w 1
+        bank.set_state(1, 0, 0);
+        bank.set_state(1, 1, 0); // len 2, w 1
+        bank.set_state(2, 0, 0);
+        bank.set_weight(2, 3); // len 1, w 3
+        let top = top_clauses(&tm, 0, 2, None);
+        assert_eq!(top.len(), 2);
+        assert!(top[0].contains("w=3"), "{top:?}");
+        assert!(top[1].contains("x0 ∧ x1"), "{top:?}");
+    }
+}

@@ -1,0 +1,257 @@
+//! Model persistence and densification.
+//!
+//! * Binary save/load of a trained machine (magic + params JSON + raw TA
+//!   state bytes) — keeps the serving coordinator restartable.
+//! * [`DenseModel`]: the dense f32 arrays the AOT-compiled XLA
+//!   executable consumes (`include`, `count`, `polarity` — see
+//!   `python/compile/model.py` for the layout contract).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{ensure, Result};
+
+use crate::tm::classifier::MultiClassTM;
+use crate::tm::params::TMParams;
+use crate::util::Json;
+
+const MAGIC: &[u8; 8] = b"TMINDEX2"; // v2: + clause weights per class
+
+/// Save a machine to a writer.
+pub fn save_to(tm: &MultiClassTM, w: &mut impl Write) -> Result<()> {
+    w.write_all(MAGIC)?;
+    let params = tm.params.to_json().to_string().into_bytes();
+    w.write_all(&(params.len() as u64).to_le_bytes())?;
+    w.write_all(&params)?;
+    for i in 0..tm.classes() {
+        let states = tm.bank(i).states();
+        // i8 -> u8 reinterpretation is value-preserving for storage
+        let bytes: &[u8] =
+            unsafe { std::slice::from_raw_parts(states.as_ptr() as *const u8, states.len()) };
+        w.write_all(bytes)?;
+        for &wgt in tm.bank(i).weights() {
+            w.write_all(&wgt.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Load a machine from a reader.
+pub fn load_from(r: &mut impl Read) -> Result<MultiClassTM> {
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    ensure!(&magic == MAGIC, "bad magic: not a TM model file");
+    let mut len = [0u8; 8];
+    r.read_exact(&mut len)?;
+    let len = u64::from_le_bytes(len) as usize;
+    ensure!(len < 1 << 20, "params block implausibly large");
+    let mut params_buf = vec![0u8; len];
+    r.read_exact(&mut params_buf)?;
+    let params_text = std::str::from_utf8(&params_buf)?;
+    let params =
+        TMParams::from_json(&Json::parse(params_text)?).map_err(|e| anyhow::anyhow!(e))?;
+
+    let mut tm = MultiClassTM::new(params.clone());
+    let row = params.clauses_per_class * params.n_literals();
+    let mut buf = vec![0u8; row];
+    let mut wbuf = [0u8; 4];
+    for i in 0..params.classes {
+        r.read_exact(&mut buf)?;
+        let bank = tm.bank_mut(i);
+        for j in 0..params.clauses_per_class {
+            for k in 0..params.n_literals() {
+                bank.set_state(j, k, buf[j * params.n_literals() + k] as i8);
+            }
+        }
+        for j in 0..params.clauses_per_class {
+            r.read_exact(&mut wbuf)?;
+            let w = u32::from_le_bytes(wbuf);
+            ensure!(w >= 1, "clause weight must be >= 1");
+            bank.set_weight(j, w);
+        }
+    }
+    Ok(tm)
+}
+
+pub fn save(tm: &MultiClassTM, path: impl AsRef<Path>) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    save_to(tm, &mut f)
+}
+
+pub fn load(path: impl AsRef<Path>) -> Result<MultiClassTM> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    load_from(&mut f)
+}
+
+/// Dense f32 export for the XLA serving backend.
+///
+/// Layout contract (must match `python/compile/model.py`):
+/// clauses are ordered class-major (`jt = class * n + j`);
+/// `include[k * clauses_total + jt]`, `count[jt]`,
+/// `polarity[jt * classes + class] = ±1`.
+#[derive(Clone, Debug)]
+pub struct DenseModel {
+    pub features: usize,
+    pub n_literals: usize,
+    pub clauses_total: usize,
+    pub classes: usize,
+    pub include: Vec<f32>,
+    pub count: Vec<f32>,
+    pub polarity: Vec<f32>,
+}
+
+impl DenseModel {
+    pub fn from_tm(tm: &MultiClassTM) -> Self {
+        let m = tm.classes();
+        let n = tm.params.clauses_per_class;
+        let n_lit = tm.params.n_literals();
+        let total = m * n;
+        let mut include = vec![0f32; n_lit * total];
+        let mut count = vec![0f32; total];
+        let mut polarity = vec![0f32; total * m];
+        for i in 0..m {
+            let bank = tm.bank(i);
+            for j in 0..n {
+                let jt = i * n + j;
+                count[jt] = bank.count(j) as f32;
+                // weighted vote: the XLA polarity matrix carries ±weight
+                polarity[jt * m + i] = bank.vote(j) as f32;
+                for k in bank.included_literals(j) {
+                    include[k * total + jt] = 1.0;
+                }
+            }
+        }
+        DenseModel {
+            features: tm.params.features,
+            n_literals: n_lit,
+            clauses_total: total,
+            classes: m,
+            include,
+            count,
+            polarity,
+        }
+    }
+
+    /// Reference scores straight off the dense arrays (test oracle for
+    /// the XLA path; mirrors `python/compile/kernels/ref.py`).
+    pub fn scores(&self, literals: &[f32]) -> Vec<f32> {
+        assert_eq!(literals.len() % self.n_literals, 0);
+        let batch = literals.len() / self.n_literals;
+        let mut out = vec![0f32; batch * self.classes];
+        for b in 0..batch {
+            let lits = &literals[b * self.n_literals..(b + 1) * self.n_literals];
+            for jt in 0..self.clauses_total {
+                if self.count[jt] == 0.0 {
+                    continue;
+                }
+                let mut alive = true;
+                for k in 0..self.n_literals {
+                    if self.include[k * self.clauses_total + jt] == 1.0 && lits[k] == 0.0 {
+                        alive = false;
+                        break;
+                    }
+                }
+                if alive {
+                    for i in 0..self.classes {
+                        out[b * self.classes + i] += self.polarity[jt * self.classes + i];
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::Backend;
+    use crate::tm::trainer::Trainer;
+    use crate::util::{BitVec, Rng};
+
+    fn trained_machine() -> MultiClassTM {
+        let params = TMParams::new(3, 8, 10).with_seed(7);
+        let mut tr = Trainer::new(params, Backend::Indexed);
+        let mut rng = Rng::new(5);
+        let samples: Vec<(BitVec, usize)> = (0..120)
+            .map(|_| {
+                let y = rng.below(3) as usize;
+                let bits: Vec<bool> = (0..10).map(|k| k % 3 == y || rng.bern(0.3)).collect();
+                let mut lits = bits.clone();
+                lits.extend(bits.iter().map(|b| !b));
+                (BitVec::from_bools(&lits), y)
+            })
+            .collect();
+        for _ in 0..3 {
+            tr.train_epoch(samples.iter().map(|(l, y)| (l, *y)));
+        }
+        tr.tm
+    }
+
+    #[test]
+    fn save_load_roundtrip_exact() {
+        let tm = trained_machine();
+        let mut buf = Vec::new();
+        save_to(&tm, &mut buf).unwrap();
+        let tm2 = load_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(tm.params, tm2.params);
+        for i in 0..tm.classes() {
+            assert_eq!(tm.bank(i).states(), tm2.bank(i).states(), "class {i}");
+            assert!(tm2.bank(i).check_counts());
+        }
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        assert!(load_from(&mut &b"not a model"[..]).is_err());
+        let mut buf = Vec::new();
+        save_to(&trained_machine(), &mut buf).unwrap();
+        buf[0] = b'X';
+        assert!(load_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn load_rejects_truncation() {
+        let mut buf = Vec::new();
+        save_to(&trained_machine(), &mut buf).unwrap();
+        buf.truncate(buf.len() - 10);
+        assert!(load_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn dense_model_matches_trainer_scores() {
+        let tm = trained_machine();
+        let dense = DenseModel::from_tm(&tm);
+        let mut tr = Trainer::from_machine(tm, Backend::Naive);
+        let mut rng = Rng::new(9);
+        for _ in 0..20 {
+            let bits: Vec<bool> = (0..10).map(|_| rng.bern(0.5)).collect();
+            let mut lits = bits.clone();
+            lits.extend(bits.iter().map(|b| !b));
+            let bv = BitVec::from_bools(&lits);
+            let want = tr.scores(&bv);
+            let lits_f32: Vec<f32> =
+                lits.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect();
+            let got = dense.scores(&lits_f32);
+            for (i, &w) in want.iter().enumerate() {
+                assert_eq!(got[i], w as f32, "class {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_shapes() {
+        let tm = trained_machine();
+        let d = DenseModel::from_tm(&tm);
+        assert_eq!(d.clauses_total, 24);
+        assert_eq!(d.include.len(), 20 * 24);
+        assert_eq!(d.polarity.len(), 24 * 3);
+        // each clause votes for exactly its own class
+        for jt in 0..24 {
+            let nz: Vec<usize> = (0..3)
+                .filter(|&i| d.polarity[jt * 3 + i] != 0.0)
+                .collect();
+            assert_eq!(nz, vec![jt / 8]);
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! The Tsetlin Machine substrate.
+//!
+//! * [`params`] — hyper-parameters and validation.
+//! * [`bank`] — per-class clause bank: TA states, include-masks, flip
+//!   detection (the state machine of §2 of the paper).
+//! * [`feedback`] — Type I / Type II feedback (learning rules).
+//! * [`classifier`] — multi-class machine (eq. 3/4).
+//! * [`trainer`] — the training loop: clause-update sampling against the
+//!   voting margin `T`, paired target/negative-class updates.
+//! * [`io`] — model save/load and densification for the XLA backend.
+
+pub mod bank;
+pub mod classifier;
+pub mod feedback;
+pub mod interpret;
+pub mod io;
+pub mod params;
+pub mod trainer;
+
+pub use bank::{ClauseBank, Flip};
+pub use classifier::MultiClassTM;
+pub use params::TMParams;
+pub use trainer::Trainer;

@@ -1,0 +1,205 @@
+//! Hyper-parameters of a multi-class Tsetlin Machine.
+
+use crate::util::Json;
+
+/// Hyper-parameters (paper §2). `clauses_per_class` is the paper's `n`;
+/// tables report the *total* clause count `m * n` — helpers convert.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TMParams {
+    /// Number of classes `m`.
+    pub classes: usize,
+    /// Clauses per class `n` (must be even: alternating +/- polarity).
+    pub clauses_per_class: usize,
+    /// Input features `o`; literals are `2o` (feature + negation).
+    pub features: usize,
+    /// Voting margin `T` — the annealing-style cooling parameter gating
+    /// how many clauses receive feedback per sample.
+    pub threshold: u32,
+    /// Specificity `s` — reward/penalty split (1/s vs 1-1/s).
+    pub s: f64,
+    /// Boost true-positive feedback (include reinforcement with
+    /// probability 1 instead of (s-1)/s). Matches CAIR's default.
+    pub boost_true_positive: bool,
+    /// RNG seed for the whole machine (training is fully deterministic
+    /// given the seed and the dataset order).
+    pub seed: u64,
+    /// Weighted TM (paper ref [8]): integer clause weights, letting one
+    /// clause represent many — fewer clauses for the same accuracy.
+    pub weighted: bool,
+}
+
+impl TMParams {
+    pub fn new(classes: usize, clauses_per_class: usize, features: usize) -> Self {
+        TMParams {
+            classes,
+            clauses_per_class,
+            features,
+            threshold: 15,
+            s: 3.9,
+            boost_true_positive: true,
+            seed: 42,
+            weighted: false,
+        }
+    }
+
+    pub fn with_weighted(mut self, weighted: bool) -> Self {
+        self.weighted = weighted;
+        self
+    }
+
+    pub fn with_threshold(mut self, t: u32) -> Self {
+        self.threshold = t;
+        self
+    }
+
+    pub fn with_s(mut self, s: f64) -> Self {
+        self.s = s;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Literal count `2o`.
+    #[inline]
+    pub fn n_literals(&self) -> usize {
+        2 * self.features
+    }
+
+    /// Total clauses across classes (`m * n`, the number the paper's
+    /// tables index by).
+    #[inline]
+    pub fn total_clauses(&self) -> usize {
+        self.classes * self.clauses_per_class
+    }
+
+    /// Build params from a paper-style *total* clause budget, split
+    /// evenly across classes (rounded up to an even per-class count).
+    pub fn from_total_clauses(
+        classes: usize,
+        total_clauses: usize,
+        features: usize,
+    ) -> Self {
+        let per = (total_clauses / classes).max(2);
+        let per = per + per % 2;
+        TMParams::new(classes, per, features)
+    }
+
+    /// JSON encoding (model files, manifests).
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("classes", Json::num(self.classes as f64)),
+            ("clauses_per_class", Json::num(self.clauses_per_class as f64)),
+            ("features", Json::num(self.features as f64)),
+            ("threshold", Json::num(self.threshold as f64)),
+            ("s", Json::num(self.s)),
+            ("boost_true_positive", Json::Bool(self.boost_true_positive)),
+            ("seed", Json::num(self.seed as f64)),
+            ("weighted", Json::Bool(self.weighted)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let field = |name: &str| v.get(name).ok_or_else(|| format!("missing field '{name}'"));
+        let p = TMParams {
+            classes: field("classes")?.as_usize().ok_or("classes must be uint")?,
+            clauses_per_class: field("clauses_per_class")?
+                .as_usize()
+                .ok_or("clauses_per_class must be uint")?,
+            features: field("features")?.as_usize().ok_or("features must be uint")?,
+            threshold: field("threshold")?.as_usize().ok_or("threshold must be uint")? as u32,
+            s: field("s")?.as_f64().ok_or("s must be number")?,
+            boost_true_positive: field("boost_true_positive")?
+                .as_bool()
+                .ok_or("boost_true_positive must be bool")?,
+            seed: field("seed")?.as_f64().ok_or("seed must be number")? as u64,
+            // absent in pre-weighted model files: default plain TM
+            weighted: v.get("weighted").and_then(Json::as_bool).unwrap_or(false),
+        };
+        p.validate()?;
+        Ok(p)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.classes < 2 {
+            return Err(format!("need >= 2 classes, got {}", self.classes));
+        }
+        if self.clauses_per_class == 0 || self.clauses_per_class % 2 != 0 {
+            return Err(format!(
+                "clauses_per_class must be positive and even, got {}",
+                self.clauses_per_class
+            ));
+        }
+        if self.features == 0 {
+            return Err("features must be positive".into());
+        }
+        if self.threshold == 0 {
+            return Err("threshold T must be positive".into());
+        }
+        if self.s < 1.0 {
+            return Err(format!("s must be >= 1.0, got {}", self.s));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        assert!(TMParams::new(10, 100, 784).validate().is_ok());
+    }
+
+    #[test]
+    fn rejects_odd_clause_count() {
+        assert!(TMParams::new(2, 3, 10).validate().is_err());
+    }
+
+    #[test]
+    fn rejects_single_class() {
+        assert!(TMParams::new(1, 4, 10).validate().is_err());
+    }
+
+    #[test]
+    fn rejects_zero_features_threshold_s() {
+        assert!(TMParams::new(2, 4, 0).validate().is_err());
+        assert!(TMParams::new(2, 4, 5).with_threshold(0).validate().is_err());
+        assert!(TMParams::new(2, 4, 5).with_s(0.5).validate().is_err());
+    }
+
+    #[test]
+    fn from_total_clauses_splits_evenly() {
+        let p = TMParams::from_total_clauses(10, 20_000, 784);
+        assert_eq!(p.clauses_per_class, 2000);
+        assert_eq!(p.total_clauses(), 20_000);
+        assert!(p.validate().is_ok());
+        // odd split rounds up to even
+        let p = TMParams::from_total_clauses(3, 1000, 10);
+        assert_eq!(p.clauses_per_class % 2, 0);
+    }
+
+    #[test]
+    fn literal_count_is_double_features() {
+        assert_eq!(TMParams::new(2, 4, 784).n_literals(), 1568);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = TMParams::new(10, 100, 784).with_s(7.5).with_threshold(25);
+        let s = p.to_json().to_string();
+        let q = TMParams::from_json(&Json::parse(&s).unwrap()).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn from_json_rejects_missing_and_invalid() {
+        assert!(TMParams::from_json(&Json::parse("{}").unwrap()).is_err());
+        let mut p = TMParams::new(10, 100, 784);
+        p.clauses_per_class = 3; // invalid (odd)
+        assert!(TMParams::from_json(&p.to_json()).is_err());
+    }
+}

@@ -1,0 +1,358 @@
+//! The training loop (§2 Learning): paired target/negative-class
+//! updates, clause-update sampling against the voting margin `T`,
+//! Type I/II feedback dispatch by polarity.
+//!
+//! The trainer is generic over the evaluation backend: the *only*
+//! behavioural difference between backends is speed (plus the index's
+//! maintenance work inside the flip hooks). Given the same seed and data
+//! order, all backends produce bit-identical machines — the equivalence
+//! tests in `rust/tests/` assert exactly that, which is the paper's
+//! implicit correctness claim for the index.
+
+use crate::eval::{Backend, Evaluator};
+use crate::index::{IndexStats, IndexedEval};
+use crate::tm::bank::ClauseBank;
+use crate::tm::classifier::MultiClassTM;
+use crate::tm::feedback::{type_i, type_ii, FeedbackCtx};
+use crate::tm::params::TMParams;
+use crate::util::rng::{prob_to_threshold, Rng};
+use crate::util::BitVec;
+
+/// Per-epoch training statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EpochStats {
+    pub samples: usize,
+    pub clause_updates: u64,
+    pub flips: u64,
+}
+
+/// Binds a [`MultiClassTM`] to an evaluation backend and drives
+/// learning and prediction.
+pub struct Trainer {
+    pub tm: MultiClassTM,
+    evals: Vec<Box<dyn Evaluator + Send>>,
+    backend: Backend,
+    rng: Rng,
+    ctx: FeedbackCtx,
+    out_scratch: BitVec,
+}
+
+impl Trainer {
+    pub fn new(params: TMParams, backend: Backend) -> Self {
+        let tm = MultiClassTM::new(params.clone());
+        let evals = (0..params.classes)
+            .map(|_| backend.make(&params))
+            .collect();
+        let mut rng = Rng::new(params.seed);
+        // burn the seed into a training stream distinct from dataset RNGs
+        let rng = rng.fork(0x7261_696e);
+        Trainer {
+            out_scratch: BitVec::zeros(params.clauses_per_class),
+            ctx: FeedbackCtx::new(params.s, params.boost_true_positive, params.weighted),
+            evals,
+            backend,
+            rng,
+            tm,
+        }
+    }
+
+    /// Rebuild a trainer around an existing machine (model load,
+    /// backend switch). Evaluator state is reconstructed from the banks.
+    pub fn from_machine(tm: MultiClassTM, backend: Backend) -> Self {
+        let params = tm.params.clone();
+        let mut evals: Vec<Box<dyn Evaluator + Send>> = (0..params.classes)
+            .map(|_| backend.make(&params))
+            .collect();
+        for (i, ev) in evals.iter_mut().enumerate() {
+            ev.rebuild(tm.bank(i));
+        }
+        let mut rng = Rng::new(params.seed);
+        let rng = rng.fork(0x7261_696e);
+        Trainer {
+            out_scratch: BitVec::zeros(params.clauses_per_class),
+            ctx: FeedbackCtx::new(params.s, params.boost_true_positive, params.weighted),
+            evals,
+            backend,
+            rng,
+            tm,
+        }
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// One full update for a labelled sample: Type I/II on the target
+    /// class, then on one uniformly-drawn negative class.
+    pub fn train_sample(&mut self, literals: &BitVec, label: usize) -> u64 {
+        debug_assert!(label < self.tm.classes());
+        let mut updates = self.update_class(label, literals, true);
+        let m = self.tm.classes();
+        if m > 1 {
+            let mut neg = self.rng.below(m as u32 - 1) as usize;
+            if neg >= label {
+                neg += 1;
+            }
+            updates += self.update_class(neg, literals, false);
+        }
+        updates
+    }
+
+    fn update_class(&mut self, class: usize, literals: &BitVec, is_target: bool) -> u64 {
+        let t = self.tm.params.threshold as i32;
+        let ev = &mut self.evals[class];
+        let score = ev.eval_train(self.tm.bank(class), literals, &mut self.out_scratch);
+        let clamped = score.clamp(-t, t);
+        // target: push score up -> update prob (T - score) / 2T
+        // negative: push score down -> update prob (T + score) / 2T
+        let p = if is_target {
+            (t - clamped) as f64 / (2 * t) as f64
+        } else {
+            (t + clamped) as f64 / (2 * t) as f64
+        };
+        let p_th = prob_to_threshold(p);
+
+        let bank = self.tm.bank_mut(class);
+        let n = bank.clauses();
+        let mut updates = 0;
+        for j in 0..n {
+            if !self.rng.bern_threshold(p_th) {
+                continue;
+            }
+            updates += 1;
+            let positive = ClauseBank::polarity(j) > 0;
+            let clause_out = self.out_scratch.get(j);
+            if positive == is_target {
+                type_i(
+                    bank,
+                    ev.as_mut(),
+                    &mut self.rng,
+                    &self.ctx,
+                    j,
+                    clause_out,
+                    literals,
+                );
+            } else {
+                type_ii(bank, ev.as_mut(), &self.ctx, j, clause_out, literals);
+            }
+        }
+        updates
+    }
+
+    /// One epoch over `(literals, label)` pairs in the given order.
+    pub fn train_epoch<'a>(
+        &mut self,
+        samples: impl Iterator<Item = (&'a BitVec, usize)>,
+    ) -> EpochStats {
+        let mut stats = EpochStats::default();
+        for (lits, y) in samples {
+            stats.clause_updates += self.train_sample(lits, y);
+            stats.samples += 1;
+        }
+        stats
+    }
+
+    /// Inference: argmax of per-class scores (eq. 3 / eq. 4).
+    pub fn predict(&mut self, literals: &BitVec) -> usize {
+        let mut best = 0usize;
+        let mut best_score = i32::MIN;
+        for i in 0..self.tm.classes() {
+            let s = self.evals[i].score(self.tm.bank(i), literals);
+            if s > best_score {
+                best_score = s;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Per-class scores (serving path / margin diagnostics).
+    pub fn scores(&mut self, literals: &BitVec) -> Vec<i32> {
+        (0..self.tm.classes())
+            .map(|i| self.evals[i].score(self.tm.bank(i), literals))
+            .collect()
+    }
+
+    /// Accuracy over a labelled set.
+    pub fn accuracy<'a>(
+        &mut self,
+        samples: impl Iterator<Item = (&'a BitVec, usize)>,
+    ) -> f64 {
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for (lits, y) in samples {
+            if self.predict(lits) == y {
+                correct += 1;
+            }
+            total += 1;
+        }
+        if total == 0 {
+            0.0
+        } else {
+            correct as f64 / total as f64
+        }
+    }
+
+    /// Index statistics per class (only for the indexed backend).
+    pub fn index_stats(&self) -> Option<Vec<IndexStats>> {
+        if self.backend != Backend::Indexed {
+            return None;
+        }
+        Some(
+            (0..self.tm.classes())
+                .map(|i| {
+                    let ev = self.evals[i]
+                        .as_any()
+                        .downcast_ref::<IndexedEval>()
+                        .expect("indexed backend holds IndexedEval");
+                    IndexStats::collect(ev.index(), self.tm.bank(i))
+                })
+                .collect(),
+        )
+    }
+
+    /// Structural invariant check across all classes (tests).
+    #[doc(hidden)]
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for i in 0..self.tm.classes() {
+            if !self.tm.bank(i).check_counts() {
+                return Err(format!("class {i}: include_count out of sync"));
+            }
+            if let Some(ev) = self.evals[i].as_any().downcast_ref::<IndexedEval>() {
+                ev.index().check_invariants(self.tm.bank(i))?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tiny two-class problem: class 0 = feature 0 set, class 1 = clear.
+    fn toy_samples(n: usize, features: usize, seed: u64) -> Vec<(BitVec, usize)> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let y = rng.bern(0.5) as usize;
+                let bits: Vec<bool> = (0..features)
+                    .map(|k| {
+                        if k == 0 {
+                            y == 0
+                        } else {
+                            rng.bern(0.5)
+                        }
+                    })
+                    .collect();
+                // literals: [x, ¬x]
+                let mut lits = Vec::with_capacity(2 * features);
+                lits.extend_from_slice(&bits);
+                lits.extend(bits.iter().map(|b| !b));
+                (BitVec::from_bools(&lits), y)
+            })
+            .collect()
+    }
+
+    fn learns_toy(backend: Backend) {
+        let params = TMParams::new(2, 20, 8).with_threshold(10).with_s(3.0);
+        let mut tr = Trainer::new(params, backend);
+        let train = toy_samples(400, 8, 1);
+        for _ in 0..10 {
+            tr.train_epoch(train.iter().map(|(l, y)| (l, *y)));
+        }
+        let test = toy_samples(200, 8, 2);
+        let acc = tr.accuracy(test.iter().map(|(l, y)| (l, *y)));
+        assert!(acc > 0.95, "{} accuracy {acc}", backend.name());
+        tr.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn naive_learns_toy_problem() {
+        learns_toy(Backend::Naive);
+    }
+
+    #[test]
+    fn indexed_learns_toy_problem() {
+        learns_toy(Backend::Indexed);
+    }
+
+    #[test]
+    fn bitpacked_learns_toy_problem() {
+        learns_toy(Backend::BitPacked);
+    }
+
+    #[test]
+    fn backends_produce_identical_machines() {
+        // The core equivalence theorem: same seed + same data order =>
+        // bit-identical TA states regardless of evaluation backend.
+        let params = TMParams::new(2, 10, 12).with_threshold(8);
+        let train = toy_samples(150, 12, 3);
+        let mut machines = vec![];
+        for backend in Backend::ALL {
+            let mut tr = Trainer::new(params.clone(), backend);
+            for _ in 0..3 {
+                tr.train_epoch(train.iter().map(|(l, y)| (l, *y)));
+            }
+            tr.check_invariants().unwrap();
+            machines.push(tr);
+        }
+        for i in 0..params.classes {
+            let s0 = machines[0].tm.bank(i).states();
+            for m in &machines[1..] {
+                assert_eq!(s0, m.tm.bank(i).states(), "class {i} states diverge");
+            }
+        }
+        // and predictions agree
+        let test = toy_samples(50, 12, 4);
+        for (lits, _) in &test {
+            let p0 = machines[0].predict(lits);
+            let s0 = machines[0].scores(lits);
+            for m in &mut machines[1..] {
+                assert_eq!(s0, m.scores(lits));
+                assert_eq!(p0, m.predict(lits));
+            }
+        }
+    }
+
+    #[test]
+    fn training_is_deterministic_given_seed() {
+        let params = TMParams::new(2, 8, 6).with_seed(99);
+        let train = toy_samples(100, 6, 5);
+        let run = || {
+            let mut tr = Trainer::new(params.clone(), Backend::Indexed);
+            for _ in 0..2 {
+                tr.train_epoch(train.iter().map(|(l, y)| (l, *y)));
+            }
+            tr.tm.bank(0).states().to_vec()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn from_machine_roundtrip_preserves_behaviour() {
+        let params = TMParams::new(2, 12, 8);
+        let train = toy_samples(200, 8, 6);
+        let mut tr = Trainer::new(params, Backend::Indexed);
+        for _ in 0..3 {
+            tr.train_epoch(train.iter().map(|(l, y)| (l, *y)));
+        }
+        let test = toy_samples(60, 8, 7);
+        let before: Vec<usize> = test.iter().map(|(l, _)| tr.predict(l)).collect();
+        // move the machine to a different backend
+        let mut tr2 = Trainer::from_machine(tr.tm.clone(), Backend::Naive);
+        let after: Vec<usize> = test.iter().map(|(l, _)| tr2.predict(l)).collect();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn index_stats_only_for_indexed() {
+        let params = TMParams::new(2, 4, 4);
+        let tr = Trainer::new(params.clone(), Backend::Naive);
+        assert!(tr.index_stats().is_none());
+        let tr = Trainer::new(params, Backend::Indexed);
+        let stats = tr.index_stats().unwrap();
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].total_inclusions, 0);
+    }
+}

@@ -1,0 +1,262 @@
+//! Packed bit vectors.
+//!
+//! Two hot uses: (1) sample literal vectors — inference iterates the
+//! *zero* bits (false literals, the paper's falsification walk) and the
+//! bit-parallel baseline ANDs whole words; (2) per-clause output/alive
+//! bitmaps during training.
+
+/// Fixed-length packed bit vector over `u64` words.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitVec {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitVec {
+    /// All-zero vector of `len` bits.
+    pub fn zeros(len: usize) -> Self {
+        BitVec {
+            words: vec![0; len.div_ceil(64)],
+            len,
+        }
+    }
+
+    /// All-one vector of `len` bits (trailing bits of the last word are 0).
+    pub fn ones(len: usize) -> Self {
+        let mut v = BitVec {
+            words: vec![!0u64; len.div_ceil(64)],
+            len,
+        };
+        v.mask_tail();
+        v
+    }
+
+    /// Build from a bool slice.
+    pub fn from_bools(bits: &[bool]) -> Self {
+        let mut v = BitVec::zeros(bits.len());
+        for (i, &b) in bits.iter().enumerate() {
+            if b {
+                v.set(i);
+            }
+        }
+        v
+    }
+
+    #[inline]
+    fn mask_tail(&mut self) {
+        let tail = self.len % 64;
+        if tail != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << tail) - 1;
+            }
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i >> 6] >> (i & 63)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i >> 6] |= 1u64 << (i & 63);
+    }
+
+    #[inline]
+    pub fn clear(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i >> 6] &= !(1u64 << (i & 63));
+    }
+
+    #[inline]
+    pub fn assign(&mut self, i: usize, v: bool) {
+        if v {
+            self.set(i)
+        } else {
+            self.clear(i)
+        }
+    }
+
+    /// Zero every bit without reallocating.
+    pub fn clear_all(&mut self) {
+        self.words.fill(0);
+    }
+
+    /// Set every bit without reallocating (tail stays masked).
+    pub fn set_all(&mut self) {
+        self.words.fill(!0u64);
+        self.mask_tail();
+    }
+
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Raw words — the bit-parallel evaluator works directly on these.
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Iterate indices of set bits (ascending).
+    pub fn iter_ones(&self) -> OnesIter<'_> {
+        OnesIter::new(&self.words, self.len, false)
+    }
+
+    /// Iterate indices of zero bits (ascending) — the falsification walk.
+    pub fn iter_zeros(&self) -> OnesIter<'_> {
+        OnesIter::new(&self.words, self.len, true)
+    }
+}
+
+/// Iterator over set-bit indices; with `complement` it yields zero-bit
+/// indices instead (tail padding past `len` is never yielded).
+pub struct OnesIter<'a> {
+    words: &'a [u64],
+    len: usize,
+    complement: bool,
+    word_idx: usize,
+    cur: u64,
+}
+
+impl<'a> OnesIter<'a> {
+    fn new(words: &'a [u64], len: usize, complement: bool) -> Self {
+        let first = words.first().copied().unwrap_or(0);
+        OnesIter {
+            words,
+            len,
+            complement,
+            word_idx: 0,
+            cur: if complement { !first } else { first },
+        }
+    }
+}
+
+impl Iterator for OnesIter<'_> {
+    type Item = usize;
+
+    #[inline]
+    fn next(&mut self) -> Option<usize> {
+        loop {
+            if self.cur != 0 {
+                let bit = self.cur.trailing_zeros() as usize;
+                self.cur &= self.cur - 1;
+                let idx = self.word_idx * 64 + bit;
+                if idx < self.len {
+                    return Some(idx);
+                }
+                // tail padding; anything further in this word is also
+                // past `len`, and it's the last word.
+                return None;
+            }
+            self.word_idx += 1;
+            if self.word_idx >= self.words.len() {
+                return None;
+            }
+            let w = self.words[self.word_idx];
+            self.cur = if self.complement { !w } else { w };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_clear_roundtrip() {
+        let mut v = BitVec::zeros(130);
+        assert_eq!(v.len(), 130);
+        v.set(0);
+        v.set(63);
+        v.set(64);
+        v.set(129);
+        assert!(v.get(0) && v.get(63) && v.get(64) && v.get(129));
+        assert!(!v.get(1) && !v.get(65));
+        v.clear(64);
+        assert!(!v.get(64));
+        assert_eq!(v.count_ones(), 3);
+    }
+
+    #[test]
+    fn ones_constructor_masks_tail() {
+        let v = BitVec::ones(70);
+        assert_eq!(v.count_ones(), 70);
+    }
+
+    #[test]
+    fn iter_ones_matches_naive() {
+        let mut v = BitVec::zeros(200);
+        let idxs = [0usize, 1, 63, 64, 65, 127, 128, 199];
+        for &i in &idxs {
+            v.set(i);
+        }
+        let got: Vec<usize> = v.iter_ones().collect();
+        assert_eq!(got, idxs.to_vec());
+    }
+
+    #[test]
+    fn iter_zeros_matches_naive() {
+        let mut v = BitVec::ones(131);
+        v.clear(5);
+        v.clear(64);
+        v.clear(130);
+        let got: Vec<usize> = v.iter_zeros().collect();
+        assert_eq!(got, vec![5, 64, 130]);
+    }
+
+    #[test]
+    fn iter_zeros_excludes_tail_padding() {
+        // 65 bits: word 1 has 63 padding bits that must NOT be yielded.
+        let v = BitVec::ones(65);
+        assert_eq!(v.iter_zeros().count(), 0);
+        let z = BitVec::zeros(65);
+        assert_eq!(z.iter_zeros().count(), 65);
+    }
+
+    #[test]
+    fn from_bools_roundtrip() {
+        let bits: Vec<bool> = (0..99).map(|i| i % 3 == 0).collect();
+        let v = BitVec::from_bools(&bits);
+        for (i, &b) in bits.iter().enumerate() {
+            assert_eq!(v.get(i), b, "bit {i}");
+        }
+    }
+
+    #[test]
+    fn clear_all_resets() {
+        let mut v = BitVec::ones(100);
+        v.clear_all();
+        assert_eq!(v.count_ones(), 0);
+        assert_eq!(v.len(), 100);
+    }
+
+    #[test]
+    fn assign_both_directions() {
+        let mut v = BitVec::zeros(10);
+        v.assign(3, true);
+        assert!(v.get(3));
+        v.assign(3, false);
+        assert!(!v.get(3));
+    }
+
+    #[test]
+    fn empty_vec() {
+        let v = BitVec::zeros(0);
+        assert!(v.is_empty());
+        assert_eq!(v.iter_ones().count(), 0);
+        assert_eq!(v.iter_zeros().count(), 0);
+    }
+}

@@ -1,0 +1,18 @@
+//! Zero-dependency utilities for the hot path.
+//!
+//! Everything the inner training/inference loops touch lives here:
+//! a deterministic splitmix/xoshiro RNG, packed bit vectors, a compact
+//! open-addressing map (used by the sparse position store), and a
+//! monotonic timer.
+
+pub mod bitvec;
+pub mod json;
+pub mod rng;
+pub mod smallmap;
+pub mod timer;
+
+pub use bitvec::BitVec;
+pub use json::Json;
+pub use rng::Rng;
+pub use smallmap::U64Map;
+pub use timer::Stopwatch;

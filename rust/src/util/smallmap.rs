@@ -1,0 +1,212 @@
+//! Compact open-addressing hash map `u64 -> u32`.
+//!
+//! Used by the sparse position store (`index::position`) when a dense
+//! `clauses x literals` matrix would blow the memory budget (e.g. IMDb
+//! with 20k clauses x 40k literals = 3.2 GB dense). Keys are packed
+//! `(clause << 32) | literal` pairs. Linear probing, power-of-two
+//! capacity, tombstone-free deletion via backward-shift.
+
+const EMPTY: u64 = u64::MAX;
+
+/// Open-addressing `u64 -> u32` map. `u64::MAX` is reserved (never a
+/// valid key: clause and literal ids are both `< u32::MAX`).
+#[derive(Clone, Debug)]
+pub struct U64Map {
+    keys: Vec<u64>,
+    vals: Vec<u32>,
+    len: usize,
+    mask: usize,
+}
+
+#[inline]
+fn hash(key: u64) -> u64 {
+    // splitmix64 finalizer — strong enough for packed-id keys.
+    let mut z = key.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl U64Map {
+    pub fn new() -> Self {
+        Self::with_capacity(16)
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        let cap = cap.next_power_of_two().max(8);
+        U64Map {
+            keys: vec![EMPTY; cap],
+            vals: vec![0; cap],
+            len: 0,
+            mask: cap - 1,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn insert(&mut self, key: u64, val: u32) {
+        debug_assert_ne!(key, EMPTY);
+        if (self.len + 1) * 4 >= self.keys.len() * 3 {
+            self.grow();
+        }
+        let mut i = (hash(key) as usize) & self.mask;
+        loop {
+            if self.keys[i] == EMPTY {
+                self.keys[i] = key;
+                self.vals[i] = val;
+                self.len += 1;
+                return;
+            }
+            if self.keys[i] == key {
+                self.vals[i] = val;
+                return;
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, key: u64) -> Option<u32> {
+        let mut i = (hash(key) as usize) & self.mask;
+        loop {
+            if self.keys[i] == EMPTY {
+                return None;
+            }
+            if self.keys[i] == key {
+                return Some(self.vals[i]);
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    /// Remove `key`, returning its value. Backward-shift deletion keeps
+    /// probe chains intact without tombstones.
+    pub fn remove(&mut self, key: u64) -> Option<u32> {
+        let mut i = (hash(key) as usize) & self.mask;
+        loop {
+            if self.keys[i] == EMPTY {
+                return None;
+            }
+            if self.keys[i] == key {
+                let val = self.vals[i];
+                self.len -= 1;
+                // backward-shift: close the hole
+                let mut hole = i;
+                let mut j = (i + 1) & self.mask;
+                while self.keys[j] != EMPTY {
+                    let home = (hash(self.keys[j]) as usize) & self.mask;
+                    // can keys[j] legally move into `hole`?
+                    let dist_home_to_hole = hole.wrapping_sub(home) & self.mask;
+                    let dist_home_to_j = j.wrapping_sub(home) & self.mask;
+                    if dist_home_to_hole <= dist_home_to_j {
+                        self.keys[hole] = self.keys[j];
+                        self.vals[hole] = self.vals[j];
+                        hole = j;
+                    }
+                    j = (j + 1) & self.mask;
+                }
+                self.keys[hole] = EMPTY;
+                return Some(val);
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    fn grow(&mut self) {
+        let new_cap = self.keys.len() * 2;
+        let old_keys = std::mem::replace(&mut self.keys, vec![EMPTY; new_cap]);
+        let old_vals = std::mem::take(&mut self.vals);
+        self.vals = vec![0; new_cap];
+        self.mask = new_cap - 1;
+        self.len = 0;
+        for (k, v) in old_keys.into_iter().zip(old_vals) {
+            if k != EMPTY {
+                self.insert(k, v);
+            }
+        }
+    }
+}
+
+impl Default for U64Map {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use std::collections::HashMap;
+
+    #[test]
+    fn insert_get_remove() {
+        let mut m = U64Map::new();
+        m.insert(1, 10);
+        m.insert(2, 20);
+        assert_eq!(m.get(1), Some(10));
+        assert_eq!(m.get(2), Some(20));
+        assert_eq!(m.get(3), None);
+        assert_eq!(m.remove(1), Some(10));
+        assert_eq!(m.get(1), None);
+        assert_eq!(m.get(2), Some(20));
+        assert_eq!(m.remove(1), None);
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn overwrite_keeps_len() {
+        let mut m = U64Map::new();
+        m.insert(5, 1);
+        m.insert(5, 2);
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.get(5), Some(2));
+    }
+
+    #[test]
+    fn grows_past_initial_capacity() {
+        let mut m = U64Map::with_capacity(8);
+        for i in 0..1000u64 {
+            m.insert(i, (i * 3) as u32);
+        }
+        assert_eq!(m.len(), 1000);
+        for i in 0..1000u64 {
+            assert_eq!(m.get(i), Some((i * 3) as u32), "key {i}");
+        }
+    }
+
+    #[test]
+    fn fuzz_against_std_hashmap() {
+        let mut rng = Rng::new(42);
+        let mut ours = U64Map::new();
+        let mut theirs: HashMap<u64, u32> = HashMap::new();
+        for _ in 0..20_000 {
+            let key = rng.below(500) as u64 | ((rng.below(50) as u64) << 32);
+            match rng.below(3) {
+                0 => {
+                    let v = rng.next_u32();
+                    ours.insert(key, v);
+                    theirs.insert(key, v);
+                }
+                1 => {
+                    assert_eq!(ours.remove(key), theirs.remove(&key), "remove {key}");
+                }
+                _ => {
+                    assert_eq!(ours.get(key), theirs.get(&key).copied(), "get {key}");
+                }
+            }
+            assert_eq!(ours.len(), theirs.len());
+        }
+        for (&k, &v) in &theirs {
+            assert_eq!(ours.get(k), Some(v));
+        }
+    }
+}

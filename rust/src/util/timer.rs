@@ -1,0 +1,97 @@
+//! Minimal timing helpers for the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// Accumulating stopwatch: start/stop around the measured region,
+/// repeatedly; read the total.
+#[derive(Debug)]
+pub struct Stopwatch {
+    total: Duration,
+    started: Option<Instant>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch {
+            total: Duration::ZERO,
+            started: None,
+        }
+    }
+
+    #[inline]
+    pub fn start(&mut self) {
+        debug_assert!(self.started.is_none(), "stopwatch already running");
+        self.started = Some(Instant::now());
+    }
+
+    #[inline]
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.total += t0.elapsed();
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        match self.started {
+            Some(t0) => self.total + t0.elapsed(),
+            None => self.total,
+        }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn reset(&mut self) {
+        self.total = Duration::ZERO;
+        self.started = None;
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_across_start_stop() {
+        let mut sw = Stopwatch::new();
+        sw.start();
+        std::thread::sleep(Duration::from_millis(5));
+        sw.stop();
+        let t1 = sw.elapsed();
+        assert!(t1 >= Duration::from_millis(4));
+        sw.start();
+        std::thread::sleep(Duration::from_millis(5));
+        sw.stop();
+        assert!(sw.elapsed() > t1);
+    }
+
+    #[test]
+    fn reset_zeroes() {
+        let mut sw = Stopwatch::new();
+        sw.start();
+        sw.stop();
+        sw.reset();
+        assert_eq!(sw.elapsed(), Duration::ZERO);
+    }
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, secs) = time_it(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

@@ -1,0 +1,81 @@
+//! CLI integration: drive the `tmi` binary end-to-end.
+
+use std::process::Command;
+
+fn tmi() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_tmi"))
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let out = tmi().output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("usage:"));
+}
+
+#[test]
+fn unknown_command_fails() {
+    let out = tmi().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn train_eval_roundtrip() {
+    let model = std::env::temp_dir().join(format!("tmi-cli-{}.tm", std::process::id()));
+    let out = tmi()
+        .args([
+            "train", "--dataset", "mnist", "--samples", "150", "--clauses", "100",
+            "--epochs", "2", "--out", model.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "train failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("accuracy"), "stdout: {stdout}");
+
+    let out = tmi()
+        .args([
+            "eval", "--model", model.to_str().unwrap(), "--dataset", "mnist",
+            "--samples", "100",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "eval failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(String::from_utf8_lossy(&out.stdout).contains("accuracy"));
+    std::fs::remove_file(&model).unwrap();
+}
+
+#[test]
+fn work_ratio_reports_stats() {
+    let out = tmi()
+        .args([
+            "work-ratio", "--dataset", "imdb", "--features", "500", "--samples", "80",
+            "--clauses", "60", "--epochs", "1",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "work-ratio failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("work ratio"), "stdout: {stdout}");
+}
+
+#[test]
+fn eval_missing_model_errors() {
+    let out = tmi()
+        .args(["eval", "--model", "/nonexistent/x.tm", "--dataset", "mnist"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}

@@ -1,0 +1,163 @@
+//! Cross-backend equivalence — the paper's implicit correctness claim:
+//! indexed evaluation computes *exactly* what exhaustive evaluation
+//! computes, during inference and throughout training.
+//!
+//! These are property tests driven by the crate's deterministic RNG
+//! (the offline build has no proptest; the loops below shrink nothing
+//! but cover the same invariant space with fixed seeds).
+
+use tsetlin_index::data::synth::{bow, image_dataset, ImageStyle};
+use tsetlin_index::data::Dataset;
+use tsetlin_index::eval::traits::{reference_score, FlipSink};
+use tsetlin_index::eval::{Backend, Evaluator};
+use tsetlin_index::index::IndexedEval;
+use tsetlin_index::tm::bank::{ClauseBank, Flip};
+use tsetlin_index::tm::params::TMParams;
+use tsetlin_index::tm::trainer::Trainer;
+use tsetlin_index::util::{BitVec, Rng};
+
+/// Property: for arbitrary machines and inputs, all three evaluators
+/// agree with the reference semantics (inference + training modes).
+#[test]
+fn property_all_evaluators_match_reference() {
+    let mut rng = Rng::new(2024);
+    for trial in 0..200 {
+        let clauses = 2 * (1 + rng.below(12) as usize);
+        let features = 1 + rng.below(60) as usize;
+        let n_lit = 2 * features;
+        let density = rng.unit_f64() * 0.4;
+        let mut bank = ClauseBank::new(clauses, n_lit);
+        for j in 0..clauses {
+            for k in 0..n_lit {
+                if rng.bern(density) {
+                    bank.set_state(j, k, (rng.below(11) as i8) - 5);
+                }
+            }
+        }
+        let params = TMParams::new(2, clauses, features);
+        let p_true = rng.unit_f64();
+        let lits = BitVec::from_bools(
+            &(0..n_lit).map(|_| rng.bern(p_true)).collect::<Vec<_>>(),
+        );
+        let want_inf = reference_score(&bank, &lits, false);
+        let want_train = reference_score(&bank, &lits, true);
+        for backend in Backend::ALL {
+            let mut ev = backend.make(&params);
+            ev.rebuild(&bank);
+            assert_eq!(
+                ev.score(&bank, &lits),
+                want_inf,
+                "inference {} trial {trial}",
+                backend.name()
+            );
+            let mut out = BitVec::zeros(clauses);
+            assert_eq!(
+                ev.eval_train(&bank, &lits, &mut out),
+                want_train,
+                "training {} trial {trial}",
+                backend.name()
+            );
+        }
+    }
+}
+
+/// Property: the index survives arbitrary flip sequences with all
+/// invariants intact (list/matrix bijection, counts, vote baselines).
+#[test]
+fn property_index_invariants_under_flip_storm() {
+    let mut rng = Rng::new(77);
+    for trial in 0..20 {
+        let clauses = 2 * (2 + rng.below(8) as usize);
+        let features = 2 + rng.below(30) as usize;
+        let n_lit = 2 * features;
+        let mut bank = ClauseBank::new(clauses, n_lit);
+        let params = TMParams::new(2, clauses, features);
+        let mut ev = IndexedEval::new(&params);
+        ev.rebuild(&bank);
+        for _ in 0..3000 {
+            let j = rng.below(clauses as u32) as usize;
+            let k = rng.below(n_lit as u32) as usize;
+            if rng.bern(0.55) {
+                if bank.bump_up(j, k) == Flip::Included {
+                    ev.on_include(j as u32, k as u32, bank.count(j), bank.weight(j));
+                }
+            } else if bank.bump_down(j, k) == Flip::Excluded {
+                ev.on_exclude(j as u32, k as u32, bank.count(j), bank.weight(j));
+            }
+        }
+        ev.index()
+            .check_invariants(&bank)
+            .unwrap_or_else(|e| panic!("trial {trial}: {e}"));
+    }
+}
+
+/// End-to-end: full training runs on realistic workloads produce
+/// bit-identical machines across backends, epoch by epoch.
+fn assert_identical_training(train: &Dataset, total_clauses: usize, epochs: usize) {
+    let params = TMParams::from_total_clauses(train.classes, total_clauses, train.features)
+        .with_threshold(15)
+        .with_s(4.5)
+        .with_seed(99);
+    let mut trainers: Vec<Trainer> = Backend::ALL
+        .iter()
+        .map(|&b| Trainer::new(params.clone(), b))
+        .collect();
+    for epoch in 0..epochs {
+        for tr in trainers.iter_mut() {
+            let mut order_rng = Rng::new(500 + epoch as u64);
+            let order = train.epoch_order(&mut order_rng);
+            tr.train_epoch(train.iter_order(&order));
+        }
+        for i in 0..train.classes {
+            let s0 = trainers[0].tm.bank(i).states();
+            for tr in &trainers[1..] {
+                assert_eq!(
+                    s0,
+                    tr.tm.bank(i).states(),
+                    "epoch {epoch} class {i}: {} diverged from {}",
+                    tr.backend().name(),
+                    trainers[0].backend().name()
+                );
+            }
+        }
+    }
+    for tr in &trainers {
+        tr.check_invariants().unwrap();
+    }
+}
+
+#[test]
+fn training_identical_on_image_workload() {
+    let train = image_dataset(ImageStyle::Digits, 4, 150, 2, 31);
+    assert_identical_training(&train, 80, 3);
+}
+
+#[test]
+fn training_identical_on_bow_workload() {
+    let train = bow(800, 120, 32);
+    assert_identical_training(&train, 60, 3);
+}
+
+/// Inference agreement on trained (not random) machines — clause
+/// structure after training is adversarial in its own way (correlated
+/// literals, empty clauses, saturated TAs).
+#[test]
+fn trained_machine_inference_agreement() {
+    let all = image_dataset(ImageStyle::Fashion, 3, 260, 1, 33);
+    let train = all.slice(0, 200);
+    let test = all.slice(200, 260);
+    let params = TMParams::from_total_clauses(3, 90, train.features).with_seed(5);
+    let mut tr = Trainer::new(params, Backend::Indexed);
+    let mut order_rng = Rng::new(1);
+    for _ in 0..4 {
+        let order = train.epoch_order(&mut order_rng);
+        tr.train_epoch(train.iter_order(&order));
+    }
+    let mut naive = Trainer::from_machine(tr.tm.clone(), Backend::Naive);
+    let mut packed = Trainer::from_machine(tr.tm.clone(), Backend::BitPacked);
+    for (lits, _) in test.iter() {
+        let s = tr.scores(lits);
+        assert_eq!(s, naive.scores(lits));
+        assert_eq!(s, packed.scores(lits));
+    }
+}

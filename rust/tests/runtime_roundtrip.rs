@@ -1,0 +1,219 @@
+//! Runtime round-trip: the AOT-compiled XLA artifact (Layers 1/2) must
+//! score batches bit-identically to the Rust evaluators (Layer 3).
+//!
+//! Requires `make artifacts`; tests skip (with a notice) when
+//! `artifacts/manifest.json` is absent so `cargo test` stays green on a
+//! fresh checkout.
+
+use tsetlin_index::data::synth::{image_dataset, ImageStyle};
+use tsetlin_index::eval::Backend;
+use tsetlin_index::runtime::{Manifest, Runtime};
+use tsetlin_index::tm::io::DenseModel;
+use tsetlin_index::tm::params::TMParams;
+use tsetlin_index::tm::trainer::Trainer;
+use tsetlin_index::util::Rng;
+
+const FEATURES: usize = 784;
+const CLAUSES_TOTAL: usize = 1280;
+const CLASSES: usize = 10;
+
+fn artifacts() -> Option<Manifest> {
+    match Manifest::load("artifacts") {
+        Ok(m) => Some(m),
+        Err(_) => {
+            eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+fn trained_model() -> Trainer {
+    let all = image_dataset(ImageStyle::Digits, CLASSES, 700, 1, 42);
+    let train = all.slice(0, 600);
+    let params = TMParams::from_total_clauses(CLASSES, CLAUSES_TOTAL, FEATURES)
+        .with_threshold(20)
+        .with_s(5.0)
+        .with_seed(8);
+    let mut tr = Trainer::new(params, Backend::Indexed);
+    let mut order_rng = Rng::new(3);
+    for _ in 0..2 {
+        let order = train.epoch_order(&mut order_rng);
+        tr.train_epoch(train.iter_order(&order));
+    }
+    tr
+}
+
+#[test]
+fn manifest_lists_expected_variants() {
+    let Some(m) = artifacts() else { return };
+    assert!(m.by_name("tm_b32_f784_c1280_m10").is_some());
+    assert!(m.by_name("tm_b1_f784_c1280_m10").is_some());
+    let v = m.pick(32, FEATURES, CLAUSES_TOTAL, CLASSES).unwrap();
+    assert_eq!(v.batch, 32);
+}
+
+#[test]
+fn xla_scores_match_cpu_exactly() {
+    let Some(manifest) = artifacts() else { return };
+    let mut tr = trained_model();
+    let dense = DenseModel::from_tm(&tr.tm);
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let meta = manifest
+        .pick(32, FEATURES, CLAUSES_TOTAL, CLASSES)
+        .unwrap()
+        .clone();
+    let exe = rt.load_artifact(&manifest.hlo_path(&meta), meta).unwrap();
+    let prepared = rt.prepare_model(&exe, &dense).unwrap();
+
+    let all = image_dataset(ImageStyle::Digits, CLASSES, 96, 1, 77);
+    let n_lit = 2 * FEATURES;
+    for chunk_start in (0..96).step_by(32) {
+        let rows = 32usize;
+        let mut lits = vec![0f32; rows * n_lit];
+        for b in 0..rows {
+            for k in all.literals(chunk_start + b).iter_ones() {
+                lits[b * n_lit + k] = 1.0;
+            }
+        }
+        let fwd = exe.run(&rt, &prepared, &lits, rows).unwrap();
+        for b in 0..rows {
+            let want = tr.scores(all.literals(chunk_start + b));
+            for (i, &w) in want.iter().enumerate() {
+                assert_eq!(
+                    fwd.scores[b * CLASSES + i],
+                    w as f32,
+                    "row {b} class {i}"
+                );
+            }
+            // prediction consistent with CPU argmax
+            assert_eq!(
+                fwd.predictions[b] as usize,
+                tr.predict(all.literals(chunk_start + b)),
+                "row {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn short_batches_are_padded_and_truncated() {
+    let Some(manifest) = artifacts() else { return };
+    let mut tr = trained_model();
+    let dense = DenseModel::from_tm(&tr.tm);
+    let rt = Runtime::cpu().unwrap();
+    let meta = manifest
+        .pick(32, FEATURES, CLAUSES_TOTAL, CLASSES)
+        .unwrap()
+        .clone();
+    let exe = rt.load_artifact(&manifest.hlo_path(&meta), meta).unwrap();
+    let prepared = rt.prepare_model(&exe, &dense).unwrap();
+
+    let all = image_dataset(ImageStyle::Digits, CLASSES, 5, 1, 78);
+    let n_lit = 2 * FEATURES;
+    let rows = 5usize;
+    let mut lits = vec![0f32; rows * n_lit];
+    for b in 0..rows {
+        for k in all.literals(b).iter_ones() {
+            lits[b * n_lit + k] = 1.0;
+        }
+    }
+    let fwd = exe.run(&rt, &prepared, &lits, rows).unwrap();
+    assert_eq!(fwd.predictions.len(), rows);
+    assert_eq!(fwd.scores.len(), rows * CLASSES);
+    for b in 0..rows {
+        assert_eq!(fwd.predictions[b] as usize, tr.predict(all.literals(b)));
+    }
+}
+
+#[test]
+fn unfused_variant_agrees_with_fused() {
+    let Some(manifest) = artifacts() else { return };
+    let Some(unfused) = manifest.by_name("tm_b32_f784_c1280_m10_unfused") else {
+        eprintln!("SKIP: unfused variant not in manifest");
+        return;
+    };
+    let tr = trained_model();
+    let dense = DenseModel::from_tm(&tr.tm);
+    let rt = Runtime::cpu().unwrap();
+    let fused_meta = manifest.by_name("tm_b32_f784_c1280_m10").unwrap().clone();
+    let fused = rt
+        .load_artifact(&manifest.hlo_path(&fused_meta), fused_meta)
+        .unwrap();
+    let unfused_exe = rt
+        .load_artifact(&manifest.hlo_path(unfused), unfused.clone())
+        .unwrap();
+
+    let all = image_dataset(ImageStyle::Digits, CLASSES, 32, 1, 79);
+    let n_lit = 2 * FEATURES;
+    let mut lits = vec![0f32; 32 * n_lit];
+    for b in 0..32 {
+        for k in all.literals(b).iter_ones() {
+            lits[b * n_lit + k] = 1.0;
+        }
+    }
+    let a = fused.run_unprepared(&rt, &dense, &lits, 32).unwrap();
+    let b = unfused_exe.run_unprepared(&rt, &dense, &lits, 32).unwrap();
+    assert_eq!(a.scores, b.scores);
+    assert_eq!(a.predictions, b.predictions);
+}
+
+#[test]
+fn weighted_model_scores_match_through_xla() {
+    // The same artifact serves weighted machines: ±weight rides in the
+    // polarity matrix (DenseModel::from_tm), no recompilation needed.
+    let Some(manifest) = artifacts() else { return };
+    let all = image_dataset(ImageStyle::Digits, CLASSES, 500, 1, 52);
+    let params = TMParams::from_total_clauses(CLASSES, CLAUSES_TOTAL, FEATURES)
+        .with_threshold(20)
+        .with_s(5.0)
+        .with_seed(13)
+        .with_weighted(true);
+    let mut tr = Trainer::new(params, Backend::Indexed);
+    let mut order_rng = Rng::new(6);
+    for _ in 0..2 {
+        let order = all.epoch_order(&mut order_rng);
+        tr.train_epoch(all.iter_order(&order));
+    }
+    let has_weights = (0..CLASSES)
+        .any(|i| tr.tm.bank(i).weights().iter().any(|&w| w > 1));
+    assert!(has_weights, "weighted training should move weights");
+
+    let dense = DenseModel::from_tm(&tr.tm);
+    let rt = Runtime::cpu().unwrap();
+    let meta = manifest
+        .pick(32, FEATURES, CLAUSES_TOTAL, CLASSES)
+        .unwrap()
+        .clone();
+    let exe = rt.load_artifact(&manifest.hlo_path(&meta), meta).unwrap();
+    let prepared = rt.prepare_model(&exe, &dense).unwrap();
+    let n_lit = 2 * FEATURES;
+    let mut lits = vec![0f32; 32 * n_lit];
+    for b in 0..32 {
+        for k in all.literals(b).iter_ones() {
+            lits[b * n_lit + k] = 1.0;
+        }
+    }
+    let fwd = exe.run(&rt, &prepared, &lits, 32).unwrap();
+    for b in 0..32 {
+        let want = tr.scores(all.literals(b));
+        for (i, &w) in want.iter().enumerate() {
+            assert_eq!(fwd.scores[b * CLASSES + i], w as f32, "row {b} class {i}");
+        }
+    }
+}
+
+#[test]
+fn shape_mismatch_is_rejected() {
+    let Some(manifest) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let meta = manifest
+        .pick(32, FEATURES, CLAUSES_TOTAL, CLASSES)
+        .unwrap()
+        .clone();
+    let exe = rt.load_artifact(&manifest.hlo_path(&meta), meta).unwrap();
+    // model with the wrong clause count
+    let params = TMParams::new(CLASSES, 64, FEATURES);
+    let tm = tsetlin_index::tm::classifier::MultiClassTM::new(params);
+    let dense = DenseModel::from_tm(&tm);
+    assert!(rt.prepare_model(&exe, &dense).is_err());
+}

@@ -1,0 +1,108 @@
+//! Serving integration: train → persist → reload → coordinate → TCP.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use tsetlin_index::coordinator::server::serve_tcp;
+use tsetlin_index::coordinator::{BatchPolicy, Coordinator, CpuBackend};
+use tsetlin_index::data::synth::{image_dataset, ImageStyle};
+use tsetlin_index::data::Dataset;
+use tsetlin_index::eval::Backend;
+use tsetlin_index::tm::io;
+use tsetlin_index::tm::params::TMParams;
+use tsetlin_index::tm::trainer::Trainer;
+use tsetlin_index::util::Rng;
+
+fn train_and_save(path: &std::path::Path) -> (Dataset, f64) {
+    let all = image_dataset(ImageStyle::Digits, 4, 700, 1, 55);
+    let train = all.slice(0, 500);
+    let test = all.slice(500, 700);
+    let params = TMParams::from_total_clauses(4, 120, train.features)
+        .with_threshold(20)
+        .with_s(5.0);
+    let mut tr = Trainer::new(params, Backend::Indexed);
+    let mut order_rng = Rng::new(2);
+    for _ in 0..4 {
+        let order = train.epoch_order(&mut order_rng);
+        tr.train_epoch(train.iter_order(&order));
+    }
+    let acc = tr.accuracy(test.iter());
+    io::save(&tr.tm, path).unwrap();
+    (test, acc)
+}
+
+#[test]
+fn train_save_reload_serve_over_tcp() {
+    let model_path = std::env::temp_dir().join(format!("tmi-e2e-{}.tm", std::process::id()));
+    let (test, trained_acc) = train_and_save(&model_path);
+    assert!(trained_acc > 0.6, "model should learn, got {trained_acc}");
+
+    // reload and register under two backends
+    let tm = io::load(&model_path).unwrap();
+    let mut coord = Coordinator::new();
+    coord.register(
+        "indexed",
+        Box::new(CpuBackend::new(tm.clone(), Backend::Indexed)),
+        BatchPolicy::default(),
+    );
+    coord.register(
+        "naive",
+        Box::new(CpuBackend::new(tm, Backend::Naive)),
+        BatchPolicy::default(),
+    );
+    assert_eq!(coord.models(), vec!["indexed".to_string(), "naive".to_string()]);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let handle = coord.handle();
+    let server = std::thread::spawn(move || serve_tcp(listener, handle, stop2));
+
+    // drive both routes over one connection; they must agree
+    let conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut conn_w = conn.try_clone().unwrap();
+    let mut served_correct = 0usize;
+    let n = 40usize;
+    for i in 0..n {
+        let bits: String = (0..test.features)
+            .map(|k| if test.literals(i).get(k) { '1' } else { '0' })
+            .collect();
+        let mut replies = Vec::new();
+        for route in ["indexed", "naive"] {
+            conn_w
+                .write_all(format!("{route} {bits}\n").as_bytes())
+                .unwrap();
+            let mut reply = String::new();
+            reader.read_line(&mut reply).unwrap();
+            assert!(reply.starts_with("ok "), "reply: {reply}");
+            replies.push(reply);
+        }
+        assert_eq!(replies[0], replies[1], "routes disagree on sample {i}");
+        let class: usize = replies[0].split_whitespace().nth(1).unwrap().parse().unwrap();
+        if class == test.label(i) {
+            served_correct += 1;
+        }
+    }
+    // served accuracy should track trained accuracy
+    let served_acc = served_correct as f64 / n as f64;
+    assert!(
+        (served_acc - trained_acc).abs() < 0.25,
+        "served {served_acc} vs trained {trained_acc}"
+    );
+
+    let m = coord.metrics("indexed").unwrap();
+    assert_eq!(m.completed, n as u64);
+    assert_eq!(m.errors, 0);
+
+    stop.store(true, Ordering::Relaxed);
+    drop(conn_w);
+    drop(reader);
+    drop(conn);
+    server.join().unwrap().unwrap();
+    coord.shutdown();
+    std::fs::remove_file(&model_path).unwrap();
+}

@@ -1,0 +1,117 @@
+//! Weighted TM (paper ref [8]) integration: the clause-weight extension
+//! composes with the index — weighted vote baselines stay consistent
+//! under training, all backends agree, and fewer weighted clauses match
+//! the accuracy of more unweighted ones (the reference's compression
+//! claim, qualitatively).
+
+use tsetlin_index::data::synth::{bow, image_dataset, ImageStyle};
+use tsetlin_index::data::Dataset;
+use tsetlin_index::eval::Backend;
+use tsetlin_index::tm::io;
+use tsetlin_index::tm::params::TMParams;
+use tsetlin_index::tm::trainer::Trainer;
+use tsetlin_index::util::Rng;
+
+fn train(params: TMParams, backend: Backend, data: &Dataset, epochs: usize) -> Trainer {
+    let mut tr = Trainer::new(params, backend);
+    let mut order_rng = Rng::new(7);
+    for _ in 0..epochs {
+        let order = data.epoch_order(&mut order_rng);
+        tr.train_epoch(data.iter_order(&order));
+    }
+    tr
+}
+
+#[test]
+fn weighted_backends_train_identically() {
+    let data = image_dataset(ImageStyle::Digits, 3, 120, 1, 41);
+    let params = TMParams::from_total_clauses(3, 60, data.features)
+        .with_weighted(true)
+        .with_seed(3);
+    let trainers: Vec<Trainer> = Backend::ALL
+        .iter()
+        .map(|&b| train(params.clone(), b, &data, 3))
+        .collect();
+    for i in 0..3 {
+        let b0 = trainers[0].tm.bank(i);
+        for tr in &trainers[1..] {
+            assert_eq!(b0.states(), tr.tm.bank(i).states(), "class {i} states");
+            assert_eq!(b0.weights(), tr.tm.bank(i).weights(), "class {i} weights");
+        }
+    }
+    for tr in &trainers {
+        tr.check_invariants().unwrap();
+    }
+}
+
+#[test]
+fn weights_actually_move_and_scores_agree() {
+    let data = bow(400, 150, 42);
+    let params = TMParams::from_total_clauses(2, 40, data.features)
+        .with_weighted(true)
+        .with_seed(5);
+    let mut tr = train(params, Backend::Indexed, &data, 5);
+    let moved = (0..2)
+        .flat_map(|i| tr.tm.bank(i).weights().to_vec())
+        .filter(|&w| w > 1)
+        .count();
+    assert!(moved > 0, "training should grow some clause weights");
+    tr.check_invariants().unwrap();
+
+    // weighted scores agree across backends at inference time
+    let mut naive = Trainer::from_machine(tr.tm.clone(), Backend::Naive);
+    let mut packed = Trainer::from_machine(tr.tm.clone(), Backend::BitPacked);
+    for (lits, _) in data.iter().take(50) {
+        let s = tr.scores(lits);
+        assert_eq!(s, naive.scores(lits));
+        assert_eq!(s, packed.scores(lits));
+    }
+}
+
+#[test]
+fn weighted_save_load_preserves_weights() {
+    let data = bow(300, 120, 43);
+    let params = TMParams::from_total_clauses(2, 30, data.features)
+        .with_weighted(true)
+        .with_seed(8);
+    let tr = train(params, Backend::Indexed, &data, 4);
+    let mut buf = Vec::new();
+    io::save_to(&tr.tm, &mut buf).unwrap();
+    let tm2 = io::load_from(&mut buf.as_slice()).unwrap();
+    assert!(tm2.params.weighted);
+    for i in 0..2 {
+        assert_eq!(tr.tm.bank(i).weights(), tm2.bank(i).weights());
+        assert_eq!(tr.tm.bank(i).states(), tm2.bank(i).states());
+    }
+}
+
+#[test]
+fn weighted_matches_unweighted_accuracy_with_fewer_clauses() {
+    // Compression claim (qualitative): a weighted TM with n/2 clauses
+    // should be in the same accuracy band as a plain TM with n.
+    let all = bow(600, 500, 44);
+    let train_set = all.slice(0, 350);
+    let test_set = all.slice(350, 500);
+    let plain = TMParams::from_total_clauses(2, 80, all.features).with_seed(11);
+    let weighted = TMParams::from_total_clauses(2, 40, all.features)
+        .with_weighted(true)
+        .with_seed(11);
+    let mut plain_tr = train(plain, Backend::Indexed, &train_set, 6);
+    let mut weighted_tr = train(weighted, Backend::Indexed, &train_set, 6);
+    let acc_plain = plain_tr.accuracy(test_set.iter());
+    let acc_weighted = weighted_tr.accuracy(test_set.iter());
+    assert!(
+        acc_weighted >= acc_plain - 0.12,
+        "weighted/40 {acc_weighted} vs plain/80 {acc_plain}"
+    );
+}
+
+#[test]
+fn plain_tm_weights_stay_at_one() {
+    let data = image_dataset(ImageStyle::Digits, 2, 80, 1, 45);
+    let params = TMParams::from_total_clauses(2, 20, data.features).with_seed(2);
+    let tr = train(params, Backend::Indexed, &data, 3);
+    for i in 0..2 {
+        assert!(tr.tm.bank(i).weights().iter().all(|&w| w == 1));
+    }
+}
