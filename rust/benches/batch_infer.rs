@@ -1,0 +1,174 @@
+//! Batch inference bench: class-fused engine vs the per-sample,
+//! per-class indexed path, swept over batch size × thread count on an
+//! MNIST-shaped synthetic workload (10 classes, 784 features, 200
+//! clauses/class, learned-length-58 clauses — the §3 Remarks regime).
+//!
+//! Emits a machine-readable report to `BENCH_batch_infer.json` at the
+//! repository root via `bench_harness::report::write_json`, so the
+//! repo's perf trajectory can be tracked PR over PR. Scores are
+//! asserted bit-identical across every path before anything is timed.
+//!
+//! ```bash
+//! cargo bench --bench batch_infer
+//! ```
+
+mod bench_util;
+
+use bench_util::bench;
+use tsetlin_index::bench_harness::report::write_json;
+use tsetlin_index::engine::{BatchScorer, FusedEngine};
+use tsetlin_index::eval::Evaluator;
+use tsetlin_index::index::IndexedEval;
+use tsetlin_index::tm::classifier::MultiClassTM;
+use tsetlin_index::tm::params::TMParams;
+use tsetlin_index::util::{BitVec, Json, Rng};
+
+const CLASSES: usize = 10;
+const CLAUSES_PER_CLASS: usize = 200;
+const FEATURES: usize = 784;
+const CLAUSE_LEN: usize = 58;
+const SAMPLES: usize = 256;
+
+/// MNIST-shaped machine: every clause gets `CLAUSE_LEN` random literals.
+fn make_machine(rng: &mut Rng) -> MultiClassTM {
+    let params = TMParams::new(CLASSES, CLAUSES_PER_CLASS, FEATURES);
+    let n_lit = params.n_literals();
+    let mut tm = MultiClassTM::new(params);
+    for c in 0..CLASSES {
+        let bank = tm.bank_mut(c);
+        for j in 0..CLAUSES_PER_CLASS {
+            let mut placed = 0;
+            while placed < CLAUSE_LEN {
+                let k = rng.below(n_lit as u32) as usize;
+                if !bank.include(j, k) {
+                    bank.set_state(j, k, 1);
+                    placed += 1;
+                }
+            }
+        }
+    }
+    tm
+}
+
+/// Realistic inputs: `[x, ¬x]` literal vectors (exactly half false).
+fn make_samples(rng: &mut Rng) -> Vec<BitVec> {
+    (0..SAMPLES)
+        .map(|_| {
+            let bits: Vec<bool> = (0..FEATURES).map(|_| rng.bern(0.5)).collect();
+            let mut lits = bits.clone();
+            lits.extend(bits.iter().map(|b| !b));
+            BitVec::from_bools(&lits)
+        })
+        .collect()
+}
+
+/// The pre-engine serving path: one falsification walk per class per
+/// sample through `IndexedEval::score`.
+fn score_all_per_class(evals: &mut [IndexedEval], tm: &MultiClassTM, samples: &[BitVec]) -> i64 {
+    let mut acc = 0i64;
+    for lits in samples {
+        for (c, ev) in evals.iter_mut().enumerate() {
+            acc = acc.wrapping_add(ev.score(tm.bank(c), lits) as i64);
+        }
+    }
+    acc
+}
+
+fn main() {
+    let mut rng = Rng::new(0x2004_3188);
+    let tm = make_machine(&mut rng);
+    let samples = make_samples(&mut rng);
+    let params = tm.params.clone();
+
+    // -- correctness gate: every path must be bit-identical -------------
+    let mut evals: Vec<IndexedEval> = (0..CLASSES).map(|_| IndexedEval::new(&params)).collect();
+    for (c, ev) in evals.iter_mut().enumerate() {
+        ev.rebuild(tm.bank(c));
+    }
+    let mut engine = FusedEngine::from_machine(&tm, 1);
+    let fused = engine.score_batch(&samples);
+    for (i, lits) in samples.iter().enumerate() {
+        for (c, ev) in evals.iter_mut().enumerate() {
+            assert_eq!(
+                fused[i][c],
+                ev.score(tm.bank(c), lits),
+                "fused != per-class indexed at sample {i} class {c}"
+            );
+        }
+    }
+    let mut engine4 = FusedEngine::from_machine(&tm, 4);
+    assert_eq!(engine4.score_batch(&samples), fused, "sharding changed scores");
+    println!(
+        "bit-identity: fused/sharded == per-class indexed on {} samples x {} classes\n",
+        SAMPLES, CLASSES
+    );
+
+    // -- baseline: single-sample, per-class indexed ----------------------
+    let (base_min, _) = bench(2, 5, || score_all_per_class(&mut evals, &tm, &samples));
+    let base_rate = SAMPLES as f64 / base_min;
+    println!(
+        "baseline per-class indexed: {:>10.0} samples/s  ({:.2} ms / {} samples)",
+        base_rate,
+        base_min * 1e3,
+        SAMPLES
+    );
+
+    // -- sweep: batch size x thread count --------------------------------
+    let mut results: Vec<Json> = Vec::new();
+    println!("\n{:<28} {:>14} {:>10}", "config", "samples/s", "speedup");
+    for &threads in &[1usize, 2, 4] {
+        let mut eng = FusedEngine::from_machine(&tm, threads);
+        for &batch in &[1usize, 16, 64, 256] {
+            let mut out = vec![0i32; batch.min(SAMPLES) * CLASSES];
+            let (min_s, _) = bench(2, 5, || {
+                let mut acc = 0i64;
+                for chunk in samples.chunks(batch) {
+                    let flat = &mut out[..chunk.len() * CLASSES];
+                    eng.score_batch_into(chunk, flat);
+                    acc = acc.wrapping_add(flat[0] as i64);
+                }
+                acc
+            });
+            let rate = SAMPLES as f64 / min_s;
+            let speedup = rate / base_rate;
+            println!(
+                "{:<28} {:>14.0} {:>9.2}x",
+                format!("fused threads={threads} batch={batch}"),
+                rate,
+                speedup
+            );
+            results.push(Json::obj([
+                ("threads", Json::num(threads as f64)),
+                ("batch", Json::num(batch as f64)),
+                ("samples_per_s", Json::num(rate)),
+                ("speedup_vs_single_sample_indexed", Json::num(speedup)),
+            ]));
+        }
+    }
+
+    let report = Json::obj([
+        ("bench", Json::str("batch_infer")),
+        (
+            "workload",
+            Json::obj([
+                ("shape", Json::str("mnist-synthetic")),
+                ("classes", Json::num(CLASSES as f64)),
+                ("clauses_per_class", Json::num(CLAUSES_PER_CLASS as f64)),
+                ("features", Json::num(FEATURES as f64)),
+                ("clause_len", Json::num(CLAUSE_LEN as f64)),
+                ("samples", Json::num(SAMPLES as f64)),
+            ]),
+        ),
+        (
+            "baseline_single_sample_indexed_samples_per_s",
+            Json::num(base_rate),
+        ),
+        ("bit_identical_to_indexed_eval", Json::Bool(true)),
+        ("results", Json::Arr(results)),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_batch_infer.json");
+    write_json(&path, &report).expect("writing JSON report");
+    println!("\nwrote {}", path.display());
+}

@@ -1,7 +1,9 @@
-//! Markdown / CSV emission for harness results.
+//! Markdown / CSV / JSON emission for harness results.
 
 use std::fmt::Write as _;
 use std::path::Path;
+
+use crate::util::Json;
 
 /// Render a GitHub-flavoured markdown table.
 pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
@@ -29,6 +31,15 @@ pub fn write_csv(path: &Path, headers: &[&str], rows: &[Vec<String>]) -> std::io
         std::fs::create_dir_all(parent)?;
     }
     std::fs::write(path, text)
+}
+
+/// Write a machine-readable JSON report (the repo's `BENCH_*.json`
+/// perf-trajectory files). Creates parent directories as needed.
+pub fn write_json(path: &Path, value: &Json) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, value.to_string())
 }
 
 /// Format a float with 2 decimals (paper table style).
@@ -70,6 +81,16 @@ mod tests {
         write_csv(&p, &["x", "y"], &[vec!["1".into(), "2.5".into()]]).unwrap();
         let text = std::fs::read_to_string(&p).unwrap();
         assert_eq!(text, "x,y\n1,2.5\n");
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn json_report_roundtrip() {
+        let p = std::env::temp_dir().join(format!("tmi-json-{}.json", std::process::id()));
+        let v = Json::obj([("bench", Json::str("batch_infer")), ("x", Json::num(2.5))]);
+        write_json(&p, &v).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(Json::parse(&text).unwrap(), v);
         std::fs::remove_file(&p).unwrap();
     }
 

@@ -9,6 +9,7 @@
 
 use anyhow::Result;
 
+use crate::engine::argmax;
 use crate::eval;
 use crate::runtime::{PreparedModel, Runtime, TmExecutable};
 use crate::tm::classifier::MultiClassTM;
@@ -39,13 +40,20 @@ pub trait Backend {
 
 /// CPU backend: the trained machine + a chosen evaluator.
 ///
-/// With `replicas > 1` the machine is cloned per replica and batches
-/// are split across scoped threads — evaluator scratch (generation
-/// stamps) is per-replica, so replicas never contend. Memory cost is
-/// one machine copy per replica; latency scales with
-/// `batch / replicas` for large batches.
+/// Inference goes through [`Trainer::score_batch_into`]: for the
+/// indexed evaluator that is the class-fused batch engine
+/// ([`crate::engine::FusedEngine`]) — one falsification walk per
+/// sample scores every class, and with `threads > 1` large batches
+/// shard across scoped workers that share the read-only index. This
+/// replaces the old clone-the-whole-machine replica scheme: per-worker
+/// state is a scratch buffer (generation stamps + walk targets)
+/// instead of a full model copy, so memory stays O(model + threads ×
+/// scratch) and warm batches allocate only their output.
 pub struct CpuBackend {
-    replicas: Vec<Trainer>,
+    trainer: Trainer,
+    threads: usize,
+    /// Reusable row-major score matrix (batch × classes).
+    flat: Vec<i32>,
 }
 
 impl CpuBackend {
@@ -53,68 +61,58 @@ impl CpuBackend {
         Self::new_parallel(tm, backend, 1)
     }
 
-    pub fn new_parallel(tm: MultiClassTM, backend: eval::Backend, replicas: usize) -> Self {
-        let replicas = replicas.max(1);
+    /// `threads` inference workers over one shared machine. Only the
+    /// indexed backend shards batches (its fused index is shared
+    /// read-only); the naive/bitpacked ablation backends score
+    /// serially, and `threads` is clamped to 1 for them so the route
+    /// name never advertises parallelism that is not happening.
+    pub fn new_parallel(tm: MultiClassTM, backend: eval::Backend, threads: usize) -> Self {
+        let threads = if backend == eval::Backend::Indexed {
+            threads.max(1)
+        } else {
+            if threads > 1 {
+                eprintln!(
+                    "cpu-{}: batch sharding requires the indexed backend; \
+                     scoring serially (requested {threads} threads)",
+                    backend.name()
+                );
+            }
+            1
+        };
         CpuBackend {
-            replicas: (0..replicas)
-                .map(|_| Trainer::from_machine(tm.clone(), backend))
-                .collect(),
+            trainer: Trainer::from_machine(tm, backend).with_infer_threads(threads),
+            threads,
+            flat: Vec::new(),
         }
-    }
-
-    fn score_one(trainer: &mut Trainer, lits: &BitVec) -> Scored {
-        let scores = trainer.scores(lits);
-        let prediction = scores
-            .iter()
-            .enumerate()
-            .max_by_key(|&(i, &s)| (s, std::cmp::Reverse(i)))
-            .map(|(i, _)| i)
-            .unwrap_or(0);
-        Scored { prediction, scores }
     }
 }
 
 impl Backend for CpuBackend {
     fn infer_batch(&mut self, batch: &[BitVec]) -> Result<Vec<Scored>> {
-        let n_rep = self.replicas.len();
-        // below ~4 items per replica, thread spawn overhead dominates
-        if n_rep == 1 || batch.len() < 4 * n_rep {
-            let tr = &mut self.replicas[0];
-            return Ok(batch.iter().map(|l| Self::score_one(tr, l)).collect());
-        }
-        let chunk = batch.len().div_ceil(n_rep);
-        let mut out: Vec<Vec<Scored>> = Vec::with_capacity(n_rep);
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = self
-                .replicas
-                .iter_mut()
-                .zip(batch.chunks(chunk))
-                .map(|(tr, items)| {
-                    scope.spawn(move || {
-                        items
-                            .iter()
-                            .map(|l| Self::score_one(tr, l))
-                            .collect::<Vec<_>>()
-                    })
-                })
-                .collect();
-            for h in handles {
-                out.push(h.join().expect("replica thread panicked"));
-            }
-        });
-        Ok(out.into_iter().flatten().collect())
+        let m = self.trainer.tm.classes();
+        self.flat.clear();
+        self.flat.resize(batch.len() * m, 0);
+        self.trainer.score_batch_into(batch, &mut self.flat);
+        Ok(self
+            .flat
+            .chunks(m)
+            .map(|scores| Scored {
+                prediction: argmax(scores),
+                scores: scores.to_vec(),
+            })
+            .collect())
     }
 
     fn n_literals(&self) -> usize {
-        self.replicas[0].tm.params.n_literals()
+        self.trainer.tm.params.n_literals()
     }
 
     fn name(&self) -> String {
-        let base = format!("cpu-{}", self.replicas[0].backend().name());
-        if self.replicas.len() == 1 {
+        let base = format!("cpu-{}", self.trainer.backend().name());
+        if self.threads == 1 {
             base
         } else {
-            format!("{base}x{}", self.replicas.len())
+            format!("{base}x{}", self.threads)
         }
     }
 }

@@ -70,6 +70,13 @@ impl Dataset {
         &self.samples[i]
     }
 
+    /// All literal vectors as one slice — the shape batch scorers
+    /// ([`crate::engine::BatchScorer`]) consume without copying.
+    #[inline]
+    pub fn all_literals(&self) -> &[BitVec] {
+        &self.samples
+    }
+
     #[inline]
     pub fn label(&self, i: usize) -> usize {
         self.labels[i]

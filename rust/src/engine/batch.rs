@@ -1,0 +1,282 @@
+//! The batch inference engine and the multi-class batch-scoring
+//! contract.
+//!
+//! [`BatchScorer`] is the serving-facing API: one call scores a whole
+//! batch of literal vectors against every class. [`FusedEngine`] is the
+//! real implementation — a [`FusedIndex`] plus a pool of per-worker
+//! scratches, so repeated batches allocate nothing and large batches
+//! shard across threads. [`crate::tm::trainer::Trainer`] also
+//! implements the trait (routing to a fused engine for the indexed
+//! backend and falling back to per-class evaluation otherwise), which
+//! is what keeps the naive/bitpacked ablation backends usable from the
+//! same serving code path.
+
+use crate::engine::fused::{FusedIndex, FusedScratch, Maintenance};
+use crate::engine::shard::score_batch_sharded;
+use crate::tm::classifier::MultiClassTM;
+use crate::util::BitVec;
+
+/// Below this many samples per worker, thread-spawn overhead dominates
+/// the walk and the engine scores serially.
+pub const MIN_SAMPLES_PER_WORKER: usize = 4;
+
+/// Multi-class batch scoring: the contract the coordinator's CPU
+/// backend and the bench harness serve through.
+///
+/// Scores are **bit-identical** to the per-sample, per-class
+/// [`crate::eval::Evaluator::score`] path — batching and class fusion
+/// are pure evaluation-order changes over exact integer arithmetic.
+pub trait BatchScorer {
+    /// Number of classes `m` (one score per class per sample).
+    fn classes(&self) -> usize;
+
+    /// Literal width `2o` every sample must have.
+    fn n_literals(&self) -> usize;
+
+    /// Score one sample into `out` (`out.len() == classes`).
+    fn scores_into(&mut self, literals: &BitVec, out: &mut [i32]);
+
+    /// Score a batch into the row-major matrix
+    /// `out[i * classes + c]`. The default loops [`Self::scores_into`];
+    /// implementations override it to reuse scratch and shard across
+    /// threads.
+    fn score_batch_into(&mut self, batch: &[BitVec], out: &mut [i32]) {
+        let m = self.classes();
+        assert_eq!(out.len(), batch.len() * m, "output matrix shape mismatch");
+        for (lits, row) in batch.iter().zip(out.chunks_mut(m)) {
+            self.scores_into(lits, row);
+        }
+    }
+
+    /// Convenience allocating form: per-sample score vectors.
+    fn score_batch(&mut self, batch: &[BitVec]) -> Vec<Vec<i32>> {
+        let m = self.classes();
+        let mut flat = vec![0i32; batch.len() * m];
+        self.score_batch_into(batch, &mut flat);
+        flat.chunks(m).map(|row| row.to_vec()).collect()
+    }
+
+    /// Argmax prediction for one sample (ties break to the lowest
+    /// class id, matching [`crate::tm::trainer::Trainer::predict`]).
+    fn predict_into(&mut self, literals: &BitVec, scores: &mut [i32]) -> usize {
+        self.scores_into(literals, scores);
+        argmax(scores)
+    }
+}
+
+/// Lowest-index argmax over class scores.
+#[inline]
+pub fn argmax(scores: &[i32]) -> usize {
+    let mut best = 0usize;
+    let mut best_score = i32::MIN;
+    for (i, &s) in scores.iter().enumerate() {
+        if s > best_score {
+            best_score = s;
+            best = i;
+        }
+    }
+    best
+}
+
+/// The batch inference engine: class-fused index + pooled scratches.
+#[derive(Clone, Debug)]
+pub struct FusedEngine {
+    index: FusedIndex,
+    /// One scratch per potential worker; `scratches[0]` doubles as the
+    /// serial/single-sample scratch.
+    scratches: Vec<FusedScratch>,
+}
+
+impl FusedEngine {
+    /// Snapshot a machine for serving with `threads` workers
+    /// (1 = serial). The index is frozen — rebuild after training.
+    pub fn from_machine(tm: &MultiClassTM, threads: usize) -> Self {
+        Self::with_maintenance(tm, threads, Maintenance::Frozen)
+    }
+
+    /// Build with an explicit maintenance mode
+    /// ([`Maintenance::Maintained`] keeps O(1) flip support).
+    pub fn with_maintenance(tm: &MultiClassTM, threads: usize, maintenance: Maintenance) -> Self {
+        let index = FusedIndex::from_machine(tm, maintenance);
+        let scratches = (0..threads.max(1)).map(|_| index.make_scratch()).collect();
+        FusedEngine { index, scratches }
+    }
+
+    /// Wrap an existing index (tests, incremental maintenance).
+    pub fn from_index(index: FusedIndex, threads: usize) -> Self {
+        let scratches = (0..threads.max(1)).map(|_| index.make_scratch()).collect();
+        FusedEngine { index, scratches }
+    }
+
+    /// Refresh the index from the machine's current banks (after
+    /// training steps) without reallocating the scratch pool.
+    pub fn rebuild(&mut self, tm: &MultiClassTM) {
+        self.index.rebuild(tm);
+        let total = self.index.total_clauses();
+        for s in &mut self.scratches {
+            s.reset(total);
+        }
+    }
+
+    /// The underlying fused index.
+    pub fn index(&self) -> &FusedIndex {
+        &self.index
+    }
+
+    /// Mutable index access (flip maintenance in `Maintained` mode).
+    pub fn index_mut(&mut self) -> &mut FusedIndex {
+        &mut self.index
+    }
+
+    /// Configured worker count.
+    pub fn threads(&self) -> usize {
+        self.scratches.len()
+    }
+
+    /// Change the worker count (resizes the scratch pool).
+    pub fn set_threads(&mut self, threads: usize) {
+        let threads = threads.max(1);
+        let total = self.index.total_clauses();
+        self.scratches.resize_with(threads, || FusedScratch::new(total));
+    }
+}
+
+impl BatchScorer for FusedEngine {
+    fn classes(&self) -> usize {
+        self.index.classes()
+    }
+
+    fn n_literals(&self) -> usize {
+        self.index.n_literals()
+    }
+
+    fn scores_into(&mut self, literals: &BitVec, out: &mut [i32]) {
+        self.index.score_into(&mut self.scratches[0], literals, out);
+    }
+
+    fn score_batch_into(&mut self, batch: &[BitVec], out: &mut [i32]) {
+        let threads = self.scratches.len();
+        let workers = if threads > 1 && batch.len() >= MIN_SAMPLES_PER_WORKER * threads {
+            threads
+        } else {
+            1
+        };
+        score_batch_sharded(&self.index, &mut self.scratches[..workers], batch, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::traits::reference_score;
+    use crate::tm::params::TMParams;
+    use crate::util::Rng;
+
+    fn random_machine(rng: &mut Rng) -> MultiClassTM {
+        let mut tm = MultiClassTM::new(TMParams::new(5, 12, 20));
+        for c in 0..5 {
+            let bank = tm.bank_mut(c);
+            for j in 0..12 {
+                for k in 0..40 {
+                    if rng.bern(0.1) {
+                        bank.set_state(j, k, 2);
+                    }
+                }
+            }
+        }
+        tm
+    }
+
+    fn random_batch(rng: &mut Rng, n: usize) -> Vec<BitVec> {
+        (0..n)
+            .map(|_| BitVec::from_bools(&(0..40).map(|_| rng.bern(0.5)).collect::<Vec<_>>()))
+            .collect()
+    }
+
+    #[test]
+    fn engine_batch_matches_reference() {
+        let mut rng = Rng::new(71);
+        let tm = random_machine(&mut rng);
+        let mut eng = FusedEngine::from_machine(&tm, 2);
+        let batch = random_batch(&mut rng, 40);
+        let got = eng.score_batch(&batch);
+        assert_eq!(got.len(), 40);
+        for (i, lits) in batch.iter().enumerate() {
+            for c in 0..5 {
+                assert_eq!(got[i][c], reference_score(tm.bank(c), lits, false));
+            }
+        }
+    }
+
+    #[test]
+    fn serial_and_threaded_engines_agree() {
+        let mut rng = Rng::new(72);
+        let tm = random_machine(&mut rng);
+        let batch = random_batch(&mut rng, 64);
+        let mut serial = FusedEngine::from_machine(&tm, 1);
+        let want = serial.score_batch(&batch);
+        for threads in [2usize, 4, 7] {
+            let mut eng = FusedEngine::from_machine(&tm, threads);
+            assert_eq!(eng.threads(), threads);
+            assert_eq!(eng.score_batch(&batch), want, "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn rebuild_tracks_machine_changes() {
+        let mut rng = Rng::new(73);
+        let mut tm = random_machine(&mut rng);
+        let mut eng = FusedEngine::from_machine(&tm, 2);
+        let batch = random_batch(&mut rng, 8);
+        let _ = eng.score_batch(&batch);
+        // mutate the machine, rebuild, scores must track
+        tm.bank_mut(3).set_state(0, 5, 1);
+        tm.bank_mut(1).set_state(2, 7, 1);
+        eng.rebuild(&tm);
+        for lits in &batch {
+            let mut out = vec![0i32; 5];
+            eng.scores_into(lits, &mut out);
+            for c in 0..5 {
+                assert_eq!(out[c], reference_score(tm.bank(c), lits, false));
+            }
+        }
+    }
+
+    #[test]
+    fn set_threads_reshapes_pool() {
+        let mut rng = Rng::new(74);
+        let tm = random_machine(&mut rng);
+        let mut eng = FusedEngine::from_machine(&tm, 1);
+        eng.set_threads(3);
+        assert_eq!(eng.threads(), 3);
+        let batch = random_batch(&mut rng, 24);
+        let got = eng.score_batch(&batch);
+        for (i, lits) in batch.iter().enumerate() {
+            for c in 0..5 {
+                assert_eq!(got[i][c], reference_score(tm.bank(c), lits, false));
+            }
+        }
+        eng.set_threads(0); // clamps to 1
+        assert_eq!(eng.threads(), 1);
+    }
+
+    #[test]
+    fn argmax_breaks_ties_low() {
+        assert_eq!(argmax(&[3, 7, 7, 1]), 1);
+        assert_eq!(argmax(&[-5]), 0);
+        assert_eq!(argmax(&[]), 0);
+    }
+
+    #[test]
+    fn predict_into_matches_scores() {
+        let mut rng = Rng::new(75);
+        let tm = random_machine(&mut rng);
+        let mut eng = FusedEngine::from_machine(&tm, 1);
+        let batch = random_batch(&mut rng, 10);
+        let mut scores = vec![0i32; 5];
+        for lits in &batch {
+            let p = eng.predict_into(lits, &mut scores);
+            assert_eq!(p, argmax(&scores));
+        }
+    }
+}

@@ -1,0 +1,597 @@
+//! Class-fused clause index: one falsification walk per sample knocks
+//! out clauses of *every* class at once.
+//!
+//! The per-class [`crate::index::ClassIndex`] pays the falsification
+//! walk once per class per sample: the same false-literal enumeration
+//! runs `m` times and each class chases its own inclusion lists. The
+//! fused index concatenates all classes' lists into one CSR-style
+//! layout over a **global clause-id space**
+//!
+//! ```text
+//! gid = class * clauses_per_class + local_id
+//! ```
+//!
+//! so row `L_k` holds every clause (of every class) that includes
+//! literal `k`. A single walk over a sample's false non-empty literals
+//! then subtracts each falsified clause's vote from its class's
+//! accumulator — `m` class scores from one pass. Because
+//! `clauses_per_class` is even, `gid` parity equals local parity and
+//! [`ClauseBank::polarity`] applies to global ids unchanged.
+//!
+//! Maintenance is the paper's O(1) insertion/deletion algebra on the
+//! same [`ListStore`]/[`PositionStore`] pair the per-class index uses;
+//! [`FusedIndex`] implements [`FlipSink`] (with global clause ids) so a
+//! training loop can keep it live. Serving snapshots skip the position
+//! matrix entirely ([`Maintenance::Frozen`]) — inference never deletes,
+//! and the matrix is the index's dominant memory cost.
+
+use crate::eval::traits::FlipSink;
+use crate::index::liststore::ListStore;
+use crate::index::position::PositionStore;
+use crate::tm::bank::ClauseBank;
+use crate::tm::classifier::MultiClassTM;
+use crate::tm::params::TMParams;
+use crate::util::BitVec;
+
+/// Does the index carry the position matrix needed for O(1) deletes?
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Maintenance {
+    /// Read-only inference snapshot: no position matrix, flips panic.
+    /// Rebuild (or construct a fresh index) after training steps.
+    Frozen,
+    /// Full paper-style maintenance: O(1) insert/delete via the
+    /// position matrix; accepts [`FlipSink`] events with global ids.
+    Maintained,
+}
+
+/// Per-global-clause constants read on the knock-out hot path: the
+/// signed weighted vote and the owning class, packed together so one
+/// cache line serves 8 clauses.
+#[derive(Clone, Copy, Debug)]
+struct ClauseMeta {
+    vote: i32,
+    class: u32,
+}
+
+/// The fused index: all classes' inclusion lists in one global-id CSR
+/// layout, plus per-class vote baselines.
+#[derive(Clone, Debug)]
+pub struct FusedIndex {
+    classes: usize,
+    clauses_per_class: usize,
+    n_literals: usize,
+    /// `L_k` rows over global clause ids.
+    lists: ListStore,
+    /// `M[gid][k]` — only in [`Maintenance::Maintained`] mode.
+    pos: Option<PositionStore>,
+    /// Literals whose global list is non-empty (walk skip mask).
+    nonempty: BitVec,
+    /// Per-class weighted vote sum over non-empty clauses — the
+    /// all-true inference score before any falsification.
+    vote_alive: Vec<i32>,
+    /// Per-global-clause vote + class.
+    meta: Vec<ClauseMeta>,
+}
+
+/// Prefetch the cache line at `p` (no-op off x86_64).
+#[inline(always)]
+fn prefetch(p: *const u32) {
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        core::arch::x86_64::_mm_prefetch(p as *const i8, core::arch::x86_64::_MM_HINT_T0);
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = p;
+}
+
+impl FusedIndex {
+    /// Empty index for a fresh machine.
+    pub fn new(params: &TMParams, maintenance: Maintenance) -> Self {
+        let total = params.total_clauses();
+        let n_lit = params.n_literals();
+        FusedIndex {
+            classes: params.classes,
+            clauses_per_class: params.clauses_per_class,
+            n_literals: n_lit,
+            lists: ListStore::auto(total, n_lit),
+            pos: match maintenance {
+                Maintenance::Maintained => Some(PositionStore::auto(total, n_lit)),
+                Maintenance::Frozen => None,
+            },
+            nonempty: BitVec::zeros(n_lit),
+            vote_alive: vec![0; params.classes],
+            meta: (0..total)
+                .map(|g| ClauseMeta {
+                    vote: ClauseBank::polarity(g),
+                    class: (g / params.clauses_per_class) as u32,
+                })
+                .collect(),
+        }
+    }
+
+    /// Build from a trained machine.
+    pub fn from_machine(tm: &MultiClassTM, maintenance: Maintenance) -> Self {
+        let mut idx = FusedIndex::new(&tm.params, maintenance);
+        idx.rebuild(tm);
+        idx
+    }
+
+    /// Rebuild all derived state from the machine's banks.
+    pub fn rebuild(&mut self, tm: &MultiClassTM) {
+        let params = &tm.params;
+        assert_eq!(params.classes, self.classes);
+        assert_eq!(params.clauses_per_class, self.clauses_per_class);
+        let total = params.total_clauses();
+        let n_lit = params.n_literals();
+        self.lists = ListStore::auto(total, n_lit);
+        if self.pos.is_some() {
+            self.pos = Some(PositionStore::auto(total, n_lit));
+        }
+        self.nonempty = BitVec::zeros(n_lit);
+        self.vote_alive = vec![0; self.classes];
+        for c in 0..self.classes {
+            let bank = tm.bank(c);
+            for j in 0..bank.clauses() {
+                let gid = self.global_id(c, j);
+                self.meta[gid as usize] = ClauseMeta {
+                    vote: bank.vote(j),
+                    class: c as u32,
+                };
+                if bank.count(j) > 0 {
+                    self.vote_alive[c] += bank.vote(j);
+                }
+                for k in bank.included_literals(j) {
+                    let p = self.lists.push(k, gid);
+                    if let Some(pos) = &mut self.pos {
+                        pos.set(gid, k as u32, p);
+                    }
+                    if p == 0 {
+                        self.nonempty.set(k);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Global clause id of `(class, local clause)`.
+    #[inline]
+    pub fn global_id(&self, class: usize, j: usize) -> u32 {
+        (class * self.clauses_per_class + j) as u32
+    }
+
+    #[inline]
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    #[inline]
+    pub fn clauses_per_class(&self) -> usize {
+        self.clauses_per_class
+    }
+
+    #[inline]
+    pub fn total_clauses(&self) -> usize {
+        self.classes * self.clauses_per_class
+    }
+
+    #[inline]
+    pub fn n_literals(&self) -> usize {
+        self.n_literals
+    }
+
+    /// Per-class all-true vote baselines.
+    pub fn vote_alive(&self) -> &[i32] {
+        &self.vote_alive
+    }
+
+    /// The global inclusion list of literal `k`.
+    #[inline]
+    pub fn list(&self, k: usize) -> &[u32] {
+        self.lists.row(k)
+    }
+
+    pub fn is_maintained(&self) -> bool {
+        self.pos.is_some()
+    }
+
+    /// Approximate resident bytes (capacity diagnostics).
+    pub fn footprint_bytes(&self) -> usize {
+        self.lists.footprint_bytes()
+            + self.pos.as_ref().map_or(0, |p| p.footprint_bytes())
+            + self.meta.len() * std::mem::size_of::<ClauseMeta>()
+    }
+
+    fn pos_mut(&mut self) -> &mut PositionStore {
+        self.pos
+            .as_mut()
+            .expect("frozen FusedIndex cannot accept flips; build with Maintenance::Maintained")
+    }
+
+    /// O(1) insertion (TA flipped exclude -> include), global clause id.
+    pub fn insert(&mut self, gid: u32, k: u32, new_count: u32, weight: u32) {
+        if let Some(p) = &self.pos {
+            debug_assert!(p.get(gid, k).is_none(), "duplicate insert ({gid},{k})");
+        }
+        let p = self.lists.push(k as usize, gid);
+        self.pos_mut().set(gid, k, p);
+        if p == 0 {
+            self.nonempty.set(k as usize);
+        }
+        if new_count == 1 {
+            let class = self.meta[gid as usize].class as usize;
+            self.vote_alive[class] += ClauseBank::polarity(gid as usize) * weight as i32;
+        }
+    }
+
+    /// O(1) deletion by swap-with-last, global clause id.
+    pub fn delete(&mut self, gid: u32, k: u32, new_count: u32, weight: u32) {
+        let p = self
+            .pos_mut()
+            .remove(gid, k)
+            .expect("delete of unindexed (clause, literal)");
+        if let Some(moved) = self.lists.swap_remove(k as usize, p) {
+            self.pos_mut().set(moved, k, p);
+        }
+        if self.lists.lens()[k as usize] == 0 {
+            self.nonempty.clear(k as usize);
+        }
+        if new_count == 0 {
+            let class = self.meta[gid as usize].class as usize;
+            self.vote_alive[class] -= ClauseBank::polarity(gid as usize) * weight as i32;
+        }
+    }
+
+    /// Weight change of global clause `gid` (weighted TMs).
+    pub fn weight_changed(&mut self, gid: u32, delta: i32, nonempty: bool) {
+        let d = ClauseBank::polarity(gid as usize) * delta;
+        let m = &mut self.meta[gid as usize];
+        m.vote += d;
+        if nonempty {
+            self.vote_alive[m.class as usize] += d;
+        }
+    }
+
+    /// Iterate the indices of FALSE literals whose global list is
+    /// non-empty: `(!literals & nonempty)`, word-parallel.
+    #[inline]
+    pub fn walk_false_nonempty<'a>(
+        &'a self,
+        literals: &'a BitVec,
+    ) -> impl Iterator<Item = usize> + 'a {
+        literals
+            .words()
+            .iter()
+            .zip(self.nonempty.words())
+            .enumerate()
+            .flat_map(|(wi, (&lw, &ne))| {
+                // nonempty's tail bits are 0, masking !lw's padding.
+                let mut w = !lw & ne;
+                std::iter::from_fn(move || {
+                    if w == 0 {
+                        return None;
+                    }
+                    let bit = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    Some(wi * 64 + bit)
+                })
+            })
+    }
+
+    /// Fresh scratch sized for this index.
+    pub fn make_scratch(&self) -> FusedScratch {
+        FusedScratch::new(self.total_clauses())
+    }
+
+    /// Score one sample against **all classes** in a single walk,
+    /// writing class `c`'s inference score to `out[c]`.
+    ///
+    /// Bit-identical to running [`crate::index::IndexedEval::score`]
+    /// per class: `out[c] = vote_alive[c] - Σ votes of c's falsified
+    /// non-empty clauses` in exact integer arithmetic.
+    pub fn score_into(&self, scratch: &mut FusedScratch, literals: &BitVec, out: &mut [i32]) {
+        assert_eq!(out.len(), self.classes);
+        assert_eq!(literals.len(), self.n_literals);
+        debug_assert_eq!(scratch.gen.len(), self.total_clauses());
+        out.copy_from_slice(&self.vote_alive);
+        let FusedScratch { gen, cur_gen, walk } = scratch;
+        *cur_gen = cur_gen.wrapping_add(1);
+        if *cur_gen == 0 {
+            // wrapped: stamps from 4 billion evals ago could collide
+            gen.fill(0);
+            *cur_gen = 1;
+        }
+        let stamp = *cur_gen;
+        walk.clear();
+        walk.extend(self.walk_false_nonempty(literals).map(|k| k as u32));
+        const LOOKAHEAD: usize = 8;
+        for (i, &k) in walk.iter().enumerate() {
+            if let Some(&kn) = walk.get(i + LOOKAHEAD) {
+                prefetch(self.lists.row_ptr(kn as usize));
+            }
+            for &gid in self.lists.row(k as usize) {
+                let g = &mut gen[gid as usize];
+                if *g != stamp {
+                    *g = stamp;
+                    let m = self.meta[gid as usize];
+                    out[m.class as usize] -= m.vote;
+                }
+            }
+        }
+    }
+
+    /// Full structural invariant check against the machine (tests).
+    #[doc(hidden)]
+    pub fn check_invariants(&self, tm: &MultiClassTM) -> Result<(), String> {
+        let n = self.clauses_per_class;
+        // 1. every list entry is a real inclusion (and positioned, if
+        //    maintained)
+        for k in 0..self.n_literals {
+            for (p, &gid) in self.lists.row(k).iter().enumerate() {
+                let (c, j) = (gid as usize / n, gid as usize % n);
+                if !tm.bank(c).include(j, k) {
+                    return Err(format!("list {k} holds non-included clause {gid}"));
+                }
+                if let Some(pos) = &self.pos {
+                    if pos.get(gid, k as u32) != Some(p as u32) {
+                        return Err(format!("M[{gid}][{k}] != {p}"));
+                    }
+                }
+            }
+            let listed = self.lists.lens()[k] as usize;
+            if self.nonempty.get(k) != (listed > 0) {
+                return Err(format!("nonempty[{k}] out of sync (len {listed})"));
+            }
+        }
+        // 2. every inclusion is listed, counts and votes agree
+        let mut listed_total = 0usize;
+        for c in 0..self.classes {
+            let bank = tm.bank(c);
+            for j in 0..n {
+                let gid = self.global_id(c, j);
+                if self.meta[gid as usize].vote != bank.vote(j) {
+                    return Err(format!("meta vote of {gid} != bank vote"));
+                }
+                if self.meta[gid as usize].class != c as u32 {
+                    return Err(format!("meta class of {gid} != {c}"));
+                }
+                for k in bank.included_literals(j) {
+                    if !self.lists.row(k).contains(&gid) {
+                        return Err(format!("missing list entry ({gid},{k})"));
+                    }
+                }
+                listed_total += bank.count(j) as usize;
+            }
+            if self.vote_alive[c] != bank.vote_alive() {
+                return Err(format!(
+                    "vote_alive[{c}] {} != bank {}",
+                    self.vote_alive[c],
+                    bank.vote_alive()
+                ));
+            }
+        }
+        let listed: usize = self.lists.lens().iter().map(|&l| l as usize).sum();
+        if listed != listed_total {
+            return Err(format!("listed {listed} != included {listed_total}"));
+        }
+        Ok(())
+    }
+}
+
+impl FlipSink for FusedIndex {
+    /// `j` is a **global** clause id (see [`FusedIndex::global_id`]).
+    #[inline]
+    fn on_include(&mut self, j: u32, k: u32, new_count: u32, weight: u32) {
+        self.insert(j, k, new_count, weight);
+    }
+    #[inline]
+    fn on_exclude(&mut self, j: u32, k: u32, new_count: u32, weight: u32) {
+        self.delete(j, k, new_count, weight);
+    }
+    #[inline]
+    fn on_weight(&mut self, j: u32, delta: i32, nonempty: bool) {
+        self.weight_changed(j, delta, nonempty);
+    }
+}
+
+/// Mutable per-evaluation state, separated from the read-only
+/// [`FusedIndex`] so batch sharding can hand one scratch to each worker
+/// thread while all workers share the index.
+///
+/// The generation-stamp trick deduplicates knock-outs without clearing
+/// a `total_clauses`-sized array per sample: a clause is "already
+/// falsified in this evaluation" iff its stamp equals the current
+/// generation.
+#[derive(Clone, Debug)]
+pub struct FusedScratch {
+    gen: Vec<u32>,
+    cur_gen: u32,
+    /// Reusable walk-target buffer (enables prefetch lookahead).
+    walk: Vec<u32>,
+}
+
+impl FusedScratch {
+    pub fn new(total_clauses: usize) -> Self {
+        FusedScratch {
+            gen: vec![0; total_clauses],
+            cur_gen: 0,
+            walk: Vec::new(),
+        }
+    }
+
+    /// Resize for a rebuilt index (stamps are invalidated).
+    pub fn reset(&mut self, total_clauses: usize) {
+        self.gen.clear();
+        self.gen.resize(total_clauses, 0);
+        self.cur_gen = 0;
+        self.walk.clear();
+    }
+
+    #[doc(hidden)]
+    pub fn force_generation(&mut self, g: u32) {
+        self.cur_gen = g;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::traits::reference_score;
+    use crate::util::Rng;
+
+    fn random_machine(
+        rng: &mut Rng,
+        classes: usize,
+        clauses: usize,
+        features: usize,
+    ) -> MultiClassTM {
+        let mut tm = MultiClassTM::new(TMParams::new(classes, clauses, features));
+        let n_lit = 2 * features;
+        for c in 0..classes {
+            let bank = tm.bank_mut(c);
+            for j in 0..clauses {
+                for k in 0..n_lit {
+                    if rng.bern(0.15) {
+                        bank.set_state(j, k, (rng.below(11) as i8) - 5);
+                    }
+                }
+            }
+        }
+        tm
+    }
+
+    fn random_lits(rng: &mut Rng, n: usize) -> BitVec {
+        BitVec::from_bools(&(0..n).map(|_| rng.bern(0.5)).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn fused_scores_match_reference_per_class() {
+        let mut rng = Rng::new(41);
+        for trial in 0..40 {
+            let tm = random_machine(&mut rng, 3, 8, 15);
+            let idx = FusedIndex::from_machine(&tm, Maintenance::Frozen);
+            let mut scratch = idx.make_scratch();
+            let lits = random_lits(&mut rng, 30);
+            let mut out = vec![0i32; 3];
+            idx.score_into(&mut scratch, &lits, &mut out);
+            for c in 0..3 {
+                assert_eq!(
+                    out[c],
+                    reference_score(tm.bank(c), &lits, false),
+                    "class {c} trial {trial}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_clean_across_samples() {
+        let mut rng = Rng::new(42);
+        let tm = random_machine(&mut rng, 4, 10, 20);
+        let idx = FusedIndex::from_machine(&tm, Maintenance::Frozen);
+        let mut scratch = idx.make_scratch();
+        let mut out = vec![0i32; 4];
+        for _ in 0..50 {
+            let lits = random_lits(&mut rng, 40);
+            idx.score_into(&mut scratch, &lits, &mut out);
+            for c in 0..4 {
+                assert_eq!(out[c], reference_score(tm.bank(c), &lits, false));
+            }
+        }
+    }
+
+    #[test]
+    fn generation_wraparound_is_safe() {
+        let mut rng = Rng::new(43);
+        let tm = random_machine(&mut rng, 2, 6, 12);
+        let idx = FusedIndex::from_machine(&tm, Maintenance::Frozen);
+        let mut scratch = idx.make_scratch();
+        scratch.force_generation(u32::MAX - 2);
+        let lits = random_lits(&mut rng, 24);
+        let want: Vec<i32> = (0..2)
+            .map(|c| reference_score(tm.bank(c), &lits, false))
+            .collect();
+        let mut out = vec![0i32; 2];
+        for _ in 0..6 {
+            idx.score_into(&mut scratch, &lits, &mut out);
+            assert_eq!(out, want);
+        }
+    }
+
+    #[test]
+    fn all_true_input_gives_vote_alive_per_class() {
+        let mut rng = Rng::new(44);
+        let tm = random_machine(&mut rng, 3, 8, 10);
+        let idx = FusedIndex::from_machine(&tm, Maintenance::Frozen);
+        let mut scratch = idx.make_scratch();
+        let mut out = vec![0i32; 3];
+        idx.score_into(&mut scratch, &BitVec::ones(20), &mut out);
+        assert_eq!(out, idx.vote_alive());
+        for c in 0..3 {
+            assert_eq!(out[c], tm.bank(c).vote_alive());
+        }
+    }
+
+    #[test]
+    fn maintained_index_tracks_flip_storm() {
+        use crate::tm::bank::Flip;
+        let mut rng = Rng::new(45);
+        let classes = 3;
+        let clauses = 8;
+        let n_lit = 24;
+        let mut tm = random_machine(&mut rng, classes, clauses, n_lit / 2);
+        let mut idx = FusedIndex::from_machine(&tm, Maintenance::Maintained);
+        for _ in 0..8000 {
+            let c = rng.below(classes as u32) as usize;
+            let j = rng.below(clauses as u32) as usize;
+            let k = rng.below(n_lit as u32) as usize;
+            let gid = idx.global_id(c, j);
+            let bank = tm.bank_mut(c);
+            if rng.bern(0.5) {
+                if bank.bump_up(j, k) == Flip::Included {
+                    let (count, weight) = (bank.count(j), bank.weight(j));
+                    idx.on_include(gid, k as u32, count, weight);
+                }
+            } else if bank.bump_down(j, k) == Flip::Excluded {
+                let (count, weight) = (bank.count(j), bank.weight(j));
+                idx.on_exclude(gid, k as u32, count, weight);
+            }
+        }
+        idx.check_invariants(&tm).unwrap();
+        let mut scratch = idx.make_scratch();
+        let mut out = vec![0i32; classes];
+        let lits = random_lits(&mut rng, n_lit);
+        idx.score_into(&mut scratch, &lits, &mut out);
+        for c in 0..classes {
+            assert_eq!(out[c], reference_score(tm.bank(c), &lits, false));
+        }
+    }
+
+    #[test]
+    fn weight_changes_flow_into_votes() {
+        let mut tm = MultiClassTM::new(TMParams::new(2, 4, 3).with_weighted(true));
+        // class 1, clause 2 (+ polarity): include literal 0, weight 3
+        tm.bank_mut(1).set_state(2, 0, 0);
+        tm.bank_mut(1).set_weight(2, 3);
+        let mut idx = FusedIndex::from_machine(&tm, Maintenance::Maintained);
+        idx.check_invariants(&tm).unwrap();
+        assert_eq!(idx.vote_alive()[1], 3);
+        // +2 weight through the sink
+        tm.bank_mut(1).set_weight(2, 5);
+        let gid = idx.global_id(1, 2);
+        idx.on_weight(gid, 2, true);
+        idx.check_invariants(&tm).unwrap();
+        assert_eq!(idx.vote_alive()[1], 5);
+        let mut scratch = idx.make_scratch();
+        let mut out = vec![0i32; 2];
+        idx.score_into(&mut scratch, &BitVec::ones(6), &mut out);
+        assert_eq!(out, vec![0, 5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "frozen FusedIndex")]
+    fn frozen_index_rejects_flips() {
+        let tm = MultiClassTM::new(TMParams::new(2, 4, 3));
+        let mut idx = FusedIndex::from_machine(&tm, Maintenance::Frozen);
+        idx.on_include(0, 0, 1, 1);
+    }
+}

@@ -1,0 +1,32 @@
+//! Batched, class-fused inference engine.
+//!
+//! The paper's index (see [`crate::index`]) evaluates one class's
+//! clauses by falsification. Serving wants more: score **all classes
+//! for a whole batch** as cheaply as possible. This module supplies
+//! that layer:
+//!
+//! * [`fused`] — [`FusedIndex`]: every class's inclusion lists
+//!   concatenated into one CSR layout over a global clause-id space, so
+//!   a single falsification walk per sample updates all `m` class
+//!   accumulators. O(1) insert/delete is preserved
+//!   ([`Maintenance::Maintained`]); serving snapshots drop the position
+//!   matrix ([`Maintenance::Frozen`]).
+//! * [`batch`] — the [`BatchScorer`] contract (with a loop-`score`
+//!   default so every evaluator backend participates) and
+//!   [`FusedEngine`], which pools per-worker scratch across calls.
+//! * [`shard`] — scoped-thread batch splitting over the shared
+//!   read-only index: per-worker scratch, zero locks, zero model
+//!   copies — replacing the old clone-per-replica serving scheme.
+//!
+//! The decomposition mirrors the class/clause-parallel architecture of
+//! *Massively Parallel and Asynchronous Tsetlin Machine Architecture*
+//! (arXiv 2009.04861) applied to the clause-indexed evaluator of the
+//! source paper (arXiv 2004.03188).
+
+pub mod batch;
+pub mod fused;
+pub mod shard;
+
+pub use batch::{argmax, BatchScorer, FusedEngine};
+pub use fused::{FusedIndex, FusedScratch, Maintenance};
+pub use shard::score_batch_sharded;

@@ -1,0 +1,149 @@
+//! Batch sharding: split a batch across scoped worker threads that
+//! share one read-only [`FusedIndex`].
+//!
+//! This replaces the coordinator's old clone-the-whole-machine replica
+//! scheme for CPU inference. The index is immutable during scoring, so
+//! workers need no locks and no model copies — each worker gets only a
+//! [`FusedScratch`] (generation stamps + walk buffer, a few hundred KB
+//! at paper scale) and a disjoint slice of the output matrix. Memory
+//! cost is `O(workers * total_clauses)` scratch instead of
+//! `O(workers * model)`, and the scratches are pooled by the caller so
+//! steady-state serving allocates nothing.
+
+use crate::engine::fused::{FusedIndex, FusedScratch};
+use crate::util::BitVec;
+
+/// Score `batch` into the row-major `out` matrix
+/// (`out[i * classes + c]` = class `c`'s score for sample `i`),
+/// splitting the batch across one thread per scratch.
+///
+/// `out.len()` must equal `batch.len() * index.classes()`. With a
+/// single scratch (or a single-sample batch) this degrades to the
+/// serial loop with no thread spawn.
+pub fn score_batch_sharded(
+    index: &FusedIndex,
+    scratches: &mut [FusedScratch],
+    batch: &[BitVec],
+    out: &mut [i32],
+) {
+    let m = index.classes();
+    assert_eq!(out.len(), batch.len() * m, "output matrix shape mismatch");
+    assert!(!scratches.is_empty(), "need at least one scratch");
+    let workers = if batch.is_empty() {
+        1
+    } else {
+        scratches.len().min(batch.len())
+    };
+    if workers == 1 {
+        score_chunk(index, &mut scratches[0], batch, out);
+        return;
+    }
+    let chunk = batch.len().div_ceil(workers);
+    let (spawned, last) = scratches[..workers].split_at_mut(workers - 1);
+    std::thread::scope(|scope| {
+        let mut rest_batch = batch;
+        let mut rest_out = out;
+        for scratch in spawned {
+            let take = chunk.min(rest_batch.len());
+            if take == 0 {
+                break;
+            }
+            let (chunk_batch, rb) = rest_batch.split_at(take);
+            let (chunk_out, ro) = std::mem::take(&mut rest_out).split_at_mut(take * m);
+            rest_batch = rb;
+            rest_out = ro;
+            scope.spawn(move || score_chunk(index, scratch, chunk_batch, chunk_out));
+        }
+        // final chunk on the calling thread — it would otherwise idle
+        // in the scope join, wasting one spawn per batch
+        score_chunk(index, &mut last[0], rest_batch, rest_out);
+    });
+}
+
+/// Serial scoring of a chunk (also the per-worker body).
+fn score_chunk(
+    index: &FusedIndex,
+    scratch: &mut FusedScratch,
+    batch: &[BitVec],
+    out: &mut [i32],
+) {
+    let m = index.classes();
+    for (lits, row) in batch.iter().zip(out.chunks_mut(m)) {
+        index.score_into(scratch, lits, row);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::fused::Maintenance;
+    use crate::tm::classifier::MultiClassTM;
+    use crate::tm::params::TMParams;
+    use crate::util::Rng;
+
+    fn setup(rng: &mut Rng) -> (MultiClassTM, FusedIndex) {
+        let mut tm = MultiClassTM::new(TMParams::new(4, 10, 16));
+        for c in 0..4 {
+            let bank = tm.bank_mut(c);
+            for j in 0..10 {
+                for k in 0..32 {
+                    if rng.bern(0.12) {
+                        bank.set_state(j, k, 1);
+                    }
+                }
+            }
+        }
+        let idx = FusedIndex::from_machine(&tm, Maintenance::Frozen);
+        (tm, idx)
+    }
+
+    fn random_batch(rng: &mut Rng, n: usize, n_lit: usize) -> Vec<BitVec> {
+        (0..n)
+            .map(|_| BitVec::from_bools(&(0..n_lit).map(|_| rng.bern(0.5)).collect::<Vec<_>>()))
+            .collect()
+    }
+
+    #[test]
+    fn sharded_matches_serial_across_worker_counts() {
+        let mut rng = Rng::new(91);
+        let (_tm, idx) = setup(&mut rng);
+        let batch = random_batch(&mut rng, 37, 32);
+        let mut serial = vec![0i32; batch.len() * 4];
+        let mut one = vec![idx.make_scratch()];
+        score_batch_sharded(&idx, &mut one, &batch, &mut serial);
+        for workers in [2usize, 3, 4, 8, 64] {
+            let mut scratches: Vec<_> = (0..workers).map(|_| idx.make_scratch()).collect();
+            let mut out = vec![0i32; batch.len() * 4];
+            score_batch_sharded(&idx, &mut scratches, &batch, &mut out);
+            assert_eq!(out, serial, "{workers} workers");
+        }
+    }
+
+    #[test]
+    fn tiny_batches_work() {
+        let mut rng = Rng::new(92);
+        let (tm, idx) = setup(&mut rng);
+        let mut scratches: Vec<_> = (0..4).map(|_| idx.make_scratch()).collect();
+        // empty batch
+        score_batch_sharded(&idx, &mut scratches, &[], &mut []);
+        // single sample
+        let batch = random_batch(&mut rng, 1, 32);
+        let mut out = vec![0i32; 4];
+        score_batch_sharded(&idx, &mut scratches, &batch, &mut out);
+        let want: Vec<i32> = (0..4)
+            .map(|c| crate::eval::traits::reference_score(tm.bank(c), &batch[0], false))
+            .collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn wrong_output_shape_panics() {
+        let mut rng = Rng::new(93);
+        let (_tm, idx) = setup(&mut rng);
+        let batch = random_batch(&mut rng, 2, 32);
+        let mut scratches = vec![idx.make_scratch()];
+        let mut out = vec![0i32; 3];
+        score_batch_sharded(&idx, &mut scratches, &batch, &mut out);
+    }
+}

@@ -4,8 +4,14 @@
 //!   all `2o` TA actions, early-exit on the first falsifying literal.
 //! * [`bitpacked`] — 64-way bit-parallel scan over packed include-masks;
 //!   an "honest modern baseline" ablation the paper does not include.
-//! * The *indexed* evaluator (the paper's contribution) lives in
-//!   [`crate::index`] and implements the same trait.
+//!
+//! Two index-based paths implement the same semantics elsewhere: the
+//! per-class *indexed* evaluator (the paper's contribution, in
+//! [`crate::index`]) implements this module's [`Evaluator`] trait, and
+//! the batched, class-fused engine (in [`crate::engine`]) scores all
+//! classes of a whole batch in one falsification walk per sample. Every
+//! path is bit-identical on the same machine; they differ only in speed
+//! and maintenance cost.
 
 pub mod bitpacked;
 pub mod naive;

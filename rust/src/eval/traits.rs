@@ -38,6 +38,20 @@ pub trait Evaluator: FlipSink {
     /// may use internal scratch (generation stamps).
     fn score(&mut self, bank: &ClauseBank, literals: &BitVec) -> i32;
 
+    /// Inference-mode scores for a batch of samples, one entry per
+    /// sample. The default loops [`Evaluator::score`], so every backend
+    /// participates in the batch serving path; index-based
+    /// implementations can override it to reuse walk scratch across the
+    /// batch. Must be element-wise identical to calling `score` per
+    /// sample. (The class-fused, thread-sharded batch path lives in
+    /// [`crate::engine`]; this hook is the single-class building block.)
+    fn score_batch(&mut self, bank: &ClauseBank, batch: &[BitVec], out: &mut [i32]) {
+        assert_eq!(out.len(), batch.len(), "score_batch output length mismatch");
+        for (slot, literals) in out.iter_mut().zip(batch) {
+            *slot = self.score(bank, literals);
+        }
+    }
+
     /// Training-mode evaluation: fill `out` (length = `bank.clauses()`)
     /// with clause outputs and return the score implied by them.
     fn eval_train(&mut self, bank: &ClauseBank, literals: &BitVec, out: &mut BitVec) -> i32;

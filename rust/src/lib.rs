@@ -18,6 +18,9 @@
 //!   evaluator.
 //! * [`eval`] — baseline evaluators (the paper's exhaustive scan, plus a
 //!   bit-parallel ablation) behind a common trait.
+//! * [`engine`] — the batched, class-fused inference engine: one
+//!   falsification walk per sample scores every class, batches shard
+//!   across threads over a shared read-only index.
 //! * [`data`] — datasets: IDX/MNIST loading, k-threshold binarization,
 //!   calibrated synthetic generators (MNIST-like, Fashion-like, IMDb-like
 //!   bag-of-words).
@@ -33,12 +36,14 @@
 pub mod bench_harness;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod eval;
 pub mod index;
 pub mod runtime;
 pub mod tm;
 pub mod util;
 
+pub use engine::{BatchScorer, FusedEngine};
 pub use eval::Backend;
 pub use tm::classifier::MultiClassTM;
 pub use tm::params::TMParams;

@@ -26,6 +26,7 @@ use tsetlin_index::coordinator::{BatchPolicy, Coordinator, CpuBackend, XlaBacken
 use tsetlin_index::data::mnist::Split;
 use tsetlin_index::data::synth::ImageStyle;
 use tsetlin_index::data::{imdb, mnist, Dataset};
+use tsetlin_index::engine::argmax;
 use tsetlin_index::eval::Backend;
 use tsetlin_index::runtime::{Manifest, Runtime};
 use tsetlin_index::tm::io::{self, DenseModel};
@@ -181,16 +182,39 @@ fn cmd_eval(args: &Args) -> Result<()> {
         .get_or("backend", "indexed")
         .parse()
         .map_err(anyhow::Error::msg)?;
-    let mut trainer = Trainer::from_machine(tm, backend);
+    let threads: usize = args.parse_or("threads", 1)?;
+    let mut trainer = Trainer::from_machine(tm, backend).with_infer_threads(threads);
+    // Batch scoring over the whole set: for the indexed backend this is
+    // the class-fused engine, sharded across --threads workers. Score
+    // width comes from the model — a dataset with more labels than the
+    // model has classes still evaluates (those labels just never match).
+    let m = trainer.tm.classes();
+    let mut flat = vec![0i32; test.len() * m];
     let t0 = std::time::Instant::now();
-    let acc = trainer.accuracy(test.iter());
+    trainer.score_batch_into(test.all_literals(), &mut flat);
+    let correct = flat
+        .chunks(m)
+        .enumerate()
+        .filter(|(i, row)| argmax(row) == test.label(*i))
+        .count();
+    let secs = t0.elapsed().as_secs_f64();
+    let acc = if test.is_empty() {
+        0.0
+    } else {
+        correct as f64 / test.len() as f64
+    };
     println!(
-        "accuracy {:.4} on {} ({} samples) in {:.3}s [{}]",
+        "accuracy {:.4} on {} ({} samples) in {:.3}s [{}{}]",
         acc,
         test.name,
         test.len(),
-        t0.elapsed().as_secs_f64(),
-        backend.name()
+        secs,
+        backend.name(),
+        if threads > 1 {
+            format!(" x{threads}")
+        } else {
+            String::new()
+        }
     );
     Ok(())
 }
@@ -349,11 +373,12 @@ const USAGE: &str = "usage: tmi <train|eval|table|work-ratio|serve|info> [--key 
              --epochs N [--backend naive|bitpacked|indexed] [--out model.tm]
              [--samples N] [--data-dir DIR] [--threshold T] [--s S] [--seed N]
              [--weighted]   (integer clause weights, paper ref [8])
-  eval       --model model.tm --dataset ... [--backend B]
+  eval       --model model.tm --dataset ... [--backend B] [--threads N]
   table      --id 1|2|3 [--scale quick|standard|paper] [--out-dir results/]
   work-ratio --dataset ... --clauses N [--epochs N]
   serve      --model model.tm [--artifacts artifacts/] [--listen host:port]
-             [--parallel N]  (CPU batch parallelism: N machine replicas)
+             [--parallel N]  (inference worker threads sharding batches over
+                              one shared class-fused index; indexed backend)
   info       [--artifacts artifacts/]";
 
 fn main() -> Result<()> {

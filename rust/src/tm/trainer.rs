@@ -8,7 +8,17 @@
 //! order, all backends produce bit-identical machines — the equivalence
 //! tests in `rust/tests/` assert exactly that, which is the paper's
 //! implicit correctness claim for the index.
+//!
+//! Inference (`predict`/`scores`/`accuracy`/`score_batch_into`) for the
+//! **indexed** backend routes through the class-fused batch engine
+//! ([`crate::engine::FusedEngine`]): one falsification walk per sample
+//! scores every class. The engine is a lazily (re)built snapshot —
+//! training marks it dirty instead of paying double index maintenance,
+//! and the next inference call rebuilds it once. The naive/bitpacked
+//! ablation backends keep their per-class scan so backend comparisons
+//! still measure what they claim to. All paths are bit-identical.
 
+use crate::engine::{argmax, BatchScorer, FusedEngine};
 use crate::eval::{Backend, Evaluator};
 use crate::index::{IndexStats, IndexedEval};
 use crate::tm::bank::ClauseBank;
@@ -35,6 +45,14 @@ pub struct Trainer {
     rng: Rng,
     ctx: FeedbackCtx,
     out_scratch: BitVec,
+    /// Class-fused inference engine (indexed backend only), built
+    /// lazily and invalidated by training steps.
+    fused: Option<FusedEngine>,
+    fused_dirty: bool,
+    /// Worker threads the engine shards large batches across.
+    infer_threads: usize,
+    /// Reusable per-class score buffer for `predict`.
+    class_scratch: Vec<i32>,
 }
 
 impl Trainer {
@@ -53,6 +71,10 @@ impl Trainer {
             backend,
             rng,
             tm,
+            fused: None,
+            fused_dirty: false,
+            infer_threads: 1,
+            class_scratch: Vec::new(),
         }
     }
 
@@ -75,6 +97,10 @@ impl Trainer {
             backend,
             rng,
             tm,
+            fused: None,
+            fused_dirty: false,
+            infer_threads: 1,
+            class_scratch: Vec::new(),
         }
     }
 
@@ -82,10 +108,55 @@ impl Trainer {
         self.backend
     }
 
+    /// Set the worker-thread count the fused engine shards large
+    /// inference batches across (1 = serial; only the indexed backend
+    /// uses it).
+    pub fn with_infer_threads(mut self, threads: usize) -> Self {
+        self.set_infer_threads(threads);
+        self
+    }
+
+    /// See [`Trainer::with_infer_threads`].
+    pub fn set_infer_threads(&mut self, threads: usize) {
+        self.infer_threads = threads.max(1);
+        if let Some(engine) = &mut self.fused {
+            engine.set_threads(self.infer_threads);
+        }
+    }
+
+    pub fn infer_threads(&self) -> usize {
+        self.infer_threads
+    }
+
+    /// Drop the cached inference engine. Call after mutating `tm`
+    /// directly (training through the trainer invalidates it itself).
+    pub fn invalidate_engine(&mut self) {
+        self.fused_dirty = true;
+    }
+
+    /// The lazily built class-fused engine (indexed backend): rebuilt
+    /// here iff training dirtied it since the last inference call.
+    fn ensure_fused(&mut self) -> &mut FusedEngine {
+        if self.fused.is_none() {
+            self.fused = Some(FusedEngine::from_machine(&self.tm, self.infer_threads));
+            self.fused_dirty = false;
+        } else if self.fused_dirty {
+            self.fused
+                .as_mut()
+                .expect("fused engine present")
+                .rebuild(&self.tm);
+            self.fused_dirty = false;
+        }
+        self.fused.as_mut().expect("fused engine present")
+    }
+
     /// One full update for a labelled sample: Type I/II on the target
     /// class, then on one uniformly-drawn negative class.
     pub fn train_sample(&mut self, literals: &BitVec, label: usize) -> u64 {
         debug_assert!(label < self.tm.classes());
+        // the fused inference snapshot goes stale; rebuild lazily at the
+        // next inference call instead of paying double maintenance here
+        self.fused_dirty = true;
         let mut updates = self.update_class(label, literals, true);
         let m = self.tm.classes();
         if m > 1 {
@@ -152,25 +223,60 @@ impl Trainer {
         stats
     }
 
-    /// Inference: argmax of per-class scores (eq. 3 / eq. 4).
+    /// Inference: argmax of per-class scores (eq. 3 / eq. 4). Ties
+    /// break to the lowest class id. Indexed backend: one fused walk.
     pub fn predict(&mut self, literals: &BitVec) -> usize {
-        let mut best = 0usize;
-        let mut best_score = i32::MIN;
-        for i in 0..self.tm.classes() {
-            let s = self.evals[i].score(self.tm.bank(i), literals);
-            if s > best_score {
-                best_score = s;
-                best = i;
-            }
-        }
+        let mut buf = std::mem::take(&mut self.class_scratch);
+        buf.clear();
+        buf.resize(self.tm.classes(), 0);
+        self.scores_into(literals, &mut buf);
+        let best = argmax(&buf);
+        self.class_scratch = buf;
         best
     }
 
-    /// Per-class scores (serving path / margin diagnostics).
+    /// Per-class scores (margin diagnostics; serving uses
+    /// [`Trainer::scores_into`] to stay allocation-free).
     pub fn scores(&mut self, literals: &BitVec) -> Vec<i32> {
-        (0..self.tm.classes())
-            .map(|i| self.evals[i].score(self.tm.bank(i), literals))
-            .collect()
+        let mut out = vec![0i32; self.tm.classes()];
+        self.scores_into(literals, &mut out);
+        out
+    }
+
+    /// Per-class scores into a caller buffer (`out.len() == classes`)
+    /// — the allocation-free serving hot path. Indexed backend: one
+    /// class-fused falsification walk; other backends: per-class scan.
+    pub fn scores_into(&mut self, literals: &BitVec, out: &mut [i32]) {
+        assert_eq!(out.len(), self.tm.classes());
+        if self.backend == Backend::Indexed {
+            self.ensure_fused().scores_into(literals, out);
+        } else {
+            for (i, slot) in out.iter_mut().enumerate() {
+                *slot = self.evals[i].score(self.tm.bank(i), literals);
+            }
+        }
+    }
+
+    /// Batch scores into the row-major matrix `out[i * classes + c]`.
+    /// Indexed backend: fused engine with thread sharding (see
+    /// [`Trainer::with_infer_threads`]); other backends: per-class
+    /// [`Evaluator::score_batch`] column sweeps.
+    pub fn score_batch_into(&mut self, batch: &[BitVec], out: &mut [i32]) {
+        let m = self.tm.classes();
+        assert_eq!(out.len(), batch.len() * m, "output matrix shape mismatch");
+        if self.backend == Backend::Indexed {
+            self.ensure_fused().score_batch_into(batch, out);
+        } else {
+            // one class at a time over the whole batch: the evaluator's
+            // per-clause state stays hot across samples
+            let mut col = vec![0i32; batch.len()];
+            for (i, ev) in self.evals.iter_mut().enumerate() {
+                ev.score_batch(self.tm.bank(i), batch, &mut col);
+                for (s, &v) in col.iter().enumerate() {
+                    out[s * m + i] = v;
+                }
+            }
+        }
     }
 
     /// Accuracy over a labelled set.
@@ -223,6 +329,27 @@ impl Trainer {
             }
         }
         Ok(())
+    }
+}
+
+/// Serving-facing batch contract: routes to the fused engine for the
+/// indexed backend, per-class evaluation otherwise (see the inherent
+/// methods of the same names).
+impl BatchScorer for Trainer {
+    fn classes(&self) -> usize {
+        self.tm.classes()
+    }
+
+    fn n_literals(&self) -> usize {
+        self.tm.params.n_literals()
+    }
+
+    fn scores_into(&mut self, literals: &BitVec, out: &mut [i32]) {
+        Trainer::scores_into(self, literals, out);
+    }
+
+    fn score_batch_into(&mut self, batch: &[BitVec], out: &mut [i32]) {
+        Trainer::score_batch_into(self, batch, out);
     }
 }
 
@@ -343,6 +470,68 @@ mod tests {
         let mut tr2 = Trainer::from_machine(tr.tm.clone(), Backend::Naive);
         let after: Vec<usize> = test.iter().map(|(l, _)| tr2.predict(l)).collect();
         assert_eq!(before, after);
+    }
+
+    #[test]
+    fn fused_engine_tracks_training_across_epochs() {
+        // predict/scores interleaved with training: the dirty flag must
+        // rebuild the fused snapshot, keeping it identical to the
+        // per-class naive path at every step.
+        let params = TMParams::new(2, 12, 8).with_threshold(10);
+        let mut indexed = Trainer::new(params.clone(), Backend::Indexed);
+        let mut naive = Trainer::new(params, Backend::Naive);
+        let train = toy_samples(120, 8, 11);
+        let probe = toy_samples(30, 8, 12);
+        for _ in 0..4 {
+            indexed.train_epoch(train.iter().map(|(l, y)| (l, *y)));
+            naive.train_epoch(train.iter().map(|(l, y)| (l, *y)));
+            for (lits, _) in &probe {
+                assert_eq!(indexed.scores(lits), naive.scores(lits));
+                assert_eq!(indexed.predict(lits), naive.predict(lits));
+            }
+        }
+    }
+
+    #[test]
+    fn score_batch_into_matches_scores_for_all_backends() {
+        let params = TMParams::new(2, 10, 8);
+        let train = toy_samples(120, 8, 13);
+        let probe = toy_samples(25, 8, 14);
+        let batch: Vec<BitVec> = probe.iter().map(|(l, _)| l.clone()).collect();
+        for backend in Backend::ALL {
+            let mut tr = Trainer::new(params.clone(), backend);
+            for _ in 0..2 {
+                tr.train_epoch(train.iter().map(|(l, y)| (l, *y)));
+            }
+            let mut flat = vec![0i32; batch.len() * 2];
+            tr.score_batch_into(&batch, &mut flat);
+            for (i, lits) in batch.iter().enumerate() {
+                assert_eq!(
+                    &flat[i * 2..(i + 1) * 2],
+                    tr.scores(lits).as_slice(),
+                    "{} sample {i}",
+                    backend.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn infer_threads_do_not_change_results() {
+        let params = TMParams::new(2, 10, 8);
+        let train = toy_samples(100, 8, 15);
+        let mut tr = Trainer::new(params, Backend::Indexed);
+        for _ in 0..2 {
+            tr.train_epoch(train.iter().map(|(l, y)| (l, *y)));
+        }
+        let batch: Vec<BitVec> = train.iter().take(64).map(|(l, _)| l.clone()).collect();
+        let mut serial = vec![0i32; batch.len() * 2];
+        tr.score_batch_into(&batch, &mut serial);
+        tr.set_infer_threads(4);
+        assert_eq!(tr.infer_threads(), 4);
+        let mut sharded = vec![0i32; batch.len() * 2];
+        tr.score_batch_into(&batch, &mut sharded);
+        assert_eq!(serial, sharded);
     }
 
     #[test]

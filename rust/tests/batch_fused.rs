@@ -1,0 +1,201 @@
+//! Batch / class-fused equivalence — the engine's correctness
+//! contract: `score_batch` must equal per-sample `reference_score` for
+//! every backend and for the fused engine, on arbitrary machines,
+//! through flip storms, and across thread counts.
+//!
+//! Property tests driven by the crate's deterministic RNG (no proptest
+//! in the offline build; fixed seeds cover the same invariant space).
+
+use tsetlin_index::engine::{BatchScorer, FusedEngine, FusedIndex, Maintenance};
+use tsetlin_index::eval::traits::{reference_score, FlipSink};
+use tsetlin_index::eval::{Backend, Evaluator};
+use tsetlin_index::tm::bank::Flip;
+use tsetlin_index::tm::classifier::MultiClassTM;
+use tsetlin_index::tm::params::TMParams;
+use tsetlin_index::tm::trainer::Trainer;
+use tsetlin_index::util::{BitVec, Rng};
+
+fn random_machine(rng: &mut Rng, classes: usize, clauses: usize, features: usize) -> MultiClassTM {
+    let mut tm = MultiClassTM::new(TMParams::new(classes, clauses, features));
+    let n_lit = 2 * features;
+    let density = rng.unit_f64() * 0.35;
+    for c in 0..classes {
+        let bank = tm.bank_mut(c);
+        for j in 0..clauses {
+            for k in 0..n_lit {
+                if rng.bern(density) {
+                    bank.set_state(j, k, (rng.below(11) as i8) - 5);
+                }
+            }
+        }
+    }
+    tm
+}
+
+fn random_batch(rng: &mut Rng, n: usize, n_lit: usize) -> Vec<BitVec> {
+    (0..n)
+        .map(|_| {
+            let p = rng.unit_f64();
+            BitVec::from_bools(&(0..n_lit).map(|_| rng.bern(p)).collect::<Vec<_>>())
+        })
+        .collect()
+}
+
+/// Reference score matrix: per-sample, per-class, straight from the
+/// trait's documented semantics.
+fn reference_matrix(tm: &MultiClassTM, batch: &[BitVec]) -> Vec<Vec<i32>> {
+    batch
+        .iter()
+        .map(|lits| {
+            (0..tm.classes())
+                .map(|c| reference_score(tm.bank(c), lits, false))
+                .collect()
+        })
+        .collect()
+}
+
+/// Property: `Evaluator::score_batch` (the per-class hook every
+/// backend inherits) equals per-sample `reference_score` on random
+/// machines.
+#[test]
+fn property_evaluator_score_batch_matches_reference() {
+    let mut rng = Rng::new(7001);
+    for trial in 0..30 {
+        let classes = 2 + rng.below(3) as usize;
+        let clauses = 2 * (1 + rng.below(8) as usize);
+        let features = 1 + rng.below(40) as usize;
+        let tm = random_machine(&mut rng, classes, clauses, features);
+        let batch = random_batch(&mut rng, 1 + rng.below(20) as usize, 2 * features);
+        let params = tm.params.clone();
+        for backend in Backend::ALL {
+            let mut ev = backend.make(&params);
+            for c in 0..classes {
+                ev.rebuild(tm.bank(c));
+                let mut out = vec![0i32; batch.len()];
+                ev.score_batch(tm.bank(c), &batch, &mut out);
+                for (i, lits) in batch.iter().enumerate() {
+                    assert_eq!(
+                        out[i],
+                        reference_score(tm.bank(c), lits, false),
+                        "{} class {c} sample {i} trial {trial}",
+                        backend.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Property: the fused engine's `score_batch` equals the reference
+/// matrix on random machines, for serial and sharded configurations.
+#[test]
+fn property_fused_score_batch_matches_reference() {
+    let mut rng = Rng::new(7002);
+    for trial in 0..25 {
+        let classes = 2 + rng.below(5) as usize;
+        let clauses = 2 * (1 + rng.below(10) as usize);
+        let features = 1 + rng.below(50) as usize;
+        let tm = random_machine(&mut rng, classes, clauses, features);
+        let batch = random_batch(&mut rng, 1 + rng.below(40) as usize, 2 * features);
+        let want = reference_matrix(&tm, &batch);
+        for threads in [1usize, 3] {
+            let mut eng = FusedEngine::from_machine(&tm, threads);
+            assert_eq!(eng.classes(), classes);
+            assert_eq!(eng.n_literals(), 2 * features);
+            assert_eq!(eng.score_batch(&batch), want, "trial {trial} threads {threads}");
+        }
+    }
+}
+
+/// Property: after a random include/exclude flip storm driven through
+/// the `FlipSink` hooks (the `maintenance_tracks_random_flips`
+/// pattern, fused across classes), the maintained index still scores
+/// exactly like the reference — and its structural invariants hold.
+#[test]
+fn property_fused_index_survives_flip_storms() {
+    let mut rng = Rng::new(7003);
+    for trial in 0..10 {
+        let classes = 2 + rng.below(3) as usize;
+        let clauses = 2 * (2 + rng.below(6) as usize);
+        let features = 2 + rng.below(20) as usize;
+        let n_lit = 2 * features;
+        let mut tm = random_machine(&mut rng, classes, clauses, features);
+        let mut idx = FusedIndex::from_machine(&tm, Maintenance::Maintained);
+        for _ in 0..5000 {
+            let c = rng.below(classes as u32) as usize;
+            let j = rng.below(clauses as u32) as usize;
+            let k = rng.below(n_lit as u32) as usize;
+            let gid = idx.global_id(c, j);
+            let bank = tm.bank_mut(c);
+            if rng.bern(0.55) {
+                if bank.bump_up(j, k) == Flip::Included {
+                    let (count, weight) = (bank.count(j), bank.weight(j));
+                    idx.on_include(gid, k as u32, count, weight);
+                }
+            } else if bank.bump_down(j, k) == Flip::Excluded {
+                let (count, weight) = (bank.count(j), bank.weight(j));
+                idx.on_exclude(gid, k as u32, count, weight);
+            }
+        }
+        idx.check_invariants(&tm)
+            .unwrap_or_else(|e| panic!("trial {trial}: {e}"));
+        let batch = random_batch(&mut rng, 12, n_lit);
+        let want = reference_matrix(&tm, &batch);
+        let mut eng = FusedEngine::from_index(idx, 2);
+        assert_eq!(eng.score_batch(&batch), want, "trial {trial}");
+    }
+}
+
+/// The trainer's serving path (fused engine for the indexed backend,
+/// per-class sweeps otherwise) is bit-identical across backends on a
+/// *trained* machine — the shape the coordinator actually serves.
+#[test]
+fn trained_machine_batch_scores_agree_across_backends() {
+    use tsetlin_index::data::synth::{image_dataset, ImageStyle};
+    let all = image_dataset(ImageStyle::Digits, 4, 220, 1, 77);
+    let train = all.slice(0, 160);
+    let test = all.slice(160, 220);
+    let params = TMParams::from_total_clauses(4, 96, train.features).with_seed(3);
+    let mut indexed = Trainer::new(params, Backend::Indexed);
+    let mut order_rng = Rng::new(9);
+    for _ in 0..3 {
+        let order = train.epoch_order(&mut order_rng);
+        indexed.train_epoch(train.iter_order(&order));
+    }
+    let batch: Vec<BitVec> = (0..test.len()).map(|i| test.literals(i).clone()).collect();
+    let m = 4;
+    let mut fused_flat = vec![0i32; batch.len() * m];
+    indexed.score_batch_into(&batch, &mut fused_flat);
+    for backend in [Backend::Naive, Backend::BitPacked] {
+        let mut tr = Trainer::from_machine(indexed.tm.clone(), backend);
+        let mut flat = vec![0i32; batch.len() * m];
+        tr.score_batch_into(&batch, &mut flat);
+        assert_eq!(flat, fused_flat, "{}", backend.name());
+    }
+    // and the engine agrees with the per-sample reference
+    let want = reference_matrix(&indexed.tm, &batch);
+    for (i, row) in fused_flat.chunks(m).enumerate() {
+        assert_eq!(row, want[i].as_slice(), "sample {i}");
+    }
+}
+
+/// Thread sharding is an implementation detail: any worker count gives
+/// byte-identical output, including degenerate batch sizes.
+#[test]
+fn sharding_is_invisible_in_results() {
+    let mut rng = Rng::new(7005);
+    let tm = random_machine(&mut rng, 6, 14, 30);
+    let mut serial = FusedEngine::from_machine(&tm, 1);
+    for batch_len in [0usize, 1, 3, 7, 64, 130] {
+        let batch = random_batch(&mut rng, batch_len, 60);
+        let want = serial.score_batch(&batch);
+        for threads in [2usize, 4, 9] {
+            let mut eng = FusedEngine::from_machine(&tm, threads);
+            assert_eq!(
+                eng.score_batch(&batch),
+                want,
+                "batch {batch_len} threads {threads}"
+            );
+        }
+    }
+}
