@@ -12,7 +12,7 @@
 //! cargo run --release --example noisy_xor
 //! ```
 
-use tsetlin_index::data::Dataset;
+use tsetlin_index::data::synth::noisy_xor;
 use tsetlin_index::eval::Backend;
 use tsetlin_index::tm::interpret;
 use tsetlin_index::tm::params::TMParams;
@@ -22,25 +22,9 @@ use tsetlin_index::util::Rng;
 const FEATURES: usize = 12; // x0, x1 + 10 distractors
 const NOISE: f64 = 0.15;
 
-fn xor_data(n: usize, noisy: bool, seed: u64) -> Dataset {
-    let mut rng = Rng::new(seed);
-    let mut rows = Vec::with_capacity(n);
-    let mut labels = Vec::with_capacity(n);
-    for _ in 0..n {
-        let bits: Vec<bool> = (0..FEATURES).map(|_| rng.bern(0.5)).collect();
-        let mut y = (bits[0] ^ bits[1]) as usize;
-        if noisy && rng.bern(NOISE) {
-            y = 1 - y;
-        }
-        rows.push(bits);
-        labels.push(y);
-    }
-    Dataset::from_rows("noisy-xor", FEATURES, 2, &rows, labels)
-}
-
 fn main() {
-    let train = xor_data(5000, true, 1);
-    let test = xor_data(2000, false, 2);
+    let train = noisy_xor(FEATURES, 5000, NOISE, 1);
+    let test = noisy_xor(FEATURES, 2000, 0.0, 2);
 
     let params = TMParams::new(2, 20, FEATURES)
         .with_threshold(15)

@@ -1,0 +1,123 @@
+//! Training-epoch bench: the clause-sharded asynchronous parallel
+//! trainer vs the sequential trainer, swept over thread count on two
+//! workloads — noisy XOR (small, feedback-dominated) and an
+//! MNIST-subset-shaped synthetic image problem (10 classes, 784
+//! features, the regime the paper's training tables measure).
+//!
+//! Emits a machine-readable report to `BENCH_train_epoch.json` at the
+//! repository root via `bench_harness::report::write_json`. The
+//! sequential `Trainer` baseline is recorded in the same file
+//! (`threads = 0` rows), starting the training-side perf trajectory.
+//!
+//! ```bash
+//! cargo bench --bench train_epoch
+//! ```
+
+mod bench_util;
+
+use bench_util::bench;
+use tsetlin_index::bench_harness::report::write_json;
+use tsetlin_index::data::synth::{image_dataset, noisy_xor, ImageStyle};
+use tsetlin_index::data::Dataset;
+use tsetlin_index::eval::Backend;
+use tsetlin_index::parallel::ParallelTrainer;
+use tsetlin_index::tm::params::TMParams;
+use tsetlin_index::tm::trainer::Trainer;
+use tsetlin_index::util::Json;
+
+const THREAD_SWEEP: &[usize] = &[1, 2, 4];
+const STALE_WINDOW: usize = 8;
+
+struct Workload {
+    name: &'static str,
+    data: Dataset,
+    params: TMParams,
+}
+
+fn workloads() -> Vec<Workload> {
+    vec![
+        Workload {
+            name: "noisy-xor",
+            data: noisy_xor(12, 4000, 0.15, 1),
+            params: TMParams::new(2, 200, 12).with_threshold(15).with_s(3.9),
+        },
+        Workload {
+            name: "synth-mnist-subset",
+            data: image_dataset(ImageStyle::Digits, 10, 1000, 1, 2),
+            params: TMParams::new(10, 100, 784).with_threshold(25).with_s(6.0),
+        },
+    ]
+}
+
+fn main() {
+    let mut results: Vec<Json> = Vec::new();
+    for w in workloads() {
+        let samples = w.data.len();
+        println!(
+            "\n== {} ({} samples, {} classes, {} clauses/class) ==",
+            w.name, samples, w.params.classes, w.params.clauses_per_class
+        );
+
+        // -- sequential baseline (threads = 0 row) ----------------------
+        let mut seq = Trainer::new(w.params.clone(), Backend::Indexed);
+        seq.train_epoch(w.data.iter()); // warm the banks off the cold start
+        let (seq_min, _) = bench(1, 3, || seq.train_epoch(w.data.iter()).clause_updates);
+        let seq_rate = samples as f64 / seq_min;
+        println!(
+            "{:<26} {:>12.0} samples/s  ({:.1} ms/epoch)",
+            "sequential Trainer",
+            seq_rate,
+            seq_min * 1e3
+        );
+        results.push(Json::obj([
+            ("workload", Json::str(w.name)),
+            ("threads", Json::num(0.0)), // 0 = the sequential baseline
+            ("samples", Json::num(samples as f64)),
+            ("epoch_secs", Json::num(seq_min)),
+            ("samples_per_s", Json::num(seq_rate)),
+            ("speedup_vs_sequential", Json::num(1.0)),
+        ]));
+
+        // -- parallel sweep --------------------------------------------
+        for &threads in THREAD_SWEEP {
+            let mut par =
+                ParallelTrainer::new(w.params.clone(), threads).with_stale_window(STALE_WINDOW);
+            par.train_epoch(w.data.iter());
+            let (min_s, _) = bench(1, 3, || par.train_epoch(w.data.iter()).clause_updates);
+            let rate = samples as f64 / min_s;
+            let speedup = seq_min / min_s;
+            println!(
+                "{:<26} {:>12.0} samples/s  ({:.1} ms/epoch, {:.2}x vs sequential)",
+                format!("parallel threads={threads}"),
+                rate,
+                min_s * 1e3,
+                speedup
+            );
+            par.check_invariants().expect("post-bench invariants");
+            results.push(Json::obj([
+                ("workload", Json::str(w.name)),
+                ("threads", Json::num(threads as f64)),
+                ("stale_window", Json::num(STALE_WINDOW as f64)),
+                ("samples", Json::num(samples as f64)),
+                ("epoch_secs", Json::num(min_s)),
+                ("samples_per_s", Json::num(rate)),
+                ("speedup_vs_sequential", Json::num(speedup)),
+            ]));
+        }
+    }
+
+    let report = Json::obj([
+        ("bench", Json::str("train_epoch")),
+        (
+            "scheme",
+            Json::str("clause-sharded async (stale vote tally, per-shard falsification index)"),
+        ),
+        ("stale_window", Json::num(STALE_WINDOW as f64)),
+        ("results", Json::Arr(results)),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_train_epoch.json");
+    write_json(&path, &report).expect("writing JSON report");
+    println!("\nwrote {}", path.display());
+}

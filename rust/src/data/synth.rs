@@ -149,6 +149,29 @@ pub fn image_dataset(
     Dataset::from_rows(name, levels * PIXELS, classes, &rows, labels)
 }
 
+/// Noisy XOR — the canonical TM benchmark (Granmo 2018), and the
+/// parallel-training reference workload: `y = x0 XOR x1` with
+/// `features - 2` random distractors and labels flipped with
+/// probability `noise`. Non-linearly separable, so a TM must learn the
+/// four minterm clauses through the label noise; `noise = 0.0` gives a
+/// clean test split.
+pub fn noisy_xor(features: usize, samples: usize, noise: f64, seed: u64) -> Dataset {
+    assert!(features >= 2, "noisy XOR needs at least x0, x1");
+    let mut rng = Rng::new(seed ^ 0xab0b_ab0b_ab0b_ab0b);
+    let mut rows = Vec::with_capacity(samples);
+    let mut labels = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let bits: Vec<bool> = (0..features).map(|_| rng.bern(0.5)).collect();
+        let mut y = (bits[0] ^ bits[1]) as usize;
+        if noise > 0.0 && rng.bern(noise) {
+            y = 1 - y;
+        }
+        rows.push(bits);
+        labels.push(y);
+    }
+    Dataset::from_rows("synth-noisy-xor", features, 2, &rows, labels)
+}
+
 /// Two-class Zipf bag-of-words (IMDb stand-in).
 ///
 /// `features` is the vocabulary size (paper: 5k/10k/15k/20k). Each
@@ -251,6 +274,35 @@ mod tests {
             assert_eq!(d.len(), 20);
             assert_eq!(d.classes, 10);
         }
+    }
+
+    #[test]
+    fn noisy_xor_shapes_and_noise() {
+        let clean = noisy_xor(12, 500, 0.0, 7);
+        assert_eq!(clean.features, 12);
+        assert_eq!(clean.classes, 2);
+        assert_eq!(clean.len(), 500);
+        // clean labels are exactly the XOR of the first two features
+        for i in 0..clean.len() {
+            let l = clean.literals(i);
+            assert_eq!(clean.label(i), (l.get(0) ^ l.get(1)) as usize);
+        }
+        // noisy labels disagree at roughly the noise rate
+        let noisy = noisy_xor(12, 4000, 0.2, 7);
+        let flipped = (0..noisy.len())
+            .filter(|&i| {
+                let l = noisy.literals(i);
+                noisy.label(i) != (l.get(0) ^ l.get(1)) as usize
+            })
+            .count();
+        let rate = flipped as f64 / noisy.len() as f64;
+        assert!((rate - 0.2).abs() < 0.03, "flip rate {rate}");
+        // deterministic per seed
+        let again = noisy_xor(12, 4000, 0.2, 7);
+        assert_eq!(
+            (0..noisy.len()).map(|i| noisy.label(i)).collect::<Vec<_>>(),
+            (0..again.len()).map(|i| again.label(i)).collect::<Vec<_>>()
+        );
     }
 
     #[test]

@@ -245,9 +245,15 @@ fn prefetch(p: *const u32) {
 
 impl IndexedEval {
     pub fn new(params: &TMParams) -> Self {
+        Self::with_shape(params.clauses_per_class, params.n_literals())
+    }
+
+    /// Build for an explicit `(clauses, literals)` shape — clause shards
+    /// ([`crate::parallel`]) index fewer clauses than a full class bank.
+    pub fn with_shape(clauses: usize, n_literals: usize) -> Self {
         IndexedEval {
-            index: ClassIndex::new(params.clauses_per_class, params.n_literals()),
-            gen: vec![0; params.clauses_per_class],
+            index: ClassIndex::new(clauses, n_literals),
+            gen: vec![0; clauses],
             cur_gen: 0,
             walk_buf: Vec::new(),
         }

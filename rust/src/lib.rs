@@ -21,6 +21,11 @@
 //! * [`engine`] — the batched, class-fused inference engine: one
 //!   falsification walk per sample scores every class, batches shard
 //!   across threads over a shared read-only index.
+//! * [`parallel`] — clause-sharded asynchronous parallel *training*
+//!   (arXiv 2009.04861 scheme): per-worker clause shards with their own
+//!   O(1)-maintained falsification indexes, a shared atomic vote tally
+//!   read slightly stale, shards reassembled into the global machine
+//!   every epoch.
 //! * [`data`] — datasets: IDX/MNIST loading, k-threshold binarization,
 //!   calibrated synthetic generators (MNIST-like, Fashion-like, IMDb-like
 //!   bag-of-words).
@@ -39,12 +44,14 @@ pub mod data;
 pub mod engine;
 pub mod eval;
 pub mod index;
+pub mod parallel;
 pub mod runtime;
 pub mod tm;
 pub mod util;
 
 pub use engine::{BatchScorer, FusedEngine};
 pub use eval::Backend;
+pub use parallel::ParallelTrainer;
 pub use tm::classifier::MultiClassTM;
 pub use tm::params::TMParams;
 pub use tm::trainer::Trainer;

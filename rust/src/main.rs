@@ -28,11 +28,13 @@ use tsetlin_index::data::synth::ImageStyle;
 use tsetlin_index::data::{imdb, mnist, Dataset};
 use tsetlin_index::engine::argmax;
 use tsetlin_index::eval::Backend;
+use tsetlin_index::parallel::{resolve_threads, ParallelTrainer, DEFAULT_STALE_WINDOW};
 use tsetlin_index::runtime::{Manifest, Runtime};
+use tsetlin_index::tm::classifier::MultiClassTM;
 use tsetlin_index::tm::io::{self, DenseModel};
 use tsetlin_index::tm::params::TMParams;
-use tsetlin_index::tm::trainer::Trainer;
-use tsetlin_index::util::Rng;
+use tsetlin_index::tm::trainer::{EpochStats, Trainer};
+use tsetlin_index::util::{BitVec, Rng};
 
 /// `--key value` / `--flag` argument bag.
 struct Args {
@@ -138,40 +140,90 @@ fn cmd_train(args: &Args) -> Result<()> {
         .with_s(args.parse_or("s", 6.0)?)
         .with_seed(args.parse_or("seed", 42)?)
         .with_weighted(args.has_flag("weighted"));
+    // --threads 0 = every available core; 1 (default) = the sequential
+    // trainer; >= 2 = the clause-sharded parallel trainer.
+    let threads = resolve_threads(args.parse_or("threads", 1)?);
+    let stale_window: usize = args.parse_or("stale-window", DEFAULT_STALE_WINDOW)?;
+    if threads > 1 && backend != Backend::Indexed {
+        bail!(
+            "--threads {} requires the indexed backend: clause shards keep \
+             per-shard falsification indexes (got --backend {})",
+            threads,
+            backend.name()
+        );
+    }
     eprintln!(
-        "training {} epochs on {} ({} samples, {} features, {} classes, {} clauses/class, backend={})",
+        "training {} epochs on {} ({} samples, {} features, {} classes, {} clauses/class, backend={}, threads={})",
         epochs,
         train.name,
         train.len(),
         train.features,
         train.classes,
         params.clauses_per_class,
-        backend.name()
+        backend.name(),
+        threads
     );
-    let mut trainer = Trainer::new(params, backend);
     let mut order_rng = Rng::new(args.parse_or("seed", 42u64)? ^ 0x0def_ace0);
+    let mut trainer = if threads > 1 {
+        AnyTrainer::Par(ParallelTrainer::new(params, threads).with_stale_window(stale_window))
+    } else {
+        AnyTrainer::Seq(Trainer::new(params, backend))
+    };
     for epoch in 0..epochs {
         let order = train.epoch_order(&mut order_rng);
-        let t0 = std::time::Instant::now();
-        trainer.train_epoch(train.iter_order(&order));
-        let train_s = t0.elapsed().as_secs_f64();
+        let stats = trainer.train_epoch(train.iter_order(&order));
         let t0 = std::time::Instant::now();
         let acc = trainer.accuracy(test.iter());
         let test_s = t0.elapsed().as_secs_f64();
         println!(
-            "epoch {:>3}  train {:.2}s  test {:.2}s  accuracy {:.4}  mean-clause-len {:.1}",
+            "epoch {:>3}  train {:.2}s  test {:.2}s  accuracy {:.4}  mean-clause-len {:.1}  {:.0} updates/s",
             epoch + 1,
-            train_s,
+            stats.elapsed.as_secs_f64(),
             test_s,
             acc,
-            trainer.tm.mean_clause_length()
+            trainer.tm().mean_clause_length(),
+            stats.updates_per_sec
         );
     }
     if let Some(out) = args.get("out") {
-        io::save(&trainer.tm, out)?;
+        io::save(trainer.tm(), out)?;
         eprintln!("saved model to {out}");
     }
     Ok(())
+}
+
+/// The `tmi train` trainer: sequential (any backend) or clause-sharded
+/// parallel (indexed). One variant is always live — no unreachable
+/// states to re-prove at each use site.
+enum AnyTrainer {
+    Seq(Trainer),
+    Par(ParallelTrainer),
+}
+
+impl AnyTrainer {
+    fn train_epoch<'a>(
+        &mut self,
+        samples: impl Iterator<Item = (&'a BitVec, usize)>,
+    ) -> EpochStats {
+        match self {
+            AnyTrainer::Seq(t) => t.train_epoch(samples),
+            AnyTrainer::Par(p) => p.train_epoch(samples),
+        }
+    }
+
+    fn accuracy<'a>(&mut self, samples: impl Iterator<Item = (&'a BitVec, usize)>) -> f64 {
+        match self {
+            AnyTrainer::Seq(t) => t.accuracy(samples),
+            AnyTrainer::Par(p) => p.accuracy(samples),
+        }
+    }
+
+    fn tm(&self) -> &MultiClassTM {
+        match self {
+            AnyTrainer::Seq(t) => &t.tm,
+            AnyTrainer::Par(p) => p.tm(),
+        }
+    }
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
@@ -373,6 +425,10 @@ const USAGE: &str = "usage: tmi <train|eval|table|work-ratio|serve|info> [--key 
              --epochs N [--backend naive|bitpacked|indexed] [--out model.tm]
              [--samples N] [--data-dir DIR] [--threshold T] [--s S] [--seed N]
              [--weighted]   (integer clause weights, paper ref [8])
+             [--threads N]  (clause-sharded parallel training; 1 = sequential,
+                             0 = every available core; indexed backend only)
+             [--stale-window N]  (samples between worker syncs, default 8;
+                                  vote sums are read up to N samples stale)
   eval       --model model.tm --dataset ... [--backend B] [--threads N]
   table      --id 1|2|3 [--scale quick|standard|paper] [--out-dir results/]
   work-ratio --dataset ... --clauses N [--epochs N]

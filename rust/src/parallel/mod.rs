@@ -1,0 +1,92 @@
+//! Clause-sharded asynchronous parallel training.
+//!
+//! PR 1 made *inference* multi-core (one fused falsification walk per
+//! sample, batches sharded across threads); this module does the same
+//! for *learning*, following the clause-parallel architecture of
+//! *Massively Parallel and Asynchronous Tsetlin Machine Architecture*
+//! (arXiv 2009.04861) applied to the clause-indexed evaluator of the
+//! source paper (arXiv 2004.03188):
+//!
+//! * **Clauses are sharded, not data.** Each worker owns a contiguous,
+//!   even-aligned clause range of *every* class's bank
+//!   ([`shard::partition_clauses`]), so TA state is worker-private and
+//!   feedback needs no locks. Even alignment keeps the interleaved
+//!   +/− polarity of local ids equal to global ids.
+//! * **Each shard keeps its own falsification index.** A per-class
+//!   [`crate::index::IndexedEval`] over just the shard's clauses,
+//!   maintained through the same O(1) insert/delete flip hooks as the
+//!   sequential trainer — the paper's index maintenance is what makes
+//!   per-shard training-mode evaluation cheap enough to repeat `W`
+//!   times.
+//! * **Vote sums are shared, atomic, and slightly stale.** Workers
+//!   accumulate per-sample class-vote partials into a [`tally::VoteTally`]
+//!   and synchronize once per `stale_window` samples: feedback inside a
+//!   window uses vote sums computed from window-start TA state — the
+//!   2009.04861 relaxation. `stale_window = 1` is sequential-consistent;
+//!   larger windows trade staleness for fewer barriers.
+//!
+//! With one worker the schedule degenerates to the sequential one and —
+//! because the sequential [`crate::tm::trainer::Trainer`] is worker 0 of
+//! the [`crate::tm::trainer::train_streams`] RNG contract — a 1-thread
+//! [`ParallelTrainer`] epoch is **bit-identical** to a sequential epoch
+//! (`rust/tests/parallel_train.rs` asserts this). After every epoch the
+//! shards are reassembled into the global [`crate::tm::MultiClassTM`];
+//! the per-class + fused (PR 1) serving indexes rebuild lazily at the
+//! next inference call, so serving is byte-for-byte the same as for a
+//! sequentially trained model and training never pays rebuilds it
+//! doesn't read.
+
+pub mod shard;
+pub mod tally;
+pub mod trainer;
+pub mod worker;
+
+pub use shard::{partition_clauses, ClauseShard};
+pub use tally::VoteTally;
+pub use trainer::{ParallelTrainer, DEFAULT_STALE_WINDOW};
+
+/// Resolve a user-facing `--threads` value: `0` means "use every
+/// available core", anything else is taken literally (min 1).
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    } else {
+        threads
+    }
+}
+
+/// Shared fixtures for this module's unit tests.
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::data::Dataset;
+    use crate::util::{BitVec, Rng};
+
+    /// Tiny two-class problem: class 0 = feature 0 set, class 1 = clear,
+    /// as `[x, ¬x]` literal vectors.
+    pub fn toy_samples(n: usize, features: usize, seed: u64) -> Vec<(BitVec, usize)> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let y = rng.bern(0.5) as usize;
+                let bits: Vec<bool> = (0..features)
+                    .map(|k| if k == 0 { y == 0 } else { rng.bern(0.5) })
+                    .collect();
+                (Dataset::literals_from_bools(&bits), y)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_threads_zero_means_all_cores() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(1), 1);
+        assert_eq!(resolve_threads(7), 7);
+    }
+}

@@ -1,0 +1,242 @@
+//! Clause-range partitioning and the per-worker shard state: a slice of
+//! every class's clause bank plus an incremental falsification index
+//! over exactly those clauses.
+
+use std::ops::Range;
+
+use crate::eval::Evaluator;
+use crate::index::IndexedEval;
+use crate::tm::bank::ClauseBank;
+use crate::tm::classifier::MultiClassTM;
+use crate::util::BitVec;
+
+/// Partition `clauses` (even, per [`crate::tm::params::TMParams`]
+/// validation) into `workers` contiguous ranges with **even start
+/// offsets**, so a shard-local clause id has the same +/− polarity as
+/// its global id. Polarity pairs are distributed as evenly as possible;
+/// trailing shards may be empty when `workers > clauses / 2`.
+pub fn partition_clauses(clauses: usize, workers: usize) -> Vec<Range<usize>> {
+    assert!(workers > 0, "need at least one worker");
+    let pairs = clauses / 2;
+    let base = pairs / workers;
+    let extra = pairs % workers;
+    let mut ranges = Vec::with_capacity(workers);
+    let mut start = 0usize;
+    for w in 0..workers {
+        let len = 2 * (base + usize::from(w < extra));
+        ranges.push(start..start + len);
+        start += len;
+    }
+    // an odd trailing clause (non-validated banks) goes to the last shard
+    if start < clauses {
+        ranges.last_mut().expect("workers > 0").end = clauses;
+    }
+    ranges
+}
+
+/// One worker's clause shard: for every class, a private [`ClauseBank`]
+/// holding the shard's clause range (local ids `0..len`) and an
+/// [`IndexedEval`] falsification index over it, maintained incrementally
+/// through the same O(1) flip hooks as the sequential trainer.
+pub struct ClauseShard {
+    range: Range<usize>,
+    banks: Vec<ClauseBank>,
+    evals: Vec<IndexedEval>,
+}
+
+impl ClauseShard {
+    /// Extract the shard `range` from every class bank of `tm` and build
+    /// the per-class shard indexes.
+    pub fn extract(tm: &MultiClassTM, range: Range<usize>) -> Self {
+        let n_lit = tm.params.n_literals();
+        let banks: Vec<ClauseBank> = (0..tm.classes())
+            .map(|c| tm.bank(c).clone_range(range.start, range.len()))
+            .collect();
+        let evals = banks
+            .iter()
+            .map(|bank| {
+                let mut ev = IndexedEval::with_shape(bank.clauses(), n_lit);
+                ev.rebuild(bank);
+                ev
+            })
+            .collect();
+        ClauseShard { range, banks, evals }
+    }
+
+    /// The global clause range this shard owns.
+    pub fn range(&self) -> Range<usize> {
+        self.range.clone()
+    }
+
+    /// Number of clauses in the shard.
+    pub fn clauses(&self) -> usize {
+        self.range.len()
+    }
+
+    /// The shard's private bank for `class` (local clause ids).
+    pub fn bank(&self, class: usize) -> &ClauseBank {
+        &self.banks[class]
+    }
+
+    /// Training-mode evaluation of the shard's clauses for `class`:
+    /// fills `out` (length = shard clauses) with clause outputs and
+    /// returns the shard's **partial** vote sum — partials summed over
+    /// all shards equal the full bank's training score, because votes
+    /// partition over clause ranges.
+    pub fn eval_train(&mut self, class: usize, literals: &BitVec, out: &mut BitVec) -> i32 {
+        self.evals[class].eval_train(&self.banks[class], literals, out)
+    }
+
+    /// Split-borrow the pieces the feedback loop needs: the mutable
+    /// bank, the shard index as a flip sink, for one class.
+    pub fn feedback_parts(
+        &mut self,
+        class: usize,
+    ) -> (&mut ClauseBank, &mut IndexedEval) {
+        (&mut self.banks[class], &mut self.evals[class])
+    }
+
+    /// Write the shard's banks back into the global machine (epoch
+    /// reassembly).
+    pub fn writeback(&self, tm: &mut MultiClassTM) {
+        for (c, bank) in self.banks.iter().enumerate() {
+            tm.bank_mut(c).write_range(self.range.start, bank);
+        }
+    }
+
+    /// Structural invariants of every per-class shard index against its
+    /// private bank (tests / debug).
+    #[doc(hidden)]
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for (c, (bank, ev)) in self.banks.iter().zip(&self.evals).enumerate() {
+            if !bank.check_counts() {
+                return Err(format!(
+                    "shard {:?} class {c}: include_count out of sync",
+                    self.range
+                ));
+            }
+            ev.index()
+                .check_invariants(bank)
+                .map_err(|e| format!("shard {:?} class {c}: {e}", self.range))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::traits::reference_score;
+    use crate::tm::params::TMParams;
+    use crate::util::Rng;
+
+    #[test]
+    fn partition_covers_disjointly_with_even_starts() {
+        for clauses in [2usize, 4, 10, 100, 246] {
+            for workers in [1usize, 2, 3, 4, 7, 64] {
+                let ranges = partition_clauses(clauses, workers);
+                assert_eq!(ranges.len(), workers);
+                let mut next = 0;
+                for r in &ranges {
+                    assert_eq!(r.start, next, "{clauses}c/{workers}w");
+                    assert_eq!(r.start % 2, 0, "odd shard start");
+                    next = r.end;
+                }
+                assert_eq!(next, clauses, "{clauses}c/{workers}w must cover");
+            }
+        }
+    }
+
+    #[test]
+    fn partition_balances_within_one_pair() {
+        let ranges = partition_clauses(100, 3);
+        let lens: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+        assert_eq!(lens.iter().sum::<usize>(), 100);
+        assert!(lens.iter().all(|&l| l == 34 || l == 32), "{lens:?}");
+    }
+
+    fn random_tm(rng: &mut Rng, classes: usize, clauses: usize, features: usize) -> MultiClassTM {
+        let mut tm = MultiClassTM::new(TMParams::new(classes, clauses, features));
+        for c in 0..classes {
+            let bank = tm.bank_mut(c);
+            for j in 0..clauses {
+                for k in 0..2 * features {
+                    if rng.bern(0.15) {
+                        bank.set_state(j, k, (rng.below(9) as i8) - 4);
+                    }
+                }
+            }
+        }
+        tm
+    }
+
+    #[test]
+    fn shard_partials_sum_to_full_training_score() {
+        let mut rng = Rng::new(301);
+        let tm = random_tm(&mut rng, 3, 12, 10);
+        let ranges = partition_clauses(12, 3);
+        let mut shards: Vec<ClauseShard> = ranges
+            .iter()
+            .map(|r| ClauseShard::extract(&tm, r.clone()))
+            .collect();
+        for s in &shards {
+            s.check_invariants().unwrap();
+        }
+        for _ in 0..20 {
+            let lits =
+                BitVec::from_bools(&(0..20).map(|_| rng.bern(0.5)).collect::<Vec<_>>());
+            for c in 0..3 {
+                let mut total = 0i32;
+                for s in shards.iter_mut() {
+                    let mut out = BitVec::zeros(s.clauses());
+                    total += s.eval_train(c, &lits, &mut out);
+                    // outputs agree with the global bank's semantics
+                    for j in 0..s.clauses() {
+                        let gj = s.range().start + j;
+                        let bank = tm.bank(c);
+                        let want = if bank.count(gj) == 0 {
+                            true
+                        } else {
+                            bank.included_literals(gj).all(|k| lits.get(k))
+                        };
+                        assert_eq!(out.get(j), want, "class {c} clause {gj}");
+                    }
+                }
+                assert_eq!(total, reference_score(tm.bank(c), &lits, true), "class {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn writeback_roundtrips() {
+        let mut rng = Rng::new(302);
+        let tm = random_tm(&mut rng, 2, 8, 6);
+        let mut copy = MultiClassTM::new(tm.params.clone());
+        for r in partition_clauses(8, 3) {
+            ClauseShard::extract(&tm, r).writeback(&mut copy);
+        }
+        for c in 0..2 {
+            assert_eq!(tm.bank(c).states(), copy.bank(c).states());
+            assert_eq!(tm.bank(c).weights(), copy.bank(c).weights());
+        }
+    }
+
+    #[test]
+    fn empty_shards_are_harmless() {
+        let mut rng = Rng::new(303);
+        let tm = random_tm(&mut rng, 2, 4, 5);
+        // 8 workers over 2 polarity pairs: 6 empty shards
+        let ranges = partition_clauses(4, 8);
+        assert!(ranges.iter().filter(|r| r.is_empty()).count() == 6);
+        for r in ranges {
+            let mut s = ClauseShard::extract(&tm, r);
+            s.check_invariants().unwrap();
+            let lits = BitVec::ones(10);
+            let mut out = BitVec::zeros(s.clauses());
+            let partial = s.eval_train(0, &lits, &mut out);
+            if s.clauses() == 0 {
+                assert_eq!(partial, 0);
+            }
+        }
+    }
+}

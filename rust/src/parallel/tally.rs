@@ -1,0 +1,221 @@
+//! The shared vote tally: per-sample atomic class-vote sums, plus the
+//! window barrier that bounds their staleness.
+//!
+//! Every training step of the paper's §2 loop needs two class scores —
+//! the target class's and one negative class's. Workers evaluating
+//! disjoint clause shards each contribute a *partial* vote sum for both;
+//! the tally accumulates the partials with relaxed atomic adds (the
+//! inter-thread ordering comes from the window barrier, not the
+//! individual adds). A slot is complete once every worker has passed the
+//! barrier that closes its window — after which the sums are already
+//! going stale, because workers immediately start mutating their clauses
+//! against them. That bounded staleness is the arXiv 2009.04861
+//! relaxation.
+
+use std::sync::atomic::{AtomicI32, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// Which of a sample's two scored classes a partial belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Slot {
+    /// The sample's labelled class.
+    Target = 0,
+    /// The drawn negative class.
+    Negative = 1,
+}
+
+/// Per-sample atomic vote sums (two per sample: target / negative).
+pub struct VoteTally {
+    slots: Vec<AtomicI32>,
+}
+
+impl VoteTally {
+    /// Zeroed tally for `samples` training samples.
+    pub fn new(samples: usize) -> Self {
+        VoteTally {
+            slots: (0..2 * samples).map(|_| AtomicI32::new(0)).collect(),
+        }
+    }
+
+    /// Number of samples the tally covers.
+    pub fn samples(&self) -> usize {
+        self.slots.len() / 2
+    }
+
+    /// Re-zero (and resize) for a new epoch. `&mut self` — an epoch
+    /// starts with the tally unshared, so no atomics are needed here.
+    pub fn reset(&mut self, samples: usize) {
+        self.slots.clear();
+        self.slots.extend((0..2 * samples).map(|_| AtomicI32::new(0)));
+    }
+
+    /// Add a shard's partial vote sum for `sample`.
+    #[inline]
+    pub fn add(&self, sample: usize, slot: Slot, partial: i32) {
+        self.slots[2 * sample + slot as usize].fetch_add(partial, Ordering::Relaxed);
+    }
+
+    /// Read the accumulated vote sum for `sample`. Complete once every
+    /// worker has passed the barrier closing the sample's window; the
+    /// value is then a *window-start* snapshot that feedback reads
+    /// slightly stale.
+    #[inline]
+    pub fn read(&self, sample: usize, slot: Slot) -> i32 {
+        self.slots[2 * sample + slot as usize].load(Ordering::Relaxed)
+    }
+}
+
+/// The synchronization points of a parallel epoch: one rendezvous per
+/// staleness window (between shard evaluation and shard feedback), and
+/// the epoch end itself (thread join in the trainer).
+///
+/// Unlike [`std::sync::Barrier`] this barrier is **abortable**: a
+/// worker that panics mid-epoch calls [`WindowBarrier::abort`] (via the
+/// worker loop's drop guard), waking every blocked peer with a `false`
+/// return instead of leaving them deadlocked waiting for an arrival
+/// that will never come — the panic then propagates normally through
+/// the scoped-thread join.
+pub struct WindowBarrier {
+    state: Mutex<BarrierState>,
+    cv: Condvar,
+    workers: usize,
+}
+
+struct BarrierState {
+    arrived: usize,
+    generation: u64,
+    aborted: bool,
+}
+
+impl WindowBarrier {
+    pub fn new(workers: usize) -> Self {
+        WindowBarrier {
+            state: Mutex::new(BarrierState {
+                arrived: 0,
+                generation: 0,
+                aborted: false,
+            }),
+            cv: Condvar::new(),
+            workers: workers.max(1),
+        }
+    }
+
+    /// Tolerate lock poisoning: `abort` must get through even if some
+    /// other worker panicked at an awkward moment.
+    fn lock(&self) -> MutexGuard<'_, BarrierState> {
+        match self.state.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Block until every worker arrives (the lock/condvar pairing is
+    /// what publishes the tally's relaxed adds to the feedback phase).
+    /// Returns `false` iff the epoch was aborted — the caller must bail
+    /// out of its epoch loop instead of continuing.
+    #[must_use]
+    pub fn wait(&self) -> bool {
+        let mut s = self.lock();
+        if s.aborted {
+            return false;
+        }
+        s.arrived += 1;
+        if s.arrived == self.workers {
+            s.arrived = 0;
+            s.generation += 1;
+            self.cv.notify_all();
+            return true;
+        }
+        let gen = s.generation;
+        while s.generation == gen && !s.aborted {
+            s = match self.cv.wait(s) {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+        }
+        !s.aborted
+    }
+
+    /// Mark the epoch aborted and wake every blocked worker.
+    pub fn abort(&self) {
+        let mut s = self.lock();
+        s.aborted = true;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partials_accumulate_per_slot() {
+        let t = VoteTally::new(3);
+        assert_eq!(t.samples(), 3);
+        t.add(1, Slot::Target, 5);
+        t.add(1, Slot::Target, -2);
+        t.add(1, Slot::Negative, 7);
+        assert_eq!(t.read(1, Slot::Target), 3);
+        assert_eq!(t.read(1, Slot::Negative), 7);
+        assert_eq!(t.read(0, Slot::Target), 0);
+        assert_eq!(t.read(2, Slot::Negative), 0);
+    }
+
+    #[test]
+    fn reset_rezeroes_and_resizes() {
+        let mut t = VoteTally::new(1);
+        t.add(0, Slot::Target, 9);
+        t.reset(4);
+        assert_eq!(t.samples(), 4);
+        for i in 0..4 {
+            assert_eq!(t.read(i, Slot::Target), 0);
+            assert_eq!(t.read(i, Slot::Negative), 0);
+        }
+    }
+
+    #[test]
+    fn concurrent_adds_are_lost_update_free() {
+        let t = VoteTally::new(1);
+        let workers = 4;
+        let barrier = WindowBarrier::new(workers);
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| {
+                    for _ in 0..1000 {
+                        t.add(0, Slot::Target, 1);
+                    }
+                    assert!(barrier.wait());
+                    assert_eq!(t.read(0, Slot::Target), workers as i32 * 1000);
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn barrier_reuses_across_generations() {
+        let barrier = WindowBarrier::new(2);
+        std::thread::scope(|scope| {
+            for _ in 0..2 {
+                scope.spawn(|| {
+                    for _ in 0..50 {
+                        assert!(barrier.wait());
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn abort_unblocks_waiters_instead_of_deadlocking() {
+        let barrier = WindowBarrier::new(2);
+        std::thread::scope(|scope| {
+            let waiter = scope.spawn(|| barrier.wait());
+            // give the waiter time to block, then abort instead of arriving
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            barrier.abort();
+            assert!(!waiter.join().unwrap());
+            // late arrivals see the abort immediately
+            assert!(!barrier.wait());
+        });
+    }
+}

@@ -1,0 +1,316 @@
+//! [`ParallelTrainer`] — the user-facing facade of the clause-sharded
+//! asynchronous training subsystem, mirroring the sequential
+//! [`Trainer`]'s `train_epoch` / `predict` / `accuracy` surface.
+//!
+//! Training runs on scoped worker threads, one clause shard each; after
+//! every epoch the shards are written back into the global
+//! [`MultiClassTM`] (cheap state copies), and the per-class +
+//! class-fused (PR 1) serving indexes resync lazily at the next
+//! inference call, so inference between epochs — and the model that is
+//! eventually saved — is indistinguishable from a sequentially trained
+//! one while back-to-back epochs skip rebuilds nothing reads.
+
+use crate::eval::Backend;
+use crate::index::IndexStats;
+use crate::parallel::resolve_threads;
+use crate::parallel::shard::partition_clauses;
+use crate::parallel::tally::{VoteTally, WindowBarrier};
+use crate::parallel::worker::WorkerState;
+use crate::tm::classifier::MultiClassTM;
+use crate::tm::params::TMParams;
+use crate::tm::trainer::{EpochStats, Trainer};
+use crate::util::BitVec;
+
+/// Default staleness window: the number of samples between worker
+/// rendezvous. 8 amortizes the barrier well below per-sample cost at
+/// paper scales while keeping vote sums at most 8 samples stale.
+pub const DEFAULT_STALE_WINDOW: usize = 8;
+
+/// Multi-threaded trainer: clause shards, per-shard falsification
+/// indexes, shared stale vote tally (see [`crate::parallel`]).
+pub struct ParallelTrainer {
+    /// Canonical machine + serving engine (indexed backend). Only
+    /// touched between epochs: shard writeback, inference, model I/O.
+    inner: Trainer,
+    workers: Vec<WorkerState>,
+    tally: VoteTally,
+    stale_window: usize,
+    /// The inner trainer's per-class indexes lag the banks after an
+    /// epoch's shard writeback. Serving never reads them (the indexed
+    /// backend scores through the fused engine, which has its own dirty
+    /// flag); they are rebuilt lazily for the diagnostic surfaces —
+    /// `trainer()` / `into_trainer()` / `index_stats()` /
+    /// `check_invariants()` — so training pays no rebuilds it never
+    /// reads.
+    evals_stale: bool,
+}
+
+impl ParallelTrainer {
+    /// Fresh machine trained across `threads` workers (`0` = every
+    /// available core, see [`resolve_threads`]).
+    pub fn new(params: TMParams, threads: usize) -> Self {
+        Self::from_machine(MultiClassTM::new(params), threads)
+    }
+
+    /// Continue training an existing machine across `threads` workers.
+    pub fn from_machine(tm: MultiClassTM, threads: usize) -> Self {
+        let threads = resolve_threads(threads);
+        let ranges = partition_clauses(tm.params.clauses_per_class, threads);
+        let workers: Vec<WorkerState> = ranges
+            .into_iter()
+            .enumerate()
+            .map(|(w, r)| WorkerState::new(&tm, r, w as u64, DEFAULT_STALE_WINDOW))
+            .collect();
+        ParallelTrainer {
+            inner: Trainer::from_machine(tm, Backend::Indexed),
+            workers,
+            tally: VoteTally::new(0),
+            stale_window: DEFAULT_STALE_WINDOW,
+            evals_stale: false,
+        }
+    }
+
+    /// Set the staleness window (samples between worker rendezvous).
+    /// `1` = sequential-consistent vote sums, one barrier per sample;
+    /// larger windows amortize synchronization at the cost of staler
+    /// sums. Ignored for a single worker, which always runs window 1.
+    pub fn with_stale_window(mut self, window: usize) -> Self {
+        self.set_stale_window(window);
+        self
+    }
+
+    /// See [`ParallelTrainer::with_stale_window`].
+    pub fn set_stale_window(&mut self, window: usize) {
+        self.stale_window = window.max(1);
+        let effective = self.effective_window();
+        for w in &mut self.workers {
+            w.set_window(effective);
+        }
+    }
+
+    /// Worker-thread count (== clause shards).
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Configured staleness window.
+    pub fn stale_window(&self) -> usize {
+        self.stale_window
+    }
+
+    /// A single worker owns every clause, so its own partial *is* the
+    /// full vote sum — window 1 makes it exactly the sequential
+    /// schedule (and bit-identical to [`Trainer`], same RNG contract).
+    fn effective_window(&self) -> usize {
+        if self.workers.len() == 1 {
+            1
+        } else {
+            self.stale_window
+        }
+    }
+
+    /// The trained machine. The banks are written back eagerly at every
+    /// epoch boundary (a cheap state copy), so this is always current.
+    pub fn tm(&self) -> &MultiClassTM {
+        &self.inner.tm
+    }
+
+    /// Rebuild the inner trainer's per-class indexes iff an epoch's
+    /// writeback left them stale. Only the diagnostic surfaces need
+    /// this — indexed-backend serving reads the fused engine alone,
+    /// which re-snapshots itself off its own dirty flag.
+    fn ensure_synced(&mut self) {
+        if self.evals_stale {
+            self.inner.resync_evaluators();
+            self.evals_stale = false;
+        }
+    }
+
+    /// Borrow the inner (inference-serving) trainer, synced to the
+    /// trained banks.
+    pub fn trainer(&mut self) -> &Trainer {
+        self.ensure_synced();
+        &self.inner
+    }
+
+    /// Unwrap into the inner sequential trainer (model save, backend
+    /// switch, further sequential training), synced to the trained
+    /// banks.
+    pub fn into_trainer(mut self) -> Trainer {
+        self.ensure_synced();
+        self.inner
+    }
+
+    /// Worker threads the *inference* engine shards batches across
+    /// (independent of the training worker count).
+    pub fn set_infer_threads(&mut self, threads: usize) {
+        self.inner.set_infer_threads(threads);
+    }
+
+    /// One epoch over `(literals, label)` pairs in the given order,
+    /// sharded across the workers. Returns aggregate stats with
+    /// wall-clock throughput.
+    pub fn train_epoch<'a>(
+        &mut self,
+        samples: impl Iterator<Item = (&'a BitVec, usize)>,
+    ) -> EpochStats {
+        let samples: Vec<(&BitVec, usize)> = samples.collect();
+        let t0 = std::time::Instant::now();
+        self.tally.reset(samples.len());
+        let window = self.effective_window();
+        let barrier = WindowBarrier::new(self.workers.len());
+        if self.workers.len() == 1 {
+            // no spawn: the single worker runs on the calling thread
+            self.workers[0].run_epoch(&samples, window, &self.tally, &barrier);
+        } else {
+            let tally = &self.tally;
+            let barrier = &barrier;
+            let shared = &samples[..];
+            std::thread::scope(|scope| {
+                for w in self.workers.iter_mut() {
+                    scope.spawn(move || w.run_epoch(shared, window, tally, barrier));
+                }
+            });
+        }
+
+        // reassemble the global machine (cheap bank copies); the
+        // PR-1 fused serving engine re-snapshots lazily off its dirty
+        // flag at the next inference call, and the per-class diagnostic
+        // indexes rebuild only if something reads them — back-to-back
+        // epochs never pay an index rebuild they don't read
+        let mut stats = EpochStats {
+            samples: samples.len(),
+            ..EpochStats::default()
+        };
+        for w in self.workers.iter_mut() {
+            stats.clause_updates += w.take_updates();
+            w.shard().writeback(&mut self.inner.tm);
+        }
+        self.inner.invalidate_engine();
+        self.evals_stale = true;
+        stats.finish(t0.elapsed())
+    }
+
+    /// Argmax prediction (class-fused indexed inference, as
+    /// [`Trainer::predict`]; the fused engine re-snapshots itself if
+    /// training dirtied it).
+    pub fn predict(&mut self, literals: &BitVec) -> usize {
+        self.inner.predict(literals)
+    }
+
+    /// Per-class scores (see [`Trainer::scores`]).
+    pub fn scores(&mut self, literals: &BitVec) -> Vec<i32> {
+        self.inner.scores(literals)
+    }
+
+    /// Per-class scores into a caller buffer (see
+    /// [`Trainer::scores_into`]).
+    pub fn scores_into(&mut self, literals: &BitVec, out: &mut [i32]) {
+        self.inner.scores_into(literals, out)
+    }
+
+    /// Batch scores into a row-major matrix (see
+    /// [`Trainer::score_batch_into`]).
+    pub fn score_batch_into(&mut self, batch: &[BitVec], out: &mut [i32]) {
+        self.inner.score_batch_into(batch, out)
+    }
+
+    /// Accuracy over a labelled set (see [`Trainer::accuracy`]).
+    pub fn accuracy<'a>(
+        &mut self,
+        samples: impl Iterator<Item = (&'a BitVec, usize)>,
+    ) -> f64 {
+        self.inner.accuracy(samples)
+    }
+
+    /// Index statistics per class of the *global* serving index.
+    pub fn index_stats(&mut self) -> Option<Vec<IndexStats>> {
+        self.ensure_synced();
+        self.inner.index_stats()
+    }
+
+    /// Full structural check: the global trainer's invariants, every
+    /// shard's per-class index invariants, and shard-bank/global-bank
+    /// agreement over each shard's clause range.
+    #[doc(hidden)]
+    pub fn check_invariants(&mut self) -> Result<(), String> {
+        self.ensure_synced();
+        self.inner.check_invariants()?;
+        for w in &self.workers {
+            w.shard().check_invariants()?;
+            let r = w.shard().range();
+            for c in 0..self.inner.tm.classes() {
+                let global = self.inner.tm.bank(c);
+                let local = w.shard().bank(c);
+                for j in 0..local.clauses() {
+                    if global.row(r.start + j) != local.row(j) {
+                        return Err(format!(
+                            "class {c} clause {}: shard states diverge from global",
+                            r.start + j
+                        ));
+                    }
+                    if global.weight(r.start + j) != local.weight(j) {
+                        return Err(format!(
+                            "class {c} clause {}: shard weight diverges from global",
+                            r.start + j
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parallel::testutil::toy_samples;
+
+    #[test]
+    fn parallel_learns_toy_problem() {
+        let params = TMParams::new(2, 20, 8).with_threshold(10).with_s(3.0);
+        let mut tr = ParallelTrainer::new(params, 2).with_stale_window(4);
+        assert_eq!(tr.threads(), 2);
+        let train = toy_samples(400, 8, 1);
+        for _ in 0..10 {
+            let stats = tr.train_epoch(train.iter().map(|(l, y)| (l, *y)));
+            assert_eq!(stats.samples, 400);
+            assert!(stats.updates_per_sec >= 0.0);
+        }
+        let test = toy_samples(200, 8, 2);
+        let acc = tr.accuracy(test.iter().map(|(l, y)| (l, *y)));
+        assert!(acc > 0.95, "parallel accuracy {acc}");
+        tr.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn single_worker_forces_window_one() {
+        let params = TMParams::new(2, 8, 6);
+        let tr = ParallelTrainer::new(params, 1).with_stale_window(32);
+        assert_eq!(tr.stale_window(), 32);
+        assert_eq!(tr.effective_window(), 1);
+    }
+
+    #[test]
+    fn more_workers_than_clause_pairs_still_trains() {
+        let params = TMParams::new(2, 4, 6).with_threshold(6);
+        let mut tr = ParallelTrainer::new(params, 8);
+        assert_eq!(tr.threads(), 8); // 6 shards are empty
+        let train = toy_samples(100, 6, 3);
+        tr.train_epoch(train.iter().map(|(l, y)| (l, *y)));
+        tr.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn epoch_stats_report_throughput() {
+        let params = TMParams::new(2, 8, 6);
+        let mut tr = ParallelTrainer::new(params, 2);
+        let train = toy_samples(50, 6, 4);
+        let stats = tr.train_epoch(train.iter().map(|(l, y)| (l, *y)));
+        assert_eq!(stats.samples, 50);
+        assert!(stats.clause_updates > 0);
+        assert!(stats.elapsed > std::time::Duration::ZERO);
+        assert!(stats.updates_per_sec > 0.0);
+    }
+}

@@ -1,0 +1,248 @@
+//! The per-thread training loop over one clause shard.
+//!
+//! An epoch is processed in windows of `stale_window` samples, each in
+//! two phases:
+//!
+//! 1. **evaluate** — for every sample in the window the worker draws the
+//!    negative class (from its clone of the shared sample stream, so all
+//!    workers agree without communicating), walks its shard's
+//!    falsification indexes for the target and negative class, records
+//!    the shard-local clause outputs, and adds its partial vote sums to
+//!    the shared [`VoteTally`].
+//! 2. **feedback** — after the window barrier the tally holds complete
+//!    window-start vote sums; the worker replays the window, computing
+//!    the clause-update probability from the (now slightly stale) sums
+//!    and applying Type I/II feedback to its own clauses only, through
+//!    [`update_clause_range`] — the exact body the sequential trainer
+//!    runs. Index maintenance rides the same O(1) flip hooks.
+//!
+//! Workers never touch each other's TA state, so the only shared writes
+//! are the tally's relaxed atomic adds, ordered by the window barrier.
+//! A fast worker may start evaluating window `k+1` while a slow one is
+//! still feeding back window `k` — harmless, because evaluation reads
+//! only the worker's *own* shard and window `k+1`'s tally slots are
+//! disjoint from window `k`'s.
+
+use std::ops::Range;
+
+use crate::parallel::shard::ClauseShard;
+use crate::parallel::tally::{Slot, VoteTally, WindowBarrier};
+use crate::tm::classifier::MultiClassTM;
+use crate::tm::feedback::{clause_update_threshold, update_clause_range, FeedbackCtx};
+use crate::tm::trainer::train_streams;
+use crate::util::rng::Rng;
+use crate::util::BitVec;
+
+/// One worker's persistent training state: its clause shard (private
+/// banks + per-shard indexes), its RNG streams, and the window-sized
+/// clause-output buffers carried from the evaluate phase to the
+/// feedback phase.
+pub struct WorkerState {
+    shard: ClauseShard,
+    sample_rng: Rng,
+    feedback_rng: Rng,
+    ctx: FeedbackCtx,
+    threshold: i32,
+    classes: usize,
+    /// Clause outputs per window position: `[2b]` = target class,
+    /// `[2b + 1]` = negative class, each shard-clauses bits wide.
+    out_bufs: Vec<BitVec>,
+    /// Negative class drawn per window position.
+    negs: Vec<usize>,
+    clause_updates: u64,
+}
+
+impl WorkerState {
+    /// Build worker `worker` owning the clause range `range`, with RNG
+    /// streams from the [`train_streams`] contract (worker 0 ==
+    /// the sequential trainer's streams).
+    pub fn new(tm: &MultiClassTM, range: Range<usize>, worker: u64, window: usize) -> Self {
+        let params = &tm.params;
+        let (sample_rng, feedback_rng) = train_streams(params.seed, worker);
+        let shard = ClauseShard::extract(tm, range);
+        let len = shard.clauses();
+        WorkerState {
+            out_bufs: (0..2 * window.max(1)).map(|_| BitVec::zeros(len)).collect(),
+            negs: vec![0; window.max(1)],
+            ctx: FeedbackCtx::new(params.s, params.boost_true_positive, params.weighted),
+            threshold: params.threshold as i32,
+            classes: params.classes,
+            sample_rng,
+            feedback_rng,
+            shard,
+            clause_updates: 0,
+        }
+    }
+
+    /// The worker's clause shard.
+    pub fn shard(&self) -> &ClauseShard {
+        &self.shard
+    }
+
+    /// Resize the window-sized buffers (staleness-window change).
+    pub fn set_window(&mut self, window: usize) {
+        let window = window.max(1);
+        let len = self.shard.clauses();
+        self.out_bufs.resize_with(2 * window, || BitVec::zeros(len));
+        self.negs.resize(window, 0);
+    }
+
+    /// Clause updates applied since the last call, resetting the count.
+    pub fn take_updates(&mut self) -> u64 {
+        std::mem::take(&mut self.clause_updates)
+    }
+
+    /// Run one epoch over `samples` (shared order across workers),
+    /// synchronizing on `barrier` every `window` samples.
+    ///
+    /// If this worker panics mid-epoch, the drop guard aborts the
+    /// barrier so peers bail out instead of deadlocking, and the panic
+    /// propagates through the scoped-thread join.
+    pub fn run_epoch(
+        &mut self,
+        samples: &[(&BitVec, usize)],
+        window: usize,
+        tally: &VoteTally,
+        barrier: &WindowBarrier,
+    ) {
+        let _guard = AbortOnPanic(barrier);
+        let window = window.max(1);
+        debug_assert!(self.negs.len() >= window, "set_window before run_epoch");
+        debug_assert_eq!(tally.samples(), samples.len());
+        let m = self.classes;
+        let mut block_start = 0;
+        while block_start < samples.len() {
+            let block_end = (block_start + window).min(samples.len());
+            let block = &samples[block_start..block_end];
+
+            // phase 1: evaluate the shard, publish partial vote sums
+            for (b, &(lits, label)) in block.iter().enumerate() {
+                debug_assert!(label < m);
+                let mut neg = self.sample_rng.below(m as u32 - 1) as usize;
+                if neg >= label {
+                    neg += 1;
+                }
+                self.negs[b] = neg;
+                let pt = self.shard.eval_train(label, lits, &mut self.out_bufs[2 * b]);
+                let pn = self
+                    .shard
+                    .eval_train(neg, lits, &mut self.out_bufs[2 * b + 1]);
+                tally.add(block_start + b, Slot::Target, pt);
+                tally.add(block_start + b, Slot::Negative, pn);
+            }
+
+            if !barrier.wait() {
+                return; // a peer panicked: epoch aborted
+            }
+
+            // phase 2: feedback against the window-start vote sums
+            for (b, &(lits, label)) in block.iter().enumerate() {
+                let i = block_start + b;
+                let p_t =
+                    clause_update_threshold(self.threshold, tally.read(i, Slot::Target), true);
+                let (bank, ev) = self.shard.feedback_parts(label);
+                self.clause_updates += update_clause_range(
+                    bank,
+                    ev,
+                    &mut self.feedback_rng,
+                    &self.ctx,
+                    &self.out_bufs[2 * b],
+                    lits,
+                    p_t,
+                    true,
+                );
+                let p_n = clause_update_threshold(
+                    self.threshold,
+                    tally.read(i, Slot::Negative),
+                    false,
+                );
+                let (bank, ev) = self.shard.feedback_parts(self.negs[b]);
+                self.clause_updates += update_clause_range(
+                    bank,
+                    ev,
+                    &mut self.feedback_rng,
+                    &self.ctx,
+                    &self.out_bufs[2 * b + 1],
+                    lits,
+                    p_n,
+                    false,
+                );
+            }
+
+            block_start = block_end;
+        }
+    }
+}
+
+/// Aborts the window barrier if the worker unwinds, so peers blocked in
+/// `wait` return instead of deadlocking.
+struct AbortOnPanic<'a>(&'a WindowBarrier);
+
+impl Drop for AbortOnPanic<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.abort();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parallel::shard::partition_clauses;
+    use crate::parallel::testutil::toy_samples;
+    use crate::tm::params::TMParams;
+
+    #[test]
+    fn single_worker_epoch_keeps_shard_invariants() {
+        let params = TMParams::new(2, 12, 8).with_threshold(10);
+        let tm = MultiClassTM::new(params);
+        let data = toy_samples(60, 8, 9);
+        let samples: Vec<(&BitVec, usize)> = data.iter().map(|(l, y)| (l, *y)).collect();
+        let mut w = WorkerState::new(&tm, 0..12, 0, 4);
+        let tally = VoteTally::new(samples.len());
+        let barrier = WindowBarrier::new(1);
+        w.run_epoch(&samples, 4, &tally, &barrier);
+        assert!(w.take_updates() > 0);
+        assert_eq!(w.take_updates(), 0);
+        w.shard().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn two_workers_cover_disjoint_ranges_concurrently() {
+        let params = TMParams::new(2, 16, 8).with_threshold(10);
+        let tm = MultiClassTM::new(params);
+        let data = toy_samples(80, 8, 10);
+        let samples: Vec<(&BitVec, usize)> = data.iter().map(|(l, y)| (l, *y)).collect();
+        let ranges = partition_clauses(16, 2);
+        let mut workers: Vec<WorkerState> = ranges
+            .iter()
+            .enumerate()
+            .map(|(w, r)| WorkerState::new(&tm, r.clone(), w as u64, 8))
+            .collect();
+        let mut tally = VoteTally::new(samples.len());
+        let barrier = WindowBarrier::new(2);
+        for _epoch in 0..2 {
+            tally.reset(samples.len());
+            std::thread::scope(|scope| {
+                for w in workers.iter_mut() {
+                    let (samples, tally, barrier) = (&samples[..], &tally, &barrier);
+                    scope.spawn(move || w.run_epoch(samples, 8, tally, barrier));
+                }
+            });
+        }
+        for w in &workers {
+            w.shard().check_invariants().unwrap();
+        }
+        // every worker saw the same negative-class stream: tallies are
+        // consistent sums, and shards stayed disjoint — reassembling
+        // must produce a bank whose counts are coherent
+        let mut out = MultiClassTM::new(tm.params.clone());
+        for w in &workers {
+            w.shard().writeback(&mut out);
+        }
+        for c in 0..2 {
+            assert!(out.bank(c).check_counts());
+        }
+    }
+}

@@ -224,6 +224,38 @@ impl ClauseBank {
         &self.states
     }
 
+    /// Extract clauses `[start, start + len)` into a fresh bank with
+    /// local ids `0..len` — the clause-shard extraction of
+    /// [`crate::parallel`]. `start` must be even so local polarity
+    /// matches global polarity (ids interleave +/−).
+    pub fn clone_range(&self, start: usize, len: usize) -> ClauseBank {
+        assert!(start % 2 == 0, "shard start {start} must be even (polarity)");
+        assert!(start + len <= self.clauses, "shard out of range");
+        ClauseBank {
+            clauses: len,
+            n_literals: self.n_literals,
+            states: self.states[start * self.n_literals..(start + len) * self.n_literals]
+                .to_vec(),
+            include_count: self.include_count[start..start + len].to_vec(),
+            weights: self.weights[start..start + len].to_vec(),
+        }
+    }
+
+    /// Write a shard bank (from [`ClauseBank::clone_range`]) back over
+    /// clauses `[start, start + shard.clauses())` — the reassembly step
+    /// after a parallel epoch.
+    pub fn write_range(&mut self, start: usize, shard: &ClauseBank) {
+        assert_eq!(shard.n_literals, self.n_literals, "literal width mismatch");
+        assert!(start % 2 == 0, "shard start {start} must be even (polarity)");
+        assert!(start + shard.clauses <= self.clauses, "shard out of range");
+        let a = start * self.n_literals;
+        let b = a + shard.clauses * self.n_literals;
+        self.states[a..b].copy_from_slice(&shard.states);
+        self.include_count[start..start + shard.clauses]
+            .copy_from_slice(&shard.include_count);
+        self.weights[start..start + shard.clauses].copy_from_slice(&shard.weights);
+    }
+
     /// Verify `include_count` against the states (test/debug invariant).
     #[doc(hidden)]
     pub fn check_counts(&self) -> bool {
@@ -326,6 +358,42 @@ mod tests {
         assert_eq!(b.vote_alive(), 0); // +1 - 1
         b.bump_up(2, 0); // clause 2 (+1)
         assert_eq!(b.vote_alive(), 1);
+    }
+
+    #[test]
+    fn clone_range_roundtrips_through_write_range() {
+        let mut b = ClauseBank::new(6, 4);
+        for j in 0..6 {
+            for k in 0..4 {
+                b.set_state(j, k, (j * 4 + k) as i8 - 8);
+            }
+        }
+        b.set_weight(2, 7);
+        let shard = b.clone_range(2, 2);
+        assert_eq!(shard.clauses(), 2);
+        assert_eq!(shard.state(0, 0), b.state(2, 0));
+        assert_eq!(shard.weight(0), 7);
+        assert_eq!(shard.count(0), b.count(2));
+        assert!(shard.check_counts());
+        // polarity alignment: local 0 == global 2 (+), local 1 == global 3 (−)
+        assert_eq!(ClauseBank::polarity(0), ClauseBank::polarity(2));
+
+        // mutate the shard, write back, only that range changes
+        let mut shard = shard;
+        shard.set_state(0, 1, 5);
+        shard.set_weight(1, 3);
+        let before_outside = b.row(0).to_vec();
+        b.write_range(2, &shard);
+        assert_eq!(b.state(2, 1), 5);
+        assert_eq!(b.weight(3), 3);
+        assert_eq!(b.row(0), &before_outside[..]);
+        assert!(b.check_counts());
+    }
+
+    #[test]
+    #[should_panic(expected = "must be even")]
+    fn clone_range_rejects_odd_start() {
+        ClauseBank::new(4, 2).clone_range(1, 2);
     }
 
     #[test]

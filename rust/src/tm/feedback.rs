@@ -44,6 +44,69 @@ fn forward_flip(sink: &mut dyn FlipSink, bank: &ClauseBank, j: usize, k: usize, 
     }
 }
 
+/// Clause-update probability against the voting margin `T` (§2
+/// Learning), in the u32-threshold form the hot loop consumes.
+///
+/// * target class: push the score up — update prob `(T - score) / 2T`
+/// * negative class: push the score down — update prob `(T + score) / 2T`
+///
+/// `score` may be a *stale* vote sum (the clause-sharded asynchronous
+/// trainer in [`crate::parallel`] feeds tallies that lag by up to one
+/// staleness window); the formula is unchanged, which is exactly the
+/// relaxation of arXiv 2009.04861.
+#[inline]
+pub fn clause_update_threshold(t: i32, score: i32, is_target: bool) -> u32 {
+    debug_assert!(t > 0);
+    let clamped = score.clamp(-t, t);
+    let p = if is_target {
+        (t - clamped) as f64 / (2 * t) as f64
+    } else {
+        (t + clamped) as f64 / (2 * t) as f64
+    };
+    prob_to_threshold(p)
+}
+
+/// The per-clause feedback body shared by the sequential
+/// [`crate::tm::trainer::Trainer`] and the clause-sharded parallel
+/// workers ([`crate::parallel`]): sample every clause of `bank` against
+/// the update threshold, then dispatch Type I (clause polarity agrees
+/// with the update direction) or Type II feedback.
+///
+/// `bank` may be a full class bank or a contiguous shard of one
+/// ([`ClauseBank::clone_range`]) — polarity is positional, so shards
+/// must start at an even clause id. `outputs` holds the training-mode
+/// clause outputs for exactly `bank`'s clauses, computed *before* any
+/// feedback of this step. Returns the number of clauses updated.
+#[allow(clippy::too_many_arguments)]
+pub fn update_clause_range(
+    bank: &mut ClauseBank,
+    sink: &mut dyn FlipSink,
+    rng: &mut Rng,
+    ctx: &FeedbackCtx,
+    outputs: &BitVec,
+    literals: &BitVec,
+    p_update: u32,
+    is_target: bool,
+) -> u64 {
+    debug_assert_eq!(outputs.len(), bank.clauses());
+    let n = bank.clauses();
+    let mut updates = 0;
+    for j in 0..n {
+        if !rng.bern_threshold(p_update) {
+            continue;
+        }
+        updates += 1;
+        let positive = ClauseBank::polarity(j) > 0;
+        let clause_out = outputs.get(j);
+        if positive == is_target {
+            type_i(bank, sink, rng, ctx, j, clause_out, literals);
+        } else {
+            type_ii(bank, sink, ctx, j, clause_out, literals);
+        }
+    }
+    updates
+}
+
 /// Type I feedback: combats false negatives — reinforces clauses toward
 /// matching the current sample (frequent-pattern capture).
 ///
@@ -223,6 +286,48 @@ mod tests {
         fn on_exclude(&mut self, j: u32, k: u32, _c: u32, _w: u32) {
             self.exc.push((j, k));
         }
+    }
+
+    #[test]
+    fn update_threshold_edges_and_clamping() {
+        let t = 10;
+        // target at -T: certain update; at +T: never
+        assert_eq!(clause_update_threshold(t, -10, true), u32::MAX);
+        assert_eq!(clause_update_threshold(t, 10, true), 0);
+        // negative class mirrors
+        assert_eq!(clause_update_threshold(t, 10, false), u32::MAX);
+        assert_eq!(clause_update_threshold(t, -10, false), 0);
+        // stale sums beyond the margin clamp instead of overflowing
+        assert_eq!(clause_update_threshold(t, -1000, true), u32::MAX);
+        assert_eq!(clause_update_threshold(t, 1000, true), 0);
+        // score 0: p = 1/2 either way
+        let half = clause_update_threshold(t, 0, true);
+        assert_eq!(half, clause_update_threshold(t, 0, false));
+        assert!((half as f64 / 2f64.powi(32) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn update_clause_range_updates_every_clause_at_p_one() {
+        let mut bank = ClauseBank::new(4, 4);
+        let mut sink = NoopSink;
+        let ctx = plain_ctx();
+        let mut rng = Rng::new(7);
+        let x = lits(&[true, false, true, false]);
+        let mut outputs = BitVec::zeros(4);
+        outputs.set_all();
+        let n = update_clause_range(
+            &mut bank, &mut sink, &mut rng, &ctx, &outputs, &x, u32::MAX, true,
+        );
+        assert_eq!(n, 4);
+        // Type II hit the negative-polarity clauses (ids 1, 3): false
+        // literals 1 and 3 pushed to include
+        assert!(bank.include(1, 1) && bank.include(1, 3));
+        assert!(bank.include(3, 1) && bank.include(3, 3));
+        // and p_update = 0 touches nothing
+        let n = update_clause_range(
+            &mut bank, &mut sink, &mut rng, &ctx, &outputs, &x, 0, true,
+        );
+        assert_eq!(n, 0);
     }
 
     #[test]

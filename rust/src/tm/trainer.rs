@@ -21,11 +21,10 @@
 use crate::engine::{argmax, BatchScorer, FusedEngine};
 use crate::eval::{Backend, Evaluator};
 use crate::index::{IndexStats, IndexedEval};
-use crate::tm::bank::ClauseBank;
 use crate::tm::classifier::MultiClassTM;
-use crate::tm::feedback::{type_i, type_ii, FeedbackCtx};
+use crate::tm::feedback::{clause_update_threshold, update_clause_range, FeedbackCtx};
 use crate::tm::params::TMParams;
-use crate::util::rng::{prob_to_threshold, Rng};
+use crate::util::rng::Rng;
 use crate::util::BitVec;
 
 /// Per-epoch training statistics.
@@ -34,6 +33,47 @@ pub struct EpochStats {
     pub samples: usize,
     pub clause_updates: u64,
     pub flips: u64,
+    /// Wall-clock time of the epoch (populated by `train_epoch` on both
+    /// the sequential and the parallel path).
+    pub elapsed: std::time::Duration,
+    /// Clause updates per second over the epoch.
+    pub updates_per_sec: f64,
+}
+
+impl EpochStats {
+    /// Derive the throughput fields from a measured epoch duration.
+    pub(crate) fn finish(mut self, elapsed: std::time::Duration) -> EpochStats {
+        self.elapsed = elapsed;
+        let secs = elapsed.as_secs_f64();
+        self.updates_per_sec = if secs > 0.0 {
+            self.clause_updates as f64 / secs
+        } else {
+            0.0
+        };
+        self
+    }
+}
+
+/// Derive the two training RNG streams for worker `worker` of a
+/// clause-sharded training run (see [`crate::parallel`]).
+///
+/// * stream 0 — the **sample stream**: one draw per sample (the
+///   negative-class pick). Every worker derives an *identical* clone,
+///   so all shards agree on each sample's negative class without
+///   communicating.
+/// * stream 1 — the **feedback stream**: per-clause update sampling and
+///   Type I literal draws, forked per worker so shards draw
+///   independently.
+///
+/// The sequential [`Trainer`] is exactly worker 0 of this contract,
+/// which is what makes a 1-worker [`crate::parallel::ParallelTrainer`]
+/// epoch bit-identical to a sequential one.
+pub fn train_streams(seed: u64, worker: u64) -> (Rng, Rng) {
+    let mut root = Rng::new(seed);
+    let mut base = root.fork(0x7261_696e); // "rain" — the training domain
+    let sample = base.fork(0x7361_6d70); // "samp": identical for every worker
+    let feedback = base.fork(0xfeed_0000_0000_0000 ^ worker);
+    (sample, feedback)
 }
 
 /// Binds a [`MultiClassTM`] to an evaluation backend and drives
@@ -42,7 +82,12 @@ pub struct Trainer {
     pub tm: MultiClassTM,
     evals: Vec<Box<dyn Evaluator + Send>>,
     backend: Backend,
-    rng: Rng,
+    /// Per-sample draws (negative-class pick) — stream 0 of
+    /// [`train_streams`].
+    sample_rng: Rng,
+    /// Per-clause feedback draws — stream 1 (worker 0) of
+    /// [`train_streams`].
+    feedback_rng: Rng,
     ctx: FeedbackCtx,
     out_scratch: BitVec,
     /// Class-fused inference engine (indexed backend only), built
@@ -61,15 +106,14 @@ impl Trainer {
         let evals = (0..params.classes)
             .map(|_| backend.make(&params))
             .collect();
-        let mut rng = Rng::new(params.seed);
-        // burn the seed into a training stream distinct from dataset RNGs
-        let rng = rng.fork(0x7261_696e);
+        let (sample_rng, feedback_rng) = train_streams(params.seed, 0);
         Trainer {
             out_scratch: BitVec::zeros(params.clauses_per_class),
             ctx: FeedbackCtx::new(params.s, params.boost_true_positive, params.weighted),
             evals,
             backend,
-            rng,
+            sample_rng,
+            feedback_rng,
             tm,
             fused: None,
             fused_dirty: false,
@@ -88,14 +132,14 @@ impl Trainer {
         for (i, ev) in evals.iter_mut().enumerate() {
             ev.rebuild(tm.bank(i));
         }
-        let mut rng = Rng::new(params.seed);
-        let rng = rng.fork(0x7261_696e);
+        let (sample_rng, feedback_rng) = train_streams(params.seed, 0);
         Trainer {
             out_scratch: BitVec::zeros(params.clauses_per_class),
             ctx: FeedbackCtx::new(params.s, params.boost_true_positive, params.weighted),
             evals,
             backend,
-            rng,
+            sample_rng,
+            feedback_rng,
             tm,
             fused: None,
             fused_dirty: false,
@@ -160,7 +204,7 @@ impl Trainer {
         let mut updates = self.update_class(label, literals, true);
         let m = self.tm.classes();
         if m > 1 {
-            let mut neg = self.rng.below(m as u32 - 1) as usize;
+            let mut neg = self.sample_rng.below(m as u32 - 1) as usize;
             if neg >= label {
                 neg += 1;
             }
@@ -173,41 +217,17 @@ impl Trainer {
         let t = self.tm.params.threshold as i32;
         let ev = &mut self.evals[class];
         let score = ev.eval_train(self.tm.bank(class), literals, &mut self.out_scratch);
-        let clamped = score.clamp(-t, t);
-        // target: push score up -> update prob (T - score) / 2T
-        // negative: push score down -> update prob (T + score) / 2T
-        let p = if is_target {
-            (t - clamped) as f64 / (2 * t) as f64
-        } else {
-            (t + clamped) as f64 / (2 * t) as f64
-        };
-        let p_th = prob_to_threshold(p);
-
-        let bank = self.tm.bank_mut(class);
-        let n = bank.clauses();
-        let mut updates = 0;
-        for j in 0..n {
-            if !self.rng.bern_threshold(p_th) {
-                continue;
-            }
-            updates += 1;
-            let positive = ClauseBank::polarity(j) > 0;
-            let clause_out = self.out_scratch.get(j);
-            if positive == is_target {
-                type_i(
-                    bank,
-                    ev.as_mut(),
-                    &mut self.rng,
-                    &self.ctx,
-                    j,
-                    clause_out,
-                    literals,
-                );
-            } else {
-                type_ii(bank, ev.as_mut(), &self.ctx, j, clause_out, literals);
-            }
-        }
-        updates
+        let p_th = clause_update_threshold(t, score, is_target);
+        update_clause_range(
+            self.tm.bank_mut(class),
+            ev.as_mut(),
+            &mut self.feedback_rng,
+            &self.ctx,
+            &self.out_scratch,
+            literals,
+            p_th,
+            is_target,
+        )
     }
 
     /// One epoch over `(literals, label)` pairs in the given order.
@@ -215,12 +235,25 @@ impl Trainer {
         &mut self,
         samples: impl Iterator<Item = (&'a BitVec, usize)>,
     ) -> EpochStats {
+        let t0 = std::time::Instant::now();
         let mut stats = EpochStats::default();
         for (lits, y) in samples {
             stats.clause_updates += self.train_sample(lits, y);
             stats.samples += 1;
         }
-        stats
+        stats.finish(t0.elapsed())
+    }
+
+    /// Rebuild every evaluator's derived state from the banks and drop
+    /// the cached fused engine. Call after mutating `tm` from outside
+    /// the trainer's own feedback loop — the parallel trainer
+    /// ([`crate::parallel`]) uses this when it reassembles shard-trained
+    /// banks into the global machine.
+    pub fn resync_evaluators(&mut self) {
+        for (i, ev) in self.evals.iter_mut().enumerate() {
+            ev.rebuild(self.tm.bank(i));
+        }
+        self.fused_dirty = true;
     }
 
     /// Inference: argmax of per-class scores (eq. 3 / eq. 4). Ties

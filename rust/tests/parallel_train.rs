@@ -1,0 +1,190 @@
+//! Clause-sharded parallel training — the subsystem's correctness
+//! contract:
+//!
+//! 1. one worker == the sequential trainer, **bit-identically** (same
+//!    RNG seeding contract, same feedback body);
+//! 2. after multi-threaded epochs every index invariant holds and the
+//!    rebuilt class-fused serving engine scores exactly what a fresh
+//!    per-class indexed evaluation of the trained banks scores;
+//! 3. asynchronous (stale-vote-sum) training reaches sequential-level
+//!    accuracy on noisy XOR — the arXiv 2009.04861 claim.
+
+use tsetlin_index::data::synth::noisy_xor;
+use tsetlin_index::data::Dataset;
+use tsetlin_index::eval::{Backend, Evaluator};
+use tsetlin_index::index::IndexedEval;
+use tsetlin_index::parallel::ParallelTrainer;
+use tsetlin_index::tm::params::TMParams;
+use tsetlin_index::tm::trainer::Trainer;
+use tsetlin_index::util::Rng;
+
+fn xor_params(clauses: usize) -> TMParams {
+    TMParams::new(2, clauses, 12)
+        .with_threshold(15)
+        .with_s(3.9)
+        .with_seed(11)
+}
+
+fn train_both(
+    epochs: usize,
+    data: &Dataset,
+    params: &TMParams,
+    threads: usize,
+    window: usize,
+) -> (Trainer, ParallelTrainer) {
+    let mut seq = Trainer::new(params.clone(), Backend::Indexed);
+    let mut par = ParallelTrainer::new(params.clone(), threads).with_stale_window(window);
+    let mut order_rng_a = Rng::new(77);
+    let mut order_rng_b = Rng::new(77);
+    for _ in 0..epochs {
+        let order_a = data.epoch_order(&mut order_rng_a);
+        let order_b = data.epoch_order(&mut order_rng_b);
+        assert_eq!(order_a, order_b);
+        seq.train_epoch(data.iter_order(&order_a));
+        par.train_epoch(data.iter_order(&order_b));
+    }
+    (seq, par)
+}
+
+#[test]
+fn one_worker_is_bit_identical_to_sequential() {
+    let params = xor_params(20);
+    let data = noisy_xor(12, 300, 0.1, 5);
+    let (seq, mut par) = train_both(3, &data, &params, 1, 1);
+    for c in 0..2 {
+        assert_eq!(
+            seq.tm.bank(c).states(),
+            par.tm().bank(c).states(),
+            "class {c} TA states diverge at 1 worker"
+        );
+        assert_eq!(seq.tm.bank(c).weights(), par.tm().bank(c).weights());
+    }
+    seq.check_invariants().unwrap();
+    par.check_invariants().unwrap();
+}
+
+#[test]
+fn one_worker_bit_identity_holds_for_weighted_tm() {
+    let params = xor_params(16).with_weighted(true);
+    let data = noisy_xor(12, 200, 0.1, 6);
+    let (seq, mut par) = train_both(2, &data, &params, 1, 1);
+    for c in 0..2 {
+        assert_eq!(seq.tm.bank(c).states(), par.tm().bank(c).states());
+        assert_eq!(
+            seq.tm.bank(c).weights(),
+            par.tm().bank(c).weights(),
+            "class {c} clause weights diverge at 1 worker (weighted TM)"
+        );
+    }
+    par.check_invariants().unwrap();
+}
+
+#[test]
+fn stale_window_is_inert_for_one_worker() {
+    // a single worker always runs sequential-consistent (window 1),
+    // whatever window was requested
+    let params = xor_params(16);
+    let data = noisy_xor(12, 200, 0.1, 7);
+    let (_, par_a) = train_both(2, &data, &params, 1, 1);
+    let (_, par_b) = train_both(2, &data, &params, 1, 64);
+    for c in 0..2 {
+        assert_eq!(par_a.tm().bank(c).states(), par_b.tm().bank(c).states());
+    }
+}
+
+#[test]
+fn multithread_epoch_preserves_invariants_and_fused_scores() {
+    let params = TMParams::new(4, 24, 10).with_threshold(12).with_seed(21);
+    // 4-class toy: label = 2*x0 + x1 with distractors, learnable enough
+    // to drive plenty of flips through the shard indexes
+    let mut rng = Rng::new(31);
+    let rows: Vec<Vec<bool>> = (0..400)
+        .map(|_| (0..10).map(|_| rng.bern(0.5)).collect())
+        .collect();
+    let labels: Vec<usize> = rows
+        .iter()
+        .map(|r| 2 * (r[0] as usize) + r[1] as usize)
+        .collect();
+    let data = Dataset::from_rows("toy4", 10, 4, &rows, labels);
+
+    for threads in [2usize, 3] {
+        let mut par = ParallelTrainer::new(params.clone(), threads).with_stale_window(8);
+        for _ in 0..3 {
+            par.train_epoch(data.iter());
+        }
+        // (b1) every structural invariant: global per-class indexes,
+        // per-shard indexes, shard/global bank agreement
+        par.check_invariants()
+            .unwrap_or_else(|e| panic!("{threads} threads: {e}"));
+
+        // (b2) the rebuilt fused engine == fresh per-class indexed
+        // evaluation of the trained banks
+        for i in 0..40 {
+            let got = par.scores(data.literals(i));
+            let mut want = vec![0i32; 4];
+            for (c, slot) in want.iter_mut().enumerate() {
+                let bank = par.tm().bank(c);
+                let mut ev = IndexedEval::with_shape(bank.clauses(), 20);
+                ev.rebuild(bank);
+                *slot = ev.score(bank, data.literals(i));
+            }
+            assert_eq!(got, want, "{threads} threads, sample {i}");
+        }
+    }
+}
+
+#[test]
+fn multithread_training_is_deterministic() {
+    // the tally is a sum of per-shard integer partials (order-free) and
+    // feedback reads it only after the window barrier, so even
+    // multi-thread runs are exactly reproducible given seed, data
+    // order, thread count, and window
+    let params = xor_params(16);
+    let data = noisy_xor(12, 400, 0.1, 8);
+    let run = || {
+        let mut par = ParallelTrainer::new(params.clone(), 3).with_stale_window(8);
+        for _ in 0..2 {
+            par.train_epoch(data.iter());
+        }
+        (
+            par.tm().bank(0).states().to_vec(),
+            par.tm().bank(1).states().to_vec(),
+        )
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn async_training_matches_sequential_accuracy_on_noisy_xor() {
+    let params = xor_params(20);
+    let train = noisy_xor(12, 4000, 0.15, 1);
+    let test = noisy_xor(12, 1500, 0.0, 2);
+    let (mut seq, mut par) = train_both(20, &train, &params, 2, 8);
+    let acc_seq = seq.accuracy(test.iter());
+    let acc_par = par.accuracy(test.iter());
+    assert!(acc_seq > 0.95, "sequential accuracy {acc_seq}");
+    assert!(acc_par > 0.95, "parallel accuracy {acc_par}");
+    assert!(
+        (acc_seq - acc_par).abs() <= 0.015,
+        "stale vote sums cost accuracy: seq {acc_seq} vs par {acc_par}"
+    );
+    par.check_invariants().unwrap();
+}
+
+#[test]
+fn saved_parallel_model_serves_like_sequentially_loaded_one() {
+    // end-to-end: parallel-train, reassemble, move the machine into a
+    // plain trainer on a different backend — predictions must carry over
+    let params = xor_params(16);
+    let data = noisy_xor(12, 800, 0.1, 3);
+    let mut par = ParallelTrainer::new(params, 3).with_stale_window(4);
+    for _ in 0..8 {
+        par.train_epoch(data.iter());
+    }
+    let probe = noisy_xor(12, 100, 0.0, 4);
+    let from_par: Vec<usize> = (0..probe.len()).map(|i| par.predict(probe.literals(i))).collect();
+    let mut naive = Trainer::from_machine(par.tm().clone(), Backend::Naive);
+    let from_naive: Vec<usize> =
+        (0..probe.len()).map(|i| naive.predict(probe.literals(i))).collect();
+    assert_eq!(from_par, from_naive);
+}
