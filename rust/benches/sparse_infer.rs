@@ -1,0 +1,188 @@
+//! Sparse-delta inference bench: the O(nnz) sparse walk vs the dense
+//! class-fused falsification walk, swept over input density × batch
+//! size × thread count on an IMDb-shaped synthetic workload (2 classes,
+//! learned-length-116 clauses over a k-hot BoW — the §3 Remarks regime
+//! where the paper reports its largest speedups).
+//!
+//! Emits a machine-readable report to `BENCH_sparse_infer.json` at the
+//! repository root via `bench_harness::report::write_json`. Scores are
+//! asserted bit-identical between both engines (and the native-sparse
+//! entry point) before anything is timed.
+//!
+//! ```bash
+//! cargo bench --bench sparse_infer
+//! ```
+
+mod bench_util;
+
+use bench_util::bench;
+use tsetlin_index::bench_harness::report::write_json;
+use tsetlin_index::data::SparseSample;
+use tsetlin_index::engine::{BatchScorer, FusedEngine, SparseEngine};
+use tsetlin_index::tm::classifier::MultiClassTM;
+use tsetlin_index::tm::params::TMParams;
+use tsetlin_index::util::{BitVec, Json, Rng};
+
+const CLASSES: usize = 2;
+const CLAUSES_PER_CLASS: usize = 200;
+const FEATURES: usize = 4000;
+const CLAUSE_LEN: usize = 116;
+const SAMPLES: usize = 256;
+
+/// IMDb-shaped machine: every clause gets `CLAUSE_LEN` random literals,
+/// ~90% of them negated — what TMs actually learn on k-hot BoW data
+/// (most evidence is *absence* of tokens).
+fn make_machine(rng: &mut Rng) -> MultiClassTM {
+    let params = TMParams::new(CLASSES, CLAUSES_PER_CLASS, FEATURES);
+    let mut tm = MultiClassTM::new(params);
+    for c in 0..CLASSES {
+        let bank = tm.bank_mut(c);
+        for j in 0..CLAUSES_PER_CLASS {
+            let mut placed = 0;
+            while placed < CLAUSE_LEN {
+                let feature = rng.below(FEATURES as u32) as usize;
+                let k = if rng.bern(0.9) { FEATURES + feature } else { feature };
+                if !bank.include(j, k) {
+                    bank.set_state(j, k, 1);
+                    placed += 1;
+                }
+            }
+        }
+    }
+    tm
+}
+
+/// k-hot samples at a fixed density.
+fn make_samples(rng: &mut Rng, density: f64) -> Vec<SparseSample> {
+    (0..SAMPLES)
+        .map(|_| {
+            let set: Vec<u32> = (0..FEATURES as u32).filter(|_| rng.bern(density)).collect();
+            SparseSample::new(FEATURES, set)
+        })
+        .collect()
+}
+
+fn main() {
+    let mut rng = Rng::new(0x1911_2607);
+    let tm = make_machine(&mut rng);
+
+    let mut results: Vec<Json> = Vec::new();
+    let mut speedup_at_5pct_1t: Option<f64> = None;
+
+    println!(
+        "workload: {} classes x {} clauses/class, {} features, clause len {}\n",
+        CLASSES, CLAUSES_PER_CLASS, FEATURES, CLAUSE_LEN
+    );
+    for &density in &[0.01f64, 0.02, 0.05, 0.10, 0.30] {
+        let samples = make_samples(&mut rng, density);
+        let lits: Vec<BitVec> = samples.iter().map(SparseSample::to_literals).collect();
+        let measured: f64 = samples.iter().map(SparseSample::density).sum::<f64>()
+            / samples.len() as f64;
+
+        // -- correctness gate: bit-identical before timing ---------------
+        let mut dense_eng = FusedEngine::from_machine(&tm, 1);
+        let mut sparse_eng = SparseEngine::from_machine(&tm, 1);
+        let mut want = vec![0i32; SAMPLES * CLASSES];
+        dense_eng.score_batch_into(&lits, &mut want);
+        let mut got = vec![0i32; SAMPLES * CLASSES];
+        sparse_eng.score_batch_into(&lits, &mut got);
+        assert_eq!(want, got, "sparse (dense-literal entry) != dense");
+        sparse_eng.score_sparse_batch_into(&samples, &mut got);
+        assert_eq!(want, got, "sparse (native entry) != dense");
+
+        println!(
+            "density {:.2} (measured {:.3}): bit-identical on {} samples",
+            density, measured, SAMPLES
+        );
+        println!(
+            "{:<34} {:>14} {:>14} {:>9}",
+            "config", "dense sm/s", "sparse sm/s", "speedup"
+        );
+        for &threads in &[1usize, 4] {
+            let mut dense_eng = FusedEngine::from_machine(&tm, threads);
+            let mut sparse_eng = SparseEngine::from_machine(&tm, threads);
+            for &batch in &[1usize, 64, 256] {
+                let mut out = vec![0i32; batch.min(SAMPLES) * CLASSES];
+                let (dense_min, _) = bench(2, 5, || {
+                    let mut acc = 0i64;
+                    for chunk in lits.chunks(batch) {
+                        let flat = &mut out[..chunk.len() * CLASSES];
+                        dense_eng.score_batch_into(chunk, flat);
+                        acc = acc.wrapping_add(flat[0] as i64);
+                    }
+                    acc
+                });
+                let (sparse_min, _) = bench(2, 5, || {
+                    let mut acc = 0i64;
+                    for chunk in samples.chunks(batch) {
+                        let flat = &mut out[..chunk.len() * CLASSES];
+                        sparse_eng.score_sparse_batch_into(chunk, flat);
+                        acc = acc.wrapping_add(flat[0] as i64);
+                    }
+                    acc
+                });
+                let dense_rate = SAMPLES as f64 / dense_min;
+                let sparse_rate = SAMPLES as f64 / sparse_min;
+                let speedup = sparse_rate / dense_rate;
+                if threads == 1 && batch == 256 && (density - 0.05).abs() < 1e-9 {
+                    speedup_at_5pct_1t = Some(speedup);
+                }
+                println!(
+                    "{:<34} {:>14.0} {:>14.0} {:>8.2}x",
+                    format!("density={density:.2} threads={threads} batch={batch}"),
+                    dense_rate,
+                    sparse_rate,
+                    speedup
+                );
+                results.push(Json::obj([
+                    ("density", Json::num(density)),
+                    ("measured_density", Json::num(measured)),
+                    ("threads", Json::num(threads as f64)),
+                    ("batch", Json::num(batch as f64)),
+                    ("dense_samples_per_s", Json::num(dense_rate)),
+                    ("sparse_samples_per_s", Json::num(sparse_rate)),
+                    ("speedup_sparse_vs_dense", Json::num(speedup)),
+                ]));
+            }
+        }
+        println!();
+    }
+
+    if let Some(s) = speedup_at_5pct_1t {
+        println!("single-thread speedup at 5% density (batch 256): {s:.2}x");
+        assert!(
+            s >= 3.0,
+            "acceptance: expected >= 3x single-thread sparse speedup at 5% density, got {s:.2}x"
+        );
+    }
+
+    let report = Json::obj([
+        ("bench", Json::str("sparse_infer")),
+        (
+            "workload",
+            Json::obj([
+                ("shape", Json::str("imdb-synthetic-khot")),
+                ("classes", Json::num(CLASSES as f64)),
+                ("clauses_per_class", Json::num(CLAUSES_PER_CLASS as f64)),
+                ("features", Json::num(FEATURES as f64)),
+                ("clause_len", Json::num(CLAUSE_LEN as f64)),
+                ("negated_literal_fraction", Json::num(0.9)),
+                ("samples", Json::num(SAMPLES as f64)),
+            ]),
+        ),
+        ("bit_identical_to_dense_fused", Json::Bool(true)),
+        (
+            "single_thread_speedup_at_5pct_density",
+            match speedup_at_5pct_1t {
+                Some(s) => Json::num(s),
+                None => Json::Null,
+            },
+        ),
+        ("results", Json::Arr(results)),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_sparse_infer.json");
+    write_json(&path, &report).expect("writing JSON report");
+    println!("wrote {}", path.display());
+}

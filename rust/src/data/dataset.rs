@@ -43,6 +43,38 @@ impl Dataset {
         }
     }
 
+    /// Build from already-materialized `[x, ¬x]` literal vectors
+    /// (the sparse→dense converter; see
+    /// [`crate::data::SparseDataset::to_dense`]).
+    pub fn from_literal_vecs(
+        name: impl Into<String>,
+        features: usize,
+        classes: usize,
+        samples: Vec<BitVec>,
+        labels: Vec<usize>,
+    ) -> Self {
+        assert_eq!(samples.len(), labels.len());
+        for s in &samples {
+            assert_eq!(s.len(), 2 * features, "literal width mismatch");
+        }
+        for &y in &labels {
+            assert!(y < classes, "label {y} out of range");
+        }
+        Dataset {
+            name: name.into(),
+            features,
+            classes,
+            samples,
+            labels,
+        }
+    }
+
+    /// Sparsify into the k-hot representation the O(nnz) sparse-delta
+    /// engine scores natively.
+    pub fn to_sparse(&self) -> crate::data::SparseDataset {
+        crate::data::SparseDataset::from_dense(self)
+    }
+
     /// `[x, ¬x]` literal vector from a feature row.
     pub fn literals_from_bools(row: &[bool]) -> BitVec {
         let o = row.len();

@@ -4,19 +4,27 @@
 //! line — `label idx idx idx ...` with `label ∈ {0,1}` and `idx` the
 //! set feature ids. (The paper binarizes IMDb into a k-hot BoW over the
 //! 5k–20k most frequent terms; exporting that to this format is a
-//! one-liner from any tokenizer.) Fallback: the calibrated Zipf
-//! generator in [`crate::data::synth`].
+//! one-liner from any tokenizer.) Parsing goes straight into the sparse
+//! k-hot representation ([`SparseDataset`]) — the input is ≥95% zeros,
+//! so the sparse-delta inference engine consumes it without ever
+//! densifying; [`parse_sparse_bow`] densifies only for callers that
+//! need `[x, ¬x]` literal vectors. Repeated feature indices on a line
+//! are rejected (a double-set index is a corrupt export, not a k-hot
+//! document). Fallback: the calibrated Zipf generator in
+//! [`crate::data::synth`].
 
 use std::path::Path;
 
 use anyhow::{ensure, Context, Result};
 
 use crate::data::dataset::Dataset;
+use crate::data::sparse::{SparseDataset, SparseSample};
 use crate::data::synth;
 
-/// Parse the one-line-per-document sparse format.
-pub fn parse_sparse_bow(text: &str, features: usize) -> Result<Dataset> {
-    let mut rows: Vec<Vec<bool>> = Vec::new();
+/// Parse the one-line-per-document sparse format into the k-hot
+/// representation (no densification).
+pub fn parse_sparse_bow_to_sparse(text: &str, features: usize) -> Result<SparseDataset> {
+    let mut samples: Vec<SparseSample> = Vec::new();
     let mut labels = Vec::new();
     for (lineno, line) in text.lines().enumerate() {
         let line = line.trim();
@@ -30,7 +38,7 @@ pub fn parse_sparse_bow(text: &str, features: usize) -> Result<Dataset> {
             .parse()
             .with_context(|| format!("line {}: bad label", lineno + 1))?;
         ensure!(label < 2, "line {}: label must be 0/1", lineno + 1);
-        let mut row = vec![false; features];
+        let mut set: Vec<u32> = Vec::new();
         for tok in parts {
             let idx: usize = tok
                 .parse()
@@ -40,24 +48,65 @@ pub fn parse_sparse_bow(text: &str, features: usize) -> Result<Dataset> {
                 "line {}: index {idx} >= features {features}",
                 lineno + 1
             );
-            row[idx] = true;
+            set.push(idx as u32);
         }
-        rows.push(row);
+        let nnz = set.len();
+        let sample = SparseSample::new(features, set);
+        ensure!(
+            sample.nnz() == nnz,
+            "line {}: repeated feature index (k-hot documents set each index once)",
+            lineno + 1
+        );
+        samples.push(sample);
         labels.push(label);
     }
-    ensure!(!rows.is_empty(), "no documents in file");
-    Ok(Dataset::from_rows(
+    ensure!(!samples.is_empty(), "no documents in file");
+    Ok(SparseDataset::new(
         format!("imdb-bow-{features}"),
         features,
         2,
-        &rows,
+        samples,
         labels,
     ))
 }
 
-/// Load a sparse-BoW file if present, else synthesize. `samples` caps
-/// the returned size either way; train/test use disjoint synthetic
-/// streams (`split_tag` 0 = train, 1 = test).
+/// Parse the one-line-per-document sparse format, densified into
+/// `[x, ¬x]` literal vectors.
+pub fn parse_sparse_bow(text: &str, features: usize) -> Result<Dataset> {
+    Ok(parse_sparse_bow_to_sparse(text, features)?.to_dense())
+}
+
+/// Read and parse a provided BoW file, reporting *why* a fallback
+/// happens — a broken file must never be silently replaced by
+/// synthetic data (scores on fabricated documents would masquerade as
+/// real results).
+fn try_load_sparse(path: &Path, features: usize) -> Option<SparseDataset> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(text) => text,
+        Err(e) => {
+            eprintln!(
+                "warning: cannot read bow file {}: {e}; falling back to synthetic data",
+                path.display()
+            );
+            return None;
+        }
+    };
+    match parse_sparse_bow_to_sparse(&text, features) {
+        Ok(ds) => Some(ds),
+        Err(e) => {
+            eprintln!(
+                "warning: cannot parse bow file {}: {e:#}; falling back to synthetic data",
+                path.display()
+            );
+            None
+        }
+    }
+}
+
+/// Load a sparse-BoW file if present, else synthesize (with a stderr
+/// warning when a *provided* file is unreadable or malformed).
+/// `samples` caps the returned size either way; train/test use
+/// disjoint synthetic streams (`split_tag` 0 = train, 1 = test).
 pub fn load_or_synthesize(
     path: Option<&Path>,
     features: usize,
@@ -66,14 +115,29 @@ pub fn load_or_synthesize(
     seed: u64,
 ) -> Dataset {
     if let Some(path) = path {
-        if let Ok(text) = std::fs::read_to_string(path) {
-            if let Ok(ds) = parse_sparse_bow(&text, features) {
-                return ds.take(samples);
-            }
+        if let Some(ds) = try_load_sparse(path, features) {
+            return ds.to_dense().take(samples);
         }
     }
     let skip = (split_tag as usize) * samples;
     synth::bow(features, samples + skip, seed).slice(skip, skip + samples)
+}
+
+/// Sparse twin of [`load_or_synthesize`]: the file path parses without
+/// densifying; the synthetic fallback is sparsified after generation.
+pub fn load_or_synthesize_sparse(
+    path: Option<&Path>,
+    features: usize,
+    samples: usize,
+    split_tag: u64,
+    seed: u64,
+) -> SparseDataset {
+    if let Some(path) = path {
+        if let Some(ds) = try_load_sparse(path, features) {
+            return ds.take(samples);
+        }
+    }
+    SparseDataset::from_dense(&load_or_synthesize(None, features, samples, split_tag, seed))
 }
 
 #[cfg(test)]
@@ -93,11 +157,42 @@ mod tests {
     }
 
     #[test]
+    fn parses_straight_into_sparse() {
+        let text = "1 5 1 3\n0 2\n";
+        let sp = parse_sparse_bow_to_sparse(text, 6).unwrap();
+        assert_eq!(sp.len(), 2);
+        assert_eq!(sp.sample(0).ones(), &[1, 3, 5]); // sorted
+        assert_eq!(sp.sample(1).ones(), &[2]);
+        assert_eq!(sp.label(0), 1);
+        // densified twin is literal-identical
+        let dense = parse_sparse_bow(text, 6).unwrap();
+        for i in 0..2 {
+            assert_eq!(&sp.sample(i).to_literals(), dense.literals(i));
+        }
+    }
+
+    #[test]
     fn rejects_bad_input() {
         assert!(parse_sparse_bow("2 1", 4).is_err()); // label out of range
         assert!(parse_sparse_bow("0 9", 4).is_err()); // index out of range
         assert!(parse_sparse_bow("x 1", 4).is_err()); // bad label
         assert!(parse_sparse_bow("", 4).is_err()); // empty
+    }
+
+    #[test]
+    fn rejects_repeated_feature_index() {
+        // regression: '0 2 2' used to silently double-set feature 2
+        let err = parse_sparse_bow("0 1 2 2\n", 4).unwrap_err();
+        assert!(
+            err.to_string().contains("repeated feature index"),
+            "unexpected error: {err}"
+        );
+        assert!(err.to_string().contains("line 1"), "{err}");
+        // the same line deeper in the file reports its own line number
+        let err = parse_sparse_bow("0 1\n1 3 3\n", 4).unwrap_err();
+        assert!(err.to_string().contains("line 2"), "{err}");
+        // and the sparse parser rejects identically
+        assert!(parse_sparse_bow_to_sparse("0 2 2\n", 4).is_err());
     }
 
     #[test]
@@ -113,12 +208,41 @@ mod tests {
     }
 
     #[test]
+    fn sparse_loader_matches_dense_loader() {
+        let dense = load_or_synthesize(None, 500, 20, 0, 13);
+        let sp = load_or_synthesize_sparse(None, 500, 20, 0, 13);
+        assert_eq!(sp.len(), dense.len());
+        for i in 0..sp.len() {
+            assert_eq!(&sp.sample(i).to_literals(), dense.literals(i));
+            assert_eq!(sp.label(i), dense.label(i));
+        }
+    }
+
+    #[test]
+    fn malformed_file_falls_back_to_synthetic() {
+        // a provided-but-broken file must still yield a dataset (the
+        // loader warns on stderr) rather than erroring or panicking —
+        // and the result is the synthetic stream, not a partial parse
+        let p = std::env::temp_dir().join(format!("tmi-bow-bad-{}.txt", std::process::id()));
+        std::fs::write(&p, "0 1 1\n").unwrap(); // repeated index: rejected
+        let ds = load_or_synthesize(Some(&p), 500, 10, 0, 11);
+        let synth = load_or_synthesize(None, 500, 10, 0, 11);
+        assert_eq!(ds.len(), synth.len());
+        assert_eq!(ds.literals(0), synth.literals(0));
+        let sp = load_or_synthesize_sparse(Some(&p), 500, 10, 0, 11);
+        assert_eq!(sp.len(), 10);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
     fn file_path_roundtrip() {
         let p = std::env::temp_dir().join(format!("tmi-bow-{}.txt", std::process::id()));
         std::fs::write(&p, "1 0 1\n0 2\n").unwrap();
         let ds = load_or_synthesize(Some(&p), 3, 10, 0, 0);
         assert_eq!(ds.len(), 2);
         assert_eq!(ds.label(0), 1);
+        let sp = load_or_synthesize_sparse(Some(&p), 3, 10, 0, 0);
+        assert_eq!(sp.sample(0).ones(), &[0, 1]);
         std::fs::remove_file(&p).unwrap();
     }
 }

@@ -14,7 +14,9 @@ pub mod binarize;
 pub mod dataset;
 pub mod imdb;
 pub mod mnist;
+pub mod sparse;
 pub mod synth;
 
 pub use binarize::binarize_images;
 pub use dataset::Dataset;
+pub use sparse::{SparseDataset, SparseSample};

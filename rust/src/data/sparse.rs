@@ -1,0 +1,292 @@
+//! Sparse sample representation for k-hot workloads.
+//!
+//! High-dimensional bag-of-words inputs (IMDb binarized BoW at 5k–20k
+//! features) are ≥95% zeros, yet [`crate::data::Dataset`] stores every
+//! sample as a dense `[x, ¬x]` literal vector and every evaluator walks
+//! it feature by feature. A [`SparseSample`] stores only the *set*
+//! feature ids — the representation the O(nnz) sparse-delta engine
+//! ([`crate::engine::SparseEngine`]) scores directly, and what the
+//! libsvm-lite IMDb loader ([`crate::data::imdb`]) parses without ever
+//! densifying. Dense↔sparse converters keep both worlds exact: a
+//! round-trip through either direction reproduces the same literal
+//! vectors bit for bit.
+
+use crate::data::dataset::Dataset;
+use crate::util::BitVec;
+
+/// One k-hot sample: the sorted, deduplicated ids of its set features.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SparseSample {
+    features: usize,
+    /// Strictly increasing set-feature ids, all `< features`.
+    set: Vec<u32>,
+}
+
+impl SparseSample {
+    /// Build from raw indices (sorted + deduplicated here). Panics on
+    /// out-of-range ids.
+    pub fn new(features: usize, mut set: Vec<u32>) -> Self {
+        set.sort_unstable();
+        set.dedup();
+        if let Some(&last) = set.last() {
+            assert!((last as usize) < features, "feature id {last} >= {features}");
+        }
+        SparseSample { features, set }
+    }
+
+    /// Extract the set features of a dense `[x, ¬x]` literal vector
+    /// (reads the positive half; the negated half must be its exact
+    /// complement, which every [`Dataset`] sample satisfies).
+    pub fn from_literals(literals: &BitVec) -> Self {
+        let o = literals.len() / 2;
+        debug_assert_eq!(literals.len(), 2 * o);
+        debug_assert!(
+            (0..o).all(|k| literals.get(k) != literals.get(o + k)),
+            "literal vector is not complement-structured [x, ¬x]"
+        );
+        let set = literals
+            .iter_ones()
+            .take_while(|&k| k < o)
+            .map(|k| k as u32)
+            .collect();
+        SparseSample { features: o, set }
+    }
+
+    /// Materialize the dense `[x, ¬x]` literal vector.
+    pub fn to_literals(&self) -> BitVec {
+        let o = self.features;
+        let mut lits = BitVec::zeros(2 * o);
+        let mut next = self.set.iter().peekable();
+        for k in 0..o {
+            if next.peek().is_some_and(|&&s| s as usize == k) {
+                lits.set(k);
+                next.next();
+            } else {
+                lits.set(o + k);
+            }
+        }
+        lits
+    }
+
+    #[inline]
+    pub fn features(&self) -> usize {
+        self.features
+    }
+
+    /// The sorted set-feature ids — what the sparse walk iterates.
+    #[inline]
+    pub fn ones(&self) -> &[u32] {
+        &self.set
+    }
+
+    /// Number of set features.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.set.len()
+    }
+
+    /// Fraction of features set.
+    pub fn density(&self) -> f64 {
+        if self.features == 0 {
+            0.0
+        } else {
+            self.set.len() as f64 / self.features as f64
+        }
+    }
+}
+
+/// A labelled k-hot dataset: the sparse twin of [`Dataset`].
+#[derive(Clone, Debug)]
+pub struct SparseDataset {
+    pub name: String,
+    pub features: usize,
+    pub classes: usize,
+    samples: Vec<SparseSample>,
+    labels: Vec<usize>,
+}
+
+impl SparseDataset {
+    pub fn new(
+        name: impl Into<String>,
+        features: usize,
+        classes: usize,
+        samples: Vec<SparseSample>,
+        labels: Vec<usize>,
+    ) -> Self {
+        assert_eq!(samples.len(), labels.len());
+        for s in &samples {
+            assert_eq!(s.features(), features, "sample width mismatch");
+        }
+        for &y in &labels {
+            assert!(y < classes, "label {y} out of range");
+        }
+        SparseDataset {
+            name: name.into(),
+            features,
+            classes,
+            samples,
+            labels,
+        }
+    }
+
+    /// Sparsify a dense dataset (exact: `to_dense` round-trips).
+    pub fn from_dense(ds: &Dataset) -> Self {
+        let samples = (0..ds.len())
+            .map(|i| SparseSample::from_literals(ds.literals(i)))
+            .collect();
+        SparseDataset {
+            name: ds.name.clone(),
+            features: ds.features,
+            classes: ds.classes,
+            samples,
+            labels: (0..ds.len()).map(|i| ds.label(i)).collect(),
+        }
+    }
+
+    /// Densify into the `[x, ¬x]` literal representation.
+    pub fn to_dense(&self) -> Dataset {
+        Dataset::from_literal_vecs(
+            self.name.clone(),
+            self.features,
+            self.classes,
+            self.samples.iter().map(SparseSample::to_literals).collect(),
+            self.labels.clone(),
+        )
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    #[inline]
+    pub fn sample(&self, i: usize) -> &SparseSample {
+        &self.samples[i]
+    }
+
+    /// All samples as one slice — the shape the sparse batch scorer
+    /// consumes without copying.
+    #[inline]
+    pub fn all_samples(&self) -> &[SparseSample] {
+        &self.samples
+    }
+
+    #[inline]
+    pub fn label(&self, i: usize) -> usize {
+        self.labels[i]
+    }
+
+    /// Iterate `(sample, label)` pairs in index order.
+    pub fn iter(&self) -> impl Iterator<Item = (&SparseSample, usize)> {
+        self.samples.iter().zip(self.labels.iter().copied())
+    }
+
+    /// First `n` samples as a new dataset (bench subsets).
+    pub fn take(&self, n: usize) -> SparseDataset {
+        let n = n.min(self.len());
+        SparseDataset {
+            name: self.name.clone(),
+            features: self.features,
+            classes: self.classes,
+            samples: self.samples[..n].to_vec(),
+            labels: self.labels[..n].to_vec(),
+        }
+    }
+
+    /// Mean fraction of features set — the quantity the sparse walk's
+    /// work is proportional to (and what the auto-selection heuristic
+    /// compares against its threshold).
+    pub fn mean_density(&self) -> f64 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        let nnz: usize = self.samples.iter().map(SparseSample::nnz).sum();
+        nnz as f64 / (self.samples.len() * self.features) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_sorts_and_dedupes() {
+        let s = SparseSample::new(10, vec![7, 2, 2, 5, 7]);
+        assert_eq!(s.ones(), &[2, 5, 7]);
+        assert_eq!(s.nnz(), 3);
+        assert!((s.density() - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = ">= 4")]
+    fn sample_rejects_out_of_range() {
+        SparseSample::new(4, vec![1, 4]);
+    }
+
+    #[test]
+    fn literal_roundtrip_is_exact() {
+        let s = SparseSample::new(6, vec![0, 3, 5]);
+        let lits = s.to_literals();
+        assert_eq!(lits.len(), 12);
+        // positive half: exactly {0, 3, 5}; negated half: the complement
+        for k in 0..6 {
+            let on = [0usize, 3, 5].contains(&k);
+            assert_eq!(lits.get(k), on, "x{k}");
+            assert_eq!(lits.get(6 + k), !on, "¬x{k}");
+        }
+        assert_eq!(SparseSample::from_literals(&lits), s);
+    }
+
+    #[test]
+    fn empty_and_full_samples() {
+        let empty = SparseSample::new(5, vec![]);
+        let lits = empty.to_literals();
+        assert_eq!(lits.count_ones_prefix(5), 0);
+        assert_eq!(lits.count_ones(), 5); // all negated literals set
+        let full = SparseSample::new(5, (0..5).collect());
+        assert_eq!(full.to_literals().count_ones_prefix(5), 5);
+    }
+
+    #[test]
+    fn dense_sparse_dense_roundtrip() {
+        let ds = Dataset::from_rows(
+            "t",
+            4,
+            2,
+            &[
+                vec![true, false, true, false],
+                vec![false, false, false, false],
+                vec![true, true, true, true],
+            ],
+            vec![0, 1, 0],
+        );
+        let sp = SparseDataset::from_dense(&ds);
+        assert_eq!(sp.len(), 3);
+        assert_eq!(sp.sample(0).ones(), &[0, 2]);
+        assert_eq!(sp.sample(1).nnz(), 0);
+        assert_eq!(sp.label(1), 1);
+        let back = sp.to_dense();
+        for i in 0..3 {
+            assert_eq!(back.literals(i), ds.literals(i), "sample {i}");
+            assert_eq!(back.label(i), ds.label(i));
+        }
+    }
+
+    #[test]
+    fn mean_density() {
+        let sp = SparseDataset::new(
+            "t",
+            10,
+            2,
+            vec![
+                SparseSample::new(10, vec![1]),
+                SparseSample::new(10, vec![1, 2, 3]),
+            ],
+            vec![0, 1],
+        );
+        assert!((sp.mean_density() - 0.2).abs() < 1e-12);
+    }
+}

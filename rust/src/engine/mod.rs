@@ -14,19 +14,30 @@
 //! * [`batch`] — the [`BatchScorer`] contract (with a loop-`score`
 //!   default so every evaluator backend participates) and
 //!   [`FusedEngine`], which pools per-worker scratch across calls.
-//! * [`shard`] — scoped-thread batch splitting over the shared
-//!   read-only index: per-worker scratch, zero locks, zero model
-//!   copies — replacing the old clone-per-replica serving scheme.
+//! * [`shard`] — scoped-thread batch splitting over a shared read-only
+//!   index ([`ShardScorer`]): per-worker scratch, zero locks, zero
+//!   model copies — replacing the old clone-per-replica serving scheme.
+//! * [`sparse`] — [`SparseFusedIndex`]/[`SparseEngine`]: the O(nnz)
+//!   sparse-delta walk for k-hot workloads — per-class all-zeros
+//!   baseline scores plus per-literal delta lists, so scoring touches
+//!   only the *set* features. [`InferMode`] selects between the dense
+//!   and sparse engines (auto-picking by input density).
 //!
 //! The decomposition mirrors the class/clause-parallel architecture of
 //! *Massively Parallel and Asynchronous Tsetlin Machine Architecture*
 //! (arXiv 2009.04861) applied to the clause-indexed evaluator of the
-//! source paper (arXiv 2004.03188).
+//! source paper (arXiv 2004.03188); the sparse-delta path exploits the
+//! weighted-clause compression of arXiv 1911.12607 (one skipped
+//! falsification saves a multi-vote list entry).
 
 pub mod batch;
 pub mod fused;
 pub mod shard;
+pub mod sparse;
 
 pub use batch::{argmax, BatchScorer, FusedEngine};
 pub use fused::{FusedIndex, FusedScratch, Maintenance};
-pub use shard::score_batch_sharded;
+pub use shard::{score_batch_sharded, ShardScorer};
+pub use sparse::{
+    InferMode, SparseEngine, SparseFusedIndex, SparseScratch, SPARSE_DENSITY_THRESHOLD,
+};

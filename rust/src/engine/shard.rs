@@ -1,17 +1,50 @@
 //! Batch sharding: split a batch across scoped worker threads that
-//! share one read-only [`FusedIndex`].
+//! share one read-only index.
 //!
 //! This replaces the coordinator's old clone-the-whole-machine replica
 //! scheme for CPU inference. The index is immutable during scoring, so
 //! workers need no locks and no model copies — each worker gets only a
-//! [`FusedScratch`] (generation stamps + walk buffer, a few hundred KB
-//! at paper scale) and a disjoint slice of the output matrix. Memory
+//! per-worker scratch (generation stamps + walk buffers, a few hundred
+//! KB at paper scale) and a disjoint slice of the output matrix. Memory
 //! cost is `O(workers * total_clauses)` scratch instead of
 //! `O(workers * model)`, and the scratches are pooled by the caller so
 //! steady-state serving allocates nothing.
+//!
+//! The splitter is generic over [`ShardScorer`], so the dense
+//! class-fused walk ([`FusedIndex`] over `BitVec` literal vectors) and
+//! the O(nnz) sparse-delta walk ([`crate::engine::SparseFusedIndex`]
+//! over either `BitVec`s or [`crate::data::SparseSample`]s) share one
+//! threading implementation.
 
 use crate::engine::fused::{FusedIndex, FusedScratch};
 use crate::util::BitVec;
+
+/// A read-only index that scores one sample of type `Sample` against
+/// every class, using caller-owned mutable scratch — the contract the
+/// generic batch splitter threads over.
+pub trait ShardScorer<Sample: Sync>: Sync {
+    /// Per-worker mutable evaluation state.
+    type Scratch: Send;
+
+    /// Number of classes `m` (one score per sample per class).
+    fn classes(&self) -> usize;
+
+    /// Score one sample into `out` (`out.len() == classes()`).
+    fn score_one(&self, scratch: &mut Self::Scratch, sample: &Sample, out: &mut [i32]);
+}
+
+impl ShardScorer<BitVec> for FusedIndex {
+    type Scratch = FusedScratch;
+
+    fn classes(&self) -> usize {
+        FusedIndex::classes(self)
+    }
+
+    #[inline]
+    fn score_one(&self, scratch: &mut FusedScratch, literals: &BitVec, out: &mut [i32]) {
+        self.score_into(scratch, literals, out);
+    }
+}
 
 /// Score `batch` into the row-major `out` matrix
 /// (`out[i * classes + c]` = class `c`'s score for sample `i`),
@@ -20,10 +53,10 @@ use crate::util::BitVec;
 /// `out.len()` must equal `batch.len() * index.classes()`. With a
 /// single scratch (or a single-sample batch) this degrades to the
 /// serial loop with no thread spawn.
-pub fn score_batch_sharded(
-    index: &FusedIndex,
-    scratches: &mut [FusedScratch],
-    batch: &[BitVec],
+pub fn score_batch_sharded<Sample: Sync, S: ShardScorer<Sample>>(
+    index: &S,
+    scratches: &mut [S::Scratch],
+    batch: &[Sample],
     out: &mut [i32],
 ) {
     let m = index.classes();
@@ -61,15 +94,15 @@ pub fn score_batch_sharded(
 }
 
 /// Serial scoring of a chunk (also the per-worker body).
-fn score_chunk(
-    index: &FusedIndex,
-    scratch: &mut FusedScratch,
-    batch: &[BitVec],
+fn score_chunk<Sample: Sync, S: ShardScorer<Sample>>(
+    index: &S,
+    scratch: &mut S::Scratch,
+    batch: &[Sample],
     out: &mut [i32],
 ) {
     let m = index.classes();
-    for (lits, row) in batch.iter().zip(out.chunks_mut(m)) {
-        index.score_into(scratch, lits, row);
+    for (sample, row) in batch.iter().zip(out.chunks_mut(m)) {
+        index.score_one(scratch, sample, row);
     }
 }
 
@@ -125,7 +158,7 @@ mod tests {
         let (tm, idx) = setup(&mut rng);
         let mut scratches: Vec<_> = (0..4).map(|_| idx.make_scratch()).collect();
         // empty batch
-        score_batch_sharded(&idx, &mut scratches, &[], &mut []);
+        score_batch_sharded(&idx, &mut scratches, &[] as &[BitVec], &mut []);
         // single sample
         let batch = random_batch(&mut rng, 1, 32);
         let mut out = vec![0i32; 4];

@@ -6,6 +6,11 @@
 //!   insert/delete, and the falsification-driven evaluator.
 //! * [`stats`] — occupancy statistics backing the §3 "Remarks"
 //!   work-ratio analysis.
+//!
+//! The [`liststore`]/[`position`] pair is also the storage substrate of
+//! the class-fused serving indexes in [`crate::engine`] — both the
+//! dense fused walk and the O(nnz) sparse-delta walk run the same O(1)
+//! insert/delete algebra over global clause ids.
 
 pub mod class_index;
 pub mod incremental;

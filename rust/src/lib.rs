@@ -20,7 +20,9 @@
 //!   bit-parallel ablation) behind a common trait.
 //! * [`engine`] — the batched, class-fused inference engine: one
 //!   falsification walk per sample scores every class, batches shard
-//!   across threads over a shared read-only index.
+//!   across threads over a shared read-only index. Includes the O(nnz)
+//!   sparse-delta engine for k-hot workloads (all-zeros baseline plus
+//!   per-literal delta lists; auto-selected by input density).
 //! * [`parallel`] — clause-sharded asynchronous parallel *training*
 //!   (arXiv 2009.04861 scheme): per-worker clause shards with their own
 //!   O(1)-maintained falsification indexes, a shared atomic vote tally
@@ -49,7 +51,8 @@ pub mod runtime;
 pub mod tm;
 pub mod util;
 
-pub use engine::{BatchScorer, FusedEngine};
+pub use data::{SparseDataset, SparseSample};
+pub use engine::{BatchScorer, FusedEngine, InferMode, SparseEngine};
 pub use eval::Backend;
 pub use parallel::ParallelTrainer;
 pub use tm::classifier::MultiClassTM;

@@ -26,7 +26,7 @@ use tsetlin_index::coordinator::{BatchPolicy, Coordinator, CpuBackend, XlaBacken
 use tsetlin_index::data::mnist::Split;
 use tsetlin_index::data::synth::ImageStyle;
 use tsetlin_index::data::{imdb, mnist, Dataset};
-use tsetlin_index::engine::argmax;
+use tsetlin_index::engine::{argmax, InferMode, SPARSE_DENSITY_THRESHOLD};
 use tsetlin_index::eval::Backend;
 use tsetlin_index::parallel::{resolve_threads, ParallelTrainer, DEFAULT_STALE_WINDOW};
 use tsetlin_index::runtime::{Manifest, Runtime};
@@ -126,6 +126,26 @@ fn load_dataset(args: &Args, split: Split) -> Result<Dataset> {
     }
 }
 
+/// Parse `--infer auto|dense|sparse` (dense/sparse engine selection for
+/// indexed-backend inference).
+fn parse_infer_mode(args: &Args) -> Result<InferMode> {
+    args.get_or("infer", "auto").parse().map_err(anyhow::Error::msg)
+}
+
+/// One line explaining which inference engine serves this dataset —
+/// the density auto-selection is otherwise invisible.
+fn report_infer_choice(mode: InferMode, resolved: InferMode, density: f64) {
+    match mode {
+        InferMode::Auto => eprintln!(
+            "auto-selected {} inference (feature density {:.4}, sparse below {})",
+            resolved.name(),
+            density,
+            SPARSE_DENSITY_THRESHOLD
+        ),
+        forced => eprintln!("inference engine: {} (forced)", forced.name()),
+    }
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let train = load_dataset(args, Split::Train)?;
     let test = load_dataset(args, Split::Test)?;
@@ -163,12 +183,21 @@ fn cmd_train(args: &Args) -> Result<()> {
         backend.name(),
         threads
     );
+    let infer_mode = parse_infer_mode(args)?;
     let mut order_rng = Rng::new(args.parse_or("seed", 42u64)? ^ 0x0def_ace0);
     let mut trainer = if threads > 1 {
         AnyTrainer::Par(ParallelTrainer::new(params, threads).with_stale_window(stale_window))
     } else {
         AnyTrainer::Seq(Trainer::new(params, backend))
     };
+    trainer.set_infer_mode(infer_mode);
+    // selection only applies to the indexed backend's engines (the
+    // parallel trainer is always indexed); the per-epoch test accuracy
+    // below is served by whichever engine this resolves to
+    if backend == Backend::Indexed {
+        let resolved = trainer.resolve_infer_mode(test.all_literals());
+        report_infer_choice(infer_mode, resolved, test.mean_feature_density());
+    }
     for epoch in 0..epochs {
         let order = train.epoch_order(&mut order_rng);
         let stats = trainer.train_epoch(train.iter_order(&order));
@@ -224,6 +253,20 @@ impl AnyTrainer {
             AnyTrainer::Par(p) => p.tm(),
         }
     }
+
+    fn set_infer_mode(&mut self, mode: InferMode) {
+        match self {
+            AnyTrainer::Seq(t) => t.set_infer_mode(mode),
+            AnyTrainer::Par(p) => p.set_infer_mode(mode),
+        }
+    }
+
+    fn resolve_infer_mode(&mut self, batch: &[BitVec]) -> InferMode {
+        match self {
+            AnyTrainer::Seq(t) => t.resolve_infer_mode(batch),
+            AnyTrainer::Par(p) => p.trainer().resolve_infer_mode(batch),
+        }
+    }
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
@@ -235,11 +278,20 @@ fn cmd_eval(args: &Args) -> Result<()> {
         .parse()
         .map_err(anyhow::Error::msg)?;
     let threads: usize = args.parse_or("threads", 1)?;
-    let mut trainer = Trainer::from_machine(tm, backend).with_infer_threads(threads);
+    let infer_mode = parse_infer_mode(args)?;
+    let mut trainer = Trainer::from_machine(tm, backend)
+        .with_infer_threads(threads)
+        .with_infer_mode(infer_mode);
     // Batch scoring over the whole set: for the indexed backend this is
-    // the class-fused engine, sharded across --threads workers. Score
-    // width comes from the model — a dataset with more labels than the
-    // model has classes still evaluates (those labels just never match).
+    // the class-fused engine (or, for low-density k-hot inputs, the
+    // O(nnz) sparse-delta engine), sharded across --threads workers.
+    // Score width comes from the model — a dataset with more labels
+    // than the model has classes still evaluates (those labels just
+    // never match).
+    if backend == Backend::Indexed {
+        let resolved = trainer.resolve_infer_mode(test.all_literals());
+        report_infer_choice(infer_mode, resolved, test.mean_feature_density());
+    }
     let m = trainer.tm.classes();
     let mut flat = vec![0i32; test.len() * m];
     let t0 = std::time::Instant::now();
@@ -429,7 +481,11 @@ const USAGE: &str = "usage: tmi <train|eval|table|work-ratio|serve|info> [--key 
                              0 = every available core; indexed backend only)
              [--stale-window N]  (samples between worker syncs, default 8;
                                   vote sums are read up to N samples stale)
+             [--infer auto|dense|sparse]  (indexed-backend inference engine:
+                             dense class-fused walk or O(nnz) sparse-delta
+                             walk; auto picks by input density)
   eval       --model model.tm --dataset ... [--backend B] [--threads N]
+             [--infer auto|dense|sparse]
   table      --id 1|2|3 [--scale quick|standard|paper] [--out-dir results/]
   work-ratio --dataset ... --clauses N [--epochs N]
   serve      --model model.tm [--artifacts artifacts/] [--listen host:port]

@@ -147,6 +147,14 @@ impl ParallelTrainer {
         self.inner.set_infer_threads(threads);
     }
 
+    /// Dense/sparse inference-engine selection policy (see
+    /// [`Trainer::set_infer_mode`]). Epoch writebacks dirty both
+    /// serving engines, so a mid-training mode switch is always served
+    /// from a fresh snapshot.
+    pub fn set_infer_mode(&mut self, mode: crate::engine::InferMode) {
+        self.inner.set_infer_mode(mode);
+    }
+
     /// One epoch over `(literals, label)` pairs in the given order,
     /// sharded across the workers. Returns aggregate stats with
     /// wall-clock throughput.

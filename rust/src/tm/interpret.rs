@@ -99,6 +99,43 @@ mod tests {
     }
 
     #[test]
+    fn boundary_literals_render_correctly() {
+        // first/last positive and first/last negated literal of o = 4
+        let b = bank_with(&[(0, 0), (0, 3), (0, 4), (0, 7)]);
+        assert_eq!(clause_string(&b, 0, None), "x0 ∧ x3 ∧ ¬x0 ∧ ¬x3");
+    }
+
+    #[test]
+    fn top_clauses_skips_empty_and_truncates() {
+        let mut tm = MultiClassTM::new(TMParams::new(2, 4, 4));
+        let bank = tm.bank_mut(1);
+        bank.set_state(0, 1, 0); // only clause 0 is non-empty
+        let top = top_clauses(&tm, 1, 10, None);
+        assert_eq!(top.len(), 1, "{top:?}");
+        assert!(top[0].contains("x1"), "{top:?}");
+        // a machine with no inclusions yields no clauses at all
+        assert!(top_clauses(&tm, 0, 10, None).is_empty());
+    }
+
+    #[test]
+    fn describe_interprets_trained_weighted_machine() {
+        // interpretability over a *weighted* bank: the weight shows up
+        // and every line renders without panicking
+        let mut tm = MultiClassTM::new(TMParams::new(2, 4, 4).with_weighted(true));
+        let bank = tm.bank_mut(0);
+        bank.set_state(0, 0, 1);
+        bank.set_state(0, 5, 2);
+        bank.set_weight(0, 9);
+        bank.set_state(3, 2, 0);
+        for j in 0..4 {
+            let _ = describe_clause(tm.bank(0), j, None);
+        }
+        let top = top_clauses(&tm, 0, 4, None);
+        assert!(top[0].starts_with("C1+ (w=9)"), "{top:?}");
+        assert!(top[0].contains("x0 ∧ ¬x1"), "{top:?}");
+    }
+
+    #[test]
     fn top_clauses_orders_by_weight_then_length() {
         let mut tm = MultiClassTM::new(TMParams::new(2, 4, 4));
         let bank = tm.bank_mut(0);

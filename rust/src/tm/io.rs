@@ -202,6 +202,50 @@ mod tests {
     }
 
     #[test]
+    fn weighted_save_load_score_roundtrip() {
+        // a *weighted* multiclass model: weights != 1 must survive the
+        // roundtrip and the reloaded machine must score bit-identically
+        // on every backend
+        let params = TMParams::new(3, 8, 10).with_seed(21).with_weighted(true);
+        let mut tr = Trainer::new(params, Backend::Indexed);
+        let mut rng = Rng::new(17);
+        let samples: Vec<(BitVec, usize)> = (0..150)
+            .map(|_| {
+                let y = rng.below(3) as usize;
+                let bits: Vec<bool> = (0..10).map(|k| k % 3 == y || rng.bern(0.25)).collect();
+                let mut lits = bits.clone();
+                lits.extend(bits.iter().map(|b| !b));
+                (BitVec::from_bools(&lits), y)
+            })
+            .collect();
+        for _ in 0..4 {
+            tr.train_epoch(samples.iter().map(|(l, y)| (l, *y)));
+        }
+        let tm = tr.tm;
+        let grew = (0..3).any(|c| tm.bank(c).weights().iter().any(|&w| w > 1));
+        assert!(grew, "weighted training never grew a weight");
+
+        let mut buf = Vec::new();
+        save_to(&tm, &mut buf).unwrap();
+        let tm2 = load_from(&mut buf.as_slice()).unwrap();
+        assert!(tm2.params.weighted);
+        for c in 0..3 {
+            assert_eq!(tm.bank(c).states(), tm2.bank(c).states(), "class {c}");
+            assert_eq!(tm.bank(c).weights(), tm2.bank(c).weights(), "class {c}");
+        }
+        // scores agree between the original and the reload, across
+        // backends (weighted votes flow through every path)
+        let mut orig = Trainer::from_machine(tm, Backend::Indexed);
+        let mut naive = Trainer::from_machine(tm2.clone(), Backend::Naive);
+        let mut indexed = Trainer::from_machine(tm2, Backend::Indexed);
+        for (lits, _) in samples.iter().take(40) {
+            let want = orig.scores(lits);
+            assert_eq!(naive.scores(lits), want);
+            assert_eq!(indexed.scores(lits), want);
+        }
+    }
+
+    #[test]
     fn load_rejects_garbage() {
         assert!(load_from(&mut &b"not a model"[..]).is_err());
         let mut buf = Vec::new();

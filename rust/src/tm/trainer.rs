@@ -12,13 +12,19 @@
 //! Inference (`predict`/`scores`/`accuracy`/`score_batch_into`) for the
 //! **indexed** backend routes through the class-fused batch engine
 //! ([`crate::engine::FusedEngine`]): one falsification walk per sample
-//! scores every class. The engine is a lazily (re)built snapshot —
-//! training marks it dirty instead of paying double index maintenance,
-//! and the next inference call rebuilds it once. The naive/bitpacked
-//! ablation backends keep their per-class scan so backend comparisons
-//! still measure what they claim to. All paths are bit-identical.
+//! scores every class. Low-density k-hot inputs route instead to the
+//! O(nnz) sparse-delta engine ([`crate::engine::SparseEngine`]) — the
+//! [`InferMode`] policy auto-picks by measured input density, or can be
+//! forced either way. Both engines are lazily (re)built snapshots —
+//! training marks them dirty instead of paying double index
+//! maintenance, and the next inference call rebuilds once. The
+//! naive/bitpacked ablation backends keep their per-class scan so
+//! backend comparisons still measure what they claim to. All paths are
+//! bit-identical.
 
-use crate::engine::{argmax, BatchScorer, FusedEngine};
+use crate::engine::{
+    argmax, BatchScorer, FusedEngine, InferMode, SparseEngine, SPARSE_DENSITY_THRESHOLD,
+};
 use crate::eval::{Backend, Evaluator};
 use crate::index::{IndexStats, IndexedEval};
 use crate::tm::classifier::MultiClassTM;
@@ -94,6 +100,12 @@ pub struct Trainer {
     /// lazily and invalidated by training steps.
     fused: Option<FusedEngine>,
     fused_dirty: bool,
+    /// O(nnz) sparse-delta inference engine (indexed backend only),
+    /// built lazily when [`InferMode`] selects it.
+    sparse: Option<SparseEngine>,
+    sparse_dirty: bool,
+    /// Dense/sparse engine selection policy for the indexed backend.
+    infer_mode: InferMode,
     /// Worker threads the engine shards large batches across.
     infer_threads: usize,
     /// Reusable per-class score buffer for `predict`.
@@ -117,6 +129,9 @@ impl Trainer {
             tm,
             fused: None,
             fused_dirty: false,
+            sparse: None,
+            sparse_dirty: false,
+            infer_mode: InferMode::Auto,
             infer_threads: 1,
             class_scratch: Vec::new(),
         }
@@ -143,6 +158,9 @@ impl Trainer {
             tm,
             fused: None,
             fused_dirty: false,
+            sparse: None,
+            sparse_dirty: false,
+            infer_mode: InferMode::Auto,
             infer_threads: 1,
             class_scratch: Vec::new(),
         }
@@ -166,16 +184,36 @@ impl Trainer {
         if let Some(engine) = &mut self.fused {
             engine.set_threads(self.infer_threads);
         }
+        if let Some(engine) = &mut self.sparse {
+            engine.set_threads(self.infer_threads);
+        }
     }
 
     pub fn infer_threads(&self) -> usize {
         self.infer_threads
     }
 
-    /// Drop the cached inference engine. Call after mutating `tm`
-    /// directly (training through the trainer invalidates it itself).
+    /// Dense/sparse engine selection policy for the indexed backend
+    /// (builder form).
+    pub fn with_infer_mode(mut self, mode: InferMode) -> Self {
+        self.set_infer_mode(mode);
+        self
+    }
+
+    /// See [`Trainer::with_infer_mode`].
+    pub fn set_infer_mode(&mut self, mode: InferMode) {
+        self.infer_mode = mode;
+    }
+
+    pub fn infer_mode(&self) -> InferMode {
+        self.infer_mode
+    }
+
+    /// Drop the cached inference engines. Call after mutating `tm`
+    /// directly (training through the trainer invalidates them itself).
     pub fn invalidate_engine(&mut self) {
         self.fused_dirty = true;
+        self.sparse_dirty = true;
     }
 
     /// The lazily built class-fused engine (indexed backend): rebuilt
@@ -194,13 +232,73 @@ impl Trainer {
         self.fused.as_mut().expect("fused engine present")
     }
 
+    /// The lazily built sparse-delta engine (indexed backend): rebuilt
+    /// here iff training dirtied it since the last sparse inference.
+    fn ensure_sparse(&mut self) -> &mut SparseEngine {
+        if self.sparse.is_none() {
+            self.sparse = Some(SparseEngine::from_machine(&self.tm, self.infer_threads));
+            self.sparse_dirty = false;
+        } else if self.sparse_dirty {
+            self.sparse
+                .as_mut()
+                .expect("sparse engine present")
+                .rebuild(&self.tm);
+            self.sparse_dirty = false;
+        }
+        self.sparse.as_mut().expect("sparse engine present")
+    }
+
+    /// Feature density of a complement-structured `[x, ¬x]` literal
+    /// vector, or `None` if the vector is not complement-structured
+    /// (the sparse walk requires `¬x = !x`; the word-parallel proof is
+    /// O(o/64), negligible next to either walk).
+    fn sparse_density(&self, literals: &BitVec) -> Option<f64> {
+        let o = self.tm.params.features;
+        if o == 0 || literals.len() != 2 * o || !literals.halves_complement() {
+            return None;
+        }
+        Some(literals.count_ones_prefix(o) as f64 / o as f64)
+    }
+
+    /// Resolve [`InferMode::Auto`] against a batch: sparse iff every
+    /// probed sample is complement-structured and the probe's mean
+    /// feature density is below [`SPARSE_DENSITY_THRESHOLD`]. Forced
+    /// modes pass through unchanged.
+    pub fn resolve_infer_mode(&self, batch: &[BitVec]) -> InferMode {
+        match self.infer_mode {
+            InferMode::Dense => InferMode::Dense,
+            InferMode::Sparse => InferMode::Sparse,
+            InferMode::Auto => {
+                // a small prefix probe keeps selection O(1) per batch
+                const PROBE: usize = 32;
+                let n = batch.len().min(PROBE);
+                if n == 0 {
+                    return InferMode::Dense;
+                }
+                let mut total = 0.0;
+                for literals in &batch[..n] {
+                    match self.sparse_density(literals) {
+                        Some(d) => total += d,
+                        None => return InferMode::Dense,
+                    }
+                }
+                if total / n as f64 < SPARSE_DENSITY_THRESHOLD {
+                    InferMode::Sparse
+                } else {
+                    InferMode::Dense
+                }
+            }
+        }
+    }
+
     /// One full update for a labelled sample: Type I/II on the target
     /// class, then on one uniformly-drawn negative class.
     pub fn train_sample(&mut self, literals: &BitVec, label: usize) -> u64 {
         debug_assert!(label < self.tm.classes());
-        // the fused inference snapshot goes stale; rebuild lazily at the
-        // next inference call instead of paying double maintenance here
+        // the inference snapshots go stale; rebuild lazily at the next
+        // inference call instead of paying double maintenance here
         self.fused_dirty = true;
+        self.sparse_dirty = true;
         let mut updates = self.update_class(label, literals, true);
         let m = self.tm.classes();
         if m > 1 {
@@ -254,6 +352,7 @@ impl Trainer {
             ev.rebuild(self.tm.bank(i));
         }
         self.fused_dirty = true;
+        self.sparse_dirty = true;
     }
 
     /// Inference: argmax of per-class scores (eq. 3 / eq. 4). Ties
@@ -282,7 +381,10 @@ impl Trainer {
     pub fn scores_into(&mut self, literals: &BitVec, out: &mut [i32]) {
         assert_eq!(out.len(), self.tm.classes());
         if self.backend == Backend::Indexed {
-            self.ensure_fused().scores_into(literals, out);
+            match self.resolve_infer_mode(std::slice::from_ref(literals)) {
+                InferMode::Sparse => self.ensure_sparse().scores_into(literals, out),
+                _ => self.ensure_fused().scores_into(literals, out),
+            }
         } else {
             for (i, slot) in out.iter_mut().enumerate() {
                 *slot = self.evals[i].score(self.tm.bank(i), literals);
@@ -298,7 +400,10 @@ impl Trainer {
         let m = self.tm.classes();
         assert_eq!(out.len(), batch.len() * m, "output matrix shape mismatch");
         if self.backend == Backend::Indexed {
-            self.ensure_fused().score_batch_into(batch, out);
+            match self.resolve_infer_mode(batch) {
+                InferMode::Sparse => self.ensure_sparse().score_batch_into(batch, out),
+                _ => self.ensure_fused().score_batch_into(batch, out),
+            }
         } else {
             // one class at a time over the whole batch: the evaluator's
             // per-clause state stays hot across samples

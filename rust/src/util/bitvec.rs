@@ -104,6 +104,53 @@ impl BitVec {
         self.words.iter().map(|w| w.count_ones() as usize).sum()
     }
 
+    /// Is this an exact `[x, ¬x]` literal vector — bit `o + k` the
+    /// complement of bit `k` for every `k < o = len/2`? Word-parallel
+    /// (O(len/64)), so the sparse inference path can *prove* the
+    /// structure it relies on instead of assuming it; odd-length
+    /// vectors are never complement-structured.
+    pub fn halves_complement(&self) -> bool {
+        if self.len % 2 != 0 {
+            return false;
+        }
+        let o = self.len / 2;
+        let base = o / 64;
+        let shift = o % 64;
+        for i in 0..o.div_ceil(64) {
+            // bits [64i, 64i+64) of the upper (negated) half
+            let lo = self.words[base + i] >> shift;
+            let hi = if shift == 0 {
+                0
+            } else {
+                self.words.get(base + i + 1).copied().unwrap_or(0) << (64 - shift)
+            };
+            let upper = lo | hi;
+            let bits = (o - 64 * i).min(64);
+            let mask = if bits == 64 { !0u64 } else { (1u64 << bits) - 1 };
+            if (self.words[i] ^ upper) & mask != mask {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Count set bits among the first `n` bits (`n <= len`). Used by the
+    /// sparse inference path to measure feature density from the
+    /// positive half of a `[x, ¬x]` literal vector.
+    pub fn count_ones_prefix(&self, n: usize) -> usize {
+        debug_assert!(n <= self.len);
+        let full = n / 64;
+        let mut total: usize = self.words[..full]
+            .iter()
+            .map(|w| w.count_ones() as usize)
+            .sum();
+        let tail = n % 64;
+        if tail != 0 {
+            total += (self.words[full] & ((1u64 << tail) - 1)).count_ones() as usize;
+        }
+        total
+    }
+
     /// Raw words — the bit-parallel evaluator works directly on these.
     #[inline]
     pub fn words(&self) -> &[u64] {
@@ -233,6 +280,58 @@ mod tests {
         for (i, &b) in bits.iter().enumerate() {
             assert_eq!(v.get(i), b, "bit {i}");
         }
+    }
+
+    #[test]
+    fn halves_complement_matches_naive() {
+        // lengths straddling word boundaries, including odd halves
+        for o in [0usize, 1, 3, 31, 32, 33, 63, 64, 65, 100, 128, 130] {
+            let mut v = BitVec::zeros(2 * o);
+            for k in 0..o {
+                if k % 3 == 0 {
+                    v.set(k);
+                } else {
+                    v.set(o + k);
+                }
+            }
+            assert!(v.halves_complement(), "o = {o}");
+            if o > 0 {
+                // break one pair both ways: both set, then both clear
+                let k = o / 2;
+                let mut both = v.clone();
+                both.set(k);
+                both.set(o + k);
+                assert!(!both.halves_complement(), "both set, o = {o}");
+                let mut neither = v.clone();
+                neither.clear(k);
+                neither.clear(o + k);
+                assert!(!neither.halves_complement(), "both clear, o = {o}");
+            }
+        }
+        // count_ones == o is NOT sufficient: {x0, ¬x0 set; x9, ¬x9 clear}
+        let mut v = BitVec::zeros(20);
+        v.set(0);
+        v.set(10);
+        for k in 1..9 {
+            v.set(10 + k);
+        }
+        assert_eq!(v.count_ones(), 10);
+        assert!(!v.halves_complement());
+        // odd length is never complement-structured
+        assert!(!BitVec::zeros(7).halves_complement());
+    }
+
+    #[test]
+    fn count_ones_prefix_matches_naive() {
+        let mut v = BitVec::zeros(200);
+        for i in [0usize, 1, 5, 63, 64, 100, 127, 128, 190, 199] {
+            v.set(i);
+        }
+        for n in [0usize, 1, 2, 63, 64, 65, 128, 150, 200] {
+            let naive = (0..n).filter(|&i| v.get(i)).count();
+            assert_eq!(v.count_ones_prefix(n), naive, "prefix {n}");
+        }
+        assert_eq!(v.count_ones_prefix(v.len()), v.count_ones());
     }
 
     #[test]

@@ -71,6 +71,101 @@ fn work_ratio_reports_stats() {
     assert!(stdout.contains("work ratio"), "stdout: {stdout}");
 }
 
+/// Train a tiny IMDb-synthetic model (sparse workload) and return the
+/// model path; caller removes the file.
+fn train_tiny_imdb(tag: &str) -> std::path::PathBuf {
+    let model = std::env::temp_dir().join(format!("tmi-cli-{tag}-{}.tm", std::process::id()));
+    let out = tmi()
+        .args([
+            "train", "--dataset", "imdb", "--features", "1500", "--samples", "60",
+            "--clauses", "40", "--epochs", "1", "--out", model.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "train failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    model
+}
+
+#[test]
+fn eval_auto_selects_sparse_on_imdb() {
+    let model = train_tiny_imdb("auto");
+    // the Zipf IMDb fallback is low-density, so auto picks sparse and
+    // says so (the selection is otherwise invisible)
+    let out = tmi()
+        .args([
+            "eval", "--model", model.to_str().unwrap(), "--dataset", "imdb",
+            "--features", "1500", "--samples", "40",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "eval failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("auto-selected sparse inference"),
+        "stderr: {stderr}"
+    );
+    assert!(stderr.contains("feature density"), "stderr: {stderr}");
+    std::fs::remove_file(&model).unwrap();
+}
+
+#[test]
+fn eval_forced_infer_modes_agree() {
+    let model = train_tiny_imdb("forced");
+    let mut accuracies = Vec::new();
+    for mode in ["dense", "sparse"] {
+        let out = tmi()
+            .args([
+                "eval", "--model", model.to_str().unwrap(), "--dataset", "imdb",
+                "--features", "1500", "--samples", "40", "--infer", mode,
+            ])
+            .output()
+            .unwrap();
+        assert!(
+            out.status.success(),
+            "eval --infer {mode} failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(
+            stderr.contains(&format!("inference engine: {mode} (forced)")),
+            "stderr: {stderr}"
+        );
+        // same model, same data: the accuracy line must be identical
+        let stdout = String::from_utf8_lossy(&out.stdout).to_string();
+        let acc = stdout
+            .split_whitespace()
+            .nth(1)
+            .expect("accuracy value")
+            .to_string();
+        accuracies.push(acc);
+    }
+    assert_eq!(accuracies[0], accuracies[1], "dense vs sparse accuracy");
+    std::fs::remove_file(&model).unwrap();
+}
+
+#[test]
+fn eval_rejects_bad_infer_mode() {
+    let model = train_tiny_imdb("badmode");
+    let out = tmi()
+        .args([
+            "eval", "--model", model.to_str().unwrap(), "--dataset", "imdb",
+            "--features", "1500", "--samples", "10", "--infer", "warp",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown infer mode"));
+    std::fs::remove_file(&model).unwrap();
+}
+
 #[test]
 fn eval_missing_model_errors() {
     let out = tmi()

@@ -1,0 +1,306 @@
+//! Differential testing of the O(nnz) sparse-delta inference engine.
+//!
+//! The sparse walk must be **bit-identical** to every dense evaluation
+//! path — the class-fused engine, the per-class indexed evaluator, and
+//! the reference semantics — on arbitrary machines (plain and
+//! weighted, fresh and mid-training) and arbitrary k-hot inputs, and
+//! its baseline/delta bookkeeping must survive arbitrary flip
+//! sequences with invariants intact. Property tests driven by the
+//! crate's deterministic RNG (fixed seeds, no shrinking).
+
+use tsetlin_index::data::imdb;
+use tsetlin_index::data::synth::{bow, noisy_xor};
+use tsetlin_index::data::{Dataset, SparseDataset, SparseSample};
+use tsetlin_index::engine::{
+    BatchScorer, FusedEngine, InferMode, Maintenance, SparseEngine, SparseFusedIndex,
+};
+use tsetlin_index::eval::traits::{reference_score, FlipSink};
+use tsetlin_index::eval::{Backend, Evaluator};
+use tsetlin_index::index::IndexedEval;
+use tsetlin_index::tm::bank::Flip;
+use tsetlin_index::tm::classifier::MultiClassTM;
+use tsetlin_index::tm::params::TMParams;
+use tsetlin_index::tm::trainer::Trainer;
+use tsetlin_index::util::{BitVec, Rng};
+
+/// Random machine with states forced through `set_state` (arbitrary
+/// mid-training-shaped TA configurations), optionally with random
+/// clause weights.
+fn random_machine(
+    rng: &mut Rng,
+    classes: usize,
+    clauses: usize,
+    features: usize,
+    density: f64,
+    weighted: bool,
+) -> MultiClassTM {
+    let params = TMParams::new(classes, clauses, features).with_weighted(weighted);
+    let mut tm = MultiClassTM::new(params);
+    let n_lit = 2 * features;
+    for c in 0..classes {
+        let bank = tm.bank_mut(c);
+        for j in 0..clauses {
+            for k in 0..n_lit {
+                if rng.bern(density) {
+                    bank.set_state(j, k, (rng.below(11) as i8) - 5);
+                }
+            }
+            if weighted {
+                bank.set_weight(j, 1 + rng.below(7));
+            }
+        }
+    }
+    tm
+}
+
+fn random_khot(rng: &mut Rng, features: usize, density: f64) -> SparseSample {
+    let set: Vec<u32> = (0..features as u32).filter(|_| rng.bern(density)).collect();
+    SparseSample::new(features, set)
+}
+
+/// Assert the four paths agree on one machine + sample set: sparse
+/// engine == fused engine == per-class IndexedEval == reference.
+fn assert_all_paths_agree(tm: &MultiClassTM, samples: &[SparseSample], tag: &str) {
+    let classes = tm.classes();
+    let lits: Vec<BitVec> = samples.iter().map(SparseSample::to_literals).collect();
+    let mut sparse = SparseEngine::from_machine(tm, 1);
+    let mut fused = FusedEngine::from_machine(tm, 1);
+    let mut evals: Vec<IndexedEval> = (0..classes).map(|_| IndexedEval::new(&tm.params)).collect();
+    for (c, ev) in evals.iter_mut().enumerate() {
+        ev.rebuild(tm.bank(c));
+    }
+    let mut s_out = vec![0i32; classes];
+    let mut f_out = vec![0i32; classes];
+    for (i, sample) in samples.iter().enumerate() {
+        sparse.score_sparse_into(sample, &mut s_out);
+        fused.scores_into(&lits[i], &mut f_out);
+        assert_eq!(s_out, f_out, "{tag}: sparse != fused at sample {i}");
+        for c in 0..classes {
+            assert_eq!(
+                s_out[c],
+                evals[c].score(tm.bank(c), &lits[i]),
+                "{tag}: sparse != IndexedEval at sample {i} class {c}"
+            );
+            assert_eq!(
+                s_out[c],
+                reference_score(tm.bank(c), &lits[i], false),
+                "{tag}: sparse != reference at sample {i} class {c}"
+            );
+        }
+    }
+    // batch entry points (dense-literal and native-sparse) agree too
+    let mut via_lits = vec![0i32; samples.len() * classes];
+    sparse.score_batch_into(&lits, &mut via_lits);
+    let mut via_sparse = vec![0i32; samples.len() * classes];
+    sparse.score_sparse_batch_into(samples, &mut via_sparse);
+    assert_eq!(via_lits, via_sparse, "{tag}: batch entry points diverge");
+    let mut fused_batch = vec![0i32; samples.len() * classes];
+    fused.score_batch_into(&lits, &mut fused_batch);
+    assert_eq!(via_sparse, fused_batch, "{tag}: sparse batch != fused batch");
+}
+
+#[test]
+fn property_random_machines_all_paths_agree() {
+    let mut rng = Rng::new(0x5bab5e);
+    for trial in 0..25 {
+        let classes = 2 + rng.below(3) as usize;
+        let clauses = 2 * (1 + rng.below(8) as usize);
+        let features = 3 + rng.below(50) as usize;
+        let weighted = trial % 2 == 1;
+        let machine_density = 0.05 + rng.unit_f64() * 0.3;
+        let tm = random_machine(&mut rng, classes, clauses, features, machine_density, weighted);
+        let samples: Vec<SparseSample> = (0..12)
+            .map(|_| {
+                let d = rng.unit_f64() * 0.5;
+                random_khot(&mut rng, features, d)
+            })
+            .collect();
+        assert_all_paths_agree(&tm, &samples, &format!("trial {trial} weighted={weighted}"));
+    }
+}
+
+#[test]
+fn extreme_inputs_agree() {
+    let mut rng = Rng::new(0xedfe);
+    let tm = random_machine(&mut rng, 3, 10, 30, 0.2, true);
+    let samples = vec![
+        SparseSample::new(30, vec![]),               // all zeros
+        SparseSample::new(30, (0..30).collect()),    // all ones
+        SparseSample::new(30, vec![0]),              // single low bit
+        SparseSample::new(30, vec![29]),             // single high bit
+        SparseSample::new(30, vec![0, 29]),
+    ];
+    assert_all_paths_agree(&tm, &samples, "extremes");
+}
+
+/// Baseline/delta invariants hold after **every** insert/delete — the
+/// sparse mirror of the dense index's flip-storm property, checked at
+/// every step rather than only at the end.
+#[test]
+fn invariants_hold_after_every_flip() {
+    let mut rng = Rng::new(0xf11b);
+    for weighted in [false, true] {
+        let classes = 2;
+        let clauses = 6;
+        let features = 8;
+        let n_lit = 2 * features;
+        let mut tm = random_machine(&mut rng, classes, clauses, features, 0.1, weighted);
+        let mut idx = SparseFusedIndex::from_machine(&tm, Maintenance::Maintained);
+        idx.check_invariants(&tm).unwrap();
+        for step in 0..1200 {
+            let c = rng.below(classes as u32) as usize;
+            let j = rng.below(clauses as u32) as usize;
+            let k = rng.below(n_lit as u32) as usize;
+            let gid = idx.global_id(c, j);
+            let bank = tm.bank_mut(c);
+            let mut flipped = false;
+            if rng.bern(0.5) {
+                if bank.bump_up(j, k) == Flip::Included {
+                    let (count, weight) = (bank.count(j), bank.weight(j));
+                    idx.on_include(gid, k as u32, count, weight);
+                    flipped = true;
+                }
+            } else if bank.bump_down(j, k) == Flip::Excluded {
+                let (count, weight) = (bank.count(j), bank.weight(j));
+                idx.on_exclude(gid, k as u32, count, weight);
+                flipped = true;
+            }
+            if weighted && rng.bern(0.1) {
+                let nonempty = tm.bank(c).count(j) > 0;
+                let delta = if rng.bern(0.5) { 1 } else { -1 };
+                let w = tm.bank(c).weight(j) as i32;
+                if w + delta >= 1 {
+                    tm.bank_mut(c).set_weight(j, (w + delta) as u32);
+                    idx.on_weight(gid, delta, nonempty);
+                    flipped = true;
+                }
+            }
+            if flipped {
+                idx.check_invariants(&tm)
+                    .unwrap_or_else(|e| panic!("step {step} weighted={weighted}: {e}"));
+            }
+        }
+        // the stormed index still scores bit-identically
+        let mut scratch = idx.make_scratch();
+        let mut out = vec![0i32; classes];
+        for _ in 0..20 {
+            let sample = random_khot(&mut rng, features, 0.3);
+            let lits = sample.to_literals();
+            idx.score_sparse_into(&mut scratch, sample.ones(), &mut out);
+            for c in 0..classes {
+                assert_eq!(out[c], reference_score(tm.bank(c), &lits, false));
+            }
+        }
+    }
+}
+
+/// Mid-training states: after each epoch of real feedback (plain and
+/// weighted), a fresh sparse snapshot scores bit-identically to the
+/// dense paths, and the trainer's own auto/sparse/dense modes agree.
+#[test]
+fn mid_training_states_agree() {
+    for weighted in [false, true] {
+        let train = noisy_xor(12, 200, 0.1, 77);
+        let params = TMParams::new(2, 16, 12)
+            .with_threshold(10)
+            .with_s(3.0)
+            .with_weighted(weighted);
+        let mut tr = Trainer::new(params, Backend::Indexed);
+        let mut rng = Rng::new(0x7e57);
+        let probe: Vec<SparseSample> = (0..25).map(|_| random_khot(&mut rng, 12, 0.3)).collect();
+        for epoch in 0..4 {
+            let order = train.epoch_order(&mut rng);
+            tr.train_epoch(train.iter_order(&order));
+            assert_all_paths_agree(
+                &tr.tm,
+                &probe,
+                &format!("epoch {epoch} weighted={weighted}"),
+            );
+            // the trainer's engine selection never changes scores
+            let probe_lits: Vec<BitVec> = probe.iter().map(SparseSample::to_literals).collect();
+            let mut by_mode: Vec<Vec<i32>> = Vec::new();
+            for mode in [InferMode::Dense, InferMode::Sparse, InferMode::Auto] {
+                tr.set_infer_mode(mode);
+                let mut flat = vec![0i32; probe_lits.len() * 2];
+                tr.score_batch_into(&probe_lits, &mut flat);
+                by_mode.push(flat);
+            }
+            assert_eq!(by_mode[0], by_mode[1], "dense != sparse (weighted={weighted})");
+            assert_eq!(by_mode[0], by_mode[2], "dense != auto (weighted={weighted})");
+        }
+    }
+}
+
+/// The Zipf IMDb fallback (the workload the sparse engine exists for):
+/// train on it, then check every path on real low-density documents.
+#[test]
+fn imdb_fallback_workload_agrees() {
+    // the Zipf generator draws >= 120 tokens per document, so features
+    // must be well above that for the workload to be genuinely sparse
+    let features = 2000;
+    let train = imdb::load_or_synthesize(None, features, 80, 0, 5);
+    let test_sparse = imdb::load_or_synthesize_sparse(None, features, 40, 1, 5);
+    assert!(
+        test_sparse.mean_density() < 0.2,
+        "synthetic IMDb should be sparse, got {}",
+        test_sparse.mean_density()
+    );
+    let params = TMParams::new(2, 10, features).with_threshold(12).with_s(4.0);
+    let mut tr = Trainer::new(params, Backend::Indexed);
+    tr.train_epoch(train.iter());
+    assert_all_paths_agree(&tr.tm, test_sparse.all_samples(), "imdb");
+    // auto mode picks sparse on this workload and dense on a dense one
+    let test_dense = test_sparse.to_dense();
+    assert_eq!(
+        tr.resolve_infer_mode(test_dense.all_literals()),
+        InferMode::Sparse
+    );
+    let dense_lits: Vec<BitVec> = (0..10)
+        .map(|i| {
+            SparseSample::new(features, (0..features as u32).filter(|k| (k + i) % 2 == 0).collect())
+                .to_literals()
+        })
+        .collect();
+    assert_eq!(tr.resolve_infer_mode(&dense_lits), InferMode::Dense);
+}
+
+/// Thread sharding never changes sparse scores.
+#[test]
+fn sparse_sharding_is_bit_identical() {
+    let mut rng = Rng::new(0x5aa2_d911);
+    let tm = random_machine(&mut rng, 4, 12, 40, 0.15, true);
+    let samples: Vec<SparseSample> = (0..64).map(|_| random_khot(&mut rng, 40, 0.1)).collect();
+    let mut serial = SparseEngine::from_machine(&tm, 1);
+    let mut want = vec![0i32; 64 * 4];
+    serial.score_sparse_batch_into(&samples, &mut want);
+    for threads in [2usize, 3, 8] {
+        let mut eng = SparseEngine::from_machine(&tm, threads);
+        let mut got = vec![0i32; 64 * 4];
+        eng.score_sparse_batch_into(&samples, &mut got);
+        assert_eq!(got, want, "{threads} threads");
+    }
+}
+
+/// Dense↔sparse dataset conversion round-trips exactly, including
+/// through the BoW file format.
+#[test]
+fn dataset_conversion_roundtrip() {
+    let ds = bow(200, 40, 9);
+    let sp = SparseDataset::from_dense(&ds);
+    let back = sp.to_dense();
+    for i in 0..ds.len() {
+        assert_eq!(back.literals(i), ds.literals(i), "sample {i}");
+        assert_eq!(back.label(i), ds.label(i));
+    }
+    let again = back.to_sparse();
+    for i in 0..ds.len() {
+        assert_eq!(again.sample(i), sp.sample(i));
+    }
+    let _ = Dataset::from_literal_vecs(
+        "t",
+        ds.features,
+        ds.classes,
+        (0..ds.len()).map(|i| ds.literals(i).clone()).collect(),
+        (0..ds.len()).map(|i| ds.label(i)).collect(),
+    );
+}
