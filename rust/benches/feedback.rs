@@ -1,0 +1,197 @@
+//! Learning-side feedback bench: bit-sliced TA banks (word-parallel
+//! Type I/II feedback, geometric-skip Bernoulli masks) vs the scalar
+//! per-byte layout, swept over clauses × literals × specificity `s`.
+//!
+//! Both layouts consume the *same* skip-sampled mask stream (the shared
+//! RNG contract `rust/tests/feedback_equiv.rs` proves bit-exact), so
+//! this isolates exactly the representation cost: per-lane `i8` bumps
+//! vs ~8 words of ripple-carry bitplane arithmetic per 64 automata. A
+//! quick differential pass re-checks bit-identity on every config
+//! before anything is timed.
+//!
+//! Emits a machine-readable report to `BENCH_feedback.json` at the
+//! repository root via `bench_harness::report::write_json` — the first
+//! entry of the learning-side perf trajectory (inference already has
+//! `BENCH_batch_infer.json` / `BENCH_sparse_infer.json`).
+//!
+//! ```bash
+//! cargo bench --bench feedback
+//! ```
+
+mod bench_util;
+
+use bench_util::bench;
+use tsetlin_index::bench_harness::report::write_json;
+use tsetlin_index::eval::traits::NoopSink;
+use tsetlin_index::tm::bank::{ClauseBank, TaLayout};
+use tsetlin_index::tm::feedback::{update_clause_range, FeedbackCtx, FeedbackScratch};
+use tsetlin_index::util::{BitVec, Json, Rng};
+
+/// (clauses, n_literals, s) sweep. 1024 literals × s >= 4 is the
+/// acceptance config (>= 3x single-thread feedback throughput).
+const CONFIGS: &[(usize, usize, f64)] = &[
+    (256, 256, 4.0),
+    (256, 1024, 4.0),
+    (256, 1024, 10.0),
+    (64, 4096, 4.0),
+];
+
+const SAMPLES: usize = 24;
+const WARMUP: usize = 2;
+const REPS: usize = 8;
+
+/// Mid-training bank in the given layout (~30% touched automata).
+fn make_bank(layout: TaLayout, clauses: usize, n_lit: usize, seed: u64) -> ClauseBank {
+    let mut rng = Rng::new(seed);
+    let mut bank = ClauseBank::new_with_layout(clauses, n_lit, layout);
+    for j in 0..clauses {
+        for k in 0..n_lit {
+            if rng.bern(0.3) {
+                bank.set_state(j, k, (rng.below(21) as i8) - 10);
+            }
+        }
+    }
+    bank
+}
+
+/// Fixed per-sample (literals, outputs) pairs. Outputs are synthetic
+/// (~70% firing): feedback dispatch only branches on the bit, and a
+/// fixed stream keeps the measured work identical across layouts.
+fn make_samples(clauses: usize, n_lit: usize, seed: u64) -> Vec<(BitVec, BitVec)> {
+    let mut rng = Rng::new(seed);
+    (0..SAMPLES)
+        .map(|_| {
+            let lits =
+                BitVec::from_bools(&(0..n_lit).map(|_| rng.bern(0.5)).collect::<Vec<_>>());
+            let outs =
+                BitVec::from_bools(&(0..clauses).map(|_| rng.bern(0.7)).collect::<Vec<_>>());
+            (lits, outs)
+        })
+        .collect()
+}
+
+/// One measured pass: every clause updated (p_update = 1) against every
+/// sample, alternating target/negative so Type I and Type II both run.
+/// Returns total clause updates applied.
+fn feedback_pass(
+    bank: &mut ClauseBank,
+    rng: &mut Rng,
+    ctx: &FeedbackCtx,
+    samples: &[(BitVec, BitVec)],
+    scratch: &mut FeedbackScratch,
+) -> u64 {
+    let mut updates = 0;
+    for (i, (lits, outs)) in samples.iter().enumerate() {
+        updates += update_clause_range(
+            bank,
+            &mut NoopSink,
+            rng,
+            ctx,
+            outs,
+            lits,
+            u32::MAX,
+            i % 2 == 0,
+            scratch,
+        );
+    }
+    updates
+}
+
+fn main() {
+    let mut results = Vec::new();
+    let mut acceptance: Option<f64> = None;
+
+    println!(
+        "{:>8} {:>10} {:>6} {:>16} {:>16} {:>9}",
+        "clauses", "literals", "s", "scalar upd/s", "sliced upd/s", "speedup"
+    );
+    for &(clauses, n_lit, s) in CONFIGS {
+        let ctx = FeedbackCtx::new(s, true, false);
+        let samples = make_samples(clauses, n_lit, 0xbeef);
+
+        // differential pre-check: one pass, shared RNG seed, states must
+        // agree bit-exactly before we trust the timings
+        let mut scratch = FeedbackScratch::new(n_lit);
+        let mut check_scalar = make_bank(TaLayout::Scalar, clauses, n_lit, 7);
+        let mut check_sliced = make_bank(TaLayout::Sliced, clauses, n_lit, 7);
+        let ua = feedback_pass(&mut check_scalar, &mut Rng::new(99), &ctx, &samples, &mut scratch);
+        let ub = feedback_pass(&mut check_sliced, &mut Rng::new(99), &ctx, &samples, &mut scratch);
+        assert_eq!(ua, ub);
+        assert_eq!(
+            check_scalar.states(),
+            check_sliced.states(),
+            "layouts diverged at {clauses}x{n_lit} s={s}"
+        );
+
+        // timed: same seeds per layout => identical update trajectories,
+        // so both layouts do the same logical work
+        let mut rates = [0f64; 2];
+        for (slot, layout) in [TaLayout::Scalar, TaLayout::Sliced].into_iter().enumerate() {
+            let mut bank = make_bank(layout, clauses, n_lit, 7);
+            let mut rng = Rng::new(1234);
+            let updates_per_pass = clauses as u64 * SAMPLES as u64;
+            let (min_s, _mean_s) = bench(WARMUP, REPS, || {
+                std::hint::black_box(feedback_pass(
+                    &mut bank,
+                    &mut rng,
+                    &ctx,
+                    &samples,
+                    &mut scratch,
+                ))
+            });
+            rates[slot] = updates_per_pass as f64 / min_s;
+        }
+        let speedup = rates[1] / rates[0];
+        println!(
+            "{:>8} {:>10} {:>6.1} {:>16.0} {:>16.0} {:>8.2}x",
+            clauses, n_lit, s, rates[0], rates[1], speedup
+        );
+        if n_lit == 1024 && s >= 4.0 {
+            acceptance = Some(acceptance.map_or(speedup, |a: f64| a.min(speedup)));
+        }
+        results.push(Json::obj([
+            ("clauses", Json::num(clauses as f64)),
+            ("n_literals", Json::num(n_lit as f64)),
+            ("s", Json::num(s)),
+            ("scalar_updates_per_s", Json::num(rates[0])),
+            ("sliced_updates_per_s", Json::num(rates[1])),
+            ("speedup_sliced_vs_scalar", Json::num(speedup)),
+        ]));
+    }
+
+    if let Some(s) = acceptance {
+        println!("worst speedup at 1024 literals, s >= 4: {s:.2}x");
+        assert!(
+            s >= 3.0,
+            "acceptance: expected >= 3x sliced feedback throughput at 1024 literals, got {s:.2}x"
+        );
+    }
+
+    let report = Json::obj([
+        ("bench", Json::str("feedback")),
+        (
+            "workload",
+            Json::obj([
+                ("samples_per_pass", Json::num(SAMPLES as f64)),
+                ("p_update", Json::num(1.0)),
+                ("boost_true_positive", Json::Bool(true)),
+                ("touched_automata_fraction", Json::num(0.3)),
+                ("sink", Json::str("noop")),
+            ]),
+        ),
+        ("bit_identical_across_layouts", Json::Bool(true)),
+        (
+            "min_speedup_at_1024_literals",
+            match acceptance {
+                Some(s) => Json::num(s),
+                None => Json::Null,
+            },
+        ),
+        ("results", Json::Arr(results)),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_feedback.json");
+    write_json(&path, &report).expect("writing JSON report");
+    println!("wrote {}", path.display());
+}

@@ -18,12 +18,14 @@ impl NaiveEval {
         NaiveEval
     }
 
-    /// Clause output: scan the state row; false on the first included
-    /// literal that the sample sets to 0.
+    /// Clause output: scan the TA actions literal-by-literal; false on
+    /// the first included literal that the sample sets to 0. Reads
+    /// through the per-literal accessor so the scan is layout-agnostic
+    /// (one state read per literal in either TA layout).
     #[inline]
     fn clause_out(bank: &ClauseBank, j: usize, literals: &BitVec) -> bool {
-        for (k, &s) in bank.row(j).iter().enumerate() {
-            if s >= 0 && !literals.get(k) {
+        for k in 0..bank.n_literals() {
+            if bank.include(j, k) && !literals.get(k) {
                 return false;
             }
         }

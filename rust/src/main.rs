@@ -30,6 +30,7 @@ use tsetlin_index::engine::{argmax, InferMode, SPARSE_DENSITY_THRESHOLD};
 use tsetlin_index::eval::Backend;
 use tsetlin_index::parallel::{resolve_threads, ParallelTrainer, DEFAULT_STALE_WINDOW};
 use tsetlin_index::runtime::{Manifest, Runtime};
+use tsetlin_index::tm::bank::TaLayout;
 use tsetlin_index::tm::classifier::MultiClassTM;
 use tsetlin_index::tm::io::{self, DenseModel};
 use tsetlin_index::tm::params::TMParams;
@@ -155,11 +156,19 @@ fn cmd_train(args: &Args) -> Result<()> {
         .get_or("backend", "indexed")
         .parse()
         .map_err(anyhow::Error::msg)?;
+    // --ta-layout sliced (default) = bit-sliced TA banks, word-parallel
+    // feedback; scalar = the portable per-byte escape hatch. Both train
+    // bit-identically — this only picks the state representation.
+    let ta_layout: TaLayout = args
+        .get_or("ta-layout", "sliced")
+        .parse()
+        .map_err(anyhow::Error::msg)?;
     let params = TMParams::from_total_clauses(train.classes, clauses, train.features)
         .with_threshold(args.parse_or("threshold", 25)?)
         .with_s(args.parse_or("s", 6.0)?)
         .with_seed(args.parse_or("seed", 42)?)
-        .with_weighted(args.has_flag("weighted"));
+        .with_weighted(args.has_flag("weighted"))
+        .with_ta_layout(ta_layout);
     // --threads 0 = every available core; 1 (default) = the sequential
     // trainer; >= 2 = the clause-sharded parallel trainer.
     let threads = resolve_threads(args.parse_or("threads", 1)?);
@@ -173,7 +182,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         );
     }
     eprintln!(
-        "training {} epochs on {} ({} samples, {} features, {} classes, {} clauses/class, backend={}, threads={})",
+        "training {} epochs on {} ({} samples, {} features, {} classes, {} clauses/class, backend={}, threads={}, ta-layout={})",
         epochs,
         train.name,
         train.len(),
@@ -181,7 +190,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         train.classes,
         params.clauses_per_class,
         backend.name(),
-        threads
+        threads,
+        params.ta_layout.name()
     );
     let infer_mode = parse_infer_mode(args)?;
     let mut order_rng = Rng::new(args.parse_or("seed", 42u64)? ^ 0x0def_ace0);
@@ -484,6 +494,9 @@ const USAGE: &str = "usage: tmi <train|eval|table|work-ratio|serve|info> [--key 
              [--infer auto|dense|sparse]  (indexed-backend inference engine:
                              dense class-fused walk or O(nnz) sparse-delta
                              walk; auto picks by input density)
+             [--ta-layout sliced|scalar]  (TA storage: bit-sliced banks with
+                             word-parallel feedback (default) or the portable
+                             scalar escape hatch; bit-identical training)
   eval       --model model.tm --dataset ... [--backend B] [--threads N]
              [--infer auto|dense|sparse]
   table      --id 1|2|3 [--scale quick|standard|paper] [--out-dir results/]

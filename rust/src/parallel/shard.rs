@@ -208,6 +208,43 @@ mod tests {
     }
 
     #[test]
+    fn shards_inherit_bank_layout_both_ways() {
+        // clone_range carries the TA layout into the shard (sliced
+        // shards slice whole bitplane ranges), and writeback lands in
+        // the same-layout global bank.
+        use crate::tm::bank::TaLayout;
+        for layout in [TaLayout::Scalar, TaLayout::Sliced] {
+            let mut rng = Rng::new(305);
+            let params = TMParams::new(2, 8, 6).with_ta_layout(layout);
+            let mut tm = MultiClassTM::new(params);
+            for c in 0..2 {
+                let bank = tm.bank_mut(c);
+                for j in 0..8 {
+                    for k in 0..12 {
+                        if rng.bern(0.2) {
+                            bank.set_state(j, k, (rng.below(9) as i8) - 4);
+                        }
+                    }
+                }
+            }
+            let shard = ClauseShard::extract(&tm, 2..6);
+            assert_eq!(shard.bank(0).layout(), layout);
+            shard.check_invariants().unwrap();
+            let mut copy = MultiClassTM::new(tm.params.clone());
+            shard.writeback(&mut copy);
+            for c in 0..2 {
+                for j in 2..6 {
+                    assert_eq!(
+                        tm.bank(c).clause_states(j),
+                        copy.bank(c).clause_states(j),
+                        "layout {layout:?} class {c} clause {j}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
     fn writeback_roundtrips() {
         let mut rng = Rng::new(302);
         let tm = random_tm(&mut rng, 2, 8, 6);

@@ -251,7 +251,7 @@ impl ParallelTrainer {
                 let global = self.inner.tm.bank(c);
                 let local = w.shard().bank(c);
                 for j in 0..local.clauses() {
-                    if global.row(r.start + j) != local.row(j) {
+                    if global.clause_states(r.start + j) != local.clause_states(j) {
                         return Err(format!(
                             "class {c} clause {}: shard states diverge from global",
                             r.start + j

@@ -28,7 +28,9 @@ use std::ops::Range;
 use crate::parallel::shard::ClauseShard;
 use crate::parallel::tally::{Slot, VoteTally, WindowBarrier};
 use crate::tm::classifier::MultiClassTM;
-use crate::tm::feedback::{clause_update_threshold, update_clause_range, FeedbackCtx};
+use crate::tm::feedback::{
+    clause_update_threshold, update_clause_range, FeedbackCtx, FeedbackScratch,
+};
 use crate::tm::trainer::train_streams;
 use crate::util::rng::Rng;
 use crate::util::BitVec;
@@ -49,6 +51,8 @@ pub struct WorkerState {
     out_bufs: Vec<BitVec>,
     /// Negative class drawn per window position.
     negs: Vec<usize>,
+    /// Reusable feedback mask buffers (hot path allocates nothing).
+    scratch: FeedbackScratch,
     clause_updates: u64,
 }
 
@@ -64,6 +68,7 @@ impl WorkerState {
         WorkerState {
             out_bufs: (0..2 * window.max(1)).map(|_| BitVec::zeros(len)).collect(),
             negs: vec![0; window.max(1)],
+            scratch: FeedbackScratch::new(params.n_literals()),
             ctx: FeedbackCtx::new(params.s, params.boost_true_positive, params.weighted),
             threshold: params.threshold as i32,
             classes: params.classes,
@@ -150,6 +155,7 @@ impl WorkerState {
                     lits,
                     p_t,
                     true,
+                    &mut self.scratch,
                 );
                 let p_n = clause_update_threshold(
                     self.threshold,
@@ -166,6 +172,7 @@ impl WorkerState {
                     lits,
                     p_n,
                     false,
+                    &mut self.scratch,
                 );
             }
 
@@ -205,6 +212,27 @@ mod tests {
         w.run_epoch(&samples, 4, &tally, &barrier);
         assert!(w.take_updates() > 0);
         assert_eq!(w.take_updates(), 0);
+        w.shard().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn single_worker_epoch_runs_on_scalar_layout() {
+        // the escape-hatch layout drives the same worker loop (the
+        // cross-layout bit-identity proof lives in
+        // rust/tests/feedback_equiv.rs)
+        use crate::tm::bank::TaLayout;
+        let params = TMParams::new(2, 12, 8)
+            .with_threshold(10)
+            .with_ta_layout(TaLayout::Scalar);
+        let tm = MultiClassTM::new(params);
+        let data = toy_samples(60, 8, 9);
+        let samples: Vec<(&BitVec, usize)> = data.iter().map(|(l, y)| (l, *y)).collect();
+        let mut w = WorkerState::new(&tm, 0..12, 0, 4);
+        assert_eq!(w.shard().bank(0).layout(), TaLayout::Scalar);
+        let tally = VoteTally::new(samples.len());
+        let barrier = WindowBarrier::new(1);
+        w.run_epoch(&samples, 4, &tally, &barrier);
+        assert!(w.take_updates() > 0);
         w.shard().check_invariants().unwrap();
     }
 

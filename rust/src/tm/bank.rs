@@ -1,15 +1,35 @@
 //! Per-class clause bank: the TA state machine of §2.
 //!
 //! Each clause `j` owns one Tsetlin Automaton per literal `k`; the TA's
-//! integer state decides the literal's inclusion. States are stored as
-//! `i8` (256-state automata, the standard choice): `state >= 0` means
+//! integer state decides the literal's inclusion. States are 8-bit
+//! (256-state automata, the standard choice): `state >= 0` means
 //! *include*. Increment/decrement saturate; crossing the `-1 / 0`
 //! boundary is an include/exclude **flip** — the event the paper's index
 //! maintains its inclusion lists on.
 //!
+//! Two storage layouts hold the same automata ([`TaLayout`]):
+//!
+//! * **scalar** — clause-major `Vec<i8>`, one byte per TA. The portable
+//!   reference form (also the serialized form, see [`crate::tm::io`]).
+//! * **sliced** — 8 bitplanes per 64-literal word: bit `p` of TA
+//!   `(j, k)` lives at lane `k & 63` of plane word `(j, k / 64, p)`.
+//!   Saturating ±1 over 64 automata becomes ~8 words of ripple-carry
+//!   bitplane arithmetic, and the sign plane (bit 7, set iff the state
+//!   is negative) *is* the exclude bitmask — so include masks, flip
+//!   extraction, and clause evaluation all read one word per 64 TAs.
+//!
+//! Both layouts are driven through the same mask-based update entry
+//! point ([`ClauseBank::apply_masks`]) and are **bit-identical**: same
+//! states, same [`FlipSink`] event stream (`rust/tests/feedback_equiv.rs`
+//! proves it differentially). The scalar layout is the escape hatch for
+//! debugging and for tooling that wants `row()` access.
+//!
 //! Polarity is interleaved: even clause ids vote `+1`, odd vote `-1`
 //! (equivalent to the paper's half/half split, but keeps the polarity
 //! computation a single AND on the hot path).
+
+use crate::eval::traits::FlipSink;
+use crate::util::bitvec::{word_mask, words_for};
 
 /// Result of a TA state bump: did the literal's inclusion change?
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -22,14 +42,116 @@ pub enum Flip {
     Excluded,
 }
 
+/// TA storage layout of a [`ClauseBank`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TaLayout {
+    /// Clause-major `Vec<i8>` — the portable reference layout.
+    Scalar,
+    /// 8 bitplanes per 64-literal word — word-parallel feedback.
+    #[default]
+    Sliced,
+}
+
+impl TaLayout {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaLayout::Scalar => "scalar",
+            TaLayout::Sliced => "sliced",
+        }
+    }
+}
+
+impl std::str::FromStr for TaLayout {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "scalar" => Ok(TaLayout::Scalar),
+            "sliced" => Ok(TaLayout::Sliced),
+            other => Err(format!("unknown TA layout '{other}' (scalar|sliced)")),
+        }
+    }
+}
+
+/// Bitplane count: 8-bit two's-complement automata.
+const PLANES: usize = 8;
+/// The sign plane (bit 7): set iff the state is negative (= excluded).
+const SIGN: usize = PLANES - 1;
+
+/// Bit-sliced TA states: plane word `p` of word `w` of clause `j` at
+/// `planes[(j * words + w) * 8 + p]`, so one clause-word's 8 planes are
+/// contiguous — the ripple-carry update touches one cache line.
+///
+/// Tail lanes (`k >= n_literals` in the last word) permanently hold the
+/// initial `-1` encoding (all planes set); every mask entering
+/// [`ClauseBank::apply_masks`] is ANDed with [`word_mask`], so they
+/// never move and never leak into include masks (`!sign & word_mask`).
+#[derive(Clone, Debug)]
+struct SlicedStates {
+    /// Words per clause: `ceil(n_literals / 64)`.
+    words: usize,
+    planes: Vec<u64>,
+}
+
+impl SlicedStates {
+    fn new(clauses: usize, n_literals: usize) -> Self {
+        let words = words_for(n_literals);
+        SlicedStates {
+            words,
+            // every TA at -1 (byte 0xFF): all planes all-ones
+            planes: vec![!0u64; clauses * words * PLANES],
+        }
+    }
+
+    #[inline]
+    fn base(&self, j: usize, w: usize) -> usize {
+        (j * self.words + w) * PLANES
+    }
+
+    #[inline]
+    fn get(&self, j: usize, k: usize) -> i8 {
+        let b = self.base(j, k >> 6);
+        let lane = k & 63;
+        let mut byte = 0u8;
+        for p in 0..PLANES {
+            byte |= (((self.planes[b + p] >> lane) & 1) as u8) << p;
+        }
+        byte as i8
+    }
+
+    #[inline]
+    fn set(&mut self, j: usize, k: usize, v: i8) {
+        let b = self.base(j, k >> 6);
+        let bit = 1u64 << (k & 63);
+        let byte = v as u8;
+        for p in 0..PLANES {
+            if (byte >> p) & 1 == 1 {
+                self.planes[b + p] |= bit;
+            } else {
+                self.planes[b + p] &= !bit;
+            }
+        }
+    }
+
+    #[inline]
+    fn sign_word(&self, j: usize, w: usize) -> u64 {
+        self.planes[self.base(j, w) + SIGN]
+    }
+}
+
+/// The two layouts behind one bank API.
+#[derive(Clone, Debug)]
+enum TaStates {
+    Scalar(Vec<i8>),
+    Sliced(SlicedStates),
+}
+
 /// TA states and include-counts for one class's `n` clauses over `2o`
 /// literals.
 #[derive(Clone, Debug)]
 pub struct ClauseBank {
     clauses: usize,
     n_literals: usize,
-    /// Clause-major TA states: `states[j * 2o + k]`; include iff `>= 0`.
-    states: Vec<i8>,
+    states: TaStates,
     /// Included-literal count per clause (the paper's clause "size").
     include_count: Vec<u32>,
     /// Integer clause weights (Weighted TM, Phoulady et al. 2020 — the
@@ -39,18 +161,49 @@ pub struct ClauseBank {
 }
 
 impl ClauseBank {
-    /// Fresh bank: every TA starts at `-1`, i.e. *exclude*, one step from
-    /// the decision boundary — the standard initialization, and exactly
-    /// the state the paper's index construction assumes (all inclusion
-    /// lists empty).
+    /// Fresh scalar-layout bank: every TA starts at `-1`, i.e. *exclude*,
+    /// one step from the decision boundary — the standard initialization,
+    /// and exactly the state the paper's index construction assumes (all
+    /// inclusion lists empty).
     pub fn new(clauses: usize, n_literals: usize) -> Self {
+        Self::new_with_layout(clauses, n_literals, TaLayout::Scalar)
+    }
+
+    /// Fresh bank in an explicit TA storage layout.
+    pub fn new_with_layout(clauses: usize, n_literals: usize, layout: TaLayout) -> Self {
+        let states = match layout {
+            TaLayout::Scalar => TaStates::Scalar(vec![-1; clauses * n_literals]),
+            TaLayout::Sliced => TaStates::Sliced(SlicedStates::new(clauses, n_literals)),
+        };
         ClauseBank {
             clauses,
             n_literals,
-            states: vec![-1; clauses * n_literals],
+            states,
             include_count: vec![0; clauses],
             weights: vec![1; clauses],
         }
+    }
+
+    /// This bank's TA storage layout.
+    pub fn layout(&self) -> TaLayout {
+        match &self.states {
+            TaStates::Scalar(_) => TaLayout::Scalar,
+            TaStates::Sliced(_) => TaLayout::Sliced,
+        }
+    }
+
+    /// Copy the bank into another layout (cold path: model conversion,
+    /// differential tests). A no-op copy if the layout already matches.
+    pub fn convert_layout(&self, layout: TaLayout) -> ClauseBank {
+        let mut out = ClauseBank::new_with_layout(self.clauses, self.n_literals, layout);
+        for j in 0..self.clauses {
+            for k in 0..self.n_literals {
+                out.set_state(j, k, self.state(j, k));
+            }
+        }
+        out.weights = self.weights.clone();
+        debug_assert_eq!(out.include_count, self.include_count);
+        out
     }
 
     /// Clause weight (1 for plain TMs).
@@ -113,13 +266,19 @@ impl ClauseBank {
 
     #[inline]
     pub fn state(&self, j: usize, k: usize) -> i8 {
-        self.states[j * self.n_literals + k]
+        match &self.states {
+            TaStates::Scalar(v) => v[j * self.n_literals + k],
+            TaStates::Sliced(s) => s.get(j, k),
+        }
     }
 
     /// Does clause `j` include literal `k`?
     #[inline]
     pub fn include(&self, j: usize, k: usize) -> bool {
-        self.states[j * self.n_literals + k] >= 0
+        match &self.states {
+            TaStates::Scalar(v) => v[j * self.n_literals + k] >= 0,
+            TaStates::Sliced(s) => (s.sign_word(j, k >> 6) >> (k & 63)) & 1 == 0,
+        }
     }
 
     /// Number of included literals of clause `j`.
@@ -128,49 +287,233 @@ impl ClauseBank {
         self.include_count[j]
     }
 
-    /// Raw state row of clause `j` (the naive evaluator scans this).
+    /// Raw state row of clause `j` — **scalar layout only** (the layout
+    /// that physically stores rows). Sliced callers use
+    /// [`ClauseBank::clause_states`] / [`ClauseBank::include_word`].
     #[inline]
     pub fn row(&self, j: usize) -> &[i8] {
-        &self.states[j * self.n_literals..(j + 1) * self.n_literals]
+        match &self.states {
+            TaStates::Scalar(v) => &v[j * self.n_literals..(j + 1) * self.n_literals],
+            TaStates::Sliced(_) => panic!("row() requires the scalar TA layout"),
+        }
+    }
+
+    /// Clause `j`'s states decoded into a fresh `Vec` (layout-agnostic;
+    /// diagnostics and tests).
+    pub fn clause_states(&self, j: usize) -> Vec<i8> {
+        (0..self.n_literals).map(|k| self.state(j, k)).collect()
+    }
+
+    /// Include mask of word `w` of clause `j`: bit `b` set iff literal
+    /// `64w + b` is included. For the sliced layout this is one negated
+    /// sign-plane word — the "sign plane doubles as the evaluation
+    /// bitmask" property; the scalar layout gathers it.
+    #[inline]
+    pub fn include_word(&self, j: usize, w: usize) -> u64 {
+        let mask = word_mask(self.n_literals, w);
+        match &self.states {
+            TaStates::Scalar(v) => {
+                let row = &v[j * self.n_literals..(j + 1) * self.n_literals];
+                let start = w * 64;
+                let end = (start + 64).min(self.n_literals);
+                let mut out = 0u64;
+                for (b, &s) in row[start..end].iter().enumerate() {
+                    out |= ((s >= 0) as u64) << b;
+                }
+                out
+            }
+            TaStates::Sliced(s) => !s.sign_word(j, w) & mask,
+        }
+    }
+
+    /// Fill `out` (>= `ceil(n_literals/64)` words) with the *exclude*
+    /// mask of clause `j` — the complement of [`include_word`] over the
+    /// valid lanes. Type II feedback builds its bump-up mask from this.
+    pub fn fill_exclude_mask(&self, j: usize, out: &mut [u64]) {
+        let words = words_for(self.n_literals);
+        debug_assert!(out.len() >= words);
+        for (w, slot) in out.iter_mut().enumerate().take(words) {
+            *slot = !self.include_word(j, w) & word_mask(self.n_literals, w);
+        }
     }
 
     /// Move the TA of (j, k) one step toward *include*. Saturates.
     #[inline]
     pub fn bump_up(&mut self, j: usize, k: usize) -> Flip {
-        let s = &mut self.states[j * self.n_literals + k];
-        if *s == i8::MAX {
-            return Flip::None;
-        }
-        *s += 1;
-        if *s == 0 {
-            self.include_count[j] += 1;
-            Flip::Included
-        } else {
-            Flip::None
+        match &mut self.states {
+            TaStates::Scalar(v) => {
+                let s = &mut v[j * self.n_literals + k];
+                if *s == i8::MAX {
+                    return Flip::None;
+                }
+                *s += 1;
+                if *s == 0 {
+                    self.include_count[j] += 1;
+                    Flip::Included
+                } else {
+                    Flip::None
+                }
+            }
+            TaStates::Sliced(s) => {
+                let cur = s.get(j, k);
+                if cur == i8::MAX {
+                    return Flip::None;
+                }
+                s.set(j, k, cur + 1);
+                if cur + 1 == 0 {
+                    self.include_count[j] += 1;
+                    Flip::Included
+                } else {
+                    Flip::None
+                }
+            }
         }
     }
 
     /// Move the TA of (j, k) one step toward *exclude*. Saturates.
     #[inline]
     pub fn bump_down(&mut self, j: usize, k: usize) -> Flip {
-        let s = &mut self.states[j * self.n_literals + k];
-        if *s == i8::MIN {
-            return Flip::None;
+        match &mut self.states {
+            TaStates::Scalar(v) => {
+                let s = &mut v[j * self.n_literals + k];
+                if *s == i8::MIN {
+                    return Flip::None;
+                }
+                *s -= 1;
+                if *s == -1 {
+                    self.include_count[j] -= 1;
+                    Flip::Excluded
+                } else {
+                    Flip::None
+                }
+            }
+            TaStates::Sliced(s) => {
+                let cur = s.get(j, k);
+                if cur == i8::MIN {
+                    return Flip::None;
+                }
+                s.set(j, k, cur - 1);
+                if cur - 1 == -1 {
+                    self.include_count[j] -= 1;
+                    Flip::Excluded
+                } else {
+                    Flip::None
+                }
+            }
         }
-        *s -= 1;
-        if *s == -1 {
-            self.include_count[j] -= 1;
-            Flip::Excluded
-        } else {
-            Flip::None
+    }
+
+    /// Mask-driven saturating update of clause `j`: +1 on every lane of
+    /// `up`, −1 on every lane of `down` (the masks must be disjoint;
+    /// lanes past `n_literals` are ignored). Include/exclude flips are
+    /// recovered from the sign change and forwarded to `sink` in
+    /// ascending-`k` order with post-flip counts — the exact event
+    /// stream the per-literal [`bump_up`]/[`bump_down`] loop produces,
+    /// so the `FlipSink` → O(1) index-maintenance contract is preserved
+    /// bit-exactly in both layouts.
+    ///
+    /// Sliced layout: per 64-literal word, saturation lanes are masked
+    /// out (`+127` / `−128` detected from the planes), a ripple-carry
+    /// add and a borrow-ripple subtract run over the 8 plane words, and
+    /// flips are `sign_before XOR sign_after`. Scalar layout: the same
+    /// masks applied lane-at-a-time (still skipping unselected lanes).
+    ///
+    /// [`bump_up`]: ClauseBank::bump_up
+    /// [`bump_down`]: ClauseBank::bump_down
+    pub fn apply_masks(&mut self, j: usize, up: &[u64], down: &[u64], sink: &mut dyn FlipSink) {
+        let n = self.n_literals;
+        let words = words_for(n);
+        debug_assert!(up.len() >= words && down.len() >= words);
+        let wj = self.weights[j];
+        let counts = &mut self.include_count;
+        match &mut self.states {
+            TaStates::Scalar(v) => {
+                let row = &mut v[j * n..(j + 1) * n];
+                for w in 0..words {
+                    let mask = word_mask(n, w);
+                    let u = up[w] & mask;
+                    let d = down[w] & mask;
+                    debug_assert_eq!(u & d, 0, "up/down masks must be disjoint");
+                    let mut bits = u | d;
+                    while bits != 0 {
+                        let b = bits.trailing_zeros() as usize;
+                        bits &= bits - 1;
+                        let k = w * 64 + b;
+                        let s = &mut row[k];
+                        if (u >> b) & 1 == 1 {
+                            if *s != i8::MAX {
+                                *s += 1;
+                                if *s == 0 {
+                                    counts[j] += 1;
+                                    sink.on_include(j as u32, k as u32, counts[j], wj);
+                                }
+                            }
+                        } else if *s != i8::MIN {
+                            *s -= 1;
+                            if *s == -1 {
+                                counts[j] -= 1;
+                                sink.on_exclude(j as u32, k as u32, counts[j], wj);
+                            }
+                        }
+                    }
+                }
+            }
+            TaStates::Sliced(sl) => {
+                for w in 0..words {
+                    let mask = word_mask(n, w);
+                    let u = up[w] & mask;
+                    let d = down[w] & mask;
+                    debug_assert_eq!(u & d, 0, "up/down masks must be disjoint");
+                    if (u | d) == 0 {
+                        continue;
+                    }
+                    let base = sl.base(j, w);
+                    let pl = &mut sl.planes[base..base + PLANES];
+                    // saturation lanes: +127 = 0b0111_1111, -128 = 0b1000_0000
+                    let low_all = pl[0] & pl[1] & pl[2] & pl[3] & pl[4] & pl[5] & pl[6];
+                    let low_none = !(pl[0] | pl[1] | pl[2] | pl[3] | pl[4] | pl[5] | pl[6]);
+                    let add = u & !(low_all & !pl[SIGN]);
+                    let sub = d & !(low_none & pl[SIGN]);
+                    let sign_before = pl[SIGN];
+                    // ripple-carry +1 on `add` lanes (no overflow: +127 excluded)
+                    let mut carry = add;
+                    for p in pl.iter_mut() {
+                        let orig = *p;
+                        *p = orig ^ carry;
+                        carry &= orig;
+                    }
+                    // borrow-ripple −1 on `sub` lanes (no underflow: −128 excluded)
+                    let mut borrow = sub;
+                    for p in pl.iter_mut() {
+                        let orig = *p;
+                        *p = orig ^ borrow;
+                        borrow &= !orig;
+                    }
+                    let mut flipped = sign_before ^ pl[SIGN];
+                    while flipped != 0 {
+                        let b = flipped.trailing_zeros() as usize;
+                        flipped &= flipped - 1;
+                        let k = w * 64 + b;
+                        if (sign_before >> b) & 1 == 1 {
+                            counts[j] += 1;
+                            sink.on_include(j as u32, k as u32, counts[j], wj);
+                        } else {
+                            counts[j] -= 1;
+                            sink.on_exclude(j as u32, k as u32, counts[j], wj);
+                        }
+                    }
+                }
+            }
         }
     }
 
     /// Force a TA state (model loading / tests). Recomputes the count.
     pub fn set_state(&mut self, j: usize, k: usize, v: i8) {
-        let idx = j * self.n_literals + k;
-        let was = self.states[idx] >= 0;
-        self.states[idx] = v;
+        let was = self.include(j, k);
+        match &mut self.states {
+            TaStates::Scalar(s) => s[j * self.n_literals + k] = v,
+            TaStates::Sliced(s) => s.set(j, k, v),
+        }
         let is = v >= 0;
         match (was, is) {
             (false, true) => self.include_count[j] += 1,
@@ -179,13 +522,17 @@ impl ClauseBank {
         }
     }
 
-    /// Iterate the included literal ids of clause `j`.
-    pub fn included_literals(&self, j: usize) -> impl Iterator<Item = usize> + '_ {
-        self.row(j)
-            .iter()
-            .enumerate()
-            .filter(|(_, &s)| s >= 0)
-            .map(|(k, _)| k)
+    /// Iterate the included literal ids of clause `j` (ascending), in
+    /// either layout.
+    pub fn included_literals(&self, j: usize) -> IncludedIter<'_> {
+        let words = words_for(self.n_literals);
+        IncludedIter {
+            bank: self,
+            j,
+            words,
+            w: 0,
+            cur: if words == 0 { 0 } else { self.include_word(j, 0) },
+        }
     }
 
     /// Weighted vote sum over non-empty clauses — the indexed
@@ -219,23 +566,48 @@ impl ClauseBank {
         non_empty.iter().map(|&c| c as f64).sum::<f64>() / non_empty.len() as f64
     }
 
-    /// Access raw states (serialization).
-    pub fn states(&self) -> &[i8] {
-        &self.states
+    /// All TA states decoded clause-major (serialization, tests). This
+    /// is the portable scalar byte form regardless of layout.
+    pub fn states(&self) -> Vec<i8> {
+        match &self.states {
+            TaStates::Scalar(v) => v.clone(),
+            TaStates::Sliced(_) => {
+                let mut out = Vec::with_capacity(self.clauses * self.n_literals);
+                for j in 0..self.clauses {
+                    for k in 0..self.n_literals {
+                        out.push(self.state(j, k));
+                    }
+                }
+                out
+            }
+        }
     }
 
     /// Extract clauses `[start, start + len)` into a fresh bank with
     /// local ids `0..len` — the clause-shard extraction of
     /// [`crate::parallel`]. `start` must be even so local polarity
-    /// matches global polarity (ids interleave +/−).
+    /// matches global polarity (ids interleave +/−). The shard inherits
+    /// this bank's layout (sliced shards slice whole bitplane ranges —
+    /// clause-major plane storage makes the range copy contiguous).
     pub fn clone_range(&self, start: usize, len: usize) -> ClauseBank {
         assert!(start % 2 == 0, "shard start {start} must be even (polarity)");
         assert!(start + len <= self.clauses, "shard out of range");
+        let states = match &self.states {
+            TaStates::Scalar(v) => TaStates::Scalar(
+                v[start * self.n_literals..(start + len) * self.n_literals].to_vec(),
+            ),
+            TaStates::Sliced(s) => {
+                let per = s.words * PLANES;
+                TaStates::Sliced(SlicedStates {
+                    words: s.words,
+                    planes: s.planes[start * per..(start + len) * per].to_vec(),
+                })
+            }
+        };
         ClauseBank {
             clauses: len,
             n_literals: self.n_literals,
-            states: self.states[start * self.n_literals..(start + len) * self.n_literals]
-                .to_vec(),
+            states,
             include_count: self.include_count[start..start + len].to_vec(),
             weights: self.weights[start..start + len].to_vec(),
         }
@@ -243,14 +615,25 @@ impl ClauseBank {
 
     /// Write a shard bank (from [`ClauseBank::clone_range`]) back over
     /// clauses `[start, start + shard.clauses())` — the reassembly step
-    /// after a parallel epoch.
+    /// after a parallel epoch. The layouts must match (shards inherit
+    /// the global bank's layout, so they always do).
     pub fn write_range(&mut self, start: usize, shard: &ClauseBank) {
         assert_eq!(shard.n_literals, self.n_literals, "literal width mismatch");
         assert!(start % 2 == 0, "shard start {start} must be even (polarity)");
         assert!(start + shard.clauses <= self.clauses, "shard out of range");
-        let a = start * self.n_literals;
-        let b = a + shard.clauses * self.n_literals;
-        self.states[a..b].copy_from_slice(&shard.states);
+        match (&mut self.states, &shard.states) {
+            (TaStates::Scalar(dst), TaStates::Scalar(src)) => {
+                let a = start * self.n_literals;
+                dst[a..a + shard.clauses * self.n_literals].copy_from_slice(src);
+            }
+            (TaStates::Sliced(dst), TaStates::Sliced(src)) => {
+                debug_assert_eq!(dst.words, src.words);
+                let per = dst.words * PLANES;
+                dst.planes[start * per..(start + shard.clauses) * per]
+                    .copy_from_slice(&src.planes);
+            }
+            _ => panic!("write_range: TA layout mismatch"),
+        }
         self.include_count[start..start + shard.clauses]
             .copy_from_slice(&shard.include_count);
         self.weights[start..start + shard.clauses].copy_from_slice(&shard.weights);
@@ -259,28 +642,77 @@ impl ClauseBank {
     /// Verify `include_count` against the states (test/debug invariant).
     #[doc(hidden)]
     pub fn check_counts(&self) -> bool {
+        let words = words_for(self.n_literals);
         (0..self.clauses).all(|j| {
-            self.include_count[j] as usize == self.row(j).iter().filter(|&&s| s >= 0).count()
+            let c: u32 = (0..words).map(|w| self.include_word(j, w).count_ones()).sum();
+            self.include_count[j] == c
         })
+    }
+}
+
+/// Iterator over the included literal ids of one clause, walking
+/// [`ClauseBank::include_word`] words (one negated sign-plane word per
+/// 64 literals in the sliced layout).
+pub struct IncludedIter<'a> {
+    bank: &'a ClauseBank,
+    j: usize,
+    words: usize,
+    w: usize,
+    cur: u64,
+}
+
+impl Iterator for IncludedIter<'_> {
+    type Item = usize;
+
+    #[inline]
+    fn next(&mut self) -> Option<usize> {
+        loop {
+            if self.cur != 0 {
+                let b = self.cur.trailing_zeros() as usize;
+                self.cur &= self.cur - 1;
+                return Some(self.w * 64 + b);
+            }
+            self.w += 1;
+            if self.w >= self.words {
+                return None;
+            }
+            self.cur = self.bank.include_word(self.j, self.w);
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::eval::traits::NoopSink;
+    use crate::util::Rng;
+
+    const LAYOUTS: [TaLayout; 2] = [TaLayout::Scalar, TaLayout::Sliced];
+
+    #[test]
+    fn layout_parses_and_names() {
+        assert_eq!("scalar".parse::<TaLayout>().unwrap(), TaLayout::Scalar);
+        assert_eq!("sliced".parse::<TaLayout>().unwrap(), TaLayout::Sliced);
+        assert!("simd".parse::<TaLayout>().is_err());
+        assert_eq!(TaLayout::Sliced.name(), "sliced");
+        assert_eq!(TaLayout::default(), TaLayout::Sliced);
+    }
 
     #[test]
     fn fresh_bank_is_all_exclude() {
-        let b = ClauseBank::new(4, 10);
-        for j in 0..4 {
-            assert_eq!(b.count(j), 0);
-            for k in 0..10 {
-                assert!(!b.include(j, k));
-                assert_eq!(b.state(j, k), -1);
+        for layout in LAYOUTS {
+            let b = ClauseBank::new_with_layout(4, 10, layout);
+            assert_eq!(b.layout(), layout);
+            for j in 0..4 {
+                assert_eq!(b.count(j), 0);
+                for k in 0..10 {
+                    assert!(!b.include(j, k));
+                    assert_eq!(b.state(j, k), -1);
+                }
             }
+            assert_eq!(b.vote_alive(), 0);
+            assert_eq!(b.vote_all(), 0); // interleaved polarity sums to 0
         }
-        assert_eq!(b.vote_alive(), 0);
-        assert_eq!(b.vote_all(), 0); // interleaved polarity sums to 0
     }
 
     #[test]
@@ -292,61 +724,84 @@ mod tests {
 
     #[test]
     fn bump_up_flips_exactly_at_boundary() {
-        let mut b = ClauseBank::new(2, 4);
-        assert_eq!(b.bump_up(0, 1), Flip::Included);
-        assert_eq!(b.count(0), 1);
-        assert!(b.include(0, 1));
-        // further bumps: no flip
-        assert_eq!(b.bump_up(0, 1), Flip::None);
-        assert_eq!(b.count(0), 1);
+        for layout in LAYOUTS {
+            let mut b = ClauseBank::new_with_layout(2, 4, layout);
+            assert_eq!(b.bump_up(0, 1), Flip::Included);
+            assert_eq!(b.count(0), 1);
+            assert!(b.include(0, 1));
+            // further bumps: no flip
+            assert_eq!(b.bump_up(0, 1), Flip::None);
+            assert_eq!(b.count(0), 1);
+        }
     }
 
     #[test]
     fn bump_down_flips_exactly_at_boundary() {
-        let mut b = ClauseBank::new(2, 4);
-        b.bump_up(0, 1); // -> 0, included
-        b.bump_up(0, 1); // -> 1
-        assert_eq!(b.bump_down(0, 1), Flip::None); // 1 -> 0, still included
-        assert_eq!(b.bump_down(0, 1), Flip::Excluded); // 0 -> -1
-        assert_eq!(b.count(0), 0);
-        assert!(!b.include(0, 1));
+        for layout in LAYOUTS {
+            let mut b = ClauseBank::new_with_layout(2, 4, layout);
+            b.bump_up(0, 1); // -> 0, included
+            b.bump_up(0, 1); // -> 1
+            assert_eq!(b.bump_down(0, 1), Flip::None); // 1 -> 0, still included
+            assert_eq!(b.bump_down(0, 1), Flip::Excluded); // 0 -> -1
+            assert_eq!(b.count(0), 0);
+            assert!(!b.include(0, 1));
+        }
     }
 
     #[test]
     fn saturation_at_extremes() {
-        let mut b = ClauseBank::new(1, 1);
-        for _ in 0..300 {
-            b.bump_up(0, 0);
+        for layout in LAYOUTS {
+            let mut b = ClauseBank::new_with_layout(1, 1, layout);
+            for _ in 0..300 {
+                b.bump_up(0, 0);
+            }
+            assert_eq!(b.state(0, 0), i8::MAX);
+            assert_eq!(b.bump_up(0, 0), Flip::None);
+            for _ in 0..300 {
+                b.bump_down(0, 0);
+            }
+            assert_eq!(b.state(0, 0), i8::MIN);
+            assert_eq!(b.bump_down(0, 0), Flip::None);
+            assert!(b.check_counts());
         }
-        assert_eq!(b.state(0, 0), i8::MAX);
-        assert_eq!(b.bump_up(0, 0), Flip::None);
-        for _ in 0..300 {
-            b.bump_down(0, 0);
-        }
-        assert_eq!(b.state(0, 0), i8::MIN);
-        assert_eq!(b.bump_down(0, 0), Flip::None);
-        assert!(b.check_counts());
     }
 
     #[test]
     fn set_state_maintains_counts() {
-        let mut b = ClauseBank::new(2, 4);
-        b.set_state(0, 2, 5);
-        assert_eq!(b.count(0), 1);
-        b.set_state(0, 2, -3);
-        assert_eq!(b.count(0), 0);
-        b.set_state(0, 2, -3); // no-op transition
-        assert_eq!(b.count(0), 0);
-        assert!(b.check_counts());
+        for layout in LAYOUTS {
+            let mut b = ClauseBank::new_with_layout(2, 4, layout);
+            b.set_state(0, 2, 5);
+            assert_eq!(b.count(0), 1);
+            b.set_state(0, 2, -3);
+            assert_eq!(b.count(0), 0);
+            b.set_state(0, 2, -3); // no-op transition
+            assert_eq!(b.count(0), 0);
+            assert!(b.check_counts());
+        }
     }
 
     #[test]
     fn included_literals_iterates_correctly() {
-        let mut b = ClauseBank::new(1, 6);
-        b.set_state(0, 1, 0);
-        b.set_state(0, 4, 3);
-        let got: Vec<usize> = b.included_literals(0).collect();
-        assert_eq!(got, vec![1, 4]);
+        for layout in LAYOUTS {
+            let mut b = ClauseBank::new_with_layout(1, 6, layout);
+            b.set_state(0, 1, 0);
+            b.set_state(0, 4, 3);
+            let got: Vec<usize> = b.included_literals(0).collect();
+            assert_eq!(got, vec![1, 4]);
+        }
+    }
+
+    #[test]
+    fn included_literals_cross_word_boundaries() {
+        for layout in LAYOUTS {
+            let mut b = ClauseBank::new_with_layout(1, 130, layout);
+            for &k in &[0usize, 63, 64, 65, 127, 128, 129] {
+                b.set_state(0, k, 1);
+            }
+            let got: Vec<usize> = b.included_literals(0).collect();
+            assert_eq!(got, vec![0, 63, 64, 65, 127, 128, 129]);
+            assert!(b.check_counts());
+        }
     }
 
     #[test]
@@ -362,38 +817,49 @@ mod tests {
 
     #[test]
     fn clone_range_roundtrips_through_write_range() {
-        let mut b = ClauseBank::new(6, 4);
-        for j in 0..6 {
-            for k in 0..4 {
-                b.set_state(j, k, (j * 4 + k) as i8 - 8);
+        for layout in LAYOUTS {
+            let mut b = ClauseBank::new_with_layout(6, 4, layout);
+            for j in 0..6 {
+                for k in 0..4 {
+                    b.set_state(j, k, (j * 4 + k) as i8 - 8);
+                }
             }
-        }
-        b.set_weight(2, 7);
-        let shard = b.clone_range(2, 2);
-        assert_eq!(shard.clauses(), 2);
-        assert_eq!(shard.state(0, 0), b.state(2, 0));
-        assert_eq!(shard.weight(0), 7);
-        assert_eq!(shard.count(0), b.count(2));
-        assert!(shard.check_counts());
-        // polarity alignment: local 0 == global 2 (+), local 1 == global 3 (−)
-        assert_eq!(ClauseBank::polarity(0), ClauseBank::polarity(2));
+            b.set_weight(2, 7);
+            let shard = b.clone_range(2, 2);
+            assert_eq!(shard.clauses(), 2);
+            assert_eq!(shard.layout(), layout);
+            assert_eq!(shard.state(0, 0), b.state(2, 0));
+            assert_eq!(shard.weight(0), 7);
+            assert_eq!(shard.count(0), b.count(2));
+            assert!(shard.check_counts());
+            // polarity alignment: local 0 == global 2 (+), local 1 == global 3 (−)
+            assert_eq!(ClauseBank::polarity(0), ClauseBank::polarity(2));
 
-        // mutate the shard, write back, only that range changes
-        let mut shard = shard;
-        shard.set_state(0, 1, 5);
-        shard.set_weight(1, 3);
-        let before_outside = b.row(0).to_vec();
-        b.write_range(2, &shard);
-        assert_eq!(b.state(2, 1), 5);
-        assert_eq!(b.weight(3), 3);
-        assert_eq!(b.row(0), &before_outside[..]);
-        assert!(b.check_counts());
+            // mutate the shard, write back, only that range changes
+            let mut shard = shard;
+            shard.set_state(0, 1, 5);
+            shard.set_weight(1, 3);
+            let before_outside = b.clause_states(0);
+            b.write_range(2, &shard);
+            assert_eq!(b.state(2, 1), 5);
+            assert_eq!(b.weight(3), 3);
+            assert_eq!(b.clause_states(0), before_outside);
+            assert!(b.check_counts());
+        }
     }
 
     #[test]
     #[should_panic(expected = "must be even")]
     fn clone_range_rejects_odd_start() {
         ClauseBank::new(4, 2).clone_range(1, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "layout mismatch")]
+    fn write_range_rejects_layout_mismatch() {
+        let mut a = ClauseBank::new_with_layout(4, 4, TaLayout::Scalar);
+        let b = ClauseBank::new_with_layout(2, 4, TaLayout::Sliced);
+        a.write_range(0, &b);
     }
 
     #[test]
@@ -407,5 +873,105 @@ mod tests {
         }
         // clause 2 empty
         assert!((b.mean_clause_length() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn convert_layout_roundtrips() {
+        let mut rng = Rng::new(91);
+        let mut b = ClauseBank::new(6, 70); // tail word exercised
+        for j in 0..6 {
+            for k in 0..70 {
+                if rng.bern(0.4) {
+                    b.set_state(j, k, (rng.below(255) as i16 - 128) as i8);
+                }
+            }
+        }
+        b.set_weight(3, 9);
+        let sliced = b.convert_layout(TaLayout::Sliced);
+        assert_eq!(sliced.layout(), TaLayout::Sliced);
+        assert_eq!(sliced.states(), b.states());
+        assert_eq!(sliced.weights(), b.weights());
+        assert!(sliced.check_counts());
+        let back = sliced.convert_layout(TaLayout::Scalar);
+        assert_eq!(back.states(), b.states());
+        assert_eq!(back.row(2), &b.states()[2 * 70..3 * 70]);
+    }
+
+    #[test]
+    fn include_word_matches_per_literal_reads() {
+        let mut rng = Rng::new(93);
+        for layout in LAYOUTS {
+            let mut b = ClauseBank::new_with_layout(3, 130, layout);
+            for j in 0..3 {
+                for k in 0..130 {
+                    if rng.bern(0.3) {
+                        b.set_state(j, k, (rng.below(11) as i8) - 5);
+                    }
+                }
+            }
+            for j in 0..3 {
+                for w in 0..3 {
+                    let word = b.include_word(j, w);
+                    for bit in 0..64usize {
+                        let k = w * 64 + bit;
+                        let want = k < 130 && b.include(j, k);
+                        assert_eq!((word >> bit) & 1 == 1, want, "j={j} k={k}");
+                    }
+                }
+                let mut excl = vec![0u64; 3];
+                b.fill_exclude_mask(j, &mut excl);
+                for (w, &e) in excl.iter().enumerate() {
+                    assert_eq!(e & b.include_word(j, w), 0);
+                    assert_eq!(e | b.include_word(j, w), word_mask(130, w));
+                }
+            }
+        }
+    }
+
+    /// The core layout-equivalence property at the bank level: random
+    /// mask storms applied to both layouts leave identical states,
+    /// counts, and flip decisions (the full sink-stream equivalence
+    /// lives in `rust/tests/feedback_equiv.rs`).
+    #[test]
+    fn apply_masks_is_layout_invariant_under_random_storms() {
+        let mut rng = Rng::new(95);
+        for n_lit in [6usize, 64, 70, 200] {
+            let words = words_for(n_lit);
+            let mut scalar = ClauseBank::new_with_layout(4, n_lit, TaLayout::Scalar);
+            let mut sliced = ClauseBank::new_with_layout(4, n_lit, TaLayout::Sliced);
+            // mid-training states, including saturation extremes
+            for j in 0..4 {
+                for k in 0..n_lit {
+                    let v = match rng.below(10) {
+                        0 => i8::MAX,
+                        1 => i8::MIN,
+                        _ => (rng.below(9) as i8) - 4,
+                    };
+                    scalar.set_state(j, k, v);
+                    sliced.set_state(j, k, v);
+                }
+            }
+            for step in 0..300 {
+                let j = rng.below(4) as usize;
+                let mut up = vec![0u64; words];
+                let mut down = vec![0u64; words];
+                for w in 0..words {
+                    let a = rng.next_u64() & word_mask(n_lit, w);
+                    let b = rng.next_u64() & word_mask(n_lit, w);
+                    up[w] = a & !b;
+                    down[w] = b & !a;
+                }
+                scalar.apply_masks(j, &up, &down, &mut NoopSink);
+                sliced.apply_masks(j, &up, &down, &mut NoopSink);
+                assert_eq!(
+                    scalar.clause_states(j),
+                    sliced.clause_states(j),
+                    "n_lit={n_lit} step={step}"
+                );
+                assert_eq!(scalar.count(j), sliced.count(j));
+            }
+            assert!(scalar.check_counts() && sliced.check_counts());
+            assert_eq!(scalar.states(), sliced.states());
+        }
     }
 }

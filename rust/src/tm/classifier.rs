@@ -19,7 +19,13 @@ impl MultiClassTM {
     pub fn new(params: TMParams) -> Self {
         params.validate().expect("invalid TM parameters");
         let banks = (0..params.classes)
-            .map(|_| ClauseBank::new(params.clauses_per_class, params.n_literals()))
+            .map(|_| {
+                ClauseBank::new_with_layout(
+                    params.clauses_per_class,
+                    params.n_literals(),
+                    params.ta_layout,
+                )
+            })
             .collect();
         MultiClassTM { params, banks }
     }
@@ -74,6 +80,16 @@ mod tests {
         assert_eq!(tm.bank(0).clauses(), 20);
         assert_eq!(tm.bank(9).n_literals(), 1568);
         assert_eq!(tm.ta_memory_bytes(), 10 * 20 * 1568);
+    }
+
+    #[test]
+    fn banks_follow_params_layout() {
+        use crate::tm::bank::TaLayout;
+        for layout in [TaLayout::Scalar, TaLayout::Sliced] {
+            let tm = MultiClassTM::new(TMParams::new(2, 4, 8).with_ta_layout(layout));
+            assert_eq!(tm.bank(0).layout(), layout);
+            assert_eq!(tm.bank(1).layout(), layout);
+        }
     }
 
     #[test]

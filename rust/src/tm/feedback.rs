@@ -1,22 +1,38 @@
 //! Type I / Type II feedback — the TM learning rules (§2 of the paper,
 //! following the reference formulation of Granmo 2018).
 //!
-//! Every TA bump is routed through the bank so include/exclude *flips*
-//! are detected and forwarded to the evaluator's [`FlipSink`] — that is
-//! where the paper's index maintenance happens, and it is the only
-//! difference between training with and without indexing.
+//! The learning hot path is **mask-driven**: for each updated clause,
+//! the per-literal Bernoulli decisions are drawn once into packed
+//! `u64` mask words by geometric skip sampling
+//! ([`crate::util::rng::fill_bernoulli_words`] — an expected
+//! `O(2o / s)` RNG draws instead of `O(2o)`), combined with the sample's
+//! literal words and the clause's exclude mask, and applied through
+//! [`ClauseBank::apply_masks`]. The bank's scalar and bit-sliced layouts
+//! consume the *same* masks from the *same* RNG stream — the shared RNG
+//! contract that makes the two layouts bit-identical (states **and**
+//! [`FlipSink`] event stream; `rust/tests/feedback_equiv.rs` proves it).
+//!
+//! Every include/exclude *flip* is forwarded to the evaluator's
+//! [`FlipSink`] in ascending-literal order — that is where the paper's
+//! index maintenance happens, and it is the only difference between
+//! training with and without indexing.
 
 use crate::eval::traits::FlipSink;
-use crate::tm::bank::{ClauseBank, Flip};
-use crate::util::rng::{prob_to_threshold, Rng};
+use crate::tm::bank::ClauseBank;
+use crate::util::bitvec::words_for;
+use crate::util::rng::{fill_bernoulli_words, prob_to_threshold, Rng};
 use crate::util::BitVec;
 
 /// Precomputed Bernoulli thresholds for the specificity `s`.
 #[derive(Clone, Copy, Debug)]
 pub struct FeedbackCtx {
-    /// P = 1/s as a u32 threshold (forget/penalize draw).
+    /// P = 1/s as a u32 threshold (forget/penalize draw). Also the
+    /// failure rate of the memorize draw: the memorize mask is drawn as
+    /// the *complement* of a 1/s mask, so both masks cost `O(2o / s)`
+    /// skip-sampled draws.
     pub p_forget: u32,
-    /// P = (s-1)/s as a u32 threshold (memorize/reward draw).
+    /// P = 1 - 1/s as a u32 threshold (memorize/reward rate;
+    /// diagnostic — the hot path draws its complement, see `p_forget`).
     pub p_memorize: u32,
     /// Reinforce true-positive literals with probability 1.
     pub boost_true_positive: bool,
@@ -25,22 +41,50 @@ pub struct FeedbackCtx {
 }
 
 impl FeedbackCtx {
+    /// Build the threshold set for specificity `s`.
+    ///
+    /// `s` is defined on `[1, ∞)`; values below 1 (or NaN) would invert
+    /// the reward/penalty split into nonsense probabilities
+    /// (`1/s > 1`, `1 - 1/s < 0`), so they clamp to the `s = 1`
+    /// degenerate point: always forget, never memorize without boost.
+    /// `TMParams::validate` rejects such configs up front — the clamp
+    /// guards direct constructions.
     pub fn new(s: f64, boost_true_positive: bool, weighted: bool) -> Self {
+        let s = if s >= 1.0 { s } else { 1.0 }; // also catches NaN
         FeedbackCtx {
             p_forget: prob_to_threshold(1.0 / s),
-            p_memorize: prob_to_threshold((s - 1.0) / s),
+            p_memorize: prob_to_threshold(1.0 - 1.0 / s),
             boost_true_positive,
             weighted,
         }
     }
 }
 
-#[inline]
-fn forward_flip(sink: &mut dyn FlipSink, bank: &ClauseBank, j: usize, k: usize, flip: Flip) {
-    match flip {
-        Flip::None => {}
-        Flip::Included => sink.on_include(j as u32, k as u32, bank.count(j), bank.weight(j)),
-        Flip::Excluded => sink.on_exclude(j as u32, k as u32, bank.count(j), bank.weight(j)),
+/// Reusable per-clause mask buffers (`ceil(2o / 64)` words each),
+/// owned by the trainer / parallel worker and threaded through
+/// [`update_clause_range`], so the feedback hot path allocates nothing.
+pub struct FeedbackScratch {
+    n_bits: usize,
+    /// Bernoulli(1/s) forget mask.
+    forget: Vec<u64>,
+    /// Bernoulli(1/s) memorize-*failure* mask (complemented at use).
+    mem_fail: Vec<u64>,
+    /// Lanes bumped toward include this update.
+    up: Vec<u64>,
+    /// Lanes bumped toward exclude this update.
+    down: Vec<u64>,
+}
+
+impl FeedbackScratch {
+    pub fn new(n_literals: usize) -> Self {
+        let words = words_for(n_literals);
+        FeedbackScratch {
+            n_bits: n_literals,
+            forget: vec![0; words],
+            mem_fail: vec![0; words],
+            up: vec![0; words],
+            down: vec![0; words],
+        }
     }
 }
 
@@ -76,7 +120,9 @@ pub fn clause_update_threshold(t: i32, score: i32, is_target: bool) -> u32 {
 /// ([`ClauseBank::clone_range`]) — polarity is positional, so shards
 /// must start at an even clause id. `outputs` holds the training-mode
 /// clause outputs for exactly `bank`'s clauses, computed *before* any
-/// feedback of this step. Returns the number of clauses updated.
+/// feedback of this step. `scratch` is caller-owned (one per trainer /
+/// worker) so the hot loop performs zero allocations. Returns the
+/// number of clauses updated.
 #[allow(clippy::too_many_arguments)]
 pub fn update_clause_range(
     bank: &mut ClauseBank,
@@ -87,6 +133,7 @@ pub fn update_clause_range(
     literals: &BitVec,
     p_update: u32,
     is_target: bool,
+    scratch: &mut FeedbackScratch,
 ) -> u64 {
     debug_assert_eq!(outputs.len(), bank.clauses());
     let n = bank.clauses();
@@ -99,9 +146,9 @@ pub fn update_clause_range(
         let positive = ClauseBank::polarity(j) > 0;
         let clause_out = outputs.get(j);
         if positive == is_target {
-            type_i(bank, sink, rng, ctx, j, clause_out, literals);
+            type_i_with_scratch(bank, sink, rng, ctx, j, clause_out, literals, scratch);
         } else {
-            type_ii(bank, sink, ctx, j, clause_out, literals);
+            type_ii_with_scratch(bank, sink, ctx, j, clause_out, literals, scratch);
         }
     }
     updates
@@ -111,9 +158,12 @@ pub fn update_clause_range(
 /// matching the current sample (frequent-pattern capture).
 ///
 /// * clause output 1: true literals are memorized (state toward include,
-///   prob 1 with boosting else (s-1)/s); false literals are gently
+///   prob 1 with boosting else 1 - 1/s); false literals are gently
 ///   forgotten (prob 1/s).
 /// * clause output 0: every literal is gently forgotten (prob 1/s).
+///
+/// Convenience wrapper over [`type_i_with_scratch`] (allocates its own
+/// mask buffers; the training loop reuses one scratch across clauses).
 pub fn type_i(
     bank: &mut ClauseBank,
     sink: &mut dyn FlipSink,
@@ -123,39 +173,65 @@ pub fn type_i(
     clause_out: bool,
     literals: &BitVec,
 ) {
-    let n_lit = bank.n_literals();
-    if clause_out {
+    let mut scratch = FeedbackScratch::new(bank.n_literals());
+    type_i_with_scratch(bank, sink, rng, ctx, j, clause_out, literals, &mut scratch);
+}
+
+/// [`type_i`] with caller-owned mask buffers — the hot-path form.
+///
+/// RNG contract (identical for both TA layouts): one Bernoulli(1/s)
+/// forget mask is always drawn; iff the clause fired and boosting is
+/// off, one more Bernoulli(1/s) *memorize-failure* mask follows. Masks
+/// are filled by [`fill_bernoulli_words`] — geometric skip sampling
+/// (`O(2o / s)` expected draws) for sparse thresholds, exact
+/// word-parallel expansion for dense ones — never one draw per literal.
+#[allow(clippy::too_many_arguments)]
+pub fn type_i_with_scratch(
+    bank: &mut ClauseBank,
+    sink: &mut dyn FlipSink,
+    rng: &mut Rng,
+    ctx: &FeedbackCtx,
+    j: usize,
+    clause_out: bool,
+    literals: &BitVec,
+    scratch: &mut FeedbackScratch,
+) {
+    debug_assert_eq!(literals.len(), bank.n_literals());
+    debug_assert_eq!(scratch.n_bits, bank.n_literals());
+    if clause_out && ctx.weighted {
         // Weighted TM, Type Ia: a clause that fires while its class is
         // reinforced earns vote weight (integer additive variant).
-        if ctx.weighted {
-            bank.weight_up(j);
-            sink.on_weight(j as u32, 1, bank.count(j) > 0);
-        }
-        for k in 0..n_lit {
-            if literals.get(k) {
-                if ctx.boost_true_positive || rng.bern_threshold(ctx.p_memorize) {
-                    let f = bank.bump_up(j, k);
-                    forward_flip(sink, bank, j, k, f);
-                }
-            } else if rng.bern_threshold(ctx.p_forget) {
-                let f = bank.bump_down(j, k);
-                forward_flip(sink, bank, j, k, f);
+        bank.weight_up(j);
+        sink.on_weight(j as u32, 1, bank.count(j) > 0);
+    }
+    let n = bank.n_literals();
+    fill_bernoulli_words(rng, ctx.p_forget, &mut scratch.forget, n);
+    let lw = literals.words();
+    if clause_out {
+        if ctx.boost_true_positive {
+            scratch.up.copy_from_slice(lw);
+        } else {
+            fill_bernoulli_words(rng, ctx.p_forget, &mut scratch.mem_fail, n);
+            for (w, &l) in lw.iter().enumerate() {
+                scratch.up[w] = l & !scratch.mem_fail[w];
             }
+        }
+        for (w, &l) in lw.iter().enumerate() {
+            scratch.down[w] = !l & scratch.forget[w];
         }
     } else {
-        for k in 0..n_lit {
-            if rng.bern_threshold(ctx.p_forget) {
-                let f = bank.bump_down(j, k);
-                forward_flip(sink, bank, j, k, f);
-            }
-        }
+        scratch.up.fill(0);
+        scratch.down.copy_from_slice(&scratch.forget);
     }
+    bank.apply_masks(j, &scratch.up, &scratch.down, sink);
 }
 
 /// Type II feedback: combats false positives — when a clause fires on a
 /// sample of the wrong class, every currently-*excluded* false literal
 /// is pushed one step toward inclusion, so the clause learns to be
 /// falsified by such samples in the future. Deterministic (no s-draws).
+///
+/// Convenience wrapper over [`type_ii_with_scratch`].
 pub fn type_ii(
     bank: &mut ClauseBank,
     sink: &mut dyn FlipSink,
@@ -164,9 +240,27 @@ pub fn type_ii(
     clause_out: bool,
     literals: &BitVec,
 ) {
+    let mut scratch = FeedbackScratch::new(bank.n_literals());
+    type_ii_with_scratch(bank, sink, ctx, j, clause_out, literals, &mut scratch);
+}
+
+/// [`type_ii`] with caller-owned mask buffers: the bump-up mask is one
+/// word-parallel combine, `exclude(j) & !literals` (the sliced layout's
+/// exclude mask *is* its sign plane).
+pub fn type_ii_with_scratch(
+    bank: &mut ClauseBank,
+    sink: &mut dyn FlipSink,
+    ctx: &FeedbackCtx,
+    j: usize,
+    clause_out: bool,
+    literals: &BitVec,
+    scratch: &mut FeedbackScratch,
+) {
     if !clause_out {
         return;
     }
+    debug_assert_eq!(literals.len(), bank.n_literals());
+    debug_assert_eq!(scratch.n_bits, bank.n_literals());
     // Weighted TM: a clause firing on the wrong class sheds vote weight
     // (floor 1) before learning to be falsified.
     if ctx.weighted {
@@ -176,19 +270,19 @@ pub fn type_ii(
             sink.on_weight(j as u32, -1, bank.count(j) > 0);
         }
     }
-    let n_lit = bank.n_literals();
-    for k in 0..n_lit {
-        if !literals.get(k) && !bank.include(j, k) {
-            let f = bank.bump_up(j, k);
-            forward_flip(sink, bank, j, k, f);
-        }
+    bank.fill_exclude_mask(j, &mut scratch.up);
+    for (w, &l) in literals.words().iter().enumerate() {
+        scratch.up[w] &= !l;
+        scratch.down[w] = 0;
     }
+    bank.apply_masks(j, &scratch.up, &scratch.down, sink);
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::eval::traits::NoopSink;
+    use crate::tm::bank::TaLayout;
 
     fn lits(bits: &[bool]) -> BitVec {
         BitVec::from_bools(bits)
@@ -200,15 +294,17 @@ mod tests {
 
     #[test]
     fn type_ii_includes_falsifying_literals_only() {
-        let mut bank = ClauseBank::new(2, 4);
-        let mut sink = NoopSink;
-        let x = lits(&[true, false, true, false]);
-        type_ii(&mut bank, &mut sink, &plain_ctx(), 0, true, &x);
-        // false literals 1 and 3, both excluded -> bumped to include
-        assert!(bank.include(0, 1));
-        assert!(bank.include(0, 3));
-        assert!(!bank.include(0, 0));
-        assert!(!bank.include(0, 2));
+        for layout in [TaLayout::Scalar, TaLayout::Sliced] {
+            let mut bank = ClauseBank::new_with_layout(2, 4, layout);
+            let mut sink = NoopSink;
+            let x = lits(&[true, false, true, false]);
+            type_ii(&mut bank, &mut sink, &plain_ctx(), 0, true, &x);
+            // false literals 1 and 3, both excluded -> bumped to include
+            assert!(bank.include(0, 1));
+            assert!(bank.include(0, 3));
+            assert!(!bank.include(0, 0));
+            assert!(!bank.include(0, 2));
+        }
     }
 
     #[test]
@@ -232,16 +328,18 @@ mod tests {
 
     #[test]
     fn type_i_with_boost_memorizes_true_literals_deterministically() {
-        let mut bank = ClauseBank::new(2, 4);
-        let mut sink = NoopSink;
-        let ctx = FeedbackCtx::new(1e12, true, false); // p_forget ~ 0
-        let mut rng = Rng::new(1);
-        let x = lits(&[true, true, false, false]);
-        type_i(&mut bank, &mut sink, &mut rng, &ctx, 0, true, &x);
-        assert!(bank.include(0, 0));
-        assert!(bank.include(0, 1));
-        assert!(!bank.include(0, 2));
-        assert!(!bank.include(0, 3));
+        for layout in [TaLayout::Scalar, TaLayout::Sliced] {
+            let mut bank = ClauseBank::new_with_layout(2, 4, layout);
+            let mut sink = NoopSink;
+            let ctx = FeedbackCtx::new(1e12, true, false); // p_forget ~ 0
+            let mut rng = Rng::new(1);
+            let x = lits(&[true, true, false, false]);
+            type_i(&mut bank, &mut sink, &mut rng, &ctx, 0, true, &x);
+            assert!(bank.include(0, 0));
+            assert!(bank.include(0, 1));
+            assert!(!bank.include(0, 2));
+            assert!(!bank.include(0, 3));
+        }
     }
 
     #[test]
@@ -272,6 +370,40 @@ mod tests {
         let dec = (0..trials).filter(|&k| bank.state(0, k) == -2).count();
         let rate = dec as f64 / trials as f64;
         assert!((rate - 0.25).abs() < 0.02, "rate={rate}");
+    }
+
+    #[test]
+    fn type_i_statistical_memorize_rate_without_boost() {
+        // clause_out=1, boost off, s=4: true literals increment w.p.
+        // 3/4 (drawn as the complement of a 1/4 failure mask).
+        let trials = 20_000usize;
+        let mut bank = ClauseBank::new(2, trials);
+        let mut sink = NoopSink;
+        let ctx = FeedbackCtx::new(4.0, false, false);
+        let mut rng = Rng::new(4);
+        let x = BitVec::ones(trials);
+        type_i(&mut bank, &mut sink, &mut rng, &ctx, 0, true, &x);
+        let inc = (0..trials).filter(|&k| bank.state(0, k) == 0).count();
+        let rate = inc as f64 / trials as f64;
+        assert!((rate - 0.75).abs() < 0.02, "rate={rate}");
+    }
+
+    #[test]
+    fn degenerate_s_clamps_to_one() {
+        // s <= 1 (or NaN) clamps to the s = 1 point instead of
+        // producing inverted probabilities.
+        let want = FeedbackCtx::new(1.0, true, false);
+        for bad in [0.25, 0.0, -3.0, f64::NAN] {
+            let got = FeedbackCtx::new(bad, true, false);
+            assert_eq!(got.p_forget, want.p_forget, "s={bad}");
+            assert_eq!(got.p_memorize, want.p_memorize, "s={bad}");
+        }
+        assert_eq!(want.p_forget, u32::MAX); // always forget
+        assert_eq!(want.p_memorize, 0); // never memorize (sans boost)
+        // and a huge s approaches the opposite edge
+        let wide = FeedbackCtx::new(f64::INFINITY, true, false);
+        assert_eq!(wide.p_forget, 0);
+        assert_eq!(wide.p_memorize, u32::MAX);
     }
 
     /// Flip events reaching the sink must mirror bank transitions.
@@ -315,8 +447,9 @@ mod tests {
         let x = lits(&[true, false, true, false]);
         let mut outputs = BitVec::zeros(4);
         outputs.set_all();
+        let mut scratch = FeedbackScratch::new(bank.n_literals());
         let n = update_clause_range(
-            &mut bank, &mut sink, &mut rng, &ctx, &outputs, &x, u32::MAX, true,
+            &mut bank, &mut sink, &mut rng, &ctx, &outputs, &x, u32::MAX, true, &mut scratch,
         );
         assert_eq!(n, 4);
         // Type II hit the negative-polarity clauses (ids 1, 3): false
@@ -325,7 +458,7 @@ mod tests {
         assert!(bank.include(3, 1) && bank.include(3, 3));
         // and p_update = 0 touches nothing
         let n = update_clause_range(
-            &mut bank, &mut sink, &mut rng, &ctx, &outputs, &x, 0, true,
+            &mut bank, &mut sink, &mut rng, &ctx, &outputs, &x, 0, true, &mut scratch,
         );
         assert_eq!(n, 0);
     }

@@ -5,6 +5,14 @@
 //! * [`DenseModel`]: the dense f32 arrays the AOT-compiled XLA
 //!   executable consumes (`include`, `count`, `polarity` — see
 //!   `python/compile/model.py` for the layout contract).
+//!
+//! **TA layout note:** the serialized state block is always the
+//! portable *scalar* byte form — clause-major `i8` states, one byte per
+//! TA — regardless of the in-memory [`crate::tm::bank::TaLayout`]
+//! (bit-sliced banks are decoded on save and re-encoded on load). The
+//! params JSON carries `ta_layout` so a reload reconstructs the same
+//! in-memory representation, but any layout can read any model file:
+//! the two layouts are bit-identical state machines.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -24,11 +32,10 @@ pub fn save_to(tm: &MultiClassTM, w: &mut impl Write) -> Result<()> {
     w.write_all(&(params.len() as u64).to_le_bytes())?;
     w.write_all(&params)?;
     for i in 0..tm.classes() {
-        let states = tm.bank(i).states();
+        // portable scalar byte form (decoded from bitplanes if sliced);
         // i8 -> u8 reinterpretation is value-preserving for storage
-        let bytes: &[u8] =
-            unsafe { std::slice::from_raw_parts(states.as_ptr() as *const u8, states.len()) };
-        w.write_all(bytes)?;
+        let bytes: Vec<u8> = tm.bank(i).states().iter().map(|&s| s as u8).collect();
+        w.write_all(&bytes)?;
         for &wgt in tm.bank(i).weights() {
             w.write_all(&wgt.to_le_bytes())?;
         }
@@ -242,6 +249,49 @@ mod tests {
             let want = orig.scores(lits);
             assert_eq!(naive.scores(lits), want);
             assert_eq!(indexed.scores(lits), want);
+        }
+    }
+
+    #[test]
+    fn sliced_and_scalar_models_serialize_identically() {
+        // same trained machine in both layouts: the byte streams match
+        // exactly (scalar serialized form), and a sliced save reloads
+        // into a sliced bank with the same states.
+        use crate::tm::bank::TaLayout;
+        let params = TMParams::new(3, 8, 10).with_seed(7);
+        let train_bytes = |layout: TaLayout| -> Vec<u8> {
+            let mut tr =
+                Trainer::new(params.clone().with_ta_layout(layout), Backend::Indexed);
+            let mut rng = Rng::new(5);
+            let samples: Vec<(BitVec, usize)> = (0..120)
+                .map(|_| {
+                    let y = rng.below(3) as usize;
+                    let bits: Vec<bool> =
+                        (0..10).map(|k| k % 3 == y || rng.bern(0.3)).collect();
+                    let mut lits = bits.clone();
+                    lits.extend(bits.iter().map(|b| !b));
+                    (BitVec::from_bools(&lits), y)
+                })
+                .collect();
+            for _ in 0..3 {
+                tr.train_epoch(samples.iter().map(|(l, y)| (l, *y)));
+            }
+            let mut buf = Vec::new();
+            save_to(&tr.tm, &mut buf).unwrap();
+            buf
+        };
+        let scalar_bytes = train_bytes(TaLayout::Scalar);
+        let sliced_bytes = train_bytes(TaLayout::Sliced);
+        // identical except for the params JSON block (ta_layout name):
+        // the decoded machines must agree exactly
+        let a = load_from(&mut scalar_bytes.as_slice()).unwrap();
+        let b = load_from(&mut sliced_bytes.as_slice()).unwrap();
+        assert_eq!(a.params.ta_layout, TaLayout::Scalar);
+        assert_eq!(b.params.ta_layout, TaLayout::Sliced);
+        assert_eq!(b.bank(0).layout(), TaLayout::Sliced);
+        for c in 0..3 {
+            assert_eq!(a.bank(c).states(), b.bank(c).states(), "class {c}");
+            assert!(b.bank(c).check_counts());
         }
     }
 

@@ -17,7 +17,7 @@ pub mod io;
 pub mod params;
 pub mod trainer;
 
-pub use bank::{ClauseBank, Flip};
+pub use bank::{ClauseBank, Flip, TaLayout};
 pub use classifier::MultiClassTM;
 pub use params::TMParams;
 pub use trainer::Trainer;

@@ -1,5 +1,6 @@
 //! Hyper-parameters of a multi-class Tsetlin Machine.
 
+use crate::tm::bank::TaLayout;
 use crate::util::Json;
 
 /// Hyper-parameters (paper §2). `clauses_per_class` is the paper's `n`;
@@ -26,6 +27,14 @@ pub struct TMParams {
     /// Weighted TM (paper ref [8]): integer clause weights, letting one
     /// clause represent many — fewer clauses for the same accuracy.
     pub weighted: bool,
+    /// TA storage layout (default bit-sliced). A *representation*
+    /// choice, not a learning hyper-parameter: both layouts produce
+    /// bit-identical training trajectories and flip streams — the
+    /// sliced layout turns per-literal feedback into word-parallel
+    /// bitplane arithmetic, the scalar layout is the portable escape
+    /// hatch (and the serialized form either way, see
+    /// [`crate::tm::io`]).
+    pub ta_layout: TaLayout,
 }
 
 impl TMParams {
@@ -39,11 +48,17 @@ impl TMParams {
             boost_true_positive: true,
             seed: 42,
             weighted: false,
+            ta_layout: TaLayout::default(),
         }
     }
 
     pub fn with_weighted(mut self, weighted: bool) -> Self {
         self.weighted = weighted;
+        self
+    }
+
+    pub fn with_ta_layout(mut self, layout: TaLayout) -> Self {
+        self.ta_layout = layout;
         self
     }
 
@@ -98,6 +113,7 @@ impl TMParams {
             ("boost_true_positive", Json::Bool(self.boost_true_positive)),
             ("seed", Json::num(self.seed as f64)),
             ("weighted", Json::Bool(self.weighted)),
+            ("ta_layout", Json::str(self.ta_layout.name())),
         ])
     }
 
@@ -117,6 +133,13 @@ impl TMParams {
             seed: field("seed")?.as_f64().ok_or("seed must be number")? as u64,
             // absent in pre-weighted model files: default plain TM
             weighted: v.get("weighted").and_then(Json::as_bool).unwrap_or(false),
+            // absent in pre-sliced model files: the current default
+            // layout (states are serialized in the portable scalar byte
+            // form either way, so this only picks the in-memory form)
+            ta_layout: match v.get("ta_layout").and_then(Json::as_str) {
+                Some(name) => name.parse()?,
+                None => TaLayout::default(),
+            },
         };
         p.validate()?;
         Ok(p)
@@ -138,7 +161,9 @@ impl TMParams {
         if self.threshold == 0 {
             return Err("threshold T must be positive".into());
         }
-        if self.s < 1.0 {
+        // NaN is rejected explicitly: it would silently clamp in
+        // FeedbackCtx and emit unparseable params JSON on model save
+        if self.s.is_nan() || self.s < 1.0 {
             return Err(format!("s must be >= 1.0, got {}", self.s));
         }
         Ok(())
@@ -169,6 +194,7 @@ mod tests {
         assert!(TMParams::new(2, 4, 0).validate().is_err());
         assert!(TMParams::new(2, 4, 5).with_threshold(0).validate().is_err());
         assert!(TMParams::new(2, 4, 5).with_s(0.5).validate().is_err());
+        assert!(TMParams::new(2, 4, 5).with_s(f64::NAN).validate().is_err());
     }
 
     #[test]
@@ -193,6 +219,26 @@ mod tests {
         let s = p.to_json().to_string();
         let q = TMParams::from_json(&Json::parse(&s).unwrap()).unwrap();
         assert_eq!(p, q);
+    }
+
+    #[test]
+    fn ta_layout_json_roundtrip_and_default() {
+        let p = TMParams::new(2, 4, 8).with_ta_layout(TaLayout::Scalar);
+        let q = TMParams::from_json(&p.to_json()).unwrap();
+        assert_eq!(q.ta_layout, TaLayout::Scalar);
+        // pre-sliced model files (no field) get the current default
+        let mut json = TMParams::new(2, 4, 8).to_json();
+        if let Json::Obj(o) = &mut json {
+            o.remove("ta_layout");
+        }
+        let q = TMParams::from_json(&json).unwrap();
+        assert_eq!(q.ta_layout, TaLayout::default());
+        // a bogus layout name is rejected
+        let mut json = TMParams::new(2, 4, 8).to_json();
+        if let Json::Obj(o) = &mut json {
+            o.insert("ta_layout".to_string(), Json::str("simd"));
+        }
+        assert!(TMParams::from_json(&json).is_err());
     }
 
     #[test]

@@ -7,7 +7,11 @@
 //! maintenance work inside the flip hooks). Given the same seed and data
 //! order, all backends produce bit-identical machines — the equivalence
 //! tests in `rust/tests/` assert exactly that, which is the paper's
-//! implicit correctness claim for the index.
+//! implicit correctness claim for the index. The same holds across the
+//! TA storage layouts ([`crate::tm::bank::TaLayout`], chosen by
+//! `TMParams::ta_layout`): the bit-sliced bank feeds back word-parallel
+//! yet stays bit-identical to the scalar bank
+//! (`rust/tests/feedback_equiv.rs`).
 //!
 //! Inference (`predict`/`scores`/`accuracy`/`score_batch_into`) for the
 //! **indexed** backend routes through the class-fused batch engine
@@ -28,7 +32,9 @@ use crate::engine::{
 use crate::eval::{Backend, Evaluator};
 use crate::index::{IndexStats, IndexedEval};
 use crate::tm::classifier::MultiClassTM;
-use crate::tm::feedback::{clause_update_threshold, update_clause_range, FeedbackCtx};
+use crate::tm::feedback::{
+    clause_update_threshold, update_clause_range, FeedbackCtx, FeedbackScratch,
+};
 use crate::tm::params::TMParams;
 use crate::util::rng::Rng;
 use crate::util::BitVec;
@@ -96,6 +102,8 @@ pub struct Trainer {
     feedback_rng: Rng,
     ctx: FeedbackCtx,
     out_scratch: BitVec,
+    /// Reusable feedback mask buffers (hot path allocates nothing).
+    feedback_scratch: FeedbackScratch,
     /// Class-fused inference engine (indexed backend only), built
     /// lazily and invalidated by training steps.
     fused: Option<FusedEngine>,
@@ -121,6 +129,7 @@ impl Trainer {
         let (sample_rng, feedback_rng) = train_streams(params.seed, 0);
         Trainer {
             out_scratch: BitVec::zeros(params.clauses_per_class),
+            feedback_scratch: FeedbackScratch::new(params.n_literals()),
             ctx: FeedbackCtx::new(params.s, params.boost_true_positive, params.weighted),
             evals,
             backend,
@@ -150,6 +159,7 @@ impl Trainer {
         let (sample_rng, feedback_rng) = train_streams(params.seed, 0);
         Trainer {
             out_scratch: BitVec::zeros(params.clauses_per_class),
+            feedback_scratch: FeedbackScratch::new(params.n_literals()),
             ctx: FeedbackCtx::new(params.s, params.boost_true_positive, params.weighted),
             evals,
             backend,
@@ -325,6 +335,7 @@ impl Trainer {
             literals,
             p_th,
             is_target,
+            &mut self.feedback_scratch,
         )
     }
 
@@ -581,6 +592,33 @@ mod tests {
     }
 
     #[test]
+    fn ta_layouts_produce_identical_machines() {
+        // Layout counterpart of the backend-equivalence theorem: the
+        // bit-sliced bank trains bit-identically to the scalar one
+        // (the deep differential suite is rust/tests/feedback_equiv.rs).
+        use crate::tm::bank::TaLayout;
+        let base = TMParams::new(2, 10, 12).with_threshold(8);
+        let train = toy_samples(150, 12, 3);
+        let mut machines = vec![];
+        for layout in [TaLayout::Scalar, TaLayout::Sliced] {
+            let mut tr =
+                Trainer::new(base.clone().with_ta_layout(layout), Backend::Indexed);
+            for _ in 0..3 {
+                tr.train_epoch(train.iter().map(|(l, y)| (l, *y)));
+            }
+            tr.check_invariants().unwrap();
+            machines.push(tr);
+        }
+        for i in 0..base.classes {
+            assert_eq!(
+                machines[0].tm.bank(i).states(),
+                machines[1].tm.bank(i).states(),
+                "class {i} states diverge across layouts"
+            );
+        }
+    }
+
+    #[test]
     fn training_is_deterministic_given_seed() {
         let params = TMParams::new(2, 8, 6).with_seed(99);
         let train = toy_samples(100, 6, 5);
@@ -589,7 +627,7 @@ mod tests {
             for _ in 0..2 {
                 tr.train_epoch(train.iter().map(|(l, y)| (l, *y)));
             }
-            tr.tm.bank(0).states().to_vec()
+            tr.tm.bank(0).states()
         };
         assert_eq!(run(), run());
     }

@@ -5,6 +5,28 @@
 //! bit-parallel baseline ANDs whole words; (2) per-clause output/alive
 //! bitmaps during training.
 
+/// Number of `u64` words covering `bits` bits.
+#[inline]
+pub fn words_for(bits: usize) -> usize {
+    bits.div_ceil(64)
+}
+
+/// Mask of the valid lanes of word `w` in a `bits`-bit vector: all-ones
+/// for full words, the low tail for a final partial word, zero for
+/// words past the end. Word-granular consumers (the bit-sliced TA bank,
+/// feedback masks) use this to keep tail lanes inert.
+#[inline]
+pub fn word_mask(bits: usize, w: usize) -> u64 {
+    let start = w * 64;
+    if start + 64 <= bits {
+        !0u64
+    } else if start >= bits {
+        0
+    } else {
+        (1u64 << (bits - start)) - 1
+    }
+}
+
 /// Fixed-length packed bit vector over `u64` words.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct BitVec {
@@ -221,6 +243,19 @@ impl Iterator for OnesIter<'_> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn word_helpers_cover_boundaries() {
+        assert_eq!(words_for(0), 0);
+        assert_eq!(words_for(1), 1);
+        assert_eq!(words_for(64), 1);
+        assert_eq!(words_for(65), 2);
+        assert_eq!(word_mask(128, 0), !0u64);
+        assert_eq!(word_mask(128, 1), !0u64);
+        assert_eq!(word_mask(70, 1), (1u64 << 6) - 1);
+        assert_eq!(word_mask(70, 2), 0);
+        assert_eq!(word_mask(0, 0), 0);
+    }
 
     #[test]
     fn set_get_clear_roundtrip() {

@@ -7,6 +7,8 @@
 //! the speedup experiments run the *same* training trajectory with and
 //! without indexing, so both runs must see identical random streams.
 
+use crate::util::bitvec::{word_mask, words_for};
+
 /// xoshiro256** generator (public-domain reference algorithm).
 #[derive(Clone, Debug)]
 pub struct Rng {
@@ -94,6 +96,101 @@ impl Rng {
             let j = self.below(i as u32 + 1) as usize;
             xs.swap(i, j);
         }
+    }
+
+    /// Number of *failures* before the next success of a
+    /// Bernoulli(`threshold` / 2^32) trial stream, in a single draw —
+    /// geometric skip sampling via inversion of the geometric CDF.
+    ///
+    /// Walking a length-`n` Bernoulli stream costs an expected
+    /// `n * p + 1` draws instead of `n`: the win that makes per-literal
+    /// feedback masks cheap for small `1/s` (the TM's forget rate), and
+    /// equally useful to `parallel/` workers drawing sparse update
+    /// masks. Deterministic given the RNG state.
+    ///
+    /// Edge contract (mirrors [`prob_to_threshold`]):
+    /// * `threshold == 0` (p = 0): no success ever — returns `u64::MAX`
+    ///   as an "infinite gap" sentinel **without consuming a draw**.
+    /// * `threshold == u32::MAX` (p = 1): every trial succeeds —
+    ///   returns 0 without consuming a draw.
+    #[inline]
+    pub fn geometric_skip(&mut self, threshold: u32) -> u64 {
+        if threshold == 0 {
+            return u64::MAX;
+        }
+        if threshold == u32::MAX {
+            return 0;
+        }
+        let p = threshold as f64 * (1.0 / 4294967296.0);
+        // U in (0, 1]: gap = floor(ln U / ln(1-p)); U > 1-p <=> gap 0,
+        // which happens with probability exactly p.
+        let u = 1.0 - self.unit_f64();
+        let g = u.ln() / (1.0 - p).ln();
+        if g >= u64::MAX as f64 {
+            u64::MAX
+        } else {
+            g as u64
+        }
+    }
+}
+
+/// Fill the first `n_bits` of `out` with an i.i.d. Bernoulli(p) mask,
+/// p = `threshold` / 2^32. Bits past `n_bits` are cleared, so the words
+/// can be consumed by word-parallel feedback without tail masking.
+///
+/// Two exact strategies, picked by expected cost (both produce
+/// independent Bernoulli(p) bits; the RNG stream shape is a
+/// deterministic function of `(threshold, n_bits)`, which is all the
+/// scalar/sliced layout-equivalence contract needs):
+///
+/// * **geometric skip sampling** ([`Rng::geometric_skip`]) for sparse
+///   masks: one draw per *set* bit (plus one terminating draw) —
+///   expected `n_bits * p` draws, the `O(2o / s)` regime of TM forget
+///   masks at large `s`.
+/// * **binary-expansion sampling** for dense masks: per output word,
+///   combine one uniform word per significant bit of the threshold's
+///   dyadic expansion (`m <- r | m` for a 1-bit, `r & m` for a 0-bit,
+///   deepest bit first), giving 64 exact Bernoulli(p) lanes in
+///   `32 - trailing_zeros(threshold)` cheap draws — e.g. 2 draws per
+///   word for the `s = 4` forget rate, independent of density.
+pub fn fill_bernoulli_words(rng: &mut Rng, threshold: u32, out: &mut [u64], n_bits: usize) {
+    debug_assert!(out.len() * 64 >= n_bits, "mask buffer too small");
+    out.fill(0);
+    if n_bits == 0 || threshold == 0 {
+        return;
+    }
+    let words = words_for(n_bits);
+    let tail_mask = word_mask(n_bits, words - 1);
+    if threshold == u32::MAX {
+        // p = 1 (the prob_to_threshold(1.0) encoding): draw-free
+        out[..words].fill(!0u64);
+        out[words - 1] &= tail_mask;
+        return;
+    }
+    // cost model: a skip draw (ln + divide) ~6x a next_u64 draw
+    let expansion_bits = 32 - threshold.trailing_zeros();
+    let p = threshold as f64 * (1.0 / 4294967296.0);
+    let skip_draws = n_bits as f64 * p;
+    if skip_draws * 6.0 < (words as u32 * expansion_bits) as f64 {
+        let mut pos = rng.geometric_skip(threshold);
+        while pos < n_bits as u64 {
+            out[(pos >> 6) as usize] |= 1u64 << (pos & 63);
+            let gap = rng.geometric_skip(threshold);
+            pos = pos.saturating_add(1).saturating_add(gap);
+        }
+    } else {
+        // P(bit) = 0.b1 b2 .. bK in binary (b1 = threshold bit 31):
+        // fold from the deepest bit outward — OR folds in a 1-bit's
+        // probability half, AND halves for a 0-bit.
+        for slot in out[..words].iter_mut() {
+            let mut m = 0u64;
+            for i in threshold.trailing_zeros()..32 {
+                let r = rng.next_u64();
+                m = if (threshold >> i) & 1 == 1 { r | m } else { r & m };
+            }
+            *slot = m;
+        }
+        out[words - 1] &= tail_mask;
     }
 }
 
@@ -185,6 +282,94 @@ mod tests {
         sorted.sort_unstable();
         assert_eq!(sorted, (0..100).collect::<Vec<_>>());
         assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn geometric_skip_edge_probabilities() {
+        let mut r = Rng::new(31);
+        // p = 0: infinite gap sentinel, and no stream consumption
+        let before = r.clone();
+        assert_eq!(r.geometric_skip(prob_to_threshold(0.0)), u64::MAX);
+        assert_eq!(r.next_u64(), before.clone().next_u64());
+        // p = 1: zero gap, also draw-free
+        let before = r.clone();
+        assert_eq!(r.geometric_skip(prob_to_threshold(1.0)), 0);
+        assert_eq!(r.next_u64(), before.clone().next_u64());
+    }
+
+    #[test]
+    fn geometric_skip_matches_bernoulli_rate() {
+        // Mean gap of Geometric(p) is (1-p)/p: walking by gaps must
+        // reproduce the Bernoulli success rate.
+        let mut r = Rng::new(33);
+        for p in [0.5, 0.25, 0.05] {
+            let th = prob_to_threshold(p);
+            let trials: u64 = 200_000;
+            let mut pos = r.geometric_skip(th);
+            let mut hits = 0u64;
+            while pos < trials {
+                hits += 1;
+                pos += 1 + r.geometric_skip(th);
+            }
+            let rate = hits as f64 / trials as f64;
+            assert!((rate - p).abs() < 0.01, "p={p} rate={rate}");
+        }
+    }
+
+    #[test]
+    fn geometric_skip_tiny_p_tail() {
+        // p = 1e-6: gaps are ~Exp(p)-sized; the mean over many draws
+        // must sit near 1/p - 1 and never collapse to 0 or blow past
+        // the f64 -> u64 clamp.
+        let mut r = Rng::new(35);
+        let th = prob_to_threshold(1e-6);
+        let n = 2000;
+        let mut sum = 0f64;
+        for _ in 0..n {
+            let g = r.geometric_skip(th);
+            assert!(g < u64::MAX, "tiny p must still yield finite gaps");
+            sum += g as f64;
+        }
+        let mean = sum / n as f64;
+        let want = 1e6;
+        assert!(mean > want * 0.9 && mean < want * 1.1, "mean={mean}");
+    }
+
+    #[test]
+    fn fill_bernoulli_words_density_and_edges() {
+        let mut r = Rng::new(37);
+        let n_bits = 10_000;
+        let mut words = vec![0u64; n_bits.div_ceil(64)];
+        // p = 1 sets every bit below n_bits and nothing past it
+        fill_bernoulli_words(&mut r, prob_to_threshold(1.0), &mut words, n_bits);
+        let ones: u32 = words.iter().map(|w| w.count_ones()).sum();
+        assert_eq!(ones as usize, n_bits);
+        // p = 0 clears a dirty buffer
+        fill_bernoulli_words(&mut r, 0, &mut words, n_bits);
+        assert!(words.iter().all(|&w| w == 0));
+        // both strategies land on the requested density: p = 0.25 is
+        // dyadic (binary-expansion path, 2 draws/word), p = 0.01 is
+        // sparse (geometric skip path), p = 0.3 is a non-dyadic dense
+        // threshold (expansion path, all 32 bits significant)
+        for p in [0.25, 0.01, 0.3] {
+            let mut hits = 0usize;
+            for _ in 0..50 {
+                fill_bernoulli_words(&mut r, prob_to_threshold(p), &mut words, n_bits);
+                hits += words.iter().map(|w| w.count_ones() as usize).sum::<usize>();
+            }
+            let rate = hits as f64 / (50.0 * n_bits as f64);
+            assert!((rate - p).abs() < 0.012, "p={p} rate={rate}");
+        }
+        // a short tail word stays clean on every path
+        for p in [1.0, 0.5, 0.01] {
+            let mut short = vec![!0u64; 2];
+            fill_bernoulli_words(&mut r, prob_to_threshold(p), &mut short, 70);
+            assert_eq!(short[1] & !((1u64 << 6) - 1), 0, "p={p} tail dirty");
+        }
+        let mut short = vec![0u64; 2];
+        fill_bernoulli_words(&mut r, prob_to_threshold(1.0), &mut short, 70);
+        assert_eq!(short[0], !0u64);
+        assert_eq!(short[1], (1u64 << 6) - 1);
     }
 
     #[test]

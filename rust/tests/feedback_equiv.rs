@@ -1,0 +1,289 @@
+//! Differential suite: bit-sliced vs scalar TA banks.
+//!
+//! The bit-sliced layout replaces per-literal `i8` bumps with
+//! word-parallel bitplane arithmetic and recovers flips from sign-plane
+//! XOR. This suite proves the replacement is **bit-exact** under the
+//! shared RNG contract (both layouts consume the same skip-sampled
+//! Bernoulli masks from the same stream):
+//!
+//! * identical TA states, include counts, and clause weights,
+//! * the *exact same* [`FlipSink`] event stream (order, counts,
+//!   weights) — the contract the paper's O(1) index maintenance hangs
+//!   off,
+//! * over random machines, long feedback storms, full sequential and
+//!   parallel training runs on `data/synth::noisy_xor`, and every
+//!   evaluation backend.
+
+use tsetlin_index::data::synth::noisy_xor;
+use tsetlin_index::eval::traits::FlipSink;
+use tsetlin_index::eval::Backend;
+use tsetlin_index::parallel::ParallelTrainer;
+use tsetlin_index::tm::bank::{ClauseBank, TaLayout};
+use tsetlin_index::tm::feedback::{update_clause_range, FeedbackCtx, FeedbackScratch};
+use tsetlin_index::tm::params::TMParams;
+use tsetlin_index::tm::trainer::Trainer;
+use tsetlin_index::util::{BitVec, Rng};
+
+/// Every observable feedback event, in order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum Ev {
+    Inc { j: u32, k: u32, count: u32, weight: u32 },
+    Exc { j: u32, k: u32, count: u32, weight: u32 },
+    Weight { j: u32, delta: i32, nonempty: bool },
+}
+
+#[derive(Default)]
+struct Recorder {
+    events: Vec<Ev>,
+}
+
+impl FlipSink for Recorder {
+    fn on_include(&mut self, j: u32, k: u32, count: u32, weight: u32) {
+        self.events.push(Ev::Inc { j, k, count, weight });
+    }
+    fn on_exclude(&mut self, j: u32, k: u32, count: u32, weight: u32) {
+        self.events.push(Ev::Exc { j, k, count, weight });
+    }
+    fn on_weight(&mut self, j: u32, delta: i32, nonempty: bool) {
+        self.events.push(Ev::Weight { j, delta, nonempty });
+    }
+}
+
+/// A random mid-training bank materialized in both layouts (states
+/// include the saturation extremes), plus matching weights.
+fn random_pair(
+    rng: &mut Rng,
+    clauses: usize,
+    n_lit: usize,
+    density: f64,
+    weighted: bool,
+) -> (ClauseBank, ClauseBank) {
+    let mut scalar = ClauseBank::new_with_layout(clauses, n_lit, TaLayout::Scalar);
+    for j in 0..clauses {
+        for k in 0..n_lit {
+            if rng.bern(density) {
+                let v = match rng.below(12) {
+                    0 => i8::MAX,
+                    1 => i8::MIN,
+                    _ => (rng.below(21) as i8) - 10,
+                };
+                scalar.set_state(j, k, v);
+            }
+        }
+        if weighted && rng.bern(0.5) {
+            scalar.set_weight(j, 1 + rng.below(6));
+        }
+    }
+    let sliced = scalar.convert_layout(TaLayout::Sliced);
+    assert_eq!(scalar.states(), sliced.states());
+    (scalar, sliced)
+}
+
+fn random_lits(rng: &mut Rng, n: usize, p: f64) -> BitVec {
+    BitVec::from_bools(&(0..n).map(|_| rng.bern(p)).collect::<Vec<_>>())
+}
+
+/// Training-mode clause outputs straight off the documented semantics
+/// (empty clauses output 1 during learning).
+fn reference_outputs(bank: &ClauseBank, lits: &BitVec) -> BitVec {
+    let mut out = BitVec::zeros(bank.clauses());
+    for j in 0..bank.clauses() {
+        let o = bank.count(j) == 0 || bank.included_literals(j).all(|k| lits.get(k));
+        out.assign(j, o);
+    }
+    out
+}
+
+/// One differential feedback step on a layout pair: same RNG seed in,
+/// states + counts + weights + event stream compared out.
+#[allow(clippy::too_many_arguments)]
+fn step_both(
+    scalar: &mut ClauseBank,
+    sliced: &mut ClauseBank,
+    ctx: &FeedbackCtx,
+    outputs: &BitVec,
+    lits: &BitVec,
+    p_update: u32,
+    is_target: bool,
+    seed: u64,
+    tag: &str,
+) {
+    let mut rec_a = Recorder::default();
+    let mut rec_b = Recorder::default();
+    let mut rng_a = Rng::new(seed);
+    let mut rng_b = Rng::new(seed);
+    let mut scratch_a = FeedbackScratch::new(scalar.n_literals());
+    let mut scratch_b = FeedbackScratch::new(sliced.n_literals());
+    let ua = update_clause_range(
+        scalar, &mut rec_a, &mut rng_a, ctx, outputs, lits, p_update, is_target,
+        &mut scratch_a,
+    );
+    let ub = update_clause_range(
+        sliced, &mut rec_b, &mut rng_b, ctx, outputs, lits, p_update, is_target,
+        &mut scratch_b,
+    );
+    assert_eq!(ua, ub, "{tag}: update counts diverge");
+    assert_eq!(rec_a.events, rec_b.events, "{tag}: FlipSink streams diverge");
+    assert_eq!(scalar.states(), sliced.states(), "{tag}: states diverge");
+    assert_eq!(scalar.weights(), sliced.weights(), "{tag}: weights diverge");
+    for j in 0..scalar.clauses() {
+        assert_eq!(scalar.count(j), sliced.count(j), "{tag}: count({j}) diverges");
+    }
+    // and the two RNG streams consumed the same number of draws
+    assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "{tag}: RNG streams diverge");
+}
+
+#[test]
+fn random_machines_single_steps_are_bit_identical() {
+    let mut rng = Rng::new(0xfeedbac0);
+    let mut seed = 1u64;
+    for &(clauses, n_lit) in &[(4usize, 6usize), (8, 64), (6, 70), (4, 200)] {
+        for &weighted in &[false, true] {
+            let (mut scalar, mut sliced) = random_pair(&mut rng, clauses, n_lit, 0.3, weighted);
+            for trial in 0..60 {
+                let s = [1.0, 2.0, 4.0, 27.0][trial % 4];
+                let boost = trial % 3 != 0;
+                let ctx = FeedbackCtx::new(s, boost, weighted);
+                let lits = random_lits(&mut rng, n_lit, 0.5);
+                let outputs = reference_outputs(&scalar, &lits);
+                let p_update = match trial % 3 {
+                    0 => u32::MAX,
+                    1 => rng.next_u32(),
+                    _ => u32::MAX / 2,
+                };
+                seed += 1;
+                step_both(
+                    &mut scalar,
+                    &mut sliced,
+                    &ctx,
+                    &outputs,
+                    &lits,
+                    p_update,
+                    trial % 2 == 0,
+                    seed,
+                    &format!("{clauses}x{n_lit} weighted={weighted} trial={trial}"),
+                );
+            }
+            assert!(scalar.check_counts() && sliced.check_counts());
+        }
+    }
+}
+
+#[test]
+fn saturation_storms_stay_bit_identical() {
+    // s = 1 makes every forget mask full; hammering the same bank
+    // drives states into both saturation rails and back while the
+    // layouts must agree at every step (tail word exercised: 2o = 70).
+    let mut rng = Rng::new(0x5a7a5a7a);
+    let (mut scalar, mut sliced) = random_pair(&mut rng, 6, 70, 0.6, false);
+    for step in 0..400 {
+        let s = if step % 2 == 0 { 1.0 } else { 1e9 };
+        let ctx = FeedbackCtx::new(s, step % 5 == 0, false);
+        let lits = match step % 4 {
+            0 => BitVec::ones(70),
+            1 => BitVec::zeros(70),
+            _ => random_lits(&mut rng, 70, 0.5),
+        };
+        let outputs = reference_outputs(&scalar, &lits);
+        step_both(
+            &mut scalar,
+            &mut sliced,
+            &ctx,
+            &outputs,
+            &lits,
+            u32::MAX,
+            step % 2 == 0,
+            9000 + step as u64,
+            &format!("storm step {step}"),
+        );
+    }
+    assert!(scalar.check_counts() && sliced.check_counts());
+}
+
+fn xor_params(weighted: bool, layout: TaLayout) -> TMParams {
+    TMParams::new(2, 20, 8)
+        .with_threshold(12)
+        .with_s(4.0)
+        .with_seed(77)
+        .with_weighted(weighted)
+        .with_ta_layout(layout)
+}
+
+#[test]
+fn full_noisy_xor_training_runs_are_bit_identical_across_layouts() {
+    let train = noisy_xor(8, 800, 0.05, 11);
+    let test = noisy_xor(8, 200, 0.0, 12);
+    for weighted in [false, true] {
+        for backend in Backend::ALL {
+            let mut machines = vec![];
+            for layout in [TaLayout::Scalar, TaLayout::Sliced] {
+                let mut tr = Trainer::new(xor_params(weighted, layout), backend);
+                for _ in 0..8 {
+                    tr.train_epoch(train.iter());
+                }
+                tr.check_invariants().unwrap();
+                machines.push(tr);
+            }
+            let [a, b] = &mut machines[..] else { unreachable!() };
+            for c in 0..2 {
+                assert_eq!(
+                    a.tm.bank(c).states(),
+                    b.tm.bank(c).states(),
+                    "{} weighted={weighted} class {c}: states diverge",
+                    backend.name()
+                );
+                assert_eq!(a.tm.bank(c).weights(), b.tm.bank(c).weights());
+            }
+            for (lits, _) in test.iter() {
+                assert_eq!(a.scores(lits), b.scores(lits));
+            }
+            // the sliced run still *learns* (sanity floor — the real
+            // assertion of this test is the bit-identity above)
+            let acc = b.accuracy(test.iter());
+            assert!(acc > 0.85, "{} sliced accuracy {acc}", backend.name());
+        }
+    }
+}
+
+#[test]
+fn parallel_training_is_bit_identical_across_layouts() {
+    let train = noisy_xor(8, 200, 0.05, 21);
+    for threads in [1usize, 2, 3] {
+        let mut machines = vec![];
+        for layout in [TaLayout::Scalar, TaLayout::Sliced] {
+            let mut tr = ParallelTrainer::new(xor_params(false, layout), threads)
+                .with_stale_window(4);
+            for _ in 0..3 {
+                tr.train_epoch(train.iter());
+            }
+            tr.check_invariants().unwrap();
+            machines.push(tr);
+        }
+        let [a, b] = &mut machines[..] else { unreachable!() };
+        for c in 0..2 {
+            assert_eq!(
+                a.tm().bank(c).states(),
+                b.tm().bank(c).states(),
+                "{threads} threads class {c}: states diverge"
+            );
+        }
+    }
+}
+
+#[test]
+fn one_worker_sliced_parallel_matches_sequential_sliced() {
+    // the 1-worker == sequential bit-identity contract survives the
+    // layout swap
+    let train = noisy_xor(8, 200, 0.05, 31);
+    let params = xor_params(true, TaLayout::Sliced);
+    let mut seq = Trainer::new(params.clone(), Backend::Indexed);
+    let mut par = ParallelTrainer::new(params, 1);
+    for _ in 0..3 {
+        seq.train_epoch(train.iter());
+        par.train_epoch(train.iter());
+    }
+    for c in 0..2 {
+        assert_eq!(seq.tm.bank(c).states(), par.tm().bank(c).states());
+        assert_eq!(seq.tm.bank(c).weights(), par.tm().bank(c).weights());
+    }
+}
