@@ -1,0 +1,179 @@
+//! End-to-end serving bench: coordinator + TCP front end + loadgen,
+//! all in-process. Writes `BENCH_serve.json`.
+//!
+//! Measures the full production path — admission queue, batcher
+//! workers, snapshot scoring, line protocol — in both load-generator
+//! disciplines, plus a hot-swap phase that republishes the model
+//! mid-load to show swap cost is invisible to the client.
+//!
+//! ```bash
+//! cargo bench --bench serve_load
+//! TMI_BENCH_SECS=5 cargo bench --bench serve_load   # longer phases
+//! ```
+
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use tsetlin_index::coordinator::server::serve_tcp;
+use tsetlin_index::coordinator::{loadgen, BatchPolicy, Coordinator, LoadgenConfig, RouteConfig};
+use tsetlin_index::data::synth::{image_dataset, ImageStyle};
+use tsetlin_index::eval::Backend;
+use tsetlin_index::tm::params::TMParams;
+use tsetlin_index::tm::trainer::Trainer;
+use tsetlin_index::util::Json;
+
+const FEATURES: usize = 784;
+const CLASSES: usize = 4;
+const CLAUSES_TOTAL: usize = 256;
+
+fn main() {
+    let phase_secs: f64 = std::env::var("TMI_BENCH_SECS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2.0);
+
+    eprintln!("training a {CLASSES}-class, {CLAUSES_TOTAL}-clause model on synthetic MNIST...");
+    let all = image_dataset(ImageStyle::Digits, CLASSES, 600, 1, 91);
+    let train = all.slice(0, 500);
+    let params = TMParams::from_total_clauses(CLASSES, CLAUSES_TOTAL, train.features)
+        .with_threshold(20)
+        .with_s(5.0);
+    let features = train.features;
+    assert_eq!(features, FEATURES, "synthetic MNIST shape drifted");
+    let mut trainer = Trainer::new(params, Backend::Indexed);
+    let mut order_rng = tsetlin_index::util::Rng::new(7);
+    for _ in 0..3 {
+        let order = train.epoch_order(&mut order_rng);
+        trainer.train_epoch(train.iter_order(&order));
+    }
+
+    let workers = std::thread::available_parallelism().map_or(2, |n| n.get().min(4));
+    let mut coord = Coordinator::new();
+    coord.register_model(
+        "cpu",
+        trainer.publish(),
+        RouteConfig {
+            workers,
+            queue_cap: 1024,
+            policy: BatchPolicy::default(),
+        },
+    );
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let handle = coord.handle();
+    let server = std::thread::spawn(move || serve_tcp(listener, handle, stop2));
+    let swap_handle = coord.handle();
+    eprintln!("serving on {addr} with {workers} workers; {phase_secs:.1}s per phase");
+
+    // (label, connections, total offered rate; 0 = closed loop)
+    let phases: &[(&str, usize, f64)] = &[
+        ("closed_2conn", 2, 0.0),
+        ("closed_8conn", 8, 0.0),
+        ("open_2000rps", 4, 2000.0),
+    ];
+    let mut results: Vec<Json> = Vec::new();
+    println!(
+        "{:<22} {:>12} {:>10} {:>10} {:>10} {:>10}",
+        "phase", "ok/s", "p50_us", "p99_us", "shed_rate", "sent"
+    );
+    for &(label, connections, rate) in phases {
+        let cfg = LoadgenConfig {
+            addr: addr.to_string(),
+            model: "cpu".into(),
+            connections,
+            rate,
+            duration: Duration::from_secs_f64(phase_secs),
+            features: FEATURES,
+            seed: 42,
+        };
+        let report = loadgen::run(&cfg).expect("loadgen phase failed");
+        println!(
+            "{:<22} {:>12.0} {:>10} {:>10} {:>10.4} {:>10}",
+            label, report.throughput_rps, report.p50_us, report.p99_us, report.shed_rate,
+            report.sent
+        );
+        assert_eq!(report.errors, 0, "{label}: non-overload errors");
+        let mut row = report.to_json(&cfg);
+        if let Json::Obj(o) = &mut row {
+            o.insert("phase".into(), Json::str(label));
+        }
+        results.push(row);
+    }
+
+    // hot-swap phase: republish every ~200ms while a closed loop runs —
+    // the client must see zero errors and full throughput
+    let swapping = Arc::new(AtomicBool::new(true));
+    let swapping2 = Arc::clone(&swapping);
+    let mut swap_trainer = trainer;
+    let swapper = std::thread::spawn(move || {
+        let mut swaps = 0u64;
+        while swapping2.load(Ordering::Relaxed) {
+            std::thread::sleep(Duration::from_millis(200));
+            swap_handle
+                .swap("cpu", swap_trainer.publish())
+                .expect("swap failed");
+            swaps += 1;
+        }
+        swaps
+    });
+    let cfg = LoadgenConfig {
+        addr: addr.to_string(),
+        model: "cpu".into(),
+        connections: 4,
+        rate: 0.0,
+        duration: Duration::from_secs_f64(phase_secs),
+        features: FEATURES,
+        seed: 43,
+    };
+    let report = loadgen::run(&cfg).expect("swap phase failed");
+    swapping.store(false, Ordering::Relaxed);
+    let swaps = swapper.join().unwrap();
+    println!(
+        "{:<22} {:>12.0} {:>10} {:>10} {:>10.4} {:>10}   ({swaps} hot swaps)",
+        "closed_4conn_swapping",
+        report.throughput_rps,
+        report.p50_us,
+        report.p99_us,
+        report.shed_rate,
+        report.sent
+    );
+    assert_eq!(report.errors, 0, "hot swaps must be invisible to clients");
+    assert!(report.ok > 0, "swap phase served nothing");
+    let mut row = report.to_json(&cfg);
+    if let Json::Obj(o) = &mut row {
+        o.insert("phase".into(), Json::str("closed_4conn_swapping"));
+        o.insert("hot_swaps".into(), Json::num(swaps as f64));
+    }
+    results.push(row);
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap().unwrap();
+    coord.shutdown();
+
+    let report = Json::obj([
+        ("bench", Json::str("serve_load")),
+        (
+            "workload",
+            Json::obj([
+                ("shape", Json::str("mnist-synthetic")),
+                ("classes", Json::num(CLASSES as f64)),
+                ("clauses_total", Json::num(CLAUSES_TOTAL as f64)),
+                ("features", Json::num(FEATURES as f64)),
+                ("route_workers", Json::num(workers as f64)),
+                ("queue_cap", Json::num(1024.0)),
+            ]),
+        ),
+        ("phase_secs", Json::num(phase_secs)),
+        ("results", Json::Arr(results)),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_serve.json");
+    tsetlin_index::bench_harness::report::write_json(&path, &report)
+        .expect("writing JSON report");
+    println!("\nwrote {}", path.display());
+}

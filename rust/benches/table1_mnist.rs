@@ -11,7 +11,7 @@
 use std::path::Path;
 
 use tsetlin_index::bench_harness::figures::write_figures;
-use tsetlin_index::bench_harness::report::write_csv;
+use tsetlin_index::bench_harness::report::{write_csv, write_json};
 use tsetlin_index::bench_harness::tables::{run_table, Scale, TableId};
 
 fn main() {
@@ -33,4 +33,11 @@ fn main() {
     write_csv(&out.join("table1.csv"), &headers, &rows).unwrap();
     let figs = write_figures(&table, out).unwrap();
     eprintln!("wrote results/table1.csv + {}", figs.join(", "));
+    let bench_path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_table1.json");
+    write_json(&bench_path, &table.to_json()).unwrap();
+    eprintln!("wrote {}", bench_path.display());
+    // nightly CI exports TMI_ASSERT_MIN_TEST_SPEEDUP: fail on regression
+    table.assert_speedup_floor_from_env();
 }

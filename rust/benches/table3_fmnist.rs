@@ -12,7 +12,7 @@
 use std::path::Path;
 
 use tsetlin_index::bench_harness::figures::write_figures;
-use tsetlin_index::bench_harness::report::write_csv;
+use tsetlin_index::bench_harness::report::{write_csv, write_json};
 use tsetlin_index::bench_harness::tables::{run_table, Scale, TableId};
 
 fn main() {
@@ -34,4 +34,11 @@ fn main() {
     write_csv(&out.join("table3.csv"), &headers, &rows).unwrap();
     let figs = write_figures(&table, out).unwrap();
     eprintln!("wrote results/table3.csv + {}", figs.join(", "));
+    let bench_path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_table3.json");
+    write_json(&bench_path, &table.to_json()).unwrap();
+    eprintln!("wrote {}", bench_path.display());
+    // nightly CI exports TMI_ASSERT_MIN_TEST_SPEEDUP: fail on regression
+    table.assert_speedup_floor_from_env();
 }

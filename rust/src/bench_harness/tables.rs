@@ -19,6 +19,7 @@ use crate::bench_harness::speedup::{measure_speedup, ExpConfig, SpeedupResult};
 use crate::data::mnist::{self, Split};
 use crate::data::synth::ImageStyle;
 use crate::data::{imdb, Dataset};
+use crate::util::Json;
 
 /// Which paper table.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -272,6 +273,77 @@ impl TableResult {
         }
         (headers, rows)
     }
+
+    /// Mean (train, test) indexed-vs-naive speedups over all cells —
+    /// the scalar trajectory the nightly CI job gates on.
+    pub fn mean_speedups(&self) -> (f64, f64) {
+        let cells: Vec<&SpeedupResult> = self.cells.iter().flatten().collect();
+        if cells.is_empty() {
+            return (0.0, 0.0);
+        }
+        let n = cells.len() as f64;
+        (
+            cells.iter().map(|c| c.train_speedup).sum::<f64>() / n,
+            cells.iter().map(|c| c.test_speedup).sum::<f64>() / n,
+        )
+    }
+
+    /// Machine-readable `BENCH_table*.json` payload: per-cell raw
+    /// timings + speedups, plus the mean-speedup headline.
+    pub fn to_json(&self) -> Json {
+        let mut cells = Vec::new();
+        for (c, col) in self.cells.iter().enumerate() {
+            for cell in col {
+                cells.push(Json::obj([
+                    ("features", Json::str(self.col_labels[c].clone())),
+                    ("clauses", Json::num(cell.total_clauses as f64)),
+                    ("naive_train_s", Json::num(cell.baseline.train_epoch_s)),
+                    ("indexed_train_s", Json::num(cell.indexed.train_epoch_s)),
+                    ("naive_test_s", Json::num(cell.baseline.test_s)),
+                    ("indexed_test_s", Json::num(cell.indexed.test_s)),
+                    ("train_speedup", Json::num(cell.train_speedup)),
+                    ("test_speedup", Json::num(cell.test_speedup)),
+                    ("accuracy", Json::num(cell.indexed.accuracy)),
+                    ("mean_clause_length", Json::num(cell.mean_clause_length)),
+                ]));
+            }
+        }
+        let (train_mean, test_mean) = self.mean_speedups();
+        Json::obj([
+            ("bench", Json::str(format!("{:?}", self.id).to_lowercase())),
+            ("title", Json::str(self.id.title())),
+            ("mean_train_speedup", Json::num(train_mean)),
+            ("mean_test_speedup", Json::num(test_mean)),
+            ("cells", Json::Arr(cells)),
+        ])
+    }
+
+    /// The mean indexed-vs-naive *test* speedup must not fall below
+    /// `min` (the paper's headline claim — indexing must keep paying).
+    /// Panics (failing the bench process) on regression.
+    pub fn assert_speedup_floor(&self, min: f64) {
+        let (train_mean, test_mean) = self.mean_speedups();
+        eprintln!(
+            "speedup floor check: mean train {train_mean:.2}x / test {test_mean:.2}x (floor {min})"
+        );
+        assert!(
+            test_mean >= min,
+            "{:?}: mean indexed-vs-naive test speedup {test_mean:.2}x fell below floor {min}",
+            self.id
+        );
+    }
+
+    /// Nightly-CI entry point: applies [`TableResult::assert_speedup_floor`]
+    /// iff `TMI_ASSERT_MIN_TEST_SPEEDUP` is set (bench binaries only —
+    /// tests call the parameterized form to avoid mutating process env).
+    pub fn assert_speedup_floor_from_env(&self) {
+        if let Ok(raw) = std::env::var("TMI_ASSERT_MIN_TEST_SPEEDUP") {
+            let min: f64 = raw
+                .parse()
+                .expect("TMI_ASSERT_MIN_TEST_SPEEDUP must be a float");
+            self.assert_speedup_floor(min);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -301,6 +373,16 @@ mod tests {
         let (h, rows) = t.csv_rows();
         assert_eq!(h.len(), rows[0].len());
         assert_eq!(rows.len(), 2);
+        // BENCH json mirrors the cells and carries the headline means
+        let (train_mean, test_mean) = t.mean_speedups();
+        assert!(train_mean > 0.0 && test_mean > 0.0);
+        let j = Json::parse(&t.to_json().to_string()).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("mnist"));
+        assert_eq!(j.get("cells").unwrap().as_arr().unwrap().len(), 2);
+        let got = j.get("mean_test_speedup").unwrap().as_f64().unwrap();
+        assert!((got - test_mean).abs() < 1e-9);
+        // floor of 0 can never trip (env mutation stays out of tests)
+        t.assert_speedup_floor(0.0);
     }
 
     #[test]

@@ -6,6 +6,14 @@
 //! falsification on the Rust hot path; the XLA backend runs the
 //! Layer-1/2 dense kernel through PJRT with device-resident model
 //! buffers.
+//!
+//! Backends power the coordinator's **factory routes**
+//! ([`crate::coordinator::Coordinator::register_with`]): one worker
+//! owning mutable state. The indexed serving hot path has moved to
+//! **snapshot routes** ([`crate::coordinator::Coordinator::register_model`]
+//! over [`crate::engine::ModelSnapshot`]), which add hot swap and
+//! multi-worker scale-out; `CpuBackend` remains the serving vehicle
+//! for the naive/bitpacked ablation evaluators and the XLA route.
 
 use anyhow::Result;
 

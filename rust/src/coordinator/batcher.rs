@@ -5,9 +5,16 @@
 //! first item — the standard size/deadline policy (vLLM-style), tuned
 //! per backend: the XLA backend wants full batches (one `execute` per
 //! batch), the CPU backend prefers short waits (per-item cost is flat).
+//!
+//! Collection runs against a shared [`BoundedQueue`], so any number of
+//! workers can collect from one route concurrently: each in-flight
+//! request belongs to exactly one worker's batch, and the queue's
+//! close-then-drain shutdown means a closed route still flushes every
+//! admitted request before the workers see [`Collected::Disconnected`].
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
+
+use crate::coordinator::queue::{BoundedQueue, PopTimeout};
 
 /// Size/deadline batching policy.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -29,28 +36,34 @@ impl Default for BatchPolicy {
 pub enum Collected<T> {
     /// A non-empty batch.
     Batch(Vec<T>),
-    /// The channel closed and no items remain: shut down.
+    /// The queue is closed and drained: shut down.
     Disconnected,
 }
 
 /// Collect one batch according to `policy`. Blocks for the first item.
-pub fn collect<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Collected<T> {
-    let first = match rx.recv() {
-        Ok(item) => item,
-        Err(_) => return Collected::Disconnected,
+pub fn collect<T>(queue: &BoundedQueue<T>, policy: &BatchPolicy) -> Collected<T> {
+    let first = match queue.pop_blocking() {
+        Some(item) => item,
+        None => return Collected::Disconnected,
     };
-    let mut batch = Vec::with_capacity(policy.max_batch);
+    let mut batch = Vec::with_capacity(policy.max_batch.min(64));
     batch.push(first);
     let deadline = Instant::now() + policy.max_wait;
     while batch.len() < policy.max_batch {
+        // drain whatever is already queued without waiting
+        if let Some(item) = queue.try_pop() {
+            batch.push(item);
+            continue;
+        }
         let now = Instant::now();
         if now >= deadline {
             break;
         }
-        match rx.recv_timeout(deadline - now) {
-            Ok(item) => batch.push(item),
-            Err(RecvTimeoutError::Timeout) => break,
-            Err(RecvTimeoutError::Disconnected) => break, // flush what we hold
+        match queue.pop_timeout(deadline - now) {
+            PopTimeout::Item(item) => batch.push(item),
+            // Closed mid-collection: flush what we hold; the *next*
+            // collect call reports Disconnected once the queue drains.
+            PopTimeout::TimedOut | PopTimeout::Closed => break,
         }
     }
     Collected::Batch(batch)
@@ -59,23 +72,29 @@ pub fn collect<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Collected<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc::channel;
+    use crate::coordinator::queue::PushError;
+    use std::sync::Arc;
+
+    fn filled(cap: usize, items: impl IntoIterator<Item = u32>) -> BoundedQueue<u32> {
+        let q = BoundedQueue::new(cap);
+        for i in items {
+            q.try_push(i).unwrap();
+        }
+        q
+    }
 
     #[test]
     fn collects_up_to_max_batch() {
-        let (tx, rx) = channel();
-        for i in 0..10 {
-            tx.send(i).unwrap();
-        }
+        let q = filled(16, 0..10);
         let policy = BatchPolicy {
             max_batch: 4,
             max_wait: Duration::from_millis(50),
         };
-        match collect(&rx, &policy) {
+        match collect(&q, &policy) {
             Collected::Batch(b) => assert_eq!(b, vec![0, 1, 2, 3]),
             _ => panic!("expected batch"),
         }
-        match collect(&rx, &policy) {
+        match collect(&q, &policy) {
             Collected::Batch(b) => assert_eq!(b, vec![4, 5, 6, 7]),
             _ => panic!("expected batch"),
         }
@@ -83,14 +102,13 @@ mod tests {
 
     #[test]
     fn deadline_flushes_partial_batch() {
-        let (tx, rx) = channel();
-        tx.send(1).unwrap();
+        let q = filled(4, [1]);
         let policy = BatchPolicy {
             max_batch: 100,
             max_wait: Duration::from_millis(5),
         };
         let t0 = Instant::now();
-        match collect(&rx, &policy) {
+        match collect(&q, &policy) {
             Collected::Batch(b) => assert_eq!(b, vec![1]),
             _ => panic!("expected batch"),
         }
@@ -98,51 +116,149 @@ mod tests {
     }
 
     #[test]
-    fn disconnect_before_any_item() {
-        let (tx, rx) = channel::<u32>();
-        drop(tx);
+    fn close_before_any_item_disconnects() {
+        let q = BoundedQueue::<u32>::new(4);
+        q.close();
         assert!(matches!(
-            collect(&rx, &BatchPolicy::default()),
+            collect(&q, &BatchPolicy::default()),
             Collected::Disconnected
         ));
     }
 
     #[test]
-    fn disconnect_flushes_held_items() {
-        let (tx, rx) = channel();
-        tx.send(7).unwrap();
-        tx.send(8).unwrap();
-        drop(tx);
+    fn close_flushes_held_items_then_disconnects() {
+        let q = filled(4, [7, 8]);
+        q.close();
         let policy = BatchPolicy {
             max_batch: 10,
             max_wait: Duration::from_secs(5), // must not wait this long
         };
         let t0 = Instant::now();
-        match collect(&rx, &policy) {
+        match collect(&q, &policy) {
             Collected::Batch(b) => assert_eq!(b, vec![7, 8]),
             _ => panic!("expected batch"),
         }
         assert!(t0.elapsed() < Duration::from_secs(1));
+        assert!(matches!(collect(&q, &policy), Collected::Disconnected));
     }
 
     #[test]
     fn blocks_for_first_item_then_batches_stragglers() {
-        let (tx, rx) = channel();
+        let q = Arc::new(BoundedQueue::new(8));
+        let q2 = Arc::clone(&q);
         let h = std::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(10));
-            tx.send(1).unwrap();
-            tx.send(2).unwrap();
+            q2.try_push(1).unwrap();
+            q2.try_push(2).unwrap();
         });
         let policy = BatchPolicy {
             max_batch: 8,
             max_wait: Duration::from_millis(50),
         };
-        match collect(&rx, &policy) {
+        match collect(&q, &policy) {
             Collected::Batch(b) => {
                 assert!(!b.is_empty() && b[0] == 1);
             }
             _ => panic!("expected batch"),
         }
         h.join().unwrap();
+    }
+
+    /// Many producers racing several collectors across a spread of
+    /// `max_wait` values: every item must land in exactly one batch —
+    /// no loss, no duplication — and batches never exceed `max_batch`.
+    #[test]
+    fn contended_collect_partitions_items_exactly() {
+        const PRODUCERS: usize = 6;
+        const PER_PRODUCER: usize = 400;
+        const COLLECTORS: usize = 3;
+        for (max_batch, max_wait_us) in [(1, 0u64), (7, 50), (32, 500), (256, 2000)] {
+            let q = Arc::new(BoundedQueue::new(32));
+            let producers: Vec<_> = (0..PRODUCERS)
+                .map(|p| {
+                    let q = Arc::clone(&q);
+                    std::thread::spawn(move || {
+                        for i in 0..PER_PRODUCER {
+                            let mut item = (p * PER_PRODUCER + i) as u32;
+                            loop {
+                                match q.try_push(item) {
+                                    Ok(()) => break,
+                                    Err(PushError::Full(v)) => {
+                                        item = v;
+                                        std::thread::yield_now();
+                                    }
+                                    Err(PushError::Closed(_)) => panic!("closed early"),
+                                }
+                            }
+                        }
+                    })
+                })
+                .collect();
+            let policy = BatchPolicy {
+                max_batch,
+                max_wait: Duration::from_micros(max_wait_us),
+            };
+            let collectors: Vec<_> = (0..COLLECTORS)
+                .map(|_| {
+                    let q = Arc::clone(&q);
+                    std::thread::spawn(move || {
+                        let mut got = Vec::new();
+                        loop {
+                            match collect(&q, &policy) {
+                                Collected::Batch(b) => {
+                                    assert!(!b.is_empty(), "empty batch");
+                                    assert!(b.len() <= policy.max_batch, "oversized batch");
+                                    got.extend(b);
+                                }
+                                Collected::Disconnected => return got,
+                            }
+                        }
+                    })
+                })
+                .collect();
+            for p in producers {
+                p.join().unwrap();
+            }
+            q.close();
+            let mut all: Vec<u32> = collectors
+                .into_iter()
+                .flat_map(|c| c.join().unwrap())
+                .collect();
+            all.sort_unstable();
+            assert_eq!(
+                all,
+                (0..(PRODUCERS * PER_PRODUCER) as u32).collect::<Vec<_>>(),
+                "max_batch={max_batch} max_wait={max_wait_us}us"
+            );
+        }
+    }
+
+    /// The `max_wait` race: a closed queue mid-straggler-wait must
+    /// flush promptly instead of sleeping out a long deadline.
+    #[test]
+    fn close_races_straggler_wait_without_stalling() {
+        for _ in 0..20 {
+            let q = Arc::new(BoundedQueue::new(8));
+            q.try_push(1u32).unwrap();
+            let q2 = Arc::clone(&q);
+            let closer = std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_micros(200));
+                q2.close();
+            });
+            let policy = BatchPolicy {
+                max_batch: 64,
+                max_wait: Duration::from_secs(10),
+            };
+            let t0 = Instant::now();
+            match collect(&q, &policy) {
+                Collected::Batch(b) => assert_eq!(b, vec![1]),
+                _ => panic!("expected batch"),
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(2),
+                "collect slept through close"
+            );
+            closer.join().unwrap();
+        }
     }
 }

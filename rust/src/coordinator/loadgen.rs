@@ -1,0 +1,439 @@
+//! TCP load generator for the serving front end (`tmi loadgen`).
+//!
+//! Drives the line protocol ([`crate::coordinator::server::serve_tcp`])
+//! in either of the two canonical load-testing disciplines:
+//!
+//! * **closed loop** (`rate == 0`): each connection keeps exactly one
+//!   request in flight — send, wait for the reply, send the next.
+//!   Throughput is latency-bound; this measures the server's capacity
+//!   at a fixed concurrency.
+//! * **open loop** (`rate > 0`): each connection sends on a fixed
+//!   schedule (`rate / connections` requests per second per
+//!   connection) regardless of replies, with a separate reader thread
+//!   matching replies in order. This is the arrival-process model that
+//!   exposes queueing: when the offered rate exceeds capacity the
+//!   server must *shed* (`err overloaded`), and the shed rate is the
+//!   headline number.
+//!
+//! Latency is measured client-side per request (write → reply line)
+//! and reported as exact sorted quantiles — unlike the server's
+//! power-of-two histogram, the client holds every sample. Results
+//! serialize to the repo's `BENCH_serve.json` perf-trajectory format
+//! via [`LoadgenReport::to_json`].
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::util::{Json, Rng};
+
+/// What to offer the server.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// `host:port` of a running `tmi serve`.
+    pub addr: String,
+    /// Route name to drive (`infer <model> <bits>`).
+    pub model: String,
+    /// Concurrent connections.
+    pub connections: usize,
+    /// Total offered request rate in req/s across all connections;
+    /// `0.0` selects the closed loop.
+    pub rate: f64,
+    pub duration: Duration,
+    /// Raw feature width of the model (the protocol sends feature
+    /// bits; the server derives `[x, ¬x]`).
+    pub features: usize,
+    pub seed: u64,
+}
+
+/// Aggregated client-side results of one run.
+#[derive(Clone, Debug)]
+pub struct LoadgenReport {
+    pub mode: &'static str,
+    pub sent: u64,
+    pub ok: u64,
+    pub shed: u64,
+    pub errors: u64,
+    pub elapsed_s: f64,
+    /// Completed (ok) replies per second.
+    pub throughput_rps: f64,
+    pub shed_rate: f64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub mean_us: f64,
+    /// The server's own `stats <model>` line, fetched after the run.
+    pub server_stats: Option<String>,
+}
+
+/// Per-connection tallies.
+#[derive(Default)]
+struct ConnResult {
+    sent: u64,
+    ok: u64,
+    shed: u64,
+    errors: u64,
+    latencies_us: Vec<u64>,
+}
+
+impl ConnResult {
+    fn classify(&mut self, reply: &str, t0: Instant) {
+        self.sent += 1;
+        if reply.starts_with("ok ") {
+            self.ok += 1;
+            // only completed requests contribute latency samples
+            self.latencies_us
+                .push(t0.elapsed().as_micros().min(u64::MAX as u128) as u64);
+        } else if reply.starts_with("err overloaded") {
+            self.shed += 1;
+        } else {
+            self.errors += 1;
+        }
+    }
+}
+
+/// Pre-render a pool of distinct request lines (cycled per send) so
+/// the hot loop does no formatting.
+fn request_pool(cfg: &LoadgenConfig) -> Vec<String> {
+    let mut rng = Rng::new(cfg.seed);
+    (0..32)
+        .map(|_| {
+            let bits: String = (0..cfg.features)
+                .map(|_| if rng.bern(0.5) { '1' } else { '0' })
+                .collect();
+            format!("infer {} {}\n", cfg.model, bits)
+        })
+        .collect()
+}
+
+fn closed_loop_conn(
+    addr: &str,
+    pool: &[String],
+    stop_at: Instant,
+) -> Result<ConnResult> {
+    let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    stream.set_nodelay(true).ok();
+    // a wedged server must fail the run, not hang it (CI gates on this)
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    let mut res = ConnResult::default();
+    let mut reply = String::new();
+    let mut i = 0usize;
+    while Instant::now() < stop_at {
+        let line = &pool[i % pool.len()];
+        i += 1;
+        let t0 = Instant::now();
+        if stream.write_all(line.as_bytes()).is_err() {
+            break;
+        }
+        reply.clear();
+        match reader.read_line(&mut reply) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => res.classify(&reply, t0),
+        }
+    }
+    Ok(res)
+}
+
+fn open_loop_conn(
+    addr: &str,
+    pool: &[String],
+    stop_at: Instant,
+    interval: Duration,
+) -> Result<ConnResult> {
+    let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    stream.set_nodelay(true).ok();
+    // generous read timeout: the reader must notice a dead server
+    // instead of blocking forever after the writer stops
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    let reader_stream = stream.try_clone()?;
+    let (tx, rx) = channel::<Instant>();
+    let reader = std::thread::spawn(move || {
+        let mut reader = BufReader::new(reader_stream);
+        let mut res = ConnResult::default();
+        let mut reply = String::new();
+        // one reply per recorded send, in order (the protocol is
+        // strictly request-ordered per connection)
+        while let Ok(t0) = rx.recv() {
+            reply.clear();
+            match reader.read_line(&mut reply) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => res.classify(&reply, t0),
+            }
+        }
+        res
+    });
+    let mut stream_w = stream;
+    let mut i = 0usize;
+    let mut next = Instant::now();
+    while Instant::now() < stop_at {
+        let line = &pool[i % pool.len()];
+        let t0 = Instant::now();
+        if stream_w.write_all(line.as_bytes()).is_err() {
+            break;
+        }
+        i += 1;
+        let _ = tx.send(t0);
+        next += interval;
+        let now = Instant::now();
+        if next > now {
+            std::thread::sleep(next - now);
+        }
+        // behind schedule: send immediately (the offered rate is the
+        // schedule; falling behind is the measurement, not an error)
+    }
+    drop(tx); // reader drains outstanding replies, then exits
+    let mut res = reader.join().expect("open-loop reader panicked");
+    // replies never received (server shed the connection or timed out)
+    // count as neither ok nor shed; sent reflects writes
+    res.sent = i as u64;
+    Ok(res)
+}
+
+/// Fetch the server-side `stats <model>` line over a fresh connection.
+fn fetch_server_stats(addr: &str, model: &str) -> Option<String> {
+    let stream = TcpStream::connect(addr).ok()?;
+    stream
+        .set_read_timeout(Some(Duration::from_secs(2)))
+        .ok()?;
+    let mut reader = BufReader::new(stream.try_clone().ok()?);
+    let mut stream = stream;
+    stream
+        .write_all(format!("stats {model}\n").as_bytes())
+        .ok()?;
+    let mut line = String::new();
+    reader.read_line(&mut line).ok()?;
+    let line = line.trim();
+    (!line.is_empty()).then(|| line.to_string())
+}
+
+/// Nearest-rank quantile: the smallest sample with at least `q` of
+/// the mass at or below it (0 on an empty set).
+fn quantile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = (q * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Run the configured load against a live server.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    anyhow::ensure!(cfg.connections > 0, "need at least one connection");
+    anyhow::ensure!(cfg.features > 0, "need the model's feature width");
+    let pool = request_pool(cfg);
+    let open_loop = cfg.rate > 0.0;
+    let interval = if open_loop {
+        Duration::from_secs_f64(cfg.connections as f64 / cfg.rate)
+    } else {
+        Duration::ZERO
+    };
+    let t0 = Instant::now();
+    let stop_at = t0 + cfg.duration;
+    let workers: Vec<_> = (0..cfg.connections)
+        .map(|_| {
+            let addr = cfg.addr.clone();
+            let pool = pool.clone();
+            std::thread::spawn(move || {
+                if open_loop {
+                    open_loop_conn(&addr, &pool, stop_at, interval)
+                } else {
+                    closed_loop_conn(&addr, &pool, stop_at)
+                }
+            })
+        })
+        .collect();
+    let mut total = ConnResult::default();
+    for w in workers {
+        let r = w.join().expect("loadgen connection panicked")?;
+        total.sent += r.sent;
+        total.ok += r.ok;
+        total.shed += r.shed;
+        total.errors += r.errors;
+        total.latencies_us.extend(r.latencies_us);
+    }
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    total.latencies_us.sort_unstable();
+    let answered = total.ok + total.shed + total.errors;
+    let mean_us = if total.latencies_us.is_empty() {
+        0.0
+    } else {
+        total.latencies_us.iter().sum::<u64>() as f64 / total.latencies_us.len() as f64
+    };
+    Ok(LoadgenReport {
+        mode: if open_loop { "open" } else { "closed" },
+        sent: total.sent,
+        ok: total.ok,
+        shed: total.shed,
+        errors: total.errors,
+        elapsed_s,
+        throughput_rps: if elapsed_s > 0.0 {
+            total.ok as f64 / elapsed_s
+        } else {
+            0.0
+        },
+        shed_rate: if answered == 0 {
+            0.0
+        } else {
+            total.shed as f64 / answered as f64
+        },
+        p50_us: quantile(&total.latencies_us, 0.5),
+        p95_us: quantile(&total.latencies_us, 0.95),
+        p99_us: quantile(&total.latencies_us, 0.99),
+        mean_us,
+        server_stats: fetch_server_stats(&cfg.addr, &cfg.model),
+    })
+}
+
+impl LoadgenReport {
+    /// One human line per run (the CLI prints this).
+    pub fn summary(&self) -> String {
+        format!(
+            "{} loop: {:.0} ok/s over {:.1}s  sent={} ok={} shed={} errors={} \
+             shed_rate={:.4}  latency p50={}us p95={}us p99={}us mean={:.0}us",
+            self.mode,
+            self.throughput_rps,
+            self.elapsed_s,
+            self.sent,
+            self.ok,
+            self.shed,
+            self.errors,
+            self.shed_rate,
+            self.p50_us,
+            self.p95_us,
+            self.p99_us,
+            self.mean_us,
+        )
+    }
+
+    /// The `BENCH_serve.json` payload for this run.
+    pub fn to_json(&self, cfg: &LoadgenConfig) -> Json {
+        Json::obj([
+            ("bench", Json::str("serve_load")),
+            ("mode", Json::str(self.mode)),
+            (
+                "config",
+                Json::obj([
+                    ("model", Json::str(cfg.model.clone())),
+                    ("connections", Json::num(cfg.connections as f64)),
+                    ("rate_rps", Json::num(cfg.rate)),
+                    ("duration_s", Json::num(cfg.duration.as_secs_f64())),
+                    ("features", Json::num(cfg.features as f64)),
+                ]),
+            ),
+            ("sent", Json::num(self.sent as f64)),
+            ("ok", Json::num(self.ok as f64)),
+            ("shed", Json::num(self.shed as f64)),
+            ("errors", Json::num(self.errors as f64)),
+            ("elapsed_s", Json::num(self.elapsed_s)),
+            ("throughput_rps", Json::num(self.throughput_rps)),
+            ("shed_rate", Json::num(self.shed_rate)),
+            (
+                "latency_us",
+                Json::obj([
+                    ("p50", Json::num(self.p50_us as f64)),
+                    ("p95", Json::num(self.p95_us as f64)),
+                    ("p99", Json::num(self.p99_us as f64)),
+                    ("mean", Json::num(self.mean_us)),
+                ]),
+            ),
+            (
+                "server_stats",
+                match &self.server_stats {
+                    Some(s) => Json::str(s.clone()),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_use_nearest_rank() {
+        assert_eq!(quantile(&[], 0.5), 0);
+        assert_eq!(quantile(&[7], 0.99), 7);
+        assert_eq!(quantile(&[7], 0.0), 7);
+        let v: Vec<u64> = (1..=100).collect();
+        // nearest rank on 1..=100: ceil(q*100) is the value itself
+        assert_eq!(quantile(&v, 0.5), 50);
+        assert_eq!(quantile(&v, 0.95), 95);
+        assert_eq!(quantile(&v, 0.99), 99);
+        assert_eq!(quantile(&v, 1.0), 100);
+        let odd: Vec<u64> = vec![10, 20, 30];
+        assert_eq!(quantile(&odd, 0.5), 20);
+        assert_eq!(quantile(&odd, 0.99), 30);
+    }
+
+    #[test]
+    fn pool_lines_are_wellformed_and_deterministic() {
+        let cfg = LoadgenConfig {
+            addr: "unused".into(),
+            model: "cpu".into(),
+            connections: 1,
+            rate: 0.0,
+            duration: Duration::from_secs(1),
+            features: 12,
+            seed: 7,
+        };
+        let a = request_pool(&cfg);
+        let b = request_pool(&cfg);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 32);
+        for line in &a {
+            assert!(line.starts_with("infer cpu "));
+            assert!(line.ends_with('\n'));
+            let bits = line.trim_end().rsplit(' ').next().unwrap();
+            assert_eq!(bits.len(), 12);
+            assert!(bits.chars().all(|c| c == '0' || c == '1'));
+        }
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let cfg = LoadgenConfig {
+            addr: "unused".into(),
+            model: "cpu".into(),
+            connections: 2,
+            rate: 100.0,
+            duration: Duration::from_secs(2),
+            features: 8,
+            seed: 1,
+        };
+        let report = LoadgenReport {
+            mode: "open",
+            sent: 10,
+            ok: 8,
+            shed: 2,
+            errors: 0,
+            elapsed_s: 2.0,
+            throughput_rps: 4.0,
+            shed_rate: 0.2,
+            p50_us: 100,
+            p95_us: 200,
+            p99_us: 300,
+            mean_us: 120.0,
+            server_stats: Some("ok model=cpu".into()),
+        };
+        let j = report.to_json(&cfg);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("serve_load"));
+        assert_eq!(parsed.get("ok").unwrap().as_usize(), Some(8));
+        assert_eq!(
+            parsed.get("latency_us").unwrap().get("p95").unwrap().as_usize(),
+            Some(200)
+        );
+        assert_eq!(
+            parsed.get("config").unwrap().get("connections").unwrap().as_usize(),
+            Some(2)
+        );
+        assert!(report.summary().contains("open loop"));
+    }
+}

@@ -11,6 +11,8 @@ const BUCKETS: usize = 24; // 1us .. ~8s
 pub struct Metrics {
     pub requests: AtomicU64,
     pub completed: AtomicU64,
+    /// Requests refused at admission (`err overloaded`).
+    pub shed: AtomicU64,
     pub errors: AtomicU64,
     pub batches: AtomicU64,
     pub batched_items: AtomicU64,
@@ -22,9 +24,15 @@ pub struct Metrics {
 pub struct MetricsSnapshot {
     pub requests: u64,
     pub completed: u64,
+    /// Requests shed at admission (queue full).
+    pub shed: u64,
     pub errors: u64,
     pub batches: u64,
     pub batched_items: u64,
+    /// Queue depth at snapshot time. [`Metrics`] does not own the
+    /// queue, so [`Metrics::snapshot`] leaves this 0 and the
+    /// coordinator fills it from the route's queue gauge.
+    pub queue_depth: u64,
     pub latency_buckets_us: Vec<(u64, u64)>, // (upper_bound_us, count)
 }
 
@@ -52,9 +60,11 @@ impl Metrics {
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             batched_items: self.batched_items.load(Ordering::Relaxed),
+            queue_depth: 0,
             latency_buckets_us: self
                 .latency_us
                 .iter()
@@ -91,6 +101,32 @@ impl MetricsSnapshot {
             self.batched_items as f64 / self.batches as f64
         }
     }
+
+    /// Fraction of requests shed at admission (0 when idle).
+    pub fn shed_rate(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.requests as f64
+        }
+    }
+
+    /// p50 latency in microseconds (0 when no latencies recorded) —
+    /// the `stats` protocol verb's formatting convenience; quantiles
+    /// are upper bucket bounds of the power-of-two histogram.
+    pub fn p50_us(&self) -> u64 {
+        self.latency_quantile_us(0.5).unwrap_or(0)
+    }
+
+    /// p95 latency in microseconds (0 when empty).
+    pub fn p95_us(&self) -> u64 {
+        self.latency_quantile_us(0.95).unwrap_or(0)
+    }
+
+    /// p99 latency in microseconds (0 when empty).
+    pub fn p99_us(&self) -> u64 {
+        self.latency_quantile_us(0.99).unwrap_or(0)
+    }
 }
 
 #[cfg(test)]
@@ -123,10 +159,25 @@ mod tests {
         // 2 fast + 1 slow: p50 lands in the ~128us bucket
         assert_eq!(s.latency_quantile_us(0.5), Some(128));
         assert!(s.latency_quantile_us(0.99).unwrap() >= 8192);
+        assert_eq!(s.p50_us(), 128);
+        assert!(s.p95_us() >= 8192 && s.p99_us() >= s.p95_us());
     }
 
     #[test]
     fn empty_quantile_is_none() {
-        assert_eq!(Metrics::new().snapshot().latency_quantile_us(0.5), None);
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.latency_quantile_us(0.5), None);
+        assert_eq!((s.p50_us(), s.p95_us(), s.p99_us()), (0, 0, 0));
+    }
+
+    #[test]
+    fn shed_rate_tracks_counters() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().shed_rate(), 0.0);
+        m.requests.fetch_add(8, Ordering::Relaxed);
+        m.shed.fetch_add(2, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.shed, 2);
+        assert!((s.shed_rate() - 0.25).abs() < 1e-12);
     }
 }

@@ -1,13 +1,23 @@
-//! Serving coordinator: router, dynamic batcher, backend workers,
-//! metrics.
+//! Serving coordinator: hot-swap model registry, bounded request
+//! queues with admission control, dynamic batcher workers, metrics,
+//! TCP front end, and a load generator.
 //!
 //! Layer-3 of the stack. The vendored offline environment has no tokio,
-//! so the coordinator is built directly on `std::thread` + channels
-//! (DESIGN.md §Substitutions): one worker thread per registered model,
-//! each running a collect-then-execute dynamic-batching loop; a shared
-//! handle routes requests by model name and blocks on a per-request
-//! completion channel. An optional line-oriented TCP front end exposes
-//! the same router over the network.
+//! so the coordinator is built directly on `std::thread` + condvar
+//! queues (DESIGN.md §Substitutions): each registered model gets a
+//! bounded [`queue::BoundedQueue`] drained by one or more batcher
+//! workers running a collect-then-execute loop; a shared handle routes
+//! requests by model name, sheds `err overloaded` when a queue is
+//! full, and blocks on a per-request completion channel. A
+//! line-oriented TCP front end (with a reaped, capped connection pool)
+//! exposes the same router — `infer` and `stats` verbs — over the
+//! network, and [`loadgen`] drives it for capacity measurement.
+//!
+//! Models are served as immutable, versioned
+//! [`crate::engine::ModelSnapshot`]s that [`Coordinator::swap`] (or
+//! `tmi serve --watch`) replaces atomically under live traffic — the
+//! paper's train-while-serving story (arXiv 2004.03188: constant-time
+//! index updates keep a learner publishable mid-stream).
 //!
 //! Backends:
 //! * [`backend::CpuBackend`] — the paper's system: clause-indexed
@@ -17,10 +27,17 @@
 
 pub mod backend;
 pub mod batcher;
+pub mod loadgen;
 pub mod metrics;
+pub mod queue;
 pub mod server;
 
 pub use backend::{Backend as ServeBackend, CpuBackend, XlaBackend};
 pub use batcher::BatchPolicy;
+pub use loadgen::{LoadgenConfig, LoadgenReport};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use server::{Coordinator, InferError, Prediction};
+pub use queue::{BoundedQueue, PushError};
+pub use server::{
+    Coordinator, CoordinatorHandle, InferError, Prediction, RouteConfig, RouteStats,
+    ServeOptions, SwapError,
+};

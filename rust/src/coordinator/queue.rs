@@ -1,0 +1,316 @@
+//! Bounded multi-producer/multi-consumer request queue: the admission
+//! control point of every serving route.
+//!
+//! Producers (routing handles) use [`BoundedQueue::try_push`], which
+//! **sheds** instead of blocking when the queue is full — the
+//! coordinator turns a [`PushError::Full`] into an `err overloaded`
+//! reply, so a saturated server degrades by refusing work rather than
+//! by queueing unboundedly and timing every client out. Consumers (the
+//! route's batcher workers) pop under a condvar; any number of workers
+//! may drain one queue concurrently.
+//!
+//! Shutdown is close-then-drain: [`BoundedQueue::close`] rejects new
+//! pushes but consumers keep popping until the queue is empty, so every
+//! request admitted before the close is still answered.
+//! [`BoundedQueue::close_and_drain`] additionally drops whatever is
+//! still queued — the last-worker-panicked escape hatch that turns
+//! would-be-hung requests into disconnect errors at their response
+//! channels.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Why a push was refused.
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushError<T> {
+    /// The queue is at capacity: shed this request.
+    Full(T),
+    /// The queue was closed: the route is shutting down.
+    Closed(T),
+}
+
+/// Outcome of a bounded wait for one item.
+#[derive(Debug)]
+pub enum PopTimeout<T> {
+    Item(T),
+    /// The deadline passed with the queue still empty.
+    TimedOut,
+    /// The queue is closed *and* empty — no item will ever arrive.
+    Closed,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded MPMC queue (mutex + condvar; the offline build has no
+/// crossbeam, see DESIGN.md §Substitutions). Capacity is clamped to at
+/// least 1.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    cap: usize,
+    /// Mirror of the current length, readable without the lock (the
+    /// `queue_depth` metrics gauge).
+    depth: AtomicUsize,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        BoundedQueue {
+            inner: Mutex::new(Inner {
+                items: VecDeque::new(),
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            cap: cap.max(1),
+            depth: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Current queue depth (lock-free gauge; momentarily stale under
+    /// concurrency).
+    pub fn len(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().expect("queue lock poisoned").closed
+    }
+
+    /// Admit `item` if there is room; never blocks.
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut g = self.inner.lock().expect("queue lock poisoned");
+        if g.closed {
+            return Err(PushError::Closed(item));
+        }
+        if g.items.len() >= self.cap {
+            return Err(PushError::Full(item));
+        }
+        g.items.push_back(item);
+        self.depth.store(g.items.len(), Ordering::Relaxed);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Refuse new pushes; queued items remain poppable (drain).
+    pub fn close(&self) {
+        self.inner.lock().expect("queue lock poisoned").closed = true;
+        self.not_empty.notify_all();
+    }
+
+    /// Close *and* drop everything still queued. Used when the last
+    /// worker of a route dies abnormally: dropping a queued request
+    /// drops its response channel, which unblocks its client with a
+    /// disconnect instead of a hang.
+    pub fn close_and_drain(&self) {
+        let drained = {
+            let mut g = self.inner.lock().expect("queue lock poisoned");
+            g.closed = true;
+            self.depth.store(0, Ordering::Relaxed);
+            std::mem::take(&mut g.items)
+        };
+        drop(drained); // outside the lock: item Drop impls may be slow
+        self.not_empty.notify_all();
+    }
+
+    /// Pop without blocking.
+    pub fn try_pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().expect("queue lock poisoned");
+        let item = g.items.pop_front();
+        self.depth.store(g.items.len(), Ordering::Relaxed);
+        item
+    }
+
+    /// Block until an item arrives; `None` iff the queue is closed and
+    /// drained (the consumer's shutdown signal).
+    pub fn pop_blocking(&self) -> Option<T> {
+        let mut g = self.inner.lock().expect("queue lock poisoned");
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                self.depth.store(g.items.len(), Ordering::Relaxed);
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).expect("queue lock poisoned");
+        }
+    }
+
+    /// Block up to `timeout` for an item.
+    pub fn pop_timeout(&self, timeout: Duration) -> PopTimeout<T> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().expect("queue lock poisoned");
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                self.depth.store(g.items.len(), Ordering::Relaxed);
+                return PopTimeout::Item(item);
+            }
+            if g.closed {
+                return PopTimeout::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return PopTimeout::TimedOut;
+            }
+            let (guard, _) = self
+                .not_empty
+                .wait_timeout(g, deadline - now)
+                .expect("queue lock poisoned");
+            g = guard;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn push_pop_fifo_and_depth_gauge() {
+        let q = BoundedQueue::new(4);
+        assert_eq!(q.capacity(), 4);
+        assert!(q.is_empty());
+        for i in 0..4 {
+            q.try_push(i).unwrap();
+            assert_eq!(q.len(), i + 1);
+        }
+        assert!(matches!(q.try_push(9), Err(PushError::Full(9))));
+        assert_eq!(q.try_pop(), Some(0));
+        assert_eq!(q.len(), 3);
+        q.try_push(9).unwrap();
+        assert_eq!(
+            (1..4).chain([9]).collect::<Vec<_>>(),
+            std::iter::from_fn(|| q.try_pop()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let q = BoundedQueue::new(0);
+        assert_eq!(q.capacity(), 1);
+        q.try_push(1).unwrap();
+        assert!(matches!(q.try_push(2), Err(PushError::Full(2))));
+    }
+
+    #[test]
+    fn close_rejects_pushes_but_drains_items() {
+        let q = BoundedQueue::new(8);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        q.close();
+        assert!(q.is_closed());
+        assert!(matches!(q.try_push(3), Err(PushError::Closed(3))));
+        assert_eq!(q.pop_blocking(), Some(1));
+        assert_eq!(q.pop_blocking(), Some(2));
+        assert_eq!(q.pop_blocking(), None);
+    }
+
+    #[test]
+    fn close_and_drain_drops_queued_items() {
+        let q = BoundedQueue::new(8);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        q.close_and_drain();
+        assert_eq!(q.len(), 0);
+        assert_eq!(q.pop_blocking(), None);
+    }
+
+    #[test]
+    fn pop_timeout_times_out_then_delivers() {
+        let q = BoundedQueue::new(2);
+        let t0 = Instant::now();
+        assert!(matches!(
+            q.pop_timeout(Duration::from_millis(10)),
+            PopTimeout::TimedOut
+        ));
+        assert!(t0.elapsed() >= Duration::from_millis(10));
+        q.try_push(7).unwrap();
+        assert!(matches!(
+            q.pop_timeout(Duration::from_millis(10)),
+            PopTimeout::Item(7)
+        ));
+    }
+
+    #[test]
+    fn blocked_pop_wakes_on_push_and_on_close() {
+        let q = Arc::new(BoundedQueue::new(2));
+        let q2 = Arc::clone(&q);
+        let popper = std::thread::spawn(move || q2.pop_blocking());
+        std::thread::sleep(Duration::from_millis(5));
+        q.try_push(42).unwrap();
+        assert_eq!(popper.join().unwrap(), Some(42));
+
+        let q2 = Arc::clone(&q);
+        let popper = std::thread::spawn(move || q2.pop_blocking());
+        std::thread::sleep(Duration::from_millis(5));
+        q.close();
+        assert_eq!(popper.join().unwrap(), None);
+    }
+
+    #[test]
+    fn concurrent_producers_consumers_lose_nothing() {
+        const PRODUCERS: usize = 4;
+        const CONSUMERS: usize = 3;
+        const PER_PRODUCER: usize = 500;
+        let q = Arc::new(BoundedQueue::new(16));
+        let producers: Vec<_> = (0..PRODUCERS)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    for i in 0..PER_PRODUCER {
+                        let mut item = p * PER_PRODUCER + i;
+                        // full queue: retry (test producers want lossless
+                        // delivery; serving producers shed instead)
+                        loop {
+                            match q.try_push(item) {
+                                Ok(()) => break,
+                                Err(PushError::Full(v)) => {
+                                    item = v;
+                                    std::thread::yield_now();
+                                }
+                                Err(PushError::Closed(_)) => panic!("closed early"),
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..CONSUMERS)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(v) = q.pop_blocking() {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<usize> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..PRODUCERS * PER_PRODUCER).collect::<Vec<_>>());
+    }
+}

@@ -1,24 +1,48 @@
-//! The coordinator: model registry, per-model worker threads, routing
-//! handle, and a line-oriented TCP front end.
+//! The coordinator: versioned hot-swap model registry, bounded
+//! per-model request queues with admission control, N batcher workers
+//! per route, a routing handle, and a line-oriented TCP front end.
 //!
-//! Request flow: `CoordinatorHandle::infer` routes by model name to the
-//! model's queue; the worker thread batches requests
-//! ([`crate::coordinator::batcher`]), runs the backend, and answers each
-//! request through its completion channel. Metrics are recorded per
-//! route.
+//! Request flow: `CoordinatorHandle::infer` routes by model name and
+//! **admits** the request into the route's [`BoundedQueue`] — or sheds
+//! it with [`InferError::Overloaded`] when the queue is full. Batcher
+//! workers ([`crate::coordinator::batcher`]) collect batches from the
+//! shared queue, score them, and answer each request through its
+//! completion channel. Metrics are recorded per route.
+//!
+//! Routes come in two kinds:
+//!
+//! * **Snapshot routes** ([`Coordinator::register_model`]) serve an
+//!   immutable [`ModelSnapshot`] behind an atomically swappable `Arc`.
+//!   Any number of workers share the snapshot (each holds private
+//!   scratch), and [`Coordinator::swap`] /
+//!   [`CoordinatorHandle::swap`] replaces the serving version under
+//!   live traffic: each batch is scored wholly by one published
+//!   version, so no request is ever dropped or torn by a swap.
+//! * **Factory routes** ([`Coordinator::register_with`]) build a
+//!   mutable [`Backend`] inside a single worker thread — required for
+//!   PJRT-backed XLA backends, whose handles are thread-pinned. These
+//!   routes get the same bounded queue and shedding but no hot swap.
+//!
+//! Shutdown is close-then-drain: every request admitted before
+//! [`Coordinator::shutdown`] is still answered. If a route's last
+//! worker dies abnormally, its queue is closed *and drained* so queued
+//! clients unblock with [`InferError::ShuttingDown`] instead of
+//! hanging.
 
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::{Arc, RwLock};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::coordinator::backend::{Backend, Scored};
 use crate::coordinator::batcher::{collect, BatchPolicy, Collected};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
+use crate::coordinator::queue::{BoundedQueue, PushError};
+use crate::engine::{argmax, ModelSnapshot};
 use crate::util::BitVec;
 
 /// A completed inference.
@@ -33,6 +57,8 @@ pub struct Prediction {
 pub enum InferError {
     UnknownModel(String),
     WrongWidth { expected: usize, got: usize },
+    /// Shed at admission: the route's queue is full.
+    Overloaded,
     BackendError(String),
     ShuttingDown,
 }
@@ -44,6 +70,9 @@ impl std::fmt::Display for InferError {
             InferError::WrongWidth { expected, got } => {
                 write!(f, "literal width {got}, model expects {expected}")
             }
+            // the TCP reply is `err {self}` — keep the leading token
+            // machine-matchable as `err overloaded`
+            InferError::Overloaded => write!(f, "overloaded: request queue full"),
             InferError::BackendError(e) => write!(f, "backend error: {e}"),
             InferError::ShuttingDown => write!(f, "coordinator shutting down"),
         }
@@ -52,27 +81,129 @@ impl std::fmt::Display for InferError {
 
 impl std::error::Error for InferError {}
 
+/// Why a hot swap was refused.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SwapError {
+    UnknownModel(String),
+    /// Factory (e.g. XLA) routes serve a thread-pinned backend, not a
+    /// swappable snapshot.
+    Unsupported(String),
+    WrongWidth { expected: usize, got: usize },
+}
+
+impl std::fmt::Display for SwapError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SwapError::UnknownModel(m) => write!(f, "unknown model '{m}'"),
+            SwapError::Unsupported(m) => {
+                write!(f, "route '{m}' serves a factory backend; hot swap needs a snapshot route")
+            }
+            SwapError::WrongWidth { expected, got } => {
+                write!(f, "snapshot literal width {got}, route serves {expected}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SwapError {}
+
 struct Request {
     literals: BitVec,
     enqueued: Instant,
     resp: SyncSender<Result<Prediction, InferError>>,
 }
 
-/// Queue message: a request, or an explicit stop sentinel.
-///
-/// A sentinel (not channel disconnection) drives shutdown: routing
-/// handles hold `Sender` clones with arbitrary lifetimes, so the worker
-/// cannot rely on `recv()` erroring out.
-enum Msg {
-    Infer(Request),
-    Shutdown,
+/// Per-route sizing: batching policy, worker count, queue bound.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RouteConfig {
+    pub policy: BatchPolicy,
+    /// Batcher workers sharing the route's queue (snapshot routes only;
+    /// factory routes are pinned to 1 worker).
+    pub workers: usize,
+    /// Admission bound: requests beyond this are shed with
+    /// [`InferError::Overloaded`].
+    pub queue_cap: usize,
+}
+
+impl Default for RouteConfig {
+    fn default() -> Self {
+        RouteConfig {
+            policy: BatchPolicy::default(),
+            workers: 1,
+            queue_cap: 1024,
+        }
+    }
+}
+
+/// The atomically swappable serving version of a snapshot route.
+struct SwapCell {
+    snap: RwLock<Arc<ModelSnapshot>>,
+    /// Route-level swap counter (0 = still serving the registration
+    /// snapshot). Snapshot `version`s are publisher-scoped — two
+    /// trainers can both publish a "v1" — so deploy checks watch this
+    /// monotonic per-route generation to confirm a swap landed.
+    swaps: AtomicU64,
+}
+
+impl SwapCell {
+    fn new(snap: Arc<ModelSnapshot>) -> Self {
+        SwapCell {
+            snap: RwLock::new(snap),
+            swaps: AtomicU64::new(0),
+        }
+    }
+
+    fn load(&self) -> Arc<ModelSnapshot> {
+        Arc::clone(&self.snap.read().expect("swap cell poisoned"))
+    }
+
+    fn generation(&self) -> u64 {
+        self.swaps.load(Ordering::Relaxed)
+    }
+
+    /// Install `snap`, returning the retired version number.
+    fn store(&self, snap: Arc<ModelSnapshot>) -> u64 {
+        let mut g = self.snap.write().expect("swap cell poisoned");
+        self.swaps.fetch_add(1, Ordering::Relaxed);
+        std::mem::replace(&mut *g, snap).version()
+    }
+}
+
+/// Closes (and on abnormal death, drains) the route queue when the
+/// route's *last* worker exits — panic-safe via `Drop`, so a worker
+/// that dies mid-batch cannot strand queued clients forever.
+struct WorkerGuard {
+    queue: Arc<BoundedQueue<Request>>,
+    alive: Arc<AtomicUsize>,
+}
+
+impl Drop for WorkerGuard {
+    fn drop(&mut self) {
+        if self.alive.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // no worker will ever pop again: dropping queued requests
+            // drops their response channels, unblocking the clients
+            self.queue.close_and_drain();
+        }
+    }
 }
 
 struct Route {
-    queue: Sender<Msg>,
+    queue: Arc<BoundedQueue<Request>>,
     n_literals: usize,
     metrics: Arc<Metrics>,
-    worker: Option<JoinHandle<()>>,
+    swap: Option<Arc<SwapCell>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+/// Point-in-time route statistics: counters + the serving snapshot
+/// version (snapshot routes only).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RouteStats {
+    pub metrics: MetricsSnapshot,
+    /// Publisher-scoped version of the serving snapshot.
+    pub version: Option<u64>,
+    /// Swaps installed on this route since registration (monotonic).
+    pub generation: Option<u64>,
 }
 
 /// The serving coordinator. Register models, then `handle()` for a
@@ -88,7 +219,9 @@ impl Coordinator {
         }
     }
 
-    /// Register a model whose backend is `Send` (CPU backends).
+    /// Register a model whose backend is `Send` (CPU backends). Single
+    /// worker, default queue bound; for hot swap and scale-out use
+    /// [`Coordinator::register_model`].
     pub fn register(
         &mut self,
         name: impl Into<String>,
@@ -109,14 +242,41 @@ impl Coordinator {
         factory: impl FnOnce() -> anyhow::Result<Box<dyn Backend>> + Send + 'static,
         policy: BatchPolicy,
     ) -> anyhow::Result<()> {
+        self.register_with_config(
+            name,
+            factory,
+            RouteConfig {
+                policy,
+                ..RouteConfig::default()
+            },
+        )
+    }
+
+    /// [`Coordinator::register_with`] with explicit queue sizing.
+    /// `cfg.workers` is ignored (factory backends are mutable and
+    /// thread-pinned: exactly one worker).
+    pub fn register_with_config(
+        &mut self,
+        name: impl Into<String>,
+        factory: impl FnOnce() -> anyhow::Result<Box<dyn Backend>> + Send + 'static,
+        cfg: RouteConfig,
+    ) -> anyhow::Result<()> {
         let name = name.into();
         let metrics = Arc::new(Metrics::new());
+        let queue = Arc::new(BoundedQueue::new(cfg.queue_cap));
+        let alive = Arc::new(AtomicUsize::new(1));
+        let guard = WorkerGuard {
+            queue: Arc::clone(&queue),
+            alive,
+        };
         let metrics_worker = Arc::clone(&metrics);
-        let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
+        let queue_worker = Arc::clone(&queue);
+        let policy = cfg.policy;
         let (ready_tx, ready_rx) = sync_channel::<anyhow::Result<usize>>(1);
         let worker = std::thread::Builder::new()
             .name(format!("tmi-worker-{name}"))
             .spawn(move || {
+                let _guard = guard;
                 let mut backend = match factory() {
                     Ok(b) => {
                         let _ = ready_tx.send(Ok(b.n_literals()));
@@ -128,59 +288,10 @@ impl Coordinator {
                     }
                 };
                 loop {
-                    match collect(&rx, &policy) {
+                    match collect(&queue_worker, &policy) {
                         Collected::Disconnected => break,
-                        Collected::Batch(msgs) => {
-                            let mut stop = false;
-                            let reqs: Vec<Request> = msgs
-                                .into_iter()
-                                .filter_map(|m| match m {
-                                    Msg::Infer(r) => Some(r),
-                                    Msg::Shutdown => {
-                                        stop = true;
-                                        None
-                                    }
-                                })
-                                .collect();
-                            if reqs.is_empty() {
-                                if stop {
-                                    break;
-                                }
-                                continue;
-                            }
-                            metrics_worker.record_batch(reqs.len());
-                            let lits: Vec<BitVec> =
-                                reqs.iter().map(|r| r.literals.clone()).collect();
-                            match backend.infer_batch(&lits) {
-                                Ok(scored) => {
-                                    for (req, s) in reqs.into_iter().zip(scored) {
-                                        let Scored { prediction, scores } = s;
-                                        metrics_worker
-                                            .completed
-                                            .fetch_add(1, Ordering::Relaxed);
-                                        metrics_worker
-                                            .record_latency(req.enqueued.elapsed());
-                                        let _ = req.resp.send(Ok(Prediction {
-                                            class: prediction,
-                                            scores,
-                                        }));
-                                    }
-                                }
-                                Err(e) => {
-                                    let msg = e.to_string();
-                                    for req in reqs {
-                                        metrics_worker
-                                            .errors
-                                            .fetch_add(1, Ordering::Relaxed);
-                                        let _ = req.resp.send(Err(
-                                            InferError::BackendError(msg.clone()),
-                                        ));
-                                    }
-                                }
-                            }
-                            if stop {
-                                break;
-                            }
+                        Collected::Batch(reqs) => {
+                            answer_with_backend(backend.as_mut(), reqs, &metrics_worker);
                         }
                     }
                 }
@@ -192,13 +303,73 @@ impl Coordinator {
         self.routes.insert(
             name,
             Route {
-                queue: tx,
+                queue,
                 n_literals,
                 metrics,
-                worker: Some(worker),
+                swap: None,
+                workers: vec![worker],
             },
         );
         Ok(())
+    }
+
+    /// Register a hot-swappable snapshot route: `cfg.workers` batcher
+    /// threads share one bounded queue and score against the published
+    /// [`ModelSnapshot`] (each worker holds private scratch; the
+    /// snapshot itself is immutable and shared).
+    pub fn register_model(
+        &mut self,
+        name: impl Into<String>,
+        snapshot: Arc<ModelSnapshot>,
+        cfg: RouteConfig,
+    ) {
+        let name = name.into();
+        let metrics = Arc::new(Metrics::new());
+        let queue = Arc::new(BoundedQueue::new(cfg.queue_cap));
+        let cell = Arc::new(SwapCell::new(Arc::clone(&snapshot)));
+        let n_workers = cfg.workers.max(1);
+        let alive = Arc::new(AtomicUsize::new(n_workers));
+        let workers = (0..n_workers)
+            .map(|w| {
+                let guard = WorkerGuard {
+                    queue: Arc::clone(&queue),
+                    alive: Arc::clone(&alive),
+                };
+                let queue = Arc::clone(&queue);
+                let cell = Arc::clone(&cell);
+                let metrics = Arc::clone(&metrics);
+                let policy = cfg.policy;
+                std::thread::Builder::new()
+                    .name(format!("tmi-worker-{name}-{w}"))
+                    .spawn(move || {
+                        let _guard = guard;
+                        snapshot_worker(&queue, &cell, &metrics, &policy);
+                    })
+                    .expect("spawning worker thread")
+            })
+            .collect();
+        self.routes.insert(
+            name,
+            Route {
+                queue,
+                n_literals: snapshot.n_literals(),
+                metrics,
+                swap: Some(cell),
+                workers,
+            },
+        );
+    }
+
+    /// Atomically replace the serving snapshot of model `name`,
+    /// returning the retired version. In-flight and queued requests are
+    /// each scored by exactly one published version (whichever their
+    /// worker holds for that batch) — never dropped, never torn.
+    pub fn swap(&self, name: &str, snapshot: Arc<ModelSnapshot>) -> Result<u64, SwapError> {
+        let route = self
+            .routes
+            .get(name)
+            .ok_or_else(|| SwapError::UnknownModel(name.to_string()))?;
+        swap_route(name, route.n_literals, route.swap.as_ref(), snapshot)
     }
 
     pub fn models(&self) -> Vec<String> {
@@ -208,7 +379,16 @@ impl Coordinator {
     }
 
     pub fn metrics(&self, model: &str) -> Option<MetricsSnapshot> {
-        self.routes.get(model).map(|r| r.metrics.snapshot())
+        self.routes
+            .get(model)
+            .map(|r| snapshot_with_depth(&r.metrics, &r.queue))
+    }
+
+    /// Full route statistics (metrics + serving version/generation).
+    pub fn stats(&self, model: &str) -> Option<RouteStats> {
+        self.routes
+            .get(model)
+            .map(|r| route_stats(&r.metrics, &r.queue, r.swap.as_ref()))
     }
 
     /// Cloneable request handle (cheap: Arc-backed).
@@ -221,9 +401,10 @@ impl Coordinator {
                         (
                             name.clone(),
                             HandleRoute {
-                                queue: Mutex::new(r.queue.clone()),
+                                queue: Arc::clone(&r.queue),
                                 n_literals: r.n_literals,
                                 metrics: Arc::clone(&r.metrics),
+                                swap: r.swap.as_ref().map(Arc::clone),
                             },
                         )
                     })
@@ -232,15 +413,15 @@ impl Coordinator {
         }
     }
 
-    /// Send stop sentinels and join workers. Requests already queued
-    /// before the sentinel are still answered.
+    /// Close every route's queue and join the workers. Requests
+    /// admitted before the close are still answered (close-then-drain);
+    /// later pushes fail with [`InferError::ShuttingDown`].
     pub fn shutdown(mut self) {
         for route in self.routes.values() {
-            let _ = route.queue.send(Msg::Shutdown);
+            route.queue.close();
         }
         for (_, mut route) in self.routes.drain() {
-            drop(route.queue);
-            if let Some(w) = route.worker.take() {
+            for w in route.workers.drain(..) {
                 let _ = w.join();
             }
         }
@@ -253,10 +434,121 @@ impl Default for Coordinator {
     }
 }
 
+/// The route's metrics snapshot with the live queue-depth gauge
+/// filled in ([`Metrics`] does not own the queue).
+fn snapshot_with_depth(metrics: &Metrics, queue: &BoundedQueue<Request>) -> MetricsSnapshot {
+    let mut snap = metrics.snapshot();
+    snap.queue_depth = queue.len() as u64;
+    snap
+}
+
+/// Shared by [`Coordinator::stats`] and [`CoordinatorHandle::stats`].
+fn route_stats(
+    metrics: &Metrics,
+    queue: &BoundedQueue<Request>,
+    swap: Option<&Arc<SwapCell>>,
+) -> RouteStats {
+    RouteStats {
+        metrics: snapshot_with_depth(metrics, queue),
+        version: swap.map(|c| c.load().version()),
+        generation: swap.map(|c| c.generation()),
+    }
+}
+
+/// Shared by [`Coordinator::swap`] and [`CoordinatorHandle::swap`]:
+/// validate the route supports swapping and the widths agree, then
+/// install the snapshot.
+fn swap_route(
+    name: &str,
+    n_literals: usize,
+    cell: Option<&Arc<SwapCell>>,
+    snapshot: Arc<ModelSnapshot>,
+) -> Result<u64, SwapError> {
+    let cell = cell.ok_or_else(|| SwapError::Unsupported(name.to_string()))?;
+    if snapshot.n_literals() != n_literals {
+        return Err(SwapError::WrongWidth {
+            expected: n_literals,
+            got: snapshot.n_literals(),
+        });
+    }
+    Ok(cell.store(snapshot))
+}
+
+/// One collect-score-respond round for a mutable factory backend.
+fn answer_with_backend(backend: &mut dyn Backend, reqs: Vec<Request>, metrics: &Metrics) {
+    metrics.record_batch(reqs.len());
+    let lits: Vec<BitVec> = reqs.iter().map(|r| r.literals.clone()).collect();
+    match backend.infer_batch(&lits) {
+        Ok(scored) => {
+            for (req, s) in reqs.into_iter().zip(scored) {
+                let Scored { prediction, scores } = s;
+                metrics.completed.fetch_add(1, Ordering::Relaxed);
+                metrics.record_latency(req.enqueued.elapsed());
+                let _ = req.resp.send(Ok(Prediction {
+                    class: prediction,
+                    scores,
+                }));
+            }
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            for req in reqs {
+                metrics.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = req
+                    .resp
+                    .send(Err(InferError::BackendError(msg.clone())));
+            }
+        }
+    }
+}
+
+/// The snapshot-route worker loop: collect a batch, pick up the latest
+/// published snapshot (rebuilding scratch only when the version
+/// changed), score the whole batch against that one version, respond.
+fn snapshot_worker(
+    queue: &BoundedQueue<Request>,
+    cell: &SwapCell,
+    metrics: &Metrics,
+    policy: &BatchPolicy,
+) {
+    let mut snap = cell.load();
+    let mut scratch = snap.make_scratch();
+    let mut out: Vec<i32> = Vec::new();
+    loop {
+        match collect(queue, policy) {
+            Collected::Disconnected => break,
+            Collected::Batch(reqs) => {
+                let cur = cell.load();
+                if !Arc::ptr_eq(&cur, &snap) {
+                    scratch = cur.make_scratch();
+                    snap = cur;
+                }
+                metrics.record_batch(reqs.len());
+                let m = snap.classes();
+                out.clear();
+                out.resize(m, 0);
+                for req in reqs {
+                    // engine resolution is per request: a batch mixes
+                    // independent clients, so a batch-wide probe could
+                    // route a non-complement request down the sparse walk
+                    snap.scores_into(&mut scratch, &req.literals, &mut out);
+                    metrics.completed.fetch_add(1, Ordering::Relaxed);
+                    metrics.record_latency(req.enqueued.elapsed());
+                    let _ = req.resp.send(Ok(Prediction {
+                        class: argmax(&out),
+                        scores: out.clone(),
+                    }));
+                }
+            }
+        }
+    }
+}
+
 struct HandleRoute {
-    queue: Mutex<Sender<Msg>>,
+    queue: Arc<BoundedQueue<Request>>,
     n_literals: usize,
     metrics: Arc<Metrics>,
+    swap: Option<Arc<SwapCell>>,
 }
 
 /// Cloneable, thread-safe routing handle.
@@ -266,7 +558,8 @@ pub struct CoordinatorHandle {
 }
 
 impl CoordinatorHandle {
-    /// Blocking inference against a registered model.
+    /// Blocking inference against a registered model. Sheds with
+    /// [`InferError::Overloaded`] when the route's queue is full.
     pub fn infer(&self, model: &str, literals: BitVec) -> Result<Prediction, InferError> {
         let route = self
             .routes
@@ -285,12 +578,14 @@ impl CoordinatorHandle {
             enqueued: Instant::now(),
             resp: resp_tx,
         };
-        route
-            .queue
-            .lock()
-            .expect("queue lock poisoned")
-            .send(Msg::Infer(req))
-            .map_err(|_| InferError::ShuttingDown)?;
+        match route.queue.try_push(req) {
+            Ok(()) => {}
+            Err(PushError::Full(_)) => {
+                route.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                return Err(InferError::Overloaded);
+            }
+            Err(PushError::Closed(_)) => return Err(InferError::ShuttingDown),
+        }
         resp_rx.recv().map_err(|_| InferError::ShuttingDown)?
     }
 
@@ -303,24 +598,80 @@ impl CoordinatorHandle {
         let lits = crate::data::Dataset::literals_from_bools(features);
         self.infer(model, lits)
     }
+
+    /// Route statistics for the `stats` protocol verb.
+    pub fn stats(&self, model: &str) -> Option<RouteStats> {
+        self.routes
+            .get(model)
+            .map(|r| route_stats(&r.metrics, &r.queue, r.swap.as_ref()))
+    }
+
+    /// Hot-swap the serving snapshot of `model` (snapshot routes only)
+    /// — see [`Coordinator::swap`]. Available on the handle so
+    /// re-publishers (e.g. `tmi serve --watch`) don't need the
+    /// coordinator itself.
+    pub fn swap(&self, model: &str, snapshot: Arc<ModelSnapshot>) -> Result<u64, SwapError> {
+        let route = self
+            .routes
+            .get(model)
+            .ok_or_else(|| SwapError::UnknownModel(model.to_string()))?;
+        swap_route(model, route.n_literals, route.swap.as_ref(), snapshot)
+    }
+}
+
+/// TCP front-end limits.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ServeOptions {
+    /// Connection cap: accepts beyond this are answered `err busy` and
+    /// closed immediately (finished connection threads are reaped as
+    /// the server goes, so the cap bounds *live* connections).
+    pub max_conns: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { max_conns: 256 }
+    }
 }
 
 /// Line protocol for the TCP front end:
 ///
 /// ```text
-/// -> <model> <01-bitstring of raw features>\n
+/// -> infer <model> <01-bitstring of raw features>\n   (or legacy: <model> <bits>\n)
 /// <- ok <class> <score_0> <score_1> ...\n   |   err <message>\n
+///
+/// -> stats <model>\n
+/// <- ok model=<m> version=<v|-> generation=<g|-> requests=<n> completed=<n>
+///       shed=<n> errors=<n> queue_depth=<n> batches=<n> mean_batch=<f>
+///       p50_us=<n> p95_us=<n> p99_us=<n>\n   (one line)
 /// ```
 pub fn serve_tcp(
     listener: TcpListener,
     handle: CoordinatorHandle,
     stop: Arc<AtomicBool>,
 ) -> std::io::Result<()> {
+    serve_tcp_with(listener, handle, stop, ServeOptions::default())
+}
+
+/// [`serve_tcp`] with explicit limits.
+pub fn serve_tcp_with(
+    listener: TcpListener,
+    handle: CoordinatorHandle,
+    stop: Arc<AtomicBool>,
+    opts: ServeOptions,
+) -> std::io::Result<()> {
     listener.set_nonblocking(true)?;
     let mut conns: Vec<JoinHandle<()>> = Vec::new();
     while !stop.load(Ordering::Relaxed) {
         match listener.accept() {
             Ok((stream, _addr)) => {
+                // reap finished connection threads before capacity-checking
+                conns.retain(|c| !c.is_finished());
+                if conns.len() >= opts.max_conns {
+                    let mut stream = stream;
+                    let _ = stream.write_all(b"err busy: connection limit reached\n");
+                    continue; // drop closes the socket
+                }
                 let h = handle.clone();
                 let stop_conn = Arc::clone(&stop);
                 conns.push(std::thread::spawn(move || {
@@ -339,6 +690,11 @@ pub fn serve_tcp(
     Ok(())
 }
 
+/// Longest accepted request line (a 20k-feature bitstring is ~20 KB;
+/// 1 MiB leaves two orders of magnitude of headroom while bounding
+/// per-connection memory against newline-less streams).
+const MAX_LINE_BYTES: usize = 1 << 20;
+
 fn handle_conn(
     stream: TcpStream,
     handle: CoordinatorHandle,
@@ -352,7 +708,10 @@ fn handle_conn(
     loop {
         line.clear();
         let n = loop {
-            match reader.read_line(&mut line) {
+            // cap the buffered line: one extra byte distinguishes
+            // "exactly at the cap" from "over it"
+            let budget = (MAX_LINE_BYTES + 1 - line.len()) as u64;
+            match (&mut reader).take(budget).read_line(&mut line) {
                 Ok(n) => break n,
                 Err(e)
                     if matches!(
@@ -371,19 +730,103 @@ fn handle_conn(
         if n == 0 {
             return Ok(()); // client closed
         }
-        let reply = match parse_request_line(&line) {
-            Ok((model, features)) => match handle.infer_features(model, &features) {
-                Ok(p) => {
-                    let scores: Vec<String> =
-                        p.scores.iter().map(|s| s.to_string()).collect();
-                    format!("ok {} {}\n", p.class, scores.join(" "))
+        if !line.ends_with('\n') {
+            if line.len() > MAX_LINE_BYTES {
+                // oversized request: refuse it, discard through the
+                // next newline, keep serving the connection
+                stream.write_all(b"err line too long\n")?;
+                if !discard_to_newline(&mut reader, &stop)? {
+                    return Ok(());
                 }
-                Err(e) => format!("err {e}\n"),
-            },
-            Err(e) => format!("err {e}\n"),
-        };
+                continue;
+            }
+            // EOF mid-line: the client disconnected mid-write — drop
+            // the partial request instead of serving half a line
+            return Ok(());
+        }
+        let reply = respond_line(&line, &handle);
         stream.write_all(reply.as_bytes())?;
     }
+}
+
+/// Stream-discard input until (and including) the next newline without
+/// buffering it. Returns false on EOF/shutdown (caller closes).
+fn discard_to_newline(
+    reader: &mut BufReader<TcpStream>,
+    stop: &AtomicBool,
+) -> std::io::Result<bool> {
+    loop {
+        // scan into owned values first: `consume` needs the buffer
+        // borrow from `fill_buf` to have ended
+        let scanned = reader
+            .fill_buf()
+            .map(|data| (data.len(), data.iter().position(|&b| b == b'\n')));
+        match scanned {
+            Ok((0, _)) => return Ok(false), // EOF
+            Ok((_, Some(pos))) => {
+                reader.consume(pos + 1);
+                return Ok(true);
+            }
+            Ok((len, None)) => reader.consume(len),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if stop.load(Ordering::Relaxed) {
+                    return Ok(false);
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Dispatch one protocol line (`infer`/`stats` verbs; a bare
+/// `<model> <bits>` is legacy shorthand for `infer`).
+fn respond_line(line: &str, handle: &CoordinatorHandle) -> String {
+    let trimmed = line.trim();
+    if let Some(model) = trimmed.strip_prefix("stats ") {
+        let model = model.trim();
+        return match handle.stats(model) {
+            Some(st) => stats_line(model, &st),
+            None => format!("err unknown model '{model}'\n"),
+        };
+    }
+    let body = trimmed.strip_prefix("infer ").unwrap_or(trimmed);
+    match parse_request_line(body) {
+        Ok((model, features)) => match handle.infer_features(model, &features) {
+            Ok(p) => {
+                let scores: Vec<String> = p.scores.iter().map(|s| s.to_string()).collect();
+                format!("ok {} {}\n", p.class, scores.join(" "))
+            }
+            Err(e) => format!("err {e}\n"),
+        },
+        Err(e) => format!("err {e}\n"),
+    }
+}
+
+fn stats_line(model: &str, st: &RouteStats) -> String {
+    let m = &st.metrics;
+    let opt = |v: Option<u64>| v.map(|v| v.to_string()).unwrap_or_else(|| "-".to_string());
+    let version = opt(st.version);
+    let generation = opt(st.generation);
+    format!(
+        "ok model={model} version={version} generation={generation} requests={} \
+         completed={} shed={} errors={} queue_depth={} batches={} mean_batch={:.2} \
+         p50_us={} p95_us={} p99_us={}\n",
+        m.requests,
+        m.completed,
+        m.shed,
+        m.errors,
+        m.queue_depth,
+        m.batches,
+        m.mean_batch_size(),
+        m.p50_us(),
+        m.p95_us(),
+        m.p99_us(),
+    )
 }
 
 fn parse_request_line(line: &str) -> Result<(&str, Vec<bool>), String> {
@@ -410,11 +853,13 @@ mod tests {
     use crate::tm::params::TMParams;
     use crate::tm::trainer::Trainer;
     use crate::util::Rng;
+    use std::net::Shutdown;
+    use std::time::Duration;
 
-    fn toy_backend() -> Box<dyn Backend + Send> {
-        let params = TMParams::new(2, 10, 8);
+    fn toy_trainer(seed: u64) -> Trainer {
+        let params = TMParams::new(2, 10, 8).with_seed(seed);
         let mut tr = Trainer::new(params, eval::Backend::Indexed);
-        let mut rng = Rng::new(3);
+        let mut rng = Rng::new(seed.wrapping_mul(3).wrapping_add(1));
         let samples: Vec<(BitVec, usize)> = (0..200)
             .map(|_| {
                 let y = rng.bern(0.5) as usize;
@@ -428,7 +873,11 @@ mod tests {
         for _ in 0..5 {
             tr.train_epoch(samples.iter().map(|(l, y)| (l, *y)));
         }
-        Box::new(CpuBackend::new(tr.tm, eval::Backend::Indexed))
+        tr
+    }
+
+    fn toy_backend() -> Box<dyn Backend + Send> {
+        Box::new(CpuBackend::new(toy_trainer(3).tm, eval::Backend::Indexed))
     }
 
     fn class0_features() -> Vec<bool> {
@@ -448,6 +897,7 @@ mod tests {
         let m = coord.metrics("toy").unwrap();
         assert_eq!(m.requests, 1);
         assert_eq!(m.completed, 1);
+        assert_eq!(m.shed, 0);
         coord.shutdown();
     }
 
@@ -475,7 +925,7 @@ mod tests {
             toy_backend(),
             BatchPolicy {
                 max_batch: 8,
-                max_wait: std::time::Duration::from_millis(2),
+                max_wait: Duration::from_millis(2),
             },
         );
         let h = coord.handle();
@@ -496,6 +946,265 @@ mod tests {
         let m = coord.metrics("toy").unwrap();
         assert_eq!(m.completed, 200);
         assert!(m.batches <= 200);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn snapshot_route_multiworker_serves_and_counts() {
+        let mut tr = toy_trainer(3);
+        let want = {
+            let f = class0_features();
+            let lits = crate::data::Dataset::literals_from_bools(&f);
+            tr.scores(&lits)
+        };
+        let mut coord = Coordinator::new();
+        coord.register_model(
+            "toy",
+            tr.publish(),
+            RouteConfig {
+                workers: 3,
+                queue_cap: 128,
+                policy: BatchPolicy {
+                    max_batch: 4,
+                    max_wait: Duration::from_micros(200),
+                },
+            },
+        );
+        let h = coord.handle();
+        let threads: Vec<_> = (0..6)
+            .map(|_| {
+                let h = h.clone();
+                let want = want.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..30 {
+                        let p = h.infer_features("toy", &class0_features()).unwrap();
+                        assert_eq!(p.scores, want);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let st = coord.stats("toy").unwrap();
+        assert_eq!(st.metrics.completed, 180);
+        assert_eq!(st.metrics.errors, 0);
+        assert_eq!(st.version, Some(1));
+        assert_eq!(st.generation, Some(0));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn swap_replaces_serving_version() {
+        let mut tr_a = toy_trainer(3);
+        let mut tr_b = toy_trainer(4);
+        let f = class0_features();
+        let lits = crate::data::Dataset::literals_from_bools(&f);
+        let want_a = tr_a.scores(&lits);
+        let want_b = tr_b.scores(&lits);
+
+        let mut coord = Coordinator::new();
+        coord.register_model("toy", tr_a.publish(), RouteConfig::default());
+        let h = coord.handle();
+        assert_eq!(h.infer_features("toy", &f).unwrap().scores, want_a);
+        let st = h.stats("toy").unwrap();
+        assert_eq!((st.version, st.generation), (Some(1), Some(0)));
+
+        let retired = coord.swap("toy", tr_b.publish()).unwrap();
+        assert_eq!(retired, 1);
+        assert_eq!(h.infer_features("toy", &f).unwrap().scores, want_b);
+        // publisher versions can collide (tr_b's first publish is also
+        // v1) — the route generation is what proves the swap landed
+        let st = h.stats("toy").unwrap();
+        assert_eq!((st.version, st.generation), (Some(1), Some(1)));
+
+        // swap through the handle too
+        let retired = h.swap("toy", tr_a.publish()).unwrap();
+        assert_eq!(retired, 1);
+        assert_eq!(h.infer_features("toy", &f).unwrap().scores, want_a);
+        let st = h.stats("toy").unwrap();
+        assert_eq!((st.version, st.generation), (Some(2), Some(2)));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn swap_rejects_factory_routes_and_wrong_width() {
+        let mut coord = Coordinator::new();
+        coord.register("fact", toy_backend(), BatchPolicy::default());
+        let mut tr = toy_trainer(3);
+        coord.register_model("snap", tr.publish(), RouteConfig::default());
+        let h = coord.handle();
+        assert!(matches!(
+            coord.swap("fact", tr.publish()),
+            Err(SwapError::Unsupported(_))
+        ));
+        assert!(matches!(
+            h.swap("missing", tr.publish()),
+            Err(SwapError::UnknownModel(_))
+        ));
+        // wrong literal width: a machine over 4 features (8 literals)
+        let mut small = Trainer::new(
+            TMParams::new(2, 4, 4),
+            eval::Backend::Indexed,
+        );
+        assert!(matches!(
+            h.swap("snap", small.publish()),
+            Err(SwapError::WrongWidth { expected: 16, got: 8 })
+        ));
+        coord.shutdown();
+    }
+
+    /// Backend that sleeps per batch — drives overload and shutdown
+    /// ordering tests.
+    struct SlowBackend {
+        delay: Duration,
+    }
+    impl Backend for SlowBackend {
+        fn infer_batch(
+            &mut self,
+            batch: &[BitVec],
+        ) -> anyhow::Result<Vec<crate::coordinator::backend::Scored>> {
+            std::thread::sleep(self.delay);
+            Ok(batch
+                .iter()
+                .map(|_| crate::coordinator::backend::Scored {
+                    prediction: 0,
+                    scores: vec![0, 0],
+                })
+                .collect())
+        }
+        fn n_literals(&self) -> usize {
+            4
+        }
+        fn name(&self) -> String {
+            "slow".into()
+        }
+    }
+
+    #[test]
+    fn full_queue_sheds_with_overloaded() {
+        let mut coord = Coordinator::new();
+        coord
+            .register_with_config(
+                "slow",
+                || {
+                    Ok(Box::new(SlowBackend {
+                        delay: Duration::from_millis(5),
+                    }) as Box<dyn Backend>)
+                },
+                RouteConfig {
+                    workers: 1,
+                    queue_cap: 2,
+                    policy: BatchPolicy {
+                        max_batch: 1,
+                        max_wait: Duration::ZERO,
+                    },
+                },
+            )
+            .unwrap();
+        let h = coord.handle();
+        let counters: Vec<_> = (0..10)
+            .map(|_| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    let (mut ok, mut shed) = (0u64, 0u64);
+                    for _ in 0..5 {
+                        match h.infer("slow", BitVec::zeros(4)) {
+                            Ok(_) => ok += 1,
+                            Err(InferError::Overloaded) => shed += 1,
+                            Err(e) => panic!("unexpected error: {e}"),
+                        }
+                    }
+                    (ok, shed)
+                })
+            })
+            .collect();
+        let (mut ok, mut shed) = (0u64, 0u64);
+        for c in counters {
+            let (o, s) = c.join().unwrap();
+            ok += o;
+            shed += s;
+        }
+        assert_eq!(ok + shed, 50, "every request answered, none hung");
+        assert!(shed > 0, "sustained overload must shed");
+        assert!(ok > 0, "admitted requests must still complete");
+        let m = coord.metrics("slow").unwrap();
+        assert_eq!(m.shed, shed);
+        assert_eq!(m.completed, ok);
+        assert_eq!(m.requests, 50);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn shutdown_answers_queued_and_in_flight_requests() {
+        let mut coord = Coordinator::new();
+        coord
+            .register_with_config(
+                "slow",
+                || {
+                    Ok(Box::new(SlowBackend {
+                        delay: Duration::from_millis(10),
+                    }) as Box<dyn Backend>)
+                },
+                RouteConfig {
+                    workers: 1,
+                    queue_cap: 64,
+                    policy: BatchPolicy {
+                        max_batch: 2,
+                        max_wait: Duration::ZERO,
+                    },
+                },
+            )
+            .unwrap();
+        let h = coord.handle();
+        let clients: Vec<_> = (0..8)
+            .map(|_| {
+                let h = h.clone();
+                std::thread::spawn(move || h.infer("slow", BitVec::zeros(4)))
+            })
+            .collect();
+        // let every client enqueue (first batch in flight, rest queued)
+        std::thread::sleep(Duration::from_millis(20));
+        coord.shutdown();
+        for c in clients {
+            let r = c.join().unwrap();
+            assert!(r.is_ok(), "admitted request must be answered, got {r:?}");
+        }
+    }
+
+    /// Backend that panics — the route must fail closed, not hang.
+    struct PanickingBackend;
+    impl Backend for PanickingBackend {
+        fn infer_batch(
+            &mut self,
+            _batch: &[BitVec],
+        ) -> anyhow::Result<Vec<crate::coordinator::backend::Scored>> {
+            panic!("injected worker panic")
+        }
+        fn n_literals(&self) -> usize {
+            4
+        }
+        fn name(&self) -> String {
+            "panicking".into()
+        }
+    }
+
+    #[test]
+    fn worker_panic_fails_clients_instead_of_hanging() {
+        let mut coord = Coordinator::new();
+        coord.register("boom", Box::new(PanickingBackend), BatchPolicy::default());
+        let h = coord.handle();
+        // first request rides the panicking batch: its response channel
+        // is dropped, the client unblocks with ShuttingDown
+        assert!(matches!(
+            h.infer("boom", BitVec::zeros(4)),
+            Err(InferError::ShuttingDown)
+        ));
+        // the dead worker's guard closed the queue: immediate rejection
+        assert!(matches!(
+            h.infer("boom", BitVec::zeros(4)),
+            Err(InferError::ShuttingDown)
+        ));
         coord.shutdown();
     }
 
@@ -563,7 +1272,8 @@ mod tests {
         coord.register("toy", toy_backend(), BatchPolicy::default());
         let h = coord.handle();
         coord.shutdown();
-        // worker is gone; the stale handle must fail, not hang
+        // workers are gone and the queue is closed; the stale handle
+        // must fail, not hang
         let r = h.infer_features("toy", &class0_features());
         assert!(matches!(r, Err(InferError::ShuttingDown)), "{r:?}");
     }
@@ -578,7 +1288,7 @@ mod tests {
     }
 
     #[test]
-    fn tcp_round_trip() {
+    fn tcp_round_trip_with_verbs() {
         let mut coord = Coordinator::new();
         coord.register("toy", toy_backend(), BatchPolicy::default());
         let handle = coord.handle();
@@ -589,11 +1299,35 @@ mod tests {
         let server = std::thread::spawn(move || serve_tcp(listener, handle, stop2));
 
         let mut conn = TcpStream::connect(addr).unwrap();
-        conn.write_all(b"toy 10000000\n").unwrap();
         let mut reader = BufReader::new(conn.try_clone().unwrap());
         let mut reply = String::new();
+
+        // legacy form
+        conn.write_all(b"toy 10000000\n").unwrap();
         reader.read_line(&mut reply).unwrap();
         assert!(reply.starts_with("ok 0 "), "reply: {reply}");
+
+        // explicit infer verb gives the same answer
+        conn.write_all(b"infer toy 10000000\n").unwrap();
+        let mut reply2 = String::new();
+        reader.read_line(&mut reply2).unwrap();
+        assert_eq!(reply, reply2);
+
+        // stats verb
+        conn.write_all(b"stats toy\n").unwrap();
+        reply.clear();
+        reader.read_line(&mut reply).unwrap();
+        assert!(
+            reply.starts_with("ok model=toy version=- generation=- requests=2 completed=2"),
+            "reply: {reply}"
+        );
+        assert!(reply.contains(" shed=0 "), "reply: {reply}");
+        assert!(reply.contains(" p99_us="), "reply: {reply}");
+
+        conn.write_all(b"stats missing\n").unwrap();
+        reply.clear();
+        reader.read_line(&mut reply).unwrap();
+        assert!(reply.starts_with("err unknown model"), "reply: {reply}");
 
         conn.write_all(b"missing 1\n").unwrap();
         reply.clear();
@@ -603,6 +1337,128 @@ mod tests {
         stop.store(true, Ordering::Relaxed);
         drop(conn);
         drop(reader); // the try_clone half also holds the socket open
+        server.join().unwrap().unwrap();
+        coord.shutdown();
+    }
+
+    #[test]
+    fn partial_line_on_disconnect_is_dropped() {
+        let mut coord = Coordinator::new();
+        coord.register("toy", toy_backend(), BatchPolicy::default());
+        let handle = coord.handle();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let server = std::thread::spawn(move || serve_tcp(listener, handle, stop2));
+
+        let mut conn = TcpStream::connect(addr).unwrap();
+        // half a request, then disconnect mid-write
+        conn.write_all(b"toy 1000").unwrap();
+        conn.shutdown(Shutdown::Write).unwrap();
+        // the server must close without replying to the partial line
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut reply = String::new();
+        let n = reader.read_line(&mut reply).unwrap();
+        assert_eq!(n, 0, "partial line must not be served, got: {reply}");
+        let m = coord.metrics("toy").unwrap();
+        assert_eq!(m.requests, 0);
+
+        stop.store(true, Ordering::Relaxed);
+        drop(conn);
+        drop(reader);
+        server.join().unwrap().unwrap();
+        coord.shutdown();
+    }
+
+    #[test]
+    fn oversized_line_is_refused_and_connection_survives() {
+        let mut coord = Coordinator::new();
+        coord.register("toy", toy_backend(), BatchPolicy::default());
+        let handle = coord.handle();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let server = std::thread::spawn(move || serve_tcp(listener, handle, stop2));
+
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        // a single "line" well past MAX_LINE_BYTES, eventually terminated
+        let chunk = vec![b'1'; 64 * 1024];
+        for _ in 0..17 {
+            if conn.write_all(&chunk).is_err() {
+                break;
+            }
+        }
+        conn.write_all(b"\n").unwrap();
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        assert!(reply.starts_with("err line too long"), "reply: {reply}");
+        // the oversized line was discarded, not buffered: the same
+        // connection keeps serving
+        conn.write_all(b"toy 10000000\n").unwrap();
+        reply.clear();
+        reader.read_line(&mut reply).unwrap();
+        assert!(reply.starts_with("ok 0 "), "reply: {reply}");
+
+        stop.store(true, Ordering::Relaxed);
+        drop(conn);
+        drop(reader);
+        server.join().unwrap().unwrap();
+        coord.shutdown();
+    }
+
+    #[test]
+    fn connection_cap_answers_busy_and_reaps() {
+        let mut coord = Coordinator::new();
+        coord.register("toy", toy_backend(), BatchPolicy::default());
+        let handle = coord.handle();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let server = std::thread::spawn(move || {
+            serve_tcp_with(listener, handle, stop2, ServeOptions { max_conns: 1 })
+        });
+
+        // first connection occupies the only slot
+        let mut c1 = TcpStream::connect(addr).unwrap();
+        c1.write_all(b"toy 10000000\n").unwrap();
+        let mut r1 = BufReader::new(c1.try_clone().unwrap());
+        let mut reply = String::new();
+        r1.read_line(&mut reply).unwrap();
+        assert!(reply.starts_with("ok "), "reply: {reply}");
+
+        // second connection is refused with err busy
+        let c2 = TcpStream::connect(addr).unwrap();
+        let mut r2 = BufReader::new(c2);
+        reply.clear();
+        r2.read_line(&mut reply).unwrap();
+        assert!(reply.starts_with("err busy"), "reply: {reply}");
+
+        // free the slot; the server reaps the finished thread and
+        // accepts again (poll: reaping happens on the next accept)
+        drop(r1);
+        drop(c1);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let mut served = false;
+        while Instant::now() < deadline {
+            let mut c3 = TcpStream::connect(addr).unwrap();
+            c3.write_all(b"toy 10000000\n").unwrap();
+            let mut r3 = BufReader::new(c3.try_clone().unwrap());
+            reply.clear();
+            r3.read_line(&mut reply).unwrap();
+            if reply.starts_with("ok ") {
+                served = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert!(served, "capacity never freed after disconnect");
+
+        stop.store(true, Ordering::Relaxed);
+        drop(r2);
         server.join().unwrap().unwrap();
         coord.shutdown();
     }

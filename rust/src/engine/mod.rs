@@ -22,6 +22,10 @@
 //!   baseline scores plus per-literal delta lists, so scoring touches
 //!   only the *set* features. [`InferMode`] selects between the dense
 //!   and sparse engines (auto-picking by input density).
+//! * [`snapshot`] — [`ModelSnapshot`]: an immutable, versioned freeze
+//!   of a machine plus both engines' read-only indexes, shared behind
+//!   an `Arc` so the serving coordinator can hot-swap model versions
+//!   under live traffic with zero torn requests.
 //!
 //! The decomposition mirrors the class/clause-parallel architecture of
 //! *Massively Parallel and Asynchronous Tsetlin Machine Architecture*
@@ -33,11 +37,14 @@
 pub mod batch;
 pub mod fused;
 pub mod shard;
+pub mod snapshot;
 pub mod sparse;
 
 pub use batch::{argmax, BatchScorer, FusedEngine};
 pub use fused::{FusedIndex, FusedScratch, Maintenance};
 pub use shard::{score_batch_sharded, ShardScorer};
+pub use snapshot::{ModelSnapshot, SnapshotScratch};
 pub use sparse::{
-    InferMode, SparseEngine, SparseFusedIndex, SparseScratch, SPARSE_DENSITY_THRESHOLD,
+    resolve_infer_mode, InferMode, SparseEngine, SparseFusedIndex, SparseScratch,
+    SPARSE_DENSITY_THRESHOLD,
 };

@@ -1,0 +1,306 @@
+//! Immutable published inference snapshots — the unit of hot swap.
+//!
+//! A [`ModelSnapshot`] freezes a trained machine together with both
+//! inference engines' read-only indexes: the dense class-fused
+//! [`FusedIndex`] and the O(nnz) [`SparseFusedIndex`], each built in
+//! [`Maintenance::Frozen`] mode (no position matrix — inference never
+//! deletes, and the matrix is the index's dominant memory cost). The
+//! snapshot owns no mutable state at all: scoring threads each hold a
+//! private [`SnapshotScratch`] and share the snapshot behind an `Arc`,
+//! so the serving coordinator can atomically replace the `Arc` under
+//! live traffic ([`crate::coordinator::Coordinator::swap`]) and every
+//! request is scored by exactly one published version — never a torn
+//! mixture of two.
+//!
+//! This is the paper's train-while-serving story (arXiv 2004.03188 §3:
+//! constant-time index updates keep learning cheap next to serving):
+//! a trainer keeps learning, periodically calls
+//! [`crate::tm::trainer::Trainer::publish`], and pushes the resulting
+//! snapshot into the coordinator without restarting it.
+
+use crate::engine::fused::{FusedIndex, FusedScratch, Maintenance};
+use crate::engine::sparse::{resolve_infer_mode, InferMode, SparseFusedIndex, SparseScratch};
+use crate::tm::classifier::MultiClassTM;
+use crate::util::BitVec;
+
+/// A frozen, versioned, shareable serving model: machine + both
+/// inference indexes. Construct via [`ModelSnapshot::new`] (or
+/// [`crate::tm::trainer::Trainer::publish`]) and wrap in an `Arc`.
+#[derive(Clone, Debug)]
+pub struct ModelSnapshot {
+    version: u64,
+    tm: MultiClassTM,
+    /// `None` iff the mode is forced [`InferMode::Sparse`] (the dense
+    /// walk is unreachable, so its index is never built).
+    fused: Option<FusedIndex>,
+    /// `None` iff the mode is forced [`InferMode::Dense`].
+    sparse: Option<SparseFusedIndex>,
+    infer_mode: InferMode,
+}
+
+impl ModelSnapshot {
+    /// Freeze `tm` for serving as `version` with [`InferMode::Auto`]
+    /// selection (both engines built). Versions are chosen by the
+    /// publisher (monotonically increasing per route) and surfaced by
+    /// the coordinator's `stats` verb.
+    pub fn new(tm: MultiClassTM, version: u64) -> Self {
+        Self::with_mode(tm, version, InferMode::Auto)
+    }
+
+    /// Freeze `tm` with an explicit engine policy. A forced mode only
+    /// builds the index it can reach — republish-heavy forced-mode
+    /// routes (`tmi serve --watch --infer dense`) skip the other
+    /// engine's build cost and memory entirely.
+    pub fn with_mode(tm: MultiClassTM, version: u64, mode: InferMode) -> Self {
+        let fused = (mode != InferMode::Sparse)
+            .then(|| FusedIndex::from_machine(&tm, Maintenance::Frozen));
+        let sparse = (mode != InferMode::Dense)
+            .then(|| SparseFusedIndex::from_machine(&tm, Maintenance::Frozen));
+        ModelSnapshot {
+            version,
+            tm,
+            fused,
+            sparse,
+            infer_mode: mode,
+        }
+    }
+
+    /// Dense/sparse engine selection policy (default [`InferMode::Auto`]).
+    /// Builds any index the new mode can reach that is missing, and
+    /// drops the one it cannot.
+    pub fn with_infer_mode(mut self, mode: InferMode) -> Self {
+        self.infer_mode = mode;
+        if mode != InferMode::Sparse && self.fused.is_none() {
+            self.fused = Some(FusedIndex::from_machine(&self.tm, Maintenance::Frozen));
+        }
+        if mode != InferMode::Dense && self.sparse.is_none() {
+            self.sparse = Some(SparseFusedIndex::from_machine(&self.tm, Maintenance::Frozen));
+        }
+        match mode {
+            InferMode::Sparse => self.fused = None,
+            InferMode::Dense => self.sparse = None,
+            InferMode::Auto => {}
+        }
+        self
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn classes(&self) -> usize {
+        self.tm.classes()
+    }
+
+    pub fn n_literals(&self) -> usize {
+        self.tm.params.n_literals()
+    }
+
+    pub fn features(&self) -> usize {
+        self.tm.params.features
+    }
+
+    pub fn infer_mode(&self) -> InferMode {
+        self.infer_mode
+    }
+
+    /// The frozen machine (weights/states are immutable snapshots).
+    pub fn tm(&self) -> &MultiClassTM {
+        &self.tm
+    }
+
+    /// Fresh per-thread scratch sized for this snapshot's machine
+    /// (both engines share the clause-count dimension).
+    pub fn make_scratch(&self) -> SnapshotScratch {
+        let total = self.tm.params.total_clauses();
+        SnapshotScratch {
+            fused: FusedScratch::new(total),
+            sparse: SparseScratch::new(total),
+        }
+    }
+
+    /// Resolve the engine for a probe of samples (see
+    /// [`resolve_infer_mode`]).
+    pub fn resolve_mode<'a>(&self, probe: impl IntoIterator<Item = &'a BitVec>) -> InferMode {
+        resolve_infer_mode(self.tm.params.features, self.infer_mode, probe)
+    }
+
+    /// Score one sample against all classes with an already-resolved
+    /// engine (`out.len() == classes`). Bit-identical to
+    /// [`crate::tm::trainer::Trainer::scores_into`] for the indexed
+    /// backend.
+    pub fn score_into(
+        &self,
+        scratch: &mut SnapshotScratch,
+        mode: InferMode,
+        literals: &BitVec,
+        out: &mut [i32],
+    ) {
+        match mode {
+            InferMode::Sparse => self
+                .sparse
+                .as_ref()
+                .expect("sparse walk requested from a dense-forced snapshot")
+                .score_literals_into(&mut scratch.sparse, literals, out),
+            InferMode::Dense | InferMode::Auto => self
+                .fused
+                .as_ref()
+                .expect("dense walk requested from a sparse-forced snapshot")
+                .score_into(&mut scratch.fused, literals, out),
+        }
+    }
+
+    /// Convenience: resolve + score one sample.
+    pub fn scores_into(&self, scratch: &mut SnapshotScratch, literals: &BitVec, out: &mut [i32]) {
+        let mode = self.resolve_mode(std::iter::once(literals));
+        self.score_into(scratch, mode, literals, out);
+    }
+}
+
+/// Per-thread mutable evaluation state for scoring against a shared
+/// [`ModelSnapshot`]: one scratch per engine, both generation-stamped
+/// so reuse across samples needs no clearing.
+#[derive(Clone, Debug)]
+pub struct SnapshotScratch {
+    fused: FusedScratch,
+    sparse: SparseScratch,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::Backend;
+    use crate::tm::params::TMParams;
+    use crate::tm::trainer::Trainer;
+    use crate::util::Rng;
+
+    fn trained(seed: u64) -> Trainer {
+        let params = TMParams::new(3, 12, 16).with_seed(seed);
+        let mut tr = Trainer::new(params, Backend::Indexed);
+        let mut rng = Rng::new(seed ^ 0xabc);
+        let samples: Vec<(BitVec, usize)> = (0..150)
+            .map(|_| {
+                let y = rng.below(3) as usize;
+                let bits: Vec<bool> =
+                    (0..16).map(|k| k % 3 == y || rng.bern(0.2)).collect();
+                let mut lits = bits.clone();
+                lits.extend(bits.iter().map(|b| !b));
+                (BitVec::from_bools(&lits), y)
+            })
+            .collect();
+        for _ in 0..3 {
+            tr.train_epoch(samples.iter().map(|(l, y)| (l, *y)));
+        }
+        tr
+    }
+
+    fn complement_lits(rng: &mut Rng, features: usize, density: f64) -> BitVec {
+        let bits: Vec<bool> = (0..features).map(|_| rng.bern(density)).collect();
+        let mut lits = bits.clone();
+        lits.extend(bits.iter().map(|b| !b));
+        BitVec::from_bools(&lits)
+    }
+
+    #[test]
+    fn snapshot_scores_match_trainer_on_every_mode() {
+        let mut tr = trained(5);
+        let snap = tr.publish();
+        assert_eq!(snap.version(), 1);
+        assert_eq!(snap.classes(), 3);
+        assert_eq!(snap.n_literals(), 32);
+        let mut scratch = snap.make_scratch();
+        let mut rng = Rng::new(9);
+        for trial in 0..60 {
+            // alternate dense-ish and sparse-ish complement inputs
+            let density = if trial % 2 == 0 { 0.5 } else { 0.05 };
+            let lits = complement_lits(&mut rng, 16, density);
+            let want = tr.scores(&lits);
+            let mut got = vec![0i32; 3];
+            snap.scores_into(&mut scratch, &lits, &mut got);
+            assert_eq!(got, want, "auto, trial {trial}");
+            for mode in [InferMode::Dense, InferMode::Sparse] {
+                snap.score_into(&mut scratch, mode, &lits, &mut got);
+                assert_eq!(got, want, "{} trial {trial}", mode.name());
+            }
+        }
+    }
+
+    #[test]
+    fn forced_mode_snapshots_score_with_single_index() {
+        let mut tr = trained(8);
+        let dense_only = ModelSnapshot::with_mode(tr.tm.clone(), 9, InferMode::Dense);
+        let sparse_only = ModelSnapshot::with_mode(tr.tm.clone(), 9, InferMode::Sparse);
+        assert_eq!(dense_only.infer_mode(), InferMode::Dense);
+        assert_eq!(sparse_only.infer_mode(), InferMode::Sparse);
+        let mut ds = dense_only.make_scratch();
+        let mut ss = sparse_only.make_scratch();
+        let mut rng = Rng::new(13);
+        for _ in 0..20 {
+            let lits = complement_lits(&mut rng, 16, 0.3);
+            let want = tr.scores(&lits);
+            let mut got = vec![0i32; 3];
+            dense_only.scores_into(&mut ds, &lits, &mut got);
+            assert_eq!(got, want, "dense-forced");
+            sparse_only.scores_into(&mut ss, &lits, &mut got);
+            assert_eq!(got, want, "sparse-forced");
+        }
+        // switching policy on an existing snapshot builds what it needs
+        let back_to_auto = sparse_only.with_infer_mode(InferMode::Auto);
+        let mut scratch = back_to_auto.make_scratch();
+        let lits = complement_lits(&mut rng, 16, 0.6); // dense input
+        let want = tr.scores(&lits);
+        let mut got = vec![0i32; 3];
+        back_to_auto.scores_into(&mut scratch, &lits, &mut got);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn resolve_mode_follows_density_and_structure() {
+        let mut tr = trained(6);
+        let snap = tr.publish();
+        let mut rng = Rng::new(11);
+        let sparse_in = complement_lits(&mut rng, 16, 0.03);
+        let dense_in = complement_lits(&mut rng, 16, 0.6);
+        assert_eq!(snap.resolve_mode([&sparse_in]), InferMode::Sparse);
+        assert_eq!(snap.resolve_mode([&dense_in]), InferMode::Dense);
+        // non-complement input always resolves dense
+        let raw = BitVec::ones(32);
+        assert_eq!(snap.resolve_mode([&raw]), InferMode::Dense);
+        // empty probe resolves dense
+        assert_eq!(
+            snap.resolve_mode(std::iter::empty::<&BitVec>()),
+            InferMode::Dense
+        );
+        // forced mode passes through
+        let forced = ModelSnapshot::new(tr.tm.clone(), 7).with_infer_mode(InferMode::Sparse);
+        assert_eq!(forced.resolve_mode([&dense_in]), InferMode::Sparse);
+        assert_eq!(forced.version(), 7);
+    }
+
+    #[test]
+    fn publish_versions_are_monotonic_and_frozen() {
+        let mut tr = trained(7);
+        let v1 = tr.publish();
+        // keep training: the published snapshot must not move
+        let mut rng = Rng::new(21);
+        let probe = complement_lits(&mut rng, 16, 0.4);
+        let mut scratch = v1.make_scratch();
+        let mut before = vec![0i32; 3];
+        v1.scores_into(&mut scratch, &probe, &mut before);
+        let more: Vec<(BitVec, usize)> = (0..80)
+            .map(|_| (complement_lits(&mut rng, 16, 0.3), rng.below(3) as usize))
+            .collect();
+        tr.train_epoch(more.iter().map(|(l, y)| (l, *y)));
+        let v2 = tr.publish();
+        assert_eq!(v1.version(), 1);
+        assert_eq!(v2.version(), 2);
+        let mut after = vec![0i32; 3];
+        v1.scores_into(&mut scratch, &probe, &mut after);
+        assert_eq!(before, after, "published snapshot drifted under training");
+        // and the new snapshot tracks the trained machine
+        let mut scratch2 = v2.make_scratch();
+        let mut got = vec![0i32; 3];
+        v2.scores_into(&mut scratch2, &probe, &mut got);
+        assert_eq!(got, tr.scores(&probe));
+    }
+}

@@ -100,6 +100,48 @@ impl std::str::FromStr for InferMode {
 /// the paper calls sparse (IMDb BoW sits at 0.02–0.05).
 pub const SPARSE_DENSITY_THRESHOLD: f64 = 0.2;
 
+/// Resolve [`InferMode::Auto`] against a probe of batch samples: sparse
+/// iff every probed sample is a complement-structured `[x, ¬x]` literal
+/// vector over `features` features and the probe's mean feature density
+/// is below [`SPARSE_DENSITY_THRESHOLD`]. Forced modes pass through
+/// unchanged, and an empty probe resolves dense.
+///
+/// At most 32 samples are probed, keeping selection O(1) per batch; the
+/// complement proof per sample is O(o/64), negligible next to either
+/// walk. Shared by [`crate::tm::trainer::Trainer`] and the serving
+/// snapshot ([`crate::engine::snapshot::ModelSnapshot`]) so both pick
+/// the same engine for the same inputs.
+pub fn resolve_infer_mode<'a>(
+    features: usize,
+    mode: InferMode,
+    probe: impl IntoIterator<Item = &'a BitVec>,
+) -> InferMode {
+    match mode {
+        InferMode::Dense => InferMode::Dense,
+        InferMode::Sparse => InferMode::Sparse,
+        InferMode::Auto => {
+            const PROBE: usize = 32;
+            let mut n = 0usize;
+            let mut total = 0.0;
+            for literals in probe.into_iter().take(PROBE) {
+                if features == 0
+                    || literals.len() != 2 * features
+                    || !literals.halves_complement()
+                {
+                    return InferMode::Dense;
+                }
+                total += literals.count_ones_prefix(features) as f64 / features as f64;
+                n += 1;
+            }
+            if n > 0 && total / n as f64 < SPARSE_DENSITY_THRESHOLD {
+                InferMode::Sparse
+            } else {
+                InferMode::Dense
+            }
+        }
+    }
+}
+
 /// Per-global-clause constants read on the delta hot path.
 #[derive(Clone, Copy, Debug)]
 struct SparseMeta {

@@ -33,8 +33,10 @@
 //!   bag-of-words).
 //! * [`runtime`] — PJRT executor loading AOT-compiled XLA artifacts
 //!   produced by `python/compile/aot.py` (Layer 1/2 of the stack).
-//! * [`coordinator`] — tokio serving layer: router, dynamic batcher,
-//!   CPU-indexed and XLA backends, metrics.
+//! * [`coordinator`] — serving layer (std::thread + condvar queues):
+//!   hot-swap snapshot registry, bounded queues with load shedding,
+//!   dynamic batcher workers, CPU-indexed and XLA backends, metrics,
+//!   TCP front end, and the `tmi loadgen` load generator.
 //! * [`bench_harness`] — regenerates every table and figure of the
 //!   paper's evaluation section.
 //! * [`util`] — deterministic RNG, bit vectors, a compact hash map, and

@@ -5,7 +5,9 @@
 //! tmi eval        evaluate a saved model
 //! tmi table       regenerate paper Table 1/2/3 (+ the figure CSVs)
 //! tmi work-ratio  §3 Remarks: measured work-ratio statistics
-//! tmi serve       serving coordinator (CPU and/or XLA backends) over TCP
+//! tmi serve       serving coordinator (CPU and/or XLA backends) over TCP:
+//!                 hot-swap snapshot routes, bounded queues, load shedding
+//! tmi loadgen     open/closed-loop TCP load generator -> BENCH_serve.json
 //! tmi info        PJRT platform + artifact manifest
 //! ```
 //!
@@ -21,12 +23,14 @@ use anyhow::{bail, Context, Result};
 
 use tsetlin_index::bench_harness::figures::write_figures;
 use tsetlin_index::bench_harness::tables::{run_table, Scale, TableId};
-use tsetlin_index::coordinator::server::serve_tcp;
-use tsetlin_index::coordinator::{BatchPolicy, Coordinator, CpuBackend, XlaBackend};
+use tsetlin_index::coordinator::server::serve_tcp_with;
+use tsetlin_index::coordinator::{
+    BatchPolicy, Coordinator, CpuBackend, LoadgenConfig, RouteConfig, ServeOptions, XlaBackend,
+};
 use tsetlin_index::data::mnist::Split;
 use tsetlin_index::data::synth::ImageStyle;
 use tsetlin_index::data::{imdb, mnist, Dataset};
-use tsetlin_index::engine::{argmax, InferMode, SPARSE_DENSITY_THRESHOLD};
+use tsetlin_index::engine::{argmax, InferMode, ModelSnapshot, SPARSE_DENSITY_THRESHOLD};
 use tsetlin_index::eval::Backend;
 use tsetlin_index::parallel::{resolve_threads, ParallelTrainer, DEFAULT_STALE_WINDOW};
 use tsetlin_index::runtime::{Manifest, Runtime};
@@ -407,21 +411,60 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .get_or("backend", "indexed")
         .parse()
         .map_err(anyhow::Error::msg)?;
+    let mut workers: usize = args.parse_or("workers", 1)?;
+    let queue_cap: usize = args.parse_or("queue-cap", 1024)?;
+    let infer_mode = parse_infer_mode(args)?;
     let mut coord = Coordinator::new();
-    coord.register(
-        "cpu",
-        Box::new(CpuBackend::new_parallel(
-            tm.clone(),
-            backend,
-            args.parse_or("parallel", 1)?,
-        )),
-        BatchPolicy::default(),
-    );
+    // The indexed backend serves a hot-swappable snapshot route: N
+    // batcher workers over one bounded queue, scoring an immutable
+    // versioned ModelSnapshot. Ablation backends (naive/bitpacked)
+    // keep the single-worker factory route through CpuBackend so A/B
+    // comparisons still measure the evaluator, not the route plumbing.
+    let snapshot_route = backend == Backend::Indexed;
+    if snapshot_route && args.get("workers").is_none() {
+        // legacy contract: `--parallel N` used to parallelize the
+        // indexed route; map it to workers rather than silently
+        // serving single-threaded
+        let parallel: usize = args.parse_or("parallel", 1)?;
+        if parallel > 1 {
+            eprintln!("serve: mapping legacy --parallel {parallel} to --workers {parallel}");
+            workers = parallel;
+        }
+    }
+    if snapshot_route {
+        let snap = Arc::new(ModelSnapshot::with_mode(tm.clone(), 1, infer_mode));
+        coord.register_model(
+            "cpu",
+            snap,
+            RouteConfig {
+                policy: BatchPolicy::default(),
+                workers,
+                queue_cap,
+            },
+        );
+    } else {
+        if args.has_flag("watch") {
+            bail!("--watch requires the indexed backend (hot swap serves snapshots)");
+        }
+        coord.register_with_config(
+            "cpu",
+            {
+                let tm = tm.clone();
+                let parallel: usize = args.parse_or("parallel", 1)?;
+                move || Ok(Box::new(CpuBackend::new_parallel(tm, backend, parallel)) as _)
+            },
+            RouteConfig {
+                policy: BatchPolicy::default(),
+                workers: 1,
+                queue_cap,
+            },
+        )?;
+    }
     if let Some(artifacts) = args.get("artifacts") {
         let artifacts = artifacts.to_string();
         let dense = DenseModel::from_tm(&tm);
         let batch: usize = args.parse_or("xla-batch", 32)?;
-        let registered = coord.register_with(
+        let registered = coord.register_with_config(
             "xla",
             move || {
                 let manifest = Manifest::load(&artifacts)?;
@@ -438,9 +481,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 let exe = rt.load_artifact(&manifest.hlo_path(&meta), meta)?;
                 Ok(Box::new(XlaBackend::new(rt, exe, &dense)?) as _)
             },
-            BatchPolicy {
-                max_batch: batch,
-                max_wait: std::time::Duration::from_millis(2),
+            RouteConfig {
+                policy: BatchPolicy {
+                    max_batch: batch,
+                    max_wait: std::time::Duration::from_millis(2),
+                },
+                workers: 1,
+                queue_cap,
             },
         );
         match registered {
@@ -452,12 +499,148 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let listener =
         std::net::TcpListener::bind(&listen).with_context(|| format!("binding {listen}"))?;
     eprintln!(
-        "serving models {:?} on {listen} (protocol: '<model> <feature-bits>\\n')",
-        coord.models()
+        "serving models {:?} on {listen} ({} worker(s)/route, queue bound {}; \
+         protocol: 'infer <model> <feature-bits>' / 'stats <model>')",
+        coord.models(),
+        workers.max(1),
+        queue_cap,
     );
     let handle = coord.handle();
+    if args.has_flag("watch") {
+        let interval =
+            std::time::Duration::from_millis(args.parse_or("watch-interval-ms", 500u64)?);
+        let watch_handle = handle.clone();
+        let path = model_path.clone();
+        std::thread::Builder::new()
+            .name("tmi-watch".into())
+            .spawn(move || watch_model_file(&path, watch_handle, interval, infer_mode))
+            .expect("spawning watch thread");
+        eprintln!(
+            "watching {model_path} (poll {}ms): republishing 'cpu' on change",
+            interval.as_millis()
+        );
+    }
     let stop = Arc::new(AtomicBool::new(false));
-    serve_tcp(listener, handle, stop)?;
+    serve_tcp_with(
+        listener,
+        handle,
+        stop,
+        ServeOptions {
+            max_conns: args.parse_or("max-conns", 256)?,
+        },
+    )?;
+    Ok(())
+}
+
+/// File stamp used by `--watch` to detect republishes: (mtime, size).
+fn model_file_stamp(path: &str) -> Option<(std::time::SystemTime, u64)> {
+    let meta = std::fs::metadata(path).ok()?;
+    Some((meta.modified().ok()?, meta.len()))
+}
+
+/// Poll `path`; on change, reload the model and hot-swap route `cpu`
+/// to the next version (keeping the route's configured engine
+/// selection policy). `io::save` writes atomically (tmp + rename),
+/// so a reload never sees a torn file; a failed load (e.g. an external
+/// writer without the atomic protocol) keeps the old version serving.
+fn watch_model_file(
+    path: &str,
+    handle: tsetlin_index::coordinator::CoordinatorHandle,
+    interval: std::time::Duration,
+    infer_mode: InferMode,
+) {
+    let mut last = model_file_stamp(path);
+    let mut version = 1u64; // registration published v1
+    loop {
+        std::thread::sleep(interval);
+        let cur = model_file_stamp(path);
+        if cur.is_none() || cur == last {
+            continue;
+        }
+        match io::load(path) {
+            Ok(tm) => {
+                version += 1;
+                let snap = Arc::new(ModelSnapshot::with_mode(tm, version, infer_mode));
+                match handle.swap("cpu", snap) {
+                    Ok(retired) => {
+                        eprintln!("watch: hot-swapped 'cpu' v{retired} -> v{version}")
+                    }
+                    Err(e) => {
+                        version -= 1;
+                        eprintln!("watch: swap refused ({e}); keeping v{version}");
+                    }
+                }
+                last = cur;
+            }
+            Err(e) => {
+                // transient (mid-write by a non-atomic writer) or real
+                // corruption: keep serving the old version either way
+                eprintln!("watch: reload of {path} failed ({e:#}); keeping v{version}");
+            }
+        }
+    }
+}
+
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let cfg = LoadgenConfig {
+        addr: args.get_or("addr", "127.0.0.1:7070"),
+        model: args.get_or("model", "cpu"),
+        connections: args.parse_or("connections", 4)?,
+        rate: args.parse_or("rate", 0.0)?,
+        duration: std::time::Duration::from_secs_f64(args.parse_or("duration", 10.0)?),
+        features: args
+            .get("features")
+            .context("--features required (the model's raw feature width)")?
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad value for --features"))?,
+        seed: args.parse_or("seed", 42)?,
+    };
+    eprintln!(
+        "loadgen: {} loop, {} connection(s){} for {:.1}s against {} (model '{}')",
+        if cfg.rate > 0.0 { "open" } else { "closed" },
+        cfg.connections,
+        if cfg.rate > 0.0 {
+            format!(" at {:.0} req/s total", cfg.rate)
+        } else {
+            String::new()
+        },
+        cfg.duration.as_secs_f64(),
+        cfg.addr,
+        cfg.model,
+    );
+    let report = tsetlin_index::coordinator::loadgen::run(&cfg)?;
+    println!("{}", report.summary());
+    if let Some(stats) = &report.server_stats {
+        println!("server: {stats}");
+    }
+    let out = args.get_or("out", "BENCH_serve.json");
+    tsetlin_index::bench_harness::report::write_json(Path::new(&out), &report.to_json(&cfg))?;
+    eprintln!("wrote {out}");
+    if let Some(min_ok) = args.get("assert-min-ok") {
+        let min_ok: u64 = min_ok
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad value for --assert-min-ok"))?;
+        anyhow::ensure!(
+            report.ok >= min_ok,
+            "completed requests {} below floor {min_ok}",
+            report.ok
+        );
+    }
+    if let Some(max_shed) = args.get("assert-max-shed-rate") {
+        let max_shed: f64 = max_shed
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad value for --assert-max-shed-rate"))?;
+        anyhow::ensure!(
+            report.shed_rate <= max_shed,
+            "shed rate {:.4} above ceiling {max_shed}",
+            report.shed_rate
+        );
+    }
+    anyhow::ensure!(
+        report.errors == 0,
+        "{} requests failed with non-overload errors",
+        report.errors
+    );
     Ok(())
 }
 
@@ -482,7 +665,7 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: tmi <train|eval|table|work-ratio|serve|info> [--key value ...]
+const USAGE: &str = "usage: tmi <train|eval|table|work-ratio|serve|loadgen|info> [--key value ...]
   train      --dataset mnist|fashion|imdb [--levels N|--features N] --clauses N
              --epochs N [--backend naive|bitpacked|indexed] [--out model.tm]
              [--samples N] [--data-dir DIR] [--threshold T] [--s S] [--seed N]
@@ -502,8 +685,22 @@ const USAGE: &str = "usage: tmi <train|eval|table|work-ratio|serve|info> [--key 
   table      --id 1|2|3 [--scale quick|standard|paper] [--out-dir results/]
   work-ratio --dataset ... --clauses N [--epochs N]
   serve      --model model.tm [--artifacts artifacts/] [--listen host:port]
-             [--parallel N]  (inference worker threads sharding batches over
-                              one shared class-fused index; indexed backend)
+             [--workers N]    (batcher workers sharing the route queue;
+                               indexed backend, hot-swappable snapshot route)
+             [--queue-cap N]  (admission bound per route; beyond it requests
+                               are shed with 'err overloaded'; default 1024)
+             [--max-conns N]  (TCP connection cap, reaped pool; default 256)
+             [--watch]        (poll --model for changes and hot-swap the
+                               'cpu' route to the new version, zero downtime)
+             [--watch-interval-ms N]   (poll period, default 500)
+             [--infer auto|dense|sparse]
+             [--backend B] [--parallel N]  (ablation backends serve through a
+                               single-worker factory route; no hot swap)
+  loadgen    --features N (model's raw feature width) [--addr host:port]
+             [--model cpu] [--connections N] [--duration SECS]
+             [--rate R]   (total offered req/s, open loop; 0 = closed loop)
+             [--out BENCH_serve.json] [--seed N]
+             [--assert-min-ok N] [--assert-max-shed-rate F]   (CI gates)
   info       [--artifacts artifacts/]";
 
 fn main() -> Result<()> {
@@ -523,6 +720,7 @@ fn main() -> Result<()> {
         "table" => cmd_table(&args),
         "work-ratio" => cmd_work_ratio(&args),
         "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
         "info" => cmd_info(&args),
         other => {
             eprintln!("unknown command '{other}'\n{USAGE}");

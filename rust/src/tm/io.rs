@@ -80,9 +80,22 @@ pub fn load_from(r: &mut impl Read) -> Result<MultiClassTM> {
     Ok(tm)
 }
 
+/// Save atomically: write to a `.tmp` sibling, then rename over
+/// `path`. A concurrent reader — `tmi serve --watch` re-publishing on
+/// model-file change — therefore never observes a torn, half-written
+/// model; it sees either the old file or the complete new one.
 pub fn save(tm: &MultiClassTM, path: impl AsRef<Path>) -> Result<()> {
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    save_to(tm, &mut f)
+    let path = path.as_ref();
+    let mut tmp_name = path.as_os_str().to_owned();
+    tmp_name.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp_name);
+    {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        save_to(tm, &mut f)?;
+        f.flush()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
 }
 
 pub fn load(path: impl AsRef<Path>) -> Result<MultiClassTM> {
@@ -293,6 +306,25 @@ mod tests {
             assert_eq!(a.bank(c).states(), b.bank(c).states(), "class {c}");
             assert!(b.bank(c).check_counts());
         }
+    }
+
+    #[test]
+    fn save_is_atomic_and_roundtrips_via_path() {
+        let tm = trained_machine();
+        let path = std::env::temp_dir().join(format!("tmi-io-{}.tm", std::process::id()));
+        save(&tm, &path).unwrap();
+        // the temp sibling must be gone (renamed into place)
+        let mut tmp_name = path.as_os_str().to_owned();
+        tmp_name.push(".tmp");
+        assert!(!std::path::PathBuf::from(tmp_name).exists());
+        let tm2 = load(&path).unwrap();
+        for i in 0..tm.classes() {
+            assert_eq!(tm.bank(i).states(), tm2.bank(i).states(), "class {i}");
+        }
+        // overwrite in place (the --watch republish cycle)
+        save(&tm2, &path).unwrap();
+        assert!(load(&path).is_ok());
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

@@ -26,9 +26,7 @@
 //! backend comparisons still measure what they claim to. All paths are
 //! bit-identical.
 
-use crate::engine::{
-    argmax, BatchScorer, FusedEngine, InferMode, SparseEngine, SPARSE_DENSITY_THRESHOLD,
-};
+use crate::engine::{argmax, BatchScorer, FusedEngine, InferMode, ModelSnapshot, SparseEngine};
 use crate::eval::{Backend, Evaluator};
 use crate::index::{IndexStats, IndexedEval};
 use crate::tm::classifier::MultiClassTM;
@@ -118,6 +116,8 @@ pub struct Trainer {
     infer_threads: usize,
     /// Reusable per-class score buffer for `predict`.
     class_scratch: Vec<i32>,
+    /// Serving snapshots published so far (versions count up from 1).
+    publish_seq: u64,
 }
 
 impl Trainer {
@@ -143,6 +143,7 @@ impl Trainer {
             infer_mode: InferMode::Auto,
             infer_threads: 1,
             class_scratch: Vec::new(),
+            publish_seq: 0,
         }
     }
 
@@ -173,6 +174,7 @@ impl Trainer {
             infer_mode: InferMode::Auto,
             infer_threads: 1,
             class_scratch: Vec::new(),
+            publish_seq: 0,
         }
     }
 
@@ -258,47 +260,29 @@ impl Trainer {
         self.sparse.as_mut().expect("sparse engine present")
     }
 
-    /// Feature density of a complement-structured `[x, ¬x]` literal
-    /// vector, or `None` if the vector is not complement-structured
-    /// (the sparse walk requires `¬x = !x`; the word-parallel proof is
-    /// O(o/64), negligible next to either walk).
-    fn sparse_density(&self, literals: &BitVec) -> Option<f64> {
-        let o = self.tm.params.features;
-        if o == 0 || literals.len() != 2 * o || !literals.halves_complement() {
-            return None;
-        }
-        Some(literals.count_ones_prefix(o) as f64 / o as f64)
-    }
-
     /// Resolve [`InferMode::Auto`] against a batch: sparse iff every
     /// probed sample is complement-structured and the probe's mean
-    /// feature density is below [`SPARSE_DENSITY_THRESHOLD`]. Forced
-    /// modes pass through unchanged.
+    /// feature density is below
+    /// [`crate::engine::SPARSE_DENSITY_THRESHOLD`]. Forced modes pass
+    /// through unchanged (see [`crate::engine::resolve_infer_mode`],
+    /// shared with the serving snapshot).
     pub fn resolve_infer_mode(&self, batch: &[BitVec]) -> InferMode {
-        match self.infer_mode {
-            InferMode::Dense => InferMode::Dense,
-            InferMode::Sparse => InferMode::Sparse,
-            InferMode::Auto => {
-                // a small prefix probe keeps selection O(1) per batch
-                const PROBE: usize = 32;
-                let n = batch.len().min(PROBE);
-                if n == 0 {
-                    return InferMode::Dense;
-                }
-                let mut total = 0.0;
-                for literals in &batch[..n] {
-                    match self.sparse_density(literals) {
-                        Some(d) => total += d,
-                        None => return InferMode::Dense,
-                    }
-                }
-                if total / n as f64 < SPARSE_DENSITY_THRESHOLD {
-                    InferMode::Sparse
-                } else {
-                    InferMode::Dense
-                }
-            }
-        }
+        crate::engine::resolve_infer_mode(self.tm.params.features, self.infer_mode, batch)
+    }
+
+    /// Freeze the current machine into an immutable, versioned serving
+    /// snapshot ([`ModelSnapshot`]): a clone of the banks plus both
+    /// inference engines' read-only indexes, ready for
+    /// [`crate::coordinator::Coordinator::swap`]. Versions count up
+    /// from 1 per trainer — the train-while-serving loop is
+    /// `train_epoch(..); coordinator.swap(model, trainer.publish())`.
+    pub fn publish(&mut self) -> std::sync::Arc<ModelSnapshot> {
+        self.publish_seq += 1;
+        std::sync::Arc::new(ModelSnapshot::with_mode(
+            self.tm.clone(),
+            self.publish_seq,
+            self.infer_mode,
+        ))
     }
 
     /// One full update for a labelled sample: Type I/II on the target

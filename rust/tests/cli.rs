@@ -174,3 +174,87 @@ fn eval_missing_model_errors() {
         .unwrap();
     assert!(!out.status.success());
 }
+
+#[test]
+fn serve_then_loadgen_writes_bench_json() {
+    use std::io::{BufRead, BufReader, Write};
+
+    let model = std::env::temp_dir().join(format!("tmi-cli-serve-{}.tm", std::process::id()));
+    let out = tmi()
+        .args([
+            "train", "--dataset", "mnist", "--samples", "120", "--clauses", "80",
+            "--epochs", "1", "--out", model.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "train failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    // grab a free port, release it, hand it to the server (single CI
+    // process: the window for someone else to steal it is negligible)
+    let port = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().port()
+    };
+    let addr = format!("127.0.0.1:{port}");
+    let mut server = tmi()
+        .args([
+            "serve", "--model", model.to_str().unwrap(), "--listen", &addr,
+            "--workers", "2", "--queue-cap", "64",
+        ])
+        .spawn()
+        .unwrap();
+
+    // wait until the server accepts and answers a stats line
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    let mut ready = false;
+    while std::time::Instant::now() < deadline {
+        if let Ok(conn) = std::net::TcpStream::connect(&addr) {
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            let mut conn = conn;
+            if conn.write_all(b"stats cpu\n").is_ok() {
+                let mut reply = String::new();
+                if reader.read_line(&mut reply).is_ok() && reply.starts_with("ok model=cpu") {
+                    assert!(reply.contains("version=1"), "stats: {reply}");
+                    ready = true;
+                    break;
+                }
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    assert!(ready, "server never became ready on {addr}");
+
+    let bench = std::env::temp_dir().join(format!(
+        "tmi-cli-bench-serve-{}.json",
+        std::process::id()
+    ));
+    let out = tmi()
+        .args([
+            "loadgen", "--addr", &addr, "--model", "cpu", "--features", "784",
+            "--connections", "2", "--duration", "1", "--out", bench.to_str().unwrap(),
+            "--assert-min-ok", "1", "--assert-max-shed-rate", "1.0",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "loadgen failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("closed loop"), "stdout: {stdout}");
+
+    let text = std::fs::read_to_string(&bench).expect("BENCH_serve.json written");
+    let parsed = tsetlin_index::util::Json::parse(&text).expect("well-formed bench json");
+    assert_eq!(parsed.get("bench").unwrap().as_str(), Some("serve_load"));
+    assert!(parsed.get("ok").unwrap().as_usize().unwrap() >= 1);
+
+    server.kill().unwrap();
+    let _ = server.wait();
+    std::fs::remove_file(&model).unwrap();
+    std::fs::remove_file(&bench).unwrap();
+}

@@ -1,19 +1,24 @@
-//! Serving integration: train → persist → reload → coordinate → TCP.
+//! Serving integration: train → persist → reload → coordinate → TCP —
+//! plus the production-hardening criteria: overload shedding, hot swap
+//! under live traffic, and the loadgen → `BENCH_serve.json` pipeline.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use tsetlin_index::coordinator::server::serve_tcp;
-use tsetlin_index::coordinator::{BatchPolicy, Coordinator, CpuBackend};
+use tsetlin_index::coordinator::{
+    loadgen, BatchPolicy, Coordinator, CpuBackend, LoadgenConfig, RouteConfig,
+};
 use tsetlin_index::data::synth::{image_dataset, ImageStyle};
 use tsetlin_index::data::Dataset;
 use tsetlin_index::eval::Backend;
 use tsetlin_index::tm::io;
 use tsetlin_index::tm::params::TMParams;
 use tsetlin_index::tm::trainer::Trainer;
-use tsetlin_index::util::Rng;
+use tsetlin_index::util::{BitVec, Json, Rng};
 
 fn train_and_save(path: &std::path::Path) -> (Dataset, f64) {
     let all = image_dataset(ImageStyle::Digits, 4, 700, 1, 55);
@@ -105,4 +110,302 @@ fn train_save_reload_serve_over_tcp() {
     server.join().unwrap().unwrap();
     coord.shutdown();
     std::fs::remove_file(&model_path).unwrap();
+}
+
+/// Small random-but-learnable trainer for the hardening tests.
+fn quick_trainer(seed: u64) -> Trainer {
+    let params = TMParams::new(3, 16, 24).with_seed(seed).with_threshold(12);
+    let mut tr = Trainer::new(params, Backend::Indexed);
+    let mut rng = Rng::new(seed ^ 0x5eed);
+    let samples: Vec<(BitVec, usize)> = (0..250)
+        .map(|_| {
+            let y = rng.below(3) as usize;
+            let bits: Vec<bool> = (0..24).map(|k| k % 3 == y || rng.bern(0.25)).collect();
+            let mut lits = bits.clone();
+            lits.extend(bits.iter().map(|b| !b));
+            (BitVec::from_bools(&lits), y)
+        })
+        .collect();
+    for _ in 0..3 {
+        tr.train_epoch(samples.iter().map(|(l, y)| (l, *y)));
+    }
+    tr
+}
+
+fn random_probe(rng: &mut Rng, features: usize) -> BitVec {
+    let bits: Vec<bool> = (0..features).map(|_| rng.bern(0.4)).collect();
+    let mut lits = bits.clone();
+    lits.extend(bits.iter().map(|b| !b));
+    BitVec::from_bools(&lits)
+}
+
+/// A backend slow enough to saturate a tiny queue: drives the
+/// overload-shedding criterion over real TCP.
+struct SlowBackend;
+
+impl tsetlin_index::coordinator::ServeBackend for SlowBackend {
+    fn infer_batch(
+        &mut self,
+        batch: &[BitVec],
+    ) -> anyhow::Result<Vec<tsetlin_index::coordinator::backend::Scored>> {
+        std::thread::sleep(Duration::from_millis(4));
+        Ok(batch
+            .iter()
+            .map(|_| tsetlin_index::coordinator::backend::Scored {
+                prediction: 0,
+                scores: vec![0, 0],
+            })
+            .collect())
+    }
+    fn n_literals(&self) -> usize {
+        8
+    }
+    fn name(&self) -> String {
+        "slow".into()
+    }
+}
+
+/// Under sustained overload the server sheds with `err overloaded`
+/// instead of queueing unboundedly — and keeps serving afterwards.
+#[test]
+fn overload_sheds_over_tcp_instead_of_queueing() {
+    let mut coord = Coordinator::new();
+    coord
+        .register_with_config(
+            "slow",
+            || Ok(Box::new(SlowBackend) as _),
+            RouteConfig {
+                workers: 1,
+                queue_cap: 2,
+                policy: BatchPolicy {
+                    max_batch: 1,
+                    max_wait: Duration::ZERO,
+                },
+            },
+        )
+        .unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let handle = coord.handle();
+    let server = std::thread::spawn(move || serve_tcp(listener, handle, stop2));
+
+    let clients: Vec<_> = (0..12)
+        .map(|_| {
+            std::thread::spawn(move || {
+                let conn = TcpStream::connect(addr).unwrap();
+                let mut reader = BufReader::new(conn.try_clone().unwrap());
+                let mut conn = conn;
+                let (mut ok, mut shed) = (0u64, 0u64);
+                for _ in 0..8 {
+                    conn.write_all(b"infer slow 0000\n").unwrap();
+                    let mut reply = String::new();
+                    reader.read_line(&mut reply).unwrap();
+                    if reply.starts_with("ok ") {
+                        ok += 1;
+                    } else if reply.starts_with("err overloaded") {
+                        shed += 1;
+                    } else {
+                        panic!("unexpected reply: {reply}");
+                    }
+                }
+                (ok, shed)
+            })
+        })
+        .collect();
+    let (mut ok, mut shed) = (0u64, 0u64);
+    for c in clients {
+        let (o, s) = c.join().unwrap();
+        ok += o;
+        shed += s;
+    }
+    assert_eq!(ok + shed, 96, "every request must be answered");
+    assert!(shed > 0, "12 conns vs queue_cap=2 must shed");
+    assert!(ok > 0, "admitted requests must complete");
+
+    // the stats verb agrees with the client-side tallies and the
+    // server still answers after the storm
+    let mut conn = TcpStream::connect(addr).unwrap();
+    conn.write_all(b"stats slow\n").unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    assert!(reply.starts_with("ok model=slow"), "reply: {reply}");
+    assert!(reply.contains(&format!("shed={shed}")), "reply: {reply}");
+    assert!(reply.contains(&format!("completed={ok}")), "reply: {reply}");
+
+    stop.store(true, Ordering::Relaxed);
+    drop(conn);
+    drop(reader);
+    server.join().unwrap().unwrap();
+    coord.shutdown();
+}
+
+/// A swap mid-traffic never drops, tears, or mis-scores a request:
+/// every reply matches one of the two published snapshots bit-exactly,
+/// traffic flows on both sides of the swap, and after the swap the new
+/// version serves.
+#[test]
+fn hot_swap_mid_traffic_is_atomic_and_lossless() {
+    let mut tr_a = quick_trainer(11);
+    let mut tr_b = quick_trainer(29);
+    let mut rng = Rng::new(77);
+    let probes: Vec<BitVec> = (0..24).map(|_| random_probe(&mut rng, 24)).collect();
+    let expected_a: Vec<Vec<i32>> = probes.iter().map(|p| tr_a.scores(p)).collect();
+    let expected_b: Vec<Vec<i32>> = probes.iter().map(|p| tr_b.scores(p)).collect();
+    assert!(
+        expected_a != expected_b,
+        "the two models must be distinguishable for this test to bite"
+    );
+
+    let mut coord = Coordinator::new();
+    coord.register_model(
+        "m",
+        tr_a.publish(),
+        RouteConfig {
+            workers: 3,
+            queue_cap: 4096,
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_micros(100),
+            },
+        },
+    );
+    let h = coord.handle();
+    let run = Arc::new(AtomicBool::new(true));
+    let clients: Vec<_> = (0..6)
+        .map(|c| {
+            let h = h.clone();
+            let run = Arc::clone(&run);
+            let probes = probes.clone();
+            let expected_a = expected_a.clone();
+            let expected_b = expected_b.clone();
+            std::thread::spawn(move || {
+                let (mut a_hits, mut b_hits) = (0u64, 0u64);
+                let mut i = c; // stagger probe phase across clients
+                while run.load(Ordering::Relaxed) {
+                    let k = i % probes.len();
+                    i += 1;
+                    let p = h.infer("m", probes[k].clone()).expect("no request may fail");
+                    let is_a = p.scores == expected_a[k];
+                    let is_b = p.scores == expected_b[k];
+                    assert!(
+                        is_a || is_b,
+                        "torn reply on probe {k}: {:?} matches neither snapshot",
+                        p.scores
+                    );
+                    // count only version-exclusive matches: probes where
+                    // the two snapshots agree prove nothing about which
+                    // version served
+                    if is_a && !is_b {
+                        a_hits += 1;
+                    }
+                    if is_b && !is_a {
+                        b_hits += 1;
+                    }
+                }
+                (a_hits, b_hits)
+            })
+        })
+        .collect();
+
+    std::thread::sleep(Duration::from_millis(60));
+    let retired = coord.swap("m", tr_b.publish()).unwrap();
+    assert_eq!(retired, 1);
+    std::thread::sleep(Duration::from_millis(60));
+    run.store(false, Ordering::Relaxed);
+    let mut only_a = 0u64; // replies matching a exclusively, resp. b
+    let mut only_b = 0u64;
+    for c in clients {
+        let (a, b) = c.join().unwrap();
+        only_a += a;
+        only_b += b;
+    }
+    // traffic flowed on both sides of the swap
+    assert!(only_a > 0, "no pre-swap traffic observed");
+    assert!(only_b > 0, "no post-swap traffic observed");
+
+    // after the swap, fresh requests serve the new snapshot exactly
+    for (k, p) in probes.iter().enumerate() {
+        let got = h.infer("m", p.clone()).unwrap();
+        assert_eq!(got.scores, expected_b[k], "post-swap probe {k}");
+    }
+    let st = coord.stats("m").unwrap();
+    assert_eq!(st.version, Some(1)); // tr_b's first publish
+    assert_eq!(st.generation, Some(1)); // ...but the route counted the swap
+    assert_eq!(st.metrics.errors, 0);
+    coord.shutdown();
+}
+
+/// `tmi loadgen`'s engine drives a live TCP server and produces a
+/// well-formed `BENCH_serve.json` in both loop disciplines.
+#[test]
+fn loadgen_writes_wellformed_bench_json() {
+    let mut tr = quick_trainer(5);
+    let mut coord = Coordinator::new();
+    coord.register_model(
+        "cpu",
+        tr.publish(),
+        RouteConfig {
+            workers: 2,
+            queue_cap: 256,
+            policy: BatchPolicy::default(),
+        },
+    );
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let handle = coord.handle();
+    let server = std::thread::spawn(move || serve_tcp(listener, handle, stop2));
+
+    for (rate, mode) in [(0.0, "closed"), (400.0, "open")] {
+        let cfg = LoadgenConfig {
+            addr: addr.to_string(),
+            model: "cpu".into(),
+            connections: 2,
+            rate,
+            duration: Duration::from_millis(400),
+            features: 24,
+            seed: 3,
+        };
+        let report = loadgen::run(&cfg).unwrap();
+        assert_eq!(report.mode, mode);
+        assert!(report.sent > 0, "{mode}: nothing sent");
+        assert!(report.ok > 0, "{mode}: nothing served");
+        assert_eq!(report.errors, 0, "{mode}: unexpected errors");
+        assert!(report.throughput_rps > 0.0);
+        assert!(report.p50_us <= report.p95_us && report.p95_us <= report.p99_us);
+        // shed-rate sanity: this load is far below capacity
+        assert!(
+            report.shed_rate < 0.5,
+            "{mode}: implausible shed rate {}",
+            report.shed_rate
+        );
+        let stats = report.server_stats.as_deref().unwrap_or("");
+        assert!(stats.contains("model=cpu"), "stats: {stats}");
+
+        // the BENCH_serve.json payload round-trips through the parser
+        let path = std::env::temp_dir().join(format!(
+            "tmi-bench-serve-{}-{mode}.json",
+            std::process::id()
+        ));
+        tsetlin_index::bench_harness::report::write_json(&path, &report.to_json(&cfg))
+            .unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("serve_load"));
+        assert_eq!(parsed.get("mode").unwrap().as_str(), Some(mode));
+        assert_eq!(
+            parsed.get("ok").unwrap().as_usize(),
+            Some(report.ok as usize)
+        );
+        assert!(parsed.get("latency_us").unwrap().get("p99").unwrap().as_f64().is_some());
+        assert!(parsed.get("throughput_rps").unwrap().as_f64().unwrap() > 0.0);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap().unwrap();
+    coord.shutdown();
 }
