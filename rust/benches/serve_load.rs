@@ -58,6 +58,7 @@ fn main() {
             workers,
             queue_cap: 1024,
             policy: BatchPolicy::default(),
+            ..RouteConfig::default()
         },
     );
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();

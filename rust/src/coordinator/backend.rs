@@ -9,8 +9,13 @@
 //!
 //! Backends power the coordinator's **factory routes**
 //! ([`crate::coordinator::Coordinator::register_with`]): one worker
-//! owning mutable state. The indexed serving hot path has moved to
-//! **snapshot routes** ([`crate::coordinator::Coordinator::register_model`]
+//! owning mutable state. The factory is `FnMut` so the route's
+//! supervisor can re-run it to rebuild the backend after a worker
+//! panic — a torn, half-mutated backend is never reused; factories
+//! should therefore capture what they need to build a *fresh* backend
+//! on every call (clone the model in, don't move it). The indexed
+//! serving hot path has moved to **snapshot routes**
+//! ([`crate::coordinator::Coordinator::register_model`]
 //! over [`crate::engine::ModelSnapshot`]), which add hot swap and
 //! multi-worker scale-out; `CpuBackend` remains the serving vehicle
 //! for the naive/bitpacked ablation evaluators and the XLA route.

@@ -14,6 +14,9 @@ pub struct Metrics {
     /// Requests refused at admission (`err overloaded`).
     pub shed: AtomicU64,
     pub errors: AtomicU64,
+    /// Worker restarts performed by the supervisor after a panic
+    /// ([`crate::coordinator::supervisor`]).
+    pub restarts: AtomicU64,
     pub batches: AtomicU64,
     pub batched_items: AtomicU64,
     latency_us: [AtomicU64; BUCKETS],
@@ -27,6 +30,8 @@ pub struct MetricsSnapshot {
     /// Requests shed at admission (queue full).
     pub shed: u64,
     pub errors: u64,
+    /// Supervisor-performed worker restarts (0 on healthy routes).
+    pub restarts: u64,
     pub batches: u64,
     pub batched_items: u64,
     /// Queue depth at snapshot time. [`Metrics`] does not own the
@@ -62,6 +67,7 @@ impl Metrics {
             completed: self.completed.load(Ordering::Relaxed),
             shed: self.shed.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            restarts: self.restarts.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             batched_items: self.batched_items.load(Ordering::Relaxed),
             queue_depth: 0,
@@ -147,6 +153,7 @@ mod tests {
     fn snapshot_reflects_counts() {
         let m = Metrics::new();
         m.requests.fetch_add(3, Ordering::Relaxed);
+        m.restarts.fetch_add(1, Ordering::Relaxed);
         m.record_batch(2);
         m.record_batch(4);
         m.record_latency(Duration::from_micros(100));
@@ -154,6 +161,7 @@ mod tests {
         m.record_latency(Duration::from_millis(10));
         let s = m.snapshot();
         assert_eq!(s.requests, 3);
+        assert_eq!(s.restarts, 1);
         assert_eq!(s.batches, 2);
         assert!((s.mean_batch_size() - 3.0).abs() < 1e-12);
         // 2 fast + 1 slow: p50 lands in the ~128us bucket

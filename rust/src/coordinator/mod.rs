@@ -31,12 +31,14 @@ pub mod loadgen;
 pub mod metrics;
 pub mod queue;
 pub mod server;
+pub mod supervisor;
 
 pub use backend::{Backend as ServeBackend, CpuBackend, XlaBackend};
 pub use batcher::BatchPolicy;
 pub use loadgen::{LoadgenConfig, LoadgenReport};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use queue::{BoundedQueue, PushError};
+pub use supervisor::{RestartPolicy, SupervisedExit};
 pub use server::{
     Coordinator, CoordinatorHandle, InferError, Prediction, RouteConfig, RouteStats,
     ServeOptions, SwapError,

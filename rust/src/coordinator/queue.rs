@@ -19,7 +19,7 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 /// Why a push was refused.
@@ -59,6 +59,16 @@ pub struct BoundedQueue<T> {
 }
 
 impl<T> BoundedQueue<T> {
+    /// Lock with poison *recovery*: every mutation completes under the
+    /// lock (no caller code runs mid-update), so the queue's invariants
+    /// hold at every unlock and a lock poisoned by a panicking worker
+    /// is safe to keep using. Propagating the poison instead would
+    /// cascade one worker's panic into every client and sibling worker
+    /// sharing the route.
+    fn lock(&self) -> MutexGuard<'_, Inner<T>> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     pub fn new(cap: usize) -> Self {
         BoundedQueue {
             inner: Mutex::new(Inner {
@@ -86,12 +96,12 @@ impl<T> BoundedQueue<T> {
     }
 
     pub fn is_closed(&self) -> bool {
-        self.inner.lock().expect("queue lock poisoned").closed
+        self.lock().closed
     }
 
     /// Admit `item` if there is room; never blocks.
     pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
-        let mut g = self.inner.lock().expect("queue lock poisoned");
+        let mut g = self.lock();
         if g.closed {
             return Err(PushError::Closed(item));
         }
@@ -107,7 +117,7 @@ impl<T> BoundedQueue<T> {
 
     /// Refuse new pushes; queued items remain poppable (drain).
     pub fn close(&self) {
-        self.inner.lock().expect("queue lock poisoned").closed = true;
+        self.lock().closed = true;
         self.not_empty.notify_all();
     }
 
@@ -117,7 +127,7 @@ impl<T> BoundedQueue<T> {
     /// disconnect instead of a hang.
     pub fn close_and_drain(&self) {
         let drained = {
-            let mut g = self.inner.lock().expect("queue lock poisoned");
+            let mut g = self.lock();
             g.closed = true;
             self.depth.store(0, Ordering::Relaxed);
             std::mem::take(&mut g.items)
@@ -128,7 +138,7 @@ impl<T> BoundedQueue<T> {
 
     /// Pop without blocking.
     pub fn try_pop(&self) -> Option<T> {
-        let mut g = self.inner.lock().expect("queue lock poisoned");
+        let mut g = self.lock();
         let item = g.items.pop_front();
         self.depth.store(g.items.len(), Ordering::Relaxed);
         item
@@ -137,7 +147,7 @@ impl<T> BoundedQueue<T> {
     /// Block until an item arrives; `None` iff the queue is closed and
     /// drained (the consumer's shutdown signal).
     pub fn pop_blocking(&self) -> Option<T> {
-        let mut g = self.inner.lock().expect("queue lock poisoned");
+        let mut g = self.lock();
         loop {
             if let Some(item) = g.items.pop_front() {
                 self.depth.store(g.items.len(), Ordering::Relaxed);
@@ -146,14 +156,17 @@ impl<T> BoundedQueue<T> {
             if g.closed {
                 return None;
             }
-            g = self.not_empty.wait(g).expect("queue lock poisoned");
+            g = self
+                .not_empty
+                .wait(g)
+                .unwrap_or_else(PoisonError::into_inner);
         }
     }
 
     /// Block up to `timeout` for an item.
     pub fn pop_timeout(&self, timeout: Duration) -> PopTimeout<T> {
         let deadline = Instant::now() + timeout;
-        let mut g = self.inner.lock().expect("queue lock poisoned");
+        let mut g = self.lock();
         loop {
             if let Some(item) = g.items.pop_front() {
                 self.depth.store(g.items.len(), Ordering::Relaxed);
@@ -169,7 +182,7 @@ impl<T> BoundedQueue<T> {
             let (guard, _) = self
                 .not_empty
                 .wait_timeout(g, deadline - now)
-                .expect("queue lock poisoned");
+                .unwrap_or_else(PoisonError::into_inner);
             g = guard;
         }
     }
@@ -260,6 +273,26 @@ mod tests {
         std::thread::sleep(Duration::from_millis(5));
         q.close();
         assert_eq!(popper.join().unwrap(), None);
+    }
+
+    #[test]
+    fn poisoned_lock_recovers_instead_of_cascading() {
+        let q = Arc::new(BoundedQueue::new(4));
+        q.try_push(1).unwrap();
+        let poisoner = Arc::clone(&q);
+        let _ = std::thread::spawn(move || {
+            let _g = poisoner.inner.lock().unwrap();
+            panic!("poison the queue lock");
+        })
+        .join();
+        assert!(q.inner.is_poisoned(), "test setup must poison the lock");
+        // every operation keeps working on the poisoned lock
+        assert_eq!(q.try_pop(), Some(1));
+        q.try_push(2).unwrap();
+        assert_eq!(q.len(), 1);
+        q.close();
+        assert_eq!(q.pop_blocking(), Some(2));
+        assert_eq!(q.pop_blocking(), None);
     }
 
     #[test]

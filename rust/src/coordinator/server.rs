@@ -32,9 +32,10 @@
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, SyncSender};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, PoisonError, RwLock};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -42,6 +43,7 @@ use crate::coordinator::backend::{Backend, Scored};
 use crate::coordinator::batcher::{collect, BatchPolicy, Collected};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::queue::{BoundedQueue, PushError};
+use crate::coordinator::supervisor::{supervise, RestartPolicy};
 use crate::engine::{argmax, ModelSnapshot};
 use crate::util::BitVec;
 
@@ -113,7 +115,8 @@ struct Request {
     resp: SyncSender<Result<Prediction, InferError>>,
 }
 
-/// Per-route sizing: batching policy, worker count, queue bound.
+/// Per-route sizing: batching policy, worker count, queue bound,
+/// restart budget.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct RouteConfig {
     pub policy: BatchPolicy,
@@ -123,6 +126,10 @@ pub struct RouteConfig {
     /// Admission bound: requests beyond this are shed with
     /// [`InferError::Overloaded`].
     pub queue_cap: usize,
+    /// Per-worker panic-restart budget and backoff
+    /// ([`crate::coordinator::supervisor`]). Restarts performed are
+    /// surfaced as `restarts=` in the `stats` verb.
+    pub restarts: RestartPolicy,
 }
 
 impl Default for RouteConfig {
@@ -131,7 +138,50 @@ impl Default for RouteConfig {
             policy: BatchPolicy::default(),
             workers: 1,
             queue_cap: 1024,
+            restarts: RestartPolicy::default(),
         }
+    }
+}
+
+/// Test-only fault injection: arm a number of worker panics against one
+/// route and the next batches collected by that route's snapshot
+/// workers panic mid-swap (after dequeue, before scoring). Hidden from
+/// docs; used by the fault harness (`tests/registry_faults.rs`) and the
+/// in-module supervision tests to exercise restart paths that healthy
+/// code cannot reach. State is process-global, but targeting by route
+/// name keeps concurrently running tests out of each other's way.
+#[doc(hidden)]
+pub mod fault {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::{Mutex, PoisonError};
+
+    static ROUTE: Mutex<String> = Mutex::new(String::new());
+    static BUDGET: AtomicU64 = AtomicU64::new(0);
+
+    /// Arm `n` injected panics against route `route`'s workers.
+    pub fn arm_worker_panics(route: &str, n: u64) {
+        *ROUTE.lock().unwrap_or_else(PoisonError::into_inner) = route.to_string();
+        BUDGET.store(n, Ordering::SeqCst);
+    }
+
+    /// Consume one armed panic if the calling worker thread belongs to
+    /// the armed route (worker threads are named `tmi-worker-<route>-<n>`).
+    pub(crate) fn take_worker_panic() -> bool {
+        if BUDGET.load(Ordering::SeqCst) == 0 {
+            return false;
+        }
+        let armed = format!(
+            "{}-",
+            ROUTE.lock().unwrap_or_else(PoisonError::into_inner)
+        );
+        let on_route = std::thread::current()
+            .name()
+            .and_then(|t| t.strip_prefix("tmi-worker-"))
+            .is_some_and(|rest| rest.starts_with(&armed));
+        on_route
+            && BUDGET
+                .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| v.checked_sub(1))
+                .is_ok()
     }
 }
 
@@ -153,8 +203,14 @@ impl SwapCell {
         }
     }
 
+    /// Reads (and writes, below) *recover* from lock poisoning instead
+    /// of propagating it: the cell holds a single `Arc` that is only
+    /// ever wholly replaced, so its value is consistent at every
+    /// unlock and a poisoned lock is safe to keep using. Panicking
+    /// here would cascade one dead thread into every worker and
+    /// `stats` reader sharing the route.
     fn load(&self) -> Arc<ModelSnapshot> {
-        Arc::clone(&self.snap.read().expect("swap cell poisoned"))
+        Arc::clone(&self.snap.read().unwrap_or_else(PoisonError::into_inner))
     }
 
     fn generation(&self) -> u64 {
@@ -163,7 +219,7 @@ impl SwapCell {
 
     /// Install `snap`, returning the retired version number.
     fn store(&self, snap: Arc<ModelSnapshot>) -> u64 {
-        let mut g = self.snap.write().expect("swap cell poisoned");
+        let mut g = self.snap.write().unwrap_or_else(PoisonError::into_inner);
         self.swaps.fetch_add(1, Ordering::Relaxed);
         std::mem::replace(&mut *g, snap).version()
     }
@@ -221,25 +277,43 @@ impl Coordinator {
 
     /// Register a model whose backend is `Send` (CPU backends). Single
     /// worker, default queue bound; for hot swap and scale-out use
-    /// [`Coordinator::register_model`].
+    /// [`Coordinator::register_model`]. The backend is one-shot — if
+    /// its worker panics, the restart attempt finds nothing to rebuild
+    /// from and the route fails closed (register via
+    /// [`Coordinator::register_with`] with a real factory to make a
+    /// factory route restartable).
     pub fn register(
         &mut self,
         name: impl Into<String>,
         backend: Box<dyn Backend + Send>,
         policy: BatchPolicy,
     ) {
-        self.register_with(name, move || Ok(backend as Box<dyn Backend>), policy)
-            .expect("infallible factory");
+        let slot = std::sync::Mutex::new(Some(backend));
+        self.register_with(
+            name,
+            move || {
+                slot.lock()
+                    .unwrap_or_else(PoisonError::into_inner)
+                    .take()
+                    .map(|b| b as Box<dyn Backend>)
+                    .ok_or_else(|| anyhow::anyhow!("one-shot backend already consumed"))
+            },
+            policy,
+        )
+        .expect("first factory call is infallible");
     }
 
     /// Register a model via a factory executed *inside* the worker
     /// thread — required for PJRT-backed backends, whose handles are
     /// thread-pinned. Blocks until the factory has run; a factory error
-    /// is returned here and no route is created.
+    /// is returned here and no route is created. If the worker later
+    /// panics, the supervisor re-runs the factory to rebuild the
+    /// backend (bounded by [`RouteConfig::restarts`]); a factory that
+    /// fails on re-run ends the route.
     pub fn register_with(
         &mut self,
         name: impl Into<String>,
-        factory: impl FnOnce() -> anyhow::Result<Box<dyn Backend>> + Send + 'static,
+        factory: impl FnMut() -> anyhow::Result<Box<dyn Backend>> + Send + 'static,
         policy: BatchPolicy,
     ) -> anyhow::Result<()> {
         self.register_with_config(
@@ -258,7 +332,7 @@ impl Coordinator {
     pub fn register_with_config(
         &mut self,
         name: impl Into<String>,
-        factory: impl FnOnce() -> anyhow::Result<Box<dyn Backend>> + Send + 'static,
+        mut factory: impl FnMut() -> anyhow::Result<Box<dyn Backend>> + Send + 'static,
         cfg: RouteConfig,
     ) -> anyhow::Result<()> {
         let name = name.into();
@@ -272,6 +346,7 @@ impl Coordinator {
         let metrics_worker = Arc::clone(&metrics);
         let queue_worker = Arc::clone(&queue);
         let policy = cfg.policy;
+        let restarts = cfg.restarts;
         let (ready_tx, ready_rx) = sync_channel::<anyhow::Result<usize>>(1);
         let worker = std::thread::Builder::new()
             .name(format!("tmi-worker-{name}"))
@@ -287,11 +362,36 @@ impl Coordinator {
                         return;
                     }
                 };
+                let mut attempts: u32 = 0;
                 loop {
                     match collect(&queue_worker, &policy) {
                         Collected::Disconnected => break,
                         Collected::Batch(reqs) => {
-                            answer_with_backend(backend.as_mut(), reqs, &metrics_worker);
+                            // The panicking batch fails (its response
+                            // channels unwind), but the route survives:
+                            // rebuild the backend — the old one may be
+                            // torn mid-mutation — and keep draining.
+                            let survived = catch_unwind(AssertUnwindSafe(|| {
+                                answer_with_backend(backend.as_mut(), reqs, &metrics_worker);
+                            }))
+                            .is_ok();
+                            if survived {
+                                continue;
+                            }
+                            attempts += 1;
+                            if attempts > restarts.max_restarts {
+                                break;
+                            }
+                            std::thread::sleep(restarts.backoff_for(attempts));
+                            match catch_unwind(AssertUnwindSafe(&mut factory)) {
+                                Ok(Ok(b)) => {
+                                    backend = b;
+                                    metrics_worker.restarts.fetch_add(1, Ordering::Relaxed);
+                                }
+                                // factory failed or panicked: no backend
+                                // to serve with — fail the route closed
+                                _ => break,
+                            }
                         }
                     }
                 }
@@ -339,11 +439,17 @@ impl Coordinator {
                 let cell = Arc::clone(&cell);
                 let metrics = Arc::clone(&metrics);
                 let policy = cfg.policy;
+                let restarts = cfg.restarts;
                 std::thread::Builder::new()
                     .name(format!("tmi-worker-{name}-{w}"))
                     .spawn(move || {
                         let _guard = guard;
-                        snapshot_worker(&queue, &cell, &metrics, &policy);
+                        // snapshot workers are stateless across lives
+                        // (each re-entry reloads the cell and rebuilds
+                        // scratch), so supervised restart is always safe
+                        let _ = supervise(&restarts, &metrics.restarts, || {
+                            snapshot_worker(&queue, &cell, &metrics, &policy);
+                        });
                     })
                     .expect("spawning worker thread")
             })
@@ -518,6 +624,13 @@ fn snapshot_worker(
         match collect(queue, policy) {
             Collected::Disconnected => break,
             Collected::Batch(reqs) => {
+                if fault::take_worker_panic() {
+                    // injected mid-swap fault: the collected batch's
+                    // response channels drop in the unwind (those
+                    // clients see ShuttingDown); queued requests
+                    // survive to the restarted worker
+                    panic!("injected fault: worker panic mid-swap");
+                }
                 let cur = cell.load();
                 if !Arc::ptr_eq(&cur, &snap) {
                     scratch = cur.make_scratch();
@@ -642,8 +755,8 @@ impl Default for ServeOptions {
 ///
 /// -> stats <model>\n
 /// <- ok model=<m> version=<v|-> generation=<g|-> requests=<n> completed=<n>
-///       shed=<n> errors=<n> queue_depth=<n> batches=<n> mean_batch=<f>
-///       p50_us=<n> p95_us=<n> p99_us=<n>\n   (one line)
+///       shed=<n> errors=<n> restarts=<n> queue_depth=<n> batches=<n>
+///       mean_batch=<f> p50_us=<n> p95_us=<n> p99_us=<n>\n   (one line)
 /// ```
 pub fn serve_tcp(
     listener: TcpListener,
@@ -814,12 +927,13 @@ fn stats_line(model: &str, st: &RouteStats) -> String {
     let generation = opt(st.generation);
     format!(
         "ok model={model} version={version} generation={generation} requests={} \
-         completed={} shed={} errors={} queue_depth={} batches={} mean_batch={:.2} \
-         p50_us={} p95_us={} p99_us={}\n",
+         completed={} shed={} errors={} restarts={} queue_depth={} batches={} \
+         mean_batch={:.2} p50_us={} p95_us={} p99_us={}\n",
         m.requests,
         m.completed,
         m.shed,
         m.errors,
+        m.restarts,
         m.queue_depth,
         m.batches,
         m.mean_batch_size(),
@@ -968,6 +1082,7 @@ mod tests {
                     max_batch: 4,
                     max_wait: Duration::from_micros(200),
                 },
+                ..RouteConfig::default()
             },
         );
         let h = coord.handle();
@@ -1099,6 +1214,7 @@ mod tests {
                         max_batch: 1,
                         max_wait: Duration::ZERO,
                     },
+                    ..RouteConfig::default()
                 },
             )
             .unwrap();
@@ -1153,6 +1269,7 @@ mod tests {
                         max_batch: 2,
                         max_wait: Duration::ZERO,
                     },
+                    ..RouteConfig::default()
                 },
             )
             .unwrap();
@@ -1200,12 +1317,134 @@ mod tests {
             h.infer("boom", BitVec::zeros(4)),
             Err(InferError::ShuttingDown)
         ));
-        // the dead worker's guard closed the queue: immediate rejection
+        // `register` backends are one-shot, so the restart attempt finds
+        // nothing to rebuild and the route fails closed: either the
+        // guard already closed the queue (immediate rejection) or this
+        // request is drained during close (dropped response channel) —
+        // ShuttingDown both ways, never a hang
         assert!(matches!(
             h.infer("boom", BitVec::zeros(4)),
             Err(InferError::ShuttingDown)
         ));
         coord.shutdown();
+    }
+
+    /// Backend whose first life panics on its first batch; rebuilt
+    /// lives are healthy — exercises the factory-route restart path.
+    struct FlakyBackend {
+        panic_once: bool,
+    }
+    impl Backend for FlakyBackend {
+        fn infer_batch(
+            &mut self,
+            batch: &[BitVec],
+        ) -> anyhow::Result<Vec<crate::coordinator::backend::Scored>> {
+            if self.panic_once {
+                panic!("injected: first life dies");
+            }
+            Ok(batch
+                .iter()
+                .map(|_| crate::coordinator::backend::Scored {
+                    prediction: 0,
+                    scores: vec![0, 0],
+                })
+                .collect())
+        }
+        fn n_literals(&self) -> usize {
+            4
+        }
+        fn name(&self) -> String {
+            "flaky".into()
+        }
+    }
+
+    #[test]
+    fn factory_route_restarts_after_worker_panic() {
+        let mut coord = Coordinator::new();
+        let built = Arc::new(AtomicUsize::new(0));
+        let built_factory = Arc::clone(&built);
+        coord
+            .register_with(
+                "flaky",
+                move || {
+                    let n = built_factory.fetch_add(1, Ordering::SeqCst);
+                    Ok(Box::new(FlakyBackend { panic_once: n == 0 }) as Box<dyn Backend>)
+                },
+                BatchPolicy::default(),
+            )
+            .unwrap();
+        let h = coord.handle();
+        // the first request rides the panicking batch and fails...
+        assert!(matches!(
+            h.infer("flaky", BitVec::zeros(4)),
+            Err(InferError::ShuttingDown)
+        ));
+        // ...but the supervisor re-ran the factory: the route survives
+        let p = h.infer("flaky", BitVec::zeros(4)).unwrap();
+        assert_eq!(p.class, 0);
+        assert_eq!(built.load(Ordering::SeqCst), 2);
+        let m = coord.metrics("flaky").unwrap();
+        assert_eq!(m.restarts, 1);
+        assert_eq!(m.completed, 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn snapshot_route_restarts_after_injected_panic() {
+        let mut tr = toy_trainer(3);
+        let want = {
+            let lits = crate::data::Dataset::literals_from_bools(&class0_features());
+            tr.scores(&lits)
+        };
+        let mut coord = Coordinator::new();
+        coord.register_model("faulty", tr.publish(), RouteConfig::default());
+        let h = coord.handle();
+        // healthy before the fault
+        assert_eq!(
+            h.infer_features("faulty", &class0_features()).unwrap().scores,
+            want
+        );
+        fault::arm_worker_panics("faulty", 1);
+        // this request's batch takes the injected mid-swap panic
+        assert!(matches!(
+            h.infer_features("faulty", &class0_features()),
+            Err(InferError::ShuttingDown)
+        ));
+        // the restarted worker answers bit-identically, and the restart
+        // is visible in stats
+        assert_eq!(
+            h.infer_features("faulty", &class0_features()).unwrap().scores,
+            want
+        );
+        let st = coord.stats("faulty").unwrap();
+        assert_eq!(st.metrics.restarts, 1);
+        assert!(
+            stats_line("faulty", &st).contains(" restarts=1 "),
+            "stats must surface the restart: {}",
+            stats_line("faulty", &st)
+        );
+        coord.shutdown();
+    }
+
+    #[test]
+    fn poisoned_swap_cell_recovers_instead_of_cascading() {
+        let mut tr = toy_trainer(3);
+        let snap_a = tr.publish();
+        let cell = Arc::new(SwapCell::new(Arc::clone(&snap_a)));
+        let poisoner = Arc::clone(&cell);
+        let _ = std::thread::spawn(move || {
+            let _g = poisoner.snap.write().unwrap();
+            panic!("poison the swap cell");
+        })
+        .join();
+        assert!(cell.snap.is_poisoned(), "test setup must poison the lock");
+        // reads and writes recover instead of propagating the panic
+        assert_eq!(cell.load().version(), snap_a.version());
+        let snap_b = tr.publish();
+        let retired = cell.store(Arc::clone(&snap_b));
+        assert_eq!(retired, snap_a.version());
+        assert_eq!(cell.load().version(), snap_b.version());
+        assert_eq!(cell.generation(), 1);
     }
 
     /// Backend that fails every batch — exercises the error path.

@@ -1,0 +1,177 @@
+//! Worker supervision: bounded panic-restart with exponential backoff.
+//!
+//! A serving worker that panics — a poisoned dependency, a bug in a
+//! backend, the fault-injection harness — used to take its whole route
+//! down: the in-flight batch's clients got disconnects and the
+//! route's worker guard closed the queue for good. Under
+//! supervision the panic is caught at the top of the worker loop, the
+//! restart counter ([`crate::coordinator::Metrics::restarts`], surfaced
+//! as `restarts=` in the `stats` verb) is bumped, and the loop re-enters
+//! after a backoff. The in-flight batch is still failed — its response
+//! channels unwound with the stack — but everything queued behind it
+//! survives to be served by the restarted worker.
+//!
+//! Restarts are *bounded*: a worker that keeps dying (a deterministic
+//! panic on every batch would otherwise spin forever, failing one batch
+//! per restart) exhausts its budget and exits, at which point the
+//! normal last-worker-guard close-and-drain takes over.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Restart budget and backoff schedule for one worker thread.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RestartPolicy {
+    /// Restarts allowed per worker before it stays down.
+    pub max_restarts: u32,
+    /// Delay before the first restart; doubles per consecutive restart.
+    pub backoff: Duration,
+    /// Backoff ceiling.
+    pub max_backoff: Duration,
+}
+
+impl Default for RestartPolicy {
+    fn default() -> Self {
+        RestartPolicy {
+            max_restarts: 5,
+            backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_secs(1),
+        }
+    }
+}
+
+impl RestartPolicy {
+    /// Never restart: a panic kills the worker immediately (the
+    /// pre-supervision behavior, used where a restart cannot help).
+    pub fn none() -> Self {
+        RestartPolicy {
+            max_restarts: 0,
+            ..Self::default()
+        }
+    }
+
+    /// Backoff before restart number `attempt` (1-based): exponential
+    /// doubling from [`RestartPolicy::backoff`], capped at
+    /// [`RestartPolicy::max_backoff`].
+    pub fn backoff_for(&self, attempt: u32) -> Duration {
+        let shift = attempt.saturating_sub(1).min(20);
+        self.backoff
+            .saturating_mul(1u32 << shift)
+            .min(self.max_backoff)
+    }
+}
+
+/// How a supervised worker ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SupervisedExit {
+    /// `body` returned normally (queue closed and drained).
+    Clean,
+    /// `body` panicked more than `max_restarts` times.
+    RestartsExhausted,
+}
+
+/// Run one worker "life" repeatedly: `body` returning means clean
+/// shutdown; `body` panicking consumes one restart from the budget
+/// (recorded in `restarts`), sleeps the backoff, and re-enters.
+pub fn supervise(
+    policy: &RestartPolicy,
+    restarts: &AtomicU64,
+    mut body: impl FnMut(),
+) -> SupervisedExit {
+    let mut attempts: u32 = 0;
+    loop {
+        match catch_unwind(AssertUnwindSafe(&mut body)) {
+            Ok(()) => return SupervisedExit::Clean,
+            Err(_panic) => {
+                attempts += 1;
+                if attempts > policy.max_restarts {
+                    return SupervisedExit::RestartsExhausted;
+                }
+                restarts.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(policy.backoff_for(attempts));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_body_runs_once() {
+        let restarts = AtomicU64::new(0);
+        let mut runs = 0;
+        let exit = supervise(&RestartPolicy::default(), &restarts, || runs += 1);
+        assert_eq!(exit, SupervisedExit::Clean);
+        assert_eq!(runs, 1);
+        assert_eq!(restarts.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn panics_restart_until_body_recovers() {
+        let policy = RestartPolicy {
+            max_restarts: 5,
+            backoff: Duration::from_micros(50),
+            max_backoff: Duration::from_millis(1),
+        };
+        let restarts = AtomicU64::new(0);
+        let mut runs = 0;
+        let exit = supervise(&policy, &restarts, || {
+            runs += 1;
+            if runs < 3 {
+                panic!("injected");
+            }
+        });
+        assert_eq!(exit, SupervisedExit::Clean);
+        assert_eq!(runs, 3);
+        assert_eq!(restarts.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn persistent_panic_exhausts_budget() {
+        let policy = RestartPolicy {
+            max_restarts: 2,
+            backoff: Duration::from_micros(50),
+            max_backoff: Duration::from_millis(1),
+        };
+        let restarts = AtomicU64::new(0);
+        let mut runs = 0;
+        let exit = supervise(&policy, &restarts, || {
+            runs += 1;
+            panic!("always");
+        });
+        assert_eq!(exit, SupervisedExit::RestartsExhausted);
+        // budget of 2 restarts = 3 lives total
+        assert_eq!(runs, 3);
+        assert_eq!(restarts.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn none_policy_never_restarts() {
+        let restarts = AtomicU64::new(0);
+        let mut runs = 0;
+        let exit = supervise(&RestartPolicy::none(), &restarts, || {
+            runs += 1;
+            panic!("fatal");
+        });
+        assert_eq!(exit, SupervisedExit::RestartsExhausted);
+        assert_eq!(runs, 1);
+        assert_eq!(restarts.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let p = RestartPolicy {
+            max_restarts: 10,
+            backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_millis(65),
+        };
+        assert_eq!(p.backoff_for(1), Duration::from_millis(10));
+        assert_eq!(p.backoff_for(2), Duration::from_millis(20));
+        assert_eq!(p.backoff_for(3), Duration::from_millis(40));
+        assert_eq!(p.backoff_for(4), Duration::from_millis(65));
+        assert_eq!(p.backoff_for(40), Duration::from_millis(65));
+    }
+}

@@ -109,6 +109,15 @@ impl ModelSnapshot {
         &self.tm
     }
 
+    /// Content digest of the frozen machine (CRC-32 of its serialized
+    /// v3 image, see [`crate::tm::io::model_digest`]). Two snapshots
+    /// share a digest iff they would score bit-identically — the
+    /// crash-recovery tests' equality witness, and cheap enough to
+    /// compute per publish.
+    pub fn state_digest(&self) -> u32 {
+        crate::tm::io::model_digest(&self.tm)
+    }
+
     /// Fresh per-thread scratch sized for this snapshot's machine
     /// (both engines share the clause-count dimension).
     pub fn make_scratch(&self) -> SnapshotScratch {

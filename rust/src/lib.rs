@@ -37,6 +37,11 @@
 //!   hot-swap snapshot registry, bounded queues with load shedding,
 //!   dynamic batcher workers, CPU-indexed and XLA backends, metrics,
 //!   TCP front end, and the `tmi loadgen` load generator.
+//! * [`registry`] — the durable side of serving: an on-disk versioned
+//!   snapshot store (checksummed model files + an atomically-rewritten
+//!   JSON manifest) with retention, quarantine of torn/corrupt files,
+//!   and crash recovery — `tmi serve --registry` rebuilds its whole
+//!   route table from the manifest alone.
 //! * [`bench_harness`] — regenerates every table and figure of the
 //!   paper's evaluation section.
 //! * [`util`] — deterministic RNG, bit vectors, a compact hash map, and
@@ -49,6 +54,7 @@ pub mod engine;
 pub mod eval;
 pub mod index;
 pub mod parallel;
+pub mod registry;
 pub mod runtime;
 pub mod tm;
 pub mod util;

@@ -6,8 +6,10 @@
 //! tmi table       regenerate paper Table 1/2/3 (+ the figure CSVs)
 //! tmi work-ratio  §3 Remarks: measured work-ratio statistics
 //! tmi serve       serving coordinator (CPU and/or XLA backends) over TCP:
-//!                 hot-swap snapshot routes, bounded queues, load shedding
+//!                 hot-swap snapshot routes, bounded queues, load shedding;
+//!                 --registry serves (and crash-recovers) a durable registry
 //! tmi loadgen     open/closed-loop TCP load generator -> BENCH_serve.json
+//! tmi registry    inspect/maintain a model registry: ls | verify | gc
 //! tmi info        PJRT platform + artifact manifest
 //! ```
 //!
@@ -16,10 +18,10 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::AtomicBool;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use tsetlin_index::bench_harness::figures::write_figures;
 use tsetlin_index::bench_harness::tables::{run_table, Scale, TableId};
@@ -33,6 +35,8 @@ use tsetlin_index::data::{imdb, mnist, Dataset};
 use tsetlin_index::engine::{argmax, InferMode, ModelSnapshot, SPARSE_DENSITY_THRESHOLD};
 use tsetlin_index::eval::Backend;
 use tsetlin_index::parallel::{resolve_threads, ParallelTrainer, DEFAULT_STALE_WINDOW};
+use tsetlin_index::registry::store::DEFAULT_RETAIN;
+use tsetlin_index::registry::{read_generation, sync_published, Registry, SyncEvent, WatchState};
 use tsetlin_index::runtime::{Manifest, Runtime};
 use tsetlin_index::tm::bank::TaLayout;
 use tsetlin_index::tm::classifier::MultiClassTM;
@@ -232,6 +236,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         io::save(trainer.tm(), out)?;
         eprintln!("saved model to {out}");
     }
+    if let Some(dir) = args.get("registry") {
+        let route = args.get_or("route", "cpu");
+        let retain: usize = args.parse_or("retain", DEFAULT_RETAIN)?;
+        let mut registry = Registry::open(dir, retain)?;
+        let version = registry.publish(&route, trainer.tm(), infer_mode)?;
+        eprintln!("published route '{route}' v{version} to registry {dir}");
+    }
     Ok(())
 }
 
@@ -405,7 +416,13 @@ fn cmd_work_ratio(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let model_path = args.get("model").context("--model required")?.to_string();
+    if args.get("registry").is_some() {
+        return cmd_serve_registry(args);
+    }
+    let model_path = args
+        .get("model")
+        .context("--model required (or --registry <dir>)")?
+        .to_string();
     let tm = io::load(&model_path)?;
     let backend: Backend = args
         .get_or("backend", "indexed")
@@ -440,6 +457,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 policy: BatchPolicy::default(),
                 workers,
                 queue_cap,
+                ..RouteConfig::default()
             },
         );
     } else {
@@ -451,12 +469,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
             {
                 let tm = tm.clone();
                 let parallel: usize = args.parse_or("parallel", 1)?;
-                move || Ok(Box::new(CpuBackend::new_parallel(tm, backend, parallel)) as _)
+                // clone per call: the factory re-runs to rebuild the
+                // backend if the route's worker panics
+                move || {
+                    Ok(Box::new(CpuBackend::new_parallel(tm.clone(), backend, parallel)) as _)
+                }
             },
             RouteConfig {
                 policy: BatchPolicy::default(),
                 workers: 1,
                 queue_cap,
+                ..RouteConfig::default()
             },
         )?;
     }
@@ -488,6 +511,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 },
                 workers: 1,
                 queue_cap,
+                ..RouteConfig::default()
             },
         );
         match registered {
@@ -506,36 +530,44 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue_cap,
     );
     let handle = coord.handle();
+    let stop = shutdown_flag();
     if args.has_flag("watch") {
         let interval =
             std::time::Duration::from_millis(args.parse_or("watch-interval-ms", 500u64)?);
         let watch_handle = handle.clone();
         let path = model_path.clone();
+        let stop_watch = Arc::clone(&stop);
         std::thread::Builder::new()
             .name("tmi-watch".into())
-            .spawn(move || watch_model_file(&path, watch_handle, interval, infer_mode))
+            .spawn(move || watch_model_file(&path, watch_handle, interval, infer_mode, stop_watch))
             .expect("spawning watch thread");
         eprintln!(
-            "watching {model_path} (poll {}ms): republishing 'cpu' on change",
+            "watching {model_path} (poll {}ms): republishing 'cpu' on content change",
             interval.as_millis()
         );
     }
-    let stop = Arc::new(AtomicBool::new(false));
     serve_tcp_with(
         listener,
         handle,
-        stop,
+        Arc::clone(&stop),
         ServeOptions {
             max_conns: args.parse_or("max-conns", 256)?,
         },
     )?;
+    eprintln!("shutdown: stopped accepting; draining queues");
+    coord.shutdown();
+    eprintln!("shutdown complete");
     Ok(())
 }
 
-/// File stamp used by `--watch` to detect republishes: (mtime, size).
-fn model_file_stamp(path: &str) -> Option<(std::time::SystemTime, u64)> {
-    let meta = std::fs::metadata(path).ok()?;
-    Some((meta.modified().ok()?, meta.len()))
+/// File stamp used by `--watch` to detect republishes: (length, CRC-32
+/// of the contents). A *content* digest — not (mtime, length) — so a
+/// same-length rewrite landing within one mtime granule still
+/// registers, and a rewrite of identical bytes doesn't trigger a
+/// pointless swap.
+fn model_file_stamp(path: &str) -> Option<(u64, u32)> {
+    let bytes = std::fs::read(path).ok()?;
+    Some((bytes.len() as u64, tsetlin_index::util::crc32(&bytes)))
 }
 
 /// Poll `path`; on change, reload the model and hot-swap route `cpu`
@@ -548,10 +580,11 @@ fn watch_model_file(
     handle: tsetlin_index::coordinator::CoordinatorHandle,
     interval: std::time::Duration,
     infer_mode: InferMode,
+    stop: Arc<AtomicBool>,
 ) {
     let mut last = model_file_stamp(path);
     let mut version = 1u64; // registration published v1
-    loop {
+    while !stop.load(Ordering::Relaxed) {
         std::thread::sleep(interval);
         let cur = model_file_stamp(path);
         if cur.is_none() || cur == last {
@@ -578,6 +611,306 @@ fn watch_model_file(
                 eprintln!("watch: reload of {path} failed ({e:#}); keeping v{version}");
             }
         }
+    }
+}
+
+/// `tmi serve --registry <dir>`: rebuild every route from the registry
+/// manifest alone (crash recovery), then serve. Damaged snapshot files
+/// are quarantined on the way to the newest intact version; a route
+/// with no intact version is skipped with a warning instead of taking
+/// the server down. `--watch` polls the manifest *generation* — not
+/// file mtimes — so external publishers (`tmi train --registry`) are
+/// picked up even when a rewrite preserves length and mtime.
+fn cmd_serve_registry(args: &Args) -> Result<()> {
+    if args.get("model").is_some() {
+        bail!("--registry and --model are mutually exclusive (the manifest names the models)");
+    }
+    if args.get_or("backend", "indexed") != "indexed" {
+        bail!("--registry serves snapshot routes (indexed backend); ablations need --model");
+    }
+    let dir = PathBuf::from(args.get("registry").unwrap());
+    let retain: usize = args.parse_or("retain", DEFAULT_RETAIN)?;
+    let workers: usize = args.parse_or("workers", 1)?;
+    let queue_cap: usize = args.parse_or("queue-cap", 1024)?;
+    let mut registry = Registry::open(&dir, retain)?;
+    let route_names: Vec<String> = registry.routes().map(|(n, _)| n.to_string()).collect();
+    if route_names.is_empty() {
+        bail!(
+            "registry {} has no routes; publish one with `tmi train ... --registry {} --route <name>`",
+            dir.display(),
+            dir.display()
+        );
+    }
+    let mut coord = Coordinator::new();
+    let mut state = WatchState::default();
+    for name in route_names {
+        match registry.load_published(&name) {
+            Ok(rec) => {
+                if !rec.quarantined.is_empty() {
+                    eprintln!(
+                        "registry: route '{}': quarantined damaged version(s) {:?}",
+                        name, rec.quarantined
+                    );
+                }
+                eprintln!(
+                    "registry: recovered route '{}' at v{} (infer {})",
+                    name,
+                    rec.version,
+                    rec.infer.name()
+                );
+                let snap = Arc::new(ModelSnapshot::with_mode(rec.tm, rec.version, rec.infer));
+                coord.register_model(
+                    &name,
+                    snap,
+                    RouteConfig {
+                        policy: BatchPolicy::default(),
+                        workers,
+                        queue_cap,
+                        ..RouteConfig::default()
+                    },
+                );
+                state.served.insert(name, rec.version);
+            }
+            Err(e) => {
+                // surviving routes keep serving; this one needs a
+                // republish (picked up live when --watch is on)
+                eprintln!("registry: route '{name}' not recovered ({e}); skipping");
+            }
+        }
+    }
+    ensure!(
+        !state.served.is_empty(),
+        "no route in registry {} could be recovered",
+        dir.display()
+    );
+    state.generation = registry.generation();
+    let listen = args.get_or("listen", "127.0.0.1:7070");
+    let listener =
+        std::net::TcpListener::bind(&listen).with_context(|| format!("binding {listen}"))?;
+    eprintln!(
+        "serving registry routes {:?} on {listen} ({} worker(s)/route, queue bound {})",
+        coord.models(),
+        workers.max(1),
+        queue_cap,
+    );
+    let handle = coord.handle();
+    let stop = shutdown_flag();
+    let registry = Arc::new(Mutex::new(registry));
+    if args.has_flag("watch") {
+        let interval =
+            std::time::Duration::from_millis(args.parse_or("watch-interval-ms", 500u64)?);
+        let watch_handle = handle.clone();
+        let watch_registry_arc = Arc::clone(&registry);
+        let stop_watch = Arc::clone(&stop);
+        let watch_dir = dir.clone();
+        std::thread::Builder::new()
+            .name("tmi-watch".into())
+            .spawn(move || {
+                watch_registry(
+                    &watch_dir,
+                    retain,
+                    watch_registry_arc,
+                    state,
+                    watch_handle,
+                    interval,
+                    stop_watch,
+                )
+            })
+            .expect("spawning watch thread");
+        eprintln!(
+            "watching {} (poll {}ms): hot-swapping routes on manifest generation change",
+            dir.display(),
+            interval.as_millis()
+        );
+    }
+    serve_tcp_with(
+        listener,
+        handle,
+        Arc::clone(&stop),
+        ServeOptions {
+            max_conns: args.parse_or("max-conns", 256)?,
+        },
+    )?;
+    eprintln!("shutdown: stopped accepting; draining queues");
+    coord.shutdown();
+    let flushed = registry
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+        .flush();
+    match flushed {
+        Ok(()) => eprintln!("shutdown: registry manifest flushed; exiting"),
+        Err(e) => eprintln!("shutdown: manifest flush failed ({e}); on-disk state is still the last stored generation"),
+    }
+    Ok(())
+}
+
+/// Poll the registry manifest generation; on change, reload the
+/// manifest from disk (an external `tmi train --registry` publisher
+/// moved it) and reconcile every route: recover the published version
+/// and hot-swap it in. Failures (damage quarantined down to nothing,
+/// swap refusal) leave the route serving its current version.
+fn watch_registry(
+    dir: &Path,
+    retain: usize,
+    registry: Arc<Mutex<Registry>>,
+    mut state: WatchState,
+    handle: tsetlin_index::coordinator::CoordinatorHandle,
+    interval: std::time::Duration,
+    stop: Arc<AtomicBool>,
+) {
+    while !stop.load(Ordering::Relaxed) {
+        std::thread::sleep(interval);
+        let Some(generation) = read_generation(dir) else {
+            continue; // manifest unreadable mid-write: retry next poll
+        };
+        if generation == state.generation {
+            continue;
+        }
+        let mut guard = registry.lock().unwrap_or_else(PoisonError::into_inner);
+        match Registry::open(dir, retain) {
+            Ok(reloaded) => *guard = reloaded,
+            Err(e) => {
+                eprintln!("watch: manifest reload failed ({e}); keeping served versions");
+                continue;
+            }
+        }
+        let events = sync_published(&mut guard, &mut state, |route, rec| {
+            let snap = Arc::new(ModelSnapshot::with_mode(rec.tm.clone(), rec.version, rec.infer));
+            handle.swap(route, snap).map(drop).map_err(|e| e.to_string())
+        });
+        drop(guard);
+        for ev in events {
+            match ev {
+                SyncEvent::Published {
+                    route,
+                    version,
+                    quarantined,
+                } => {
+                    if quarantined.is_empty() {
+                        eprintln!("watch: route '{route}' -> v{version}");
+                    } else {
+                        eprintln!(
+                            "watch: route '{route}' -> v{version} (quarantined {quarantined:?})"
+                        );
+                    }
+                }
+                SyncEvent::Failed { route, error } => {
+                    eprintln!("watch: route '{route}' kept on its serving version ({error})");
+                }
+            }
+        }
+    }
+}
+
+/// The serve loop's stop flag, wired to SIGINT/SIGTERM on unix: the
+/// handler sets a static; a bridge thread forwards it here so
+/// `serve_tcp_with` stops accepting and the caller drains and exits 0.
+fn shutdown_flag() -> Arc<AtomicBool> {
+    let stop = Arc::new(AtomicBool::new(false));
+    #[cfg(unix)]
+    {
+        sig::install();
+        let stop_bridge = Arc::clone(&stop);
+        std::thread::Builder::new()
+            .name("tmi-signals".into())
+            .spawn(move || loop {
+                if sig::SHUTDOWN.load(Ordering::SeqCst) {
+                    eprintln!("shutdown: signal received");
+                    stop_bridge.store(true, Ordering::SeqCst);
+                    return;
+                }
+                if stop_bridge.load(Ordering::SeqCst) {
+                    return;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(25));
+            })
+            .expect("spawning signal bridge thread");
+    }
+    stop
+}
+
+/// Minimal libc-free signal hookup (the offline build has no signal
+/// crate): `signal(2)` registers a handler that only stores an atomic
+/// flag (async-signal-safe); [`shutdown_flag`]'s bridge thread does
+/// everything else outside signal context.
+#[cfg(unix)]
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    pub static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+
+    extern "C" fn on_signal(_signum: i32) {
+        SHUTDOWN.store(true, Ordering::SeqCst);
+    }
+
+    /// Install the handler for SIGINT (2) and SIGTERM (15).
+    pub fn install() {
+        unsafe {
+            signal(2, on_signal as extern "C" fn(i32) as usize);
+            signal(15, on_signal as extern "C" fn(i32) as usize);
+        }
+    }
+}
+
+/// `tmi registry <ls|verify|gc>` — inspect and maintain a registry
+/// directory without serving it.
+fn cmd_registry(action: &str, args: &Args) -> Result<()> {
+    let dir = args
+        .get("registry")
+        .or_else(|| args.get("dir"))
+        .context("--registry <dir> required")?;
+    let retain: usize = args.parse_or("retain", DEFAULT_RETAIN)?;
+    match action {
+        "ls" => {
+            let registry = Registry::open(dir, retain)?;
+            println!(
+                "registry {} (generation {})",
+                registry.dir().display(),
+                registry.generation()
+            );
+            for (name, entry) in registry.routes() {
+                let versions: Vec<String> = entry
+                    .versions
+                    .iter()
+                    .map(|v| format!("v{}:{}B", v.version, v.bytes))
+                    .collect();
+                println!(
+                    "  {name}  published=v{}  infer={}  versions=[{}]",
+                    entry.published,
+                    entry.infer.name(),
+                    versions.join(" ")
+                );
+            }
+            Ok(())
+        }
+        "verify" => {
+            let registry = Registry::open(dir, retain)?;
+            let issues = registry.verify();
+            for i in &issues {
+                println!("DAMAGED {}/v{} ({}): {}", i.route, i.version, i.file, i.why);
+            }
+            ensure!(
+                issues.is_empty(),
+                "{} damaged snapshot file(s)",
+                issues.len()
+            );
+            println!("ok: every recorded snapshot matches its digest");
+            Ok(())
+        }
+        "gc" => {
+            let mut registry = Registry::open(dir, retain)?;
+            let report = registry.gc()?;
+            println!(
+                "gc: pruned {} version(s), removed {} unreferenced file(s)",
+                report.pruned_versions, report.removed_files
+            );
+            Ok(())
+        }
+        other => bail!("unknown registry action '{other}' (ls|verify|gc)"),
     }
 }
 
@@ -665,9 +998,11 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: tmi <train|eval|table|work-ratio|serve|loadgen|info> [--key value ...]
+const USAGE: &str = "usage: tmi <train|eval|table|work-ratio|serve|loadgen|registry|info> [--key value ...]
   train      --dataset mnist|fashion|imdb [--levels N|--features N] --clauses N
              --epochs N [--backend naive|bitpacked|indexed] [--out model.tm]
+             [--registry DIR [--route NAME] [--retain K]]  (publish the trained
+                             model as the route's next registry version)
              [--samples N] [--data-dir DIR] [--threshold T] [--s S] [--seed N]
              [--weighted]   (integer clause weights, paper ref [8])
              [--threads N]  (clause-sharded parallel training; 1 = sequential,
@@ -684,14 +1019,20 @@ const USAGE: &str = "usage: tmi <train|eval|table|work-ratio|serve|loadgen|info>
              [--infer auto|dense|sparse]
   table      --id 1|2|3 [--scale quick|standard|paper] [--out-dir results/]
   work-ratio --dataset ... --clauses N [--epochs N]
-  serve      --model model.tm [--artifacts artifacts/] [--listen host:port]
+  serve      --model model.tm | --registry DIR  [--artifacts artifacts/]
+             [--listen host:port]
+             [--registry DIR] (recover every route from the manifest: damaged
+                               snapshots are checksum-quarantined, surviving
+                               routes serve; SIGTERM/SIGINT drain and exit 0)
+             [--retain K]     (registry versions kept per route, default 4)
              [--workers N]    (batcher workers sharing the route queue;
                                indexed backend, hot-swappable snapshot route)
              [--queue-cap N]  (admission bound per route; beyond it requests
                                are shed with 'err overloaded'; default 1024)
              [--max-conns N]  (TCP connection cap, reaped pool; default 256)
-             [--watch]        (poll --model for changes and hot-swap the
-                               'cpu' route to the new version, zero downtime)
+             [--watch]        (hot-swap on change, zero downtime: with --model,
+                               poll the file's content digest; with --registry,
+                               poll the manifest generation)
              [--watch-interval-ms N]   (poll period, default 500)
              [--infer auto|dense|sparse]
              [--backend B] [--parallel N]  (ablation backends serve through a
@@ -701,6 +1042,10 @@ const USAGE: &str = "usage: tmi <train|eval|table|work-ratio|serve|loadgen|info>
              [--rate R]   (total offered req/s, open loop; 0 = closed loop)
              [--out BENCH_serve.json] [--seed N]
              [--assert-min-ok N] [--assert-max-shed-rate F]   (CI gates)
+  registry   <ls|verify|gc> --registry DIR [--retain K]
+             ls: routes, published versions, retained files
+             verify: re-checksum every recorded snapshot (exit 1 on damage)
+             gc: prune to --retain and delete unreferenced snapshot files
   info       [--artifacts artifacts/]";
 
 fn main() -> Result<()> {
@@ -709,6 +1054,19 @@ fn main() -> Result<()> {
         eprintln!("{USAGE}");
         std::process::exit(2);
     };
+    // `registry` takes a positional action: tmi registry <ls|verify|gc>
+    if cmd == "registry" {
+        let Some(action) = argv.get(1).filter(|a| !a.starts_with("--")) else {
+            eprintln!("registry needs an action: tmi registry <ls|verify|gc> --registry DIR");
+            std::process::exit(2);
+        };
+        let args = Args::parse(&argv[2..])?;
+        if args.has_flag("help") {
+            println!("{USAGE}");
+            return Ok(());
+        }
+        return cmd_registry(action, &args);
+    }
     let args = Args::parse(&argv[1..])?;
     if args.has_flag("help") {
         println!("{USAGE}");

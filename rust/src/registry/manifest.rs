@@ -1,0 +1,338 @@
+//! The registry's route table: a small JSON document, atomically
+//! rewritten on every mutation, with the previous generation kept as
+//! `.bak` so a half-written rewrite never loses the registry.
+//!
+//! ```json
+//! {"format": 1, "generation": 7, "routes": {
+//!    "cpu": {"infer": "auto", "published": 3, "versions": [
+//!       {"version": 2, "file": "cpu/v000002.tm", "crc32": 123, "bytes": 9182},
+//!       {"version": 3, "file": "cpu/v000003.tm", "crc32": 456, "bytes": 9182}]}}}
+//! ```
+//!
+//! `generation` increments on every store — it is what `--watch`
+//! pollers compare ([`crate::registry::watch`]), so a rewrite that
+//! happens to preserve mtime and length is still observed. `crc32` is
+//! the digest of the complete on-disk file image (magic, body, footer),
+//! letting recovery reject a damaged file without even parsing it.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use crate::engine::InferMode;
+use crate::registry::store::RegistryError;
+use crate::util::Json;
+
+pub const MANIFEST: &str = "manifest.json";
+pub const MANIFEST_TMP: &str = "manifest.json.tmp";
+pub const MANIFEST_BAK: &str = "manifest.json.bak";
+
+/// One retained model file of one route.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VersionEntry {
+    pub version: u64,
+    /// Path relative to the registry root (`<route>/v000001.tm`).
+    pub file: String,
+    /// CRC-32 of the complete file image as written.
+    pub crc32: u32,
+    pub bytes: u64,
+}
+
+/// One route: engine policy, the published (serving) version, and the
+/// retained version list in ascending version order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RouteEntry {
+    pub infer: InferMode,
+    pub published: u64,
+    pub versions: Vec<VersionEntry>,
+}
+
+/// The whole route table.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Manifest {
+    pub generation: u64,
+    pub routes: BTreeMap<String, RouteEntry>,
+}
+
+/// A manifest load that may have fallen back to the `.bak` generation.
+#[derive(Clone, Debug)]
+pub struct LoadedManifest {
+    pub manifest: Manifest,
+    /// True iff `manifest.json` was missing/corrupt and `.bak` was used
+    /// — the caller should rewrite the live file.
+    pub from_backup: bool,
+}
+
+impl Manifest {
+    pub fn to_json(&self) -> Json {
+        let routes: BTreeMap<String, Json> = self
+            .routes
+            .iter()
+            .map(|(name, e)| {
+                let versions: Vec<Json> = e
+                    .versions
+                    .iter()
+                    .map(|v| {
+                        Json::obj([
+                            ("version", Json::num(v.version as f64)),
+                            ("file", Json::str(&v.file)),
+                            ("crc32", Json::num(v.crc32 as f64)),
+                            ("bytes", Json::num(v.bytes as f64)),
+                        ])
+                    })
+                    .collect();
+                let entry = Json::obj([
+                    ("infer", Json::str(e.infer.name())),
+                    ("published", Json::num(e.published as f64)),
+                    ("versions", Json::Arr(versions)),
+                ]);
+                (name.clone(), entry)
+            })
+            .collect();
+        Json::obj([
+            ("format", Json::num(1.0)),
+            ("generation", Json::num(self.generation as f64)),
+            ("routes", Json::Obj(routes)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Manifest, String> {
+        match v.get("format").and_then(Json::as_usize) {
+            Some(1) => {}
+            other => return Err(format!("unsupported manifest format {other:?}")),
+        }
+        let generation = v
+            .get("generation")
+            .and_then(Json::as_usize)
+            .ok_or("missing generation")? as u64;
+        let Some(Json::Obj(route_map)) = v.get("routes") else {
+            return Err("missing routes object".to_string());
+        };
+        let mut routes = BTreeMap::new();
+        for (name, rv) in route_map {
+            let infer: InferMode = rv
+                .get("infer")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("route '{name}': missing infer"))?
+                .parse()
+                .map_err(|e| format!("route '{name}': {e}"))?;
+            let published = rv
+                .get("published")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| format!("route '{name}': missing published"))?
+                as u64;
+            let vs = rv
+                .get("versions")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| format!("route '{name}': missing versions"))?;
+            let mut versions = Vec::with_capacity(vs.len());
+            for vv in vs {
+                let field = |k: &str| {
+                    vv.get(k)
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| format!("route '{name}': version missing {k}"))
+                };
+                versions.push(VersionEntry {
+                    version: field("version")? as u64,
+                    file: vv
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| format!("route '{name}': version missing file"))?
+                        .to_string(),
+                    crc32: field("crc32")? as u32,
+                    bytes: field("bytes")? as u64,
+                });
+            }
+            versions.sort_by_key(|v| v.version);
+            routes.insert(
+                name.clone(),
+                RouteEntry {
+                    infer,
+                    published,
+                    versions,
+                },
+            );
+        }
+        Ok(Manifest { generation, routes })
+    }
+
+    /// Atomically persist: write `.tmp`, fsync, demote the live file to
+    /// `.bak`, rename `.tmp` into place. A crash at any point leaves
+    /// either the new manifest, the old one, or the `.bak` — never a
+    /// torn live file that parses.
+    pub fn store(&self, dir: &Path) -> std::io::Result<()> {
+        let live = dir.join(MANIFEST);
+        let tmp = dir.join(MANIFEST_TMP);
+        let bak = dir.join(MANIFEST_BAK);
+        {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(self.to_json().to_string().as_bytes())?;
+            f.write_all(b"\n")?;
+            f.sync_all()?;
+        }
+        if live.exists() {
+            let _ = std::fs::rename(&live, &bak);
+        }
+        std::fs::rename(&tmp, &live)?;
+        // best-effort directory fsync so the renames themselves are
+        // durable (Linux requires it; other platforms may refuse)
+        #[cfg(unix)]
+        {
+            let _ = std::fs::File::open(dir).and_then(|d| d.sync_all());
+        }
+        Ok(())
+    }
+
+    /// Load from `dir`, falling back to `.bak` when the live file is
+    /// missing or does not parse (half-written by a crashed writer).
+    /// No manifest at all means a fresh, empty registry.
+    pub fn load(dir: &Path) -> Result<LoadedManifest, RegistryError> {
+        match read_manifest_file(&dir.join(MANIFEST)) {
+            Ok(Some(m)) => Ok(LoadedManifest {
+                manifest: m,
+                from_backup: false,
+            }),
+            live_result => match read_manifest_file(&dir.join(MANIFEST_BAK)) {
+                Ok(Some(m)) => Ok(LoadedManifest {
+                    manifest: m,
+                    from_backup: true,
+                }),
+                _ => match live_result {
+                    // neither file exists: fresh registry
+                    Ok(None) => Ok(LoadedManifest {
+                        manifest: Manifest::default(),
+                        from_backup: false,
+                    }),
+                    Ok(Some(_)) => unreachable!("handled above"),
+                    Err(e) => Err(e),
+                },
+            },
+        }
+    }
+}
+
+/// Read one manifest file: `Ok(None)` if absent, `Err` if present but
+/// unreadable or unparseable.
+fn read_manifest_file(path: &Path) -> Result<Option<Manifest>, RegistryError> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(RegistryError::Io(e)),
+    };
+    let v = Json::parse(&text)
+        .map_err(|e| RegistryError::CorruptManifest(format!("{}: {e}", path.display())))?;
+    Manifest::from_json(&v)
+        .map(Some)
+        .map_err(|e| RegistryError::CorruptManifest(format!("{}: {e}", path.display())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        let mut routes = BTreeMap::new();
+        routes.insert(
+            "cpu".to_string(),
+            RouteEntry {
+                infer: InferMode::Auto,
+                published: 2,
+                versions: vec![
+                    VersionEntry {
+                        version: 1,
+                        file: "cpu/v000001.tm".into(),
+                        crc32: 0xDEAD_BEEF,
+                        bytes: 812,
+                    },
+                    VersionEntry {
+                        version: 2,
+                        file: "cpu/v000002.tm".into(),
+                        crc32: 42,
+                        bytes: 813,
+                    },
+                ],
+            },
+        );
+        routes.insert(
+            "xla".to_string(),
+            RouteEntry {
+                infer: InferMode::Dense,
+                published: 1,
+                versions: vec![VersionEntry {
+                    version: 1,
+                    file: "xla/v000001.tm".into(),
+                    crc32: 7,
+                    bytes: 99,
+                }],
+            },
+        );
+        Manifest {
+            generation: 9,
+            routes,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let m = sample();
+        let back = Manifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(m, back);
+        // emission is deterministic (BTreeMap keys)
+        assert_eq!(m.to_json().to_string(), back.to_json().to_string());
+    }
+
+    #[test]
+    fn from_json_rejects_malformed() {
+        for bad in [
+            r#"{"generation": 1, "routes": {}}"#,
+            r#"{"format": 2, "generation": 1, "routes": {}}"#,
+            r#"{"format": 1, "routes": {}}"#,
+            r#"{"format": 1, "generation": 1}"#,
+            r#"{"format": 1, "generation": 1, "routes": {"r": {"published": 1, "versions": []}}}"#,
+            r#"{"format": 1, "generation": 1, "routes": {"r": {"infer": "warp", "published": 1, "versions": []}}}"#,
+        ] {
+            let v = Json::parse(bad).unwrap();
+            assert!(Manifest::from_json(&v).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn store_load_with_backup_fallback() {
+        let dir = std::env::temp_dir().join(format!("tmi-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let m1 = Manifest {
+            generation: 1,
+            ..Default::default()
+        };
+        m1.store(&dir).unwrap();
+        let m2 = sample();
+        m2.store(&dir).unwrap();
+        // live is generation 9, bak holds generation 1
+        let loaded = Manifest::load(&dir).unwrap();
+        assert!(!loaded.from_backup);
+        assert_eq!(loaded.manifest, m2);
+
+        // half-written live file: fall back to .bak (the previous store
+        // demoted m1 there)
+        std::fs::write(dir.join(MANIFEST), r#"{"format": 1, "gen"#).unwrap();
+        let loaded = Manifest::load(&dir).unwrap();
+        assert!(loaded.from_backup);
+        assert_eq!(loaded.manifest.generation, 1);
+
+        // no manifest at all: fresh registry
+        std::fs::remove_file(dir.join(MANIFEST)).unwrap();
+        std::fs::remove_file(dir.join(MANIFEST_BAK)).unwrap();
+        let loaded = Manifest::load(&dir).unwrap();
+        assert!(!loaded.from_backup);
+        assert_eq!(loaded.manifest, Manifest::default());
+
+        // corrupt live and no bak: a typed error, not a fresh registry
+        // (silently discarding a damaged route table would be data loss)
+        std::fs::write(dir.join(MANIFEST), "not json").unwrap();
+        assert!(matches!(
+            Manifest::load(&dir),
+            Err(RegistryError::CorruptManifest(_))
+        ));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,37 @@
+//! The durable side of serving: an on-disk, versioned snapshot store.
+//!
+//! Layout under the registry root (`tmi serve --registry <dir>`):
+//!
+//! ```text
+//! <dir>/manifest.json        current route table (atomically rewritten)
+//! <dir>/manifest.json.bak    previous generation (crash fallback)
+//! <dir>/<route>/v000001.tm   checksummed v3 model files, one per version
+//! <dir>/quarantine/          torn/corrupt files moved aside, never served
+//! ```
+//!
+//! The manifest is the single source of truth: route name, infer mode,
+//! published version, and the CRC-32 digest + byte length of every
+//! retained model file. A restarted server rebuilds its whole route
+//! table from the manifest alone ([`Registry::open`] +
+//! [`Registry::load_published`]); any file whose digest no longer
+//! matches — truncated by a crashed writer, bit-flipped by the fault
+//! harness — is *quarantined* (moved to `quarantine/`, dropped from the
+//! manifest) and recovery falls back to the newest intact version
+//! instead of panicking.
+//!
+//! Writes are crash-ordered throughout: model files and the manifest
+//! are written to a `.tmp` sibling, fsynced, then renamed into place,
+//! and the previous manifest generation is kept as `.bak` so a torn
+//! manifest rewrite degrades to the last good route table.
+//!
+//! [`watch`] replaces the old mtime/length file poll for `--watch`
+//! mode: pollers compare the manifest *generation* (bumped on every
+//! mutation), so a same-mtime same-length rewrite can never be missed.
+
+pub mod manifest;
+pub mod store;
+pub mod watch;
+
+pub use manifest::{Manifest, RouteEntry, VersionEntry};
+pub use store::{GcReport, RecoveredModel, Registry, RegistryError, VerifyIssue};
+pub use watch::{read_generation, sync_published, SyncEvent, WatchState};

@@ -1,0 +1,561 @@
+//! [`Registry`]: publish, recover, verify, and garbage-collect
+//! versioned model snapshots on disk.
+//!
+//! Every mutation is crash-ordered (tmp + fsync + rename) and bumps the
+//! manifest generation. Recovery ([`Registry::load_published`]) walks a
+//! route's versions newest-first, validating each file's recorded
+//! CRC-32 digest *before* parsing it; damaged files are moved to
+//! `quarantine/` and dropped from the manifest, and the newest intact
+//! version wins. Only a route with no intact version at all fails — and
+//! that failure is a typed error the server turns into "skip this
+//! route", never a panic.
+
+use std::collections::BTreeSet;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::engine::InferMode;
+use crate::registry::manifest::{Manifest, RouteEntry, VersionEntry};
+use crate::tm::classifier::MultiClassTM;
+use crate::tm::io::{self, ModelIoError};
+use crate::util::crc32;
+
+/// Subdirectory (under the registry root) for damaged files.
+pub const QUARANTINE_DIR: &str = "quarantine";
+
+/// Default number of versions retained per route.
+pub const DEFAULT_RETAIN: usize = 4;
+
+/// Typed registry failure.
+#[derive(Debug)]
+pub enum RegistryError {
+    Io(std::io::Error),
+    /// The manifest (and its backup) exists but cannot be parsed.
+    CorruptManifest(String),
+    UnknownRoute(String),
+    /// Every retained version of the route failed its digest or parse
+    /// check; all were quarantined.
+    NoIntactVersion(String),
+    /// Route names are path components: `[A-Za-z0-9_-]{1,64}` only.
+    BadRouteName(String),
+    Model(ModelIoError),
+}
+
+impl std::fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RegistryError::Io(e) => write!(f, "registry io error: {e}"),
+            RegistryError::CorruptManifest(why) => write!(f, "corrupt manifest: {why}"),
+            RegistryError::UnknownRoute(r) => write!(f, "unknown route '{r}'"),
+            RegistryError::NoIntactVersion(r) => {
+                write!(f, "route '{r}': no intact version (all quarantined)")
+            }
+            RegistryError::BadRouteName(r) => write!(
+                f,
+                "bad route name '{r}': use 1-64 chars of [A-Za-z0-9_-]"
+            ),
+            RegistryError::Model(e) => write!(f, "model file error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for RegistryError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            RegistryError::Io(e) => Some(e),
+            RegistryError::Model(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for RegistryError {
+    fn from(e: std::io::Error) -> Self {
+        RegistryError::Io(e)
+    }
+}
+
+impl From<ModelIoError> for RegistryError {
+    fn from(e: ModelIoError) -> Self {
+        RegistryError::Model(e)
+    }
+}
+
+/// A recovered serving model plus what recovery had to discard to get
+/// it.
+#[derive(Debug)]
+pub struct RecoveredModel {
+    pub tm: MultiClassTM,
+    pub version: u64,
+    pub infer: InferMode,
+    /// Versions quarantined (newest-first) before an intact one loaded.
+    pub quarantined: Vec<u64>,
+}
+
+/// One `verify` finding: a recorded version whose file is damaged.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VerifyIssue {
+    pub route: String,
+    pub version: u64,
+    pub file: String,
+    pub why: String,
+}
+
+/// What `gc` removed.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct GcReport {
+    /// On-disk `.tm` files not referenced by the manifest.
+    pub removed_files: usize,
+    /// Manifest entries pruned down to the retention bound.
+    pub pruned_versions: usize,
+}
+
+/// Handle to an open on-disk registry. All mutations persist the
+/// manifest before returning.
+pub struct Registry {
+    dir: PathBuf,
+    retain: usize,
+    manifest: Manifest,
+}
+
+fn valid_route_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.len() <= 64
+        && name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+}
+
+impl Registry {
+    /// Open (creating if absent) the registry at `dir`, retaining up to
+    /// `retain` versions per route. Falls back to the `.bak` manifest if
+    /// the live one is torn, and heals the live file in that case.
+    pub fn open(dir: impl Into<PathBuf>, retain: usize) -> Result<Registry, RegistryError> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        let loaded = Manifest::load(&dir)?;
+        let reg = Registry {
+            dir,
+            retain: retain.max(1),
+            manifest: loaded.manifest,
+        };
+        if loaded.from_backup {
+            reg.manifest.store(&reg.dir)?;
+        }
+        Ok(reg)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Monotonic change counter — what `--watch` pollers compare.
+    pub fn generation(&self) -> u64 {
+        self.manifest.generation
+    }
+
+    pub fn routes(&self) -> impl Iterator<Item = (&str, &RouteEntry)> {
+        self.manifest.routes.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    pub fn route(&self, name: &str) -> Option<&RouteEntry> {
+        self.manifest.routes.get(name)
+    }
+
+    /// Persist the manifest (used by graceful shutdown; every mutation
+    /// already stores it, so this is a no-op unless the caller mutated
+    /// state since).
+    pub fn flush(&self) -> Result<(), RegistryError> {
+        self.manifest.store(&self.dir)?;
+        Ok(())
+    }
+
+    /// Publish `tm` as the next version of `route`: write the
+    /// checksummed v3 file (tmp + fsync + rename), record it in the
+    /// manifest, prune retention, bump the generation. Returns the new
+    /// version number.
+    pub fn publish(
+        &mut self,
+        route: &str,
+        tm: &MultiClassTM,
+        infer: InferMode,
+    ) -> Result<u64, RegistryError> {
+        if !valid_route_name(route) {
+            return Err(RegistryError::BadRouteName(route.to_string()));
+        }
+        let bytes = io::serialize(tm);
+        let digest = crc32(&bytes);
+        let entry = self
+            .manifest
+            .routes
+            .entry(route.to_string())
+            .or_insert_with(|| RouteEntry {
+                infer,
+                published: 0,
+                versions: Vec::new(),
+            });
+        let version = entry
+            .versions
+            .last()
+            .map(|v| v.version)
+            .unwrap_or(0)
+            .max(entry.published)
+            + 1;
+        let rel = format!("{route}/v{version:06}.tm");
+        let abs = self.dir.join(&rel);
+        std::fs::create_dir_all(abs.parent().expect("versioned file has a parent"))?;
+        let tmp = abs.with_extension("tm.tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&bytes)?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, &abs)?;
+        entry.infer = infer;
+        entry.published = version;
+        entry.versions.push(VersionEntry {
+            version,
+            file: rel,
+            crc32: digest,
+            bytes: bytes.len() as u64,
+        });
+        while entry.versions.len() > self.retain {
+            let old = entry.versions.remove(0);
+            let _ = std::fs::remove_file(self.dir.join(&old.file));
+        }
+        self.manifest.generation += 1;
+        self.manifest.store(&self.dir)?;
+        Ok(version)
+    }
+
+    /// Recover the newest intact version of `route`: validate the
+    /// recorded digest, then parse the checksummed file. Damaged
+    /// versions are quarantined and recovery falls back to the next
+    /// newest; only a route with nothing intact fails.
+    pub fn load_published(&mut self, route: &str) -> Result<RecoveredModel, RegistryError> {
+        if !self.manifest.routes.contains_key(route) {
+            return Err(RegistryError::UnknownRoute(route.to_string()));
+        }
+        let mut quarantined = Vec::new();
+        loop {
+            let Some(v) = self
+                .manifest
+                .routes
+                .get(route)
+                .and_then(|e| e.versions.last())
+                .cloned()
+            else {
+                if !quarantined.is_empty() {
+                    self.manifest.generation += 1;
+                    self.manifest.store(&self.dir)?;
+                }
+                return Err(RegistryError::NoIntactVersion(route.to_string()));
+            };
+            match check_and_load(&self.dir.join(&v.file), v.crc32) {
+                Ok(tm) => {
+                    let entry = self
+                        .manifest
+                        .routes
+                        .get_mut(route)
+                        .expect("checked above");
+                    let drifted = entry.published != v.version;
+                    entry.published = v.version;
+                    let infer = entry.infer;
+                    if drifted || !quarantined.is_empty() {
+                        self.manifest.generation += 1;
+                        self.manifest.store(&self.dir)?;
+                    }
+                    return Ok(RecoveredModel {
+                        tm,
+                        version: v.version,
+                        infer,
+                        quarantined,
+                    });
+                }
+                Err(_why) => {
+                    self.quarantine_file(route, &v);
+                    quarantined.push(v.version);
+                    self.manifest
+                        .routes
+                        .get_mut(route)
+                        .expect("checked above")
+                        .versions
+                        .pop();
+                }
+            }
+        }
+    }
+
+    /// Move a damaged version's file into `quarantine/` (best-effort:
+    /// an already-missing file has nothing to move).
+    fn quarantine_file(&self, route: &str, v: &VersionEntry) {
+        let qdir = self.dir.join(QUARANTINE_DIR);
+        let _ = std::fs::create_dir_all(&qdir);
+        let dest = qdir.join(format!("{route}-v{:06}.tm", v.version));
+        let _ = std::fs::rename(self.dir.join(&v.file), dest);
+    }
+
+    /// Read-only integrity sweep over every recorded version.
+    pub fn verify(&self) -> Vec<VerifyIssue> {
+        let mut issues = Vec::new();
+        for (route, entry) in &self.manifest.routes {
+            for v in &entry.versions {
+                if let Err(why) = check_and_load(&self.dir.join(&v.file), v.crc32) {
+                    issues.push(VerifyIssue {
+                        route: route.clone(),
+                        version: v.version,
+                        file: v.file.clone(),
+                        why,
+                    });
+                }
+            }
+        }
+        issues
+    }
+
+    /// Prune to the retention bound and delete on-disk `.tm` files the
+    /// manifest no longer references (quarantine is never touched).
+    pub fn gc(&mut self) -> Result<GcReport, RegistryError> {
+        let mut report = GcReport::default();
+        for entry in self.manifest.routes.values_mut() {
+            while entry.versions.len() > self.retain {
+                let old = entry.versions.remove(0);
+                let _ = std::fs::remove_file(self.dir.join(&old.file));
+                report.pruned_versions += 1;
+            }
+        }
+        let referenced: BTreeSet<PathBuf> = self
+            .manifest
+            .routes
+            .values()
+            .flat_map(|e| e.versions.iter())
+            .map(|v| self.dir.join(&v.file))
+            .collect();
+        for route_dir in std::fs::read_dir(&self.dir)? {
+            let route_dir = route_dir?.path();
+            if !route_dir.is_dir()
+                || route_dir.file_name().is_some_and(|n| n == QUARANTINE_DIR)
+            {
+                continue;
+            }
+            for f in std::fs::read_dir(&route_dir)? {
+                let f = f?.path();
+                let is_tm = f.extension().is_some_and(|e| e == "tm");
+                if is_tm && !referenced.contains(&f) {
+                    std::fs::remove_file(&f)?;
+                    report.removed_files += 1;
+                }
+            }
+        }
+        if report.pruned_versions > 0 {
+            self.manifest.generation += 1;
+            self.manifest.store(&self.dir)?;
+        }
+        Ok(report)
+    }
+}
+
+/// Validate the recorded whole-file digest, then parse. The digest
+/// check catches truncation and bit flips without parsing; the parse
+/// (which re-verifies the embedded v3 footer) catches everything else.
+fn check_and_load(path: &Path, want_crc: u32) -> Result<MultiClassTM, String> {
+    let bytes = std::fs::read(path).map_err(|e| format!("unreadable: {e}"))?;
+    let got = crc32(&bytes);
+    if got != want_crc {
+        return Err(format!(
+            "digest mismatch (manifest {want_crc:#010x}, file {got:#010x})"
+        ));
+    }
+    io::load_from(&mut bytes.as_slice()).map_err(|e| e.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::Backend;
+    use crate::tm::params::TMParams;
+    use crate::tm::trainer::Trainer;
+    use crate::util::{BitVec, Rng};
+
+    fn trained(seed: u64) -> MultiClassTM {
+        let params = TMParams::new(2, 8, 10).with_seed(seed);
+        let mut tr = Trainer::new(params, Backend::Indexed);
+        let mut rng = Rng::new(seed ^ 0x5ca1e);
+        let samples: Vec<(BitVec, usize)> = (0..100)
+            .map(|_| {
+                let y = rng.bern(0.5) as usize;
+                let bits: Vec<bool> =
+                    (0..10).map(|k| if k == 0 { y == 0 } else { rng.bern(0.4) }).collect();
+                let mut l = bits.clone();
+                l.extend(bits.iter().map(|b| !b));
+                (BitVec::from_bools(&l), y)
+            })
+            .collect();
+        for _ in 0..2 {
+            tr.train_epoch(samples.iter().map(|(l, y)| (l, *y)));
+        }
+        tr.tm
+    }
+
+    fn tmp_registry(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "tmi-registry-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn publish_recover_roundtrip_is_bit_identical() {
+        let dir = tmp_registry("roundtrip");
+        let mut reg = Registry::open(&dir, 4).unwrap();
+        let tm = trained(3);
+        let v = reg.publish("cpu", &tm, InferMode::Auto).unwrap();
+        assert_eq!(v, 1);
+        assert_eq!(reg.generation(), 1);
+
+        // a fresh handle (restart) recovers from the manifest alone
+        let mut reg2 = Registry::open(&dir, 4).unwrap();
+        let rec = reg2.load_published("cpu").unwrap();
+        assert_eq!(rec.version, 1);
+        assert_eq!(rec.infer, InferMode::Auto);
+        assert!(rec.quarantined.is_empty());
+        assert_eq!(io::model_digest(&rec.tm), io::model_digest(&tm));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn retention_prunes_oldest_versions_and_files() {
+        let dir = tmp_registry("retain");
+        let mut reg = Registry::open(&dir, 2).unwrap();
+        let tm = trained(4);
+        for want in 1..=5u64 {
+            assert_eq!(reg.publish("cpu", &tm, InferMode::Auto).unwrap(), want);
+        }
+        let entry = reg.route("cpu").unwrap();
+        let kept: Vec<u64> = entry.versions.iter().map(|v| v.version).collect();
+        assert_eq!(kept, vec![4, 5]);
+        assert_eq!(entry.published, 5);
+        assert!(!dir.join("cpu/v000001.tm").exists());
+        assert!(dir.join("cpu/v000005.tm").exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn truncated_newest_falls_back_and_quarantines() {
+        let dir = tmp_registry("trunc");
+        let mut reg = Registry::open(&dir, 4).unwrap();
+        let tm1 = trained(5);
+        let tm2 = trained(6);
+        reg.publish("cpu", &tm1, InferMode::Auto).unwrap();
+        reg.publish("cpu", &tm2, InferMode::Auto).unwrap();
+        // tear v2 in half (simulates a crash mid-write that somehow
+        // bypassed the atomic rename)
+        let v2 = dir.join("cpu/v000002.tm");
+        let bytes = std::fs::read(&v2).unwrap();
+        std::fs::write(&v2, &bytes[..bytes.len() / 2]).unwrap();
+
+        let mut reg = Registry::open(&dir, 4).unwrap();
+        let rec = reg.load_published("cpu").unwrap();
+        assert_eq!(rec.version, 1, "fell back to the intact version");
+        assert_eq!(rec.quarantined, vec![2]);
+        assert_eq!(io::model_digest(&rec.tm), io::model_digest(&tm1));
+        assert!(dir.join("quarantine/cpu-v000002.tm").exists());
+        assert!(!v2.exists());
+        // the manifest was rewritten: a second recovery is clean
+        let mut reg = Registry::open(&dir, 4).unwrap();
+        let rec = reg.load_published("cpu").unwrap();
+        assert_eq!(rec.version, 1);
+        assert!(rec.quarantined.is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn all_versions_corrupt_is_a_typed_error() {
+        let dir = tmp_registry("allbad");
+        let mut reg = Registry::open(&dir, 4).unwrap();
+        reg.publish("cpu", &trained(7), InferMode::Auto).unwrap();
+        // bit-flip the only version
+        let f = dir.join("cpu/v000001.tm");
+        let mut bytes = std::fs::read(&f).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&f, &bytes).unwrap();
+
+        let mut reg = Registry::open(&dir, 4).unwrap();
+        assert!(matches!(
+            reg.load_published("cpu"),
+            Err(RegistryError::NoIntactVersion(_))
+        ));
+        assert!(dir.join("quarantine/cpu-v000001.tm").exists());
+        assert!(matches!(
+            reg.load_published("nope"),
+            Err(RegistryError::UnknownRoute(_))
+        ));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn verify_reports_damage_without_mutating() {
+        let dir = tmp_registry("verify");
+        let mut reg = Registry::open(&dir, 4).unwrap();
+        reg.publish("a", &trained(8), InferMode::Auto).unwrap();
+        reg.publish("b", &trained(9), InferMode::Sparse).unwrap();
+        assert!(reg.verify().is_empty());
+        let f = dir.join("a/v000001.tm");
+        let mut bytes = std::fs::read(&f).unwrap();
+        bytes[10] ^= 1;
+        std::fs::write(&f, &bytes).unwrap();
+        let issues = reg.verify();
+        assert_eq!(issues.len(), 1);
+        assert_eq!(issues[0].route, "a");
+        assert_eq!(issues[0].version, 1);
+        assert!(issues[0].why.contains("digest mismatch"), "{}", issues[0].why);
+        // verify did not quarantine or rewrite anything
+        assert!(f.exists());
+        assert_eq!(reg.generation(), 2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn gc_removes_unreferenced_files_and_prunes() {
+        let dir = tmp_registry("gc");
+        let mut reg = Registry::open(&dir, 4).unwrap();
+        let tm = trained(10);
+        for _ in 0..3 {
+            reg.publish("cpu", &tm, InferMode::Auto).unwrap();
+        }
+        // an orphan file the manifest knows nothing about
+        std::fs::write(dir.join("cpu/v000099.tm"), b"orphan").unwrap();
+        // retention shrinks on reopen: gc prunes down to it
+        let mut reg = Registry::open(&dir, 1).unwrap();
+        let report = reg.gc().unwrap();
+        assert_eq!(report.removed_files, 1);
+        assert_eq!(report.pruned_versions, 2);
+        assert!(!dir.join("cpu/v000099.tm").exists());
+        assert!(!dir.join("cpu/v000001.tm").exists());
+        assert!(dir.join("cpu/v000003.tm").exists());
+        let mut reg = Registry::open(&dir, 1).unwrap();
+        assert!(reg.load_published("cpu").is_ok());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bad_route_names_are_rejected() {
+        let dir = tmp_registry("names");
+        let mut reg = Registry::open(&dir, 4).unwrap();
+        let tm = trained(11);
+        for bad in ["", "../escape", "a/b", "a b", &"x".repeat(65)] {
+            assert!(
+                matches!(
+                    reg.publish(bad, &tm, InferMode::Auto),
+                    Err(RegistryError::BadRouteName(_))
+                ),
+                "accepted route name {bad:?}"
+            );
+        }
+        assert!(reg.publish("ok_name-1", &tm, InferMode::Auto).is_ok());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,253 @@
+//! Manifest-generation polling for `tmi serve --registry --watch`.
+//!
+//! The old file watch compared `(mtime, len)` of the model file — a
+//! rewrite that lands within the filesystem's mtime granularity with
+//! the same byte length is invisible to it. The registry watch compares
+//! the manifest **generation**, a counter bumped on every registry
+//! mutation, so no rewrite can ever be missed; and because recovery
+//! runs through [`Registry::load_published`], a corrupt file published
+//! mid-watch is quarantined while the route keeps serving its current
+//! snapshot.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::registry::manifest::Manifest;
+use crate::registry::store::{RecoveredModel, Registry};
+
+/// Cheap poll: the current manifest generation, or `None` when no
+/// readable manifest exists (including mid-rewrite with no backup —
+/// the poller just tries again).
+pub fn read_generation(dir: &Path) -> Option<u64> {
+    Manifest::load(dir).ok().map(|l| l.manifest.generation)
+}
+
+/// Poller state: the generation last acted on and the version currently
+/// served per route.
+#[derive(Clone, Debug, Default)]
+pub struct WatchState {
+    pub generation: u64,
+    pub served: BTreeMap<String, u64>,
+}
+
+/// What one [`sync_published`] pass did for one route.
+#[derive(Debug)]
+pub enum SyncEvent {
+    /// A newer intact version was recovered and handed to `apply`.
+    Published {
+        route: String,
+        version: u64,
+        /// Versions quarantined on the way to the intact one.
+        quarantined: Vec<u64>,
+    },
+    /// Recovery (or the caller's `apply`) failed; the route keeps
+    /// serving whatever it served before.
+    Failed { route: String, error: String },
+}
+
+/// Reconcile served versions with the registry: for every route whose
+/// published version differs from `state.served`, recover it and hand
+/// the result to `apply` (which swaps it into the coordinator). The
+/// route's served version is only advanced when `apply` succeeds, so a
+/// failed recovery never drops a serving route.
+pub fn sync_published(
+    registry: &mut Registry,
+    state: &mut WatchState,
+    mut apply: impl FnMut(&str, &RecoveredModel) -> Result<(), String>,
+) -> Vec<SyncEvent> {
+    let mut events = Vec::new();
+    let targets: Vec<(String, u64)> = registry
+        .routes()
+        .map(|(name, e)| (name.to_string(), e.published))
+        .collect();
+    for (route, published) in targets {
+        if state.served.get(&route) == Some(&published) {
+            continue;
+        }
+        match registry.load_published(&route) {
+            Ok(rec) => match apply(&route, &rec) {
+                Ok(()) => {
+                    state.served.insert(route.clone(), rec.version);
+                    events.push(SyncEvent::Published {
+                        route,
+                        version: rec.version,
+                        quarantined: rec.quarantined,
+                    });
+                }
+                Err(error) => events.push(SyncEvent::Failed { route, error }),
+            },
+            // NoIntactVersion while an older version is still serving is
+            // the quarantine-without-dropping case: `served` is left
+            // alone, so the route keeps answering on its last good
+            // snapshot and recovery is retried on the next generation.
+            Err(e) => events.push(SyncEvent::Failed {
+                route,
+                error: e.to_string(),
+            }),
+        }
+    }
+    state.generation = registry.generation();
+    events
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::InferMode;
+    use crate::eval::Backend;
+    use crate::tm::classifier::MultiClassTM;
+    use crate::tm::io;
+    use crate::tm::params::TMParams;
+    use crate::tm::trainer::Trainer;
+    use crate::util::{BitVec, Rng};
+    use std::path::PathBuf;
+
+    fn trained(seed: u64) -> MultiClassTM {
+        let params = TMParams::new(2, 8, 10).with_seed(seed);
+        let mut tr = Trainer::new(params, Backend::Indexed);
+        let mut rng = Rng::new(seed ^ 0xfeed);
+        let samples: Vec<(BitVec, usize)> = (0..100)
+            .map(|_| {
+                let y = rng.bern(0.5) as usize;
+                let bits: Vec<bool> =
+                    (0..10).map(|k| if k == 0 { y == 0 } else { rng.bern(0.4) }).collect();
+                let mut l = bits.clone();
+                l.extend(bits.iter().map(|b| !b));
+                (BitVec::from_bools(&l), y)
+            })
+            .collect();
+        for _ in 0..2 {
+            tr.train_epoch(samples.iter().map(|(l, y)| (l, *y)));
+        }
+        tr.tm
+    }
+
+    fn tmp_registry(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "tmi-watch-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn generation_observes_every_publish() {
+        let dir = tmp_registry("gen");
+        assert_eq!(read_generation(&dir), None);
+        let mut reg = Registry::open(&dir, 4).unwrap();
+        assert_eq!(read_generation(&dir), Some(0));
+        let tm = trained(3);
+        reg.publish("cpu", &tm, InferMode::Auto).unwrap();
+        assert_eq!(read_generation(&dir), Some(1));
+        // republishing *identical* content — the same-length rewrite an
+        // (mtime, len) stamp can miss — still moves the generation
+        reg.publish("cpu", &tm, InferMode::Auto).unwrap();
+        assert_eq!(read_generation(&dir), Some(2));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn sync_publishes_new_versions_once() {
+        let dir = tmp_registry("sync");
+        let mut reg = Registry::open(&dir, 4).unwrap();
+        let tm1 = trained(4);
+        reg.publish("cpu", &tm1, InferMode::Auto).unwrap();
+        let mut state = WatchState::default();
+        let mut applied = Vec::new();
+        let events = sync_published(&mut reg, &mut state, |route, rec| {
+            applied.push((route.to_string(), rec.version, io::model_digest(&rec.tm)));
+            Ok(())
+        });
+        assert_eq!(events.len(), 1);
+        assert!(matches!(
+            &events[0],
+            SyncEvent::Published { route, version: 1, .. } if route == "cpu"
+        ));
+        assert_eq!(applied, vec![("cpu".to_string(), 1, io::model_digest(&tm1))]);
+        assert_eq!(state.served.get("cpu"), Some(&1));
+
+        // steady state: nothing to do
+        let events = sync_published(&mut reg, &mut state, |_, _| {
+            panic!("no new version to apply")
+        });
+        assert!(events.is_empty());
+
+        // a new publish is picked up exactly once
+        let tm2 = trained(5);
+        reg.publish("cpu", &tm2, InferMode::Auto).unwrap();
+        let mut swaps = 0;
+        let events = sync_published(&mut reg, &mut state, |_, rec| {
+            swaps += 1;
+            assert_eq!(io::model_digest(&rec.tm), io::model_digest(&tm2));
+            Ok(())
+        });
+        assert_eq!((events.len(), swaps), (1, 1));
+        assert_eq!(state.served.get("cpu"), Some(&2));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_publish_mid_watch_keeps_route_serving() {
+        let dir = tmp_registry("corrupt");
+        let mut reg = Registry::open(&dir, 4).unwrap();
+        let tm1 = trained(6);
+        reg.publish("cpu", &tm1, InferMode::Auto).unwrap();
+        let mut state = WatchState::default();
+        let _ = sync_published(&mut reg, &mut state, |_, _| Ok(()));
+        assert_eq!(state.served.get("cpu"), Some(&1));
+
+        // v2 lands corrupt (bit-flipped after write)
+        let tm2 = trained(7);
+        reg.publish("cpu", &tm2, InferMode::Auto).unwrap();
+        let f = dir.join("cpu/v000002.tm");
+        let mut bytes = std::fs::read(&f).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        std::fs::write(&f, &bytes).unwrap();
+
+        // the watch falls back to v1: recovery quarantines v2, re-loads
+        // v1, and the route is *not* dropped. apply sees v1 again —
+        // semantically a no-op republish of the still-good version.
+        let mut applied = Vec::new();
+        let events = sync_published(&mut reg, &mut state, |route, rec| {
+            applied.push((route.to_string(), rec.version));
+            Ok(())
+        });
+        assert_eq!(events.len(), 1);
+        match &events[0] {
+            SyncEvent::Published {
+                version,
+                quarantined,
+                ..
+            } => {
+                assert_eq!(*version, 1);
+                assert_eq!(quarantined, &vec![2]);
+            }
+            other => panic!("expected Published, got {other:?}"),
+        }
+        assert_eq!(state.served.get("cpu"), Some(&1));
+        assert!(dir.join("quarantine/cpu-v000002.tm").exists());
+
+        // steady state again — the quarantine is not re-processed
+        let events = sync_published(&mut reg, &mut state, |_, _| {
+            panic!("nothing new")
+        });
+        assert!(events.is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn failed_apply_leaves_served_version_alone() {
+        let dir = tmp_registry("applyfail");
+        let mut reg = Registry::open(&dir, 4).unwrap();
+        reg.publish("cpu", &trained(8), InferMode::Auto).unwrap();
+        let mut state = WatchState::default();
+        let events =
+            sync_published(&mut reg, &mut state, |_, _| Err("width mismatch".into()));
+        assert_eq!(events.len(), 1);
+        assert!(matches!(&events[0], SyncEvent::Failed { error, .. } if error.contains("width")));
+        assert!(state.served.is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,7 +1,11 @@
 //! Model persistence and densification.
 //!
-//! * Binary save/load of a trained machine (magic + params JSON + raw TA
-//!   state bytes) — keeps the serving coordinator restartable.
+//! * Binary save/load of a trained machine — keeps the serving
+//!   coordinator restartable. Format **v3** (`TMINDEX3`): magic +
+//!   params JSON + raw TA state bytes + clause weights + a CRC-32
+//!   footer over everything before it, so torn or bit-flipped files
+//!   are *detected* ([`ModelIoError::Corrupt`]) instead of silently
+//!   served. v2 files (`TMINDEX2`, no footer) still load.
 //! * [`DenseModel`]: the dense f32 arrays the AOT-compiled XLA
 //!   executable consumes (`include`, `count`, `polarity` — see
 //!   `python/compile/model.py` for the layout contract).
@@ -17,17 +21,71 @@
 use std::io::{Read, Write};
 use std::path::Path;
 
-use anyhow::{ensure, Result};
+use anyhow::Result;
 
 use crate::tm::classifier::MultiClassTM;
 use crate::tm::params::TMParams;
-use crate::util::Json;
+use crate::util::{crc32, Crc32, Json};
 
-const MAGIC: &[u8; 8] = b"TMINDEX2"; // v2: + clause weights per class
+/// v3: v2 body + CRC-32 footer (4 bytes LE, over magic..end-of-body).
+const MAGIC_V3: &[u8; 8] = b"TMINDEX3";
+/// v2: + clause weights per class, no checksum footer (legacy load).
+const MAGIC_V2: &[u8; 8] = b"TMINDEX2";
 
-/// Save a machine to a writer.
-pub fn save_to(tm: &MultiClassTM, w: &mut impl Write) -> Result<()> {
-    w.write_all(MAGIC)?;
+/// Typed model-file load failure. Every malformed input maps to one of
+/// these — there are no panic paths in [`load_from`], so a serving
+/// process can quarantine a bad file and keep answering.
+#[derive(Debug)]
+pub enum ModelIoError {
+    /// The first 8 bytes name neither `TMINDEX3` nor `TMINDEX2`.
+    BadMagic,
+    /// The stream ended before the declared structure did (torn or
+    /// half-written file).
+    Truncated,
+    /// Structurally complete but invalid: checksum mismatch, malformed
+    /// params JSON, or out-of-range field values.
+    Corrupt(String),
+    /// An underlying I/O failure other than EOF.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for ModelIoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ModelIoError::BadMagic => write!(f, "bad magic: not a TM model file"),
+            ModelIoError::Truncated => write!(f, "truncated model file"),
+            ModelIoError::Corrupt(why) => write!(f, "corrupt model file: {why}"),
+            ModelIoError::Io(e) => write!(f, "model io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ModelIoError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ModelIoError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ModelIoError {
+    fn from(e: std::io::Error) -> Self {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            ModelIoError::Truncated
+        } else {
+            ModelIoError::Io(e)
+        }
+    }
+}
+
+fn corrupt(why: impl Into<String>) -> ModelIoError {
+    ModelIoError::Corrupt(why.into())
+}
+
+/// Write the format body (params + states + weights) — everything
+/// between the magic and the v3 footer. Identical for v2 and v3.
+fn write_body(tm: &MultiClassTM, w: &mut impl Write) -> std::io::Result<()> {
     let params = tm.params.to_json().to_string().into_bytes();
     w.write_all(&(params.len() as u64).to_le_bytes())?;
     w.write_all(&params)?;
@@ -43,21 +101,78 @@ pub fn save_to(tm: &MultiClassTM, w: &mut impl Write) -> Result<()> {
     Ok(())
 }
 
-/// Load a machine from a reader.
-pub fn load_from(r: &mut impl Read) -> Result<MultiClassTM> {
-    let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
-    ensure!(&magic == MAGIC, "bad magic: not a TM model file");
+/// Save a machine to a writer in format v3 (checksummed).
+pub fn save_to(tm: &MultiClassTM, w: &mut impl Write) -> Result<()> {
+    let bytes = serialize(tm);
+    w.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Serialize a machine to its complete v3 byte image (magic + body +
+/// CRC-32 footer). The registry stores these bytes verbatim and records
+/// [`crate::util::crc32`] of them as the file digest.
+pub fn serialize(tm: &MultiClassTM) -> Vec<u8> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(MAGIC_V3);
+    write_body(tm, &mut buf).expect("Vec write is infallible");
+    let mut crc = Crc32::new();
+    crc.update(&buf);
+    buf.extend_from_slice(&crc.finish().to_le_bytes());
+    buf
+}
+
+/// Content digest of a machine: CRC-32 of its serialized v3 image.
+/// Two machines share a digest iff their persisted form is
+/// bit-identical — the recovery tests' "scores identically" witness.
+pub fn model_digest(tm: &MultiClassTM) -> u32 {
+    crc32(&serialize(tm))
+}
+
+/// Parse the body header — params length + params JSON — and return
+/// `(params, state_offset, expected_body_len)`. All size arithmetic is
+/// checked: a corrupt dimension field must fail typed, never overflow
+/// or drive a giant allocation.
+fn read_header(bytes: &[u8]) -> Result<(TMParams, usize, usize), ModelIoError> {
+    let mut r = bytes;
     let mut len = [0u8; 8];
     r.read_exact(&mut len)?;
     let len = u64::from_le_bytes(len) as usize;
-    ensure!(len < 1 << 20, "params block implausibly large");
-    let mut params_buf = vec![0u8; len];
-    r.read_exact(&mut params_buf)?;
-    let params_text = std::str::from_utf8(&params_buf)?;
-    let params =
-        TMParams::from_json(&Json::parse(params_text)?).map_err(|e| anyhow::anyhow!(e))?;
+    if len >= 1 << 20 {
+        return Err(corrupt("params block implausibly large"));
+    }
+    if r.len() < len {
+        return Err(ModelIoError::Truncated);
+    }
+    let params_text =
+        std::str::from_utf8(&r[..len]).map_err(|_| corrupt("params block is not UTF-8"))?;
+    let params_json =
+        Json::parse(params_text).map_err(|e| corrupt(format!("params JSON: {e}")))?;
+    let params = TMParams::from_json(&params_json).map_err(corrupt)?;
+    let dims = || corrupt("implausible model dimensions");
+    let row = params
+        .clauses_per_class
+        .checked_mul(params.n_literals())
+        .ok_or_else(dims)?;
+    let per_class = row
+        .checked_add(params.clauses_per_class.checked_mul(4).ok_or_else(dims)?)
+        .ok_or_else(dims)?;
+    let state_offset = 8 + len;
+    let expected = params
+        .classes
+        .checked_mul(per_class)
+        .and_then(|n| n.checked_add(state_offset))
+        .ok_or_else(dims)?;
+    Ok((params, state_offset, expected))
+}
 
+/// Parse the format body out of `bytes` (everything after the magic,
+/// footer already stripped for v3).
+fn read_body(bytes: &[u8]) -> Result<MultiClassTM, ModelIoError> {
+    let (params, state_offset, expected) = read_header(bytes)?;
+    if bytes.len() < expected {
+        return Err(ModelIoError::Truncated);
+    }
+    let mut r = &bytes[state_offset..];
     let mut tm = MultiClassTM::new(params.clone());
     let row = params.clauses_per_class * params.n_literals();
     let mut buf = vec![0u8; row];
@@ -73,14 +188,58 @@ pub fn load_from(r: &mut impl Read) -> Result<MultiClassTM> {
         for j in 0..params.clauses_per_class {
             r.read_exact(&mut wbuf)?;
             let w = u32::from_le_bytes(wbuf);
-            ensure!(w >= 1, "clause weight must be >= 1");
+            if w < 1 {
+                return Err(corrupt("clause weight must be >= 1"));
+            }
             bank.set_weight(j, w);
         }
     }
     Ok(tm)
 }
 
-/// Save atomically: write to a `.tmp` sibling, then rename over
+/// Load a machine from a reader. Accepts v3 (footer verified *before*
+/// the body is trusted) and v2 (legacy, no footer). Never panics on
+/// malformed input — every failure is a typed [`ModelIoError`].
+pub fn load_from(r: &mut impl Read) -> Result<MultiClassTM, ModelIoError> {
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    let checksummed = match &magic {
+        m if m == MAGIC_V3 => true,
+        m if m == MAGIC_V2 => false,
+        _ => return Err(ModelIoError::BadMagic),
+    };
+    let mut rest = Vec::new();
+    r.read_to_end(&mut rest)?;
+    if !checksummed {
+        return read_body(&rest);
+    }
+    if rest.len() < 4 {
+        return Err(ModelIoError::Truncated);
+    }
+    let body_len = rest.len() - 4;
+    let body = &rest[..body_len];
+    let stored = u32::from_le_bytes(rest[body_len..].try_into().expect("4-byte footer"));
+    let mut crc = Crc32::new();
+    crc.update(&magic);
+    crc.update(body);
+    let computed = crc.finish();
+    if computed == stored {
+        return read_body(body);
+    }
+    // The checksum failed. A *torn* file (crashed writer) is a strict
+    // prefix of a valid one — diagnose it by probing the header: if the
+    // declared structure overruns what's on disk, report Truncated;
+    // anything else is in-place corruption.
+    match read_header(body) {
+        Err(ModelIoError::Truncated) => Err(ModelIoError::Truncated),
+        Ok((_, _, expected)) if body.len() < expected => Err(ModelIoError::Truncated),
+        _ => Err(corrupt(format!(
+            "checksum mismatch (stored {stored:#010x}, computed {computed:#010x})"
+        ))),
+    }
+}
+
+/// Save atomically: write to a `.tmp` sibling, fsync, then rename over
 /// `path`. A concurrent reader — `tmi serve --watch` re-publishing on
 /// model-file change — therefore never observes a torn, half-written
 /// model; it sees either the old file or the complete new one.
@@ -90,15 +249,19 @@ pub fn save(tm: &MultiClassTM, path: impl AsRef<Path>) -> Result<()> {
     tmp_name.push(".tmp");
     let tmp = std::path::PathBuf::from(tmp_name);
     {
-        let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
-        save_to(tm, &mut f)?;
-        f.flush()?;
+        let f = std::fs::File::create(&tmp)?;
+        let mut w = std::io::BufWriter::new(f);
+        save_to(tm, &mut w)?;
+        w.flush()?;
+        // fsync before the rename: a crash between rename and writeback
+        // must not leave a renamed-but-empty file
+        w.get_ref().sync_all()?;
     }
     std::fs::rename(&tmp, path)?;
     Ok(())
 }
 
-pub fn load(path: impl AsRef<Path>) -> Result<MultiClassTM> {
+pub fn load(path: impl AsRef<Path>) -> Result<MultiClassTM, ModelIoError> {
     let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
     load_from(&mut f)
 }
@@ -208,17 +371,52 @@ mod tests {
         tr.tm
     }
 
+    /// Serialize in the legacy v2 framing (no footer) — the back-compat
+    /// fixture generator.
+    fn serialize_v2(tm: &MultiClassTM) -> Vec<u8> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC_V2);
+        write_body(tm, &mut buf).unwrap();
+        buf
+    }
+
     #[test]
     fn save_load_roundtrip_exact() {
         let tm = trained_machine();
         let mut buf = Vec::new();
         save_to(&tm, &mut buf).unwrap();
+        assert_eq!(&buf[..8], MAGIC_V3);
         let tm2 = load_from(&mut buf.as_slice()).unwrap();
         assert_eq!(tm.params, tm2.params);
         for i in 0..tm.classes() {
             assert_eq!(tm.bank(i).states(), tm2.bank(i).states(), "class {i}");
             assert!(tm2.bank(i).check_counts());
         }
+    }
+
+    #[test]
+    fn v2_files_still_load() {
+        let tm = trained_machine();
+        let v2 = serialize_v2(&tm);
+        let tm2 = load_from(&mut v2.as_slice()).unwrap();
+        assert_eq!(tm.params, tm2.params);
+        for i in 0..tm.classes() {
+            assert_eq!(tm.bank(i).states(), tm2.bank(i).states(), "class {i}");
+        }
+        // a v2 reload re-saves as v3 — the migration path
+        let mut buf = Vec::new();
+        save_to(&tm2, &mut buf).unwrap();
+        assert_eq!(&buf[..8], MAGIC_V3);
+    }
+
+    #[test]
+    fn model_digest_tracks_content() {
+        let tm = trained_machine();
+        assert_eq!(model_digest(&tm), model_digest(&tm.clone()));
+        let mut other = tm.clone();
+        let s = other.bank(0).states()[0];
+        other.bank_mut(0).set_state(0, 0, s.wrapping_add(1));
+        assert_ne!(model_digest(&tm), model_digest(&other));
     }
 
     #[test]
@@ -328,20 +526,80 @@ mod tests {
     }
 
     #[test]
-    fn load_rejects_garbage() {
-        assert!(load_from(&mut &b"not a model"[..]).is_err());
+    fn load_rejects_garbage_with_bad_magic() {
+        assert!(matches!(
+            load_from(&mut &b"not a model!"[..]),
+            Err(ModelIoError::BadMagic)
+        ));
         let mut buf = Vec::new();
         save_to(&trained_machine(), &mut buf).unwrap();
         buf[0] = b'X';
-        assert!(load_from(&mut buf.as_slice()).is_err());
+        assert!(matches!(
+            load_from(&mut buf.as_slice()),
+            Err(ModelIoError::BadMagic)
+        ));
     }
 
     #[test]
-    fn load_rejects_truncation() {
+    fn truncation_reports_typed_error_at_every_length() {
+        // every proper prefix of a valid file must fail with Truncated
+        // (or BadMagic below 8 bytes) — never panic, never succeed
         let mut buf = Vec::new();
         save_to(&trained_machine(), &mut buf).unwrap();
-        buf.truncate(buf.len() - 10);
-        assert!(load_from(&mut buf.as_slice()).is_err());
+        let probes: Vec<usize> =
+            [0, 1, 7, 8, 9, 15, 16, 40, buf.len() / 2, buf.len() - 5, buf.len() - 1]
+                .into_iter()
+                .filter(|&n| n < buf.len())
+                .collect();
+        for n in probes {
+            match load_from(&mut &buf[..n]) {
+                Err(ModelIoError::Truncated) => {}
+                // fewer than 8 bytes cannot even prove the magic
+                Err(ModelIoError::BadMagic) if n < 8 => {}
+                other => panic!("prefix of {n} bytes: expected Truncated, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn bit_flips_report_corrupt_not_panic() {
+        let mut buf = Vec::new();
+        save_to(&trained_machine(), &mut buf).unwrap();
+        let len = buf.len();
+        // flips in the state/weight/footer region: body still parses, so
+        // the CRC mismatch is reported as such
+        for pos in [len / 3, len / 2, len - 6, len - 1] {
+            let mut bad = buf.clone();
+            bad[pos] ^= 0x04;
+            match load_from(&mut bad.as_slice()) {
+                Err(ModelIoError::Corrupt(why)) => {
+                    assert!(why.contains("checksum"), "offset {pos}: {why}")
+                }
+                other => panic!("flip at {pos}: expected Corrupt, got {other:?}"),
+            }
+        }
+        // flips in the length field / params JSON: still a typed error,
+        // never Ok, never a panic. (A flipped length that overruns the
+        // file is indistinguishable from truncation, so Truncated is an
+        // acceptable diagnosis here.)
+        for pos in [8, 9, 20] {
+            let mut bad = buf.clone();
+            bad[pos] ^= 0x04;
+            match load_from(&mut bad.as_slice()) {
+                Err(ModelIoError::Corrupt(_)) | Err(ModelIoError::Truncated) => {}
+                other => panic!("flip at {pos}: expected typed error, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn v2_truncation_is_typed_too() {
+        // the legacy path has no checksum but still reports Truncated
+        let v2 = serialize_v2(&trained_machine());
+        assert!(matches!(
+            load_from(&mut &v2[..v2.len() - 10]),
+            Err(ModelIoError::Truncated)
+        ));
     }
 
     #[test]

@@ -6,12 +6,14 @@
 //! monotonic timer.
 
 pub mod bitvec;
+pub mod crc32;
 pub mod json;
 pub mod rng;
 pub mod smallmap;
 pub mod timer;
 
 pub use bitvec::BitVec;
+pub use crc32::{crc32, Crc32};
 pub use json::Json;
 pub use rng::Rng;
 pub use smallmap::U64Map;

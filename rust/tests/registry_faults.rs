@@ -1,0 +1,257 @@
+//! Fault-injection harness for the durable registry and the serving
+//! supervisor: every scenario either recovers or quarantines — never a
+//! panic — surviving routes keep serving, and a recovered route scores
+//! bit-identically to what was published.
+//!
+//! Covered faults: truncated snapshot, bit-flipped snapshot,
+//! half-written manifest, worker panic mid-swap, kill -9 of a serving
+//! process followed by restart.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::PathBuf;
+use std::process::Command;
+
+use tsetlin_index::coordinator::server::fault;
+use tsetlin_index::coordinator::{BatchPolicy, Coordinator, RouteConfig};
+use tsetlin_index::engine::{InferMode, ModelSnapshot};
+use tsetlin_index::eval::Backend;
+use tsetlin_index::registry::{Registry, RegistryError};
+use tsetlin_index::tm::classifier::MultiClassTM;
+use tsetlin_index::tm::io;
+use tsetlin_index::tm::params::TMParams;
+use tsetlin_index::tm::trainer::Trainer;
+use tsetlin_index::util::{BitVec, Rng};
+
+fn temp_registry(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "tmi-faults-{tag}-{}-{}",
+        std::process::id(),
+        std::thread::current().name().unwrap_or("t").replace("::", "-")
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn trained(seed: u64) -> MultiClassTM {
+    let params = TMParams::new(2, 8, 10).with_seed(seed);
+    let mut tr = Trainer::new(params, Backend::Indexed);
+    let mut rng = Rng::new(seed ^ 0xfau64);
+    let samples: Vec<(BitVec, usize)> = (0..100)
+        .map(|_| {
+            let y = rng.bern(0.5) as usize;
+            let bits: Vec<bool> = (0..10)
+                .map(|k| if k == 0 { y == 1 } else { rng.bern(0.4) })
+                .collect();
+            let mut lits = bits.clone();
+            lits.extend(bits.iter().map(|b| !b));
+            (BitVec::from_bools(&lits), y)
+        })
+        .collect();
+    for _ in 0..3 {
+        tr.train_epoch(samples.iter().map(|(l, y)| (l, *y)));
+    }
+    tr.tm
+}
+
+#[test]
+fn truncated_snapshot_falls_back_to_prior_version_bit_identically() {
+    let dir = temp_registry("trunc");
+    let v1_model = trained(11);
+    let v2_model = trained(12);
+    let v1_digest = io::model_digest(&v1_model);
+    {
+        let mut reg = Registry::open(&dir, 4).unwrap();
+        assert_eq!(reg.publish("cpu", &v1_model, InferMode::Auto).unwrap(), 1);
+        assert_eq!(reg.publish("cpu", &v2_model, InferMode::Auto).unwrap(), 2);
+    }
+    // tear the newest snapshot as a crash mid-write would
+    let v2_file = dir.join("cpu/v000002.tm");
+    let bytes = std::fs::read(&v2_file).unwrap();
+    std::fs::write(&v2_file, &bytes[..bytes.len() / 2]).unwrap();
+
+    let mut reg = Registry::open(&dir, 4).unwrap();
+    let rec = reg.load_published("cpu").unwrap();
+    assert_eq!(rec.version, 1);
+    assert_eq!(rec.quarantined, vec![2]);
+    assert_eq!(
+        io::model_digest(&rec.tm),
+        v1_digest,
+        "recovered model must be bit-identical to what was published"
+    );
+    assert!(
+        dir.join("quarantine/cpu-v000002.tm").exists(),
+        "torn file must be quarantined, not deleted"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn bit_flipped_only_version_is_typed_error_and_other_routes_survive() {
+    let dir = temp_registry("flip");
+    {
+        let mut reg = Registry::open(&dir, 4).unwrap();
+        reg.publish("broken", &trained(21), InferMode::Auto).unwrap();
+        reg.publish("healthy", &trained(22), InferMode::Auto).unwrap();
+    }
+    let f = dir.join("broken/v000001.tm");
+    let mut bytes = std::fs::read(&f).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x10;
+    std::fs::write(&f, &bytes).unwrap();
+
+    let mut reg = Registry::open(&dir, 4).unwrap();
+    match reg.load_published("broken") {
+        Err(RegistryError::NoIntactVersion(route)) => assert_eq!(route, "broken"),
+        other => panic!("expected NoIntactVersion, got {other:?}"),
+    }
+    // the sibling route is untouched by the quarantine
+    let rec = reg.load_published("healthy").unwrap();
+    assert_eq!(rec.version, 1);
+    assert!(rec.quarantined.is_empty());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn half_written_manifest_recovers_from_backup() {
+    let dir = temp_registry("manifest");
+    let digest = {
+        let model = trained(31);
+        let mut reg = Registry::open(&dir, 4).unwrap();
+        reg.publish("cpu", &model, InferMode::Auto).unwrap();
+        // second publish demotes the first manifest to .bak
+        reg.publish("cpu", &model, InferMode::Auto).unwrap();
+        io::model_digest(&model)
+    };
+    // simulate a crash mid-rewrite: truncate the live manifest
+    let live = dir.join("manifest.json");
+    let text = std::fs::read(&live).unwrap();
+    std::fs::write(&live, &text[..text.len() / 2]).unwrap();
+
+    let mut reg = Registry::open(&dir, 4).unwrap();
+    let rec = reg.load_published("cpu").unwrap();
+    assert_eq!(
+        io::model_digest(&rec.tm),
+        digest,
+        "backup manifest must recover the published route"
+    );
+    // reopening healed the live manifest from the backup
+    let reg2 = Registry::open(&dir, 4).unwrap();
+    assert_eq!(reg2.generation(), reg.generation());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn worker_panic_mid_swap_restarts_and_keeps_serving() {
+    let tm = trained(41);
+    let snap = std::sync::Arc::new(ModelSnapshot::with_mode(tm, 1, InferMode::Auto));
+    let features: Vec<bool> = (0..10).map(|k| k == 0).collect();
+    let mut coord = Coordinator::new();
+    coord.register_model(
+        "midswap",
+        snap,
+        RouteConfig {
+            policy: BatchPolicy::default(),
+            workers: 1,
+            queue_cap: 64,
+            ..RouteConfig::default()
+        },
+    );
+    let h = coord.handle();
+    let want = h.infer_features("midswap", &features).unwrap().scores;
+
+    fault::arm_worker_panics("midswap", 1);
+    // the batch that takes the injected panic fails its client...
+    assert!(h.infer_features("midswap", &features).is_err());
+    // ...and the supervised worker restarts: same scores, restart counted
+    assert_eq!(h.infer_features("midswap", &features).unwrap().scores, want);
+    let st = coord.stats("midswap").unwrap();
+    assert_eq!(st.metrics.restarts, 1);
+    coord.shutdown();
+}
+
+fn tmi() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_tmi"))
+}
+
+fn free_port() -> u16 {
+    let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    l.local_addr().unwrap().port()
+}
+
+/// Ask one infer over TCP, retrying until the server is up; returns the
+/// full reply line.
+fn infer_once(addr: &str, line: &str) -> String {
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    while std::time::Instant::now() < deadline {
+        if let Ok(conn) = std::net::TcpStream::connect(addr) {
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            let mut conn = conn;
+            if conn.write_all(line.as_bytes()).is_ok() {
+                let mut reply = String::new();
+                if reader.read_line(&mut reply).is_ok() && reply.starts_with("ok ") {
+                    return reply;
+                }
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    panic!("server at {addr} never answered '{}'", line.trim());
+}
+
+#[test]
+fn kill_nine_then_restart_serves_identical_scores() {
+    let dir = temp_registry("kill9");
+    // publish through the real CLI: train -> registry
+    let out = tmi()
+        .args([
+            "train", "--dataset", "mnist", "--samples", "120", "--clauses", "80",
+            "--epochs", "1", "--registry", dir.to_str().unwrap(), "--route", "cpu",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "train --registry failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    let request = format!("infer cpu {}\n", "10".repeat(392)); // 784 features
+    let port = free_port();
+    let addr = format!("127.0.0.1:{port}");
+    let mut server = tmi()
+        .args(["serve", "--registry", dir.to_str().unwrap(), "--listen", &addr])
+        .spawn()
+        .unwrap();
+    let before = infer_once(&addr, &request);
+
+    // hard-kill the serving process: no drain, no manifest flush
+    server.kill().unwrap();
+    server.wait().unwrap();
+
+    let port = free_port();
+    let addr = format!("127.0.0.1:{port}");
+    let mut server = tmi()
+        .args(["serve", "--registry", dir.to_str().unwrap(), "--listen", &addr])
+        .spawn()
+        .unwrap();
+    let after = infer_once(&addr, &request);
+    assert_eq!(
+        before, after,
+        "restarted server must score bit-identically from the manifest alone"
+    );
+    server.kill().unwrap();
+    server.wait().unwrap();
+
+    // and the registry itself still verifies clean
+    let out = tmi()
+        .args(["registry", "verify", "--registry", dir.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "registry verify failed: {}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -181,6 +181,7 @@ fn overload_sheds_over_tcp_instead_of_queueing() {
                     max_batch: 1,
                     max_wait: Duration::ZERO,
                 },
+                ..RouteConfig::default()
             },
         )
         .unwrap();
@@ -270,6 +271,7 @@ fn hot_swap_mid_traffic_is_atomic_and_lossless() {
                 max_batch: 8,
                 max_wait: Duration::from_micros(100),
             },
+            ..RouteConfig::default()
         },
     );
     let h = coord.handle();
@@ -351,6 +353,7 @@ fn loadgen_writes_wellformed_bench_json() {
             workers: 2,
             queue_cap: 256,
             policy: BatchPolicy::default(),
+            ..RouteConfig::default()
         },
     );
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();

@@ -1,0 +1,133 @@
+//! Graceful shutdown e2e: SIGTERM a serving `tmi` process mid-load and
+//! assert it stops accepting, drains, and exits 0 — and that every
+//! reply clients did receive is well-formed (no torn writes).
+#![cfg(unix)]
+
+use std::io::{BufRead, BufReader, Write};
+use std::process::Command;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+fn tmi() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_tmi"))
+}
+
+#[test]
+fn sigterm_mid_load_drains_and_exits_zero() {
+    let dir = std::env::temp_dir().join(format!("tmi-shutdown-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let out = tmi()
+        .args([
+            "train", "--dataset", "mnist", "--samples", "120", "--clauses", "80",
+            "--epochs", "1", "--registry", dir.to_str().unwrap(), "--route", "cpu",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "train --registry failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    let port = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().port()
+    };
+    let addr = format!("127.0.0.1:{port}");
+    let mut server = tmi()
+        .args(["serve", "--registry", dir.to_str().unwrap(), "--listen", &addr])
+        .spawn()
+        .unwrap();
+
+    // wait for readiness
+    let request = format!("infer cpu {}\n", "01".repeat(392));
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    let mut ready = false;
+    while std::time::Instant::now() < deadline {
+        if let Ok(conn) = std::net::TcpStream::connect(&addr) {
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            let mut conn = conn;
+            if conn.write_all(request.as_bytes()).is_ok() {
+                let mut reply = String::new();
+                if reader.read_line(&mut reply).is_ok() && reply.starts_with("ok ") {
+                    ready = true;
+                    break;
+                }
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    assert!(ready, "server never became ready");
+
+    // sustained load from several closed-loop clients
+    let run = Arc::new(AtomicBool::new(true));
+    let clients: Vec<_> = (0..4)
+        .map(|_| {
+            let addr = addr.clone();
+            let request = request.clone();
+            let run = Arc::clone(&run);
+            std::thread::spawn(move || {
+                let (mut replies, mut malformed) = (0u64, 0u64);
+                'outer: while run.load(Ordering::Relaxed) {
+                    let Ok(conn) = std::net::TcpStream::connect(&addr) else {
+                        break; // listener gone: shutdown in progress
+                    };
+                    let mut reader = BufReader::new(conn.try_clone().unwrap());
+                    let mut conn = conn;
+                    while run.load(Ordering::Relaxed) {
+                        if conn.write_all(request.as_bytes()).is_err() {
+                            continue 'outer;
+                        }
+                        let mut reply = String::new();
+                        match reader.read_line(&mut reply) {
+                            Ok(0) | Err(_) => continue 'outer, // server closed
+                            Ok(_) => {
+                                replies += 1;
+                                // every received reply must be complete
+                                if !(reply.ends_with('\n')
+                                    && (reply.starts_with("ok ") || reply.starts_with("err ")))
+                                {
+                                    malformed += 1;
+                                }
+                            }
+                        }
+                    }
+                }
+                (replies, malformed)
+            })
+        })
+        .collect();
+
+    // let the load ramp, then SIGTERM the server mid-flight
+    std::thread::sleep(std::time::Duration::from_millis(300));
+    let kill = Command::new("kill")
+        .args(["-TERM", &server.id().to_string()])
+        .status()
+        .unwrap();
+    assert!(kill.success(), "kill -TERM failed");
+
+    // the server must exit on its own, with status 0
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    let status = loop {
+        if let Some(st) = server.try_wait().unwrap() {
+            break st;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "server did not exit after SIGTERM"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(25));
+    };
+    assert!(status.success(), "expected exit 0, got {status:?}");
+
+    run.store(false, Ordering::Relaxed);
+    let (mut replies, mut malformed) = (0u64, 0u64);
+    for c in clients {
+        let (r, m) = c.join().unwrap();
+        replies += r;
+        malformed += m;
+    }
+    assert!(replies > 0, "load never reached the server");
+    assert_eq!(malformed, 0, "torn replies during shutdown");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
