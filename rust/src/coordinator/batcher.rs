@@ -35,7 +35,13 @@ impl Default for BatchPolicy {
 /// Outcome of one collection round.
 pub enum Collected<T> {
     /// A non-empty batch.
-    Batch(Vec<T>),
+    Batch {
+        items: Vec<T>,
+        /// First pop to batch-ready: the assembly window this batch
+        /// actually spent collecting (the observability `batch` stage —
+        /// excludes the idle block waiting for the first item).
+        assembled: Duration,
+    },
     /// The queue is closed and drained: shut down.
     Disconnected,
 }
@@ -46,9 +52,10 @@ pub fn collect<T>(queue: &BoundedQueue<T>, policy: &BatchPolicy) -> Collected<T>
         Some(item) => item,
         None => return Collected::Disconnected,
     };
+    let t_first = Instant::now();
     let mut batch = Vec::with_capacity(policy.max_batch.min(64));
     batch.push(first);
-    let deadline = Instant::now() + policy.max_wait;
+    let deadline = t_first + policy.max_wait;
     while batch.len() < policy.max_batch {
         // drain whatever is already queued without waiting
         if let Some(item) = queue.try_pop() {
@@ -66,7 +73,10 @@ pub fn collect<T>(queue: &BoundedQueue<T>, policy: &BatchPolicy) -> Collected<T>
             PopTimeout::TimedOut | PopTimeout::Closed => break,
         }
     }
-    Collected::Batch(batch)
+    Collected::Batch {
+        items: batch,
+        assembled: t_first.elapsed(),
+    }
 }
 
 #[cfg(test)]
@@ -91,11 +101,11 @@ mod tests {
             max_wait: Duration::from_millis(50),
         };
         match collect(&q, &policy) {
-            Collected::Batch(b) => assert_eq!(b, vec![0, 1, 2, 3]),
+            Collected::Batch { items, .. } => assert_eq!(items, vec![0, 1, 2, 3]),
             _ => panic!("expected batch"),
         }
         match collect(&q, &policy) {
-            Collected::Batch(b) => assert_eq!(b, vec![4, 5, 6, 7]),
+            Collected::Batch { items, .. } => assert_eq!(items, vec![4, 5, 6, 7]),
             _ => panic!("expected batch"),
         }
     }
@@ -109,7 +119,11 @@ mod tests {
         };
         let t0 = Instant::now();
         match collect(&q, &policy) {
-            Collected::Batch(b) => assert_eq!(b, vec![1]),
+            Collected::Batch { items, assembled } => {
+                assert_eq!(items, vec![1]);
+                // waited out (most of) the 5ms deadline for stragglers
+                assert!(assembled >= Duration::from_millis(1), "assembled {assembled:?}");
+            }
             _ => panic!("expected batch"),
         }
         assert!(t0.elapsed() < Duration::from_millis(500));
@@ -135,7 +149,7 @@ mod tests {
         };
         let t0 = Instant::now();
         match collect(&q, &policy) {
-            Collected::Batch(b) => assert_eq!(b, vec![7, 8]),
+            Collected::Batch { items, .. } => assert_eq!(items, vec![7, 8]),
             _ => panic!("expected batch"),
         }
         assert!(t0.elapsed() < Duration::from_secs(1));
@@ -156,8 +170,8 @@ mod tests {
             max_wait: Duration::from_millis(50),
         };
         match collect(&q, &policy) {
-            Collected::Batch(b) => {
-                assert!(!b.is_empty() && b[0] == 1);
+            Collected::Batch { items, .. } => {
+                assert!(!items.is_empty() && items[0] == 1);
             }
             _ => panic!("expected batch"),
         }
@@ -205,10 +219,10 @@ mod tests {
                         let mut got = Vec::new();
                         loop {
                             match collect(&q, &policy) {
-                                Collected::Batch(b) => {
-                                    assert!(!b.is_empty(), "empty batch");
-                                    assert!(b.len() <= policy.max_batch, "oversized batch");
-                                    got.extend(b);
+                                Collected::Batch { items, .. } => {
+                                    assert!(!items.is_empty(), "empty batch");
+                                    assert!(items.len() <= policy.max_batch, "oversized batch");
+                                    got.extend(items);
                                 }
                                 Collected::Disconnected => return got,
                             }
@@ -251,7 +265,7 @@ mod tests {
             };
             let t0 = Instant::now();
             match collect(&q, &policy) {
-                Collected::Batch(b) => assert_eq!(b, vec![1]),
+                Collected::Batch { items, .. } => assert_eq!(items, vec![1]),
                 _ => panic!("expected batch"),
             }
             assert!(

@@ -211,6 +211,35 @@ fn fetch_server_stats(addr: &str, model: &str) -> Option<String> {
     (!line.is_empty()).then(|| line.to_string())
 }
 
+/// Parse the server's extended `stats` line (`k=v` tokens) into the
+/// per-stage BENCH_serve.json breakdown: one object per pipeline stage
+/// (queue / batch / score / write) with its p50/p95/p99, plus the
+/// route's `index_efficiency`. Returns `None` when the line predates
+/// the observability keys, so old baselines still parse.
+fn stage_breakdown(stats: &str) -> Option<Json> {
+    let kv: std::collections::HashMap<&str, &str> = stats
+        .split_whitespace()
+        .filter_map(|tok| tok.split_once('='))
+        .collect();
+    let num = |key: String| kv.get(key.as_str()).and_then(|v| v.parse::<f64>().ok());
+    let mut fields: Vec<(&'static str, Json)> = Vec::new();
+    for stage in ["queue", "batch", "score", "write"] {
+        fields.push((
+            stage,
+            Json::obj([
+                ("p50_us", Json::num(num(format!("{stage}_p50_us"))?)),
+                ("p95_us", Json::num(num(format!("{stage}_p95_us"))?)),
+                ("p99_us", Json::num(num(format!("{stage}_p99_us"))?)),
+            ]),
+        ));
+    }
+    fields.push((
+        "index_efficiency",
+        Json::num(num("index_efficiency".to_string())?),
+    ));
+    Some(Json::obj(fields))
+}
+
 /// Nearest-rank quantile: the smallest sample with at least `q` of
 /// the mass at or below it (0 on an empty set).
 fn quantile(sorted: &[u64], q: f64) -> u64 {
@@ -348,6 +377,13 @@ impl LoadgenReport {
                     None => Json::Null,
                 },
             ),
+            (
+                "server_stages",
+                self.server_stats
+                    .as_deref()
+                    .and_then(stage_breakdown)
+                    .unwrap_or(Json::Null),
+            ),
         ])
     }
 }
@@ -397,6 +433,28 @@ mod tests {
     }
 
     #[test]
+    fn stage_breakdown_parses_extended_stats_only() {
+        // a line predating the observability keys yields no breakdown
+        assert!(stage_breakdown("ok model=cpu requests=5 p99_us=10").is_none());
+        let line = "ok model=cpu version=1 generation=0 requests=5 completed=5 shed=0 \
+                    errors=0 restarts=0 queue_depth=0 batches=5 mean_batch=1.00 p50_us=64 \
+                    p95_us=128 p99_us=128 uptime_s=3 dense_requests=4 sparse_requests=1 \
+                    index_efficiency=0.8125 queue_p50_us=32 queue_p95_us=64 queue_p99_us=64 \
+                    batch_p50_us=8 batch_p95_us=16 batch_p99_us=16 score_p50_us=16 \
+                    score_p95_us=32 score_p99_us=32 write_p50_us=4 write_p95_us=8 \
+                    write_p99_us=8";
+        let j = stage_breakdown(line).expect("extended line must parse");
+        assert_eq!(j.get("queue").unwrap().get("p50_us").unwrap().as_usize(), Some(32));
+        assert_eq!(j.get("score").unwrap().get("p99_us").unwrap().as_usize(), Some(32));
+        assert_eq!(j.get("write").unwrap().get("p95_us").unwrap().as_usize(), Some(8));
+        let eff = j.get("index_efficiency").unwrap().as_f64().unwrap();
+        assert!((eff - 0.8125).abs() < 1e-12);
+        // one missing stage key disqualifies the whole breakdown
+        let truncated = line.rsplit_once(" write_p99_us=").unwrap().0;
+        assert!(stage_breakdown(truncated).is_none());
+    }
+
+    #[test]
     fn report_json_shape() {
         let cfg = LoadgenConfig {
             addr: "unused".into(),
@@ -435,5 +493,7 @@ mod tests {
             Some(2)
         );
         assert!(report.summary().contains("open loop"));
+        // a pre-observability stats line carries no per-stage breakdown
+        assert_eq!(parsed.get("server_stages"), Some(&Json::Null));
     }
 }

@@ -1,13 +1,17 @@
-//! Lock-free serving metrics: counters + a fixed-bucket latency
-//! histogram (power-of-two microsecond buckets).
+//! Lock-free serving metrics for one model route: admission counters,
+//! engine probe counters, the end-to-end latency histogram, and one
+//! [`Histogram`] per pipeline [`Stage`] (all power-of-two microsecond
+//! buckets from [`crate::obs::histogram`]).
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::{Duration, Instant};
 
-const BUCKETS: usize = 24; // 1us .. ~8s
+use crate::obs::histogram::{Histogram, HistogramSnapshot};
+use crate::obs::probes::{index_efficiency, ProbeDelta};
+use crate::obs::{Stage, STAGES};
 
 /// Shared metrics for one model route.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Metrics {
     pub requests: AtomicU64,
     pub completed: AtomicU64,
@@ -19,7 +23,49 @@ pub struct Metrics {
     pub restarts: AtomicU64,
     pub batches: AtomicU64,
     pub batched_items: AtomicU64,
-    latency_us: [AtomicU64; BUCKETS],
+    /// Requests scored by the dense fused walk (engine probe).
+    pub dense_requests: AtomicU64,
+    /// Requests scored by the O(nnz) sparse-delta walk (engine probe).
+    pub sparse_requests: AtomicU64,
+    /// Unique clauses the index walk falsified (engine probe).
+    pub clauses_falsified: AtomicU64,
+    /// Clause evaluations the index skipped outright (engine probe).
+    pub clauses_skipped: AtomicU64,
+    /// False non-empty literals walked by the dense engine.
+    pub features_walked: AtomicU64,
+    /// Per-literal delta-row toggles applied by the sparse engine.
+    pub sparse_toggles: AtomicU64,
+    /// Set while the route is inside a shed episode (first shed after a
+    /// healthy period begins one; the next successful admission ends
+    /// it) — drives the journal's shed_start/shed_end events.
+    shedding: AtomicBool,
+    latency_us: Histogram,
+    stages: [Histogram; STAGES],
+    started: Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            requests: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            restarts: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_items: AtomicU64::new(0),
+            dense_requests: AtomicU64::new(0),
+            sparse_requests: AtomicU64::new(0),
+            clauses_falsified: AtomicU64::new(0),
+            clauses_skipped: AtomicU64::new(0),
+            features_walked: AtomicU64::new(0),
+            sparse_toggles: AtomicU64::new(0),
+            shedding: AtomicBool::new(false),
+            latency_us: Histogram::new(),
+            stages: Default::default(),
+            started: Instant::now(),
+        }
+    }
 }
 
 /// Point-in-time copy for reporting.
@@ -38,7 +84,18 @@ pub struct MetricsSnapshot {
     /// queue, so [`Metrics::snapshot`] leaves this 0 and the
     /// coordinator fills it from the route's queue gauge.
     pub queue_depth: u64,
-    pub latency_buckets_us: Vec<(u64, u64)>, // (upper_bound_us, count)
+    pub dense_requests: u64,
+    pub sparse_requests: u64,
+    pub clauses_falsified: u64,
+    pub clauses_skipped: u64,
+    pub features_walked: u64,
+    pub sparse_toggles: u64,
+    /// Whole seconds since the route's metrics were created.
+    pub uptime_s: u64,
+    /// End-to-end (admission -> scored) latency histogram.
+    pub latency: HistogramSnapshot,
+    /// Per-stage histograms, indexed by `Stage as usize`.
+    pub stages: [HistogramSnapshot; STAGES],
 }
 
 impl Metrics {
@@ -46,19 +103,60 @@ impl Metrics {
         Self::default()
     }
 
-    #[inline]
-    fn bucket(us: u64) -> usize {
-        (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1)
+    pub fn record_latency(&self, d: Duration) {
+        self.latency_us.record_duration(d);
     }
 
-    pub fn record_latency(&self, d: Duration) {
-        let us = d.as_micros() as u64;
-        self.latency_us[Self::bucket(us)].fetch_add(1, Ordering::Relaxed);
+    /// Record one pipeline-stage duration ([`Stage`] semantics).
+    pub fn record_stage(&self, stage: Stage, d: Duration) {
+        self.stages[stage as usize].record_duration(d);
     }
 
     pub fn record_batch(&self, items: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_items.fetch_add(items as u64, Ordering::Relaxed);
+    }
+
+    /// Flush an engine scratch's accumulated probe delta (batch-wise;
+    /// one relaxed `fetch_add` per non-zero field).
+    pub fn apply_probes(&self, d: &ProbeDelta) {
+        if d.is_empty() {
+            return;
+        }
+        self.dense_requests
+            .fetch_add(d.dense_samples, Ordering::Relaxed);
+        self.sparse_requests
+            .fetch_add(d.sparse_samples, Ordering::Relaxed);
+        self.clauses_falsified
+            .fetch_add(d.clauses_falsified, Ordering::Relaxed);
+        self.clauses_skipped
+            .fetch_add(d.clauses_skipped, Ordering::Relaxed);
+        self.features_walked
+            .fetch_add(d.features_walked, Ordering::Relaxed);
+        self.sparse_toggles
+            .fetch_add(d.sparse_toggles, Ordering::Relaxed);
+    }
+
+    /// Count one shed; returns `true` when it begins a new episode
+    /// (the caller emits the journal event — metrics stays silent).
+    pub fn note_shed(&self) -> bool {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+        !self.shedding.swap(true, Ordering::Relaxed)
+    }
+
+    /// Note a successful admission; returns `Some(total shed so far)`
+    /// when it ends a shed episode.
+    pub fn note_admitted(&self) -> Option<u64> {
+        if self.shedding.load(Ordering::Relaxed) && self.shedding.swap(false, Ordering::Relaxed) {
+            Some(self.shed.load(Ordering::Relaxed))
+        } else {
+            None
+        }
+    }
+
+    /// Time since the route's metrics were created (route uptime).
+    pub fn uptime(&self) -> Duration {
+        self.started.elapsed()
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -71,33 +169,33 @@ impl Metrics {
             batches: self.batches.load(Ordering::Relaxed),
             batched_items: self.batched_items.load(Ordering::Relaxed),
             queue_depth: 0,
-            latency_buckets_us: self
-                .latency_us
-                .iter()
-                .enumerate()
-                .map(|(i, c)| (1u64 << (i + 1), c.load(Ordering::Relaxed)))
-                .filter(|(_, c)| *c > 0)
-                .collect(),
+            dense_requests: self.dense_requests.load(Ordering::Relaxed),
+            sparse_requests: self.sparse_requests.load(Ordering::Relaxed),
+            clauses_falsified: self.clauses_falsified.load(Ordering::Relaxed),
+            clauses_skipped: self.clauses_skipped.load(Ordering::Relaxed),
+            features_walked: self.features_walked.load(Ordering::Relaxed),
+            sparse_toggles: self.sparse_toggles.load(Ordering::Relaxed),
+            uptime_s: self.started.elapsed().as_secs(),
+            latency: self.latency_us.snapshot(),
+            stages: [
+                self.stages[0].snapshot(),
+                self.stages[1].snapshot(),
+                self.stages[2].snapshot(),
+                self.stages[3].snapshot(),
+            ],
         }
     }
 }
 
 impl MetricsSnapshot {
-    /// Approximate quantile from the histogram (upper bucket bounds).
+    /// Approximate end-to-end latency quantile (upper bucket bounds).
     pub fn latency_quantile_us(&self, q: f64) -> Option<u64> {
-        let total: u64 = self.latency_buckets_us.iter().map(|(_, c)| c).sum();
-        if total == 0 {
-            return None;
-        }
-        let target = ((total as f64) * q).ceil() as u64;
-        let mut seen = 0;
-        for &(bound, count) in &self.latency_buckets_us {
-            seen += count;
-            if seen >= target {
-                return Some(bound);
-            }
-        }
-        self.latency_buckets_us.last().map(|&(b, _)| b)
+        self.latency.quantile(q)
+    }
+
+    /// One stage's histogram snapshot.
+    pub fn stage(&self, s: Stage) -> &HistogramSnapshot {
+        &self.stages[s as usize]
     }
 
     pub fn mean_batch_size(&self) -> f64 {
@@ -117,37 +215,33 @@ impl MetricsSnapshot {
         }
     }
 
+    /// Fraction of clause evaluations the index avoided — the paper's
+    /// speedup claim observed on live traffic (0 with no probe data).
+    pub fn index_efficiency(&self) -> f64 {
+        index_efficiency(self.clauses_falsified, self.clauses_skipped)
+    }
+
     /// p50 latency in microseconds (0 when no latencies recorded) —
     /// the `stats` protocol verb's formatting convenience; quantiles
     /// are upper bucket bounds of the power-of-two histogram.
     pub fn p50_us(&self) -> u64 {
-        self.latency_quantile_us(0.5).unwrap_or(0)
+        self.latency.p50()
     }
 
     /// p95 latency in microseconds (0 when empty).
     pub fn p95_us(&self) -> u64 {
-        self.latency_quantile_us(0.95).unwrap_or(0)
+        self.latency.p95()
     }
 
     /// p99 latency in microseconds (0 when empty).
     pub fn p99_us(&self) -> u64 {
-        self.latency_quantile_us(0.99).unwrap_or(0)
+        self.latency.p99()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn bucket_boundaries() {
-        assert_eq!(Metrics::bucket(0), 0);
-        assert_eq!(Metrics::bucket(1), 0);
-        assert_eq!(Metrics::bucket(2), 1);
-        assert_eq!(Metrics::bucket(3), 1);
-        assert_eq!(Metrics::bucket(1024), 10);
-        assert_eq!(Metrics::bucket(u64::MAX), BUCKETS - 1);
-    }
 
     #[test]
     fn snapshot_reflects_counts() {
@@ -187,5 +281,54 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.shed, 2);
         assert!((s.shed_rate() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stages_record_independently() {
+        let m = Metrics::new();
+        m.record_stage(Stage::Queue, Duration::from_micros(100));
+        m.record_stage(Stage::Score, Duration::from_micros(10));
+        let s = m.snapshot();
+        assert_eq!(s.stage(Stage::Queue).count, 1);
+        assert_eq!(s.stage(Stage::Batch).count, 0);
+        assert_eq!(s.stage(Stage::Score).count, 1);
+        assert_eq!(s.stage(Stage::Queue).p50(), 128);
+        assert_eq!(s.stage(Stage::Score).p50(), 16);
+    }
+
+    #[test]
+    fn probe_flush_and_efficiency() {
+        let m = Metrics::new();
+        m.apply_probes(&ProbeDelta {
+            dense_samples: 2,
+            clauses_falsified: 10,
+            clauses_skipped: 90,
+            features_walked: 55,
+            ..ProbeDelta::default()
+        });
+        m.apply_probes(&ProbeDelta::default()); // no-op
+        let s = m.snapshot();
+        assert_eq!(s.dense_requests, 2);
+        assert_eq!(s.sparse_requests, 0);
+        assert_eq!(s.features_walked, 55);
+        assert!((s.index_efficiency() - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shed_episode_edges() {
+        let m = Metrics::new();
+        assert_eq!(m.note_admitted(), None, "healthy: no episode to end");
+        assert!(m.note_shed(), "first shed begins an episode");
+        assert!(!m.note_shed(), "second shed continues it");
+        assert_eq!(m.note_admitted(), Some(2), "admission ends it at 2 shed");
+        assert_eq!(m.note_admitted(), None);
+        assert!(m.note_shed(), "a fresh episode can begin");
+    }
+
+    #[test]
+    fn uptime_is_monotonic() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert!(s.uptime_s <= m.uptime().as_secs() + 1);
     }
 }

@@ -45,6 +45,8 @@ use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::queue::{BoundedQueue, PushError};
 use crate::coordinator::supervisor::{supervise, RestartPolicy};
 use crate::engine::{argmax, ModelSnapshot};
+use crate::obs::prometheus::PromWriter;
+use crate::obs::{self, journal, EventKind, Stage};
 use crate::util::BitVec;
 
 /// A completed inference.
@@ -112,7 +114,41 @@ impl std::error::Error for SwapError {}
 struct Request {
     literals: BitVec,
     enqueued: Instant,
-    resp: SyncSender<Result<Prediction, InferError>>,
+    /// Process-unique trace id, assigned at admission
+    /// ([`crate::obs::next_trace_id`]). Correlates the request across
+    /// stage histograms and journal events.
+    trace: u64,
+    /// `Some` until the request is answered. `None` means a reply was
+    /// sent (or the request was deliberately defused, e.g. a shed that
+    /// is already counted); a `Request` dropped while still `Some` was
+    /// admitted but never answered, and [`Drop`] books it as an error
+    /// so `requests == completed + shed + errors` holds on every path —
+    /// including worker panics and shutdown drains.
+    resp: Option<SyncSender<Result<Prediction, InferError>>>,
+    metrics: Arc<Metrics>,
+}
+
+impl Request {
+    /// Answer the request (consumes it; the `Drop` accounting sees a
+    /// defused channel and stays silent). Counter updates — completed
+    /// vs errors — stay at the call sites, which know the outcome.
+    fn respond(mut self, result: Result<Prediction, InferError>) {
+        if let Some(tx) = self.resp.take() {
+            let _ = tx.send(result);
+        }
+    }
+}
+
+impl Drop for Request {
+    fn drop(&mut self) {
+        // still armed: admitted, never answered — a panicked batch, a
+        // shutdown drain, or a closed-queue rejection. The waiting
+        // client unblocks with ShuttingDown when the channel drops;
+        // the counter invariant needs the error booked here.
+        if self.resp.is_some() {
+            self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+        }
+    }
 }
 
 /// Per-route sizing: batching policy, worker count, queue bound,
@@ -347,6 +383,7 @@ impl Coordinator {
         let queue_worker = Arc::clone(&queue);
         let policy = cfg.policy;
         let restarts = cfg.restarts;
+        let route_name = name.clone();
         let (ready_tx, ready_rx) = sync_channel::<anyhow::Result<usize>>(1);
         let worker = std::thread::Builder::new()
             .name(format!("tmi-worker-{name}"))
@@ -366,7 +403,13 @@ impl Coordinator {
                 loop {
                     match collect(&queue_worker, &policy) {
                         Collected::Disconnected => break,
-                        Collected::Batch(reqs) => {
+                        Collected::Batch {
+                            items: reqs,
+                            assembled,
+                        } => {
+                            if obs::enabled() {
+                                metrics_worker.record_stage(Stage::Batch, assembled);
+                            }
                             // The panicking batch fails (its response
                             // channels unwind), but the route survives:
                             // rebuild the backend — the old one may be
@@ -386,7 +429,14 @@ impl Coordinator {
                             match catch_unwind(AssertUnwindSafe(&mut factory)) {
                                 Ok(Ok(b)) => {
                                     backend = b;
-                                    metrics_worker.restarts.fetch_add(1, Ordering::Relaxed);
+                                    let total = metrics_worker
+                                        .restarts
+                                        .fetch_add(1, Ordering::Relaxed)
+                                        + 1;
+                                    journal().emit(EventKind::WorkerRestart {
+                                        route: route_name.clone(),
+                                        restarts: total,
+                                    });
                                 }
                                 // factory failed or panicked: no backend
                                 // to serve with — fail the route closed
@@ -440,6 +490,7 @@ impl Coordinator {
                 let metrics = Arc::clone(&metrics);
                 let policy = cfg.policy;
                 let restarts = cfg.restarts;
+                let route_name = name.clone();
                 std::thread::Builder::new()
                     .name(format!("tmi-worker-{name}-{w}"))
                     .spawn(move || {
@@ -447,7 +498,7 @@ impl Coordinator {
                         // snapshot workers are stateless across lives
                         // (each re-entry reloads the cell and rebuilds
                         // scratch), so supervised restart is always safe
-                        let _ = supervise(&restarts, &metrics.restarts, || {
+                        let _ = supervise(&restarts, &metrics.restarts, &route_name, || {
                             snapshot_worker(&queue, &cell, &metrics, &policy);
                         });
                     })
@@ -563,7 +614,7 @@ fn route_stats(
 
 /// Shared by [`Coordinator::swap`] and [`CoordinatorHandle::swap`]:
 /// validate the route supports swapping and the widths agree, then
-/// install the snapshot.
+/// install the snapshot (journaled as a `swap` event).
 fn swap_route(
     name: &str,
     n_literals: usize,
@@ -577,20 +628,42 @@ fn swap_route(
             got: snapshot.n_literals(),
         });
     }
-    Ok(cell.store(snapshot))
+    let version = snapshot.version();
+    let retired = cell.store(snapshot);
+    journal().emit(EventKind::SnapshotSwap {
+        route: name.to_string(),
+        version,
+        generation: cell.generation(),
+    });
+    Ok(retired)
 }
 
 /// One collect-score-respond round for a mutable factory backend.
 fn answer_with_backend(backend: &mut dyn Backend, reqs: Vec<Request>, metrics: &Metrics) {
     metrics.record_batch(reqs.len());
+    let obs_on = obs::enabled();
+    if obs_on {
+        for req in &reqs {
+            metrics.record_stage(Stage::Queue, req.enqueued.elapsed());
+        }
+    }
     let lits: Vec<BitVec> = reqs.iter().map(|r| r.literals.clone()).collect();
-    match backend.infer_batch(&lits) {
+    let t_score = if obs_on { Some(Instant::now()) } else { None };
+    let result = backend.infer_batch(&lits);
+    if let Some(t0) = t_score {
+        // factory backends score whole batches; one Score sample per
+        // batch is the honest granularity
+        metrics.record_stage(Stage::Score, t0.elapsed());
+    }
+    match result {
         Ok(scored) => {
+            // a short `scored` leaves the tail of `reqs` unanswered;
+            // their Drop accounting books them as errors
             for (req, s) in reqs.into_iter().zip(scored) {
                 let Scored { prediction, scores } = s;
                 metrics.completed.fetch_add(1, Ordering::Relaxed);
                 metrics.record_latency(req.enqueued.elapsed());
-                let _ = req.resp.send(Ok(Prediction {
+                req.respond(Ok(Prediction {
                     class: prediction,
                     scores,
                 }));
@@ -600,9 +673,7 @@ fn answer_with_backend(backend: &mut dyn Backend, reqs: Vec<Request>, metrics: &
             let msg = e.to_string();
             for req in reqs {
                 metrics.errors.fetch_add(1, Ordering::Relaxed);
-                let _ = req
-                    .resp
-                    .send(Err(InferError::BackendError(msg.clone())));
+                req.respond(Err(InferError::BackendError(msg.clone())));
             }
         }
     }
@@ -623,7 +694,10 @@ fn snapshot_worker(
     loop {
         match collect(queue, policy) {
             Collected::Disconnected => break,
-            Collected::Batch(reqs) => {
+            Collected::Batch {
+                items: reqs,
+                assembled,
+            } => {
                 if fault::take_worker_panic() {
                     // injected mid-swap fault: the collected batch's
                     // response channels drop in the unwind (those
@@ -637,21 +711,36 @@ fn snapshot_worker(
                     snap = cur;
                 }
                 metrics.record_batch(reqs.len());
+                let obs_on = obs::enabled();
+                if obs_on {
+                    metrics.record_stage(Stage::Batch, assembled);
+                }
                 let m = snap.classes();
                 out.clear();
                 out.resize(m, 0);
                 for req in reqs {
+                    if obs_on {
+                        metrics.record_stage(Stage::Queue, req.enqueued.elapsed());
+                    }
+                    let t_score = if obs_on { Some(Instant::now()) } else { None };
                     // engine resolution is per request: a batch mixes
                     // independent clients, so a batch-wide probe could
                     // route a non-complement request down the sparse walk
                     snap.scores_into(&mut scratch, &req.literals, &mut out);
+                    if let Some(t0) = t_score {
+                        metrics.record_stage(Stage::Score, t0.elapsed());
+                    }
                     metrics.completed.fetch_add(1, Ordering::Relaxed);
                     metrics.record_latency(req.enqueued.elapsed());
-                    let _ = req.resp.send(Ok(Prediction {
+                    req.respond(Ok(Prediction {
                         class: argmax(&out),
                         scores: out.clone(),
                     }));
                 }
+                // flush the engine's probe counters batch-wise: plain
+                // adds on the hot path, a handful of relaxed
+                // fetch_adds here
+                metrics.apply_probes(&scratch.take_probes());
             }
         }
     }
@@ -689,15 +778,38 @@ impl CoordinatorHandle {
         let req = Request {
             literals,
             enqueued: Instant::now(),
-            resp: resp_tx,
+            trace: obs::next_trace_id(),
+            resp: Some(resp_tx),
+            metrics: Arc::clone(&route.metrics),
         };
         match route.queue.try_push(req) {
-            Ok(()) => {}
-            Err(PushError::Full(_)) => {
-                route.metrics.shed.fetch_add(1, Ordering::Relaxed);
+            Ok(()) => {
+                // a successful admission after shedding closes the
+                // episode — bracketed in the journal
+                if let Some(shed_total) = route.metrics.note_admitted() {
+                    journal().emit(EventKind::ShedEnd {
+                        route: model.to_string(),
+                        shed_total,
+                    });
+                }
+            }
+            Err(PushError::Full(mut req)) => {
+                // defuse before dropping: a shed is booked as `shed`,
+                // not as an unanswered-request error
+                req.resp = None;
+                let trace = req.trace;
+                drop(req);
+                if route.metrics.note_shed() {
+                    journal().emit(EventKind::ShedStart {
+                        route: model.to_string(),
+                        trace,
+                    });
+                }
                 return Err(InferError::Overloaded);
             }
-            Err(PushError::Closed(_)) => return Err(InferError::ShuttingDown),
+            // admitted (counted) but the route is gone: the armed
+            // Drop books the error so the counters still balance
+            Err(PushError::Closed(_req)) => return Err(InferError::ShuttingDown),
         }
         resp_rx.recv().map_err(|_| InferError::ShuttingDown)?
     }
@@ -730,6 +842,154 @@ impl CoordinatorHandle {
             .ok_or_else(|| SwapError::UnknownModel(model.to_string()))?;
         swap_route(model, route.n_literals, route.swap.as_ref(), snapshot)
     }
+
+    /// The route's live metrics handle — lets the TCP front end record
+    /// the Write stage after the reply bytes actually hit the socket.
+    fn route_metrics(&self, model: &str) -> Option<Arc<Metrics>> {
+        self.routes.get(model).map(|r| Arc::clone(&r.metrics))
+    }
+
+    /// Every route's stats, sorted by route name (deterministic
+    /// exposition and journal-free iteration for the scrape path).
+    fn all_stats(&self) -> Vec<(String, RouteStats)> {
+        let mut out: Vec<(String, RouteStats)> = self
+            .routes
+            .iter()
+            .map(|(name, r)| {
+                (
+                    name.clone(),
+                    route_stats(&r.metrics, &r.queue, r.swap.as_ref()),
+                )
+            })
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    /// Render every route in Prometheus text exposition format 0.0.4
+    /// — the `metrics` protocol verb and the `--metrics-addr` HTTP
+    /// endpoint. Ends with the `# EOF` trailer (a plain comment under
+    /// 0.0.4; line-protocol clients use it as the end-of-reply mark).
+    pub fn prometheus(&self) -> String {
+        render_prometheus(&self.all_stats())
+    }
+}
+
+/// Family-major Prometheus rendering: one `# HELP`/`# TYPE` header per
+/// family, then every route's sample — the layout scrapers expect.
+/// Conformance-checked by [`crate::obs::prometheus::validate_exposition`]
+/// in the test suite and CI.
+#[rustfmt::skip] // the family table reads best with one family per line
+fn render_prometheus(routes: &[(String, RouteStats)]) -> String {
+    let mut w = PromWriter::new();
+    // counters: (family, help, per-route value)
+    let counters: [(&str, &str, fn(&MetricsSnapshot) -> u64); 13] = [
+        ("tmi_requests_total", "Requests admitted or shed at the route.", |m| m.requests),
+        ("tmi_completed_total", "Requests answered with a prediction.", |m| m.completed),
+        ("tmi_shed_total", "Requests shed at admission (queue full).", |m| m.shed),
+        ("tmi_errors_total", "Requests answered with an error or dropped unanswered.", |m| m.errors),
+        ("tmi_restarts_total", "Supervisor worker restarts after a panic.", |m| m.restarts),
+        ("tmi_batches_total", "Batches collected by the route's workers.", |m| m.batches),
+        ("tmi_batched_items_total", "Requests carried inside collected batches.", |m| m.batched_items),
+        ("tmi_dense_requests_total", "Requests scored by the dense fused index walk.", |m| m.dense_requests),
+        ("tmi_sparse_requests_total", "Requests scored by the O(nnz) sparse-delta walk.", |m| m.sparse_requests),
+        ("tmi_index_clauses_falsified_total", "Clauses the falsification walk knocked out.", |m| m.clauses_falsified),
+        ("tmi_index_clauses_skipped_total", "Clause evaluations the index avoided outright.", |m| m.clauses_skipped),
+        ("tmi_index_features_walked_total", "Literals walked by the dense falsification pass.", |m| m.features_walked),
+        ("tmi_sparse_toggles_total", "Per-literal delta-row toggles applied by the sparse walk.", |m| m.sparse_toggles),
+    ];
+    for (name, help, get) in counters {
+        w.header(name, help, "counter");
+        for (route, st) in routes {
+            w.int_sample(name, &[("route", route)], get(&st.metrics));
+        }
+    }
+    w.header("tmi_queue_depth", "Live admission-queue depth.", "gauge");
+    for (route, st) in routes {
+        w.int_sample("tmi_queue_depth", &[("route", route)], st.metrics.queue_depth);
+    }
+    w.header("tmi_uptime_seconds", "Whole seconds since the route was registered.", "gauge");
+    for (route, st) in routes {
+        w.int_sample("tmi_uptime_seconds", &[("route", route)], st.metrics.uptime_s);
+    }
+    w.header(
+        "tmi_index_efficiency",
+        "Fraction of clause evaluations the index avoided (0 with no probe data).",
+        "gauge",
+    );
+    for (route, st) in routes {
+        w.sample(
+            "tmi_index_efficiency",
+            &[("route", route)],
+            st.metrics.index_efficiency(),
+        );
+    }
+    if routes.iter().any(|(_, st)| st.version.is_some()) {
+        w.header(
+            "tmi_snapshot_version",
+            "Publisher-scoped version of the serving snapshot (snapshot routes).",
+            "gauge",
+        );
+        w.header(
+            "tmi_snapshot_generation",
+            "Swaps installed on the route since registration (snapshot routes).",
+            "gauge",
+        );
+        for (route, st) in routes {
+            if let (Some(v), Some(g)) = (st.version, st.generation) {
+                w.int_sample("tmi_snapshot_version", &[("route", route)], v);
+                w.int_sample("tmi_snapshot_generation", &[("route", route)], g);
+            }
+        }
+    }
+    w.header(
+        "tmi_request_latency_us",
+        "End-to-end latency, admission to scored (power-of-two buckets, microseconds).",
+        "histogram",
+    );
+    for (route, st) in routes {
+        w.histogram("tmi_request_latency_us", &[("route", route)], &st.metrics.latency);
+    }
+    w.header(
+        "tmi_stage_latency_us",
+        "Per-pipeline-stage latency: queue wait, batch assembly, engine scoring, reply write.",
+        "histogram",
+    );
+    for (route, st) in routes {
+        for stage in Stage::ALL {
+            w.histogram(
+                "tmi_stage_latency_us",
+                &[("route", route), ("stage", stage.name())],
+                st.metrics.stage(stage),
+            );
+        }
+    }
+    // process-level families: training-side probe counters + journal
+    w.header(
+        "tmi_feedback_flips_total",
+        "TA state flips applied by training feedback (process-wide).",
+        "counter",
+    );
+    w.int_sample("tmi_feedback_flips_total", &[], crate::obs::probes::feedback_flips());
+    w.header(
+        "tmi_feedback_clause_updates_total",
+        "Clause feedback applications during training (process-wide).",
+        "counter",
+    );
+    w.int_sample(
+        "tmi_feedback_clause_updates_total",
+        &[],
+        crate::obs::probes::feedback_clause_updates(),
+    );
+    w.header("tmi_journal_events_total", "Events ever emitted into the journal.", "counter");
+    w.int_sample("tmi_journal_events_total", &[], journal().emitted());
+    w.header(
+        "tmi_journal_dropped_total",
+        "Journal events evicted to honor the ring capacity.",
+        "counter",
+    );
+    w.int_sample("tmi_journal_dropped_total", &[], journal().dropped());
+    w.finish()
 }
 
 /// TCP front-end limits.
@@ -756,7 +1016,19 @@ impl Default for ServeOptions {
 /// -> stats <model>\n
 /// <- ok model=<m> version=<v|-> generation=<g|-> requests=<n> completed=<n>
 ///       shed=<n> errors=<n> restarts=<n> queue_depth=<n> batches=<n>
-///       mean_batch=<f> p50_us=<n> p95_us=<n> p99_us=<n>\n   (one line)
+///       mean_batch=<f> p50_us=<n> p95_us=<n> p99_us=<n> uptime_s=<n>
+///       dense_requests=<n> sparse_requests=<n> index_efficiency=<f>
+///       queue_p50_us=<n> ... write_p99_us=<n>\n   (one line; existing
+///       keys are stable, new keys append after p99_us)
+///
+/// -> stats events <model>\n
+/// <- ok events=<n>\n        followed by n single-line journal events
+///    (route-scoped + process-wide), oldest first, each
+///    `seq=<n> wall_ms=<n> mono_us=<n> kind=<k> [route=<r>] [k=v ...]`
+///
+/// -> metrics\n
+/// <- Prometheus text exposition 0.0.4 for every route, terminated by
+///    the `# EOF` comment line (the end-of-reply marker)
 /// ```
 pub fn serve_tcp(
     listener: TcpListener,
@@ -801,6 +1073,68 @@ pub fn serve_tcp_with(
         let _ = c.join();
     }
     Ok(())
+}
+
+/// Minimal HTTP/1.1 scrape endpoint for `tmi serve --metrics-addr`:
+/// every request (any method, any path) is answered with the full
+/// Prometheus exposition and the connection closed. The accept loop is
+/// nonblocking like [`serve_tcp`]; scrapes are served inline — a
+/// scrape is one render and one write, so no thread pool is needed.
+pub fn serve_metrics_http(
+    listener: TcpListener,
+    handle: CoordinatorHandle,
+    stop: Arc<AtomicBool>,
+) -> std::io::Result<()> {
+    listener.set_nonblocking(true)?;
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((mut stream, _addr)) => {
+                let _ = serve_one_scrape(&mut stream, &handle);
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// Drain the request head (bounded, best-effort — a scraper that
+/// never finishes its head still gets the body after the timeout),
+/// then reply `200 OK` with the exposition.
+fn serve_one_scrape(stream: &mut TcpStream, handle: &CoordinatorHandle) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(500)))?;
+    let mut head = Vec::new();
+    let mut buf = [0u8; 1024];
+    loop {
+        match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => {
+                head.extend_from_slice(&buf[..n]);
+                if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() > 16 * 1024 {
+                    break;
+                }
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                break;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    let body = handle.prometheus();
+    let mut resp = format!(
+        "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    resp.push_str(&body);
+    stream.write_all(resp.as_bytes())
 }
 
 /// Longest accepted request line (a 20k-feature bitstring is ~20 KB;
@@ -857,8 +1191,16 @@ fn handle_conn(
             // the partial request instead of serving half a line
             return Ok(());
         }
-        let reply = respond_line(&line, &handle);
+        let (reply, write_metrics) = respond_line(&line, &handle);
+        let t_write = if obs::enabled() && write_metrics.is_some() {
+            Some(Instant::now())
+        } else {
+            None
+        };
         stream.write_all(reply.as_bytes())?;
+        if let (Some(t0), Some(m)) = (t_write, write_metrics) {
+            m.record_stage(Stage::Write, t0.elapsed());
+        }
     }
 }
 
@@ -896,15 +1238,34 @@ fn discard_to_newline(
     }
 }
 
-/// Dispatch one protocol line (`infer`/`stats` verbs; a bare
-/// `<model> <bits>` is legacy shorthand for `infer`).
-fn respond_line(line: &str, handle: &CoordinatorHandle) -> String {
+/// Dispatch one protocol line (`infer`/`stats`/`stats events`/`metrics`
+/// verbs; a bare `<model> <bits>` is legacy shorthand for `infer`).
+/// Returns the reply plus, for infer replies, the route's metrics
+/// handle so the caller can attribute the Write stage to the route.
+fn respond_line(line: &str, handle: &CoordinatorHandle) -> (String, Option<Arc<Metrics>>) {
     let trimmed = line.trim();
-    if let Some(model) = trimmed.strip_prefix("stats ") {
-        let model = model.trim();
+    if trimmed == "metrics" {
+        return (handle.prometheus(), None);
+    }
+    if let Some(rest) = trimmed.strip_prefix("stats ") {
+        let rest = rest.trim();
+        if let Some(model) = rest.strip_prefix("events ") {
+            let model = model.trim();
+            if handle.stats(model).is_none() {
+                return (format!("err unknown model '{model}'\n"), None);
+            }
+            let events = journal().events_for(model);
+            let mut out = format!("ok events={}\n", events.len());
+            for e in &events {
+                out.push_str(&e.to_line());
+                out.push('\n');
+            }
+            return (out, None);
+        }
+        let model = rest;
         return match handle.stats(model) {
-            Some(st) => stats_line(model, &st),
-            None => format!("err unknown model '{model}'\n"),
+            Some(st) => (stats_line(model, &st), None),
+            None => (format!("err unknown model '{model}'\n"), None),
         };
     }
     let body = trimmed.strip_prefix("infer ").unwrap_or(trimmed);
@@ -912,23 +1273,30 @@ fn respond_line(line: &str, handle: &CoordinatorHandle) -> String {
         Ok((model, features)) => match handle.infer_features(model, &features) {
             Ok(p) => {
                 let scores: Vec<String> = p.scores.iter().map(|s| s.to_string()).collect();
-                format!("ok {} {}\n", p.class, scores.join(" "))
+                (
+                    format!("ok {} {}\n", p.class, scores.join(" ")),
+                    handle.route_metrics(model),
+                )
             }
-            Err(e) => format!("err {e}\n"),
+            Err(e) => (format!("err {e}\n"), None),
         },
-        Err(e) => format!("err {e}\n"),
+        Err(e) => (format!("err {e}\n"), None),
     }
 }
 
+/// One-line `k=v` stats reply. Parse-stable: every pre-existing key
+/// keeps its position (consumers match `requests=`..`p99_us=` by
+/// token); observability keys only ever *append* after `p99_us=`.
 fn stats_line(model: &str, st: &RouteStats) -> String {
+    use std::fmt::Write as _;
     let m = &st.metrics;
     let opt = |v: Option<u64>| v.map(|v| v.to_string()).unwrap_or_else(|| "-".to_string());
     let version = opt(st.version);
     let generation = opt(st.generation);
-    format!(
+    let mut out = format!(
         "ok model={model} version={version} generation={generation} requests={} \
          completed={} shed={} errors={} restarts={} queue_depth={} batches={} \
-         mean_batch={:.2} p50_us={} p95_us={} p99_us={}\n",
+         mean_batch={:.2} p50_us={} p95_us={} p99_us={}",
         m.requests,
         m.completed,
         m.shed,
@@ -940,7 +1308,28 @@ fn stats_line(model: &str, st: &RouteStats) -> String {
         m.p50_us(),
         m.p95_us(),
         m.p99_us(),
-    )
+    );
+    let _ = write!(
+        out,
+        " uptime_s={} dense_requests={} sparse_requests={} index_efficiency={:.4}",
+        m.uptime_s,
+        m.dense_requests,
+        m.sparse_requests,
+        m.index_efficiency(),
+    );
+    for stage in crate::obs::Stage::ALL {
+        let h = m.stage(stage);
+        let _ = write!(
+            out,
+            " {0}_p50_us={1} {0}_p95_us={2} {0}_p99_us={3}",
+            stage.name(),
+            h.p50(),
+            h.p95(),
+            h.p99(),
+        );
+    }
+    out.push('\n');
+    out
 }
 
 fn parse_request_line(line: &str) -> Result<(&str, Vec<bool>), String> {
@@ -1518,6 +1907,31 @@ mod tests {
     }
 
     #[test]
+    fn stats_line_appends_observability_keys_after_p99() {
+        let st = RouteStats {
+            metrics: Metrics::new().snapshot(),
+            version: None,
+            generation: None,
+        };
+        let line = stats_line("m", &st);
+        assert!(line.ends_with('\n') && line.matches('\n').count() == 1);
+        let p99 = line.find(" p99_us=").expect("p99_us key");
+        for key in [
+            " uptime_s=",
+            " dense_requests=",
+            " sparse_requests=",
+            " index_efficiency=",
+            " queue_p50_us=",
+            " batch_p95_us=",
+            " score_p99_us=",
+            " write_p50_us=",
+        ] {
+            let at = line.find(key).unwrap_or_else(|| panic!("missing {key}"));
+            assert!(at > p99, "{key} must append after p99_us");
+        }
+    }
+
+    #[test]
     fn parse_request_line_cases() {
         let (m, f) = parse_request_line("toy 1010\n").unwrap();
         assert_eq!(m, "toy");
@@ -1567,6 +1981,46 @@ mod tests {
         reply.clear();
         reader.read_line(&mut reply).unwrap();
         assert!(reply.starts_with("err unknown model"), "reply: {reply}");
+
+        // stats events verb: count-framed single-line journal events
+        conn.write_all(b"stats events toy\n").unwrap();
+        reply.clear();
+        reader.read_line(&mut reply).unwrap();
+        assert!(reply.starts_with("ok events="), "reply: {reply}");
+        let n: usize = reply
+            .trim()
+            .strip_prefix("ok events=")
+            .unwrap()
+            .parse()
+            .unwrap();
+        for _ in 0..n {
+            reply.clear();
+            reader.read_line(&mut reply).unwrap();
+            assert!(reply.starts_with("seq="), "event line: {reply}");
+        }
+        conn.write_all(b"stats events missing\n").unwrap();
+        reply.clear();
+        reader.read_line(&mut reply).unwrap();
+        assert!(reply.starts_with("err unknown model"), "reply: {reply}");
+
+        // metrics verb: EOF-terminated, conformant exposition covering
+        // the route's counters
+        conn.write_all(b"metrics\n").unwrap();
+        let mut expo = String::new();
+        loop {
+            reply.clear();
+            reader.read_line(&mut reply).unwrap();
+            expo.push_str(&reply);
+            if reply == "# EOF\n" {
+                break;
+            }
+        }
+        assert!(
+            expo.contains("tmi_requests_total{route=\"toy\"} 2"),
+            "exposition: {expo}"
+        );
+        assert!(expo.contains("tmi_stage_latency_us_bucket{route=\"toy\",stage=\"queue\""));
+        crate::obs::prometheus::validate_exposition(&expo).unwrap();
 
         conn.write_all(b"missing 1\n").unwrap();
         reply.clear();

@@ -20,6 +20,8 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
+use crate::obs::{journal, EventKind};
+
 /// Restart budget and backoff schedule for one worker thread.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct RestartPolicy {
@@ -73,10 +75,13 @@ pub enum SupervisedExit {
 
 /// Run one worker "life" repeatedly: `body` returning means clean
 /// shutdown; `body` panicking consumes one restart from the budget
-/// (recorded in `restarts`), sleeps the backoff, and re-enters.
+/// (recorded in `restarts` and as a `worker_restart` event in the
+/// process [`journal`] under `route`), sleeps the backoff, and
+/// re-enters.
 pub fn supervise(
     policy: &RestartPolicy,
     restarts: &AtomicU64,
+    route: &str,
     mut body: impl FnMut(),
 ) -> SupervisedExit {
     let mut attempts: u32 = 0;
@@ -88,7 +93,11 @@ pub fn supervise(
                 if attempts > policy.max_restarts {
                     return SupervisedExit::RestartsExhausted;
                 }
-                restarts.fetch_add(1, Ordering::Relaxed);
+                let total = restarts.fetch_add(1, Ordering::Relaxed) + 1;
+                journal().emit(EventKind::WorkerRestart {
+                    route: route.to_string(),
+                    restarts: total,
+                });
                 std::thread::sleep(policy.backoff_for(attempts));
             }
         }
@@ -103,7 +112,7 @@ mod tests {
     fn clean_body_runs_once() {
         let restarts = AtomicU64::new(0);
         let mut runs = 0;
-        let exit = supervise(&RestartPolicy::default(), &restarts, || runs += 1);
+        let exit = supervise(&RestartPolicy::default(), &restarts, "sup-test", || runs += 1);
         assert_eq!(exit, SupervisedExit::Clean);
         assert_eq!(runs, 1);
         assert_eq!(restarts.load(Ordering::Relaxed), 0);
@@ -118,7 +127,7 @@ mod tests {
         };
         let restarts = AtomicU64::new(0);
         let mut runs = 0;
-        let exit = supervise(&policy, &restarts, || {
+        let exit = supervise(&policy, &restarts, "sup-test-recovers", || {
             runs += 1;
             if runs < 3 {
                 panic!("injected");
@@ -127,6 +136,13 @@ mod tests {
         assert_eq!(exit, SupervisedExit::Clean);
         assert_eq!(runs, 3);
         assert_eq!(restarts.load(Ordering::Relaxed), 2);
+        // both restarts left a journal trail under this route
+        let events = journal().events_for("sup-test-recovers");
+        let restarts_logged = events
+            .iter()
+            .filter(|e| e.kind.name() == "worker_restart")
+            .count();
+        assert_eq!(restarts_logged, 2);
     }
 
     #[test]
@@ -138,7 +154,7 @@ mod tests {
         };
         let restarts = AtomicU64::new(0);
         let mut runs = 0;
-        let exit = supervise(&policy, &restarts, || {
+        let exit = supervise(&policy, &restarts, "sup-test", || {
             runs += 1;
             panic!("always");
         });
@@ -152,7 +168,7 @@ mod tests {
     fn none_policy_never_restarts() {
         let restarts = AtomicU64::new(0);
         let mut runs = 0;
-        let exit = supervise(&RestartPolicy::none(), &restarts, || {
+        let exit = supervise(&RestartPolicy::none(), &restarts, "sup-test", || {
             runs += 1;
             panic!("fatal");
         });

@@ -28,6 +28,7 @@
 use crate::eval::traits::FlipSink;
 use crate::index::liststore::ListStore;
 use crate::index::position::PositionStore;
+use crate::obs::ProbeDelta;
 use crate::tm::bank::ClauseBank;
 use crate::tm::classifier::MultiClassTM;
 use crate::tm::params::TMParams;
@@ -293,7 +294,12 @@ impl FusedIndex {
         assert_eq!(literals.len(), self.n_literals);
         debug_assert_eq!(scratch.gen.len(), self.total_clauses());
         out.copy_from_slice(&self.vote_alive);
-        let FusedScratch { gen, cur_gen, walk } = scratch;
+        let FusedScratch {
+            gen,
+            cur_gen,
+            walk,
+            probes,
+        } = scratch;
         *cur_gen = cur_gen.wrapping_add(1);
         if *cur_gen == 0 {
             // wrapped: stamps from 4 billion evals ago could collide
@@ -303,6 +309,7 @@ impl FusedIndex {
         let stamp = *cur_gen;
         walk.clear();
         walk.extend(self.walk_false_nonempty(literals).map(|k| k as u32));
+        let mut falsified: u64 = 0;
         const LOOKAHEAD: usize = 8;
         for (i, &k) in walk.iter().enumerate() {
             if let Some(&kn) = walk.get(i + LOOKAHEAD) {
@@ -312,11 +319,18 @@ impl FusedIndex {
                 let g = &mut gen[gid as usize];
                 if *g != stamp {
                     *g = stamp;
+                    falsified += 1;
                     let m = self.meta[gid as usize];
                     out[m.class as usize] -= m.vote;
                 }
             }
         }
+        // Index-efficiency probes: plain adds on a per-sample scratch —
+        // no atomics on the hot path; the batch worker flushes them.
+        probes.dense_samples += 1;
+        probes.features_walked += walk.len() as u64;
+        probes.clauses_falsified += falsified;
+        probes.clauses_skipped += self.meta.len() as u64 - falsified;
     }
 
     /// Full structural invariant check against the machine (tests).
@@ -407,6 +421,9 @@ pub struct FusedScratch {
     cur_gen: u32,
     /// Reusable walk-target buffer (enables prefetch lookahead).
     walk: Vec<u32>,
+    /// Accumulated index-efficiency probe counters (plain adds; drained
+    /// with [`FusedScratch::take_probes`]).
+    probes: ProbeDelta,
 }
 
 impl FusedScratch {
@@ -415,6 +432,7 @@ impl FusedScratch {
             gen: vec![0; total_clauses],
             cur_gen: 0,
             walk: Vec::new(),
+            probes: ProbeDelta::default(),
         }
     }
 
@@ -424,6 +442,12 @@ impl FusedScratch {
         self.gen.resize(total_clauses, 0);
         self.cur_gen = 0;
         self.walk.clear();
+        self.probes = ProbeDelta::default();
+    }
+
+    /// Drain the probe counters accumulated since the last call.
+    pub fn take_probes(&mut self) -> ProbeDelta {
+        self.probes.take()
     }
 
     #[doc(hidden)]

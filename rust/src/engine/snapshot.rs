@@ -175,6 +175,18 @@ pub struct SnapshotScratch {
     sparse: SparseScratch,
 }
 
+impl SnapshotScratch {
+    /// Drain both engines' index-efficiency probe counters into one
+    /// merged delta (see [`crate::obs::ProbeDelta`]). The serving
+    /// worker calls this once per batch and folds the result into the
+    /// route's [`crate::coordinator::Metrics`].
+    pub fn take_probes(&mut self) -> crate::obs::ProbeDelta {
+        let mut delta = self.fused.take_probes();
+        delta.merge(&self.sparse.take_probes());
+        delta
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -46,6 +46,7 @@ use crate::engine::shard::{score_batch_sharded, ShardScorer};
 use crate::eval::traits::FlipSink;
 use crate::index::liststore::ListStore;
 use crate::index::position::PositionStore;
+use crate::obs::ProbeDelta;
 use crate::tm::bank::ClauseBank;
 use crate::tm::classifier::MultiClassTM;
 use crate::tm::params::TMParams;
@@ -396,6 +397,7 @@ impl SparseFusedIndex {
             cur_gen,
             count,
             touched,
+            probes,
             ..
         } = scratch;
         *cur_gen = cur_gen.wrapping_add(1);
@@ -407,6 +409,7 @@ impl SparseFusedIndex {
         let stamp = *cur_gen;
         touched.clear();
         let o = self.features;
+        let mut toggles: u64 = 0;
         const LOOKAHEAD: usize = 4;
         for (i, &k) in set.iter().enumerate() {
             if let Some(&kn) = set.get(i + LOOKAHEAD) {
@@ -414,7 +417,9 @@ impl SparseFusedIndex {
                 prefetch(self.lists.row_ptr(o + kn as usize));
             }
             // negated literal o+k turns false: falsify
-            for &gid in self.lists.row(o + k as usize) {
+            let row = self.lists.row(o + k as usize);
+            toggles += row.len() as u64;
+            for &gid in row {
                 let g = gid as usize;
                 if gen[g] != stamp {
                     gen[g] = stamp;
@@ -424,7 +429,9 @@ impl SparseFusedIndex {
                 count[g] += 1;
             }
             // positive literal k turns true: un-falsify
-            for &gid in self.lists.row(k as usize) {
+            let row = self.lists.row(k as usize);
+            toggles += row.len() as u64;
+            for &gid in row {
                 let g = gid as usize;
                 if gen[g] != stamp {
                     gen[g] = stamp;
@@ -449,6 +456,15 @@ impl SparseFusedIndex {
                 }
             }
         }
+        // Index-efficiency probes: plain adds on a per-sample scratch —
+        // no atomics on the hot path; the batch worker flushes them.
+        // "Falsified" here means clauses the delta walk actually
+        // touched; everything untouched rode the all-zeros baseline.
+        probes.sparse_samples += 1;
+        probes.features_walked += set.len() as u64;
+        probes.sparse_toggles += toggles;
+        probes.clauses_falsified += touched.len() as u64;
+        probes.clauses_skipped += self.meta.len() as u64 - touched.len() as u64;
     }
 
     /// Score a dense `[x, ¬x]` literal vector by extracting its set
@@ -607,6 +623,9 @@ pub struct SparseScratch {
     touched: Vec<u32>,
     /// Set-feature extraction buffer for dense-literal inputs.
     feats: Vec<u32>,
+    /// Accumulated index-efficiency probe counters (plain adds; drained
+    /// with [`SparseScratch::take_probes`]).
+    probes: ProbeDelta,
 }
 
 impl SparseScratch {
@@ -617,6 +636,7 @@ impl SparseScratch {
             count: vec![0; total_clauses],
             touched: Vec::new(),
             feats: Vec::new(),
+            probes: ProbeDelta::default(),
         }
     }
 
@@ -629,6 +649,12 @@ impl SparseScratch {
         self.cur_gen = 0;
         self.touched.clear();
         self.feats.clear();
+        self.probes = ProbeDelta::default();
+    }
+
+    /// Drain the probe counters accumulated since the last call.
+    pub fn take_probes(&mut self) -> ProbeDelta {
+        self.probes.take()
     }
 
     #[doc(hidden)]

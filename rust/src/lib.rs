@@ -37,6 +37,10 @@
 //!   hot-swap snapshot registry, bounded queues with load shedding,
 //!   dynamic batcher workers, CPU-indexed and XLA backends, metrics,
 //!   TCP front end, and the `tmi loadgen` load generator.
+//! * [`obs`] — dependency-free observability: the reusable
+//!   power-of-two [`obs::Histogram`], per-stage request tracing,
+//!   engine index-efficiency probes, Prometheus text exposition, and
+//!   the bounded structured event journal every subsystem emits into.
 //! * [`registry`] — the durable side of serving: an on-disk versioned
 //!   snapshot store (checksummed model files + an atomically-rewritten
 //!   JSON manifest) with retention, quarantine of torn/corrupt files,
@@ -53,6 +57,7 @@ pub mod data;
 pub mod engine;
 pub mod eval;
 pub mod index;
+pub mod obs;
 pub mod parallel;
 pub mod registry;
 pub mod runtime;

@@ -9,6 +9,7 @@
 //!                 hot-swap snapshot routes, bounded queues, load shedding;
 //!                 --registry serves (and crash-recovers) a durable registry
 //! tmi loadgen     open/closed-loop TCP load generator -> BENCH_serve.json
+//! tmi promcheck   validate a Prometheus text exposition (file or stdin)
 //! tmi registry    inspect/maintain a model registry: ls | verify | gc
 //! tmi info        PJRT platform + artifact manifest
 //! ```
@@ -25,7 +26,7 @@ use anyhow::{bail, ensure, Context, Result};
 
 use tsetlin_index::bench_harness::figures::write_figures;
 use tsetlin_index::bench_harness::tables::{run_table, Scale, TableId};
-use tsetlin_index::coordinator::server::serve_tcp_with;
+use tsetlin_index::coordinator::server::{serve_metrics_http, serve_tcp_with};
 use tsetlin_index::coordinator::{
     BatchPolicy, Coordinator, CpuBackend, LoadgenConfig, RouteConfig, ServeOptions, XlaBackend,
 };
@@ -34,6 +35,7 @@ use tsetlin_index::data::synth::ImageStyle;
 use tsetlin_index::data::{imdb, mnist, Dataset};
 use tsetlin_index::engine::{argmax, InferMode, ModelSnapshot, SPARSE_DENSITY_THRESHOLD};
 use tsetlin_index::eval::Backend;
+use tsetlin_index::obs::{self, journal, EventKind};
 use tsetlin_index::parallel::{resolve_threads, ParallelTrainer, DEFAULT_STALE_WINDOW};
 use tsetlin_index::registry::store::DEFAULT_RETAIN;
 use tsetlin_index::registry::{read_generation, sync_published, Registry, SyncEvent, WatchState};
@@ -531,6 +533,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let handle = coord.handle();
     let stop = shutdown_flag();
+    setup_observability(args, &handle, &stop)?;
     if args.has_flag("watch") {
         let interval =
             std::time::Duration::from_millis(args.parse_or("watch-interval-ms", 500u64)?);
@@ -556,6 +559,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     )?;
     eprintln!("shutdown: stopped accepting; draining queues");
     coord.shutdown();
+    dump_journal_on_shutdown("serve loop stopped");
     eprintln!("shutdown complete");
     Ok(())
 }
@@ -596,10 +600,18 @@ fn watch_model_file(
                 let snap = Arc::new(ModelSnapshot::with_mode(tm, version, infer_mode));
                 match handle.swap("cpu", snap) {
                     Ok(retired) => {
+                        journal().emit(EventKind::WatchReload {
+                            route: "cpu".to_string(),
+                            version,
+                        });
                         eprintln!("watch: hot-swapped 'cpu' v{retired} -> v{version}")
                     }
                     Err(e) => {
                         version -= 1;
+                        journal().emit(EventKind::WatchFallback {
+                            route: "cpu".to_string(),
+                            error: e.to_string(),
+                        });
                         eprintln!("watch: swap refused ({e}); keeping v{version}");
                     }
                 }
@@ -608,6 +620,10 @@ fn watch_model_file(
             Err(e) => {
                 // transient (mid-write by a non-atomic writer) or real
                 // corruption: keep serving the old version either way
+                journal().emit(EventKind::WatchFallback {
+                    route: "cpu".to_string(),
+                    error: format!("{e:#}"),
+                });
                 eprintln!("watch: reload of {path} failed ({e:#}); keeping v{version}");
             }
         }
@@ -695,6 +711,7 @@ fn cmd_serve_registry(args: &Args) -> Result<()> {
     );
     let handle = coord.handle();
     let stop = shutdown_flag();
+    setup_observability(args, &handle, &stop)?;
     let registry = Arc::new(Mutex::new(registry));
     if args.has_flag("watch") {
         let interval =
@@ -733,6 +750,7 @@ fn cmd_serve_registry(args: &Args) -> Result<()> {
     )?;
     eprintln!("shutdown: stopped accepting; draining queues");
     coord.shutdown();
+    dump_journal_on_shutdown("registry serve loop stopped");
     let flushed = registry
         .lock()
         .unwrap_or_else(PoisonError::into_inner)
@@ -799,6 +817,61 @@ fn watch_registry(
                 }
             }
         }
+    }
+}
+
+/// Serve-side observability wiring shared by `--model` and
+/// `--registry` serving: `--obs off` disables per-request stage
+/// clocking (probes and the journal stay on — they are batch-wise and
+/// event-wise, not per-request), and `--metrics-addr host:port` starts
+/// the Prometheus text-exposition listener on its own thread.
+fn setup_observability(
+    args: &Args,
+    handle: &tsetlin_index::coordinator::CoordinatorHandle,
+    stop: &Arc<AtomicBool>,
+) -> Result<()> {
+    match args.get_or("obs", "on").as_str() {
+        "on" => {}
+        "off" => {
+            obs::set_enabled(false);
+            eprintln!("observability: per-request stage tracing disabled (--obs off)");
+        }
+        other => bail!("bad value for --obs: '{other}' (on|off)"),
+    }
+    if let Some(addr) = args.get("metrics-addr") {
+        let listener = std::net::TcpListener::bind(addr)
+            .with_context(|| format!("binding metrics listener {addr}"))?;
+        let metrics_handle = handle.clone();
+        let stop_metrics = Arc::clone(stop);
+        std::thread::Builder::new()
+            .name("tmi-metrics".into())
+            .spawn(move || {
+                if let Err(e) = serve_metrics_http(listener, metrics_handle, stop_metrics) {
+                    eprintln!("metrics listener stopped: {e}");
+                }
+            })
+            .context("spawning metrics thread")?;
+        eprintln!("metrics: Prometheus exposition on http://{addr}/metrics");
+    }
+    Ok(())
+}
+
+/// Shutdown trail: record the drain in the journal, then dump every
+/// retained event to stderr — the post-mortem a `kill -9` would have
+/// eaten is at least visible on every clean drain.
+fn dump_journal_on_shutdown(reason: &str) {
+    journal().emit(EventKind::Drain {
+        reason: reason.to_string(),
+    });
+    let events = journal().snapshot();
+    let dropped = journal().dropped();
+    eprintln!(
+        "journal: {} event(s) retained, {} dropped",
+        events.len(),
+        dropped
+    );
+    for e in events {
+        eprintln!("journal: {}", e.to_line());
     }
 }
 
@@ -974,7 +1047,74 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         "{} requests failed with non-overload errors",
         report.errors
     );
+    // Observability overhead gate: compare this (instrumented) run's
+    // throughput against a prior `--obs off` baseline BENCH_serve.json.
+    // The comparison always prints; it only *fails* the run when
+    // TMI_ASSERT_MAX_OBS_OVERHEAD is set (CI — mirrors the
+    // TMI_ASSERT_MIN_TEST_SPEEDUP bench-gate convention).
+    if let Some(baseline_path) = args.get("baseline") {
+        let raw = std::fs::read_to_string(baseline_path)
+            .with_context(|| format!("reading baseline {baseline_path}"))?;
+        let base = tsetlin_index::util::Json::parse(&raw)
+            .map_err(|e| anyhow::anyhow!("parsing baseline {baseline_path}: {e}"))?;
+        let base_rps = base
+            .get("throughput_rps")
+            .and_then(|v| v.as_f64())
+            .context("baseline has no throughput_rps")?;
+        anyhow::ensure!(base_rps > 0.0, "baseline throughput is zero");
+        let overhead = (base_rps - report.throughput_rps) / base_rps;
+        eprintln!(
+            "obs overhead check: baseline {base_rps:.0} ok/s, instrumented {:.0} ok/s \
+             ({:+.2}% overhead)",
+            report.throughput_rps,
+            overhead * 100.0
+        );
+        if let Ok(raw) = std::env::var("TMI_ASSERT_MAX_OBS_OVERHEAD") {
+            let max: f64 = raw
+                .parse()
+                .map_err(|_| anyhow::anyhow!("TMI_ASSERT_MAX_OBS_OVERHEAD must be a float"))?;
+            anyhow::ensure!(
+                overhead <= max,
+                "instrumented throughput fell {:.2}% below the --obs off baseline \
+                 (ceiling {:.2}%)",
+                overhead * 100.0,
+                max * 100.0
+            );
+        }
+    }
     Ok(())
+}
+
+/// `tmi promcheck` — validate a Prometheus text exposition against the
+/// strict structural checker the test suite uses. Reads `--file PATH`
+/// or stdin, so CI can pipe a live scrape straight through:
+/// `curl -s http://<metrics-addr>/metrics | tmi promcheck`.
+fn cmd_promcheck(args: &Args) -> Result<()> {
+    let text = match args.get("file") {
+        Some(path) => {
+            std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?
+        }
+        None => {
+            use std::io::Read;
+            let mut buf = String::new();
+            std::io::stdin()
+                .read_to_string(&mut buf)
+                .context("reading exposition from stdin")?;
+            buf
+        }
+    };
+    ensure!(!text.trim().is_empty(), "empty exposition (nothing to check)");
+    match tsetlin_index::obs::prometheus::validate_exposition(&text) {
+        Ok(()) => {
+            let samples = text
+                .lines()
+                .filter(|l| !l.is_empty() && !l.starts_with('#'))
+                .count();
+            println!("ok: conformant exposition ({samples} sample line(s))");
+            Ok(())
+        }
+        Err(why) => bail!("exposition not conformant: {why}"),
+    }
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
@@ -998,7 +1138,7 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: tmi <train|eval|table|work-ratio|serve|loadgen|registry|info> [--key value ...]
+const USAGE: &str = "usage: tmi <train|eval|table|work-ratio|serve|loadgen|promcheck|registry|info> [--key value ...]
   train      --dataset mnist|fashion|imdb [--levels N|--features N] --clauses N
              --epochs N [--backend naive|bitpacked|indexed] [--out model.tm]
              [--registry DIR [--route NAME] [--retain K]]  (publish the trained
@@ -1037,11 +1177,22 @@ const USAGE: &str = "usage: tmi <train|eval|table|work-ratio|serve|loadgen|regis
              [--infer auto|dense|sparse]
              [--backend B] [--parallel N]  (ablation backends serve through a
                                single-worker factory route; no hot swap)
+             [--metrics-addr host:port]  (Prometheus text exposition via HTTP
+                               GET /metrics; also available as the TCP verb
+                               'metrics' on the main listener)
+             [--obs on|off]   (per-request stage tracing; off removes the
+                               per-request clock reads, keeping batch-wise
+                               probes and the event journal; default on)
   loadgen    --features N (model's raw feature width) [--addr host:port]
              [--model cpu] [--connections N] [--duration SECS]
              [--rate R]   (total offered req/s, open loop; 0 = closed loop)
              [--out BENCH_serve.json] [--seed N]
              [--assert-min-ok N] [--assert-max-shed-rate F]   (CI gates)
+             [--baseline FILE]  (compare throughput against a prior run's
+                               BENCH_serve.json — e.g. an --obs off run; fails
+                               when TMI_ASSERT_MAX_OBS_OVERHEAD is exceeded)
+  promcheck  [--file FILE]  (validate a Prometheus exposition, else stdin:
+                             curl -s http://ADDR/metrics | tmi promcheck)
   registry   <ls|verify|gc> --registry DIR [--retain K]
              ls: routes, published versions, retained files
              verify: re-checksum every recorded snapshot (exit 1 on damage)
@@ -1079,6 +1230,7 @@ fn main() -> Result<()> {
         "work-ratio" => cmd_work_ratio(&args),
         "serve" => cmd_serve(&args),
         "loadgen" => cmd_loadgen(&args),
+        "promcheck" => cmd_promcheck(&args),
         "info" => cmd_info(&args),
         other => {
             eprintln!("unknown command '{other}'\n{USAGE}");

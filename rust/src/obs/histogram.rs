@@ -1,0 +1,168 @@
+//! Reusable lock-free power-of-two histogram.
+//!
+//! Generalizes the serving `Metrics` latency histogram into a type any
+//! subsystem can embed: 24 buckets whose upper bounds are `2^(i+1)`
+//! units (microseconds everywhere in this repo: 1us .. ~8.4s), one
+//! relaxed `fetch_add` per record plus a running sum so Prometheus
+//! exposition can emit `_sum`/`_count` alongside `_bucket`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Bucket count: upper bounds `2, 4, 8, .., 2^24` (~16.7s); the last
+/// bucket additionally absorbs every larger value.
+pub const BUCKETS: usize = 24;
+
+/// Lock-free fixed-bucket histogram (power-of-two upper bounds).
+#[derive(Debug, Default)]
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    sum: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bucket index for `value`: floor(log2(max(value,1))), clamped.
+    #[inline]
+    pub fn bucket_index(value: u64) -> usize {
+        (64 - value.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1)
+    }
+
+    /// Upper bound of bucket `i` (`2^(i+1)`).
+    #[inline]
+    pub fn bucket_bound(i: usize) -> u64 {
+        1u64 << (i + 1)
+    }
+
+    /// Record one observation (relaxed; safe from any thread).
+    #[inline]
+    pub fn record(&self, value: u64) {
+        self.buckets[Self::bucket_index(value)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(value, Ordering::Relaxed);
+    }
+
+    /// Record a duration in microseconds.
+    #[inline]
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_micros() as u64);
+    }
+
+    /// Point-in-time copy. Bucket counts and the sum are read with
+    /// relaxed loads, so under concurrent writers the sum may lag the
+    /// buckets by in-flight observations — each read value is still a
+    /// real past value (no torn u64 reads).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let mut buckets = Vec::new();
+        let mut count = 0u64;
+        for (i, c) in self.buckets.iter().enumerate() {
+            let n = c.load(Ordering::Relaxed);
+            count += n;
+            if n > 0 {
+                buckets.push((Self::bucket_bound(i), n));
+            }
+        }
+        HistogramSnapshot {
+            buckets,
+            count,
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time histogram copy for reporting.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    /// `(upper_bound, count)` for non-empty buckets, ascending bounds.
+    pub buckets: Vec<(u64, u64)>,
+    /// Total observations.
+    pub count: u64,
+    /// Sum of observed values (same unit as the bounds).
+    pub sum: u64,
+}
+
+impl HistogramSnapshot {
+    /// Approximate quantile: the upper bound of the bucket holding the
+    /// nearest-rank observation. `None` when empty.
+    pub fn quantile(&self, q: f64) -> Option<u64> {
+        if self.count == 0 {
+            return None;
+        }
+        let target = ((self.count as f64) * q).ceil() as u64;
+        let mut seen = 0;
+        for &(bound, count) in &self.buckets {
+            seen += count;
+            if seen >= target {
+                return Some(bound);
+            }
+        }
+        self.buckets.last().map(|&(b, _)| b)
+    }
+
+    /// p50 (0 when empty) — stats-line formatting convenience.
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.5).unwrap_or(0)
+    }
+
+    /// p95 (0 when empty).
+    pub fn p95(&self) -> u64 {
+        self.quantile(0.95).unwrap_or(0)
+    }
+
+    /// p99 (0 when empty).
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(Histogram::bucket_index(0), 0);
+        assert_eq!(Histogram::bucket_index(1), 0);
+        assert_eq!(Histogram::bucket_index(2), 1);
+        assert_eq!(Histogram::bucket_index(3), 1);
+        assert_eq!(Histogram::bucket_index(1024), 10);
+        assert_eq!(Histogram::bucket_index(u64::MAX), BUCKETS - 1);
+        assert_eq!(Histogram::bucket_bound(0), 2);
+        assert_eq!(Histogram::bucket_bound(10), 2048);
+    }
+
+    #[test]
+    fn record_and_quantiles() {
+        let h = Histogram::new();
+        h.record(100);
+        h.record(90);
+        h.record_duration(Duration::from_millis(10));
+        let s = h.snapshot();
+        assert_eq!(s.count, 3);
+        assert_eq!(s.sum, 100 + 90 + 10_000);
+        // 2 fast + 1 slow: p50 lands in the ~128us bucket
+        assert_eq!(s.quantile(0.5), Some(128));
+        assert!(s.quantile(0.99).unwrap() >= 8192);
+        assert_eq!(s.p50(), 128);
+        assert!(s.p95() >= 8192 && s.p99() >= s.p95());
+    }
+
+    #[test]
+    fn empty_snapshot() {
+        let s = Histogram::new().snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.quantile(0.5), None);
+        assert_eq!((s.p50(), s.p95(), s.p99()), (0, 0, 0));
+    }
+
+    #[test]
+    fn oversized_values_clamp_to_last_bucket() {
+        let h = Histogram::new();
+        h.record(u64::MAX);
+        let s = h.snapshot();
+        assert_eq!(s.buckets, vec![(Histogram::bucket_bound(BUCKETS - 1), 1)]);
+        assert_eq!(s.quantile(1.0), Some(Histogram::bucket_bound(BUCKETS - 1)));
+    }
+}

@@ -1,0 +1,360 @@
+//! Bounded structured event journal.
+//!
+//! A process-wide ring buffer of typed operational events — snapshot
+//! swaps, worker restarts, quarantines, shed episodes, drains — each
+//! stamped with a monotonic offset (ordering) and a wall clock
+//! (correlation with external logs). Registry, supervisor, and
+//! coordinator all emit into the one [`journal`]; the serving layer
+//! drains it via the `stats events <model>` verb and dumps it on
+//! shutdown, so even a `kill -9` recovery leaves an inspectable trail
+//! on the next run.
+//!
+//! Capacity-bounded: when full, the oldest event is evicted and a
+//! dropped counter keeps the loss visible. Emission never panics —
+//! lock poisoning recovers via `PoisonError::into_inner` like the
+//! serving queue.
+
+use std::collections::VecDeque;
+use std::sync::{Mutex, OnceLock, PoisonError};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+/// Default ring capacity (events) for the process journal.
+pub const DEFAULT_CAPACITY: usize = 1024;
+
+/// Typed operational events. Route-scoped variants carry the route
+/// name; [`EventKind::route`] is `None` for process-wide events.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EventKind {
+    /// A route atomically swapped to a new model snapshot.
+    SnapshotSwap {
+        route: String,
+        version: u64,
+        generation: u64,
+    },
+    /// The supervisor restarted a panicked worker.
+    WorkerRestart { route: String, restarts: u64 },
+    /// The registry quarantined a torn/corrupt snapshot file.
+    Quarantine {
+        route: String,
+        version: u64,
+        reason: String,
+    },
+    /// A route was recovered (registry manifest / watch reload).
+    RouteRecovered { route: String, version: u64 },
+    /// A route failed to load and was skipped or kept on its old
+    /// snapshot (the `error` says why).
+    RouteFailed { route: String, error: String },
+    /// First shed after a healthy period: a shed episode began.
+    ShedStart { route: String, trace: u64 },
+    /// First successful admission after shedding: episode over.
+    ShedEnd { route: String, shed_total: u64 },
+    /// `--watch` picked up a changed model file and reloaded it.
+    WatchReload { route: String, version: u64 },
+    /// `--watch` saw a change but kept serving the old snapshot.
+    WatchFallback { route: String, error: String },
+    /// The serve loop began draining (signal or shutdown).
+    Drain { reason: String },
+}
+
+impl EventKind {
+    /// Stable lowercase kind tag (journal lines, tests).
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::SnapshotSwap { .. } => "swap",
+            EventKind::WorkerRestart { .. } => "worker_restart",
+            EventKind::Quarantine { .. } => "quarantine",
+            EventKind::RouteRecovered { .. } => "route_recovered",
+            EventKind::RouteFailed { .. } => "route_failed",
+            EventKind::ShedStart { .. } => "shed_start",
+            EventKind::ShedEnd { .. } => "shed_end",
+            EventKind::WatchReload { .. } => "watch_reload",
+            EventKind::WatchFallback { .. } => "watch_fallback",
+            EventKind::Drain { .. } => "drain",
+        }
+    }
+
+    /// The route this event concerns, if route-scoped.
+    pub fn route(&self) -> Option<&str> {
+        match self {
+            EventKind::SnapshotSwap { route, .. }
+            | EventKind::WorkerRestart { route, .. }
+            | EventKind::Quarantine { route, .. }
+            | EventKind::RouteRecovered { route, .. }
+            | EventKind::RouteFailed { route, .. }
+            | EventKind::ShedStart { route, .. }
+            | EventKind::ShedEnd { route, .. }
+            | EventKind::WatchReload { route, .. }
+            | EventKind::WatchFallback { route, .. } => Some(route),
+            EventKind::Drain { .. } => None,
+        }
+    }
+
+    /// Variant-specific `k=v` fields (route/kind excluded).
+    fn detail(&self, out: &mut String) {
+        use std::fmt::Write;
+        match self {
+            EventKind::SnapshotSwap {
+                version, generation, ..
+            } => {
+                let _ = write!(out, " version={version} generation={generation}");
+            }
+            EventKind::WorkerRestart { restarts, .. } => {
+                let _ = write!(out, " restarts={restarts}");
+            }
+            EventKind::Quarantine {
+                version, reason, ..
+            } => {
+                let _ = write!(out, " version={version} reason={}", quote(reason));
+            }
+            EventKind::RouteRecovered { version, .. } => {
+                let _ = write!(out, " version={version}");
+            }
+            EventKind::RouteFailed { error, .. } | EventKind::WatchFallback { error, .. } => {
+                let _ = write!(out, " error={}", quote(error));
+            }
+            EventKind::ShedStart { trace, .. } => {
+                let _ = write!(out, " trace={trace}");
+            }
+            EventKind::ShedEnd { shed_total, .. } => {
+                let _ = write!(out, " shed_total={shed_total}");
+            }
+            EventKind::WatchReload { version, .. } => {
+                let _ = write!(out, " version={version}");
+            }
+            EventKind::Drain { reason } => {
+                let _ = write!(out, " reason={}", quote(reason));
+            }
+        }
+    }
+}
+
+/// Quote a free-form string for a single-line `k="v"` field: escapes
+/// backslash and double quote, folds newlines — journal lines must
+/// stay one line for the line protocol.
+fn quote(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// One journal entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Event {
+    /// Monotonic sequence number (1-based, never reused; gaps mean
+    /// nothing — eviction does not renumber).
+    pub seq: u64,
+    /// Wall clock, milliseconds since the UNIX epoch.
+    pub wall_ms: u64,
+    /// Monotonic microseconds since the journal was created.
+    pub mono_us: u64,
+    pub kind: EventKind,
+}
+
+impl Event {
+    /// Render as one `k=v` line (the `stats events` wire format).
+    pub fn to_line(&self) -> String {
+        let mut out = format!(
+            "seq={} wall_ms={} mono_us={} kind={}",
+            self.seq,
+            self.wall_ms,
+            self.mono_us,
+            self.kind.name()
+        );
+        if let Some(route) = self.kind.route() {
+            out.push_str(" route=");
+            out.push_str(route);
+        }
+        self.kind.detail(&mut out);
+        out
+    }
+}
+
+struct Ring {
+    events: VecDeque<Event>,
+    next_seq: u64,
+    dropped: u64,
+}
+
+/// Bounded, mutex-guarded event ring. Emission is rare (operational
+/// events, not per-request), so a plain mutex is the right tool.
+pub struct Journal {
+    ring: Mutex<Ring>,
+    capacity: usize,
+    t0: Instant,
+}
+
+impl Journal {
+    pub fn new(capacity: usize) -> Self {
+        Journal {
+            ring: Mutex::new(Ring {
+                events: VecDeque::with_capacity(capacity.min(64)),
+                next_seq: 1,
+                dropped: 0,
+            }),
+            capacity: capacity.max(1),
+            t0: Instant::now(),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Ring> {
+        self.ring.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Append an event, evicting the oldest when at capacity.
+    pub fn emit(&self, kind: EventKind) {
+        let wall_ms = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        let mono_us = self.t0.elapsed().as_micros() as u64;
+        let mut ring = self.lock();
+        if ring.events.len() >= self.capacity {
+            ring.events.pop_front();
+            ring.dropped += 1;
+        }
+        let seq = ring.next_seq;
+        ring.next_seq += 1;
+        ring.events.push_back(Event {
+            seq,
+            wall_ms,
+            mono_us,
+            kind,
+        });
+    }
+
+    /// Copy of every retained event, oldest first.
+    pub fn snapshot(&self) -> Vec<Event> {
+        self.lock().events.iter().cloned().collect()
+    }
+
+    /// Retained events concerning `route`, plus process-wide events
+    /// (e.g. drain) — oldest first. This is `stats events <model>`.
+    pub fn events_for(&self, route: &str) -> Vec<Event> {
+        self.lock()
+            .events
+            .iter()
+            .filter(|e| match e.kind.route() {
+                Some(r) => r == route,
+                None => true,
+            })
+            .cloned()
+            .collect()
+    }
+
+    /// Retained event count.
+    pub fn len(&self) -> usize {
+        self.lock().events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total events ever emitted (== the last seq handed out).
+    pub fn emitted(&self) -> u64 {
+        self.lock().next_seq - 1
+    }
+
+    /// Events evicted to honor the capacity bound.
+    pub fn dropped(&self) -> u64 {
+        self.lock().dropped
+    }
+}
+
+/// The process-wide journal every subsystem emits into.
+pub fn journal() -> &'static Journal {
+    static JOURNAL: OnceLock<Journal> = OnceLock::new();
+    JOURNAL.get_or_init(|| Journal::new(DEFAULT_CAPACITY))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emits_and_snapshots_in_order() {
+        let j = Journal::new(8);
+        j.emit(EventKind::SnapshotSwap {
+            route: "cpu".into(),
+            version: 2,
+            generation: 5,
+        });
+        j.emit(EventKind::Drain {
+            reason: "signal".into(),
+        });
+        let evs = j.snapshot();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].seq, 1);
+        assert_eq!(evs[1].seq, 2);
+        assert!(evs[1].mono_us >= evs[0].mono_us);
+        assert_eq!(evs[0].kind.name(), "swap");
+        assert_eq!(evs[0].kind.route(), Some("cpu"));
+        assert_eq!(evs[1].kind.route(), None);
+        assert_eq!(j.emitted(), 2);
+        assert_eq!(j.dropped(), 0);
+    }
+
+    #[test]
+    fn capacity_evicts_oldest_and_counts_drops() {
+        let j = Journal::new(3);
+        for i in 0..5u64 {
+            j.emit(EventKind::WorkerRestart {
+                route: "r".into(),
+                restarts: i,
+            });
+        }
+        let evs = j.snapshot();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].seq, 3, "oldest two evicted");
+        assert_eq!(j.dropped(), 2);
+        assert_eq!(j.emitted(), 5);
+    }
+
+    #[test]
+    fn route_filter_includes_process_events() {
+        let j = Journal::new(8);
+        j.emit(EventKind::ShedStart {
+            route: "a".into(),
+            trace: 7,
+        });
+        j.emit(EventKind::ShedEnd {
+            route: "b".into(),
+            shed_total: 1,
+        });
+        j.emit(EventKind::Drain {
+            reason: "test".into(),
+        });
+        let a = j.events_for("a");
+        assert_eq!(a.len(), 2, "route a event + process-wide drain");
+        assert_eq!(a[0].kind.name(), "shed_start");
+        assert_eq!(a[1].kind.name(), "drain");
+    }
+
+    #[test]
+    fn line_format_escapes_free_text() {
+        let j = Journal::new(4);
+        j.emit(EventKind::Quarantine {
+            route: "cpu".into(),
+            version: 3,
+            reason: "bad \"crc\"\nline".into(),
+        });
+        let line = j.snapshot()[0].to_line();
+        assert!(line.starts_with("seq=1 wall_ms="));
+        assert!(line.contains(" kind=quarantine route=cpu version=3 reason="));
+        assert!(
+            !line.contains('\n'),
+            "journal lines must stay single-line: {line:?}"
+        );
+        assert!(line.contains("\\\"crc\\\"\\nline"));
+    }
+}

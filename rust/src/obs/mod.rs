@@ -1,0 +1,117 @@
+//! Dependency-free observability: per-stage request tracing,
+//! index-efficiency probes, Prometheus text exposition, and a bounded
+//! structured event journal.
+//!
+//! The paper's value claim is *work avoided* — clauses eliminated by
+//! the falsification look-up table instead of evaluated. This module
+//! makes that visible on live traffic:
+//!
+//! * [`histogram`] — [`Histogram`]: the reusable power-of-two
+//!   microsecond histogram behind every latency metric (generalized
+//!   from the old `Metrics` latency histogram).
+//! * [`probes`] — [`ProbeDelta`]: non-atomic per-scratch counters the
+//!   engines bump in their hot loops (clauses falsified by the index
+//!   vs clause evaluations skipped outright, features walked,
+//!   sparse-delta toggles), flushed batch-wise into the route's
+//!   relaxed-atomic `Metrics`; plus process-wide feedback-flip
+//!   counters maintained by `tm/feedback.rs`.
+//! * [`prometheus`] — hand-rolled Prometheus text format 0.0.4
+//!   rendering and a conformance validator (no crates).
+//! * [`journal`] — a bounded ring of typed operational events
+//!   (snapshot swap, worker restart, quarantine, shed episodes,
+//!   drain) with monotonic + wall timestamps.
+//!
+//! Everything is on by default; [`set_enabled`]`(false)` (CLI:
+//! `tmi serve --obs off`) drops the per-request stage clocking so the
+//! CI overhead gate can measure instrumented-vs-bare throughput.
+
+pub mod histogram;
+pub mod journal;
+pub mod probes;
+pub mod prometheus;
+
+pub use histogram::{Histogram, HistogramSnapshot};
+pub use journal::{journal, Event, EventKind, Journal};
+pub use probes::ProbeDelta;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+/// Request pipeline stages clocked by the serving coordinator.
+///
+/// Stage semantics (all microseconds, power-of-two buckets):
+///
+/// * `Queue` — admission to batch-ready: time the request sat in the
+///   bounded queue plus the assembly wait of the batch that carried it.
+/// * `Batch` — per batch: first pop to batch-ready (size/deadline
+///   collection window of [`crate::coordinator::BatchPolicy`]).
+/// * `Score` — per request: the engine scoring call alone.
+/// * `Write` — the TCP reply write observed by the connection thread
+///   (spikes when the client stops reading).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    Queue = 0,
+    Batch = 1,
+    Score = 2,
+    Write = 3,
+}
+
+/// Number of [`Stage`] variants (array sizing).
+pub const STAGES: usize = 4;
+
+impl Stage {
+    pub const ALL: [Stage; STAGES] = [Stage::Queue, Stage::Batch, Stage::Score, Stage::Write];
+
+    /// Stable lowercase name (stats keys, Prometheus `stage` label).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Queue => "queue",
+            Stage::Batch => "batch",
+            Stage::Score => "score",
+            Stage::Write => "write",
+        }
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(true);
+static NEXT_TRACE: AtomicU64 = AtomicU64::new(1);
+
+/// Is per-request stage clocking enabled? (Probe deltas and the
+/// journal stay on either way — they are branch-free or rare.)
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Toggle per-request stage clocking (process-wide; `serve --obs off`).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Allocate the next process-wide trace id (1-based, never reused).
+#[inline]
+pub fn next_trace_id() -> u64 {
+    NEXT_TRACE.fetch_add(1, Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_names_and_order() {
+        assert_eq!(Stage::ALL.len(), STAGES);
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            assert_eq!(*s as usize, i);
+        }
+        assert_eq!(Stage::Queue.name(), "queue");
+        assert_eq!(Stage::Write.name(), "write");
+    }
+
+    #[test]
+    fn trace_ids_are_unique_and_increasing() {
+        let a = next_trace_id();
+        let b = next_trace_id();
+        assert!(b > a);
+        assert!(a >= 1);
+    }
+}

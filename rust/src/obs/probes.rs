@@ -1,0 +1,140 @@
+//! Index-efficiency probes: how much work the paper's clause index
+//! actually avoids on live traffic.
+//!
+//! Two tiers keep the hot loops honest:
+//!
+//! * **Scratch tier** ([`ProbeDelta`]): plain (non-atomic) `u64`
+//!   counters embedded in the engines' per-thread scratch. The fused
+//!   walk and the sparse-delta walk bump them with ordinary adds —
+//!   zero synchronization in the per-clause loops. Workers flush the
+//!   accumulated delta into the route's relaxed-atomic `Metrics` once
+//!   per batch.
+//! * **Process tier**: relaxed-atomic statics for the training-side
+//!   feedback path (`tm/feedback.rs`), where there is no per-route
+//!   home — include/exclude flips forwarded to the index maintenance
+//!   sinks, and clause updates sampled. One `fetch_add` per
+//!   clause-range update, not per flip.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Non-atomic probe accumulator carried inside engine scratch.
+///
+/// `clauses_falsified` counts unique clauses the index walk knocked
+/// out (the only per-clause work an indexed evaluation performs);
+/// `clauses_skipped` counts clause evaluations avoided outright —
+/// clauses a naive evaluator would have walked literal-by-literal but
+/// the index never touched. Their ratio is the serving-time face of
+/// the paper's speedup claim.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ProbeDelta {
+    /// Samples scored by the dense fused falsification walk.
+    pub dense_samples: u64,
+    /// Samples scored by the O(nnz) sparse-delta walk.
+    pub sparse_samples: u64,
+    /// Unique clauses falsified via the index (dedup-stamped).
+    pub clauses_falsified: u64,
+    /// Clause evaluations skipped entirely (total clauses − falsified).
+    pub clauses_skipped: u64,
+    /// False non-empty literals walked by the dense engine.
+    pub features_walked: u64,
+    /// Per-literal delta-row toggles applied by the sparse engine.
+    pub sparse_toggles: u64,
+}
+
+impl ProbeDelta {
+    /// Take the accumulated delta, leaving zeros behind (batch flush).
+    pub fn take(&mut self) -> ProbeDelta {
+        std::mem::take(self)
+    }
+
+    /// Field-wise add (merging a sibling scratch's delta).
+    pub fn merge(&mut self, other: &ProbeDelta) {
+        self.dense_samples += other.dense_samples;
+        self.sparse_samples += other.sparse_samples;
+        self.clauses_falsified += other.clauses_falsified;
+        self.clauses_skipped += other.clauses_skipped;
+        self.features_walked += other.features_walked;
+        self.sparse_toggles += other.sparse_toggles;
+    }
+
+    /// True when nothing has been recorded since the last take.
+    pub fn is_empty(&self) -> bool {
+        *self == ProbeDelta::default()
+    }
+
+    /// Fraction of clause evaluations the index avoided (0 when no
+    /// samples have been scored).
+    pub fn index_efficiency(&self) -> f64 {
+        index_efficiency(self.clauses_falsified, self.clauses_skipped)
+    }
+}
+
+/// `skipped / (skipped + falsified)`, or 0 with no data.
+pub fn index_efficiency(falsified: u64, skipped: u64) -> f64 {
+    let total = falsified + skipped;
+    if total == 0 {
+        0.0
+    } else {
+        skipped as f64 / total as f64
+    }
+}
+
+/// Include/exclude flips forwarded to index-maintenance sinks by the
+/// feedback path (process-wide; training-side).
+pub static FEEDBACK_FLIPS: AtomicU64 = AtomicU64::new(0);
+
+/// Clause updates sampled by `update_clause_range` (process-wide).
+pub static FEEDBACK_CLAUSE_UPDATES: AtomicU64 = AtomicU64::new(0);
+
+/// Current process-wide feedback flip count.
+pub fn feedback_flips() -> u64 {
+    FEEDBACK_FLIPS.load(Ordering::Relaxed)
+}
+
+/// Current process-wide feedback clause-update count.
+pub fn feedback_clause_updates() -> u64 {
+    FEEDBACK_CLAUSE_UPDATES.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_drains_and_merge_adds() {
+        let mut a = ProbeDelta {
+            dense_samples: 2,
+            clauses_falsified: 10,
+            clauses_skipped: 90,
+            features_walked: 40,
+            ..ProbeDelta::default()
+        };
+        let mut b = ProbeDelta {
+            sparse_samples: 1,
+            sparse_toggles: 7,
+            clauses_falsified: 5,
+            clauses_skipped: 15,
+            ..ProbeDelta::default()
+        };
+        b.merge(&a.take());
+        assert!(a.is_empty());
+        assert_eq!(b.dense_samples, 2);
+        assert_eq!(b.sparse_samples, 1);
+        assert_eq!(b.clauses_falsified, 15);
+        assert_eq!(b.clauses_skipped, 105);
+        assert_eq!(b.features_walked, 40);
+        assert_eq!(b.sparse_toggles, 7);
+    }
+
+    #[test]
+    fn efficiency_ratio() {
+        assert_eq!(index_efficiency(0, 0), 0.0);
+        assert!((index_efficiency(10, 90) - 0.9).abs() < 1e-12);
+        let d = ProbeDelta {
+            clauses_falsified: 1,
+            clauses_skipped: 3,
+            ..ProbeDelta::default()
+        };
+        assert!((d.index_efficiency() - 0.75).abs() < 1e-12);
+    }
+}

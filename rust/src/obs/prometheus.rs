@@ -1,0 +1,506 @@
+//! Hand-rolled Prometheus text exposition (format 0.0.4) — no crates.
+//!
+//! [`PromWriter`] renders counters, gauges, and histograms with the
+//! escaping rules of the text format; [`validate_exposition`] is the
+//! conformance checker the tests and the `tmi promcheck` CLI run over
+//! real scrape output (metric/label name charsets, `# HELP`/`# TYPE`
+//! discipline, histogram `_bucket` cumulativity and `_sum`/`_count`
+//! presence).
+
+use super::histogram::HistogramSnapshot;
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt::Write as _;
+
+/// `[a-zA-Z_:][a-zA-Z0-9_:]*`
+pub fn is_valid_metric_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+/// `[a-zA-Z_][a-zA-Z0-9_]*`
+pub fn is_valid_label_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// Escape a label value: `\\`, `\"`, `\n`.
+pub fn escape_label_value(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Escape HELP text: `\\` and `\n` (quotes are legal there).
+pub fn escape_help(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Streaming exposition builder. Families are written header-first
+/// (`# HELP`, `# TYPE`), then any number of samples; [`finish`]
+/// terminates with `# EOF` (OpenMetrics-style trailer, a plain
+/// comment under 0.0.4 — clients reading the `metrics` protocol verb
+/// use it as the end-of-reply marker).
+///
+/// [`finish`]: PromWriter::finish
+#[derive(Debug, Default)]
+pub struct PromWriter {
+    out: String,
+}
+
+impl PromWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start a metric family. `kind` is `counter`, `gauge`, or
+    /// `histogram`. Invalid names are a programming error.
+    pub fn header(&mut self, name: &str, help: &str, kind: &str) {
+        debug_assert!(is_valid_metric_name(name), "bad metric name {name:?}");
+        let _ = writeln!(self.out, "# HELP {name} {}", escape_help(help));
+        let _ = writeln!(self.out, "# TYPE {name} {kind}");
+    }
+
+    fn write_labels(&mut self, labels: &[(&str, &str)]) {
+        if labels.is_empty() {
+            return;
+        }
+        self.out.push('{');
+        for (i, (k, v)) in labels.iter().enumerate() {
+            debug_assert!(is_valid_label_name(k), "bad label name {k:?}");
+            if i > 0 {
+                self.out.push(',');
+            }
+            let _ = write!(self.out, "{k}=\"{}\"", escape_label_value(v));
+        }
+        self.out.push('}');
+    }
+
+    /// One float sample. (Rust's `Display` for `f64` prints integral
+    /// values without a trailing `.0`, which the format accepts.)
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        debug_assert!(is_valid_metric_name(name), "bad metric name {name:?}");
+        self.out.push_str(name);
+        self.write_labels(labels);
+        let _ = writeln!(self.out, " {value}");
+    }
+
+    /// One integer sample (counters/gauges; exact at any magnitude).
+    pub fn int_sample(&mut self, name: &str, labels: &[(&str, &str)], value: u64) {
+        debug_assert!(is_valid_metric_name(name), "bad metric name {name:?}");
+        self.out.push_str(name);
+        self.write_labels(labels);
+        let _ = writeln!(self.out, " {value}");
+    }
+
+    /// Emit `_bucket` (cumulative, with `le="+Inf"`), `_sum`, and
+    /// `_count` series for one histogram under `labels`.
+    pub fn histogram(&mut self, name: &str, labels: &[(&str, &str)], h: &HistogramSnapshot) {
+        let bucket_name = format!("{name}_bucket");
+        let mut cumulative = 0u64;
+        for &(bound, count) in &h.buckets {
+            cumulative += count;
+            let le = bound.to_string();
+            let mut with_le: Vec<(&str, &str)> = Vec::with_capacity(labels.len() + 1);
+            with_le.extend_from_slice(labels);
+            with_le.push(("le", &le));
+            self.int_sample(&bucket_name, &with_le, cumulative);
+        }
+        let mut with_le: Vec<(&str, &str)> = Vec::with_capacity(labels.len() + 1);
+        with_le.extend_from_slice(labels);
+        with_le.push(("le", "+Inf"));
+        self.int_sample(&bucket_name, &with_le, h.count);
+        self.int_sample(&format!("{name}_sum"), labels, h.sum);
+        self.int_sample(&format!("{name}_count"), labels, h.count);
+    }
+
+    /// Terminate and take the exposition text.
+    pub fn finish(mut self) -> String {
+        self.out.push_str("# EOF\n");
+        self.out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Conformance validator
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Default)]
+struct Families {
+    /// family name -> declared TYPE
+    types: BTreeMap<String, String>,
+    /// family names with a HELP line
+    helped: BTreeSet<String>,
+    /// families that have emitted at least one sample
+    sampled: BTreeSet<String>,
+    /// full sample identity (name + serialized labels) seen so far
+    seen: BTreeSet<String>,
+    /// histogram family -> labelset(minus le) -> series values
+    histograms: BTreeMap<String, BTreeMap<String, HistogramSeries>>,
+}
+
+#[derive(Debug, Default)]
+struct HistogramSeries {
+    /// (le, cumulative count) pairs in order of appearance
+    buckets: Vec<(f64, f64)>,
+    sum: Option<f64>,
+    count: Option<f64>,
+}
+
+/// Strict conformance check for an exposition produced by this crate:
+/// every sample must belong to a family with exactly one `# TYPE` and
+/// a `# HELP` that precede it, names and label names must match the
+/// format charsets, no duplicate series, and histogram `_bucket`
+/// series must be cumulative with `le="+Inf"` equal to `_count` and a
+/// `_sum` present. Returns the first violation.
+pub fn validate_exposition(text: &str) -> Result<(), String> {
+    let mut fam = Families::default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let n = lineno + 1;
+        let line = raw.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split_whitespace().next().unwrap_or("");
+            if !is_valid_metric_name(name) {
+                return Err(format!("line {n}: bad HELP metric name {name:?}"));
+            }
+            if !fam.helped.insert(name.to_string()) {
+                return Err(format!("line {n}: duplicate HELP for {name}"));
+            }
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().unwrap_or("");
+            let kind = it.next().unwrap_or("");
+            if !is_valid_metric_name(name) {
+                return Err(format!("line {n}: bad TYPE metric name {name:?}"));
+            }
+            if !matches!(kind, "counter" | "gauge" | "histogram" | "summary" | "untyped") {
+                return Err(format!("line {n}: unknown TYPE {kind:?} for {name}"));
+            }
+            if fam.sampled.contains(name) {
+                return Err(format!("line {n}: TYPE for {name} after its samples"));
+            }
+            if fam.types.insert(name.to_string(), kind.to_string()).is_some() {
+                return Err(format!("line {n}: duplicate TYPE for {name}"));
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // plain comment (includes the # EOF trailer)
+        }
+        parse_sample(line, n, &mut fam)?;
+    }
+    for name in &fam.sampled {
+        let family = histogram_family(name, &fam.types).unwrap_or_else(|| name.clone());
+        if !fam.types.contains_key(&family) {
+            return Err(format!("samples for {name} have no # TYPE"));
+        }
+        if !fam.helped.contains(&family) {
+            return Err(format!("samples for {name} have no # HELP"));
+        }
+    }
+    for (family, by_labels) in &fam.histograms {
+        for (labels, series) in by_labels {
+            check_histogram_series(family, labels, series)?;
+        }
+    }
+    Ok(())
+}
+
+/// If `name` is a `_bucket`/`_sum`/`_count` series of a declared
+/// histogram family, return that family name.
+fn histogram_family(name: &str, types: &BTreeMap<String, String>) -> Option<String> {
+    for suffix in ["_bucket", "_sum", "_count"] {
+        if let Some(base) = name.strip_suffix(suffix) {
+            if types.get(base).map(String::as_str) == Some("histogram") {
+                return Some(base.to_string());
+            }
+        }
+    }
+    None
+}
+
+fn parse_sample(line: &str, n: usize, fam: &mut Families) -> Result<(), String> {
+    // metric name
+    let name_end = line
+        .find(|c: char| c == '{' || c == ' ')
+        .ok_or_else(|| format!("line {n}: no value in sample {line:?}"))?;
+    let name = &line[..name_end];
+    if !is_valid_metric_name(name) {
+        return Err(format!("line {n}: bad sample metric name {name:?}"));
+    }
+    // labels
+    let mut labels: Vec<(String, String)> = Vec::new();
+    let rest = if line[name_end..].starts_with('{') {
+        let body_end = line[name_end..]
+            .find('}')
+            .map(|i| name_end + i)
+            .ok_or_else(|| format!("line {n}: unterminated label set"))?;
+        parse_labels(&line[name_end + 1..body_end], n, &mut labels)?;
+        &line[body_end + 1..]
+    } else {
+        &line[name_end..]
+    };
+    // value (timestamps not used by this crate)
+    let value_str = rest.trim();
+    let value: f64 = match value_str {
+        "+Inf" => f64::INFINITY,
+        "-Inf" => f64::NEG_INFINITY,
+        v => v
+            .split_whitespace()
+            .next()
+            .unwrap_or("")
+            .parse()
+            .map_err(|_| format!("line {n}: bad sample value {value_str:?}"))?,
+    };
+    // duplicate series detection
+    let mut identity = name.to_string();
+    let mut sorted = labels.clone();
+    sorted.sort();
+    for (k, v) in &sorted {
+        identity.push('\u{1}');
+        identity.push_str(k);
+        identity.push('\u{2}');
+        identity.push_str(v);
+    }
+    if !fam.seen.insert(identity) {
+        return Err(format!("line {n}: duplicate series {line:?}"));
+    }
+    fam.sampled.insert(name.to_string());
+    // histogram bookkeeping
+    if let Some(family) = histogram_family(name, &fam.types) {
+        let le = labels.iter().find(|(k, _)| k == "le").map(|(_, v)| v.clone());
+        let mut key_labels: Vec<(String, String)> = sorted
+            .iter()
+            .filter(|(k, _)| k != "le")
+            .cloned()
+            .collect();
+        let key = {
+            let mut s = String::new();
+            for (k, v) in key_labels.drain(..) {
+                s.push('\u{1}');
+                s.push_str(&k);
+                s.push('\u{2}');
+                s.push_str(&v);
+            }
+            s
+        };
+        let series = fam
+            .histograms
+            .entry(family)
+            .or_default()
+            .entry(key)
+            .or_default();
+        if name.ends_with("_bucket") {
+            let le = le.ok_or_else(|| format!("line {n}: _bucket sample without le label"))?;
+            let le_val = match le.as_str() {
+                "+Inf" => f64::INFINITY,
+                v => v
+                    .parse()
+                    .map_err(|_| format!("line {n}: bad le value {le:?}"))?,
+            };
+            series.buckets.push((le_val, value));
+        } else if name.ends_with("_sum") {
+            series.sum = Some(value);
+        } else {
+            series.count = Some(value);
+        }
+    }
+    Ok(())
+}
+
+fn parse_labels(
+    body: &str,
+    n: usize,
+    out: &mut Vec<(String, String)>,
+) -> Result<(), String> {
+    let mut chars = body.chars().peekable();
+    loop {
+        // label name
+        let mut name = String::new();
+        while let Some(&c) = chars.peek() {
+            if c == '=' {
+                break;
+            }
+            name.push(c);
+            chars.next();
+        }
+        let name = name.trim().to_string();
+        if !is_valid_label_name(&name) {
+            return Err(format!("line {n}: bad label name {name:?}"));
+        }
+        if chars.next() != Some('=') || chars.next() != Some('"') {
+            return Err(format!("line {n}: label {name} not in k=\"v\" form"));
+        }
+        // quoted value with escapes
+        let mut value = String::new();
+        loop {
+            match chars.next() {
+                Some('\\') => match chars.next() {
+                    Some('\\') => value.push('\\'),
+                    Some('"') => value.push('"'),
+                    Some('n') => value.push('\n'),
+                    other => {
+                        return Err(format!("line {n}: bad escape {other:?} in label {name}"))
+                    }
+                },
+                Some('"') => break,
+                Some(c) => value.push(c),
+                None => return Err(format!("line {n}: unterminated label value for {name}")),
+            }
+        }
+        out.push((name, value));
+        match chars.next() {
+            Some(',') => continue,
+            None => return Ok(()),
+            Some(c) => return Err(format!("line {n}: unexpected {c:?} after label")),
+        }
+    }
+}
+
+fn check_histogram_series(
+    family: &str,
+    labels: &str,
+    series: &HistogramSeries,
+) -> Result<(), String> {
+    let ctx = if labels.is_empty() {
+        family.to_string()
+    } else {
+        format!("{family}{{{}}}", labels.replace('\u{1}', " ").replace('\u{2}', "="))
+    };
+    let count = series
+        .count
+        .ok_or_else(|| format!("histogram {ctx}: missing _count"))?;
+    if series.sum.is_none() {
+        return Err(format!("histogram {ctx}: missing _sum"));
+    }
+    let mut buckets = series.buckets.clone();
+    if buckets.is_empty() {
+        return Err(format!("histogram {ctx}: no _bucket series"));
+    }
+    buckets.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut prev = -1.0f64;
+    for &(le, v) in &buckets {
+        if v < prev {
+            return Err(format!(
+                "histogram {ctx}: bucket le={le} count {v} < previous {prev} (not cumulative)"
+            ));
+        }
+        prev = v;
+    }
+    let (last_le, last_v) = *buckets.last().unwrap();
+    if !last_le.is_infinite() {
+        return Err(format!("histogram {ctx}: missing le=\"+Inf\" bucket"));
+    }
+    if (last_v - count).abs() > 0.0 {
+        return Err(format!(
+            "histogram {ctx}: le=+Inf bucket {last_v} != _count {count}"
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn name_charsets() {
+        assert!(is_valid_metric_name("tmi_requests_total"));
+        assert!(is_valid_metric_name("a:b_c1"));
+        assert!(!is_valid_metric_name("1abc"));
+        assert!(!is_valid_metric_name("a-b"));
+        assert!(!is_valid_metric_name(""));
+        assert!(is_valid_label_name("route"));
+        assert!(!is_valid_label_name("le:x"));
+        assert!(!is_valid_label_name("9x"));
+    }
+
+    #[test]
+    fn escaping() {
+        assert_eq!(escape_label_value("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(escape_help("x\\y\nz"), "x\\\\y\\nz");
+    }
+
+    #[test]
+    fn writer_roundtrips_through_validator() {
+        let mut w = PromWriter::new();
+        w.header("tmi_requests_total", "Total admitted requests.", "counter");
+        w.int_sample("tmi_requests_total", &[("route", "cpu")], 42);
+        w.int_sample("tmi_requests_total", &[("route", "a\"b")], 7);
+        w.header("tmi_queue_depth", "Live queue depth.", "gauge");
+        w.sample("tmi_queue_depth", &[("route", "cpu")], 3.0);
+        w.header("tmi_latency_us", "Request latency.", "histogram");
+        let h = HistogramSnapshot {
+            buckets: vec![(2, 1), (8, 3)],
+            count: 4,
+            sum: 20,
+        };
+        w.histogram("tmi_latency_us", &[("route", "cpu")], &h);
+        let text = w.finish();
+        assert!(text.ends_with("# EOF\n"));
+        assert!(text.contains("tmi_latency_us_bucket{route=\"cpu\",le=\"8\"} 4"));
+        assert!(text.contains("tmi_latency_us_bucket{route=\"cpu\",le=\"+Inf\"} 4"));
+        assert!(text.contains("tmi_latency_us_sum{route=\"cpu\"} 20"));
+        validate_exposition(&text).unwrap();
+    }
+
+    #[test]
+    fn validator_rejects_violations() {
+        // sample without TYPE
+        assert!(validate_exposition("loose_metric 1\n").is_err());
+        // TYPE after sample
+        let bad = "# HELP m h\nm 1\n# TYPE m counter\n";
+        assert!(validate_exposition(bad).is_err());
+        // duplicate series
+        let dup = "# HELP m h\n# TYPE m counter\nm{a=\"1\"} 1\nm{a=\"1\"} 2\n";
+        assert!(validate_exposition(dup).is_err());
+        // non-cumulative histogram
+        let noncum = "# HELP h h\n# TYPE h histogram\n\
+                      h_bucket{le=\"1\"} 5\nh_bucket{le=\"2\"} 3\n\
+                      h_bucket{le=\"+Inf\"} 5\nh_sum 9\nh_count 5\n";
+        assert!(validate_exposition(noncum).unwrap_err().contains("not cumulative"));
+        // +Inf != count
+        let inf = "# HELP h h\n# TYPE h histogram\n\
+                   h_bucket{le=\"+Inf\"} 4\nh_sum 9\nh_count 5\n";
+        assert!(validate_exposition(inf).is_err());
+        // missing _sum
+        let nosum = "# HELP h h\n# TYPE h histogram\n\
+                     h_bucket{le=\"+Inf\"} 5\nh_count 5\n";
+        assert!(validate_exposition(nosum).unwrap_err().contains("_sum"));
+        // bad metric name
+        assert!(validate_exposition("# HELP 1bad h\n").is_err());
+    }
+
+    #[test]
+    fn validator_accepts_label_edge_cases() {
+        let text = "# HELP m h\n# TYPE m gauge\nm{v=\"a\\\\b\\\"c\\nd\"} 1.5\nm 2\n# EOF\n";
+        validate_exposition(text).unwrap();
+    }
+}

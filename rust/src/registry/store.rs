@@ -15,6 +15,7 @@ use std::io::Write;
 use std::path::{Path, PathBuf};
 
 use crate::engine::InferMode;
+use crate::obs::{journal, EventKind};
 use crate::registry::manifest::{Manifest, RouteEntry, VersionEntry};
 use crate::tm::classifier::MultiClassTM;
 use crate::tm::io::{self, ModelIoError};
@@ -272,8 +273,13 @@ impl Registry {
                         quarantined,
                     });
                 }
-                Err(_why) => {
+                Err(why) => {
                     self.quarantine_file(route, &v);
+                    journal().emit(EventKind::Quarantine {
+                        route: route.to_string(),
+                        version: v.version,
+                        reason: why,
+                    });
                     quarantined.push(v.version);
                     self.manifest
                         .routes

@@ -12,6 +12,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
+use crate::obs::{journal, EventKind};
 use crate::registry::manifest::Manifest;
 use crate::registry::store::{RecoveredModel, Registry};
 
@@ -68,22 +69,36 @@ pub fn sync_published(
             Ok(rec) => match apply(&route, &rec) {
                 Ok(()) => {
                     state.served.insert(route.clone(), rec.version);
+                    journal().emit(EventKind::RouteRecovered {
+                        route: route.clone(),
+                        version: rec.version,
+                    });
                     events.push(SyncEvent::Published {
                         route,
                         version: rec.version,
                         quarantined: rec.quarantined,
                     });
                 }
-                Err(error) => events.push(SyncEvent::Failed { route, error }),
+                Err(error) => {
+                    journal().emit(EventKind::RouteFailed {
+                        route: route.clone(),
+                        error: error.clone(),
+                    });
+                    events.push(SyncEvent::Failed { route, error });
+                }
             },
             // NoIntactVersion while an older version is still serving is
             // the quarantine-without-dropping case: `served` is left
             // alone, so the route keeps answering on its last good
             // snapshot and recovery is retried on the next generation.
-            Err(e) => events.push(SyncEvent::Failed {
-                route,
-                error: e.to_string(),
-            }),
+            Err(e) => {
+                let error = e.to_string();
+                journal().emit(EventKind::RouteFailed {
+                    route: route.clone(),
+                    error: error.clone(),
+                });
+                events.push(SyncEvent::Failed { route, error });
+            }
         }
     }
     state.generation = registry.generation();

@@ -17,7 +17,10 @@
 //! index maintenance happens, and it is the only difference between
 //! training with and without indexing.
 
+use std::sync::atomic::Ordering;
+
 use crate::eval::traits::FlipSink;
+use crate::obs::probes::{FEEDBACK_CLAUSE_UPDATES, FEEDBACK_FLIPS};
 use crate::tm::bank::ClauseBank;
 use crate::util::bitvec::words_for;
 use crate::util::rng::{fill_bernoulli_words, prob_to_threshold, Rng};
@@ -138,6 +141,7 @@ pub fn update_clause_range(
     debug_assert_eq!(outputs.len(), bank.clauses());
     let n = bank.clauses();
     let mut updates = 0;
+    let mut counting = FlipCounter { inner: sink, flips: 0 };
     for j in 0..n {
         if !rng.bern_threshold(p_update) {
             continue;
@@ -146,12 +150,46 @@ pub fn update_clause_range(
         let positive = ClauseBank::polarity(j) > 0;
         let clause_out = outputs.get(j);
         if positive == is_target {
-            type_i_with_scratch(bank, sink, rng, ctx, j, clause_out, literals, scratch);
+            type_i_with_scratch(bank, &mut counting, rng, ctx, j, clause_out, literals, scratch);
         } else {
-            type_ii_with_scratch(bank, sink, ctx, j, clause_out, literals, scratch);
+            type_ii_with_scratch(bank, &mut counting, ctx, j, clause_out, literals, scratch);
         }
     }
+    // Process-tier probe flush: one relaxed fetch_add per clause-range
+    // update (never per flip) — see `crate::obs::probes`.
+    if updates > 0 {
+        FEEDBACK_CLAUSE_UPDATES.fetch_add(updates, Ordering::Relaxed);
+    }
+    if counting.flips > 0 {
+        FEEDBACK_FLIPS.fetch_add(counting.flips, Ordering::Relaxed);
+    }
     updates
+}
+
+/// Counts include/exclude flips on their way to the real sink, so
+/// [`update_clause_range`] can flush one aggregate into the
+/// process-wide [`FEEDBACK_FLIPS`] counter instead of an atomic per
+/// flip.
+struct FlipCounter<'a> {
+    inner: &'a mut dyn FlipSink,
+    flips: u64,
+}
+
+impl FlipSink for FlipCounter<'_> {
+    #[inline]
+    fn on_include(&mut self, j: u32, k: u32, new_count: u32, weight: u32) {
+        self.flips += 1;
+        self.inner.on_include(j, k, new_count, weight);
+    }
+    #[inline]
+    fn on_exclude(&mut self, j: u32, k: u32, new_count: u32, weight: u32) {
+        self.flips += 1;
+        self.inner.on_exclude(j, k, new_count, weight);
+    }
+    #[inline]
+    fn on_weight(&mut self, j: u32, delta: i32, nonempty: bool) {
+        self.inner.on_weight(j, delta, nonempty);
+    }
 }
 
 /// Type I feedback: combats false negatives — reinforces clauses toward

@@ -1,0 +1,513 @@
+//! Observability integration: the counter invariant
+//! `requests == completed + shed + errors` across every request
+//! outcome, the extended `stats` / `stats events` protocol verbs,
+//! Prometheus exposition conformance (TCP verb and HTTP scrape), and
+//! stats/exposition consistency under a hot-swap storm.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use tsetlin_index::coordinator::backend::Scored;
+use tsetlin_index::coordinator::server::{fault, serve_metrics_http, serve_tcp};
+use tsetlin_index::coordinator::{BatchPolicy, Coordinator, RouteConfig, ServeBackend};
+use tsetlin_index::eval::Backend;
+use tsetlin_index::obs::journal;
+use tsetlin_index::obs::prometheus::validate_exposition;
+use tsetlin_index::tm::params::TMParams;
+use tsetlin_index::tm::trainer::Trainer;
+use tsetlin_index::util::{BitVec, Rng};
+
+/// Small random-but-learnable trainer (same shape as `serve_e2e`).
+fn quick_trainer(seed: u64) -> Trainer {
+    let params = TMParams::new(3, 16, 24).with_seed(seed).with_threshold(12);
+    let mut tr = Trainer::new(params, Backend::Indexed);
+    let mut rng = Rng::new(seed ^ 0x5eed);
+    let samples: Vec<(BitVec, usize)> = (0..250)
+        .map(|_| {
+            let y = rng.below(3) as usize;
+            let bits: Vec<bool> = (0..24).map(|k| k % 3 == y || rng.bern(0.25)).collect();
+            let mut lits = bits.clone();
+            lits.extend(bits.iter().map(|b| !b));
+            (BitVec::from_bools(&lits), y)
+        })
+        .collect();
+    for _ in 0..3 {
+        tr.train_epoch(samples.iter().map(|(l, y)| (l, *y)));
+    }
+    tr
+}
+
+fn random_probe(rng: &mut Rng, features: usize) -> BitVec {
+    let bits: Vec<bool> = (0..features).map(|_| rng.bern(0.4)).collect();
+    let mut lits = bits.clone();
+    lits.extend(bits.iter().map(|b| !b));
+    BitVec::from_bools(&lits)
+}
+
+/// Parse one `key=value` token out of a stats line.
+fn kv_u64(line: &str, key: &str) -> u64 {
+    kv(line, key).parse().unwrap_or_else(|_| panic!("{key} not a u64 in: {line}"))
+}
+
+fn kv_f64(line: &str, key: &str) -> f64 {
+    kv(line, key).parse().unwrap_or_else(|_| panic!("{key} not a f64 in: {line}"))
+}
+
+fn kv<'a>(line: &'a str, key: &str) -> &'a str {
+    line.split_whitespace()
+        .filter_map(|tok| tok.split_once('='))
+        .find(|(k, _)| *k == key)
+        .unwrap_or_else(|| panic!("missing {key}= in: {line}"))
+        .1
+}
+
+/// Poll until `cond` holds (probe flushes are batch-wise, so counter
+/// equality can land a moment after the last reply).
+fn settle(mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while !cond() {
+        assert!(Instant::now() < deadline, "condition never settled");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// A backend slow enough to saturate a tiny queue (shedding driver).
+struct SlowBackend;
+
+impl ServeBackend for SlowBackend {
+    fn infer_batch(&mut self, batch: &[BitVec]) -> anyhow::Result<Vec<Scored>> {
+        std::thread::sleep(Duration::from_millis(4));
+        Ok(batch
+            .iter()
+            .map(|_| Scored {
+                prediction: 0,
+                scores: vec![0, 0],
+            })
+            .collect())
+    }
+    fn n_literals(&self) -> usize {
+        8
+    }
+    fn name(&self) -> String {
+        "slow".into()
+    }
+}
+
+/// A backend whose every batch fails at scoring time.
+struct FailingBackend;
+
+impl ServeBackend for FailingBackend {
+    fn infer_batch(&mut self, _batch: &[BitVec]) -> anyhow::Result<Vec<Scored>> {
+        anyhow::bail!("injected scoring failure")
+    }
+    fn n_literals(&self) -> usize {
+        4
+    }
+    fn name(&self) -> String {
+        "failing".into()
+    }
+}
+
+/// Under a shed storm every request lands in exactly one counter:
+/// `requests == completed + shed + errors`, and the shed episode is
+/// bracketed in the journal as `shed_start` / `shed_end`.
+#[test]
+fn counters_balance_under_sustained_shedding() {
+    let mut coord = Coordinator::new();
+    coord
+        .register_with_config(
+            "obs-slow",
+            || Ok(Box::new(SlowBackend) as _),
+            RouteConfig {
+                workers: 1,
+                queue_cap: 2,
+                policy: BatchPolicy {
+                    max_batch: 1,
+                    max_wait: Duration::ZERO,
+                },
+                ..RouteConfig::default()
+            },
+        )
+        .unwrap();
+    let h = coord.handle();
+
+    let clients: Vec<_> = (0..12)
+        .map(|_| {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                let (mut ok, mut shed) = (0u64, 0u64);
+                for _ in 0..8 {
+                    match h.infer("obs-slow", BitVec::zeros(8)) {
+                        Ok(_) => ok += 1,
+                        Err(tsetlin_index::coordinator::InferError::Overloaded) => shed += 1,
+                        Err(e) => panic!("unexpected outcome: {e}"),
+                    }
+                }
+                (ok, shed)
+            })
+        })
+        .collect();
+    let (mut ok, mut shed) = (0u64, 0u64);
+    for c in clients {
+        let (o, s) = c.join().unwrap();
+        ok += o;
+        shed += s;
+    }
+    assert_eq!(ok + shed, 96, "every request must resolve");
+    assert!(shed > 0 && ok > 0, "storm must both shed and serve");
+
+    let m = coord.metrics("obs-slow").unwrap();
+    assert_eq!(m.requests, 96);
+    assert_eq!(m.completed, ok);
+    assert_eq!(m.shed, shed);
+    assert_eq!(m.errors, 0);
+    assert_eq!(m.requests, m.completed + m.shed + m.errors);
+
+    // one healthy request after the storm closes any open shed episode
+    h.infer("obs-slow", BitVec::zeros(8)).unwrap();
+    let m = coord.metrics("obs-slow").unwrap();
+    assert_eq!(m.requests, m.completed + m.shed + m.errors);
+
+    let events = journal().events_for("obs-slow");
+    let count = |kind: &str| events.iter().filter(|e| e.kind.name() == kind).count();
+    assert!(count("shed_start") >= 1, "episode start must be journaled");
+    assert!(count("shed_end") >= 1, "episode end must be journaled");
+    coord.shutdown();
+}
+
+/// Backend scoring failures are booked as `errors`, keeping the
+/// invariant — not silently dropped, not double-counted.
+#[test]
+fn counters_balance_through_backend_errors() {
+    let mut coord = Coordinator::new();
+    coord
+        .register_with("obs-bad", || Ok(Box::new(FailingBackend) as _), BatchPolicy::default())
+        .unwrap();
+    let h = coord.handle();
+    for _ in 0..3 {
+        match h.infer("obs-bad", BitVec::zeros(4)) {
+            Err(tsetlin_index::coordinator::InferError::BackendError(msg)) => {
+                assert!(msg.contains("injected"), "{msg}")
+            }
+            other => panic!("expected backend error, got {other:?}"),
+        }
+    }
+    let m = coord.metrics("obs-bad").unwrap();
+    assert_eq!((m.requests, m.completed, m.shed, m.errors), (3, 0, 0, 3));
+    coord.shutdown();
+}
+
+/// A worker panic books the dropped batch as errors (via the armed
+/// `Drop` accounting), the supervisor restart is journaled, and the
+/// invariant holds once the route is serving again.
+#[test]
+fn counters_balance_through_worker_panic() {
+    let mut tr = quick_trainer(17);
+    let mut coord = Coordinator::new();
+    coord.register_model(
+        "obs-panic",
+        tr.publish(),
+        RouteConfig {
+            workers: 1,
+            queue_cap: 64,
+            ..RouteConfig::default()
+        },
+    );
+    let h = coord.handle();
+    let features: Vec<bool> = (0..24).map(|k| k % 3 == 0).collect();
+    h.infer_features("obs-panic", &features).unwrap();
+
+    fault::arm_worker_panics("obs-panic", 1);
+    assert!(
+        h.infer_features("obs-panic", &features).is_err(),
+        "the batch taking the injected panic must fail its client"
+    );
+    // the supervised restart brings the route back
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        if h.infer_features("obs-panic", &features).is_ok() {
+            break;
+        }
+        assert!(Instant::now() < deadline, "route never came back");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    let m = coord.metrics("obs-panic").unwrap();
+    assert!(m.errors >= 1, "panicked batch must be booked as error(s)");
+    assert!(m.restarts >= 1);
+    assert_eq!(m.requests, m.completed + m.shed + m.errors);
+    assert!(
+        journal()
+            .events_for("obs-panic")
+            .iter()
+            .any(|e| e.kind.name() == "worker_restart"),
+        "the supervisor restart must be journaled"
+    );
+    coord.shutdown();
+}
+
+/// Read protocol lines until the `# EOF` trailer (the `metrics` verb's
+/// end-of-reply marker).
+fn read_exposition(reader: &mut BufReader<TcpStream>) -> String {
+    let mut text = String::new();
+    loop {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "EOF before # EOF");
+        text.push_str(&line);
+        if line.trim_end() == "# EOF" {
+            return text;
+        }
+    }
+}
+
+/// The extended `stats` line, the `stats events` drain, and the
+/// `metrics` verb over one live TCP connection.
+#[test]
+fn stats_and_events_verbs_over_tcp() {
+    let mut tr = quick_trainer(31);
+    let mut next = quick_trainer(32);
+    let mut coord = Coordinator::new();
+    coord.register_model(
+        "obs-tcp",
+        tr.publish(),
+        RouteConfig {
+            workers: 2,
+            queue_cap: 1024,
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_micros(100),
+            },
+            ..RouteConfig::default()
+        },
+    );
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let handle = coord.handle();
+    let server = std::thread::spawn(move || serve_tcp(listener, handle, stop2));
+
+    let conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut conn = conn;
+    let mut rng = Rng::new(9);
+    let n = 32usize;
+    for _ in 0..n {
+        let bits: String = (0..24).map(|_| if rng.bern(0.4) { '1' } else { '0' }).collect();
+        conn.write_all(format!("infer obs-tcp {bits}\n").as_bytes()).unwrap();
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        assert!(reply.starts_with("ok "), "reply: {reply}");
+    }
+    // a hot swap mid-session lands in the journal for `stats events`
+    coord.handle().swap("obs-tcp", next.publish()).unwrap();
+
+    // engine probes flush batch-wise: wait for them to cover every
+    // completed request before reading the line we assert on
+    let h = coord.handle();
+    settle(|| {
+        let m = h.stats("obs-tcp").unwrap().metrics;
+        m.dense_requests + m.sparse_requests == m.completed
+    });
+
+    conn.write_all(b"stats obs-tcp\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ok model=obs-tcp"), "reply: {line}");
+    for key in [
+        "uptime_s",
+        "dense_requests",
+        "sparse_requests",
+        "index_efficiency",
+        "queue_p50_us",
+        "queue_p95_us",
+        "queue_p99_us",
+        "batch_p50_us",
+        "score_p99_us",
+        "write_p99_us",
+    ] {
+        kv(&line, key); // panics with context if absent
+    }
+    assert_eq!(kv_u64(&line, "requests"), n as u64);
+    assert_eq!(
+        kv_u64(&line, "completed") + kv_u64(&line, "shed") + kv_u64(&line, "errors"),
+        kv_u64(&line, "requests"),
+    );
+    assert_eq!(
+        kv_u64(&line, "dense_requests") + kv_u64(&line, "sparse_requests"),
+        kv_u64(&line, "completed"),
+        "every scored request must be probed: {line}"
+    );
+    let eff = kv_f64(&line, "index_efficiency");
+    assert!(eff > 0.0 && eff <= 1.0, "index_efficiency={eff}");
+
+    conn.write_all(b"stats events obs-tcp\n").unwrap();
+    let mut head = String::new();
+    reader.read_line(&mut head).unwrap();
+    assert!(head.starts_with("ok events="), "reply: {head}");
+    let count = kv_u64(&head, "events");
+    assert!(count >= 1, "the swap must be drainable: {head}");
+    let mut saw_swap = false;
+    for _ in 0..count {
+        let mut ev = String::new();
+        reader.read_line(&mut ev).unwrap();
+        assert!(ev.starts_with("seq="), "event line: {ev}");
+        if kv(&ev, "kind") == "swap" {
+            assert_eq!(kv(&ev, "route"), "obs-tcp");
+            saw_swap = true;
+        }
+    }
+    assert!(saw_swap, "swap event must appear in the route's drain");
+
+    conn.write_all(b"metrics\n").unwrap();
+    let text = read_exposition(&mut reader);
+    validate_exposition(&text).unwrap();
+    assert!(text.contains("tmi_requests_total{route=\"obs-tcp\"}"), "{text}");
+
+    stop.store(true, Ordering::Relaxed);
+    drop(conn);
+    drop(reader);
+    server.join().unwrap().unwrap();
+    coord.shutdown();
+}
+
+/// The `--metrics-addr` HTTP endpoint answers a real GET with a 200
+/// and a conformant exposition, and the in-process render agrees.
+#[test]
+fn http_scrape_serves_conformant_exposition() {
+    let mut tr = quick_trainer(41);
+    let mut coord = Coordinator::new();
+    coord.register_model("obs-http", tr.publish(), RouteConfig::default());
+    let h = coord.handle();
+    let mut rng = Rng::new(4);
+    for _ in 0..8 {
+        h.infer("obs-http", random_probe(&mut rng, 24)).unwrap();
+    }
+
+    let text = h.prometheus();
+    validate_exposition(&text).unwrap();
+    assert!(text.ends_with("# EOF\n"), "exposition must end with # EOF");
+    for family in [
+        "tmi_requests_total",
+        "tmi_index_efficiency",
+        "tmi_stage_latency_us_bucket",
+        "tmi_feedback_flips_total",
+        "tmi_journal_events_total",
+    ] {
+        assert!(text.contains(family), "missing family {family}");
+    }
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let handle = h.clone();
+    let server = std::thread::spawn(move || serve_metrics_http(listener, handle, stop2));
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+    conn.write_all(b"GET /metrics HTTP/1.1\r\nHost: localhost\r\n\r\n").unwrap();
+    let mut resp = String::new();
+    conn.read_to_string(&mut resp).unwrap(); // server closes after one reply
+    assert!(resp.starts_with("HTTP/1.1 200 OK\r\n"), "resp: {resp}");
+    assert!(resp.contains("text/plain; version=0.0.4"), "resp: {resp}");
+    let body = resp.split("\r\n\r\n").nth(1).expect("response body");
+    validate_exposition(body).unwrap();
+    assert!(body.ends_with("# EOF\n"));
+
+    stop.store(true, Ordering::Relaxed);
+    server.join().unwrap().unwrap();
+    coord.shutdown();
+}
+
+/// Concurrent stats and exposition readers stay consistent through a
+/// hot-swap storm under live traffic: every render is conformant, the
+/// request counter is monotonic, completions never overrun admissions,
+/// and every swap is journaled.
+#[test]
+fn hot_swap_storm_keeps_readers_consistent() {
+    let mut tr_a = quick_trainer(51);
+    let mut tr_b = quick_trainer(52);
+    let snap_a = tr_a.publish();
+    let snap_b = tr_b.publish();
+    let mut coord = Coordinator::new();
+    coord.register_model(
+        "obs-storm",
+        Arc::clone(&snap_a),
+        RouteConfig {
+            workers: 2,
+            queue_cap: 4096,
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_micros(100),
+            },
+            ..RouteConfig::default()
+        },
+    );
+    let h = coord.handle();
+    let run = Arc::new(AtomicBool::new(true));
+    let swaps = 30u64;
+
+    let clients: Vec<_> = (0..3)
+        .map(|c| {
+            let h = h.clone();
+            let run = Arc::clone(&run);
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(100 + c);
+                while run.load(Ordering::Relaxed) {
+                    h.infer("obs-storm", random_probe(&mut rng, 24)).unwrap();
+                }
+            })
+        })
+        .collect();
+
+    let readers: Vec<_> = (0..2)
+        .map(|r| {
+            let h = h.clone();
+            let run = Arc::clone(&run);
+            std::thread::spawn(move || {
+                let mut last_requests = 0u64;
+                while run.load(Ordering::Relaxed) {
+                    if r == 0 {
+                        validate_exposition(&h.prometheus())
+                            .expect("exposition must stay conformant mid-swap");
+                    } else {
+                        let m = h.stats("obs-storm").unwrap().metrics;
+                        assert!(m.requests >= last_requests, "requests must be monotonic");
+                        assert!(
+                            m.completed + m.shed + m.errors <= m.requests,
+                            "resolutions can never overrun admissions"
+                        );
+                        last_requests = m.requests;
+                    }
+                }
+            })
+        })
+        .collect();
+
+    for i in 0..swaps {
+        let snap = if i % 2 == 0 { &snap_b } else { &snap_a };
+        h.swap("obs-storm", Arc::clone(snap)).unwrap();
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    run.store(false, Ordering::Relaxed);
+    for t in clients.into_iter().chain(readers) {
+        t.join().unwrap();
+    }
+
+    let st = coord.stats("obs-storm").unwrap();
+    assert_eq!(st.generation, Some(swaps), "every swap must land");
+    settle(|| {
+        let m = coord.stats("obs-storm").unwrap().metrics;
+        m.requests == m.completed + m.shed + m.errors
+    });
+    let journaled = journal()
+        .events_for("obs-storm")
+        .iter()
+        .filter(|e| e.kind.name() == "swap")
+        .count() as u64;
+    assert_eq!(journaled, swaps, "every swap must be journaled");
+    coord.shutdown();
+}

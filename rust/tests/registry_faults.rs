@@ -15,6 +15,7 @@ use tsetlin_index::coordinator::server::fault;
 use tsetlin_index::coordinator::{BatchPolicy, Coordinator, RouteConfig};
 use tsetlin_index::engine::{InferMode, ModelSnapshot};
 use tsetlin_index::eval::Backend;
+use tsetlin_index::obs::journal;
 use tsetlin_index::registry::{Registry, RegistryError};
 use tsetlin_index::tm::classifier::MultiClassTM;
 use tsetlin_index::tm::io;
@@ -81,6 +82,15 @@ fn truncated_snapshot_falls_back_to_prior_version_bit_identically() {
     assert!(
         dir.join("quarantine/cpu-v000002.tm").exists(),
         "torn file must be quarantined, not deleted"
+    );
+    // the quarantine is also journaled as a typed event, so a serving
+    // process surfaces it through `stats events <model>`
+    assert!(
+        journal()
+            .events_for("cpu")
+            .iter()
+            .any(|e| e.kind.name() == "quarantine" && e.to_line().contains("version=2")),
+        "quarantining v2 must leave a journal event"
     );
     std::fs::remove_dir_all(&dir).unwrap();
 }
