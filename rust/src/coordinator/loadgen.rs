@@ -47,6 +47,12 @@ pub struct LoadgenConfig {
     /// bits; the server derives `[x, ¬x]`).
     pub features: usize,
     pub seed: u64,
+    /// Fraction of requests sent as `feedback <model> <label> <bits>`
+    /// (online learning); the rest stay `infer`. `0.0` disables the
+    /// mixed phase. Needs a server running `--feedback`.
+    pub feedback_rate: f64,
+    /// Label range for synthetic feedback (`below(classes)`).
+    pub classes: usize,
 }
 
 /// Aggregated client-side results of one run.
@@ -65,6 +71,17 @@ pub struct LoadgenReport {
     pub p95_us: u64,
     pub p99_us: u64,
     pub mean_us: f64,
+    /// Feedback requests written / acknowledged `ok` (mixed phase).
+    pub feedback_sent: u64,
+    pub feedback_ok: u64,
+    /// Torn replies: a reply line with no terminating newline, or one
+    /// that is neither `ok …` nor `err …` — a reader observed a
+    /// half-written response. Must be zero under hot swap.
+    pub torn: u64,
+    /// Route swap generation from `stats` before/after the run — the
+    /// cross-publisher monotonic key (`--assert-monotone-generations`).
+    pub generation_start: Option<u64>,
+    pub generation_end: Option<u64>,
     /// The server's own `stats <model>` line, fetched after the run.
     pub server_stats: Option<String>,
 }
@@ -76,42 +93,73 @@ struct ConnResult {
     ok: u64,
     shed: u64,
     errors: u64,
+    feedback_sent: u64,
+    feedback_ok: u64,
+    torn: u64,
     latencies_us: Vec<u64>,
 }
 
 impl ConnResult {
-    fn classify(&mut self, reply: &str, t0: Instant) {
+    fn classify(&mut self, reply: &str, t0: Instant, feedback: bool) {
         self.sent += 1;
+        if feedback {
+            self.feedback_sent += 1;
+        }
+        // a reply without its newline (EOF mid-line) or with neither
+        // protocol prefix is torn: the reader saw a half-written
+        // response. Counted inside `errors` so the answered invariant
+        // (ok + shed + errors) is unchanged.
+        if !reply.ends_with('\n') {
+            self.torn += 1;
+            self.errors += 1;
+            return;
+        }
         if reply.starts_with("ok ") {
             self.ok += 1;
+            if feedback {
+                self.feedback_ok += 1;
+            }
             // only completed requests contribute latency samples
             self.latencies_us
                 .push(t0.elapsed().as_micros().min(u64::MAX as u128) as u64);
         } else if reply.starts_with("err overloaded") {
             self.shed += 1;
+        } else if reply.starts_with("err ") {
+            self.errors += 1;
         } else {
+            self.torn += 1;
             self.errors += 1;
         }
     }
 }
 
+/// One pre-rendered request: the wire line and whether it is a
+/// feedback submission (for the split tallies).
+type PoolEntry = (String, bool);
+
 /// Pre-render a pool of distinct request lines (cycled per send) so
-/// the hot loop does no formatting.
-fn request_pool(cfg: &LoadgenConfig) -> Vec<String> {
+/// the hot loop does no formatting. With `feedback_rate > 0` the pool
+/// mixes `feedback` lines at that fraction (deterministic per seed).
+fn request_pool(cfg: &LoadgenConfig) -> Vec<PoolEntry> {
     let mut rng = Rng::new(cfg.seed);
     (0..32)
         .map(|_| {
             let bits: String = (0..cfg.features)
                 .map(|_| if rng.bern(0.5) { '1' } else { '0' })
                 .collect();
-            format!("infer {} {}\n", cfg.model, bits)
+            if cfg.feedback_rate > 0.0 && rng.bern(cfg.feedback_rate.clamp(0.0, 1.0)) {
+                let label = rng.below(cfg.classes.max(1) as u32);
+                (format!("feedback {} {} {}\n", cfg.model, label, bits), true)
+            } else {
+                (format!("infer {} {}\n", cfg.model, bits), false)
+            }
         })
         .collect()
 }
 
 fn closed_loop_conn(
     addr: &str,
-    pool: &[String],
+    pool: &[PoolEntry],
     stop_at: Instant,
 ) -> Result<ConnResult> {
     let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
@@ -124,7 +172,7 @@ fn closed_loop_conn(
     let mut reply = String::new();
     let mut i = 0usize;
     while Instant::now() < stop_at {
-        let line = &pool[i % pool.len()];
+        let (line, feedback) = &pool[i % pool.len()];
         i += 1;
         let t0 = Instant::now();
         if stream.write_all(line.as_bytes()).is_err() {
@@ -133,7 +181,7 @@ fn closed_loop_conn(
         reply.clear();
         match reader.read_line(&mut reply) {
             Ok(0) | Err(_) => break,
-            Ok(_) => res.classify(&reply, t0),
+            Ok(_) => res.classify(&reply, t0, *feedback),
         }
     }
     Ok(res)
@@ -141,7 +189,7 @@ fn closed_loop_conn(
 
 fn open_loop_conn(
     addr: &str,
-    pool: &[String],
+    pool: &[PoolEntry],
     stop_at: Instant,
     interval: Duration,
 ) -> Result<ConnResult> {
@@ -151,33 +199,37 @@ fn open_loop_conn(
     // instead of blocking forever after the writer stops
     stream.set_read_timeout(Some(Duration::from_secs(5)))?;
     let reader_stream = stream.try_clone()?;
-    let (tx, rx) = channel::<Instant>();
+    let (tx, rx) = channel::<(Instant, bool)>();
     let reader = std::thread::spawn(move || {
         let mut reader = BufReader::new(reader_stream);
         let mut res = ConnResult::default();
         let mut reply = String::new();
         // one reply per recorded send, in order (the protocol is
         // strictly request-ordered per connection)
-        while let Ok(t0) = rx.recv() {
+        while let Ok((t0, feedback)) = rx.recv() {
             reply.clear();
             match reader.read_line(&mut reply) {
                 Ok(0) | Err(_) => break,
-                Ok(_) => res.classify(&reply, t0),
+                Ok(_) => res.classify(&reply, t0, feedback),
             }
         }
         res
     });
     let mut stream_w = stream;
     let mut i = 0usize;
+    let mut feedback_writes = 0u64;
     let mut next = Instant::now();
     while Instant::now() < stop_at {
-        let line = &pool[i % pool.len()];
+        let (line, feedback) = &pool[i % pool.len()];
         let t0 = Instant::now();
         if stream_w.write_all(line.as_bytes()).is_err() {
             break;
         }
         i += 1;
-        let _ = tx.send(t0);
+        if *feedback {
+            feedback_writes += 1;
+        }
+        let _ = tx.send((t0, *feedback));
         next += interval;
         let now = Instant::now();
         if next > now {
@@ -191,6 +243,7 @@ fn open_loop_conn(
     // replies never received (server shed the connection or timed out)
     // count as neither ok nor shed; sent reflects writes
     res.sent = i as u64;
+    res.feedback_sent = feedback_writes;
     Ok(res)
 }
 
@@ -240,6 +293,15 @@ fn stage_breakdown(stats: &str) -> Option<Json> {
     Some(Json::obj(fields))
 }
 
+/// Extract the route swap generation from a `stats` line (`None` on
+/// `generation=-`, i.e. a factory route, or a missing/unparsable key).
+fn parse_generation(stats: Option<&str>) -> Option<u64> {
+    stats?
+        .split_whitespace()
+        .find_map(|tok| tok.strip_prefix("generation="))
+        .and_then(|v| v.parse().ok())
+}
+
 /// Nearest-rank quantile: the smallest sample with at least `q` of
 /// the mass at or below it (0 on an empty set).
 fn quantile(sorted: &[u64], q: f64) -> u64 {
@@ -254,7 +316,12 @@ fn quantile(sorted: &[u64], q: f64) -> u64 {
 pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     anyhow::ensure!(cfg.connections > 0, "need at least one connection");
     anyhow::ensure!(cfg.features > 0, "need the model's feature width");
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&cfg.feedback_rate),
+        "feedback rate must be within [0, 1]"
+    );
     let pool = request_pool(cfg);
+    let generation_start = parse_generation(fetch_server_stats(&cfg.addr, &cfg.model).as_deref());
     let open_loop = cfg.rate > 0.0;
     let interval = if open_loop {
         Duration::from_secs_f64(cfg.connections as f64 / cfg.rate)
@@ -283,6 +350,9 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         total.ok += r.ok;
         total.shed += r.shed;
         total.errors += r.errors;
+        total.feedback_sent += r.feedback_sent;
+        total.feedback_ok += r.feedback_ok;
+        total.torn += r.torn;
         total.latencies_us.extend(r.latencies_us);
     }
     let elapsed_s = t0.elapsed().as_secs_f64();
@@ -293,6 +363,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     } else {
         total.latencies_us.iter().sum::<u64>() as f64 / total.latencies_us.len() as f64
     };
+    let server_stats = fetch_server_stats(&cfg.addr, &cfg.model);
     Ok(LoadgenReport {
         mode: if open_loop { "open" } else { "closed" },
         sent: total.sent,
@@ -314,15 +385,20 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         p95_us: quantile(&total.latencies_us, 0.95),
         p99_us: quantile(&total.latencies_us, 0.99),
         mean_us,
-        server_stats: fetch_server_stats(&cfg.addr, &cfg.model),
+        feedback_sent: total.feedback_sent,
+        feedback_ok: total.feedback_ok,
+        torn: total.torn,
+        generation_start,
+        generation_end: parse_generation(server_stats.as_deref()),
+        server_stats,
     })
 }
 
 impl LoadgenReport {
     /// One human line per run (the CLI prints this).
     pub fn summary(&self) -> String {
-        format!(
-            "{} loop: {:.0} ok/s over {:.1}s  sent={} ok={} shed={} errors={} \
+        let mut line = format!(
+            "{} loop: {:.0} ok/s over {:.1}s  sent={} ok={} shed={} errors={} torn={} \
              shed_rate={:.4}  latency p50={}us p95={}us p99={}us mean={:.0}us",
             self.mode,
             self.throughput_rps,
@@ -331,12 +407,27 @@ impl LoadgenReport {
             self.ok,
             self.shed,
             self.errors,
+            self.torn,
             self.shed_rate,
             self.p50_us,
             self.p95_us,
             self.p99_us,
             self.mean_us,
-        )
+        );
+        if self.feedback_sent > 0 {
+            line.push_str(&format!(
+                "  feedback={}/{} generation {}->{}",
+                self.feedback_ok,
+                self.feedback_sent,
+                self.generation_start
+                    .map(|g| g.to_string())
+                    .unwrap_or_else(|| "-".into()),
+                self.generation_end
+                    .map(|g| g.to_string())
+                    .unwrap_or_else(|| "-".into()),
+            ));
+        }
+        line
     }
 
     /// The `BENCH_serve.json` payload for this run.
@@ -352,12 +443,24 @@ impl LoadgenReport {
                     ("rate_rps", Json::num(cfg.rate)),
                     ("duration_s", Json::num(cfg.duration.as_secs_f64())),
                     ("features", Json::num(cfg.features as f64)),
+                    ("feedback_rate", Json::num(cfg.feedback_rate)),
                 ]),
             ),
             ("sent", Json::num(self.sent as f64)),
             ("ok", Json::num(self.ok as f64)),
             ("shed", Json::num(self.shed as f64)),
             ("errors", Json::num(self.errors as f64)),
+            ("torn", Json::num(self.torn as f64)),
+            ("feedback_sent", Json::num(self.feedback_sent as f64)),
+            ("feedback_ok", Json::num(self.feedback_ok as f64)),
+            (
+                "generation_start",
+                self.generation_start.map(|g| Json::num(g as f64)).unwrap_or(Json::Null),
+            ),
+            (
+                "generation_end",
+                self.generation_end.map(|g| Json::num(g as f64)).unwrap_or(Json::Null),
+            ),
             ("elapsed_s", Json::num(self.elapsed_s)),
             ("throughput_rps", Json::num(self.throughput_rps)),
             ("shed_rate", Json::num(self.shed_rate)),
@@ -418,18 +521,82 @@ mod tests {
             duration: Duration::from_secs(1),
             features: 12,
             seed: 7,
+            feedback_rate: 0.0,
+            classes: 2,
         };
         let a = request_pool(&cfg);
         let b = request_pool(&cfg);
         assert_eq!(a, b);
         assert_eq!(a.len(), 32);
-        for line in &a {
+        for (line, feedback) in &a {
+            assert!(!feedback);
             assert!(line.starts_with("infer cpu "));
             assert!(line.ends_with('\n'));
             let bits = line.trim_end().rsplit(' ').next().unwrap();
             assert_eq!(bits.len(), 12);
             assert!(bits.chars().all(|c| c == '0' || c == '1'));
         }
+    }
+
+    #[test]
+    fn pool_mixes_feedback_lines_at_the_configured_rate() {
+        let cfg = LoadgenConfig {
+            addr: "unused".into(),
+            model: "cpu".into(),
+            connections: 1,
+            rate: 0.0,
+            duration: Duration::from_secs(1),
+            features: 6,
+            seed: 3,
+            feedback_rate: 0.5,
+            classes: 4,
+        };
+        let pool = request_pool(&cfg);
+        assert_eq!(pool, request_pool(&cfg), "pool must stay deterministic");
+        let feedback: Vec<&PoolEntry> = pool.iter().filter(|(_, f)| *f).collect();
+        // at rate 0.5 over 32 draws, both kinds must appear
+        assert!(!feedback.is_empty());
+        assert!(feedback.len() < pool.len());
+        for (line, _) in &feedback {
+            assert!(line.starts_with("feedback cpu "));
+            assert!(line.ends_with('\n'));
+            let mut tok = line.trim_end().split(' ').skip(2);
+            let label: usize = tok.next().unwrap().parse().unwrap();
+            assert!(label < 4);
+            let bits = tok.next().unwrap();
+            assert_eq!(bits.len(), 6);
+            assert!(tok.next().is_none());
+        }
+    }
+
+    #[test]
+    fn torn_and_protocol_replies_are_classified() {
+        let mut res = ConnResult::default();
+        let t0 = Instant::now();
+        res.classify("ok 1 scores=...\n", t0, false);
+        res.classify("ok applied=1\n", t0, true);
+        res.classify("err overloaded: queue full\n", t0, false);
+        res.classify("err unknown model 'x'\n", t0, false);
+        res.classify("ok 1 sco", t0, false); // EOF mid-reply: torn
+        res.classify("garbage\n", t0, false); // no protocol prefix: torn
+        assert_eq!(res.sent, 6);
+        assert_eq!(res.ok, 2);
+        assert_eq!(res.shed, 1);
+        assert_eq!(res.errors, 3); // unknown-model + both torn
+        assert_eq!(res.torn, 2);
+        assert_eq!((res.feedback_sent, res.feedback_ok), (1, 1));
+        assert_eq!(res.ok + res.shed + res.errors, res.sent);
+    }
+
+    #[test]
+    fn generation_parses_from_stats_line() {
+        assert_eq!(
+            parse_generation(Some("ok model=cpu version=3 generation=7 requests=1")),
+            Some(7)
+        );
+        assert_eq!(parse_generation(Some("ok model=cpu generation=-")), None);
+        assert_eq!(parse_generation(Some("ok model=cpu requests=1")), None);
+        assert_eq!(parse_generation(None), None);
     }
 
     #[test]
@@ -464,6 +631,8 @@ mod tests {
             duration: Duration::from_secs(2),
             features: 8,
             seed: 1,
+            feedback_rate: 0.25,
+            classes: 2,
         };
         let report = LoadgenReport {
             mode: "open",
@@ -478,12 +647,22 @@ mod tests {
             p95_us: 200,
             p99_us: 300,
             mean_us: 120.0,
+            feedback_sent: 3,
+            feedback_ok: 3,
+            torn: 0,
+            generation_start: Some(1),
+            generation_end: Some(4),
             server_stats: Some("ok model=cpu".into()),
         };
         let j = report.to_json(&cfg);
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.get("bench").unwrap().as_str(), Some("serve_load"));
         assert_eq!(parsed.get("ok").unwrap().as_usize(), Some(8));
+        assert_eq!(parsed.get("torn").unwrap().as_usize(), Some(0));
+        assert_eq!(parsed.get("feedback_ok").unwrap().as_usize(), Some(3));
+        assert_eq!(parsed.get("generation_start").unwrap().as_usize(), Some(1));
+        assert_eq!(parsed.get("generation_end").unwrap().as_usize(), Some(4));
+        assert!(report.summary().contains("feedback=3/3 generation 1->4"));
         assert_eq!(
             parsed.get("latency_us").unwrap().get("p95").unwrap().as_usize(),
             Some(200)

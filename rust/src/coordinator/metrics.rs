@@ -35,6 +35,22 @@ pub struct Metrics {
     pub features_walked: AtomicU64,
     /// Per-literal delta-row toggles applied by the sparse engine.
     pub sparse_toggles: AtomicU64,
+    /// Labeled examples applied by the online learner
+    /// (`feedback`/`train` verbs, WAL replay included).
+    pub feedback_applied: AtomicU64,
+    /// Feedback submissions rejected (bad label, width mismatch,
+    /// learner queue closed).
+    pub feedback_errors: AtomicU64,
+    /// Snapshots published by the online learner's cadence.
+    pub publishes: AtomicU64,
+    /// Feedback updates applied since the last publish (gauge: how
+    /// stale the served snapshot is, in updates).
+    pub publish_lag: AtomicU64,
+    /// Correct predict-before-apply calls in the learner's recent
+    /// feedback window (drift gauge numerator).
+    feedback_window_correct: AtomicU64,
+    /// Examples currently in the recent feedback window (denominator).
+    feedback_window_len: AtomicU64,
     /// Set while the route is inside a shed episode (first shed after a
     /// healthy period begins one; the next successful admission ends
     /// it) — drives the journal's shed_start/shed_end events.
@@ -60,6 +76,12 @@ impl Default for Metrics {
             clauses_skipped: AtomicU64::new(0),
             features_walked: AtomicU64::new(0),
             sparse_toggles: AtomicU64::new(0),
+            feedback_applied: AtomicU64::new(0),
+            feedback_errors: AtomicU64::new(0),
+            publishes: AtomicU64::new(0),
+            publish_lag: AtomicU64::new(0),
+            feedback_window_correct: AtomicU64::new(0),
+            feedback_window_len: AtomicU64::new(0),
             shedding: AtomicBool::new(false),
             latency_us: Histogram::new(),
             stages: Default::default(),
@@ -90,6 +112,18 @@ pub struct MetricsSnapshot {
     pub clauses_skipped: u64,
     pub features_walked: u64,
     pub sparse_toggles: u64,
+    /// Labeled examples the online learner applied.
+    pub feedback_applied: u64,
+    /// Feedback submissions rejected.
+    pub feedback_errors: u64,
+    /// Online-learner snapshot publishes.
+    pub publishes: u64,
+    /// Updates applied since the last publish (staleness gauge).
+    pub publish_lag: u64,
+    /// Drift-window numerator: correct predict-before-apply calls.
+    pub feedback_window_correct: u64,
+    /// Drift-window denominator: examples in the recent window.
+    pub feedback_window_len: u64,
     /// Whole seconds since the route's metrics were created.
     pub uptime_s: u64,
     /// End-to-end (admission -> scored) latency histogram.
@@ -154,6 +188,16 @@ impl Metrics {
         }
     }
 
+    /// Store the online learner's recent-window drift gauge: how many
+    /// of the last `len` feedback examples the *served-era* model
+    /// predicted correctly before the update was applied. Single
+    /// writer (the learner thread), so plain stores suffice.
+    pub fn set_feedback_window(&self, correct: u64, len: u64) {
+        self.feedback_window_correct
+            .store(correct, Ordering::Relaxed);
+        self.feedback_window_len.store(len, Ordering::Relaxed);
+    }
+
     /// Time since the route's metrics were created (route uptime).
     pub fn uptime(&self) -> Duration {
         self.started.elapsed()
@@ -175,14 +219,15 @@ impl Metrics {
             clauses_skipped: self.clauses_skipped.load(Ordering::Relaxed),
             features_walked: self.features_walked.load(Ordering::Relaxed),
             sparse_toggles: self.sparse_toggles.load(Ordering::Relaxed),
+            feedback_applied: self.feedback_applied.load(Ordering::Relaxed),
+            feedback_errors: self.feedback_errors.load(Ordering::Relaxed),
+            publishes: self.publishes.load(Ordering::Relaxed),
+            publish_lag: self.publish_lag.load(Ordering::Relaxed),
+            feedback_window_correct: self.feedback_window_correct.load(Ordering::Relaxed),
+            feedback_window_len: self.feedback_window_len.load(Ordering::Relaxed),
             uptime_s: self.started.elapsed().as_secs(),
             latency: self.latency_us.snapshot(),
-            stages: [
-                self.stages[0].snapshot(),
-                self.stages[1].snapshot(),
-                self.stages[2].snapshot(),
-                self.stages[3].snapshot(),
-            ],
+            stages: std::array::from_fn(|i| self.stages[i].snapshot()),
         }
     }
 }
@@ -219,6 +264,18 @@ impl MetricsSnapshot {
     /// speedup claim observed on live traffic (0 with no probe data).
     pub fn index_efficiency(&self) -> f64 {
         index_efficiency(self.clauses_falsified, self.clauses_skipped)
+    }
+
+    /// Accuracy of the *served-era* model over the learner's recent
+    /// feedback window (drift gauge; 0 before any feedback arrives).
+    /// Falling accuracy while feedback flows means the published
+    /// snapshot is drifting behind the labeled stream.
+    pub fn feedback_recent_accuracy(&self) -> f64 {
+        if self.feedback_window_len == 0 {
+            0.0
+        } else {
+            self.feedback_window_correct as f64 / self.feedback_window_len as f64
+        }
     }
 
     /// p50 latency in microseconds (0 when no latencies recorded) —
@@ -323,6 +380,22 @@ mod tests {
         assert_eq!(m.note_admitted(), Some(2), "admission ends it at 2 shed");
         assert_eq!(m.note_admitted(), None);
         assert!(m.note_shed(), "a fresh episode can begin");
+    }
+
+    #[test]
+    fn feedback_window_gauge_and_accuracy() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().feedback_recent_accuracy(), 0.0);
+        m.feedback_applied.fetch_add(4, Ordering::Relaxed);
+        m.publish_lag.store(3, Ordering::Relaxed);
+        m.set_feedback_window(3, 4);
+        let s = m.snapshot();
+        assert_eq!(s.feedback_applied, 4);
+        assert_eq!(s.publish_lag, 3);
+        assert!((s.feedback_recent_accuracy() - 0.75).abs() < 1e-12);
+        // the gauge is absolute: a fresh store replaces, not adds
+        m.set_feedback_window(1, 2);
+        assert!((m.snapshot().feedback_recent_accuracy() - 0.5).abs() < 1e-12);
     }
 
     #[test]

@@ -17,7 +17,12 @@
 //! [`crate::engine::ModelSnapshot`]s that [`Coordinator::swap`] (or
 //! `tmi serve --watch`) replaces atomically under live traffic — the
 //! paper's train-while-serving story (arXiv 2004.03188: constant-time
-//! index updates keep a learner publishable mid-stream).
+//! index updates keep a learner publishable mid-stream). [`online`]
+//! completes that story: a per-route single-writer learner accepts
+//! `feedback`/`train` verbs, applies them through the clause index's
+//! O(1) update hooks, and republishes on a configurable cadence
+//! (`--publish-every` / `--publish-interval`), with an optional
+//! crash-durable feedback WAL ([`crate::registry::FeedbackWal`]).
 //!
 //! Backends:
 //! * [`backend::CpuBackend`] — the paper's system: clause-indexed
@@ -29,6 +34,7 @@ pub mod backend;
 pub mod batcher;
 pub mod loadgen;
 pub mod metrics;
+pub mod online;
 pub mod queue;
 pub mod server;
 pub mod supervisor;
@@ -37,6 +43,9 @@ pub use backend::{Backend as ServeBackend, CpuBackend, XlaBackend};
 pub use batcher::BatchPolicy;
 pub use loadgen::{LoadgenConfig, LoadgenReport};
 pub use metrics::{Metrics, MetricsSnapshot};
+pub use online::{
+    FeedbackError, FeedbackSender, OnlineConfig, OnlineLearner, PublishFn, PublishReport,
+};
 pub use queue::{BoundedQueue, PushError};
 pub use supervisor::{RestartPolicy, SupervisedExit};
 pub use server::{

@@ -1,0 +1,562 @@
+//! Learn-while-serving: a single-writer online learner per route.
+//!
+//! The paper's falsification index supports *constant-time updating,
+//! thus use also during learning* — this module exercises that claim
+//! under live traffic. A route's [`OnlineLearner`] owns a real
+//! [`Trainer`] (indexed backend: every `train_sample` maintains the
+//! clause index through the O(1) flip hooks) on a dedicated thread;
+//! reader workers keep scoring the current published
+//! [`crate::engine::ModelSnapshot`] untouched. `feedback`/`train`
+//! protocol verbs enqueue labeled examples into a bounded channel, the
+//! learner applies them in arrival order, and a publish cadence —
+//! every K updates ([`OnlineConfig::publish_every`]) or T elapsed
+//! ([`OnlineConfig::publish_interval`]) — freezes the trainer into a
+//! fresh snapshot and hot-swaps it in via the caller-supplied publish
+//! hook (which may also persist to the registry; see
+//! [`PublishReport::durable`]).
+//!
+//! ## Determinism and durability
+//!
+//! Updates are applied strictly in channel-arrival order by one
+//! thread, so a single client's feedback stream replays bit-identically
+//! offline (`tests/online_feedback.rs`). With a WAL attached
+//! ([`crate::registry::FeedbackWal`]), each event is logged *before*
+//! it is applied and acked (WAL-first), so `kill -9` at any point
+//! loses nothing: restart reloads the last durable snapshot, reseeds
+//! the trainer's RNG streams to the same epoch ([`reseed_seed`]), and
+//! replays the log — landing on the exact pre-crash machine. Durable
+//! publishes truncate the log (the published snapshot owns those
+//! updates) and advance the RNG epoch on both the live and the
+//! restart path, keeping the two aligned.
+
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::Metrics;
+use crate::obs::{self, journal, EventKind, Stage};
+use crate::registry::wal::{FeedbackRecord, FeedbackWal};
+use crate::tm::trainer::Trainer;
+use crate::util::BitVec;
+
+/// Publish cadence and queue sizing for one route's learner.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OnlineConfig {
+    /// Republish after this many applied updates (0 disables the
+    /// count trigger).
+    pub publish_every: u64,
+    /// Republish when this much time has passed since the last publish
+    /// and at least one update is pending (`None` disables the timer).
+    pub publish_interval: Option<Duration>,
+    /// Bound of the feedback channel; submissions beyond it are shed
+    /// with [`FeedbackError::Overloaded`].
+    pub queue_cap: usize,
+    /// Size of the recent-accuracy drift window (predict-before-apply
+    /// correctness over the last N examples).
+    pub window: usize,
+}
+
+impl Default for OnlineConfig {
+    fn default() -> Self {
+        OnlineConfig {
+            publish_every: 64,
+            publish_interval: Some(Duration::from_millis(500)),
+            queue_cap: 1024,
+            window: 256,
+        }
+    }
+}
+
+/// Why a feedback submission failed.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FeedbackError {
+    UnknownModel(String),
+    /// The route has no online learner attached.
+    Unsupported(String),
+    WrongWidth { expected: usize, got: usize },
+    BadLabel { classes: usize, got: usize },
+    /// Shed: the feedback queue is full.
+    Overloaded,
+    ShuttingDown,
+    /// The learner refused the event (e.g. the WAL append failed).
+    Rejected(String),
+}
+
+impl std::fmt::Display for FeedbackError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FeedbackError::UnknownModel(m) => write!(f, "unknown model '{m}'"),
+            FeedbackError::Unsupported(m) => {
+                write!(f, "route '{m}' has no online learner (serve with --feedback)")
+            }
+            FeedbackError::WrongWidth { expected, got } => {
+                write!(f, "literal width {got}, model expects {expected}")
+            }
+            FeedbackError::BadLabel { classes, got } => {
+                write!(f, "label {got} out of range (model has {classes} classes)")
+            }
+            // keep the leading token machine-matchable as `err overloaded`
+            FeedbackError::Overloaded => write!(f, "overloaded: feedback queue full"),
+            FeedbackError::ShuttingDown => write!(f, "online learner shutting down"),
+            FeedbackError::Rejected(why) => write!(f, "feedback rejected: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for FeedbackError {}
+
+/// What the publish hook did with the trainer's current machine.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PublishReport {
+    /// Version of the snapshot now serving (publisher-scoped for plain
+    /// hot swaps, registry version for durable publishes).
+    pub version: u64,
+    /// Route swap generation after the install — the cross-publisher
+    /// monotonic key deploy checks watch.
+    pub generation: u64,
+    /// `true` when the publish persisted to the registry: the learner
+    /// truncates the WAL and advances the RNG epoch to
+    /// [`reseed_seed`]`(base_seed, version)`.
+    pub durable: bool,
+}
+
+/// The caller-supplied publish hook: freeze the trainer into a
+/// snapshot, install it (hot swap; optionally registry-persist), and
+/// report what now serves. Invoked only from the learner thread.
+pub type PublishFn = Box<dyn FnMut(&mut Trainer, u64) -> Result<PublishReport, String> + Send>;
+
+/// Mix a durable publish version into the training seed: the RNG
+/// epoch both the live learner (at each durable publish) and the
+/// restart path (after recovering that version) reseed to, keeping
+/// WAL replay draw-for-draw identical to the live run.
+pub fn reseed_seed(base_seed: u64, version: u64) -> u64 {
+    base_seed ^ version.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Apply replayed WAL records to a recovered trainer in log order
+/// (the restart path, before serving resumes). Returns how many were
+/// applied; records with an out-of-range label (a foreign or stale
+/// log) are skipped.
+pub fn replay_feedback(trainer: &mut Trainer, records: &[FeedbackRecord]) -> u64 {
+    let classes = trainer.tm.classes();
+    let n_literals = trainer.tm.params.n_literals();
+    let mut applied = 0u64;
+    for rec in records {
+        let label = rec.label as usize;
+        if label >= classes || rec.literals.len() != n_literals {
+            continue;
+        }
+        trainer.train_sample(&rec.literals, label);
+        applied += 1;
+    }
+    applied
+}
+
+struct FeedbackMsg {
+    label: usize,
+    literals: BitVec,
+    resp: SyncSender<Result<(), FeedbackError>>,
+}
+
+enum Msg {
+    Feedback(FeedbackMsg),
+    /// Final-publish pending updates and exit ([`OnlineLearner::shutdown`]).
+    Stop,
+}
+
+/// Cloneable submission handle ([`Coordinator::attach_learner`] stores
+/// one per route; every [`CoordinatorHandle`] clone shares it).
+///
+/// [`Coordinator::attach_learner`]: crate::coordinator::Coordinator::attach_learner
+/// [`CoordinatorHandle`]: crate::coordinator::CoordinatorHandle
+#[derive(Clone)]
+pub struct FeedbackSender {
+    tx: SyncSender<Msg>,
+    classes: usize,
+    n_literals: usize,
+    metrics: Arc<Metrics>,
+}
+
+impl FeedbackSender {
+    /// Submit one labeled example and block until the learner has
+    /// logged and applied it (applied-then-ack: an `Ok` here means the
+    /// update is in the trainer — and in the WAL, when one is
+    /// attached). Sheds with [`FeedbackError::Overloaded`] when the
+    /// feedback queue is full.
+    pub fn submit(&self, label: usize, literals: BitVec) -> Result<(), FeedbackError> {
+        if literals.len() != self.n_literals {
+            self.metrics.feedback_errors.fetch_add(1, Ordering::Relaxed);
+            return Err(FeedbackError::WrongWidth {
+                expected: self.n_literals,
+                got: literals.len(),
+            });
+        }
+        if label >= self.classes {
+            self.metrics.feedback_errors.fetch_add(1, Ordering::Relaxed);
+            return Err(FeedbackError::BadLabel {
+                classes: self.classes,
+                got: label,
+            });
+        }
+        let (resp, ack) = sync_channel(1);
+        let msg = Msg::Feedback(FeedbackMsg {
+            label,
+            literals,
+            resp,
+        });
+        match self.tx.try_send(msg) {
+            Ok(()) => {}
+            Err(TrySendError::Full(_)) => {
+                self.metrics.feedback_errors.fetch_add(1, Ordering::Relaxed);
+                return Err(FeedbackError::Overloaded);
+            }
+            Err(TrySendError::Disconnected(_)) => return Err(FeedbackError::ShuttingDown),
+        }
+        ack.recv().map_err(|_| FeedbackError::ShuttingDown)?
+    }
+}
+
+/// One route's online learner: the single-writer thread plus its
+/// submission channel. Keep this alive for the serve lifetime and
+/// call [`OnlineLearner::shutdown`] on drain — it final-publishes any
+/// pending updates before exiting.
+pub struct OnlineLearner {
+    tx: SyncSender<Msg>,
+    sender: FeedbackSender,
+    thread: JoinHandle<()>,
+}
+
+impl OnlineLearner {
+    /// Spawn the learner thread for `route` around `trainer` (built
+    /// with the indexed backend so feedback flows through the O(1)
+    /// index maintenance hooks). `wal`, when given, receives every
+    /// event before it is applied. `publish` installs cadence
+    /// snapshots; `metrics` is the route's (shared with the serving
+    /// workers).
+    pub fn spawn(
+        route: impl Into<String>,
+        trainer: Trainer,
+        wal: Option<FeedbackWal>,
+        publish: PublishFn,
+        metrics: Arc<Metrics>,
+        cfg: OnlineConfig,
+    ) -> OnlineLearner {
+        let route = route.into();
+        let (tx, rx) = sync_channel::<Msg>(cfg.queue_cap.max(1));
+        let sender = FeedbackSender {
+            tx: tx.clone(),
+            classes: trainer.tm.classes(),
+            n_literals: trainer.tm.params.n_literals(),
+            metrics: Arc::clone(&metrics),
+        };
+        let thread = std::thread::Builder::new()
+            .name(format!("tmi-learner-{route}"))
+            .spawn(move || learner_loop(route, trainer, wal, publish, metrics, cfg, rx))
+            .expect("spawning learner thread");
+        OnlineLearner { tx, sender, thread }
+    }
+
+    /// The route's submission handle (clone freely).
+    pub fn sender(&self) -> FeedbackSender {
+        self.sender.clone()
+    }
+
+    /// Stop the learner: pending queued feedback is still applied,
+    /// pending updates are final-published, then the thread exits.
+    pub fn shutdown(self) {
+        let _ = self.tx.send(Msg::Stop);
+        let _ = self.thread.join();
+    }
+}
+
+fn learner_loop(
+    route: String,
+    mut trainer: Trainer,
+    mut wal: Option<FeedbackWal>,
+    mut publish: PublishFn,
+    metrics: Arc<Metrics>,
+    cfg: OnlineConfig,
+    rx: Receiver<Msg>,
+) {
+    let base_seed = trainer.tm.params.seed;
+    let mut window: VecDeque<bool> = VecDeque::with_capacity(cfg.window.max(1));
+    let mut window_correct = 0u64;
+    let mut since_publish = 0u64;
+    let mut last_publish = Instant::now();
+    // the recv timeout drives the interval trigger; poll at most every
+    // 50 ms so a short interval is honored without a hot spin
+    let tick = cfg
+        .publish_interval
+        .unwrap_or(Duration::from_millis(500))
+        .min(Duration::from_millis(50))
+        .max(Duration::from_millis(1));
+    // `wal` is threaded through as a parameter (not captured): the
+    // receive loop below also appends to it between publishes.
+    let mut do_publish = |trainer: &mut Trainer,
+                          wal: &mut Option<FeedbackWal>,
+                          since: &mut u64,
+                          last: &mut Instant| {
+        if *since == 0 {
+            return;
+        }
+        match publish(trainer, *since) {
+            Ok(rep) => {
+                metrics.publishes.fetch_add(1, Ordering::Relaxed);
+                metrics.publish_lag.store(0, Ordering::Relaxed);
+                journal().emit(EventKind::FeedbackPublish {
+                    route: route.clone(),
+                    version: rep.version,
+                    generation: rep.generation,
+                    updates: *since,
+                });
+                *since = 0;
+                *last = Instant::now();
+                if rep.durable {
+                    if let Some(w) = wal.as_mut() {
+                        if let Err(e) = w.truncate() {
+                            journal().emit(EventKind::RouteFailed {
+                                route: route.clone(),
+                                error: format!("wal truncate: {e}"),
+                            });
+                        }
+                    }
+                    // advance the RNG epoch in lockstep with the
+                    // restart path (which reseeds after recovering
+                    // this version, then replays an empty log)
+                    trainer.reseed_streams(reseed_seed(base_seed, rep.version));
+                }
+            }
+            Err(e) => {
+                // keep `since` pending: the next trigger retries
+                journal().emit(EventKind::RouteFailed {
+                    route: route.clone(),
+                    error: format!("feedback publish: {e}"),
+                });
+            }
+        }
+    };
+    loop {
+        let msg = match rx.recv_timeout(tick) {
+            Ok(msg) => msg,
+            Err(RecvTimeoutError::Timeout) => {
+                if let Some(interval) = cfg.publish_interval {
+                    if since_publish > 0 && last_publish.elapsed() >= interval {
+                        do_publish(&mut trainer, &mut wal, &mut since_publish, &mut last_publish);
+                    }
+                }
+                continue;
+            }
+            Err(RecvTimeoutError::Disconnected) => break,
+        };
+        let fb = match msg {
+            Msg::Feedback(fb) => fb,
+            Msg::Stop => break,
+        };
+        let t0 = if obs::enabled() {
+            Some(Instant::now())
+        } else {
+            None
+        };
+        // drift probe: score with the pre-update machine through the
+        // per-class evaluators (no inference-engine rebuild, no RNG
+        // draws — replay-neutral)
+        let correct = trainer.predict_online(&fb.literals) == fb.label;
+        if window.len() == cfg.window.max(1) {
+            if window.pop_front() == Some(true) {
+                window_correct -= 1;
+            }
+        }
+        window.push_back(correct);
+        if correct {
+            window_correct += 1;
+        }
+        metrics.set_feedback_window(window_correct, window.len() as u64);
+        // WAL-first: the event is durable before it mutates the model
+        if let Some(w) = wal.as_mut() {
+            if let Err(e) = w.append(fb.label as u32, &fb.literals) {
+                metrics.feedback_errors.fetch_add(1, Ordering::Relaxed);
+                let _ = fb.resp.send(Err(FeedbackError::Rejected(format!(
+                    "wal append: {e}"
+                ))));
+                continue;
+            }
+        }
+        trainer.train_sample(&fb.literals, fb.label);
+        since_publish += 1;
+        metrics.feedback_applied.fetch_add(1, Ordering::Relaxed);
+        metrics.publish_lag.store(since_publish, Ordering::Relaxed);
+        if let Some(t0) = t0 {
+            metrics.record_stage(Stage::Feedback, t0.elapsed());
+        }
+        let _ = fb.resp.send(Ok(()));
+        if cfg.publish_every > 0 && since_publish >= cfg.publish_every {
+            do_publish(&mut trainer, &mut wal, &mut since_publish, &mut last_publish);
+        }
+    }
+    // drain-then-stop: final-publish whatever is pending so a clean
+    // shutdown leaves nothing only-in-WAL
+    do_publish(&mut trainer, &mut wal, &mut since_publish, &mut last_publish);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::Backend;
+    use crate::tm::io;
+    use crate::tm::params::TMParams;
+    use crate::util::Rng;
+    use std::sync::Mutex;
+
+    fn toy_trainer(seed: u64) -> Trainer {
+        let params = TMParams::new(2, 10, 8).with_seed(seed);
+        Trainer::new(params, Backend::Indexed)
+    }
+
+    fn toy_samples(n: usize, seed: u64) -> Vec<(BitVec, usize)> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let y = rng.bern(0.5) as usize;
+                let bits: Vec<bool> =
+                    (0..8).map(|k| if k == 0 { y == 0 } else { rng.bern(0.5) }).collect();
+                let mut l = bits.clone();
+                l.extend(bits.iter().map(|b| !b));
+                (BitVec::from_bools(&l), y)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn reseed_seed_is_version_sensitive() {
+        assert_ne!(reseed_seed(7, 1), reseed_seed(7, 2));
+        assert_eq!(reseed_seed(7, 3), reseed_seed(7, 3));
+        // version 0 is the identity epoch
+        assert_eq!(reseed_seed(7, 0), 7);
+    }
+
+    #[test]
+    fn online_feedback_matches_offline_training() {
+        // the in-module differential check (the deep one, over TCP,
+        // is tests/online_feedback.rs): N submissions through the
+        // learner == the same samples through a plain Trainer
+        let samples = toy_samples(120, 11);
+        let mut offline = toy_trainer(5);
+        for (l, y) in &samples {
+            offline.train_sample(l, *y);
+        }
+        let metrics = Arc::new(Metrics::new());
+        let published: Arc<Mutex<Vec<(u64, u32)>>> = Arc::new(Mutex::new(Vec::new()));
+        let log = Arc::clone(&published);
+        let publish: PublishFn = Box::new(move |tr, updates| {
+            let snap = tr.publish();
+            log.lock().unwrap().push((updates, io::model_digest(&tr.tm)));
+            Ok(PublishReport {
+                version: snap.version(),
+                generation: 0,
+                durable: false,
+            })
+        });
+        let learner = OnlineLearner::spawn(
+            "toy",
+            toy_trainer(5),
+            None,
+            publish,
+            Arc::clone(&metrics),
+            OnlineConfig {
+                publish_every: 50,
+                publish_interval: None,
+                ..OnlineConfig::default()
+            },
+        );
+        let sender = learner.sender();
+        for (l, y) in &samples {
+            sender.submit(*y, l.clone()).unwrap();
+        }
+        learner.shutdown();
+        let s = metrics.snapshot();
+        assert_eq!(s.feedback_applied, 120);
+        assert_eq!(s.feedback_errors, 0);
+        // 120 updates at publish_every=50: two cadence publishes plus
+        // the final drain publish of the remaining 20
+        let pubs = published.lock().unwrap();
+        assert_eq!(pubs.iter().map(|(u, _)| *u).collect::<Vec<_>>(), vec![50, 50, 20]);
+        // the last published state is bit-identical to replaying the
+        // same arrival order through a plain offline trainer
+        assert_eq!(pubs.last().unwrap().1, io::model_digest(&offline.tm));
+        assert_eq!(s.publishes, 3);
+        assert!(s.feedback_window_len > 0);
+    }
+
+    #[test]
+    fn submit_validates_label_and_width() {
+        let metrics = Arc::new(Metrics::new());
+        let publish: PublishFn = Box::new(|tr, _| {
+            let snap = tr.publish();
+            Ok(PublishReport {
+                version: snap.version(),
+                generation: 0,
+                durable: false,
+            })
+        });
+        let learner = OnlineLearner::spawn(
+            "toy",
+            toy_trainer(5),
+            None,
+            publish,
+            Arc::clone(&metrics),
+            OnlineConfig::default(),
+        );
+        let sender = learner.sender();
+        assert!(matches!(
+            sender.submit(9, BitVec::zeros(16)),
+            Err(FeedbackError::BadLabel { classes: 2, got: 9 })
+        ));
+        assert!(matches!(
+            sender.submit(0, BitVec::zeros(4)),
+            Err(FeedbackError::WrongWidth { expected: 16, got: 4 })
+        ));
+        assert!(sender.submit(0, BitVec::zeros(16)).is_ok());
+        learner.shutdown();
+        let s = metrics.snapshot();
+        assert_eq!(s.feedback_errors, 2);
+        assert_eq!(s.feedback_applied, 1);
+        // submissions after shutdown shed instead of hanging
+        assert!(matches!(
+            sender.submit(0, BitVec::zeros(16)),
+            Err(FeedbackError::ShuttingDown)
+        ));
+    }
+
+    #[test]
+    fn replay_applies_records_in_order_and_skips_foreign() {
+        let samples = toy_samples(40, 13);
+        let mut offline = toy_trainer(5);
+        for (l, y) in &samples {
+            offline.train_sample(l, *y);
+        }
+        let mut recovered = toy_trainer(5);
+        let mut records: Vec<FeedbackRecord> = samples
+            .iter()
+            .map(|(l, y)| FeedbackRecord {
+                label: *y as u32,
+                literals: l.clone(),
+            })
+            .collect();
+        // a foreign record (bad width) must be skipped, not applied
+        records.push(FeedbackRecord {
+            label: 0,
+            literals: BitVec::zeros(4),
+        });
+        assert_eq!(replay_feedback(&mut recovered, &records), 40);
+        for c in 0..2 {
+            assert_eq!(
+                offline.tm.bank(c).states(),
+                recovered.tm.bank(c).states(),
+                "class {c} diverged after replay"
+            );
+        }
+    }
+}

@@ -37,11 +37,12 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, SyncSender};
 use std::sync::{Arc, PoisonError, RwLock};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::backend::{Backend, Scored};
 use crate::coordinator::batcher::{collect, BatchPolicy, Collected};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
+use crate::coordinator::online::{FeedbackError, FeedbackSender};
 use crate::coordinator::queue::{BoundedQueue, PushError};
 use crate::coordinator::supervisor::{supervise, RestartPolicy};
 use crate::engine::{argmax, ModelSnapshot};
@@ -284,6 +285,10 @@ struct Route {
     n_literals: usize,
     metrics: Arc<Metrics>,
     swap: Option<Arc<SwapCell>>,
+    /// Online-learner submission handle, when one is attached
+    /// ([`Coordinator::attach_learner`]) — the `feedback`/`train`
+    /// verbs route labeled examples through it.
+    feedback: Option<FeedbackSender>,
     workers: Vec<JoinHandle<()>>,
 }
 
@@ -296,6 +301,11 @@ pub struct RouteStats {
     pub version: Option<u64>,
     /// Swaps installed on this route since registration (monotonic).
     pub generation: Option<u64>,
+    /// CRC-32 state digest of the serving snapshot's machine
+    /// ([`ModelSnapshot::state_digest`]) — the crash-recovery equality
+    /// witness: a restarted route that WAL-replayed to the exact
+    /// pre-crash machine reports the same digest.
+    pub digest: Option<u32>,
 }
 
 /// The serving coordinator. Register models, then `handle()` for a
@@ -457,6 +467,7 @@ impl Coordinator {
                 n_literals,
                 metrics,
                 swap: None,
+                feedback: None,
                 workers: vec![worker],
             },
         );
@@ -512,9 +523,37 @@ impl Coordinator {
                 n_literals: snapshot.n_literals(),
                 metrics,
                 swap: Some(cell),
+                feedback: None,
                 workers,
             },
         );
+    }
+
+    /// Attach an online-learner submission handle to route `name`
+    /// ([`crate::coordinator::online::OnlineLearner::sender`]): the
+    /// `feedback`/`train` protocol verbs start routing labeled
+    /// examples through it. Call before [`Coordinator::handle`] —
+    /// existing handles keep their route table. The learner's metrics
+    /// should be the route's own (pass
+    /// [`Coordinator::route_metrics`]'s Arc when spawning) so its
+    /// counters land in the same `stats` line.
+    pub fn attach_learner(
+        &mut self,
+        name: &str,
+        sender: FeedbackSender,
+    ) -> Result<(), FeedbackError> {
+        let route = self
+            .routes
+            .get_mut(name)
+            .ok_or_else(|| FeedbackError::UnknownModel(name.to_string()))?;
+        route.feedback = Some(sender);
+        Ok(())
+    }
+
+    /// The route's live metrics handle — spawn the online learner with
+    /// this Arc so feedback counters share the route's `stats` line.
+    pub fn route_metrics(&self, name: &str) -> Option<Arc<Metrics>> {
+        self.routes.get(name).map(|r| Arc::clone(&r.metrics))
     }
 
     /// Atomically replace the serving snapshot of model `name`,
@@ -562,6 +601,7 @@ impl Coordinator {
                                 n_literals: r.n_literals,
                                 metrics: Arc::clone(&r.metrics),
                                 swap: r.swap.as_ref().map(Arc::clone),
+                                feedback: r.feedback.clone(),
                             },
                         )
                     })
@@ -609,6 +649,7 @@ fn route_stats(
         metrics: snapshot_with_depth(metrics, queue),
         version: swap.map(|c| c.load().version()),
         generation: swap.map(|c| c.generation()),
+        digest: swap.map(|c| c.load().state_digest()),
     }
 }
 
@@ -751,6 +792,7 @@ struct HandleRoute {
     n_literals: usize,
     metrics: Arc<Metrics>,
     swap: Option<Arc<SwapCell>>,
+    feedback: Option<FeedbackSender>,
 }
 
 /// Cloneable, thread-safe routing handle.
@@ -824,6 +866,37 @@ impl CoordinatorHandle {
         self.infer(model, lits)
     }
 
+    /// Submit one labeled example to `model`'s online learner
+    /// (`feedback` protocol verb): blocks until the learner has
+    /// WAL-logged and applied it through the O(1) clause-index update
+    /// path, in arrival order. Errors with
+    /// [`FeedbackError::Unsupported`] on routes without a learner and
+    /// sheds with [`FeedbackError::Overloaded`] when the feedback
+    /// queue is full.
+    pub fn feedback(&self, model: &str, label: usize, literals: BitVec) -> Result<(), FeedbackError> {
+        let route = self
+            .routes
+            .get(model)
+            .ok_or_else(|| FeedbackError::UnknownModel(model.to_string()))?;
+        let sender = route
+            .feedback
+            .as_ref()
+            .ok_or_else(|| FeedbackError::Unsupported(model.to_string()))?;
+        sender.submit(label, literals)
+    }
+
+    /// [`CoordinatorHandle::feedback`] from a raw feature row
+    /// (builds `[x, ¬x]` like [`CoordinatorHandle::infer_features`]).
+    pub fn feedback_features(
+        &self,
+        model: &str,
+        label: usize,
+        features: &[bool],
+    ) -> Result<(), FeedbackError> {
+        let lits = crate::data::Dataset::literals_from_bools(features);
+        self.feedback(model, label, lits)
+    }
+
     /// Route statistics for the `stats` protocol verb.
     pub fn stats(&self, model: &str) -> Option<RouteStats> {
         self.routes
@@ -883,7 +956,7 @@ impl CoordinatorHandle {
 fn render_prometheus(routes: &[(String, RouteStats)]) -> String {
     let mut w = PromWriter::new();
     // counters: (family, help, per-route value)
-    let counters: [(&str, &str, fn(&MetricsSnapshot) -> u64); 13] = [
+    let counters: [(&str, &str, fn(&MetricsSnapshot) -> u64); 16] = [
         ("tmi_requests_total", "Requests admitted or shed at the route.", |m| m.requests),
         ("tmi_completed_total", "Requests answered with a prediction.", |m| m.completed),
         ("tmi_shed_total", "Requests shed at admission (queue full).", |m| m.shed),
@@ -897,6 +970,9 @@ fn render_prometheus(routes: &[(String, RouteStats)]) -> String {
         ("tmi_index_clauses_skipped_total", "Clause evaluations the index avoided outright.", |m| m.clauses_skipped),
         ("tmi_index_features_walked_total", "Literals walked by the dense falsification pass.", |m| m.features_walked),
         ("tmi_sparse_toggles_total", "Per-literal delta-row toggles applied by the sparse walk.", |m| m.sparse_toggles),
+        ("tmi_feedback_applied_total", "Labeled examples applied by the online learner.", |m| m.feedback_applied),
+        ("tmi_feedback_errors_total", "Feedback submissions rejected (bad label, width, shed).", |m| m.feedback_errors),
+        ("tmi_publishes_total", "Snapshots published by the online learner's cadence.", |m| m.publishes),
     ];
     for (name, help, get) in counters {
         w.header(name, help, "counter");
@@ -924,6 +1000,26 @@ fn render_prometheus(routes: &[(String, RouteStats)]) -> String {
             st.metrics.index_efficiency(),
         );
     }
+    w.header(
+        "tmi_publish_lag",
+        "Feedback updates applied since the online learner's last publish.",
+        "gauge",
+    );
+    for (route, st) in routes {
+        w.int_sample("tmi_publish_lag", &[("route", route)], st.metrics.publish_lag);
+    }
+    w.header(
+        "tmi_feedback_recent_accuracy",
+        "Served-era accuracy over the learner's recent feedback window (0 with no feedback).",
+        "gauge",
+    );
+    for (route, st) in routes {
+        w.sample(
+            "tmi_feedback_recent_accuracy",
+            &[("route", route)],
+            st.metrics.feedback_recent_accuracy(),
+        );
+    }
     if routes.iter().any(|(_, st)| st.version.is_some()) {
         w.header(
             "tmi_snapshot_version",
@@ -935,10 +1031,18 @@ fn render_prometheus(routes: &[(String, RouteStats)]) -> String {
             "Swaps installed on the route since registration (snapshot routes).",
             "gauge",
         );
+        w.header(
+            "tmi_snapshot_digest",
+            "CRC-32 state digest of the serving snapshot (snapshot routes).",
+            "gauge",
+        );
         for (route, st) in routes {
             if let (Some(v), Some(g)) = (st.version, st.generation) {
                 w.int_sample("tmi_snapshot_version", &[("route", route)], v);
                 w.int_sample("tmi_snapshot_generation", &[("route", route)], g);
+            }
+            if let Some(d) = st.digest {
+                w.int_sample("tmi_snapshot_digest", &[("route", route)], u64::from(d));
             }
         }
     }
@@ -952,7 +1056,7 @@ fn render_prometheus(routes: &[(String, RouteStats)]) -> String {
     }
     w.header(
         "tmi_stage_latency_us",
-        "Per-pipeline-stage latency: queue wait, batch assembly, engine scoring, reply write.",
+        "Per-pipeline-stage latency: queue wait, batch assembly, engine scoring, reply write, feedback apply.",
         "histogram",
     );
     for (route, st) in routes {
@@ -999,11 +1103,24 @@ pub struct ServeOptions {
     /// closed immediately (finished connection threads are reaped as
     /// the server goes, so the cap bounds *live* connections).
     pub max_conns: usize,
+    /// Per-read timeout on protocol connections (`--read-timeout-ms`).
+    /// Bounds how long a connection thread blocks on a silent client
+    /// before re-checking the stop flag; a timeout never drops a
+    /// buffered partial line.
+    pub read_timeout: Duration,
+    /// Read timeout for draining an HTTP scrape's request head
+    /// (`--scrape-timeout-ms`): a scraper that never finishes its head
+    /// still gets the exposition body after this long.
+    pub scrape_timeout: Duration,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        ServeOptions { max_conns: 256 }
+        ServeOptions {
+            max_conns: 256,
+            read_timeout: Duration::from_millis(100),
+            scrape_timeout: Duration::from_millis(500),
+        }
     }
 }
 
@@ -1025,6 +1142,17 @@ impl Default for ServeOptions {
 /// <- ok events=<n>\n        followed by n single-line journal events
 ///    (route-scoped + process-wide), oldest first, each
 ///    `seq=<n> wall_ms=<n> mono_us=<n> kind=<k> [route=<r>] [k=v ...]`
+///
+/// -> feedback <model> <label> <01-bitstring of raw features>\n
+/// <- ok applied=1\n   |   err <message>\n
+///    (blocks until the online learner has WAL-logged and applied the
+///    example; routes without a learner answer err; a full feedback
+///    queue sheds with `err overloaded: feedback queue full`)
+///
+/// -> train <model> <label>:<bits> [<label>:<bits> ...]\n
+/// <- ok applied=<n>\n   |   err <message> applied=<k>\n
+///    (batch form of feedback, applied left to right; on a mid-batch
+///    error the reply reports how many examples were applied)
 ///
 /// -> metrics\n
 /// <- Prometheus text exposition 0.0.4 for every route, terminated by
@@ -1060,7 +1188,7 @@ pub fn serve_tcp_with(
                 let h = handle.clone();
                 let stop_conn = Arc::clone(&stop);
                 conns.push(std::thread::spawn(move || {
-                    let _ = handle_conn(stream, h, stop_conn);
+                    let _ = handle_conn(stream, h, stop_conn, opts.read_timeout);
                 }));
             }
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -1085,11 +1213,22 @@ pub fn serve_metrics_http(
     handle: CoordinatorHandle,
     stop: Arc<AtomicBool>,
 ) -> std::io::Result<()> {
+    serve_metrics_http_with(listener, handle, stop, ServeOptions::default())
+}
+
+/// [`serve_metrics_http`] with explicit limits (only
+/// [`ServeOptions::scrape_timeout`] applies to the scrape endpoint).
+pub fn serve_metrics_http_with(
+    listener: TcpListener,
+    handle: CoordinatorHandle,
+    stop: Arc<AtomicBool>,
+    opts: ServeOptions,
+) -> std::io::Result<()> {
     listener.set_nonblocking(true)?;
     while !stop.load(Ordering::Relaxed) {
         match listener.accept() {
             Ok((mut stream, _addr)) => {
-                let _ = serve_one_scrape(&mut stream, &handle);
+                let _ = serve_one_scrape(&mut stream, &handle, opts.scrape_timeout);
             }
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(std::time::Duration::from_millis(2));
@@ -1103,8 +1242,12 @@ pub fn serve_metrics_http(
 /// Drain the request head (bounded, best-effort — a scraper that
 /// never finishes its head still gets the body after the timeout),
 /// then reply `200 OK` with the exposition.
-fn serve_one_scrape(stream: &mut TcpStream, handle: &CoordinatorHandle) -> std::io::Result<()> {
-    stream.set_read_timeout(Some(std::time::Duration::from_millis(500)))?;
+fn serve_one_scrape(
+    stream: &mut TcpStream,
+    handle: &CoordinatorHandle,
+    timeout: Duration,
+) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(timeout.max(Duration::from_millis(1))))?;
     let mut head = Vec::new();
     let mut buf = [0u8; 1024];
     loop {
@@ -1146,9 +1289,11 @@ fn handle_conn(
     stream: TcpStream,
     handle: CoordinatorHandle,
     stop: Arc<AtomicBool>,
+    read_timeout: Duration,
 ) -> std::io::Result<()> {
-    // Periodic read timeout so idle connections observe shutdown.
-    stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
+    // Periodic read timeout so idle connections observe shutdown
+    // (zero would mean "no timeout" to the OS — clamp it).
+    stream.set_read_timeout(Some(read_timeout.max(Duration::from_millis(1))))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut stream = stream;
     let mut line = String::new();
@@ -1238,14 +1383,21 @@ fn discard_to_newline(
     }
 }
 
-/// Dispatch one protocol line (`infer`/`stats`/`stats events`/`metrics`
-/// verbs; a bare `<model> <bits>` is legacy shorthand for `infer`).
-/// Returns the reply plus, for infer replies, the route's metrics
-/// handle so the caller can attribute the Write stage to the route.
+/// Dispatch one protocol line (`infer`/`feedback`/`train`/`stats`/
+/// `stats events`/`metrics` verbs; a bare `<model> <bits>` is legacy
+/// shorthand for `infer`). Returns the reply plus, for infer replies,
+/// the route's metrics handle so the caller can attribute the Write
+/// stage to the route.
 fn respond_line(line: &str, handle: &CoordinatorHandle) -> (String, Option<Arc<Metrics>>) {
     let trimmed = line.trim();
     if trimmed == "metrics" {
         return (handle.prometheus(), None);
+    }
+    if let Some(rest) = trimmed.strip_prefix("feedback ") {
+        return (respond_feedback(rest, handle), None);
+    }
+    if let Some(rest) = trimmed.strip_prefix("train ") {
+        return (respond_train(rest, handle), None);
     }
     if let Some(rest) = trimmed.strip_prefix("stats ") {
         let rest = rest.trim();
@@ -1282,6 +1434,70 @@ fn respond_line(line: &str, handle: &CoordinatorHandle) -> (String, Option<Arc<M
         },
         Err(e) => (format!("err {e}\n"), None),
     }
+}
+
+/// `feedback <model> <label> <bits>`: one labeled example through the
+/// route's online learner (applied-then-ack).
+fn respond_feedback(body: &str, handle: &CoordinatorHandle) -> String {
+    let mut parts = body.trim().splitn(3, ' ');
+    let (model, label, bits) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(l), Some(b)) => (m, l, b.trim()),
+        _ => return "err expected 'feedback <model> <label> <bits>'\n".to_string(),
+    };
+    match parse_labeled_example(label, bits) {
+        Ok((label, features)) => match handle.feedback_features(model, label, &features) {
+            Ok(()) => "ok applied=1\n".to_string(),
+            Err(e) => format!("err {e}\n"),
+        },
+        Err(e) => format!("err {e}\n"),
+    }
+}
+
+/// `train <model> <label>:<bits> [...]`: the batch form — parse every
+/// item up front (a malformed item rejects the whole line unapplied),
+/// then apply left to right, reporting progress on a mid-batch error.
+fn respond_train(body: &str, handle: &CoordinatorHandle) -> String {
+    let mut parts = body.trim().split_whitespace();
+    let Some(model) = parts.next() else {
+        return "err expected 'train <model> <label>:<bits> [...]'\n".to_string();
+    };
+    let mut examples = Vec::new();
+    for item in parts {
+        let Some((label, bits)) = item.split_once(':') else {
+            return format!("err bad item '{item}': expected <label>:<bits>\n");
+        };
+        match parse_labeled_example(label, bits) {
+            Ok(ex) => examples.push(ex),
+            Err(e) => return format!("err bad item '{item}': {e}\n"),
+        }
+    }
+    if examples.is_empty() {
+        return "err expected 'train <model> <label>:<bits> [...]'\n".to_string();
+    }
+    let mut applied = 0usize;
+    for (label, features) in &examples {
+        if let Err(e) = handle.feedback_features(model, *label, features) {
+            return format!("err {e} applied={applied}\n");
+        }
+        applied += 1;
+    }
+    format!("ok applied={applied}\n")
+}
+
+/// Parse a `<label>` token and a 01-bitstring of raw features.
+fn parse_labeled_example(label: &str, bits: &str) -> Result<(usize, Vec<bool>), String> {
+    let label: usize = label
+        .parse()
+        .map_err(|_| format!("bad label '{label}'"))?;
+    let features: Result<Vec<bool>, String> = bits
+        .chars()
+        .map(|c| match c {
+            '0' => Ok(false),
+            '1' => Ok(true),
+            other => Err(format!("bad bit '{other}'")),
+        })
+        .collect();
+    Ok((label, features?))
 }
 
 /// One-line `k=v` stats reply. Parse-stable: every pre-existing key
@@ -1328,6 +1544,22 @@ fn stats_line(model: &str, st: &RouteStats) -> String {
             h.p99(),
         );
     }
+    // online-learning keys (append-only like the rest): counters,
+    // staleness, drift accuracy, and the snapshot's CRC-32 digest —
+    // the crash-recovery equality witness
+    let _ = write!(
+        out,
+        " feedback_applied={} feedback_errors={} publishes={} publish_lag={} \
+         feedback_recent_acc={:.4} digest={}",
+        m.feedback_applied,
+        m.feedback_errors,
+        m.publishes,
+        m.publish_lag,
+        m.feedback_recent_accuracy(),
+        st.digest
+            .map(|d| d.to_string())
+            .unwrap_or_else(|| "-".to_string()),
+    );
     out.push('\n');
     out
 }
@@ -1912,6 +2144,7 @@ mod tests {
             metrics: Metrics::new().snapshot(),
             version: None,
             generation: None,
+            digest: None,
         };
         let line = stats_line("m", &st);
         assert!(line.ends_with('\n') && line.matches('\n').count() == 1);
@@ -1925,6 +2158,13 @@ mod tests {
             " batch_p95_us=",
             " score_p99_us=",
             " write_p50_us=",
+            " feedback_p99_us=",
+            " feedback_applied=",
+            " feedback_errors=",
+            " publishes=",
+            " publish_lag=",
+            " feedback_recent_acc=",
+            " digest=",
         ] {
             let at = line.find(key).unwrap_or_else(|| panic!("missing {key}"));
             assert!(at > p99, "{key} must append after p99_us");
@@ -2103,6 +2343,150 @@ mod tests {
     }
 
     #[test]
+    fn feedback_without_learner_is_unsupported() {
+        let mut tr = toy_trainer(3);
+        let mut coord = Coordinator::new();
+        coord.register_model("toy", tr.publish(), RouteConfig::default());
+        let h = coord.handle();
+        assert!(matches!(
+            h.feedback_features("toy", 0, &class0_features()),
+            Err(FeedbackError::Unsupported(_))
+        ));
+        assert!(matches!(
+            h.feedback_features("nope", 0, &class0_features()),
+            Err(FeedbackError::UnknownModel(_))
+        ));
+        // the snapshot route still reports its digest
+        let st = h.stats("toy").unwrap();
+        assert!(st.digest.is_some());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn feedback_and_train_verbs_apply_and_republish() {
+        use crate::coordinator::online::{OnlineConfig, OnlineLearner, PublishFn, PublishReport};
+
+        let mut learner_tr =
+            Trainer::from_machine(toy_trainer(3).tm, eval::Backend::Indexed);
+        let mut coord = Coordinator::new();
+        coord.register_model("toy", learner_tr.publish(), RouteConfig::default());
+        // the hook handle predates the learner: it only needs the swap
+        // cell, which is shared by Arc with every later handle
+        let hook = coord.handle();
+        let metrics = coord.route_metrics("toy").unwrap();
+        let publish: PublishFn = Box::new(move |tr, _updates| {
+            let snap = tr.publish();
+            let version = snap.version();
+            hook.swap("toy", snap).map_err(|e| e.to_string())?;
+            let generation = hook
+                .stats("toy")
+                .and_then(|s| s.generation)
+                .unwrap_or(0);
+            Ok(PublishReport {
+                version,
+                generation,
+                durable: false,
+            })
+        });
+        let learner = OnlineLearner::spawn(
+            "toy",
+            learner_tr,
+            None,
+            publish,
+            metrics,
+            OnlineConfig {
+                publish_every: 2,
+                publish_interval: None,
+                ..OnlineConfig::default()
+            },
+        );
+        coord.attach_learner("toy", learner.sender()).unwrap();
+        let handle = coord.handle();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let server = std::thread::spawn(move || serve_tcp(listener, handle, stop2));
+
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut reply = String::new();
+
+        conn.write_all(b"feedback toy 0 10000000\n").unwrap();
+        reader.read_line(&mut reply).unwrap();
+        assert_eq!(reply, "ok applied=1\n");
+
+        conn.write_all(b"train toy 0:10000000 1:01000000\n").unwrap();
+        reply.clear();
+        reader.read_line(&mut reply).unwrap();
+        assert_eq!(reply, "ok applied=2\n");
+
+        // validation errors: label out of range, bad syntax, no route
+        conn.write_all(b"feedback toy 9 10000000\n").unwrap();
+        reply.clear();
+        reader.read_line(&mut reply).unwrap();
+        assert!(reply.starts_with("err label 9 out of range"), "reply: {reply}");
+        conn.write_all(b"train toy\n").unwrap();
+        reply.clear();
+        reader.read_line(&mut reply).unwrap();
+        assert!(reply.starts_with("err expected 'train"), "reply: {reply}");
+        conn.write_all(b"feedback missing 0 1\n").unwrap();
+        reply.clear();
+        reader.read_line(&mut reply).unwrap();
+        assert!(reply.starts_with("err unknown model"), "reply: {reply}");
+
+        // 3 applied at publish_every=2: one cadence publish so far —
+        // the route generation advanced and the learner keys surface
+        conn.write_all(b"stats toy\n").unwrap();
+        reply.clear();
+        reader.read_line(&mut reply).unwrap();
+        assert!(reply.contains(" generation=1 "), "reply: {reply}");
+        assert!(reply.contains(" feedback_applied=3 "), "reply: {reply}");
+        assert!(reply.contains(" feedback_errors=1 "), "reply: {reply}");
+        assert!(reply.contains(" publishes=1 "), "reply: {reply}");
+        assert!(reply.contains(" publish_lag=1 "), "reply: {reply}");
+        let digest_val = reply
+            .split(" digest=")
+            .nth(1)
+            .map(|s| s.trim())
+            .unwrap_or("");
+        assert!(
+            !digest_val.is_empty() && digest_val.chars().all(|c| c.is_ascii_digit()),
+            "digest must be numeric for snapshot routes: {reply}"
+        );
+
+        // the metrics verb exposes the new families
+        conn.write_all(b"metrics\n").unwrap();
+        let mut expo = String::new();
+        loop {
+            reply.clear();
+            reader.read_line(&mut reply).unwrap();
+            expo.push_str(&reply);
+            if reply == "# EOF\n" {
+                break;
+            }
+        }
+        assert!(expo.contains("tmi_feedback_applied_total{route=\"toy\"} 3"), "{expo}");
+        assert!(expo.contains("tmi_publishes_total{route=\"toy\"} 1"), "{expo}");
+        assert!(expo.contains("tmi_publish_lag{route=\"toy\"} 1"), "{expo}");
+        assert!(expo.contains("tmi_snapshot_digest{route=\"toy\"}"), "{expo}");
+        assert!(
+            expo.contains("tmi_stage_latency_us_bucket{route=\"toy\",stage=\"feedback\""),
+            "{expo}"
+        );
+        crate::obs::prometheus::validate_exposition(&expo).unwrap();
+
+        stop.store(true, Ordering::Relaxed);
+        drop(conn);
+        drop(reader);
+        server.join().unwrap().unwrap();
+        // shutdown final-publishes the pending update
+        learner.shutdown();
+        assert_eq!(coord.stats("toy").unwrap().metrics.publishes, 2);
+        coord.shutdown();
+    }
+
+    #[test]
     fn connection_cap_answers_busy_and_reaps() {
         let mut coord = Coordinator::new();
         coord.register("toy", toy_backend(), BatchPolicy::default());
@@ -2112,7 +2496,15 @@ mod tests {
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
         let server = std::thread::spawn(move || {
-            serve_tcp_with(listener, handle, stop2, ServeOptions { max_conns: 1 })
+            serve_tcp_with(
+                listener,
+                handle,
+                stop2,
+                ServeOptions {
+                    max_conns: 1,
+                    ..ServeOptions::default()
+                },
+            )
         });
 
         // first connection occupies the only slot

@@ -16,7 +16,12 @@
 //! constant-time index updates keep learning cheap next to serving):
 //! a trainer keeps learning, periodically calls
 //! [`crate::tm::trainer::Trainer::publish`], and pushes the resulting
-//! snapshot into the coordinator without restarting it.
+//! snapshot into the coordinator without restarting it. The online
+//! learner ([`crate::coordinator::online`]) automates that loop inside
+//! the server: `feedback` traffic mutates its live maintained-index
+//! trainer while readers keep scoring the last published snapshot,
+//! and each cadence publish is an ordinary atomic swap of one of
+//! these frozen values.
 
 use crate::engine::fused::{FusedIndex, FusedScratch, Maintenance};
 use crate::engine::sparse::{resolve_infer_mode, InferMode, SparseFusedIndex, SparseScratch};

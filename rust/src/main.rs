@@ -26,9 +26,11 @@ use anyhow::{bail, ensure, Context, Result};
 
 use tsetlin_index::bench_harness::figures::write_figures;
 use tsetlin_index::bench_harness::tables::{run_table, Scale, TableId};
-use tsetlin_index::coordinator::server::{serve_metrics_http, serve_tcp_with};
+use tsetlin_index::coordinator::online::{replay_feedback, reseed_seed};
+use tsetlin_index::coordinator::server::{serve_metrics_http_with, serve_tcp_with};
 use tsetlin_index::coordinator::{
-    BatchPolicy, Coordinator, CpuBackend, LoadgenConfig, RouteConfig, ServeOptions, XlaBackend,
+    BatchPolicy, Coordinator, CpuBackend, LoadgenConfig, OnlineConfig, OnlineLearner, PublishFn,
+    PublishReport, RouteConfig, ServeOptions, XlaBackend,
 };
 use tsetlin_index::data::mnist::Split;
 use tsetlin_index::data::synth::ImageStyle;
@@ -38,7 +40,9 @@ use tsetlin_index::eval::Backend;
 use tsetlin_index::obs::{self, journal, EventKind};
 use tsetlin_index::parallel::{resolve_threads, ParallelTrainer, DEFAULT_STALE_WINDOW};
 use tsetlin_index::registry::store::DEFAULT_RETAIN;
-use tsetlin_index::registry::{read_generation, sync_published, Registry, SyncEvent, WatchState};
+use tsetlin_index::registry::{
+    read_generation, sync_published, FeedbackWal, Registry, SyncEvent, WatchState,
+};
 use tsetlin_index::runtime::{Manifest, Runtime};
 use tsetlin_index::tm::bank::TaLayout;
 use tsetlin_index::tm::classifier::MultiClassTM;
@@ -417,6 +421,43 @@ fn cmd_work_ratio(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Serve-socket tuning shared by `--model` and `--registry` serving.
+/// The read/scrape timeouts used to be hard-coded in the server; they
+/// are route-level policy and belong on the command line.
+fn parse_serve_options(args: &Args) -> Result<ServeOptions> {
+    let d = ServeOptions::default();
+    Ok(ServeOptions {
+        max_conns: args.parse_or("max-conns", d.max_conns)?,
+        read_timeout: std::time::Duration::from_millis(
+            args.parse_or("read-timeout-ms", d.read_timeout.as_millis() as u64)?,
+        ),
+        scrape_timeout: std::time::Duration::from_millis(
+            args.parse_or("scrape-timeout-ms", d.scrape_timeout.as_millis() as u64)?,
+        ),
+    })
+}
+
+/// Online-learner cadence and sizing (`--feedback` serving):
+/// `--publish-interval 0` disables the timer trigger,
+/// `--publish-every 0` disables the count trigger.
+fn parse_online_config(args: &Args) -> Result<OnlineConfig> {
+    let d = OnlineConfig::default();
+    let interval_ms: u64 = args.parse_or(
+        "publish-interval",
+        d.publish_interval.map(|i| i.as_millis() as u64).unwrap_or(0),
+    )?;
+    Ok(OnlineConfig {
+        publish_every: args.parse_or("publish-every", d.publish_every)?,
+        publish_interval: if interval_ms > 0 {
+            Some(std::time::Duration::from_millis(interval_ms))
+        } else {
+            None
+        },
+        queue_cap: args.parse_or("feedback-queue-cap", d.queue_cap)?,
+        window: args.parse_or("drift-window", d.window)?,
+    })
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     if args.get("registry").is_some() {
         return cmd_serve_registry(args);
@@ -450,8 +491,34 @@ fn cmd_serve(args: &Args) -> Result<()> {
             workers = parallel;
         }
     }
+    let feedback_on = args.has_flag("feedback");
+    if feedback_on && !snapshot_route {
+        bail!(
+            "--feedback requires the indexed backend: the online learner \
+             maintains the clause index through its O(1) update hooks"
+        );
+    }
+    if feedback_on && args.has_flag("watch") {
+        bail!(
+            "--feedback and --watch are mutually exclusive with --model: the \
+             online learner is the route's publisher (a file watcher would \
+             overwrite its in-memory updates)"
+        );
+    }
+    // With --feedback the route's learner owns a live Trainer around
+    // the model; registration serves its first frozen snapshot so the
+    // version stream has exactly one publisher (the trainer).
+    let mut pending_trainer: Option<Trainer> = None;
     if snapshot_route {
-        let snap = Arc::new(ModelSnapshot::with_mode(tm.clone(), 1, infer_mode));
+        let snap = if feedback_on {
+            let mut trainer =
+                Trainer::from_machine(tm.clone(), Backend::Indexed).with_infer_mode(infer_mode);
+            let snap = Arc::new(trainer.publish());
+            pending_trainer = Some(trainer);
+            snap
+        } else {
+            Arc::new(ModelSnapshot::with_mode(tm.clone(), 1, infer_mode))
+        };
         coord.register_model(
             "cpu",
             snap,
@@ -521,19 +588,60 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Err(e) => eprintln!("XLA route unavailable: {e:#}"),
         }
     }
+    // Spawn the online learner (if any) before handing out serving
+    // handles: a CoordinatorHandle captures the route's feedback sender
+    // at handle() time. The publish hook's own handle only swaps, which
+    // is shared state — creating it early is fine.
+    let mut learner: Option<OnlineLearner> = None;
+    if let Some(trainer) = pending_trainer.take() {
+        let online_cfg = parse_online_config(args)?;
+        let hook = coord.handle();
+        let publish: PublishFn = Box::new(move |tr: &mut Trainer, _updates: u64| {
+            let snap = Arc::new(tr.publish());
+            let version = snap.version();
+            hook.swap("cpu", snap).map_err(|e| e.to_string())?;
+            let generation = hook.stats("cpu").and_then(|s| s.generation).unwrap_or(0);
+            Ok(PublishReport {
+                version,
+                generation,
+                durable: false,
+            })
+        });
+        let metrics = coord.route_metrics("cpu").expect("route 'cpu' registered");
+        let l = OnlineLearner::spawn("cpu", trainer, None, publish, metrics, online_cfg);
+        coord
+            .attach_learner("cpu", l.sender())
+            .map_err(|e| anyhow::anyhow!("attaching learner to 'cpu': {e}"))?;
+        eprintln!(
+            "online learner on 'cpu': publish every {} update(s) / {} ms \
+             (not durable — feedback survives crashes only with --registry)",
+            online_cfg.publish_every,
+            online_cfg
+                .publish_interval
+                .map(|i| i.as_millis().to_string())
+                .unwrap_or_else(|| "off".into()),
+        );
+        learner = Some(l);
+    }
     let listen = args.get_or("listen", "127.0.0.1:7070");
     let listener =
         std::net::TcpListener::bind(&listen).with_context(|| format!("binding {listen}"))?;
     eprintln!(
         "serving models {:?} on {listen} ({} worker(s)/route, queue bound {}; \
-         protocol: 'infer <model> <feature-bits>' / 'stats <model>')",
+         protocol: 'infer <model> <feature-bits>' / 'stats <model>'{})",
         coord.models(),
         workers.max(1),
         queue_cap,
+        if feedback_on {
+            " / 'feedback <model> <label> <feature-bits>' / 'train <model> <label>:<bits> ...'"
+        } else {
+            ""
+        },
     );
+    let opts = parse_serve_options(args)?;
     let handle = coord.handle();
     let stop = shutdown_flag();
-    setup_observability(args, &handle, &stop)?;
+    setup_observability(args, &handle, &stop, opts)?;
     if args.has_flag("watch") {
         let interval =
             std::time::Duration::from_millis(args.parse_or("watch-interval-ms", 500u64)?);
@@ -549,15 +657,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             interval.as_millis()
         );
     }
-    serve_tcp_with(
-        listener,
-        handle,
-        Arc::clone(&stop),
-        ServeOptions {
-            max_conns: args.parse_or("max-conns", 256)?,
-        },
-    )?;
+    serve_tcp_with(listener, handle, Arc::clone(&stop), opts)?;
     eprintln!("shutdown: stopped accepting; draining queues");
+    if let Some(l) = learner {
+        // final-publish pending feedback while the route still serves
+        l.shutdown();
+    }
     coord.shutdown();
     dump_journal_on_shutdown("serve loop stopped");
     eprintln!("shutdown complete");
@@ -587,16 +692,22 @@ fn watch_model_file(
     stop: Arc<AtomicBool>,
 ) {
     let mut last = model_file_stamp(path);
-    let mut version = 1u64; // registration published v1
     while !stop.load(Ordering::Relaxed) {
         std::thread::sleep(interval);
         let cur = model_file_stamp(path);
         if cur.is_none() || cur == last {
             continue;
         }
+        // Versioning fix: snapshot versions are *publisher-scoped*
+        // (a Trainer's publish_seq restarts at 1), so a thread-local
+        // counter here can collide with or regress behind what another
+        // publisher installed. Key the successor off the route's
+        // current serving version instead — the swap generation in
+        // `stats` stays the cross-publisher monotonic witness.
+        let served = handle.stats("cpu").and_then(|s| s.version).unwrap_or(0);
         match io::load(path) {
             Ok(tm) => {
-                version += 1;
+                let version = served + 1;
                 let snap = Arc::new(ModelSnapshot::with_mode(tm, version, infer_mode));
                 match handle.swap("cpu", snap) {
                     Ok(retired) => {
@@ -607,12 +718,11 @@ fn watch_model_file(
                         eprintln!("watch: hot-swapped 'cpu' v{retired} -> v{version}")
                     }
                     Err(e) => {
-                        version -= 1;
                         journal().emit(EventKind::WatchFallback {
                             route: "cpu".to_string(),
                             error: e.to_string(),
                         });
-                        eprintln!("watch: swap refused ({e}); keeping v{version}");
+                        eprintln!("watch: swap refused ({e}); keeping v{served}");
                     }
                 }
                 last = cur;
@@ -624,7 +734,7 @@ fn watch_model_file(
                     route: "cpu".to_string(),
                     error: format!("{e:#}"),
                 });
-                eprintln!("watch: reload of {path} failed ({e:#}); keeping v{version}");
+                eprintln!("watch: reload of {path} failed ({e:#}); keeping v{served}");
             }
         }
     }
@@ -657,8 +767,20 @@ fn cmd_serve_registry(args: &Args) -> Result<()> {
             dir.display()
         );
     }
+    let feedback_on = args.has_flag("feedback");
+    if feedback_on && args.has_flag("watch") {
+        bail!(
+            "--feedback and --watch are mutually exclusive: the online learner \
+             is its routes' publisher; an external publisher racing it would \
+             overwrite the learner's in-memory updates"
+        );
+    }
+    let online_cfg = parse_online_config(args)?;
     let mut coord = Coordinator::new();
     let mut state = WatchState::default();
+    // Routes awaiting a learner thread once the coordinator can hand
+    // out publish hooks: (route, recovered+replayed trainer, WAL).
+    let mut pending: Vec<(String, Trainer, FeedbackWal, InferMode)> = Vec::new();
     for name in route_names {
         match registry.load_published(&name) {
             Ok(rec) => {
@@ -674,7 +796,49 @@ fn cmd_serve_registry(args: &Args) -> Result<()> {
                     rec.version,
                     rec.infer.name()
                 );
-                let snap = Arc::new(ModelSnapshot::with_mode(rec.tm, rec.version, rec.infer));
+                let mut serve_tm = rec.tm;
+                let mut serve_version = rec.version;
+                if feedback_on {
+                    // WAL replay closes the kill -9 window *before* the
+                    // route serves: reseed the trainer's RNG streams to
+                    // the epoch of the recovered version (the same epoch
+                    // the live learner entered when it published it),
+                    // apply the logged events in order, then republish
+                    // durably so the log can be truncated.
+                    let wal_path = FeedbackWal::route_path(&dir.join(&name));
+                    let (mut wal, replay) = FeedbackWal::open(&wal_path)
+                        .with_context(|| format!("opening feedback WAL {}", wal_path.display()))?;
+                    let mut trainer = Trainer::from_machine(serve_tm.clone(), Backend::Indexed)
+                        .with_infer_mode(rec.infer);
+                    let base_seed = trainer.tm.params.seed;
+                    trainer.reseed_streams(reseed_seed(base_seed, serve_version));
+                    if replay.truncated_bytes > 0 {
+                        eprintln!(
+                            "registry: route '{name}': dropped {} byte(s) of torn WAL tail",
+                            replay.truncated_bytes
+                        );
+                    }
+                    if !replay.records.is_empty() {
+                        let applied = replay_feedback(&mut trainer, &replay.records);
+                        journal().emit(EventKind::WalReplay {
+                            route: name.clone(),
+                            records: applied,
+                        });
+                        let v = registry.publish(&name, &trainer.tm, rec.infer)?;
+                        wal.truncate().with_context(|| {
+                            format!("truncating replayed WAL {}", wal_path.display())
+                        })?;
+                        trainer.reseed_streams(reseed_seed(base_seed, v));
+                        eprintln!(
+                            "registry: route '{name}': replayed {applied} feedback record(s) \
+                             from WAL -> published v{v}"
+                        );
+                        serve_tm = trainer.tm.clone();
+                        serve_version = v;
+                    }
+                    pending.push((name.clone(), trainer, wal, rec.infer));
+                }
+                let snap = Arc::new(ModelSnapshot::with_mode(serve_tm, serve_version, rec.infer));
                 coord.register_model(
                     &name,
                     snap,
@@ -685,7 +849,7 @@ fn cmd_serve_registry(args: &Args) -> Result<()> {
                         ..RouteConfig::default()
                     },
                 );
-                state.served.insert(name, rec.version);
+                state.served.insert(name, serve_version);
             }
             Err(e) => {
                 // surviving routes keep serving; this one needs a
@@ -700,6 +864,51 @@ fn cmd_serve_registry(args: &Args) -> Result<()> {
         dir.display()
     );
     state.generation = registry.generation();
+    let registry = Arc::new(Mutex::new(registry));
+    // Spawn learners before any serving handle is created: handles
+    // capture each route's feedback sender at handle() time. Durable
+    // publish hook: registry-persist the trainer's machine (the
+    // registry version *is* the snapshot version — the cross-restart
+    // key), hot-swap it, and report durable so the learner truncates
+    // the WAL and advances its RNG epoch.
+    let mut learners: Vec<OnlineLearner> = Vec::new();
+    for (name, trainer, wal, infer) in pending {
+        let hook = coord.handle();
+        let reg = Arc::clone(&registry);
+        let route = name.clone();
+        let publish: PublishFn = Box::new(move |tr: &mut Trainer, _updates: u64| {
+            let version = reg
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .publish(&route, &tr.tm, infer)
+                .map_err(|e| e.to_string())?;
+            let snap = Arc::new(ModelSnapshot::with_mode(tr.tm.clone(), version, infer));
+            hook.swap(&route, snap).map_err(|e| e.to_string())?;
+            let generation = hook.stats(&route).and_then(|s| s.generation).unwrap_or(0);
+            Ok(PublishReport {
+                version,
+                generation,
+                durable: true,
+            })
+        });
+        let metrics = coord
+            .route_metrics(&name)
+            .expect("recovered route is registered");
+        let l = OnlineLearner::spawn(name.clone(), trainer, Some(wal), publish, metrics, online_cfg);
+        coord
+            .attach_learner(&name, l.sender())
+            .map_err(|e| anyhow::anyhow!("attaching learner to '{name}': {e}"))?;
+        eprintln!(
+            "online learner on '{name}': publish every {} update(s) / {} ms \
+             (durable: WAL-first feedback, truncated at each registry publish)",
+            online_cfg.publish_every,
+            online_cfg
+                .publish_interval
+                .map(|i| i.as_millis().to_string())
+                .unwrap_or_else(|| "off".into()),
+        );
+        learners.push(l);
+    }
     let listen = args.get_or("listen", "127.0.0.1:7070");
     let listener =
         std::net::TcpListener::bind(&listen).with_context(|| format!("binding {listen}"))?;
@@ -709,10 +918,10 @@ fn cmd_serve_registry(args: &Args) -> Result<()> {
         workers.max(1),
         queue_cap,
     );
+    let opts = parse_serve_options(args)?;
     let handle = coord.handle();
     let stop = shutdown_flag();
-    setup_observability(args, &handle, &stop)?;
-    let registry = Arc::new(Mutex::new(registry));
+    setup_observability(args, &handle, &stop, opts)?;
     if args.has_flag("watch") {
         let interval =
             std::time::Duration::from_millis(args.parse_or("watch-interval-ms", 500u64)?);
@@ -740,15 +949,13 @@ fn cmd_serve_registry(args: &Args) -> Result<()> {
             interval.as_millis()
         );
     }
-    serve_tcp_with(
-        listener,
-        handle,
-        Arc::clone(&stop),
-        ServeOptions {
-            max_conns: args.parse_or("max-conns", 256)?,
-        },
-    )?;
+    serve_tcp_with(listener, handle, Arc::clone(&stop), opts)?;
     eprintln!("shutdown: stopped accepting; draining queues");
+    for l in learners {
+        // final durable publish of any pending feedback: a clean drain
+        // leaves nothing only-in-WAL
+        l.shutdown();
+    }
     coord.shutdown();
     dump_journal_on_shutdown("registry serve loop stopped");
     let flushed = registry
@@ -829,6 +1036,7 @@ fn setup_observability(
     args: &Args,
     handle: &tsetlin_index::coordinator::CoordinatorHandle,
     stop: &Arc<AtomicBool>,
+    opts: ServeOptions,
 ) -> Result<()> {
     match args.get_or("obs", "on").as_str() {
         "on" => {}
@@ -846,7 +1054,8 @@ fn setup_observability(
         std::thread::Builder::new()
             .name("tmi-metrics".into())
             .spawn(move || {
-                if let Err(e) = serve_metrics_http(listener, metrics_handle, stop_metrics) {
+                if let Err(e) = serve_metrics_http_with(listener, metrics_handle, stop_metrics, opts)
+                {
                     eprintln!("metrics listener stopped: {e}");
                 }
             })
@@ -1000,6 +1209,8 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             .parse()
             .map_err(|_| anyhow::anyhow!("bad value for --features"))?,
         seed: args.parse_or("seed", 42)?,
+        feedback_rate: args.parse_or("feedback-rate", 0.0)?,
+        classes: args.parse_or("classes", 2)?,
     };
     eprintln!(
         "loadgen: {} loop, {} connection(s){} for {:.1}s against {} (model '{}')",
@@ -1047,6 +1258,35 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         "{} requests failed with non-overload errors",
         report.errors
     );
+    // Hot-swap safety gate for the mixed infer+feedback phase: every
+    // reply intact, and the route's swap generation (the
+    // cross-publisher monotonic key — snapshot *versions* are
+    // publisher-scoped and may repeat across restarts) moved forward.
+    if args.has_flag("assert-monotone-generations") {
+        anyhow::ensure!(
+            report.torn == 0,
+            "{} torn repl(ies) observed under live publishing",
+            report.torn
+        );
+        let start = report
+            .generation_start
+            .context("no route generation before the run (stats unavailable?)")?;
+        let end = report
+            .generation_end
+            .context("no route generation after the run (stats unavailable?)")?;
+        anyhow::ensure!(
+            end >= start,
+            "route generation went backwards: {start} -> {end}"
+        );
+        if report.feedback_ok > 0 {
+            anyhow::ensure!(
+                end > start,
+                "{} feedback updates applied but the route generation never \
+                 advanced ({start} -> {end}); is the server publishing?",
+                report.feedback_ok
+            );
+        }
+    }
     // Observability overhead gate: compare this (instrumented) run's
     // throughput against a prior `--obs off` baseline BENCH_serve.json.
     // The comparison always prints; it only *fails* the run when
@@ -1170,9 +1410,24 @@ const USAGE: &str = "usage: tmi <train|eval|table|work-ratio|serve|loadgen|promc
              [--queue-cap N]  (admission bound per route; beyond it requests
                                are shed with 'err overloaded'; default 1024)
              [--max-conns N]  (TCP connection cap, reaped pool; default 256)
+             [--read-timeout-ms N]   (per-connection read timeout, default 100)
+             [--scrape-timeout-ms N] (metrics scrape head timeout, default 500)
+             [--feedback]     (online learning: 'feedback <model> <label> <bits>'
+                               and 'train <model> <label>:<bits> ...' verbs apply
+                               labeled examples through the clause index's O(1)
+                               update hooks on a single-writer learner thread;
+                               with --registry the events are WAL-logged before
+                               apply and replayed on restart)
+             [--publish-every N]      (republish after N applied updates;
+                                       0 = off; default 64)
+             [--publish-interval MS]  (republish after MS ms with updates
+                                       pending; 0 = off; default 500)
+             [--feedback-queue-cap N] (feedback admission bound, default 1024)
+             [--drift-window N]       (recent-accuracy window, default 256)
              [--watch]        (hot-swap on change, zero downtime: with --model,
                                poll the file's content digest; with --registry,
-                               poll the manifest generation)
+                               poll the manifest generation; exclusive with
+                               --feedback — the learner is the publisher)
              [--watch-interval-ms N]   (poll period, default 500)
              [--infer auto|dense|sparse]
              [--backend B] [--parallel N]  (ablation backends serve through a
@@ -1186,8 +1441,14 @@ const USAGE: &str = "usage: tmi <train|eval|table|work-ratio|serve|loadgen|promc
   loadgen    --features N (model's raw feature width) [--addr host:port]
              [--model cpu] [--connections N] [--duration SECS]
              [--rate R]   (total offered req/s, open loop; 0 = closed loop)
+             [--feedback-rate F]  (fraction of requests sent as 'feedback'
+                               with a synthetic label; needs --classes and a
+                               server running --feedback; default 0)
+             [--classes N]  (label range for --feedback-rate, default 2)
              [--out BENCH_serve.json] [--seed N]
              [--assert-min-ok N] [--assert-max-shed-rate F]   (CI gates)
+             [--assert-monotone-generations]  (fail unless the route's swap
+                               generation moved forward and no reply was torn)
              [--baseline FILE]  (compare throughput against a prior run's
                                BENCH_serve.json — e.g. an --obs off run; fails
                                when TMI_ASSERT_MAX_OBS_OVERHEAD is exceeded)

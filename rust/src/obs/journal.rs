@@ -52,6 +52,17 @@ pub enum EventKind {
     WatchReload { route: String, version: u64 },
     /// `--watch` saw a change but kept serving the old snapshot.
     WatchFallback { route: String, error: String },
+    /// The online learner republished after `updates` feedback events
+    /// (publish cadence, `--publish-every`/`--publish-interval`).
+    FeedbackPublish {
+        route: String,
+        version: u64,
+        generation: u64,
+        updates: u64,
+    },
+    /// Restart replayed `records` feedback-WAL events into the route's
+    /// recovered trainer before serving resumed.
+    WalReplay { route: String, records: u64 },
     /// The serve loop began draining (signal or shutdown).
     Drain { reason: String },
 }
@@ -69,6 +80,8 @@ impl EventKind {
             EventKind::ShedEnd { .. } => "shed_end",
             EventKind::WatchReload { .. } => "watch_reload",
             EventKind::WatchFallback { .. } => "watch_fallback",
+            EventKind::FeedbackPublish { .. } => "feedback_publish",
+            EventKind::WalReplay { .. } => "wal_replay",
             EventKind::Drain { .. } => "drain",
         }
     }
@@ -84,7 +97,9 @@ impl EventKind {
             | EventKind::ShedStart { route, .. }
             | EventKind::ShedEnd { route, .. }
             | EventKind::WatchReload { route, .. }
-            | EventKind::WatchFallback { route, .. } => Some(route),
+            | EventKind::WatchFallback { route, .. }
+            | EventKind::FeedbackPublish { route, .. }
+            | EventKind::WalReplay { route, .. } => Some(route),
             EventKind::Drain { .. } => None,
         }
     }
@@ -120,6 +135,20 @@ impl EventKind {
             }
             EventKind::WatchReload { version, .. } => {
                 let _ = write!(out, " version={version}");
+            }
+            EventKind::FeedbackPublish {
+                version,
+                generation,
+                updates,
+                ..
+            } => {
+                let _ = write!(
+                    out,
+                    " version={version} generation={generation} updates={updates}"
+                );
+            }
+            EventKind::WalReplay { records, .. } => {
+                let _ = write!(out, " records={records}");
             }
             EventKind::Drain { reason } => {
                 let _ = write!(out, " reason={}", quote(reason));
@@ -338,6 +367,29 @@ mod tests {
         assert_eq!(a.len(), 2, "route a event + process-wide drain");
         assert_eq!(a[0].kind.name(), "shed_start");
         assert_eq!(a[1].kind.name(), "drain");
+    }
+
+    #[test]
+    fn feedback_events_render_their_fields() {
+        let j = Journal::new(4);
+        j.emit(EventKind::FeedbackPublish {
+            route: "cpu".into(),
+            version: 3,
+            generation: 7,
+            updates: 64,
+        });
+        j.emit(EventKind::WalReplay {
+            route: "cpu".into(),
+            records: 12,
+        });
+        let evs = j.snapshot();
+        assert_eq!(evs[0].kind.name(), "feedback_publish");
+        assert_eq!(evs[0].kind.route(), Some("cpu"));
+        assert!(evs[0]
+            .to_line()
+            .contains("kind=feedback_publish route=cpu version=3 generation=7 updates=64"));
+        assert_eq!(evs[1].kind.name(), "wal_replay");
+        assert!(evs[1].to_line().contains("kind=wal_replay route=cpu records=12"));
     }
 
     #[test]

@@ -47,19 +47,28 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 /// * `Score` — per request: the engine scoring call alone.
 /// * `Write` — the TCP reply write observed by the connection thread
 ///   (spikes when the client stops reading).
+/// * `Feedback` — per labeled example: the online learner's WAL append
+///   plus the `Trainer::train_sample` update (learn-while-serving).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Stage {
     Queue = 0,
     Batch = 1,
     Score = 2,
     Write = 3,
+    Feedback = 4,
 }
 
 /// Number of [`Stage`] variants (array sizing).
-pub const STAGES: usize = 4;
+pub const STAGES: usize = 5;
 
 impl Stage {
-    pub const ALL: [Stage; STAGES] = [Stage::Queue, Stage::Batch, Stage::Score, Stage::Write];
+    pub const ALL: [Stage; STAGES] = [
+        Stage::Queue,
+        Stage::Batch,
+        Stage::Score,
+        Stage::Write,
+        Stage::Feedback,
+    ];
 
     /// Stable lowercase name (stats keys, Prometheus `stage` label).
     pub fn name(self) -> &'static str {
@@ -68,6 +77,7 @@ impl Stage {
             Stage::Batch => "batch",
             Stage::Score => "score",
             Stage::Write => "write",
+            Stage::Feedback => "feedback",
         }
     }
 }
@@ -105,6 +115,7 @@ mod tests {
         }
         assert_eq!(Stage::Queue.name(), "queue");
         assert_eq!(Stage::Write.name(), "write");
+        assert_eq!(Stage::Feedback.name(), "feedback");
     }
 
     #[test]

@@ -3,10 +3,11 @@
 //! Layout under the registry root (`tmi serve --registry <dir>`):
 //!
 //! ```text
-//! <dir>/manifest.json        current route table (atomically rewritten)
-//! <dir>/manifest.json.bak    previous generation (crash fallback)
-//! <dir>/<route>/v000001.tm   checksummed v3 model files, one per version
-//! <dir>/quarantine/          torn/corrupt files moved aside, never served
+//! <dir>/manifest.json         current route table (atomically rewritten)
+//! <dir>/manifest.json.bak     previous generation (crash fallback)
+//! <dir>/<route>/v000001.tm    checksummed v3 model files, one per version
+//! <dir>/<route>/feedback.wal  CRC-framed online-feedback log ([`wal`])
+//! <dir>/quarantine/           torn/corrupt files moved aside, never served
 //! ```
 //!
 //! The manifest is the single source of truth: route name, infer mode,
@@ -30,8 +31,10 @@
 
 pub mod manifest;
 pub mod store;
+pub mod wal;
 pub mod watch;
 
 pub use manifest::{Manifest, RouteEntry, VersionEntry};
 pub use store::{GcReport, RecoveredModel, Registry, RegistryError, VerifyIssue};
+pub use wal::{FeedbackRecord, FeedbackWal, WalReplay};
 pub use watch::{read_generation, sync_published, SyncEvent, WatchState};

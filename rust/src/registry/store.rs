@@ -9,6 +9,12 @@
 //! version wins. Only a route with no intact version at all fails — and
 //! that failure is a typed error the server turns into "skip this
 //! route", never a panic.
+//!
+//! Online learning stores its write-ahead log *inside* each route's
+//! directory (`<route>/feedback.wal`, see [`crate::registry::wal`]):
+//! publish/recovery never touch it, and [`Registry::gc`] only ever
+//! removes `.tm` snapshot files, so retention can never eat feedback
+//! events that are not yet owned by a published snapshot.
 
 use std::collections::BTreeSet;
 use std::io::Write;

@@ -1,0 +1,329 @@
+//! Per-route write-ahead log of online feedback events.
+//!
+//! The learn-while-serving loop (`feedback`/`train` protocol verbs)
+//! applies labeled examples to a live [`crate::tm::Trainer`] between
+//! registry publishes. A crash in that window would silently lose
+//! every update since the last published snapshot — so each feedback
+//! event is appended here *before* it is applied to the trainer
+//! (WAL-first ordering), and the log is replayed on restart before the
+//! route starts serving. At each successful registry publish the log
+//! is truncated: the published snapshot now owns those updates.
+//!
+//! ## On-disk format
+//!
+//! The log lives next to the route's versioned snapshots as
+//! `<registry>/<route>/feedback.wal` (the `.wal` extension keeps it
+//! invisible to [`crate::registry::Registry::gc`], which only removes
+//! `.tm` files). It is a flat sequence of CRC-framed records:
+//!
+//! ```text
+//! record := len:u32le  crc:u32le  payload[len]
+//! payload := label:u32le  n_bits:u32le  bits[ceil(n_bits/8)]
+//! ```
+//!
+//! `bits` packs the *literal* vector exactly as handed to
+//! [`crate::tm::Trainer::train_sample`] (bit `i` is bit `i % 8` of
+//! byte `i / 8`), so replay reconstructs the training input without
+//! re-deriving `[x, ¬x]` from feature bits. `crc` is CRC-32 over the
+//! payload ([`crate::util::crc32`], same polynomial as the model file
+//! format). A torn tail — truncated header, short payload, or CRC
+//! mismatch, all expected outcomes of `kill -9` mid-append — is
+//! detected on open and truncated away; everything before it replays.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use crate::util::{crc32, BitVec};
+
+/// File name of a route's feedback log inside its registry directory.
+pub const WAL_FILE: &str = "feedback.wal";
+
+/// Refuse record payloads beyond this (corrupt length fields must not
+/// drive allocation).
+const MAX_PAYLOAD: u32 = 1 << 22;
+
+/// One durably logged feedback event: the label and the literal
+/// vector exactly as applied to the trainer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FeedbackRecord {
+    pub label: u32,
+    pub literals: BitVec,
+}
+
+/// What [`FeedbackWal::open`] recovered from an existing log.
+#[derive(Debug, Default)]
+pub struct WalReplay {
+    /// Intact records, oldest first — apply these to the recovered
+    /// trainer in order before serving resumes.
+    pub records: Vec<FeedbackRecord>,
+    /// Bytes of torn tail discarded (0 on a clean log).
+    pub truncated_bytes: u64,
+}
+
+/// Append handle to one route's feedback log.
+pub struct FeedbackWal {
+    file: File,
+    path: PathBuf,
+    /// Records currently in the log (replayed + appended since the
+    /// last truncate).
+    records: u64,
+}
+
+impl FeedbackWal {
+    /// The log path for a route directory.
+    pub fn route_path(route_dir: &Path) -> PathBuf {
+        route_dir.join(WAL_FILE)
+    }
+
+    /// Open (creating if absent) a route's log, scan it, truncate any
+    /// torn tail, and return the append handle plus the replayable
+    /// records. The handle appends after the last intact record.
+    pub fn open(path: &Path) -> std::io::Result<(FeedbackWal, WalReplay)> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .open(path)?;
+        let mut bytes = Vec::new();
+        file.read_to_end(&mut bytes)?;
+        let mut replay = WalReplay::default();
+        let mut offset = 0usize;
+        while let Some((record, next)) = parse_record(&bytes, offset) {
+            replay.records.push(record);
+            offset = next;
+        }
+        if offset < bytes.len() {
+            replay.truncated_bytes = (bytes.len() - offset) as u64;
+            file.set_len(offset as u64)?;
+        }
+        file.seek(SeekFrom::Start(offset as u64))?;
+        let records = replay.records.len() as u64;
+        Ok((
+            FeedbackWal {
+                file,
+                path: path.to_path_buf(),
+                records,
+            },
+            replay,
+        ))
+    }
+
+    /// Append one event and flush it to the OS before returning —
+    /// the caller applies the update to the trainer only after this
+    /// succeeds (WAL-first ordering makes `kill -9` replay exact).
+    pub fn append(&mut self, label: u32, literals: &BitVec) -> std::io::Result<()> {
+        let payload = encode_payload(label, literals);
+        let mut frame = Vec::with_capacity(8 + payload.len());
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&crc32(&payload).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        self.file.write_all(&frame)?;
+        self.file.flush()?;
+        self.records += 1;
+        Ok(())
+    }
+
+    /// Drop every logged event: the updates are now owned by a
+    /// successfully published snapshot.
+    pub fn truncate(&mut self) -> std::io::Result<()> {
+        self.file.set_len(0)?;
+        self.file.seek(SeekFrom::Start(0))?;
+        self.records = 0;
+        Ok(())
+    }
+
+    /// Force the log contents to stable storage (durable publish
+    /// points; plain appends only flush to the OS).
+    pub fn sync(&mut self) -> std::io::Result<()> {
+        self.file.sync_data()
+    }
+
+    /// Records currently in the log.
+    pub fn records(&self) -> u64 {
+        self.records
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+fn encode_payload(label: u32, literals: &BitVec) -> Vec<u8> {
+    let n_bits = literals.len();
+    let mut payload = Vec::with_capacity(8 + n_bits.div_ceil(8));
+    payload.extend_from_slice(&label.to_le_bytes());
+    payload.extend_from_slice(&(n_bits as u32).to_le_bytes());
+    let mut byte = 0u8;
+    for i in 0..n_bits {
+        if literals.get(i) {
+            byte |= 1 << (i % 8);
+        }
+        if i % 8 == 7 {
+            payload.push(byte);
+            byte = 0;
+        }
+    }
+    if n_bits % 8 != 0 {
+        payload.push(byte);
+    }
+    payload
+}
+
+/// Parse the record at `offset`; `None` marks end-of-log or a torn
+/// tail (the caller truncates from `offset`).
+fn parse_record(bytes: &[u8], offset: usize) -> Option<(FeedbackRecord, usize)> {
+    let header = bytes.get(offset..offset + 8)?;
+    let len = u32::from_le_bytes(header[0..4].try_into().unwrap());
+    let crc = u32::from_le_bytes(header[4..8].try_into().unwrap());
+    if len > MAX_PAYLOAD {
+        return None;
+    }
+    let payload = bytes.get(offset + 8..offset + 8 + len as usize)?;
+    if crc32(payload) != crc {
+        return None;
+    }
+    let record = decode_payload(payload)?;
+    Some((record, offset + 8 + len as usize))
+}
+
+fn decode_payload(payload: &[u8]) -> Option<FeedbackRecord> {
+    if payload.len() < 8 {
+        return None;
+    }
+    let label = u32::from_le_bytes(payload[0..4].try_into().unwrap());
+    let n_bits = u32::from_le_bytes(payload[4..8].try_into().unwrap()) as usize;
+    let packed = payload.get(8..)?;
+    if packed.len() != n_bits.div_ceil(8) {
+        return None;
+    }
+    let mut literals = BitVec::zeros(n_bits);
+    for i in 0..n_bits {
+        if packed[i / 8] >> (i % 8) & 1 == 1 {
+            literals.set(i);
+        }
+    }
+    Some(FeedbackRecord { label, literals })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_wal(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "tmi-wal-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(WAL_FILE)
+    }
+
+    fn lits(pattern: &[bool]) -> BitVec {
+        BitVec::from_bools(pattern)
+    }
+
+    #[test]
+    fn roundtrip_append_then_replay() {
+        let path = tmp_wal("roundtrip");
+        let (mut wal, replay) = FeedbackWal::open(&path).unwrap();
+        assert!(replay.records.is_empty());
+        assert_eq!(replay.truncated_bytes, 0);
+        let a = lits(&[true, false, true, true, false, false, true, false, true]);
+        let b = lits(&[false; 16]);
+        wal.append(1, &a).unwrap();
+        wal.append(0, &b).unwrap();
+        assert_eq!(wal.records(), 2);
+        drop(wal);
+        let (wal, replay) = FeedbackWal::open(&path).unwrap();
+        assert_eq!(wal.records(), 2);
+        assert_eq!(replay.truncated_bytes, 0);
+        assert_eq!(replay.records.len(), 2);
+        assert_eq!(replay.records[0], FeedbackRecord { label: 1, literals: a });
+        assert_eq!(replay.records[1], FeedbackRecord { label: 0, literals: b });
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_and_survivors_replay() {
+        let path = tmp_wal("torn");
+        let (mut wal, _) = FeedbackWal::open(&path).unwrap();
+        let a = lits(&[true, true, false, true]);
+        wal.append(3, &a).unwrap();
+        wal.append(2, &a).unwrap();
+        drop(wal);
+        // simulate kill -9 mid-append: a partial frame at the tail
+        let clean_len = std::fs::metadata(&path).unwrap().len();
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(&[0x55, 0xAA, 0x01]).unwrap();
+        drop(f);
+        let (mut wal, replay) = FeedbackWal::open(&path).unwrap();
+        assert_eq!(replay.records.len(), 2);
+        assert_eq!(replay.truncated_bytes, 3);
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), clean_len);
+        // the handle appends cleanly after truncation
+        wal.append(1, &a).unwrap();
+        drop(wal);
+        let (_, replay) = FeedbackWal::open(&path).unwrap();
+        assert_eq!(replay.records.len(), 3);
+        assert_eq!(replay.records[2].label, 1);
+    }
+
+    #[test]
+    fn crc_mismatch_drops_tail_from_damaged_record() {
+        let path = tmp_wal("crc");
+        let (mut wal, _) = FeedbackWal::open(&path).unwrap();
+        let a = lits(&[true; 12]);
+        wal.append(1, &a).unwrap();
+        let first_len = std::fs::metadata(&path).unwrap().len();
+        wal.append(0, &a).unwrap();
+        wal.append(1, &a).unwrap();
+        drop(wal);
+        // flip a payload bit inside the second record
+        let mut bytes = std::fs::read(&path).unwrap();
+        let idx = first_len as usize + 9;
+        bytes[idx] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let (_, replay) = FeedbackWal::open(&path).unwrap();
+        // record 2 fails its CRC; it and everything after are dropped
+        assert_eq!(replay.records.len(), 1);
+        assert!(replay.truncated_bytes > 0);
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), first_len);
+    }
+
+    #[test]
+    fn truncate_resets_the_log() {
+        let path = tmp_wal("truncate");
+        let (mut wal, _) = FeedbackWal::open(&path).unwrap();
+        wal.append(1, &lits(&[true, false, true])).unwrap();
+        wal.truncate().unwrap();
+        assert_eq!(wal.records(), 0);
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), 0);
+        // appends after truncate start a fresh record stream
+        wal.append(0, &lits(&[false, true])).unwrap();
+        wal.sync().unwrap();
+        drop(wal);
+        let (_, replay) = FeedbackWal::open(&path).unwrap();
+        assert_eq!(replay.records.len(), 1);
+        assert_eq!(replay.records[0].label, 0);
+        assert_eq!(replay.records[0].literals.len(), 2);
+    }
+
+    #[test]
+    fn oversized_length_field_is_a_torn_tail() {
+        let path = tmp_wal("oversize");
+        let (mut wal, _) = FeedbackWal::open(&path).unwrap();
+        wal.append(1, &lits(&[true])).unwrap();
+        drop(wal);
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        f.write_all(&[0u8; 4]).unwrap();
+        drop(f);
+        let (_, replay) = FeedbackWal::open(&path).unwrap();
+        assert_eq!(replay.records.len(), 1);
+        assert_eq!(replay.truncated_bytes, 8);
+    }
+}

@@ -51,6 +51,12 @@ pub enum SyncEvent {
 /// the result to `apply` (which swaps it into the coordinator). The
 /// route's served version is only advanced when `apply` succeeds, so a
 /// failed recovery never drops a serving route.
+///
+/// `state.generation` is advanced only when **no** route failed this
+/// pass. A pass with any [`SyncEvent::Failed`] leaves the generation
+/// stale so the poll loop re-enters `sync_published` on its very next
+/// tick — a transiently failed route recovers as soon as the failure
+/// clears instead of waiting for an unrelated manifest mutation.
 pub fn sync_published(
     registry: &mut Registry,
     state: &mut WatchState,
@@ -101,7 +107,14 @@ pub fn sync_published(
             }
         }
     }
-    state.generation = registry.generation();
+    // Only record the generation as handled when every route applied
+    // cleanly. A transient failure (backend hiccup, mid-write read)
+    // must be retried on the *next poll*, not parked until an
+    // unrelated manifest mutation bumps the generation again.
+    let any_failed = events.iter().any(|e| matches!(e, SyncEvent::Failed { .. }));
+    if !any_failed {
+        state.generation = registry.generation();
+    }
     events
 }
 
@@ -249,6 +262,48 @@ mod tests {
             panic!("nothing new")
         });
         assert!(events.is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn failed_apply_is_retried_on_next_poll_without_new_publish() {
+        // Regression: sync_published used to advance state.generation
+        // even when a route's apply failed, so the failed route was not
+        // retried until some unrelated manifest mutation. A transient
+        // failure must heal on the very next poll.
+        let dir = tmp_registry("retry");
+        let mut reg = Registry::open(&dir, 4).unwrap();
+        let tm = trained(9);
+        reg.publish("cpu", &tm, InferMode::Auto).unwrap();
+        let mut state = WatchState::default();
+
+        // First pass: apply fails transiently.
+        let events =
+            sync_published(&mut reg, &mut state, |_, _| Err("transient".into()));
+        assert_eq!(events.len(), 1);
+        assert!(matches!(&events[0], SyncEvent::Failed { .. }));
+        // The generation must NOT be marked handled — the poll loop's
+        // `read_generation(dir) != state.generation` gate has to fire
+        // again even though nothing new was published.
+        assert_ne!(state.generation, reg.generation());
+        assert_eq!(read_generation(&dir), Some(reg.generation()));
+
+        // Second pass, no new publish: the failure has cleared and the
+        // route is recovered.
+        let mut applied = Vec::new();
+        let events = sync_published(&mut reg, &mut state, |route, rec| {
+            applied.push((route.to_string(), rec.version));
+            Ok(())
+        });
+        assert_eq!(events.len(), 1);
+        assert!(matches!(
+            &events[0],
+            SyncEvent::Published { route, version: 1, .. } if route == "cpu"
+        ));
+        assert_eq!(applied, vec![("cpu".to_string(), 1)]);
+        assert_eq!(state.served.get("cpu"), Some(&1));
+        // Now — and only now — the generation is recorded as handled.
+        assert_eq!(state.generation, reg.generation());
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

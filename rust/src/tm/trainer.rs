@@ -285,6 +285,41 @@ impl Trainer {
         ))
     }
 
+    /// Reset both training RNG streams to worker 0 of
+    /// [`train_streams`]`(seed, 0)`, abandoning the current stream
+    /// positions. The online learner uses this to pin an *RNG epoch*
+    /// at every durable publish: the live learner and the
+    /// crash-restart replay path both reseed to the same epoch
+    /// ([`crate::coordinator::online::reseed_seed`]), so replaying the
+    /// feedback WAL consumes draw-for-draw the same stream the live
+    /// run did and lands on a bit-identical machine.
+    pub fn reseed_streams(&mut self, seed: u64) {
+        let (sample_rng, feedback_rng) = train_streams(seed, 0);
+        self.sample_rng = sample_rng;
+        self.feedback_rng = feedback_rng;
+    }
+
+    /// Argmax prediction through the per-class evaluators alone — no
+    /// fused/sparse engine build, no RNG draws. This is the online
+    /// learner's predict-before-apply drift probe: between feedback
+    /// updates the inference snapshots are perpetually dirty, so
+    /// routing through [`Trainer::predict`] would pay a full engine
+    /// rebuild per labeled example; the indexed evaluator scores one
+    /// class in O(falsified clauses) instead. Ties break to the
+    /// lowest class id, matching [`crate::engine::argmax`].
+    pub fn predict_online(&mut self, literals: &BitVec) -> usize {
+        let mut best = 0usize;
+        let mut best_score = i32::MIN;
+        for i in 0..self.tm.classes() {
+            let s = self.evals[i].score(self.tm.bank(i), literals);
+            if s > best_score {
+                best_score = s;
+                best = i;
+            }
+        }
+        best
+    }
+
     /// One full update for a labelled sample: Type I/II on the target
     /// class, then on one uniformly-drawn negative class.
     pub fn train_sample(&mut self, literals: &BitVec, label: usize) -> u64 {
@@ -692,6 +727,64 @@ mod tests {
         let mut sharded = vec![0i32; batch.len() * 2];
         tr.score_batch_into(&batch, &mut sharded);
         assert_eq!(serial, sharded);
+    }
+
+    #[test]
+    fn reseed_streams_restores_draw_sequences() {
+        // train, reseed, retrain == the fresh-trainer stream from the
+        // same banks: the contract the WAL replay path depends on
+        let params = TMParams::new(2, 8, 6).with_seed(42);
+        let train = toy_samples(60, 6, 8);
+        let mut a = Trainer::new(params.clone(), Backend::Indexed);
+        for (l, y) in &train {
+            a.train_sample(l, *y);
+        }
+        a.reseed_streams(params.seed);
+        for (l, y) in &train {
+            a.train_sample(l, *y);
+        }
+        let mut pre = Trainer::new(params.clone(), Backend::Indexed);
+        for (l, y) in &train {
+            pre.train_sample(l, *y);
+        }
+        let mut b = Trainer::from_machine(pre.tm.clone(), Backend::Indexed);
+        for (l, y) in &train {
+            b.train_sample(l, *y);
+        }
+        for c in 0..2 {
+            assert_eq!(a.tm.bank(c).states(), b.tm.bank(c).states());
+        }
+    }
+
+    #[test]
+    fn predict_online_matches_predict() {
+        let params = TMParams::new(2, 10, 8);
+        let train = toy_samples(100, 8, 9);
+        let mut tr = Trainer::new(params, Backend::Indexed);
+        for _ in 0..2 {
+            tr.train_epoch(train.iter().map(|(l, y)| (l, *y)));
+        }
+        for (l, _) in &train[..30] {
+            assert_eq!(tr.predict_online(l), tr.predict(l));
+        }
+    }
+
+    #[test]
+    fn predict_online_is_training_neutral() {
+        // the drift probe must not perturb training state or RNG
+        // position — the online differential test leans on this
+        let params = TMParams::new(2, 10, 8);
+        let train = toy_samples(80, 8, 10);
+        let mut probed = Trainer::new(params.clone(), Backend::Indexed);
+        let mut control = Trainer::new(params, Backend::Indexed);
+        for (l, y) in &train {
+            let _ = probed.predict_online(l);
+            probed.train_sample(l, *y);
+            control.train_sample(l, *y);
+        }
+        for c in 0..2 {
+            assert_eq!(probed.tm.bank(c).states(), control.tm.bank(c).states());
+        }
     }
 
     #[test]

@@ -11,8 +11,8 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use tsetlin_index::coordinator::backend::Scored;
-use tsetlin_index::coordinator::server::{fault, serve_metrics_http, serve_tcp};
-use tsetlin_index::coordinator::{BatchPolicy, Coordinator, RouteConfig, ServeBackend};
+use tsetlin_index::coordinator::server::{fault, serve_metrics_http, serve_tcp, serve_tcp_with};
+use tsetlin_index::coordinator::{BatchPolicy, Coordinator, RouteConfig, ServeBackend, ServeOptions};
 use tsetlin_index::eval::Backend;
 use tsetlin_index::obs::journal;
 use tsetlin_index::obs::prometheus::validate_exposition;
@@ -418,6 +418,82 @@ fn http_scrape_serves_conformant_exposition() {
     assert!(body.ends_with("# EOF\n"));
 
     stop.store(true, Ordering::Relaxed);
+    server.join().unwrap().unwrap();
+    coord.shutdown();
+}
+
+/// The configurable per-connection read timeout (`--read-timeout-ms`)
+/// preserves the counter invariant: a client that stalls mid-line for
+/// many timeout ticks keeps its partial request buffered (and can
+/// finish it later), a client that disconnects mid-line books nothing,
+/// and a healthy connection is served throughout. Every admitted
+/// request — and only admitted requests — lands in exactly one counter.
+#[test]
+fn stalled_partial_requests_survive_read_timeout_ticks() {
+    let mut tr = quick_trainer(61);
+    let mut coord = Coordinator::new();
+    coord.register_model("obs-stall", tr.publish(), RouteConfig::default());
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let handle = coord.handle();
+    // a timeout far below the stall durations: the connection loop must
+    // tick WouldBlock/TimedOut many times without dropping buffered bytes
+    let opts = ServeOptions {
+        read_timeout: Duration::from_millis(5),
+        ..ServeOptions::default()
+    };
+    let server = std::thread::spawn(move || serve_tcp_with(listener, handle, stop2, opts));
+
+    let bits: String = (0..24).map(|k| if k % 3 == 0 { '1' } else { '0' }).collect();
+    let line = format!("infer obs-stall {bits}\n");
+
+    // stalling client: half a request, then silence across >=10 ticks
+    let mut stall = TcpStream::connect(addr).unwrap();
+    let mut stall_reader = BufReader::new(stall.try_clone().unwrap());
+    let (head, tail) = line.split_at(line.len() / 2);
+    stall.write_all(head.as_bytes()).unwrap();
+    std::thread::sleep(Duration::from_millis(80));
+
+    // a healthy client is served while the other connection stalls
+    let mut healthy = TcpStream::connect(addr).unwrap();
+    let mut healthy_reader = BufReader::new(healthy.try_clone().unwrap());
+    healthy.write_all(line.as_bytes()).unwrap();
+    let mut reply = String::new();
+    healthy_reader.read_line(&mut reply).unwrap();
+    assert!(reply.starts_with("ok "), "healthy reply: {reply}");
+
+    // the stalled connection completes its line — the partial bytes
+    // must have survived every timeout tick
+    stall.write_all(tail.as_bytes()).unwrap();
+    let mut reply = String::new();
+    stall_reader.read_line(&mut reply).unwrap();
+    assert!(reply.starts_with("ok "), "post-stall reply: {reply}");
+
+    // a third client disconnects mid-line: the half request was never
+    // admitted, so no counter may move for it
+    let mut dead = TcpStream::connect(addr).unwrap();
+    dead.write_all(format!("infer obs-stall {}", &bits[..8]).as_bytes()).unwrap();
+    std::thread::sleep(Duration::from_millis(40));
+    drop(dead);
+
+    settle(|| {
+        let m = coord.stats("obs-stall").unwrap().metrics;
+        m.requests == 2 && m.requests == m.completed + m.shed + m.errors
+    });
+    let m = coord.stats("obs-stall").unwrap().metrics;
+    assert_eq!(
+        (m.requests, m.completed, m.shed, m.errors),
+        (2, 2, 0, 0),
+        "exactly the two completed lines may be booked"
+    );
+
+    stop.store(true, Ordering::Relaxed);
+    drop(stall);
+    drop(stall_reader);
+    drop(healthy);
+    drop(healthy_reader);
     server.join().unwrap().unwrap();
     coord.shutdown();
 }

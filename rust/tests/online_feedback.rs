@@ -1,0 +1,357 @@
+//! End-to-end online learning (`tmi serve --feedback`): the paper's
+//! "constant-time updating, thus use also during learning" claim
+//! exercised over the real TCP protocol.
+//!
+//! Two witnesses:
+//! * **Bit-identity** — interleaved `infer` + `feedback`/`train`
+//!   traffic yields a served model whose state digest equals the same
+//!   labeled examples applied offline through a plain [`Trainer`] in
+//!   arrival order; a second round after the first check proves the
+//!   RNG streams are positioned identically too (a divergent draw
+//!   would split the digests immediately).
+//! * **Durability** — `kill -9` mid-feedback, restart, WAL replay:
+//!   the restarted server republishes the exact pre-crash machine
+//!   (digest equality against an offline replay of the same events)
+//!   and `registry verify` stays clean.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::process::Command;
+use std::time::{Duration, Instant};
+
+use tsetlin_index::coordinator::online::reseed_seed;
+use tsetlin_index::data::Dataset;
+use tsetlin_index::eval::Backend;
+use tsetlin_index::registry::Registry;
+use tsetlin_index::tm::classifier::MultiClassTM;
+use tsetlin_index::tm::io;
+use tsetlin_index::tm::params::TMParams;
+use tsetlin_index::tm::trainer::Trainer;
+use tsetlin_index::util::{BitVec, Rng};
+
+fn tmi() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_tmi"))
+}
+
+fn free_port() -> u16 {
+    let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    l.local_addr().unwrap().port()
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "tmi-online-{tag}-{}-{}",
+        std::process::id(),
+        std::thread::current().name().unwrap_or("t").replace("::", "-")
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn trained(seed: u64) -> MultiClassTM {
+    let params = TMParams::new(2, 16, 12).with_seed(seed);
+    let mut tr = Trainer::new(params, Backend::Indexed);
+    let mut rng = Rng::new(seed ^ 0x5eed);
+    let samples: Vec<(BitVec, usize)> = (0..120)
+        .map(|_| {
+            let y = rng.bern(0.5) as usize;
+            let bits: Vec<bool> = (0..12)
+                .map(|k| if k == 0 { y == 1 } else { rng.bern(0.4) })
+                .collect();
+            let mut lits = bits.clone();
+            lits.extend(bits.iter().map(|b| !b));
+            (BitVec::from_bools(&lits), y)
+        })
+        .collect();
+    for _ in 0..2 {
+        tr.train_epoch(samples.iter().map(|(l, y)| (l, *y)));
+    }
+    tr.tm
+}
+
+fn bits_string(bools: &[bool]) -> String {
+    bools.iter().map(|b| if *b { '1' } else { '0' }).collect()
+}
+
+/// Block until the server answers `line` with an `ok …` reply.
+fn wait_ready(addr: &str, line: &str) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while Instant::now() < deadline {
+        if let Some(reply) = request_once(addr, line) {
+            if reply.starts_with("ok ") {
+                return;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    panic!("server at {addr} never answered '{}'", line.trim_end());
+}
+
+/// One request over a fresh connection; `None` on any transport error.
+fn request_once(addr: &str, line: &str) -> Option<String> {
+    let stream = TcpStream::connect(addr).ok()?;
+    stream.set_read_timeout(Some(Duration::from_secs(5))).ok()?;
+    let mut reader = BufReader::new(stream.try_clone().ok()?);
+    let mut stream = stream;
+    stream.write_all(line.as_bytes()).ok()?;
+    let mut reply = String::new();
+    reader.read_line(&mut reply).ok()?;
+    (!reply.is_empty()).then_some(reply)
+}
+
+/// One request on an established session (strictly request-ordered).
+fn request(stream: &mut TcpStream, reader: &mut BufReader<TcpStream>, line: &str) -> String {
+    stream.write_all(line.as_bytes()).unwrap();
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    reply
+}
+
+fn stat_get(stats: &str, key: &str) -> Option<String> {
+    let prefix = format!("{key}=");
+    stats
+        .split_whitespace()
+        .find_map(|t| t.strip_prefix(prefix.as_str()).map(str::to_string))
+}
+
+/// Poll `stats <model>` until its digest equals `want` (publishes
+/// happen on the learner thread after the ack, so digest equality is
+/// eventually consistent); returns the final stats line.
+fn poll_digest(addr: &str, model: &str, want: u32) -> String {
+    let line = format!("stats {model}\n");
+    let deadline = Instant::now() + Duration::from_secs(15);
+    let mut last = String::new();
+    while Instant::now() < deadline {
+        if let Some(reply) = request_once(addr, &line) {
+            if stat_get(&reply, "digest") == Some(want.to_string()) {
+                return reply;
+            }
+            last = reply;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    panic!("served digest never reached {want}; last stats: {}", last.trim_end());
+}
+
+#[test]
+fn interleaved_online_feedback_is_bit_identical_to_offline_replay() {
+    let dir = temp_dir("bitident");
+    let tm = trained(7);
+    let model_path = dir.join("model.tm");
+    io::save(&tm, model_path.to_str().unwrap()).unwrap();
+
+    // labeled events in the exact order they will arrive (one
+    // connection => arrival order is send order)
+    let mut rng = Rng::new(99);
+    let events: Vec<(usize, Vec<bool>)> = (0..35)
+        .map(|_| {
+            let label = rng.below(2) as usize;
+            let bools: Vec<bool> = (0..12).map(|_| rng.bern(0.5)).collect();
+            (label, bools)
+        })
+        .collect();
+
+    let port = free_port();
+    let addr = format!("127.0.0.1:{port}");
+    let mut server = tmi()
+        .args([
+            "serve",
+            "--model",
+            model_path.to_str().unwrap(),
+            "--feedback",
+            "--publish-every",
+            "1",
+            "--publish-interval",
+            "0",
+            "--listen",
+            &addr,
+        ])
+        .spawn()
+        .unwrap();
+    let probe = format!("infer cpu {}\n", bits_string(&events[0].1));
+    wait_ready(&addr, &probe);
+
+    let stream = TcpStream::connect(&addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut stream = stream;
+
+    // phase 1: 30 interleaved infer+feedback, then one 3-example train
+    for (label, bools) in &events[..30] {
+        let bits = bits_string(bools);
+        let infer = request(&mut stream, &mut reader, &format!("infer cpu {bits}\n"));
+        assert!(infer.starts_with("ok "), "infer under live learning: {infer}");
+        let fb = request(
+            &mut stream,
+            &mut reader,
+            &format!("feedback cpu {label} {bits}\n"),
+        );
+        assert_eq!(fb.trim_end(), "ok applied=1", "feedback reply: {fb}");
+    }
+    let batch: Vec<String> = events[30..33]
+        .iter()
+        .map(|(l, b)| format!("{l}:{}", bits_string(b)))
+        .collect();
+    let train = request(
+        &mut stream,
+        &mut reader,
+        &format!("train cpu {}\n", batch.join(" ")),
+    );
+    assert_eq!(train.trim_end(), "ok applied=3", "train reply: {train}");
+
+    // offline comparator: the same machine, the same events, in
+    // arrival order, through a plain Trainer (virgin streams — plain
+    // --model serving never reseeds)
+    let mut offline = Trainer::from_machine(io::load(model_path.to_str().unwrap()).unwrap(), Backend::Indexed);
+    for (label, bools) in &events[..33] {
+        offline.train_sample(&Dataset::literals_from_bools(bools), *label);
+    }
+    let stats = poll_digest(&addr, "cpu", io::model_digest(&offline.tm));
+    assert_eq!(stat_get(&stats, "feedback_applied"), Some("33".into()));
+    assert_eq!(stat_get(&stats, "feedback_errors"), Some("0".into()));
+
+    // phase 2: two more events — digests can only stay equal if the
+    // trainer's RNG streams are positioned exactly where the offline
+    // replay's are after phase 1
+    for (label, bools) in &events[33..] {
+        let fb = request(
+            &mut stream,
+            &mut reader,
+            &format!("feedback cpu {label} {}\n", bits_string(bools)),
+        );
+        assert_eq!(fb.trim_end(), "ok applied=1");
+        offline.train_sample(&Dataset::literals_from_bools(bools), *label);
+    }
+    let stats = poll_digest(&addr, "cpu", io::model_digest(&offline.tm));
+    assert_eq!(stat_get(&stats, "feedback_applied"), Some("35".into()));
+    // every publish bumped the route's swap generation monotonically
+    let generation: u64 = stat_get(&stats, "generation").unwrap().parse().unwrap();
+    assert!(generation >= 35, "expected >=35 swaps, saw {generation}");
+
+    server.kill().unwrap();
+    server.wait().unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn kill_nine_mid_feedback_replays_wal_to_exact_digest() {
+    let dir = temp_dir("kill9wal");
+    let reg_dir = dir.join("registry");
+    // publish v1 through the real CLI (mnist synthetic: 784 features,
+    // 10 classes)
+    let out = tmi()
+        .args([
+            "train", "--dataset", "mnist", "--samples", "120", "--clauses", "80",
+            "--epochs", "1", "--registry", reg_dir.to_str().unwrap(), "--route", "cpu",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "train --registry failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    let mut rng = Rng::new(4242);
+    let events: Vec<(usize, Vec<bool>)> = (0..6)
+        .map(|_| {
+            let label = rng.below(10) as usize;
+            let bools: Vec<bool> = (0..784).map(|_| rng.bern(0.1)).collect();
+            (label, bools)
+        })
+        .collect();
+
+    let port = free_port();
+    let addr = format!("127.0.0.1:{port}");
+    // publish cadence far beyond the event count: every event lives
+    // only in the WAL when the process dies
+    let serve_args = |a: &str| {
+        vec![
+            "serve".to_string(),
+            "--registry".into(),
+            reg_dir.to_str().unwrap().into(),
+            "--feedback".into(),
+            "--publish-every".into(),
+            "1000000".into(),
+            "--publish-interval".into(),
+            "0".into(),
+            "--listen".into(),
+            a.to_string(),
+        ]
+    };
+    let mut server = tmi().args(serve_args(&addr)).spawn().unwrap();
+    let probe = format!("infer cpu {}\n", bits_string(&events[0].1));
+    wait_ready(&addr, &probe);
+
+    let stream = TcpStream::connect(&addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut stream = stream;
+    for (label, bools) in &events {
+        let fb = request(
+            &mut stream,
+            &mut reader,
+            &format!("feedback cpu {label} {}\n", bits_string(bools)),
+        );
+        assert_eq!(fb.trim_end(), "ok applied=1", "feedback reply: {fb}");
+    }
+    // no drain, no final publish: everything since v1 is only in the WAL
+    server.kill().unwrap();
+    server.wait().unwrap();
+
+    // offline replay of the restart discipline: recover v1, reseed to
+    // its RNG epoch, apply the logged events in order
+    let expected = {
+        let mut reg = Registry::open(&reg_dir, 4).unwrap();
+        let rec = reg.load_published("cpu").unwrap();
+        assert_eq!(rec.version, 1, "no durable publish may have happened");
+        let mut offline = Trainer::from_machine(rec.tm, Backend::Indexed);
+        let base_seed = offline.tm.params.seed;
+        offline.reseed_streams(reseed_seed(base_seed, rec.version));
+        for (label, bools) in &events {
+            offline.train_sample(&Dataset::literals_from_bools(bools), *label);
+        }
+        io::model_digest(&offline.tm)
+    };
+
+    let port = free_port();
+    let addr = format!("127.0.0.1:{port}");
+    let mut server = tmi().args(serve_args(&addr)).spawn().unwrap();
+    wait_ready(&addr, &probe);
+    let stats = request_once(&addr, "stats cpu\n").unwrap();
+    assert_eq!(
+        stat_get(&stats, "digest"),
+        Some(expected.to_string()),
+        "WAL replay must restore the exact pre-crash machine: {}",
+        stats.trim_end()
+    );
+    // the replayed state was republished durably as v2 and the WAL
+    // truncated (its updates are owned by the published snapshot)
+    assert_eq!(stat_get(&stats, "version"), Some("2".into()));
+    let wal = reg_dir.join("cpu/feedback.wal");
+    assert!(wal.exists(), "WAL file must exist next to the snapshots");
+    assert_eq!(std::fs::metadata(&wal).unwrap().len(), 0, "WAL must be truncated");
+
+    // learning resumes after recovery
+    let (label, bools) = &events[0];
+    let fb = request_once(&addr, &format!("feedback cpu {label} {}\n", bits_string(bools)));
+    assert_eq!(fb.unwrap().trim_end(), "ok applied=1");
+
+    server.kill().unwrap();
+    server.wait().unwrap();
+
+    // the registry itself still verifies clean after crash + replay
+    let out = tmi()
+        .args(["registry", "verify", "--registry", reg_dir.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "registry verify failed: {}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
