@@ -25,9 +25,22 @@
 //! loses nothing: restart reloads the last durable snapshot, reseeds
 //! the trainer's RNG streams to the same epoch ([`reseed_seed`]), and
 //! replays the log — landing on the exact pre-crash machine. Durable
-//! publishes truncate the log (the published snapshot owns those
-//! updates) and advance the RNG epoch on both the live and the
+//! publishes sync the log, truncate it (the published snapshot owns
+//! those updates), and advance the RNG epoch on both the live and the
 //! restart path, keeping the two aligned.
+//!
+//! Truncation is *idempotent* with respect to the published version:
+//! every WAL record is stamped with the registry version it is based
+//! on, and [`replay_feedback`] skips records below the recovered
+//! snapshot's version. A crash between the registry publish and the
+//! truncate — or a truncate that outright fails — therefore cannot
+//! double-apply updates the published snapshot already owns.
+//!
+//! Per-append durability is process-crash-only (OS page cache); the
+//! sync at each durable publish bounds power-loss exposure to the
+//! updates since the last publish, and `--wal-fsync`
+//! ([`crate::registry::FeedbackWal::set_sync_on_append`]) closes even
+//! that window.
 
 use std::collections::VecDeque;
 use std::sync::atomic::Ordering;
@@ -57,6 +70,11 @@ pub struct OnlineConfig {
     /// Size of the recent-accuracy drift window (predict-before-apply
     /// correctness over the last N examples).
     pub window: usize,
+    /// fsync every WAL append before acking (`--wal-fsync`): feedback
+    /// survives power loss, not just `kill -9`, at a per-event latency
+    /// cost. Default off — the sync at each durable publish already
+    /// bounds power-loss exposure to the since-last-publish window.
+    pub wal_fsync: bool,
 }
 
 impl Default for OnlineConfig {
@@ -66,6 +84,7 @@ impl Default for OnlineConfig {
             publish_interval: Some(Duration::from_millis(500)),
             queue_cap: 1024,
             window: 256,
+            wal_fsync: false,
         }
     }
 }
@@ -136,23 +155,51 @@ pub fn reseed_seed(base_seed: u64, version: u64) -> u64 {
     base_seed ^ version.wrapping_mul(0x9E37_79B9_7F4A_7C15)
 }
 
+/// What [`replay_feedback`] did with each recovered WAL record.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ReplaySummary {
+    /// Records applied to the recovered trainer, in log order.
+    pub applied: u64,
+    /// Records stamped with a version below the recovered snapshot's:
+    /// the published snapshot already owns these updates (the crash
+    /// window between registry publish and WAL truncate), so replaying
+    /// them would double-apply. Expected after such a crash — benign.
+    pub stale: u64,
+    /// Records with an out-of-range label or wrong literal width — a
+    /// foreign or corrupt log. Never expected; surface to the operator
+    /// before the log is truncated away.
+    pub skipped: u64,
+}
+
 /// Apply replayed WAL records to a recovered trainer in log order
-/// (the restart path, before serving resumes). Returns how many were
-/// applied; records with an out-of-range label (a foreign or stale
-/// log) are skipped.
-pub fn replay_feedback(trainer: &mut Trainer, records: &[FeedbackRecord]) -> u64 {
+/// (the restart path, before serving resumes). `recovered_version` is
+/// the registry version the trainer was recovered from: records
+/// stamped below it are counted [`ReplaySummary::stale`] and skipped
+/// (that snapshot already owns them — truncation idempotence);
+/// records with an out-of-range label or wrong width (a foreign log)
+/// are counted [`ReplaySummary::skipped`].
+pub fn replay_feedback(
+    trainer: &mut Trainer,
+    records: &[FeedbackRecord],
+    recovered_version: u64,
+) -> ReplaySummary {
     let classes = trainer.tm.classes();
     let n_literals = trainer.tm.params.n_literals();
-    let mut applied = 0u64;
+    let mut summary = ReplaySummary::default();
     for rec in records {
+        if rec.version < recovered_version {
+            summary.stale += 1;
+            continue;
+        }
         let label = rec.label as usize;
         if label >= classes || rec.literals.len() != n_literals {
+            summary.skipped += 1;
             continue;
         }
         trainer.train_sample(&rec.literals, label);
-        applied += 1;
+        summary.applied += 1;
     }
-    applied
+    summary
 }
 
 struct FeedbackMsg {
@@ -302,6 +349,19 @@ fn learner_loop(
         if *since == 0 {
             return;
         }
+        // durable-publish boundary: force the log to stable storage
+        // before the registry publish, so across power loss every
+        // update is owned by a published snapshot or a synced record.
+        // A sync failure is journaled but doesn't block the publish —
+        // the snapshot about to be published owns these updates.
+        if let Some(w) = wal.as_mut() {
+            if let Err(e) = w.sync() {
+                journal().emit(EventKind::RouteFailed {
+                    route: route.clone(),
+                    error: format!("wal sync: {e}"),
+                });
+            }
+        }
         match publish(trainer, *since) {
             Ok(rep) => {
                 metrics.publishes.fetch_add(1, Ordering::Relaxed);
@@ -316,6 +376,13 @@ fn learner_loop(
                 *last = Instant::now();
                 if rep.durable {
                     if let Some(w) = wal.as_mut() {
+                        // advance the stamp *before* truncating: even
+                        // if truncate fails (or we crash before it),
+                        // records at the old stamp are below the
+                        // published version and replay skips them —
+                        // no double-apply, and the next durable
+                        // publish retries the truncate.
+                        w.set_version(rep.version);
                         if let Err(e) = w.truncate() {
                             journal().emit(EventKind::RouteFailed {
                                 route: route.clone(),
@@ -392,7 +459,15 @@ fn learner_loop(
             metrics.record_stage(Stage::Feedback, t0.elapsed());
         }
         let _ = fb.resp.send(Ok(()));
-        if cfg.publish_every > 0 && since_publish >= cfg.publish_every {
+        // evaluate BOTH triggers here, not just the count: under a
+        // continuous stream the channel is never empty, the Timeout
+        // arm never runs, and an interval-only cadence
+        // (--publish-every 0) would otherwise never publish
+        let count_due = cfg.publish_every > 0 && since_publish >= cfg.publish_every;
+        let timer_due = cfg
+            .publish_interval
+            .is_some_and(|interval| last_publish.elapsed() >= interval);
+        if count_due || timer_due {
             do_publish(&mut trainer, &mut wal, &mut since_publish, &mut last_publish);
         }
     }
@@ -541,16 +616,26 @@ mod tests {
         let mut records: Vec<FeedbackRecord> = samples
             .iter()
             .map(|(l, y)| FeedbackRecord {
+                version: 1,
                 label: *y as u32,
                 literals: l.clone(),
             })
             .collect();
         // a foreign record (bad width) must be skipped, not applied
         records.push(FeedbackRecord {
+            version: 1,
             label: 0,
             literals: BitVec::zeros(4),
         });
-        assert_eq!(replay_feedback(&mut recovered, &records), 40);
+        let summary = replay_feedback(&mut recovered, &records, 1);
+        assert_eq!(
+            summary,
+            ReplaySummary {
+                applied: 40,
+                stale: 0,
+                skipped: 1
+            }
+        );
         for c in 0..2 {
             assert_eq!(
                 offline.tm.bank(c).states(),
@@ -558,5 +643,106 @@ mod tests {
                 "class {c} diverged after replay"
             );
         }
+    }
+
+    #[test]
+    fn replay_skips_records_owned_by_the_recovered_snapshot() {
+        // the crash window between registry publish and WAL truncate:
+        // the log still holds records the published snapshot already
+        // owns (stamped with the *previous* version). Replay against
+        // the recovered version must skip them — applying them again
+        // would silently produce a different machine — while records
+        // stamped at the recovered version still apply, in order.
+        let samples = toy_samples(30, 17);
+        let (owned, fresh) = samples.split_at(20);
+        let mut records: Vec<FeedbackRecord> = owned
+            .iter()
+            .map(|(l, y)| FeedbackRecord {
+                version: 1, // based on v1, folded into the published v2
+                label: *y as u32,
+                literals: l.clone(),
+            })
+            .collect();
+        records.extend(fresh.iter().map(|(l, y)| FeedbackRecord {
+            version: 2, // appended after v2 published: not yet owned
+            label: *y as u32,
+            literals: l.clone(),
+        }));
+        let mut offline = toy_trainer(5);
+        for (l, y) in fresh {
+            offline.train_sample(l, *y);
+        }
+        let mut recovered = toy_trainer(5);
+        let summary = replay_feedback(&mut recovered, &records, 2);
+        assert_eq!(
+            summary,
+            ReplaySummary {
+                applied: 10,
+                stale: 20,
+                skipped: 0
+            }
+        );
+        for c in 0..2 {
+            assert_eq!(
+                offline.tm.bank(c).states(),
+                recovered.tm.bank(c).states(),
+                "class {c} diverged: a stale record was double-applied"
+            );
+        }
+        // idempotence: replaying a fully-owned log is a no-op
+        let before: Vec<Vec<i8>> = (0..2).map(|c| recovered.tm.bank(c).states()).collect();
+        let summary = replay_feedback(&mut recovered, &records[..20], 2);
+        assert_eq!(summary.applied, 0);
+        assert_eq!(summary.stale, 20);
+        for c in 0..2 {
+            assert_eq!(recovered.tm.bank(c).states(), before[c]);
+        }
+    }
+
+    #[test]
+    fn interval_trigger_fires_under_a_continuous_stream() {
+        // regression: with --publish-every 0 (interval-only cadence)
+        // and a stream that keeps the channel busy, the Timeout arm of
+        // the receive loop never runs — the interval must also be
+        // checked on the apply path or the learner never publishes
+        let metrics = Arc::new(Metrics::new());
+        let publish: PublishFn = Box::new(|tr, _| {
+            let snap = tr.publish();
+            Ok(PublishReport {
+                version: snap.version(),
+                generation: 0,
+                durable: false,
+            })
+        });
+        let learner = OnlineLearner::spawn(
+            "toy",
+            toy_trainer(5),
+            None,
+            publish,
+            Arc::clone(&metrics),
+            OnlineConfig {
+                publish_every: 0,
+                publish_interval: Some(Duration::from_millis(10)),
+                ..OnlineConfig::default()
+            },
+        );
+        let sender = learner.sender();
+        let samples = toy_samples(16, 19);
+        // submit back-to-back (each ack returns in far less than the
+        // 10 ms interval, so the channel stays hot) for ~6 intervals
+        let start = Instant::now();
+        while start.elapsed() < Duration::from_millis(60) {
+            for (l, y) in &samples {
+                sender.submit(*y, l.clone()).unwrap();
+            }
+        }
+        learner.shutdown();
+        let s = metrics.snapshot();
+        // at least one cadence publish beyond the final drain publish
+        assert!(
+            s.publishes >= 2,
+            "interval-only cadence never published under load (publishes={})",
+            s.publishes
+        );
     }
 }

@@ -455,6 +455,7 @@ fn parse_online_config(args: &Args) -> Result<OnlineConfig> {
         },
         queue_cap: args.parse_or("feedback-queue-cap", d.queue_cap)?,
         window: args.parse_or("drift-window", d.window)?,
+        wal_fsync: args.has_flag("wal-fsync"),
     })
 }
 
@@ -808,6 +809,7 @@ fn cmd_serve_registry(args: &Args) -> Result<()> {
                     let wal_path = FeedbackWal::route_path(&dir.join(&name));
                     let (mut wal, replay) = FeedbackWal::open(&wal_path)
                         .with_context(|| format!("opening feedback WAL {}", wal_path.display()))?;
+                    wal.set_sync_on_append(online_cfg.wal_fsync);
                     let mut trainer = Trainer::from_machine(serve_tm.clone(), Backend::Indexed)
                         .with_infer_mode(rec.infer);
                     let base_seed = trainer.tm.params.seed;
@@ -819,23 +821,57 @@ fn cmd_serve_registry(args: &Args) -> Result<()> {
                         );
                     }
                     if !replay.records.is_empty() {
-                        let applied = replay_feedback(&mut trainer, &replay.records);
+                        let summary =
+                            replay_feedback(&mut trainer, &replay.records, serve_version);
                         journal().emit(EventKind::WalReplay {
                             route: name.clone(),
-                            records: applied,
+                            records: summary.applied,
+                            stale: summary.stale,
+                            skipped: summary.skipped,
                         });
-                        let v = registry.publish(&name, &trainer.tm, rec.infer)?;
-                        wal.truncate().with_context(|| {
-                            format!("truncating replayed WAL {}", wal_path.display())
-                        })?;
-                        trainer.reseed_streams(reseed_seed(base_seed, v));
-                        eprintln!(
-                            "registry: route '{name}': replayed {applied} feedback record(s) \
-                             from WAL -> published v{v}"
-                        );
-                        serve_tm = trainer.tm.clone();
-                        serve_version = v;
+                        if summary.stale > 0 {
+                            eprintln!(
+                                "registry: route '{name}': skipped {} WAL record(s) already \
+                                 owned by recovered v{serve_version} (publish-before-truncate \
+                                 crash window; benign)",
+                                summary.stale
+                            );
+                        }
+                        if summary.skipped > 0 {
+                            eprintln!(
+                                "registry: route '{name}': WARNING: skipped {} foreign/corrupt \
+                                 WAL record(s) (bad label or literal width) in {} — is this \
+                                 another route's log?",
+                                summary.skipped,
+                                wal_path.display()
+                            );
+                        }
+                        if summary.applied > 0 {
+                            let v = registry.publish(&name, &trainer.tm, rec.infer)?;
+                            wal.truncate().with_context(|| {
+                                format!("truncating replayed WAL {}", wal_path.display())
+                            })?;
+                            trainer.reseed_streams(reseed_seed(base_seed, v));
+                            eprintln!(
+                                "registry: route '{name}': replayed {} feedback record(s) \
+                                 from WAL -> published v{v}",
+                                summary.applied
+                            );
+                            serve_tm = trainer.tm.clone();
+                            serve_version = v;
+                        } else if summary.skipped == 0 {
+                            // every record is owned by the recovered
+                            // snapshot: retry the truncate the crash
+                            // interrupted — no republish needed
+                            wal.truncate().with_context(|| {
+                                format!("truncating stale WAL {}", wal_path.display())
+                            })?;
+                        }
+                        // foreign-only logs are left in place (evidence
+                        // for the operator); the learner's next durable
+                        // publish truncates them
                     }
+                    wal.set_version(serve_version);
                     pending.push((name.clone(), trainer, wal, rec.infer));
                 }
                 let snap = Arc::new(ModelSnapshot::with_mode(serve_tm, serve_version, rec.infer));
@@ -1424,6 +1460,9 @@ const USAGE: &str = "usage: tmi <train|eval|table|work-ratio|serve|loadgen|promc
                                        pending; 0 = off; default 500)
              [--feedback-queue-cap N] (feedback admission bound, default 1024)
              [--drift-window N]       (recent-accuracy window, default 256)
+             [--wal-fsync]    (fsync each feedback WAL append before the ack:
+                               survive power loss, not just kill -9; default
+                               off — publishes always sync the log)
              [--watch]        (hot-swap on change, zero downtime: with --model,
                                poll the file's content digest; with --registry,
                                poll the manifest generation; exclusive with

@@ -61,8 +61,17 @@ pub enum EventKind {
         updates: u64,
     },
     /// Restart replayed `records` feedback-WAL events into the route's
-    /// recovered trainer before serving resumed.
-    WalReplay { route: String, records: u64 },
+    /// recovered trainer before serving resumed. `stale` counts
+    /// records the recovered snapshot already owned (skipped — the
+    /// publish-before-truncate crash window, benign); `skipped` counts
+    /// foreign/corrupt records (bad label or width — operator-visible
+    /// before the log is truncated away).
+    WalReplay {
+        route: String,
+        records: u64,
+        stale: u64,
+        skipped: u64,
+    },
     /// The serve loop began draining (signal or shutdown).
     Drain { reason: String },
 }
@@ -147,8 +156,13 @@ impl EventKind {
                     " version={version} generation={generation} updates={updates}"
                 );
             }
-            EventKind::WalReplay { records, .. } => {
-                let _ = write!(out, " records={records}");
+            EventKind::WalReplay {
+                records,
+                stale,
+                skipped,
+                ..
+            } => {
+                let _ = write!(out, " records={records} stale={stale} skipped={skipped}");
             }
             EventKind::Drain { reason } => {
                 let _ = write!(out, " reason={}", quote(reason));
@@ -381,6 +395,8 @@ mod tests {
         j.emit(EventKind::WalReplay {
             route: "cpu".into(),
             records: 12,
+            stale: 3,
+            skipped: 1,
         });
         let evs = j.snapshot();
         assert_eq!(evs[0].kind.name(), "feedback_publish");
@@ -389,7 +405,9 @@ mod tests {
             .to_line()
             .contains("kind=feedback_publish route=cpu version=3 generation=7 updates=64"));
         assert_eq!(evs[1].kind.name(), "wal_replay");
-        assert!(evs[1].to_line().contains("kind=wal_replay route=cpu records=12"));
+        assert!(evs[1]
+            .to_line()
+            .contains("kind=wal_replay route=cpu records=12 stale=3 skipped=1"));
     }
 
     #[test]

@@ -18,17 +18,35 @@
 //!
 //! ```text
 //! record := len:u32le  crc:u32le  payload[len]
-//! payload := label:u32le  n_bits:u32le  bits[ceil(n_bits/8)]
+//! payload := version:u64le  label:u32le  n_bits:u32le  bits[ceil(n_bits/8)]
 //! ```
 //!
-//! `bits` packs the *literal* vector exactly as handed to
-//! [`crate::tm::Trainer::train_sample`] (bit `i` is bit `i % 8` of
-//! byte `i / 8`), so replay reconstructs the training input without
-//! re-deriving `[x, ¬x]` from feature bits. `crc` is CRC-32 over the
-//! payload ([`crate::util::crc32`], same polynomial as the model file
-//! format). A torn tail — truncated header, short payload, or CRC
-//! mismatch, all expected outcomes of `kill -9` mid-append — is
-//! detected on open and truncated away; everything before it replays.
+//! `version` is the registry version of the last durable publish at
+//! append time ([`FeedbackWal::set_version`]): the snapshot the update
+//! is *based on*. It makes truncation idempotent — replay skips
+//! records whose version is below the recovered snapshot's (a crash
+//! between registry publish and [`FeedbackWal::truncate`] leaves
+//! records the published snapshot already owns; without the stamp they
+//! would be applied a second time). `bits` packs the *literal* vector
+//! exactly as handed to [`crate::tm::Trainer::train_sample`] (bit `i`
+//! is bit `i % 8` of byte `i / 8`), so replay reconstructs the
+//! training input without re-deriving `[x, ¬x]` from feature bits.
+//! `crc` is CRC-32 over the payload ([`crate::util::crc32`], same
+//! polynomial as the model file format). A torn tail — truncated
+//! header, short payload, or CRC mismatch, all expected outcomes of
+//! `kill -9` mid-append — is detected on open and truncated away;
+//! everything before it replays.
+//!
+//! ## Durability
+//!
+//! Plain appends flush to the OS page cache only — that is exactly the
+//! `kill -9` (process crash) guarantee; it does **not** survive power
+//! loss or a kernel crash. [`FeedbackWal::sync`] is called at durable
+//! publish boundaries, so across power loss every update is owned by
+//! either a published snapshot or a synced log record, bar the window
+//! since the last publish. [`FeedbackWal::set_sync_on_append`]
+//! (`--wal-fsync`) closes that window too by fsyncing every append,
+//! at a per-event latency cost.
 
 use std::fs::{File, OpenOptions};
 use std::io::{Read, Seek, SeekFrom, Write};
@@ -44,9 +62,14 @@ pub const WAL_FILE: &str = "feedback.wal";
 const MAX_PAYLOAD: u32 = 1 << 22;
 
 /// One durably logged feedback event: the label and the literal
-/// vector exactly as applied to the trainer.
+/// vector exactly as applied to the trainer, stamped with the registry
+/// version of the snapshot the update is based on.
 #[derive(Clone, Debug, PartialEq)]
 pub struct FeedbackRecord {
+    /// Last durably published registry version at append time; replay
+    /// skips records below the recovered snapshot's version (already
+    /// owned by it).
+    pub version: u64,
     pub label: u32,
     pub literals: BitVec,
 }
@@ -68,6 +91,12 @@ pub struct FeedbackWal {
     /// Records currently in the log (replayed + appended since the
     /// last truncate).
     records: u64,
+    /// Version stamped onto appended records: the last durably
+    /// published registry version ([`FeedbackWal::set_version`]).
+    version: u64,
+    /// Opt-in fsync-per-append (`--wal-fsync`): survive power loss,
+    /// not just `kill -9`.
+    sync_on_append: bool,
 }
 
 impl FeedbackWal {
@@ -107,22 +136,49 @@ impl FeedbackWal {
                 file,
                 path: path.to_path_buf(),
                 records,
+                version: 0,
+                sync_on_append: false,
             },
             replay,
         ))
     }
 
+    /// Set the version stamped onto subsequent appends: the registry
+    /// version of the last durable publish (the snapshot the updates
+    /// are based on). Call after opening (recovered version) and after
+    /// every durable publish — even a failed [`FeedbackWal::truncate`]
+    /// then stays benign, because replay skips the stale records.
+    pub fn set_version(&mut self, version: u64) {
+        self.version = version;
+    }
+
+    /// Version currently stamped onto appends.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Opt into fsync-per-append (`--wal-fsync`): every append reaches
+    /// stable storage before the caller acks, surviving power loss —
+    /// default off, where appends survive `kill -9` only.
+    pub fn set_sync_on_append(&mut self, on: bool) {
+        self.sync_on_append = on;
+    }
+
     /// Append one event and flush it to the OS before returning —
     /// the caller applies the update to the trainer only after this
-    /// succeeds (WAL-first ordering makes `kill -9` replay exact).
+    /// succeeds (WAL-first ordering makes `kill -9` replay exact; with
+    /// [`FeedbackWal::set_sync_on_append`] the event is also fsynced).
     pub fn append(&mut self, label: u32, literals: &BitVec) -> std::io::Result<()> {
-        let payload = encode_payload(label, literals);
+        let payload = encode_payload(self.version, label, literals);
         let mut frame = Vec::with_capacity(8 + payload.len());
         frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
         frame.extend_from_slice(&crc32(&payload).to_le_bytes());
         frame.extend_from_slice(&payload);
         self.file.write_all(&frame)?;
         self.file.flush()?;
+        if self.sync_on_append {
+            self.file.sync_data()?;
+        }
         self.records += 1;
         Ok(())
     }
@@ -152,9 +208,10 @@ impl FeedbackWal {
     }
 }
 
-fn encode_payload(label: u32, literals: &BitVec) -> Vec<u8> {
+fn encode_payload(version: u64, label: u32, literals: &BitVec) -> Vec<u8> {
     let n_bits = literals.len();
-    let mut payload = Vec::with_capacity(8 + n_bits.div_ceil(8));
+    let mut payload = Vec::with_capacity(16 + n_bits.div_ceil(8));
+    payload.extend_from_slice(&version.to_le_bytes());
     payload.extend_from_slice(&label.to_le_bytes());
     payload.extend_from_slice(&(n_bits as u32).to_le_bytes());
     let mut byte = 0u8;
@@ -191,12 +248,13 @@ fn parse_record(bytes: &[u8], offset: usize) -> Option<(FeedbackRecord, usize)> 
 }
 
 fn decode_payload(payload: &[u8]) -> Option<FeedbackRecord> {
-    if payload.len() < 8 {
+    if payload.len() < 16 {
         return None;
     }
-    let label = u32::from_le_bytes(payload[0..4].try_into().unwrap());
-    let n_bits = u32::from_le_bytes(payload[4..8].try_into().unwrap()) as usize;
-    let packed = payload.get(8..)?;
+    let version = u64::from_le_bytes(payload[0..8].try_into().unwrap());
+    let label = u32::from_le_bytes(payload[8..12].try_into().unwrap());
+    let n_bits = u32::from_le_bytes(payload[12..16].try_into().unwrap()) as usize;
+    let packed = payload.get(16..)?;
     if packed.len() != n_bits.div_ceil(8) {
         return None;
     }
@@ -206,7 +264,11 @@ fn decode_payload(payload: &[u8]) -> Option<FeedbackRecord> {
             literals.set(i);
         }
     }
-    Some(FeedbackRecord { label, literals })
+    Some(FeedbackRecord {
+        version,
+        label,
+        literals,
+    })
 }
 
 #[cfg(test)]
@@ -235,7 +297,9 @@ mod tests {
         assert_eq!(replay.truncated_bytes, 0);
         let a = lits(&[true, false, true, true, false, false, true, false, true]);
         let b = lits(&[false; 16]);
+        wal.set_version(3);
         wal.append(1, &a).unwrap();
+        wal.set_version(4);
         wal.append(0, &b).unwrap();
         assert_eq!(wal.records(), 2);
         drop(wal);
@@ -243,8 +307,16 @@ mod tests {
         assert_eq!(wal.records(), 2);
         assert_eq!(replay.truncated_bytes, 0);
         assert_eq!(replay.records.len(), 2);
-        assert_eq!(replay.records[0], FeedbackRecord { label: 1, literals: a });
-        assert_eq!(replay.records[1], FeedbackRecord { label: 0, literals: b });
+        // the per-record version stamp round-trips: it is what lets
+        // replay skip records an already-published snapshot owns
+        assert_eq!(
+            replay.records[0],
+            FeedbackRecord { version: 3, label: 1, literals: a }
+        );
+        assert_eq!(
+            replay.records[1],
+            FeedbackRecord { version: 4, label: 0, literals: b }
+        );
     }
 
     #[test]

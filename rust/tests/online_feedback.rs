@@ -20,10 +20,11 @@ use std::path::PathBuf;
 use std::process::Command;
 use std::time::{Duration, Instant};
 
-use tsetlin_index::coordinator::online::reseed_seed;
+use tsetlin_index::coordinator::online::{replay_feedback, reseed_seed};
 use tsetlin_index::data::Dataset;
+use tsetlin_index::engine::InferMode;
 use tsetlin_index::eval::Backend;
-use tsetlin_index::registry::Registry;
+use tsetlin_index::registry::{FeedbackWal, Registry};
 use tsetlin_index::tm::classifier::MultiClassTM;
 use tsetlin_index::tm::io;
 use tsetlin_index::tm::params::TMParams;
@@ -232,6 +233,87 @@ fn interleaved_online_feedback_is_bit_identical_to_offline_replay() {
 
     server.kill().unwrap();
     server.wait().unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// The truncation-idempotence crash window: the learner's durable
+/// publish persists the snapshot to the registry and *then* truncates
+/// the WAL. A `kill -9` between the two leaves records in the log
+/// that the published snapshot already owns — replay must skip them
+/// (per-record version stamp below the recovered version), or the
+/// restart silently lands on a different machine than the one that
+/// crashed. Exercised in-process with the exact restart discipline
+/// `tmi serve --registry --feedback` runs.
+#[test]
+fn crash_between_publish_and_truncate_does_not_double_apply() {
+    let dir = temp_dir("pubcrash");
+    let reg_dir = dir.join("registry");
+    let base = trained(21);
+    let base_seed = base.params.seed;
+    let n_feat = base.params.features;
+    let mut reg = Registry::open(&reg_dir, 4).unwrap();
+    assert_eq!(reg.publish("cpu", &base, InferMode::Auto).unwrap(), 1);
+
+    let mut rng = Rng::new(77);
+    let events: Vec<(usize, Vec<bool>)> = (0..25)
+        .map(|_| {
+            let label = rng.below(2) as usize;
+            let bools: Vec<bool> = (0..n_feat).map(|_| rng.bern(0.5)).collect();
+            (label, bools)
+        })
+        .collect();
+
+    // live learner discipline: WAL-first appends at the v1 stamp, then
+    // a durable publish of v2 ... and a crash before wal.truncate()
+    let mut live = Trainer::from_machine(base, Backend::Indexed);
+    live.reseed_streams(reseed_seed(base_seed, 1));
+    let wal_path = FeedbackWal::route_path(&reg_dir.join("cpu"));
+    let (mut wal, _) = FeedbackWal::open(&wal_path).unwrap();
+    wal.set_version(1);
+    for (label, bools) in &events {
+        let lits = Dataset::literals_from_bools(bools);
+        wal.append(*label as u32, &lits).unwrap();
+        live.train_sample(&lits, *label);
+    }
+    wal.sync().unwrap();
+    assert_eq!(reg.publish("cpu", &live.tm, InferMode::Auto).unwrap(), 2);
+    let pre_crash = io::model_digest(&live.tm);
+    drop(wal); // kill -9: no truncate, no version advance
+    drop(reg);
+
+    // restart discipline (what cmd_serve_registry does before serving)
+    let mut reg = Registry::open(&reg_dir, 4).unwrap();
+    let rec = reg.load_published("cpu").unwrap();
+    assert_eq!(rec.version, 2, "the durable publish must have landed");
+    let mut recovered = Trainer::from_machine(rec.tm, Backend::Indexed);
+    recovered.reseed_streams(reseed_seed(base_seed, rec.version));
+    let (_, replay) = FeedbackWal::open(&wal_path).unwrap();
+    assert_eq!(replay.records.len(), events.len());
+    // sanity: without the version stamp the records WOULD replay onto
+    // v2 and produce a different machine — the bug this test pins
+    {
+        let mut doubled = Trainer::from_machine(
+            reg.load_published("cpu").unwrap().tm,
+            Backend::Indexed,
+        );
+        doubled.reseed_streams(reseed_seed(base_seed, rec.version));
+        let naive = replay_feedback(&mut doubled, &replay.records, 1);
+        assert_eq!(naive.applied, events.len() as u64);
+        assert_ne!(
+            io::model_digest(&doubled.tm),
+            pre_crash,
+            "double-applying owned records must be observable"
+        );
+    }
+    let summary = replay_feedback(&mut recovered, &replay.records, rec.version);
+    assert_eq!(summary.applied, 0, "v2 already owns every logged record");
+    assert_eq!(summary.stale, events.len() as u64);
+    assert_eq!(summary.skipped, 0);
+    assert_eq!(
+        io::model_digest(&recovered.tm),
+        pre_crash,
+        "restart must land on the exact pre-crash machine"
+    );
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
