@@ -1,0 +1,806 @@
+//! The cluster control plane (`tmi control`): node liveness via
+//! heartbeats with missed-beat eviction and re-admission, snapshot
+//! replication from the durable registry to the owning nodes, and a
+//! `cluster` protocol verb exposing the whole picture.
+//!
+//! Liveness: every [`ControlConfig::heartbeat`] the plane `ping`s each
+//! configured node. A node that misses
+//! [`ControlConfig::miss_threshold`] consecutive beats is evicted from
+//! the serving set (`node_evict` journal event) — owners are re-picked
+//! from the ring's next replicas, a bounded reshuffle. The first
+//! successful ping re-admits it (`node_up`) and forces a full
+//! re-replication of its routes, since its state is unknown.
+//!
+//! Replication: the plane polls the registry manifest generation and
+//! pushes each route's published version — the registry's checksummed
+//! `io` v3 byte image, shipped verbatim — to every owner that doesn't
+//! have it yet. The node re-verifies the CRC before installing
+//! ([`crate::cluster::node::NodeState::install`]), so a transfer torn
+//! or corrupted anywhere between registry disk and node memory is
+//! refused and retried on a later tick, never served. A `swap`
+//! (publish) therefore propagates cluster-wide without torn versions.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::{Duration, Instant};
+
+use crate::cluster::ring::Ring;
+use crate::engine::InferMode;
+use crate::obs::prometheus::PromWriter;
+use crate::obs::{journal, EventKind};
+use crate::registry::{read_generation, Registry};
+use crate::util::crc32;
+
+/// One configured node: `id@host:port` on the CLI.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NodeSpec {
+    pub id: String,
+    pub addr: String,
+}
+
+impl NodeSpec {
+    /// Parse `id@host:port`.
+    pub fn parse(s: &str) -> Result<NodeSpec, String> {
+        let (id, addr) = s
+            .split_once('@')
+            .ok_or_else(|| format!("bad node spec '{s}': expected id@host:port"))?;
+        if id.is_empty() || addr.is_empty() || id.contains(char::is_whitespace) {
+            return Err(format!("bad node spec '{s}': expected id@host:port"));
+        }
+        Ok(NodeSpec {
+            id: id.to_string(),
+            addr: addr.to_string(),
+        })
+    }
+
+    /// Parse a comma-separated list of specs.
+    pub fn parse_list(s: &str) -> Result<Vec<NodeSpec>, String> {
+        let specs: Vec<NodeSpec> = s
+            .split(',')
+            .filter(|t| !t.trim().is_empty())
+            .map(|t| NodeSpec::parse(t.trim()))
+            .collect::<Result<_, _>>()?;
+        if specs.is_empty() {
+            return Err("empty node list".to_string());
+        }
+        Ok(specs)
+    }
+}
+
+/// Control-plane knobs.
+#[derive(Clone, Debug)]
+pub struct ControlConfig {
+    pub nodes: Vec<NodeSpec>,
+    /// Registry directory replication reads from.
+    pub registry_dir: PathBuf,
+    /// Heartbeat cadence.
+    pub heartbeat: Duration,
+    /// Consecutive missed beats before eviction.
+    pub miss_threshold: u32,
+    /// Owners per route (primary + failover replicas).
+    pub replicas: usize,
+    /// Per-probe connect/read timeout.
+    pub probe_timeout: Duration,
+    /// Per-push connect/read/write timeout (whole-image transfers).
+    pub push_timeout: Duration,
+    /// Virtual points per node on the ring.
+    pub vnodes: u32,
+}
+
+impl ControlConfig {
+    pub fn new(nodes: Vec<NodeSpec>, registry_dir: impl Into<PathBuf>) -> ControlConfig {
+        ControlConfig {
+            nodes,
+            registry_dir: registry_dir.into(),
+            heartbeat: Duration::from_millis(500),
+            miss_threshold: 3,
+            replicas: 2,
+            probe_timeout: Duration::from_millis(500),
+            push_timeout: Duration::from_secs(10),
+            vnodes: Ring::DEFAULT_VNODES,
+        }
+    }
+}
+
+/// One node's health as the control plane sees it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NodeView {
+    pub id: String,
+    pub addr: String,
+    /// In the serving set (answering heartbeats).
+    pub alive: bool,
+    /// Current consecutive missed-beat streak.
+    pub missed: u64,
+    /// Lifetime missed beats (Prometheus counter).
+    pub missed_total: u64,
+    /// Lifetime successful heartbeats.
+    pub beats: u64,
+    /// Successful replication pushes to this node.
+    pub replications: u64,
+    /// Failed/refused replication pushes to this node.
+    pub replication_failures: u64,
+}
+
+/// One route's placement.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RouteView {
+    pub name: String,
+    /// Published version being replicated.
+    pub version: u64,
+    /// Owners in ring order (alive nodes only).
+    pub owners: Vec<String>,
+}
+
+/// Snapshot of cluster state, served by the `cluster` verb and the
+/// control plane's `metrics` exposition.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ClusterView {
+    pub nodes: Vec<NodeView>,
+    pub routes: Vec<RouteView>,
+    /// Registry manifest generation last replicated from.
+    pub generation: u64,
+}
+
+impl ClusterView {
+    pub fn alive(&self) -> usize {
+        self.nodes.iter().filter(|n| n.alive).count()
+    }
+
+    /// Count-prefixed wire form: a header naming how many `node` and
+    /// `route` lines follow, so line-protocol clients know exactly how
+    /// much to read.
+    pub fn to_wire(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = format!(
+            "ok nodes={} alive={} routes={} generation={}\n",
+            self.nodes.len(),
+            self.alive(),
+            self.routes.len(),
+            self.generation
+        );
+        for n in &self.nodes {
+            let state = if n.alive { "up" } else { "down" };
+            let _ = writeln!(
+                out,
+                "node id={} addr={} state={state} missed={} beats={}",
+                n.id, n.addr, n.missed, n.beats
+            );
+        }
+        for r in &self.routes {
+            let _ = writeln!(
+                out,
+                "route name={} version={} owners={}",
+                r.name,
+                r.version,
+                r.owners.join(",")
+            );
+        }
+        out
+    }
+
+    /// Parse the wire form back (the router's membership poll).
+    pub fn from_wire(header: &str, lines: &[String]) -> Result<ClusterView, String> {
+        let fields = kv_fields(header.trim().strip_prefix("ok ").unwrap_or(header.trim()));
+        let generation = fields
+            .get("generation")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0);
+        let mut view = ClusterView {
+            generation,
+            ..ClusterView::default()
+        };
+        for line in lines {
+            let line = line.trim();
+            if let Some(rest) = line.strip_prefix("node ") {
+                let f = kv_fields(rest);
+                view.nodes.push(NodeView {
+                    id: f.get("id").cloned().ok_or("node line missing id")?,
+                    addr: f.get("addr").cloned().ok_or("node line missing addr")?,
+                    alive: f.get("state").map(|s| s == "up").unwrap_or(false),
+                    missed: f.get("missed").and_then(|v| v.parse().ok()).unwrap_or(0),
+                    missed_total: 0,
+                    beats: f.get("beats").and_then(|v| v.parse().ok()).unwrap_or(0),
+                    replications: 0,
+                    replication_failures: 0,
+                });
+            } else if let Some(rest) = line.strip_prefix("route ") {
+                let f = kv_fields(rest);
+                view.routes.push(RouteView {
+                    name: f.get("name").cloned().ok_or("route line missing name")?,
+                    version: f.get("version").and_then(|v| v.parse().ok()).unwrap_or(0),
+                    owners: f
+                        .get("owners")
+                        .map(|o| {
+                            o.split(',')
+                                .filter(|s| !s.is_empty())
+                                .map(str::to_string)
+                                .collect()
+                        })
+                        .unwrap_or_default(),
+                });
+            }
+        }
+        Ok(view)
+    }
+}
+
+fn kv_fields(s: &str) -> HashMap<String, String> {
+    s.split_whitespace()
+        .filter_map(|tok| tok.split_once('='))
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect()
+}
+
+/// Per-node Prometheus exposition for the control plane's `metrics`
+/// verb — the per-node labels the single-process exposition cannot
+/// carry.
+pub fn render_cluster_prometheus(view: &ClusterView) -> String {
+    let mut w = PromWriter::new();
+    w.header("tmi_node_up", "Node liveness as seen by heartbeats (1 = serving set).", "gauge");
+    for n in &view.nodes {
+        w.int_sample("tmi_node_up", &[("node", &n.id)], u64::from(n.alive));
+    }
+    w.header("tmi_heartbeats_total", "Successful heartbeat probes per node.", "counter");
+    for n in &view.nodes {
+        w.int_sample("tmi_heartbeats_total", &[("node", &n.id)], n.beats);
+    }
+    w.header("tmi_missed_beats_total", "Missed heartbeat probes per node.", "counter");
+    for n in &view.nodes {
+        w.int_sample("tmi_missed_beats_total", &[("node", &n.id)], n.missed_total);
+    }
+    w.header(
+        "tmi_replications_total",
+        "Snapshot replication pushes installed per node.",
+        "counter",
+    );
+    for n in &view.nodes {
+        w.int_sample("tmi_replications_total", &[("node", &n.id)], n.replications);
+    }
+    w.header(
+        "tmi_replication_failures_total",
+        "Replication pushes refused or failed per node (retried).",
+        "counter",
+    );
+    for n in &view.nodes {
+        w.int_sample(
+            "tmi_replication_failures_total",
+            &[("node", &n.id)],
+            n.replication_failures,
+        );
+    }
+    w.header(
+        "tmi_cluster_generation",
+        "Registry manifest generation last replicated from.",
+        "gauge",
+    );
+    w.int_sample("tmi_cluster_generation", &[], view.generation);
+    w.finish()
+}
+
+/// Push one snapshot image to a node over the line protocol:
+/// `replicate <route> <version> <infer> <len>` + raw bytes, then wait
+/// for the node's verdict line. `Ok` is the node's `ok replicated ...`
+/// reply; any transport failure or `err ...` reply is `Err`.
+pub fn push_snapshot(
+    addr: &str,
+    route: &str,
+    version: u64,
+    infer: InferMode,
+    image: &[u8],
+    timeout: Duration,
+) -> Result<String, String> {
+    let sock = resolve(addr)?;
+    let mut stream =
+        TcpStream::connect_timeout(&sock, timeout).map_err(|e| format!("connect {addr}: {e}"))?;
+    stream
+        .set_write_timeout(Some(timeout))
+        .and_then(|()| stream.set_read_timeout(Some(timeout)))
+        .map_err(|e| format!("socket setup {addr}: {e}"))?;
+    let header = format!("replicate {route} {version} {} {}\n", infer.name(), image.len());
+    stream
+        .write_all(header.as_bytes())
+        .and_then(|()| stream.write_all(image))
+        .map_err(|e| format!("send {addr}: {e}"))?;
+    let mut reply = String::new();
+    BufReader::new(stream)
+        .read_line(&mut reply)
+        .map_err(|e| format!("reply {addr}: {e}"))?;
+    if reply.ends_with('\n') && reply.starts_with("ok ") {
+        Ok(reply.trim_end().to_string())
+    } else {
+        Err(format!("node {addr} refused: {}", reply.trim_end()))
+    }
+}
+
+/// One-line liveness probe.
+pub fn ping(addr: &str, timeout: Duration) -> Result<String, String> {
+    let sock = resolve(addr)?;
+    let mut stream =
+        TcpStream::connect_timeout(&sock, timeout).map_err(|e| format!("connect {addr}: {e}"))?;
+    stream
+        .set_write_timeout(Some(timeout))
+        .and_then(|()| stream.set_read_timeout(Some(timeout)))
+        .map_err(|e| format!("socket setup {addr}: {e}"))?;
+    stream
+        .write_all(b"ping\n")
+        .map_err(|e| format!("send {addr}: {e}"))?;
+    let mut reply = String::new();
+    BufReader::new(stream)
+        .read_line(&mut reply)
+        .map_err(|e| format!("reply {addr}: {e}"))?;
+    if reply.ends_with('\n') && reply.starts_with("ok ") {
+        Ok(reply.trim_end().to_string())
+    } else {
+        Err(format!("bad pong from {addr}: {}", reply.trim_end()))
+    }
+}
+
+fn resolve(addr: &str) -> Result<std::net::SocketAddr, String> {
+    addr.to_socket_addrs()
+        .map_err(|e| format!("resolve {addr}: {e}"))?
+        .next()
+        .ok_or_else(|| format!("resolve {addr}: no address"))
+}
+
+/// One replication source: the registry's published image for a route.
+struct RouteSrc {
+    infer: InferMode,
+    version: u64,
+    file: PathBuf,
+    crc: u32,
+}
+
+/// The control plane. Heartbeats and replication run in
+/// [`ControlPlane::run`] (or step-wise via [`ControlPlane::tick`]);
+/// the shared [`ClusterView`] feeds [`serve_control`].
+pub struct ControlPlane {
+    cfg: ControlConfig,
+    ring: Ring,
+    view: Arc<Mutex<ClusterView>>,
+    /// (node id, route) -> version last installed there.
+    pushed: HashMap<(String, String), u64>,
+    /// Replication sources from the registry manifest.
+    sources: HashMap<String, RouteSrc>,
+    gen_seen: Option<u64>,
+    /// Nodes never yet seen alive don't journal `node_evict` — they
+    /// were never admitted.
+    ever_up: HashMap<String, bool>,
+}
+
+impl ControlPlane {
+    pub fn new(cfg: ControlConfig) -> ControlPlane {
+        let ids: Vec<&str> = cfg.nodes.iter().map(|n| n.id.as_str()).collect();
+        let ring = Ring::with_vnodes(&ids, cfg.vnodes);
+        let view = ClusterView {
+            nodes: cfg
+                .nodes
+                .iter()
+                .map(|n| NodeView {
+                    id: n.id.clone(),
+                    addr: n.addr.clone(),
+                    // optimistic until the first probe: routes get
+                    // owners immediately, and a wrong guess costs one
+                    // failed push that retries after eviction
+                    alive: true,
+                    missed: 0,
+                    missed_total: 0,
+                    beats: 0,
+                    replications: 0,
+                    replication_failures: 0,
+                })
+                .collect(),
+            routes: Vec::new(),
+            generation: 0,
+        };
+        ControlPlane {
+            cfg,
+            ring,
+            view: Arc::new(Mutex::new(view)),
+            pushed: HashMap::new(),
+            sources: HashMap::new(),
+            gen_seen: None,
+            ever_up: HashMap::new(),
+        }
+    }
+
+    /// The shared view handle for [`serve_control`].
+    pub fn shared_view(&self) -> Arc<Mutex<ClusterView>> {
+        Arc::clone(&self.view)
+    }
+
+    /// A point-in-time copy of the cluster state.
+    pub fn view(&self) -> ClusterView {
+        self.view.lock().unwrap_or_else(PoisonError::into_inner).clone()
+    }
+
+    /// Heartbeat + replicate until `stop`, pacing by the configured
+    /// heartbeat interval (checked in small sleeps so shutdown is
+    /// prompt).
+    pub fn run(&mut self, stop: &AtomicBool) {
+        while !stop.load(Ordering::Relaxed) {
+            let t0 = Instant::now();
+            self.tick();
+            while t0.elapsed() < self.cfg.heartbeat && !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_millis(10).min(self.cfg.heartbeat));
+            }
+        }
+    }
+
+    /// One control iteration: probe every node, refresh replication
+    /// sources from the registry, push missing versions to owners.
+    pub fn tick(&mut self) {
+        self.probe_nodes();
+        self.sync_registry();
+        self.replicate();
+    }
+
+    fn probe_nodes(&mut self) {
+        let mut view = self.view.lock().unwrap_or_else(PoisonError::into_inner);
+        for node in view.nodes.iter_mut() {
+            match ping(&node.addr, self.cfg.probe_timeout) {
+                Ok(_) => {
+                    node.beats += 1;
+                    node.missed = 0;
+                    let first_up = !self.ever_up.get(&node.id).copied().unwrap_or(false);
+                    if !node.alive || first_up {
+                        // first sighting or re-admission after eviction
+                        journal().emit(EventKind::NodeUp {
+                            node: node.id.clone(),
+                        });
+                        node.alive = true;
+                        // its state is unknown — re-replicate everything
+                        let id = node.id.clone();
+                        self.pushed.retain(|(n, _), _| *n != id);
+                    }
+                    self.ever_up.insert(node.id.clone(), true);
+                }
+                Err(_) => {
+                    node.missed += 1;
+                    node.missed_total += 1;
+                    if node.alive {
+                        journal().emit(EventKind::NodeDown {
+                            node: node.id.clone(),
+                            missed: node.missed,
+                        });
+                        if node.missed >= u64::from(self.cfg.miss_threshold) {
+                            node.alive = false;
+                            if self.ever_up.get(&node.id).copied().unwrap_or(false) {
+                                journal().emit(EventKind::NodeEvict {
+                                    node: node.id.clone(),
+                                    missed: node.missed,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn sync_registry(&mut self) {
+        let dir = self.cfg.registry_dir.clone();
+        let gen = read_generation(&dir);
+        if gen.is_none() || gen == self.gen_seen {
+            return;
+        }
+        let Ok(registry) = Registry::open(&dir, crate::registry::store::DEFAULT_RETAIN) else {
+            return; // transient manifest trouble: keep old sources
+        };
+        self.sources.clear();
+        for (name, entry) in registry.routes() {
+            let v = entry
+                .versions
+                .iter()
+                .find(|v| v.version == entry.published)
+                .or_else(|| entry.versions.last());
+            if let Some(v) = v {
+                self.sources.insert(
+                    name.to_string(),
+                    RouteSrc {
+                        infer: entry.infer,
+                        version: v.version,
+                        file: dir.join(&v.file),
+                        crc: v.crc32,
+                    },
+                );
+            }
+        }
+        self.gen_seen = Some(registry.generation());
+        let mut view = self.view.lock().unwrap_or_else(PoisonError::into_inner);
+        view.generation = registry.generation();
+    }
+
+    fn replicate(&mut self) {
+        let (alive_ids, addr_of): (Vec<String>, HashMap<String, String>) = {
+            let view = self.view.lock().unwrap_or_else(PoisonError::into_inner);
+            (
+                view.nodes.iter().filter(|n| n.alive).map(|n| n.id.clone()).collect(),
+                view.nodes.iter().map(|n| (n.id.clone(), n.addr.clone())).collect(),
+            )
+        };
+        let mut placements: Vec<RouteView> = Vec::new();
+        let mut route_names: Vec<&String> = self.sources.keys().collect();
+        route_names.sort();
+        for name in route_names {
+            let src = &self.sources[name];
+            // walk the full ring order, keep the first `replicas`
+            // alive owners — eviction slides ownership to the next
+            // replica instead of reshuffling the ring
+            let owners: Vec<String> = self
+                .ring
+                .replicas(name, self.ring.len())
+                .into_iter()
+                .filter(|id| alive_ids.iter().any(|a| a == id))
+                .take(self.cfg.replicas.max(1))
+                .map(str::to_string)
+                .collect();
+            for owner in &owners {
+                let key = (owner.clone(), name.clone());
+                if self.pushed.get(&key) == Some(&src.version) {
+                    continue;
+                }
+                let Some(addr) = addr_of.get(owner) else { continue };
+                match self.push_route(addr, name, src) {
+                    Ok(()) => {
+                        self.pushed.insert(key, src.version);
+                        journal().emit(EventKind::Replicate {
+                            node: owner.clone(),
+                            route: name.clone(),
+                            version: src.version,
+                        });
+                        self.bump(owner, |n| n.replications += 1);
+                    }
+                    Err(_) => self.bump(owner, |n| n.replication_failures += 1),
+                }
+            }
+            placements.push(RouteView {
+                name: name.clone(),
+                version: src.version,
+                owners,
+            });
+        }
+        let mut view = self.view.lock().unwrap_or_else(PoisonError::into_inner);
+        view.routes = placements;
+    }
+
+    fn push_route(&self, addr: &str, route: &str, src: &RouteSrc) -> Result<(), String> {
+        let image = std::fs::read(&src.file).map_err(|e| format!("read {:?}: {e}", src.file))?;
+        // pre-flight the registry's own digest: a damaged source file
+        // must not travel — the node would refuse it anyway, but this
+        // keeps the failure local and the reason exact
+        if crc32(&image) != src.crc {
+            return Err(format!("source image for {route} fails its manifest CRC"));
+        }
+        push_snapshot(addr, route, src.version, src.infer, &image, self.cfg.push_timeout)
+            .map(|_| ())
+    }
+
+    fn bump(&self, node_id: &str, f: impl FnOnce(&mut NodeView)) {
+        let mut view = self.view.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(n) = view.nodes.iter_mut().find(|n| n.id == node_id) {
+            f(n);
+        }
+    }
+}
+
+/// Serve the control-plane verbs — `cluster`, `ping`, `metrics` — on a
+/// listener. Runs until `stop`; connections are handled inline (a
+/// reply is one render and one write, like the metrics scrape loop).
+pub fn serve_control(
+    listener: TcpListener,
+    view: Arc<Mutex<ClusterView>>,
+    stop: Arc<AtomicBool>,
+) -> std::io::Result<()> {
+    listener.set_nonblocking(true)?;
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _addr)) => {
+                let view = Arc::clone(&view);
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    let _ = control_conn(stream, &view, &stop);
+                });
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+fn control_conn(
+    stream: TcpStream,
+    view: &Mutex<ClusterView>,
+    stop: &AtomicBool,
+) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(100)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = loop {
+            match reader.read_line(&mut line) {
+                Ok(n) => break n,
+                Err(ref e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    if stop.load(Ordering::Relaxed) {
+                        return Ok(());
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        };
+        if n == 0 || !line.ends_with('\n') {
+            return Ok(());
+        }
+        let snapshot = || view.lock().unwrap_or_else(PoisonError::into_inner).clone();
+        let reply = match line.trim() {
+            "cluster" => snapshot().to_wire(),
+            "ping" => {
+                let v = snapshot();
+                format!("ok pong control nodes={} alive={}\n", v.nodes.len(), v.alive())
+            }
+            "metrics" => render_cluster_prometheus(&snapshot()),
+            other => format!("err unknown verb '{}': control serves cluster|ping|metrics\n", {
+                let mut o = other.to_string();
+                o.truncate(32);
+                o
+            }),
+        };
+        stream.write_all(reply.as_bytes())?;
+    }
+}
+
+/// Fetch and parse a `cluster` reply — the router's membership poll.
+pub fn fetch_cluster_view(addr: &str, timeout: Duration) -> Result<ClusterView, String> {
+    let sock = resolve(addr)?;
+    let mut stream =
+        TcpStream::connect_timeout(&sock, timeout).map_err(|e| format!("connect {addr}: {e}"))?;
+    stream
+        .set_write_timeout(Some(timeout))
+        .and_then(|()| stream.set_read_timeout(Some(timeout)))
+        .map_err(|e| format!("socket setup {addr}: {e}"))?;
+    stream
+        .write_all(b"cluster\n")
+        .map_err(|e| format!("send {addr}: {e}"))?;
+    let mut reader = BufReader::new(stream);
+    let mut header = String::new();
+    reader
+        .read_line(&mut header)
+        .map_err(|e| format!("reply {addr}: {e}"))?;
+    if !header.ends_with('\n') || !header.starts_with("ok ") {
+        return Err(format!("bad cluster reply from {addr}: {}", header.trim_end()));
+    }
+    let fields = kv_fields(header.trim().strip_prefix("ok ").unwrap_or(""));
+    let count = |k: &str| fields.get(k).and_then(|v| v.parse::<usize>().ok()).unwrap_or(0);
+    let expect = count("nodes") + count("routes");
+    let mut lines = Vec::with_capacity(expect);
+    for _ in 0..expect {
+        let mut l = String::new();
+        reader
+            .read_line(&mut l)
+            .map_err(|e| format!("reply {addr}: {e}"))?;
+        if !l.ends_with('\n') {
+            return Err(format!("truncated cluster reply from {addr}"));
+        }
+        lines.push(l);
+    }
+    ClusterView::from_wire(&header, &lines)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_spec_parses_and_rejects() {
+        let n = NodeSpec::parse("n1@127.0.0.1:7101").unwrap();
+        assert_eq!((n.id.as_str(), n.addr.as_str()), ("n1", "127.0.0.1:7101"));
+        assert!(NodeSpec::parse("no-at-sign").is_err());
+        assert!(NodeSpec::parse("@addr").is_err());
+        assert!(NodeSpec::parse("id@").is_err());
+        let list = NodeSpec::parse_list("a@x:1, b@y:2").unwrap();
+        assert_eq!(list.len(), 2);
+        assert!(NodeSpec::parse_list("").is_err());
+    }
+
+    #[test]
+    fn cluster_view_roundtrips_through_the_wire_form() {
+        let view = ClusterView {
+            nodes: vec![
+                NodeView {
+                    id: "n1".into(),
+                    addr: "127.0.0.1:7101".into(),
+                    alive: true,
+                    missed: 0,
+                    missed_total: 2,
+                    beats: 40,
+                    replications: 3,
+                    replication_failures: 1,
+                },
+                NodeView {
+                    id: "n2".into(),
+                    addr: "127.0.0.1:7102".into(),
+                    alive: false,
+                    missed: 5,
+                    missed_total: 5,
+                    beats: 12,
+                    replications: 2,
+                    replication_failures: 0,
+                },
+            ],
+            routes: vec![RouteView {
+                name: "cpu".into(),
+                version: 4,
+                owners: vec!["n1".into()],
+            }],
+            generation: 9,
+        };
+        let wire = view.to_wire();
+        assert!(wire.starts_with("ok nodes=2 alive=1 routes=1 generation=9\n"));
+        let mut lines = wire.lines();
+        let header = lines.next().unwrap().to_string();
+        let body: Vec<String> = lines.map(|l| format!("{l}\n")).collect();
+        let parsed = ClusterView::from_wire(&header, &body).unwrap();
+        assert_eq!(parsed.generation, 9);
+        assert_eq!(parsed.nodes.len(), 2);
+        assert_eq!(parsed.nodes[0].id, "n1");
+        assert!(parsed.nodes[0].alive);
+        assert!(!parsed.nodes[1].alive);
+        assert_eq!(parsed.routes[0].owners, vec!["n1".to_string()]);
+        assert_eq!(parsed.routes[0].version, 4);
+    }
+
+    #[test]
+    fn probes_evict_after_threshold_and_track_counters() {
+        // nothing listens on this port: every probe misses
+        let mut cfg = ControlConfig::new(
+            vec![NodeSpec::parse("dead@127.0.0.1:1").unwrap()],
+            std::env::temp_dir().join("tmi-ctl-none"),
+        );
+        cfg.probe_timeout = Duration::from_millis(50);
+        cfg.miss_threshold = 2;
+        let mut plane = ControlPlane::new(cfg);
+        plane.probe_nodes();
+        let v = plane.view();
+        assert!(v.nodes[0].alive, "one miss must not evict at threshold 2");
+        assert_eq!(v.nodes[0].missed, 1);
+        plane.probe_nodes();
+        let v = plane.view();
+        assert!(!v.nodes[0].alive, "threshold crossed");
+        assert_eq!(v.nodes[0].missed_total, 2);
+        assert_eq!(v.alive(), 0);
+    }
+
+    #[test]
+    fn prometheus_exposition_carries_node_labels() {
+        let mut view = ClusterView::default();
+        view.nodes.push(NodeView {
+            id: "n1".into(),
+            addr: "x".into(),
+            alive: true,
+            missed: 0,
+            missed_total: 7,
+            beats: 3,
+            replications: 2,
+            replication_failures: 1,
+        });
+        let text = render_cluster_prometheus(&view);
+        assert!(text.contains("tmi_node_up{node=\"n1\"} 1"));
+        assert!(text.contains("tmi_missed_beats_total{node=\"n1\"} 7"));
+        assert!(text.contains("tmi_replications_total{node=\"n1\"} 2"));
+        assert!(text.contains("tmi_replication_failures_total{node=\"n1\"} 1"));
+        assert!(text.ends_with("# EOF\n"));
+    }
+}

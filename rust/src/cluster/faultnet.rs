@@ -1,0 +1,316 @@
+//! Test-only TCP chaos proxy: sits between a client and one upstream
+//! and injects network faults on command — added latency, byte
+//! corruption, mid-stream truncation, immediate connection reset, and
+//! full blackhole (accept, then forward nothing). Drives the
+//! `tests/cluster_faults.rs` scenarios: a corrupted replication stream
+//! must be quarantined by the CRC check, a blackholed node must
+//! degrade to `err unavailable` instead of hanging, a partitioned
+//! control plane must leave nodes serving their last-known assignment.
+//!
+//! Hidden from docs like [`crate::coordinator::server::fault`]; this
+//! is harness machinery, not an operator surface.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// What the proxy does to connections accepted while the plan is
+/// installed. Mutating faults (`corrupt_at`, `truncate_after`) apply
+/// to the client→upstream byte stream, which is where a replication
+/// push travels; `delay` applies to both directions.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultPlan {
+    /// Sleep this long before forwarding each chunk.
+    pub delay: Duration,
+    /// Stop forwarding client→upstream bytes at this offset, then
+    /// close both ends — a torn transfer.
+    pub truncate_after: Option<u64>,
+    /// XOR one byte at this absolute client→upstream offset — a CRC
+    /// failure at the receiver without changing the stream length.
+    pub corrupt_at: Option<u64>,
+    /// Close accepted connections immediately, forwarding nothing.
+    pub reset: bool,
+    /// Accept and hold connections open without ever forwarding — the
+    /// client only escapes via its own timeout.
+    pub blackhole: bool,
+}
+
+/// A one-upstream chaos proxy. The plan is sampled per accepted
+/// connection, so flipping it affects new connections only.
+pub struct ChaosProxy {
+    addr: String,
+    plan: Arc<Mutex<FaultPlan>>,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ChaosProxy {
+    /// Bind an ephemeral local port and start proxying to `upstream`.
+    pub fn spawn(upstream: impl Into<String>) -> std::io::Result<ChaosProxy> {
+        let upstream = upstream.into();
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?.to_string();
+        listener.set_nonblocking(true)?;
+        let plan = Arc::new(Mutex::new(FaultPlan::default()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let plan_loop = Arc::clone(&plan);
+        let stop_loop = Arc::clone(&stop);
+        let accept = std::thread::Builder::new()
+            .name("tmi-chaos".to_string())
+            .spawn(move || accept_loop(listener, &upstream, &plan_loop, &stop_loop))
+            .expect("spawning chaos proxy thread");
+        Ok(ChaosProxy {
+            addr,
+            plan,
+            stop,
+            accept: Some(accept),
+        })
+    }
+
+    /// The proxy's listen address — point the client here.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Install a fault plan for subsequently accepted connections.
+    pub fn set(&self, plan: FaultPlan) {
+        *self.plan.lock().unwrap_or_else(PoisonError::into_inner) = plan;
+    }
+
+    /// Back to transparent forwarding.
+    pub fn heal(&self) {
+        self.set(FaultPlan::default());
+    }
+
+    /// Stop accepting and release the accept thread. Live connection
+    /// pumps notice the flag within their read-timeout tick.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ChaosProxy {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    upstream: &str,
+    plan: &Mutex<FaultPlan>,
+    stop: &Arc<AtomicBool>,
+) {
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((client, _)) => {
+                let plan = *plan.lock().unwrap_or_else(PoisonError::into_inner);
+                let upstream = upstream.to_string();
+                let stop = Arc::clone(stop);
+                std::thread::spawn(move || handle_conn(client, &upstream, plan, &stop));
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+fn handle_conn(client: TcpStream, upstream: &str, plan: FaultPlan, stop: &Arc<AtomicBool>) {
+    if plan.reset {
+        return; // drop closes the socket without a reply
+    }
+    if plan.blackhole {
+        // hold the socket open, forward nothing; the client's own
+        // deadline is its only way out
+        while !stop.load(Ordering::Relaxed) {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        return;
+    }
+    let Ok(up) = TcpStream::connect(upstream) else {
+        return;
+    };
+    let (Ok(c2), Ok(u2)) = (client.try_clone(), up.try_clone()) else {
+        return;
+    };
+    let stop_b = Arc::clone(stop);
+    let back = std::thread::spawn(move || pump(u2, c2, plan, false, &stop_b));
+    pump(client, up, plan, true, stop);
+    let _ = back.join();
+}
+
+/// Forward `r` into `w`, applying the plan. `mutate` is true on the
+/// client→upstream direction, where corruption/truncation apply.
+fn pump(mut r: TcpStream, mut w: TcpStream, plan: FaultPlan, mutate: bool, stop: &AtomicBool) {
+    let _ = r.set_read_timeout(Some(Duration::from_millis(50)));
+    let mut buf = [0u8; 4096];
+    let mut offset: u64 = 0;
+    while !stop.load(Ordering::Relaxed) {
+        match r.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => {
+                if plan.delay > Duration::ZERO {
+                    std::thread::sleep(plan.delay);
+                }
+                let chunk = &mut buf[..n];
+                if mutate {
+                    if let Some(at) = plan.corrupt_at {
+                        if at >= offset && at < offset + n as u64 {
+                            chunk[(at - offset) as usize] ^= 0xA5;
+                        }
+                    }
+                    if let Some(cut) = plan.truncate_after {
+                        if offset + n as u64 >= cut {
+                            let keep = cut.saturating_sub(offset) as usize;
+                            let _ = w.write_all(&chunk[..keep]);
+                            break;
+                        }
+                    }
+                }
+                offset += n as u64;
+                if w.write_all(chunk).is_err() {
+                    break;
+                }
+            }
+            Err(ref e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) => {}
+            Err(_) => break,
+        }
+    }
+    // unblock the peer pump: a half-open proxy would hide the fault
+    let _ = r.shutdown(Shutdown::Both);
+    let _ = w.shutdown(Shutdown::Both);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, BufReader};
+
+    /// A tiny line-echo upstream for proxy tests.
+    fn echo_upstream() -> (String, Arc<AtomicBool>, JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().unwrap().to_string();
+        listener.set_nonblocking(true).unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_l = Arc::clone(&stop);
+        let t = std::thread::spawn(move || {
+            while !stop_l.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let mut reader = BufReader::new(stream.try_clone().unwrap());
+                        let mut stream = stream;
+                        let mut line = String::new();
+                        while reader.read_line(&mut line).map(|n| n > 0).unwrap_or(false) {
+                            if stream.write_all(line.as_bytes()).is_err() {
+                                break;
+                            }
+                            line.clear();
+                        }
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        (addr, stop, t)
+    }
+
+    fn roundtrip(addr: &str, line: &str, timeout: Duration) -> std::io::Result<String> {
+        let mut stream = TcpStream::connect(addr)?;
+        stream.set_read_timeout(Some(timeout))?;
+        stream.write_all(line.as_bytes())?;
+        let mut reader = BufReader::new(stream);
+        let mut reply = String::new();
+        reader.read_line(&mut reply)?;
+        Ok(reply)
+    }
+
+    #[test]
+    fn transparent_then_corrupting_then_healed() {
+        let (addr, stop, t) = echo_upstream();
+        let proxy = ChaosProxy::spawn(addr).expect("proxy");
+        let echoed = roundtrip(proxy.addr(), "hello\n", Duration::from_secs(2)).expect("echo");
+        assert_eq!(echoed, "hello\n");
+
+        proxy.set(FaultPlan {
+            corrupt_at: Some(1),
+            ..FaultPlan::default()
+        });
+        let corrupted = roundtrip(proxy.addr(), "hello\n", Duration::from_secs(2)).expect("echo");
+        assert_ne!(corrupted, "hello\n", "corruption plan forwarded bytes unchanged");
+
+        proxy.heal();
+        let healed = roundtrip(proxy.addr(), "hello\n", Duration::from_secs(2)).expect("echo");
+        assert_eq!(healed, "hello\n");
+
+        proxy.shutdown();
+        stop.store(true, Ordering::SeqCst);
+        let _ = t.join();
+    }
+
+    #[test]
+    fn blackhole_never_replies_and_reset_drops() {
+        let (addr, stop, t) = echo_upstream();
+        let proxy = ChaosProxy::spawn(addr).expect("proxy");
+        proxy.set(FaultPlan {
+            blackhole: true,
+            ..FaultPlan::default()
+        });
+        let r = roundtrip(proxy.addr(), "hello\n", Duration::from_millis(200));
+        assert!(
+            r.is_err() || r.as_deref() == Ok(""),
+            "blackholed request produced a reply: {r:?}"
+        );
+
+        proxy.set(FaultPlan {
+            reset: true,
+            ..FaultPlan::default()
+        });
+        let r = roundtrip(proxy.addr(), "hello\n", Duration::from_secs(2));
+        assert!(
+            r.is_err() || r.as_deref() == Ok(""),
+            "reset connection produced a reply: {r:?}"
+        );
+
+        proxy.shutdown();
+        stop.store(true, Ordering::SeqCst);
+        let _ = t.join();
+    }
+
+    #[test]
+    fn truncation_cuts_the_stream_at_the_offset() {
+        let (addr, stop, t) = echo_upstream();
+        let proxy = ChaosProxy::spawn(addr).expect("proxy");
+        proxy.set(FaultPlan {
+            truncate_after: Some(3),
+            ..FaultPlan::default()
+        });
+        // upstream only ever sees "hel" (no newline) — the echo never
+        // fires, and the proxy closes both ends
+        let r = roundtrip(proxy.addr(), "hello\n", Duration::from_secs(2));
+        assert!(
+            r.is_err() || r.as_deref() == Ok(""),
+            "truncated stream still produced a full reply: {r:?}"
+        );
+        proxy.shutdown();
+        stop.store(true, Ordering::SeqCst);
+        let _ = t.join();
+    }
+}

@@ -1,0 +1,36 @@
+//! Clustered serving: control plane + N nodes speaking the existing
+//! line protocol.
+//!
+//! The single-process server scales out without changing the client
+//! protocol or the on-disk formats:
+//!
+//! * [`ring`] — a deterministic consistent-hash ring maps route names
+//!   to nodes; membership changes reshuffle a bounded ~1/N of routes.
+//! * [`node`] — `tmi serve --node-id <id>` wraps the ordinary
+//!   coordinator with `ping` liveness and `replicate` snapshot pushes
+//!   (CRC-verified before install, torn transfers refused).
+//! * [`control`] — `tmi control` heartbeats every node, evicts on
+//!   missed beats, re-admits on recovery, and replicates the
+//!   registry's published images to each route's owners.
+//! * [`router`] — `tmi route` forwards client requests to the owning
+//!   node with a per-request deadline, backed-off failover across
+//!   replicas, and `err unavailable` (never a hang, never a torn
+//!   reply) when nobody can answer.
+//!
+//! [`faultnet`] is the TCP chaos proxy the fault-injection tests drive
+//! between these pieces; it is not part of the serving surface.
+
+pub mod control;
+#[doc(hidden)]
+pub mod faultnet;
+pub mod node;
+pub mod ring;
+pub mod router;
+
+pub use control::{
+    fetch_cluster_view, push_snapshot, serve_control, ClusterView, ControlConfig, ControlPlane,
+    NodeSpec, NodeView, RouteView,
+};
+pub use node::{serve_node, Installed, NodeOptions, NodeState};
+pub use ring::Ring;
+pub use router::{serve_router, Router, RouterConfig};

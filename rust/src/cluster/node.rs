@@ -1,0 +1,351 @@
+//! A cluster serving node: the single-process coordinator plus the
+//! wire surface the control plane drives — `ping` liveness probes and
+//! `replicate` snapshot pushes. Everything else on the port is the
+//! ordinary line protocol, answered by the node's own
+//! [`CoordinatorHandle`], so a node is a drop-in superset of
+//! `tmi serve`.
+//!
+//! Replication reuses the `io` v3 framing end to end: the control
+//! plane ships the registry's checksummed byte image verbatim, and the
+//! node re-verifies the CRC-32 footer before *anything* is installed.
+//! A torn or corrupted transfer is refused with `err truncated` /
+//! `err corrupt`, a [`EventKind::Quarantine`] journal event, and the
+//! previously serving version untouched — a swap propagates
+//! cluster-wide without torn versions, or not at all.
+
+use std::io::{BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, PoisonError, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::server::{
+    note_conn_rejected, read_protocol_line, respond_line, Coordinator, CoordinatorHandle,
+    LineRead, RouteConfig, ServeOptions,
+};
+use crate::engine::{InferMode, ModelSnapshot};
+use crate::obs::{journal, EventKind};
+use crate::tm::io as model_io;
+
+/// Largest accepted `replicate` body. Generous: a paper-scale model
+/// (MNIST, 8k clauses) serializes to a few tens of MiB.
+const MAX_REPLICATE_BYTES: u64 = 1 << 28;
+
+/// Node-side knobs beyond the base [`ServeOptions`].
+#[derive(Clone, Debug)]
+pub struct NodeOptions {
+    /// Cluster-unique node id (`--node-id`), echoed in `ping` replies
+    /// and journal events.
+    pub id: String,
+    /// Sizing for routes created by replication pushes.
+    pub route_config: RouteConfig,
+    /// Abandon a `replicate` body that stalls longer than this — the
+    /// connection is dropped and the control plane retries.
+    pub transfer_deadline: Duration,
+}
+
+impl NodeOptions {
+    pub fn new(id: impl Into<String>) -> NodeOptions {
+        NodeOptions {
+            id: id.into(),
+            route_config: RouteConfig::default(),
+            transfer_deadline: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Shared node state: the coordinator (locked only to create routes)
+/// and the handle connection threads actually serve from. The handle
+/// is regenerated after a route registration; swaps of existing routes
+/// go through the shared `SwapCell`, so readers never wait on the
+/// coordinator lock.
+pub struct NodeState {
+    opts: NodeOptions,
+    coord: Mutex<Option<Coordinator>>,
+    handle: RwLock<CoordinatorHandle>,
+}
+
+/// What a successful [`NodeState::install`] did.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Installed {
+    pub route: String,
+    pub version: u64,
+    /// Route swap generation after the install (0 = fresh route).
+    pub generation: u64,
+}
+
+impl NodeState {
+    /// Wrap a coordinator (possibly with pre-registered routes) as a
+    /// cluster node.
+    pub fn new(coord: Coordinator, opts: NodeOptions) -> NodeState {
+        let handle = coord.handle();
+        NodeState {
+            opts,
+            coord: Mutex::new(Some(coord)),
+            handle: RwLock::new(handle),
+        }
+    }
+
+    pub fn id(&self) -> &str {
+        &self.opts.id
+    }
+
+    /// The current routing handle (snapshots the route table).
+    pub fn handle(&self) -> CoordinatorHandle {
+        self.handle
+            .read()
+            .unwrap_or_else(PoisonError::into_inner)
+            .clone()
+    }
+
+    /// Verify and install a replicated snapshot image. The CRC check
+    /// runs over the complete image *before* any route state changes;
+    /// failures leave the serving version untouched and are journaled
+    /// as quarantines.
+    pub fn install(
+        &self,
+        route: &str,
+        version: u64,
+        infer: InferMode,
+        image: &[u8],
+    ) -> Result<Installed, String> {
+        let tm = model_io::load_from(&mut &image[..]).map_err(|e| {
+            journal().emit(EventKind::Quarantine {
+                route: route.to_string(),
+                version,
+                reason: e.to_string(),
+            });
+            match e {
+                model_io::ModelIoError::Truncated => format!("truncated: {e}"),
+                other => format!("corrupt: {other}"),
+            }
+        })?;
+        let snapshot = Arc::new(ModelSnapshot::with_mode(tm, version, infer));
+        let mut guard = self.coord.lock().unwrap_or_else(PoisonError::into_inner);
+        let Some(coord) = guard.as_mut() else {
+            return Err("node shutting down".to_string());
+        };
+        let known = coord.models().iter().any(|m| m == route);
+        if known {
+            coord.swap(route, snapshot).map_err(|e| e.to_string())?;
+        } else {
+            coord.register_model(route, snapshot, self.opts.route_config);
+            *self.handle.write().unwrap_or_else(PoisonError::into_inner) = coord.handle();
+        }
+        let generation = coord.stats(route).and_then(|st| st.generation).unwrap_or(0);
+        journal().emit(EventKind::Replicate {
+            node: self.opts.id.clone(),
+            route: route.to_string(),
+            version,
+        });
+        Ok(Installed {
+            route: route.to_string(),
+            version,
+            generation,
+        })
+    }
+
+    /// One-line `ping` reply: identity plus how many routes are live.
+    fn pong(&self) -> String {
+        let routes = self.handle().models().len();
+        format!("ok pong node={} routes={routes}\n", self.opts.id)
+    }
+
+    /// Count-prefixed node-local cluster view (the `cluster` verb on a
+    /// node port): identity line, then one line per served route.
+    fn cluster_view(&self) -> String {
+        use std::fmt::Write as _;
+        let handle = self.handle();
+        let models = handle.models();
+        let mut out = format!("ok node={} routes={}\n", self.opts.id, models.len());
+        for m in &models {
+            let st = handle.stats(m);
+            let opt = |v: Option<u64>| v.map(|v| v.to_string()).unwrap_or_else(|| "-".into());
+            let (v, g) = st
+                .map(|st| (opt(st.version), opt(st.generation)))
+                .unwrap_or_else(|| ("-".into(), "-".into()));
+            let _ = writeln!(out, "route name={m} version={v} generation={g}");
+        }
+        out
+    }
+
+    /// Close every route and join the workers (close-then-drain, as
+    /// [`Coordinator::shutdown`]).
+    pub fn shutdown(&self) {
+        let coord = self
+            .coord
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .take();
+        if let Some(c) = coord {
+            c.shutdown();
+        }
+    }
+}
+
+/// Serve the node protocol: the base line protocol plus `ping`,
+/// `cluster`, and `replicate`. Accept loop mirrors
+/// [`crate::coordinator::server::serve_tcp_with`] — nonblocking with a
+/// reaped connection cap answering `err busy` (counted in
+/// `conn_rejected`).
+pub fn serve_node(
+    listener: TcpListener,
+    node: Arc<NodeState>,
+    stop: Arc<AtomicBool>,
+    opts: ServeOptions,
+) -> std::io::Result<()> {
+    listener.set_nonblocking(true)?;
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _addr)) => {
+                conns.retain(|c| !c.is_finished());
+                if conns.len() >= opts.max_conns {
+                    note_conn_rejected();
+                    let mut stream = stream;
+                    let _ = stream.write_all(b"err busy: connection limit reached\n");
+                    continue;
+                }
+                let node = Arc::clone(&node);
+                let stop_conn = Arc::clone(&stop);
+                conns.push(std::thread::spawn(move || {
+                    let _ = node_conn(stream, &node, &stop_conn, opts.read_timeout);
+                }));
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    for c in conns {
+        let _ = c.join();
+    }
+    Ok(())
+}
+
+fn node_conn(
+    stream: TcpStream,
+    node: &NodeState,
+    stop: &Arc<AtomicBool>,
+    read_timeout: Duration,
+) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(read_timeout.max(Duration::from_millis(1))))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match read_protocol_line(&mut reader, &mut line, stop)? {
+            LineRead::Eof => return Ok(()),
+            LineRead::TooLong => {
+                stream.write_all(b"err line too long\n")?;
+                continue;
+            }
+            LineRead::Line => {}
+        }
+        let trimmed = line.trim();
+        if trimmed == "ping" {
+            stream.write_all(node.pong().as_bytes())?;
+            continue;
+        }
+        if trimmed == "cluster" {
+            stream.write_all(node.cluster_view().as_bytes())?;
+            continue;
+        }
+        if let Some(header) = trimmed.strip_prefix("replicate ") {
+            let reply = match respond_replicate(header, &mut reader, node, stop) {
+                Ok(reply) => reply,
+                Err(e) => {
+                    // transfer died mid-body: best-effort error reply,
+                    // then drop the connection — the control retries
+                    let _ = stream.write_all(format!("err truncated: {e}\n").as_bytes());
+                    return Ok(());
+                }
+            };
+            stream.write_all(reply.as_bytes())?;
+            continue;
+        }
+        let handle = node.handle();
+        let (reply, _) = respond_line(&line, &handle);
+        stream.write_all(reply.as_bytes())?;
+    }
+}
+
+/// `replicate <route> <version> <infer> <len>` + `<len>` raw bytes of
+/// a v3 model image. Returns the protocol reply, or `Err` when the
+/// body could not be read at all (connection-fatal).
+fn respond_replicate(
+    header: &str,
+    reader: &mut BufReader<TcpStream>,
+    node: &NodeState,
+    stop: &AtomicBool,
+) -> std::io::Result<String> {
+    let mut parts = header.split_whitespace();
+    let (route, version, infer, len) = match (
+        parts.next(),
+        parts.next().and_then(|v| v.parse::<u64>().ok()),
+        parts.next().and_then(|m| m.parse::<InferMode>().ok()),
+        parts.next().and_then(|l| l.parse::<u64>().ok()),
+    ) {
+        (Some(r), Some(v), Some(m), Some(l)) => (r, v, m, l),
+        _ => {
+            return Ok("err expected 'replicate <route> <version> <infer> <len>'\n".to_string())
+        }
+    };
+    if len > MAX_REPLICATE_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("replicate body of {len} bytes exceeds cap"),
+        ));
+    }
+    let mut image = vec![0u8; len as usize];
+    read_body(reader, &mut image, stop, node.opts.transfer_deadline)?;
+    Ok(match node.install(route, version, infer, &image) {
+        Ok(done) => format!(
+            "ok replicated route={} version={} generation={}\n",
+            done.route, done.version, done.generation
+        ),
+        Err(e) => format!("err {e}\n"),
+    })
+}
+
+/// Read exactly `buf.len()` body bytes, tolerating read-timeout ticks
+/// (shutdown check) up to the transfer deadline. EOF or a stall is an
+/// error: a short body is a torn transfer, never installed.
+fn read_body(
+    reader: &mut BufReader<TcpStream>,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+    deadline: Duration,
+) -> std::io::Result<()> {
+    let start = Instant::now();
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        match reader.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    format!("replication body ended at {filled}/{} bytes", buf.len()),
+                ));
+            }
+            Ok(n) => filled += n,
+            Err(ref e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if stop.load(Ordering::Relaxed) || start.elapsed() > deadline {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::TimedOut,
+                        format!("replication body stalled at {filled}/{} bytes", buf.len()),
+                    ));
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}

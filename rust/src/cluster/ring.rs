@@ -1,0 +1,275 @@
+//! Deterministic consistent-hash ring mapping route names to serving
+//! nodes.
+//!
+//! Each node contributes [`Ring::DEFAULT_VNODES`] virtual points on a
+//! 64-bit circle; a route is owned by the first node point clockwise of
+//! the route's hash. Placement is a pure function of the member set —
+//! every control plane, router, and test that builds a ring over the
+//! same nodes computes the same assignment with no coordination.
+//!
+//! Membership changes reshuffle a *bounded* fraction of routes: adding
+//! a node moves only the routes it captures (~1/N of the total), and
+//! removing a node moves only the routes it owned. Everything else
+//! keeps its owner, which is what lets the cluster re-replicate after
+//! an eviction without a full redeploy.
+
+/// Consistent-hash ring over named nodes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Ring {
+    /// Sorted, deduplicated member ids.
+    nodes: Vec<String>,
+    /// Virtual points: `(hash, index into nodes)`, sorted by hash.
+    points: Vec<(u64, u32)>,
+    vnodes: u32,
+}
+
+impl Ring {
+    /// Virtual points per node. 64 keeps the max/min owner share
+    /// within roughly a factor of two of ideal (see the balance test)
+    /// while a full rebuild stays trivially cheap at cluster sizes
+    /// measured in dozens.
+    pub const DEFAULT_VNODES: u32 = 64;
+
+    /// Build a ring over `nodes` with the default vnode count.
+    pub fn new<S: AsRef<str>>(nodes: &[S]) -> Ring {
+        Ring::with_vnodes(nodes, Ring::DEFAULT_VNODES)
+    }
+
+    /// Build a ring with an explicit vnode count (floored at 1).
+    pub fn with_vnodes<S: AsRef<str>>(nodes: &[S], vnodes: u32) -> Ring {
+        let mut ids: Vec<String> = nodes.iter().map(|n| n.as_ref().to_string()).collect();
+        ids.sort();
+        ids.dedup();
+        let mut ring = Ring {
+            nodes: ids,
+            points: Vec::new(),
+            vnodes: vnodes.max(1),
+        };
+        ring.rebuild();
+        ring
+    }
+
+    fn rebuild(&mut self) {
+        self.points.clear();
+        self.points.reserve(self.nodes.len() * self.vnodes as usize);
+        for (i, node) in self.nodes.iter().enumerate() {
+            for v in 0..self.vnodes {
+                self.points.push((hash64(&format!("{node}#{v}")), i as u32));
+            }
+        }
+        self.points.sort_unstable();
+    }
+
+    /// Add a member (no-op if already present). Only routes the new
+    /// node captures change owner.
+    pub fn add(&mut self, node: &str) {
+        if self.nodes.iter().any(|n| n == node) {
+            return;
+        }
+        self.nodes.push(node.to_string());
+        self.nodes.sort();
+        self.rebuild();
+    }
+
+    /// Remove a member (no-op if absent). Only routes the departed
+    /// node owned change owner.
+    pub fn remove(&mut self, node: &str) {
+        let before = self.nodes.len();
+        self.nodes.retain(|n| n != node);
+        if self.nodes.len() != before {
+            self.rebuild();
+        }
+    }
+
+    /// Sorted member ids.
+    pub fn nodes(&self) -> &[String] {
+        &self.nodes
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn contains(&self, node: &str) -> bool {
+        self.nodes.iter().any(|n| n == node)
+    }
+
+    /// The route's primary owner (`None` on an empty ring).
+    pub fn owner(&self, key: &str) -> Option<&str> {
+        self.replica_iter(key).next()
+    }
+
+    /// The first `n` distinct owners clockwise from the route's hash —
+    /// primary first, then the failover order a router walks. Returns
+    /// fewer than `n` when the ring has fewer members.
+    pub fn replicas(&self, key: &str, n: usize) -> Vec<&str> {
+        self.replica_iter(key).take(n).collect()
+    }
+
+    /// Distinct owners in ring order starting at `key`'s hash.
+    fn replica_iter(&self, key: &str) -> impl Iterator<Item = &str> {
+        let start = if self.points.is_empty() {
+            0
+        } else {
+            // first point clockwise of (at or after) the key hash,
+            // wrapping past the top of the circle
+            let kh = hash64(key);
+            let i = self.points.partition_point(|&(h, _)| h < kh);
+            if i == self.points.len() {
+                0
+            } else {
+                i
+            }
+        };
+        let mut seen = vec![false; self.nodes.len()];
+        let n = self.points.len();
+        (0..n).filter_map(move |k| {
+            let idx = self.points[(start + k) % n].1 as usize;
+            if std::mem::replace(&mut seen[idx], true) {
+                None
+            } else {
+                Some(self.nodes[idx].as_str())
+            }
+        })
+    }
+}
+
+/// 64-bit point hash: FNV-1a over the bytes, then a splitmix64
+/// finalizer to break up FNV's weak avalanche on short keys. Stable by
+/// construction — never change these constants, or every deployed ring
+/// disagrees about ownership across versions.
+fn hash64(key: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in key.as_bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    let mut z = h;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    fn routes(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("route-{i}")).collect()
+    }
+
+    fn shares(ring: &Ring, keys: &[String]) -> HashMap<String, usize> {
+        let mut counts: HashMap<String, usize> = HashMap::new();
+        for k in keys {
+            let owner = ring.owner(k).expect("non-empty ring").to_string();
+            *counts.entry(owner).or_insert(0) += 1;
+        }
+        counts
+    }
+
+    #[test]
+    fn placement_is_deterministic() {
+        let a = Ring::new(&["node-b", "node-a", "node-a", "node-c"]);
+        let b = Ring::new(&["node-a", "node-c", "node-b"]);
+        assert_eq!(a, b);
+        for k in routes(50) {
+            assert_eq!(a.owner(&k), b.owner(&k));
+        }
+    }
+
+    #[test]
+    fn balance_within_factor_two_of_ideal() {
+        // 200 routes over 4 nodes: every owner's share must land in
+        // [ideal/2, 2*ideal]. Deterministic — the hash has no seed.
+        let keys = routes(200);
+        let ring = Ring::new(&["node-a", "node-b", "node-c", "node-d"]);
+        let counts = shares(&ring, &keys);
+        let ideal = keys.len() / ring.len();
+        for node in ring.nodes() {
+            let share = counts.get(node).copied().unwrap_or(0);
+            assert!(
+                share >= ideal / 2 && share <= ideal * 2,
+                "{node} owns {share} of {} (ideal {ideal})",
+                keys.len()
+            );
+        }
+    }
+
+    #[test]
+    fn adding_a_node_moves_only_captured_routes() {
+        let keys = routes(200);
+        let four = Ring::new(&["node-a", "node-b", "node-c", "node-d"]);
+        let mut five = four.clone();
+        five.add("node-e");
+        let mut moved = 0usize;
+        for k in &keys {
+            let before = four.owner(k).unwrap();
+            let after = five.owner(k).unwrap();
+            if before != after {
+                // a moved route can only have moved TO the new node
+                assert_eq!(after, "node-e", "{k} moved {before} -> {after}");
+                moved += 1;
+            }
+        }
+        let ideal = keys.len() / five.len();
+        assert!(moved > 0, "new node captured nothing");
+        assert!(moved <= 2 * ideal, "moved {moved}, ideal {ideal} — reshuffle not bounded");
+    }
+
+    #[test]
+    fn removing_a_node_moves_only_its_routes() {
+        let keys = routes(200);
+        let four = Ring::new(&["node-a", "node-b", "node-c", "node-d"]);
+        let mut three = four.clone();
+        three.remove("node-c");
+        let mut moved = 0usize;
+        for k in &keys {
+            let before = four.owner(k).unwrap();
+            let after = three.owner(k).unwrap();
+            if before == "node-c" {
+                assert_ne!(after, "node-c");
+                moved += 1;
+            } else {
+                // survivors keep every route they already owned
+                assert_eq!(before, after, "{k} moved off a surviving node");
+            }
+        }
+        let ideal = keys.len() / four.len();
+        assert!(moved <= 2 * ideal, "node-c owned {moved}, ideal {ideal}");
+    }
+
+    #[test]
+    fn replicas_are_distinct_and_lead_with_owner() {
+        let ring = Ring::new(&["node-a", "node-b", "node-c", "node-d"]);
+        for k in routes(50) {
+            let reps = ring.replicas(&k, 3);
+            assert_eq!(reps.len(), 3);
+            assert_eq!(reps[0], ring.owner(&k).unwrap());
+            let mut uniq = reps.clone();
+            uniq.sort();
+            uniq.dedup();
+            assert_eq!(uniq.len(), 3, "duplicate replica for {k}: {reps:?}");
+        }
+        // asking for more replicas than members returns every member
+        assert_eq!(ring.replicas("route-0", 9).len(), 4);
+        assert!(Ring::new::<&str>(&[]).owner("route-0").is_none());
+    }
+
+    #[test]
+    fn membership_ops_are_idempotent() {
+        let mut ring = Ring::new(&["node-a", "node-b"]);
+        let snap = ring.clone();
+        ring.add("node-a");
+        ring.remove("node-zzz");
+        assert_eq!(ring, snap);
+        ring.remove("node-a");
+        ring.remove("node-b");
+        assert!(ring.is_empty());
+        assert!(ring.replicas("route-1", 2).is_empty());
+    }
+}

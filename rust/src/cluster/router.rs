@@ -1,0 +1,597 @@
+//! The request router (`tmi route`): speaks the ordinary line protocol
+//! to clients and forwards each request to the node that owns its
+//! route, with a per-request deadline, capped exponential-backoff
+//! retries against the next replica, and graceful degradation to
+//! `err unavailable` when nobody can answer.
+//!
+//! Failure semantics, in order of what a client can observe:
+//!
+//! * **Never a hang** — every socket operation is bounded by what
+//!   remains of [`RouterConfig::deadline`]; when it runs out the
+//!   client gets a complete `err unavailable: ...` line.
+//! * **Never a torn reply** — an upstream reply missing its trailing
+//!   newline (or a multi-line reply cut mid-body) is discarded, not
+//!   forwarded; the router retries or degrades.
+//! * **No double-apply** — `feedback` and `train` mutate the model, so
+//!   they are retried only on failures that prove the request was never
+//!   processed (connect failure, `err busy` admission rejection). A
+//!   reply lost *after* the request was sent degrades immediately
+//!   instead of retrying.
+//!
+//! Membership comes from the control plane's `cluster` verb, polled in
+//! the background; while the control plane is unreachable the router
+//! keeps serving its last-known assignment, so a control-plane
+//! partition degrades nothing.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::{Duration, Instant};
+
+use crate::cluster::control::{fetch_cluster_view, ClusterView, NodeSpec};
+use crate::cluster::ring::Ring;
+use crate::coordinator::server::{read_protocol_line, LineRead};
+
+/// Router knobs.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Control-plane address to poll membership from (`None` = static).
+    pub control: Option<String>,
+    /// Seed membership, used until (and whenever) the control plane is
+    /// unreachable.
+    pub nodes: Vec<NodeSpec>,
+    /// Whole-request deadline: connect + retries + reply, end to end.
+    pub deadline: Duration,
+    /// First retry backoff; doubles per attempt.
+    pub backoff_base: Duration,
+    /// Backoff ceiling.
+    pub backoff_cap: Duration,
+    /// Membership poll cadence.
+    pub poll: Duration,
+    /// Virtual points per node (must match the control plane's).
+    pub vnodes: u32,
+}
+
+impl RouterConfig {
+    pub fn new(nodes: Vec<NodeSpec>) -> RouterConfig {
+        RouterConfig {
+            control: None,
+            nodes,
+            deadline: Duration::from_secs(2),
+            backoff_base: Duration::from_millis(10),
+            backoff_cap: Duration::from_millis(200),
+            poll: Duration::from_millis(500),
+            vnodes: Ring::DEFAULT_VNODES,
+        }
+    }
+}
+
+/// Last-known membership: who exists, who is alive, and the ring that
+/// places routes on them.
+struct Membership {
+    nodes: Vec<(String, String, bool)>, // (id, addr, alive)
+    ring: Ring,
+}
+
+impl Membership {
+    fn from_specs(specs: &[NodeSpec], vnodes: u32) -> Membership {
+        let ids: Vec<&str> = specs.iter().map(|n| n.id.as_str()).collect();
+        Membership {
+            ring: Ring::with_vnodes(&ids, vnodes),
+            nodes: specs
+                .iter()
+                .map(|n| (n.id.clone(), n.addr.clone(), true))
+                .collect(),
+        }
+    }
+
+    fn from_view(view: &ClusterView, vnodes: u32) -> Membership {
+        let ids: Vec<&str> = view.nodes.iter().map(|n| n.id.as_str()).collect();
+        Membership {
+            ring: Ring::with_vnodes(&ids, vnodes),
+            nodes: view
+                .nodes
+                .iter()
+                .map(|n| (n.id.clone(), n.addr.clone(), n.alive))
+                .collect(),
+        }
+    }
+}
+
+/// What shape of reply a forwarded verb produces.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum ReplyShape {
+    /// One newline-terminated line.
+    Single,
+    /// `ok events=<n>` header plus `n` lines.
+    Events,
+    /// Prometheus exposition, terminated by a `# EOF` line.
+    Prometheus,
+}
+
+/// One forwarding attempt's outcome.
+enum Attempt {
+    /// A complete reply (including upstream `err ...` answers, which
+    /// are real answers and are forwarded verbatim).
+    Reply(String),
+    /// The node rejected admission (`err busy`): nothing was
+    /// processed, safe to retry anywhere.
+    Busy,
+    /// Could not connect: nothing was sent, safe to retry.
+    ConnectFail(String),
+    /// The request was sent but the reply was lost or torn. NOT safe
+    /// to retry non-idempotent verbs.
+    SentButLost(String),
+}
+
+/// The routing core. Shared between connection threads; cheap to call
+/// concurrently (membership is a short lock, forwarding holds none).
+pub struct Router {
+    cfg: RouterConfig,
+    membership: Arc<Mutex<Membership>>,
+}
+
+impl Router {
+    pub fn new(cfg: RouterConfig) -> Router {
+        let membership = Membership::from_specs(&cfg.nodes, cfg.vnodes);
+        Router {
+            cfg,
+            membership: Arc::new(Mutex::new(membership)),
+        }
+    }
+
+    /// One membership poll. On success the view replaces the current
+    /// membership; on failure the last-known assignment stays in
+    /// force — a partitioned control plane must not stop the data path.
+    pub fn poll_membership(&self) {
+        let Some(control) = &self.cfg.control else { return };
+        match fetch_cluster_view(control, self.cfg.poll.max(Duration::from_millis(100))) {
+            Ok(view) => {
+                let fresh = Membership::from_view(&view, self.cfg.vnodes);
+                *self.membership.lock().unwrap_or_else(PoisonError::into_inner) = fresh;
+            }
+            Err(_) => { /* keep last-known */ }
+        }
+    }
+
+    /// Poll membership until `stop` (the background thread body).
+    pub fn run_membership_poll(&self, stop: &AtomicBool) {
+        while !stop.load(Ordering::Relaxed) {
+            self.poll_membership();
+            let t0 = Instant::now();
+            while t0.elapsed() < self.cfg.poll && !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_millis(10).min(self.cfg.poll));
+            }
+        }
+    }
+
+    /// Membership as a [`ClusterView`] (the router's own `cluster`
+    /// verb: last-known state, useful exactly when the control plane
+    /// is not answering).
+    fn membership_view(&self) -> ClusterView {
+        let m = self.membership.lock().unwrap_or_else(PoisonError::into_inner);
+        ClusterView {
+            nodes: m
+                .nodes
+                .iter()
+                .map(|(id, addr, alive)| crate::cluster::control::NodeView {
+                    id: id.clone(),
+                    addr: addr.clone(),
+                    alive: *alive,
+                    missed: 0,
+                    missed_total: 0,
+                    beats: 0,
+                    replications: 0,
+                    replication_failures: 0,
+                })
+                .collect(),
+            routes: Vec::new(),
+            generation: 0,
+        }
+    }
+
+    /// Alive candidate addresses for `route`, primary first then the
+    /// failover walk in ring order. `None` route (process-wide verbs
+    /// like `metrics`) gets every alive node in id order.
+    fn candidates(&self, route: Option<&str>) -> Vec<String> {
+        let m = self.membership.lock().unwrap_or_else(PoisonError::into_inner);
+        let addr_of = |id: &str| {
+            m.nodes
+                .iter()
+                .find(|(nid, _, alive)| nid == id && *alive)
+                .map(|(_, addr, _)| addr.clone())
+        };
+        match route {
+            Some(key) => m
+                .ring
+                .replicas(key, m.ring.len())
+                .into_iter()
+                .filter_map(addr_of)
+                .collect(),
+            None => m
+                .nodes
+                .iter()
+                .filter(|(_, _, alive)| *alive)
+                .map(|(_, addr, _)| addr.clone())
+                .collect(),
+        }
+    }
+
+    /// Answer one protocol line: locally for `ping`/`cluster`,
+    /// forwarded with failover for everything else. The reply is
+    /// always a complete, newline-terminated protocol answer.
+    pub fn respond(&self, line: &str) -> String {
+        let trimmed = line.trim();
+        if trimmed == "ping" {
+            let v = self.membership_view();
+            return format!("ok pong router nodes={} alive={}\n", v.nodes.len(), v.alive());
+        }
+        if trimmed == "cluster" {
+            return self.membership_view().to_wire();
+        }
+        let (route, idempotent, shape) = classify(trimmed);
+        self.forward(trimmed, route, idempotent, shape)
+    }
+
+    fn forward(
+        &self,
+        line: &str,
+        route: Option<&str>,
+        idempotent: bool,
+        shape: ReplyShape,
+    ) -> String {
+        let start = Instant::now();
+        let candidates = self.candidates(route);
+        if candidates.is_empty() {
+            return "err unavailable: no nodes alive\n".to_string();
+        }
+        let mut last_reason = String::from("deadline exhausted");
+        let mut attempt: u32 = 0;
+        loop {
+            let remaining = self.cfg.deadline.saturating_sub(start.elapsed());
+            if remaining.is_zero() {
+                break;
+            }
+            let addr = &candidates[attempt as usize % candidates.len()];
+            match try_once(addr, line, shape, remaining) {
+                Attempt::Reply(reply) => return reply,
+                Attempt::Busy => last_reason = format!("{addr}: busy"),
+                Attempt::ConnectFail(e) => last_reason = e,
+                Attempt::SentButLost(e) => {
+                    if !idempotent {
+                        // the node may have applied it — retrying could
+                        // double-apply, so degrade with the truth
+                        return format!("err unavailable: reply lost after send ({e})\n");
+                    }
+                    last_reason = e;
+                }
+            }
+            attempt += 1;
+            let shift = attempt.saturating_sub(1).min(20);
+            let backoff = self
+                .cfg
+                .backoff_base
+                .saturating_mul(1u32 << shift)
+                .min(self.cfg.backoff_cap)
+                .min(self.cfg.deadline.saturating_sub(start.elapsed()));
+            std::thread::sleep(backoff);
+        }
+        format!("err unavailable: {} ({} attempts)\n", last_reason, attempt)
+    }
+}
+
+/// Which route a line targets, whether a retry can double-apply, and
+/// the reply shape to read back.
+fn classify(trimmed: &str) -> (Option<&str>, bool, ReplyShape) {
+    let first_word = |s: &str| s.split_whitespace().next();
+    if trimmed == "metrics" {
+        return (None, true, ReplyShape::Prometheus);
+    }
+    if let Some(rest) = trimmed.strip_prefix("feedback ") {
+        return (first_word(rest), false, ReplyShape::Single);
+    }
+    if let Some(rest) = trimmed.strip_prefix("train ") {
+        return (first_word(rest), false, ReplyShape::Single);
+    }
+    if let Some(rest) = trimmed.strip_prefix("stats ") {
+        let rest = rest.trim();
+        if let Some(model) = rest.strip_prefix("events ") {
+            return (Some(model.trim()), true, ReplyShape::Events);
+        }
+        return (Some(rest), true, ReplyShape::Single);
+    }
+    let body = trimmed.strip_prefix("infer ").unwrap_or(trimmed);
+    (first_word(body), true, ReplyShape::Single)
+}
+
+/// One attempt against one node, bounded by `remaining`.
+fn try_once(addr: &str, line: &str, shape: ReplyShape, remaining: Duration) -> Attempt {
+    let sock = match addr.parse::<std::net::SocketAddr>() {
+        Ok(s) => s,
+        Err(_) => {
+            use std::net::ToSocketAddrs;
+            match addr.to_socket_addrs().ok().and_then(|mut a| a.next()) {
+                Some(s) => s,
+                None => return Attempt::ConnectFail(format!("{addr}: unresolvable")),
+            }
+        }
+    };
+    let io = remaining.max(Duration::from_millis(1));
+    let stream = match TcpStream::connect_timeout(&sock, io) {
+        Ok(s) => s,
+        Err(e) => return Attempt::ConnectFail(format!("{addr}: {e}")),
+    };
+    if stream
+        .set_write_timeout(Some(io))
+        .and_then(|()| stream.set_read_timeout(Some(io)))
+        .is_err()
+    {
+        return Attempt::ConnectFail(format!("{addr}: socket setup failed"));
+    }
+    let mut stream = stream;
+    if stream
+        .write_all(format!("{line}\n").as_bytes())
+        .and_then(|()| stream.flush())
+        .is_err()
+    {
+        // a short write could have delivered the full line before the
+        // failure, so this does NOT count as never-sent
+        return Attempt::SentButLost(format!("{addr}: send failed"));
+    }
+    let mut reader = BufReader::new(stream);
+    let mut head = String::new();
+    match reader.read_line(&mut head) {
+        Ok(0) => return Attempt::SentButLost(format!("{addr}: closed before reply")),
+        Ok(_) if !head.ends_with('\n') => {
+            return Attempt::SentButLost(format!("{addr}: torn reply"))
+        }
+        Ok(_) => {}
+        Err(e) => return Attempt::SentButLost(format!("{addr}: {e}")),
+    }
+    if head.starts_with("err busy") {
+        return Attempt::Busy;
+    }
+    match shape {
+        ReplyShape::Single => Attempt::Reply(head),
+        ReplyShape::Events => {
+            if !head.starts_with("ok events=") {
+                return Attempt::Reply(head); // an err line is the whole answer
+            }
+            let n: usize = head
+                .trim_start_matches("ok events=")
+                .trim()
+                .parse()
+                .unwrap_or(0);
+            let mut out = head;
+            for _ in 0..n {
+                let mut l = String::new();
+                match reader.read_line(&mut l) {
+                    Ok(k) if k > 0 && l.ends_with('\n') => out.push_str(&l),
+                    _ => return Attempt::SentButLost(format!("{addr}: events reply cut short")),
+                }
+            }
+            Attempt::Reply(out)
+        }
+        ReplyShape::Prometheus => {
+            if head.starts_with("err ") {
+                return Attempt::Reply(head);
+            }
+            let mut out = head;
+            loop {
+                if out.ends_with("# EOF\n") {
+                    return Attempt::Reply(out);
+                }
+                let mut l = String::new();
+                match reader.read_line(&mut l) {
+                    Ok(k) if k > 0 && l.ends_with('\n') => out.push_str(&l),
+                    _ => return Attempt::SentButLost(format!("{addr}: metrics reply cut short")),
+                }
+            }
+        }
+    }
+}
+
+/// Serve the router on a listener until `stop`. Each connection gets a
+/// thread; each line is answered by [`Router::respond`].
+pub fn serve_router(
+    listener: TcpListener,
+    router: Arc<Router>,
+    stop: Arc<AtomicBool>,
+) -> std::io::Result<()> {
+    listener.set_nonblocking(true)?;
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _addr)) => {
+                let router = Arc::clone(&router);
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    let _ = router_conn(stream, &router, &stop);
+                });
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+fn router_conn(stream: TcpStream, router: &Router, stop: &AtomicBool) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(100)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match read_protocol_line(&mut reader, &mut line, stop)? {
+            LineRead::Eof => return Ok(()),
+            LineRead::TooLong => {
+                stream.write_all(b"err line too long\n")?;
+                continue;
+            }
+            LineRead::Line => {}
+        }
+        stream.write_all(router.respond(&line).as_bytes())?;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    /// A fake node: answers every line with `reply`, counting requests.
+    /// `mode` tweaks behavior per scenario.
+    enum FakeMode {
+        Answer(&'static str),
+        /// Read the request, then close without any reply.
+        Swallow,
+    }
+
+    fn fake_node(mode: FakeMode) -> (String, Arc<AtomicUsize>, Arc<AtomicBool>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let seen = Arc::new(AtomicUsize::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let (seen2, stop2) = (Arc::clone(&seen), Arc::clone(&stop));
+        listener.set_nonblocking(true).unwrap();
+        std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let mut reader = BufReader::new(stream.try_clone().unwrap());
+                        let mut stream = stream;
+                        let mut line = String::new();
+                        if reader.read_line(&mut line).unwrap_or(0) == 0 {
+                            continue;
+                        }
+                        seen2.fetch_add(1, Ordering::SeqCst);
+                        match mode {
+                            FakeMode::Answer(reply) => {
+                                let _ = stream.write_all(reply.as_bytes());
+                            }
+                            FakeMode::Swallow => drop(stream),
+                        }
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        (addr, seen, stop)
+    }
+
+    fn router_over(addrs: &[&str]) -> Router {
+        let nodes: Vec<NodeSpec> = addrs
+            .iter()
+            .enumerate()
+            .map(|(i, a)| NodeSpec {
+                id: format!("n{i}"),
+                addr: a.to_string(),
+            })
+            .collect();
+        let mut cfg = RouterConfig::new(nodes);
+        cfg.deadline = Duration::from_millis(800);
+        cfg.backoff_base = Duration::from_millis(5);
+        cfg.backoff_cap = Duration::from_millis(20);
+        Router::new(cfg)
+    }
+
+    #[test]
+    fn forwards_a_complete_reply_verbatim() {
+        let (addr, seen, stop) = fake_node(FakeMode::Answer("ok 1 5 -3\n"));
+        let router = router_over(&[&addr]);
+        let reply = router.respond("infer cpu 1010\n");
+        assert_eq!(reply, "ok 1 5 -3\n");
+        assert_eq!(seen.load(Ordering::SeqCst), 1);
+        stop.store(true, Ordering::Relaxed);
+    }
+
+    #[test]
+    fn all_nodes_down_degrades_to_unavailable_within_deadline() {
+        // port 1 refuses connections instantly on loopback
+        let router = router_over(&["127.0.0.1:1"]);
+        let t0 = Instant::now();
+        let reply = router.respond("infer cpu 1010\n");
+        assert!(
+            reply.starts_with("err unavailable:"),
+            "got {reply:?}"
+        );
+        assert!(reply.ends_with('\n'), "reply must be a complete line");
+        assert!(
+            t0.elapsed() < Duration::from_secs(3),
+            "degradation must respect the deadline, took {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn busy_rejection_fails_over_to_the_next_replica() {
+        let (busy_addr, _busy_seen, stop_a) =
+            fake_node(FakeMode::Answer("err busy: connection limit reached\n"));
+        let (ok_addr, ok_seen, stop_b) = fake_node(FakeMode::Answer("ok 0 7\n"));
+        // every candidate is tried in ring order; whichever is first,
+        // the busy one is skipped and the healthy one answers
+        let router = router_over(&[&busy_addr, &ok_addr]);
+        let reply = router.respond("infer cpu 1010\n");
+        assert_eq!(reply, "ok 0 7\n");
+        assert_eq!(ok_seen.load(Ordering::SeqCst), 1);
+        stop_a.store(true, Ordering::Relaxed);
+        stop_b.store(true, Ordering::Relaxed);
+    }
+
+    #[test]
+    fn lost_reply_after_send_never_retries_feedback() {
+        let (addr, seen, stop) = fake_node(FakeMode::Swallow);
+        let router = router_over(&[&addr]);
+        let reply = router.respond("feedback cpu 1 1010\n");
+        assert!(
+            reply.starts_with("err unavailable: reply lost after send"),
+            "got {reply:?}"
+        );
+        // exactly one delivery: a retry here could double-apply
+        assert_eq!(seen.load(Ordering::SeqCst), 1);
+        stop.store(true, Ordering::Relaxed);
+    }
+
+    #[test]
+    fn lost_reply_retries_idempotent_infer() {
+        let (addr, seen, stop) = fake_node(FakeMode::Swallow);
+        let router = router_over(&[&addr]);
+        let reply = router.respond("infer cpu 1010\n");
+        assert!(reply.starts_with("err unavailable:"), "got {reply:?}");
+        assert!(
+            seen.load(Ordering::SeqCst) > 1,
+            "idempotent requests should have retried"
+        );
+        stop.store(true, Ordering::Relaxed);
+    }
+
+    #[test]
+    fn local_verbs_answer_without_nodes() {
+        let router = router_over(&["127.0.0.1:1"]);
+        assert!(router.respond("ping\n").starts_with("ok pong router nodes=1"));
+        assert!(router.respond("cluster\n").starts_with("ok nodes=1"));
+    }
+
+    #[test]
+    fn classify_extracts_route_and_idempotency() {
+        assert_eq!(classify("infer cpu 101"), (Some("cpu"), true, ReplyShape::Single));
+        assert_eq!(classify("cpu 101"), (Some("cpu"), true, ReplyShape::Single));
+        assert_eq!(
+            classify("feedback cpu 1 101"),
+            (Some("cpu"), false, ReplyShape::Single)
+        );
+        assert_eq!(classify("train cpu 1:101"), (Some("cpu"), false, ReplyShape::Single));
+        assert_eq!(classify("stats cpu"), (Some("cpu"), true, ReplyShape::Single));
+        assert_eq!(
+            classify("stats events cpu"),
+            (Some("cpu"), true, ReplyShape::Events)
+        );
+        assert_eq!(classify("metrics"), (None, true, ReplyShape::Prometheus));
+    }
+}

@@ -35,6 +35,15 @@ use crate::util::{Json, Rng};
 pub struct LoadgenConfig {
     /// `host:port` of a running `tmi serve`.
     pub addr: String,
+    /// Multi-target mode (`--targets a,b,...`): the cluster endpoints
+    /// to spread connections across. Empty means single-target
+    /// ([`LoadgenConfig::addr`] only). Closed-loop connections fail
+    /// over to the next target when their node dies mid-run — the
+    /// cluster smoke test kills a node under load and gates on the
+    /// surviving ok-rate; open-loop connections pin to their assigned
+    /// target (the fixed-schedule writer cannot re-home mid-flight
+    /// without skewing the offered rate).
+    pub targets: Vec<String>,
     /// Route name to drive (`infer <model> <bits>`).
     pub model: String,
     /// Concurrent connections.
@@ -78,6 +87,9 @@ pub struct LoadgenReport {
     /// that is neither `ok …` nor `err …` — a reader observed a
     /// half-written response. Must be zero under hot swap.
     pub torn: u64,
+    /// Closed-loop connections re-homed to another target after their
+    /// node died (multi-target mode only).
+    pub failovers: u64,
     /// Route swap generation from `stats` before/after the run — the
     /// cross-publisher monotonic key (`--assert-monotone-generations`).
     pub generation_start: Option<u64>,
@@ -96,6 +108,7 @@ struct ConnResult {
     feedback_sent: u64,
     feedback_ok: u64,
     torn: u64,
+    failovers: u64,
     latencies_us: Vec<u64>,
 }
 
@@ -157,32 +170,94 @@ fn request_pool(cfg: &LoadgenConfig) -> Vec<PoolEntry> {
         .collect()
 }
 
+/// Connect to the first target that answers, starting at `first` and
+/// walking the list once. `None` when every target refused.
+fn connect_any(targets: &[String], first: usize) -> Option<(TcpStream, usize)> {
+    for k in 0..targets.len() {
+        let idx = (first + k) % targets.len();
+        if let Ok(stream) = TcpStream::connect(&targets[idx]) {
+            stream.set_nodelay(true).ok();
+            // a wedged server must fail the run, not hang it (CI gates
+            // on this)
+            if stream.set_read_timeout(Some(Duration::from_secs(5))).is_ok() {
+                return Some((stream, idx));
+            }
+        }
+    }
+    None
+}
+
 fn closed_loop_conn(
-    addr: &str,
+    targets: &[String],
+    first: usize,
     pool: &[PoolEntry],
     stop_at: Instant,
 ) -> Result<ConnResult> {
-    let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
-    stream.set_nodelay(true).ok();
-    // a wedged server must fail the run, not hang it (CI gates on this)
-    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut stream = stream;
+    let multi = targets.len() > 1;
     let mut res = ConnResult::default();
     let mut reply = String::new();
     let mut i = 0usize;
-    while Instant::now() < stop_at {
-        let (line, feedback) = &pool[i % pool.len()];
-        i += 1;
-        let t0 = Instant::now();
-        if stream.write_all(line.as_bytes()).is_err() {
-            break;
+    let mut target = first % targets.len().max(1);
+    let mut connected_once = false;
+    'conn: while Instant::now() < stop_at {
+        let Some((stream, idx)) = connect_any(targets, target) else {
+            if !multi {
+                if connected_once {
+                    break; // single-target: server gone, run ends
+                }
+                // single-target and never up: surface the connect error
+                // like the pre-cluster loadgen did
+                TcpStream::connect(&targets[0])
+                    .with_context(|| format!("connecting {}", targets[0]))?;
+            }
+            // every target down right now: brief pause, then retry
+            // until the deadline — a restarted node picks the run up
+            std::thread::sleep(Duration::from_millis(20));
+            continue;
+        };
+        if connected_once {
+            res.failovers += 1;
         }
-        reply.clear();
-        match reader.read_line(&mut reply) {
-            Ok(0) | Err(_) => break,
-            Ok(_) => res.classify(&reply, t0, *feedback),
+        connected_once = true;
+        target = idx;
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut stream = stream;
+        while Instant::now() < stop_at {
+            let (line, feedback) = &pool[i % pool.len()];
+            i += 1;
+            let t0 = Instant::now();
+            if stream.write_all(line.as_bytes()).is_err() {
+                // connection died before the request was accepted:
+                // nothing to classify — the request was never answered
+                if multi {
+                    target += 1;
+                    continue 'conn;
+                }
+                break 'conn;
+            }
+            reply.clear();
+            match reader.read_line(&mut reply) {
+                Ok(0) | Err(_) => {
+                    if multi {
+                        target += 1;
+                        continue 'conn;
+                    }
+                    break 'conn;
+                }
+                Ok(_) if multi && !reply.ends_with('\n') => {
+                    // EOF cut the reply line: the node died mid-write.
+                    // That is a connection failure, not a tear served
+                    // by a live node — re-home and retry (requests in
+                    // the pool are idempotent infer unless the caller
+                    // opted into feedback, where a lost in-flight
+                    // apply is simply not re-counted).
+                    target += 1;
+                    continue 'conn;
+                }
+                Ok(_) => res.classify(&reply, t0, *feedback),
+            }
         }
+        break;
     }
     Ok(res)
 }
@@ -245,6 +320,21 @@ fn open_loop_conn(
     res.sent = i as u64;
     res.feedback_sent = feedback_writes;
     Ok(res)
+}
+
+/// The endpoint list a run drives: `--targets` when given, else the
+/// single `addr`.
+fn endpoints(cfg: &LoadgenConfig) -> Vec<String> {
+    if cfg.targets.is_empty() {
+        vec![cfg.addr.clone()]
+    } else {
+        cfg.targets.clone()
+    }
+}
+
+/// Fetch `stats <model>` from the first endpoint that answers.
+fn fetch_stats_any(targets: &[String], model: &str) -> Option<String> {
+    targets.iter().find_map(|t| fetch_server_stats(t, model))
 }
 
 /// Fetch the server-side `stats <model>` line over a fresh connection.
@@ -321,7 +411,8 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         "feedback rate must be within [0, 1]"
     );
     let pool = request_pool(cfg);
-    let generation_start = parse_generation(fetch_server_stats(&cfg.addr, &cfg.model).as_deref());
+    let targets = endpoints(cfg);
+    let generation_start = parse_generation(fetch_stats_any(&targets, &cfg.model).as_deref());
     let open_loop = cfg.rate > 0.0;
     let interval = if open_loop {
         Duration::from_secs_f64(cfg.connections as f64 / cfg.rate)
@@ -331,14 +422,17 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     let t0 = Instant::now();
     let stop_at = t0 + cfg.duration;
     let workers: Vec<_> = (0..cfg.connections)
-        .map(|_| {
-            let addr = cfg.addr.clone();
+        .map(|i| {
+            let targets = targets.clone();
             let pool = pool.clone();
             std::thread::spawn(move || {
                 if open_loop {
-                    open_loop_conn(&addr, &pool, stop_at, interval)
+                    // open loop pins each connection to its target: a
+                    // fixed-schedule writer cannot re-home mid-flight
+                    // without skewing the offered rate
+                    open_loop_conn(&targets[i % targets.len()], &pool, stop_at, interval)
                 } else {
-                    closed_loop_conn(&addr, &pool, stop_at)
+                    closed_loop_conn(&targets, i, &pool, stop_at)
                 }
             })
         })
@@ -353,6 +447,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         total.feedback_sent += r.feedback_sent;
         total.feedback_ok += r.feedback_ok;
         total.torn += r.torn;
+        total.failovers += r.failovers;
         total.latencies_us.extend(r.latencies_us);
     }
     let elapsed_s = t0.elapsed().as_secs_f64();
@@ -363,7 +458,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     } else {
         total.latencies_us.iter().sum::<u64>() as f64 / total.latencies_us.len() as f64
     };
-    let server_stats = fetch_server_stats(&cfg.addr, &cfg.model);
+    let server_stats = fetch_stats_any(&targets, &cfg.model);
     Ok(LoadgenReport {
         mode: if open_loop { "open" } else { "closed" },
         sent: total.sent,
@@ -388,6 +483,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         feedback_sent: total.feedback_sent,
         feedback_ok: total.feedback_ok,
         torn: total.torn,
+        failovers: total.failovers,
         generation_start,
         generation_end: parse_generation(server_stats.as_deref()),
         server_stats,
@@ -414,6 +510,9 @@ impl LoadgenReport {
             self.p99_us,
             self.mean_us,
         );
+        if self.failovers > 0 {
+            line.push_str(&format!(" failovers={}", self.failovers));
+        }
         if self.feedback_sent > 0 {
             line.push_str(&format!(
                 "  feedback={}/{} generation {}->{}",
@@ -444,6 +543,10 @@ impl LoadgenReport {
                     ("duration_s", Json::num(cfg.duration.as_secs_f64())),
                     ("features", Json::num(cfg.features as f64)),
                     ("feedback_rate", Json::num(cfg.feedback_rate)),
+                    (
+                        "targets",
+                        Json::Arr(cfg.targets.iter().cloned().map(Json::str).collect()),
+                    ),
                 ]),
             ),
             ("sent", Json::num(self.sent as f64)),
@@ -451,6 +554,7 @@ impl LoadgenReport {
             ("shed", Json::num(self.shed as f64)),
             ("errors", Json::num(self.errors as f64)),
             ("torn", Json::num(self.torn as f64)),
+            ("failovers", Json::num(self.failovers as f64)),
             ("feedback_sent", Json::num(self.feedback_sent as f64)),
             ("feedback_ok", Json::num(self.feedback_ok as f64)),
             (
@@ -515,6 +619,7 @@ mod tests {
     fn pool_lines_are_wellformed_and_deterministic() {
         let cfg = LoadgenConfig {
             addr: "unused".into(),
+            targets: vec![],
             model: "cpu".into(),
             connections: 1,
             rate: 0.0,
@@ -542,6 +647,7 @@ mod tests {
     fn pool_mixes_feedback_lines_at_the_configured_rate() {
         let cfg = LoadgenConfig {
             addr: "unused".into(),
+            targets: vec![],
             model: "cpu".into(),
             connections: 1,
             rate: 0.0,
@@ -589,6 +695,73 @@ mod tests {
     }
 
     #[test]
+    fn closed_loop_fails_over_when_its_node_dies() {
+        use std::net::TcpListener;
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+
+        // node A answers one request, then slams the connection shut;
+        // node B answers everything
+        let spawn_node = |answers: Option<usize>| {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap().to_string();
+            let served = Arc::new(AtomicUsize::new(0));
+            let served2 = Arc::clone(&served);
+            std::thread::spawn(move || {
+                while let Ok((stream, _)) = listener.accept() {
+                    let mut reader = BufReader::new(stream.try_clone().unwrap());
+                    let mut stream = stream;
+                    let mut line = String::new();
+                    let mut n = 0usize;
+                    loop {
+                        line.clear();
+                        if reader.read_line(&mut line).unwrap_or(0) == 0 {
+                            break;
+                        }
+                        if answers.is_some_and(|cap| n >= cap) {
+                            break; // die mid-conversation
+                        }
+                        stream.write_all(b"ok 1 5\n").unwrap();
+                        served2.fetch_add(1, Ordering::SeqCst);
+                        n += 1;
+                    }
+                }
+            });
+            (addr, served)
+        };
+        let (addr_a, _served_a) = spawn_node(Some(1));
+        let (addr_b, served_b) = spawn_node(None);
+        let targets = vec![addr_a, addr_b];
+        let pool = vec![("infer cpu 1\n".to_string(), false)];
+        let stop_at = Instant::now() + Duration::from_millis(300);
+        let res = closed_loop_conn(&targets, 0, &pool, stop_at).unwrap();
+        assert!(res.failovers >= 1, "node A's death must re-home the connection");
+        assert_eq!(res.torn, 0, "a died connection is not a torn reply");
+        assert_eq!(res.errors, 0);
+        assert!(res.ok > 1, "the run must continue on node B");
+        assert!(served_b.load(Ordering::SeqCst) > 0);
+    }
+
+    #[test]
+    fn endpoints_prefer_targets_over_addr() {
+        let mut cfg = LoadgenConfig {
+            addr: "a:1".into(),
+            targets: vec![],
+            model: "cpu".into(),
+            connections: 1,
+            rate: 0.0,
+            duration: Duration::from_secs(1),
+            features: 4,
+            seed: 1,
+            feedback_rate: 0.0,
+            classes: 2,
+        };
+        assert_eq!(endpoints(&cfg), vec!["a:1".to_string()]);
+        cfg.targets = vec!["n1:1".into(), "n2:2".into()];
+        assert_eq!(endpoints(&cfg), vec!["n1:1".to_string(), "n2:2".to_string()]);
+    }
+
+    #[test]
     fn generation_parses_from_stats_line() {
         assert_eq!(
             parse_generation(Some("ok model=cpu version=3 generation=7 requests=1")),
@@ -625,6 +798,7 @@ mod tests {
     fn report_json_shape() {
         let cfg = LoadgenConfig {
             addr: "unused".into(),
+            targets: vec![],
             model: "cpu".into(),
             connections: 2,
             rate: 100.0,
@@ -650,6 +824,7 @@ mod tests {
             feedback_sent: 3,
             feedback_ok: 3,
             torn: 0,
+            failovers: 2,
             generation_start: Some(1),
             generation_end: Some(4),
             server_stats: Some("ok model=cpu".into()),
@@ -659,6 +834,8 @@ mod tests {
         assert_eq!(parsed.get("bench").unwrap().as_str(), Some("serve_load"));
         assert_eq!(parsed.get("ok").unwrap().as_usize(), Some(8));
         assert_eq!(parsed.get("torn").unwrap().as_usize(), Some(0));
+        assert_eq!(parsed.get("failovers").unwrap().as_usize(), Some(2));
+        assert!(report.summary().contains("failovers=2"));
         assert_eq!(parsed.get("feedback_ok").unwrap().as_usize(), Some(3));
         assert_eq!(parsed.get("generation_start").unwrap().as_usize(), Some(1));
         assert_eq!(parsed.get("generation_end").unwrap().as_usize(), Some(4));

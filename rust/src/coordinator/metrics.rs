@@ -106,6 +106,12 @@ pub struct MetricsSnapshot {
     /// queue, so [`Metrics::snapshot`] leaves this 0 and the
     /// coordinator fills it from the route's queue gauge.
     pub queue_depth: u64,
+    /// Connections refused at the accept-loop cap since process start.
+    /// Process-wide like the cap itself — [`Metrics::snapshot`] leaves
+    /// it 0 and the coordinator fills it from
+    /// [`crate::coordinator::server::conn_rejected_total`], so every
+    /// route's snapshot carries the same server total.
+    pub conn_rejected: u64,
     pub dense_requests: u64,
     pub sparse_requests: u64,
     pub clauses_falsified: u64,
@@ -213,6 +219,7 @@ impl Metrics {
             batches: self.batches.load(Ordering::Relaxed),
             batched_items: self.batched_items.load(Ordering::Relaxed),
             queue_depth: 0,
+            conn_rejected: 0,
             dense_requests: self.dense_requests.load(Ordering::Relaxed),
             sparse_requests: self.sparse_requests.load(Ordering::Relaxed),
             clauses_falsified: self.clauses_falsified.load(Ordering::Relaxed),

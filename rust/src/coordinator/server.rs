@@ -44,7 +44,7 @@ use crate::coordinator::batcher::{collect, BatchPolicy, Collected};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::online::{FeedbackError, FeedbackSender};
 use crate::coordinator::queue::{BoundedQueue, PushError};
-use crate::coordinator::supervisor::{supervise, RestartPolicy};
+use crate::coordinator::supervisor::{supervise, RestartPolicy, RestartWindow};
 use crate::engine::{argmax, ModelSnapshot};
 use crate::obs::prometheus::PromWriter;
 use crate::obs::{self, journal, EventKind, Stage};
@@ -220,6 +220,25 @@ pub mod fault {
                 .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| v.checked_sub(1))
                 .is_ok()
     }
+}
+
+/// Connections refused at the [`ServeOptions::max_conns`] cap since
+/// process start. Process-wide (the accept loop rejects before any
+/// route is known), surfaced as `conn_rejected=` on every `stats` line
+/// and as `tmi_conn_rejected_total` — without it a cap-induced
+/// brownout is invisible server-side and looks like client error.
+static CONN_REJECTED: AtomicU64 = AtomicU64::new(0);
+
+/// Book one connection-cap rejection (the `err busy` accept path —
+/// also the cluster node's, [`crate::cluster::node::serve_node`]).
+pub(crate) fn note_conn_rejected() {
+    CONN_REJECTED.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Process-wide count of connections answered `err busy` at the
+/// connection cap.
+pub fn conn_rejected_total() -> u64 {
+    CONN_REJECTED.load(Ordering::Relaxed)
 }
 
 /// The atomically swappable serving version of a snapshot route.
@@ -409,7 +428,7 @@ impl Coordinator {
                         return;
                     }
                 };
-                let mut attempts: u32 = 0;
+                let mut window = RestartWindow::new();
                 loop {
                     match collect(&queue_worker, &policy) {
                         Collected::Disconnected => break,
@@ -431,11 +450,13 @@ impl Coordinator {
                             if survived {
                                 continue;
                             }
-                            attempts += 1;
-                            if attempts > restarts.max_restarts {
+                            // same sliding-window budget as supervise():
+                            // rare panics age out instead of slowly
+                            // consuming a lifetime allowance
+                            let Some(backoff) = window.admit(&restarts) else {
                                 break;
-                            }
-                            std::thread::sleep(restarts.backoff_for(attempts));
+                            };
+                            std::thread::sleep(backoff);
                             match catch_unwind(AssertUnwindSafe(&mut factory)) {
                                 Ok(Ok(b)) => {
                                     backend = b;
@@ -636,6 +657,9 @@ impl Default for Coordinator {
 fn snapshot_with_depth(metrics: &Metrics, queue: &BoundedQueue<Request>) -> MetricsSnapshot {
     let mut snap = metrics.snapshot();
     snap.queue_depth = queue.len() as u64;
+    // process-wide (the cap rejects before routing): every route's
+    // snapshot reports the same server total
+    snap.conn_rejected = conn_rejected_total();
     snap
 }
 
@@ -904,6 +928,13 @@ impl CoordinatorHandle {
             .map(|r| route_stats(&r.metrics, &r.queue, r.swap.as_ref()))
     }
 
+    /// Route names in this handle's (fixed) table, sorted.
+    pub fn models(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.routes.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
     /// Hot-swap the serving snapshot of `model` (snapshot routes only)
     /// — see [`Coordinator::swap`]. Available on the handle so
     /// re-publishers (e.g. `tmi serve --watch`) don't need the
@@ -1085,6 +1116,12 @@ fn render_prometheus(routes: &[(String, RouteStats)]) -> String {
         &[],
         crate::obs::probes::feedback_clause_updates(),
     );
+    w.header(
+        "tmi_conn_rejected_total",
+        "Connections answered 'err busy' at the max_conns cap (process-wide).",
+        "counter",
+    );
+    w.int_sample("tmi_conn_rejected_total", &[], conn_rejected_total());
     w.header("tmi_journal_events_total", "Events ever emitted into the journal.", "counter");
     w.int_sample("tmi_journal_events_total", &[], journal().emitted());
     w.header(
@@ -1181,6 +1218,7 @@ pub fn serve_tcp_with(
                 // reap finished connection threads before capacity-checking
                 conns.retain(|c| !c.is_finished());
                 if conns.len() >= opts.max_conns {
+                    note_conn_rejected();
                     let mut stream = stream;
                     let _ = stream.write_all(b"err busy: connection limit reached\n");
                     continue; // drop closes the socket
@@ -1285,6 +1323,69 @@ fn serve_one_scrape(
 /// per-connection memory against newline-less streams).
 const MAX_LINE_BYTES: usize = 1 << 20;
 
+/// How one protocol-line read ended — shared by [`handle_conn`] and
+/// the cluster node's connection loop
+/// ([`crate::cluster::node::serve_node`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum LineRead {
+    /// A complete newline-terminated line is in the buffer.
+    Line,
+    /// Client closed (including a disconnect mid-line: the partial
+    /// request is dropped, never served half a line).
+    Eof,
+    /// The line exceeded [`MAX_LINE_BYTES`]; the remainder has been
+    /// discarded through the next newline and the connection is ready
+    /// for the next request. Callers answer `err line too long`.
+    TooLong,
+}
+
+/// Read one protocol line into `line` (cleared first by the caller),
+/// tolerating read-timeout ticks to observe `stop`, with the
+/// [`MAX_LINE_BYTES`] cap and oversized-line discard applied.
+pub(crate) fn read_protocol_line(
+    reader: &mut BufReader<TcpStream>,
+    line: &mut String,
+    stop: &AtomicBool,
+) -> std::io::Result<LineRead> {
+    let n = loop {
+        // cap the buffered line: one extra byte distinguishes
+        // "exactly at the cap" from "over it"
+        let budget = (MAX_LINE_BYTES + 1 - line.len()) as u64;
+        match (&mut *reader).take(budget).read_line(line) {
+            Ok(n) => break n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if stop.load(Ordering::Relaxed) {
+                    return Ok(LineRead::Eof);
+                }
+                // keep any partial line already buffered and retry
+            }
+            Err(e) => return Err(e),
+        }
+    };
+    if n == 0 {
+        return Ok(LineRead::Eof); // client closed
+    }
+    if !line.ends_with('\n') {
+        if line.len() > MAX_LINE_BYTES {
+            // oversized request: refuse it, discard through the next
+            // newline, keep serving the connection
+            return if discard_to_newline(reader, stop)? {
+                Ok(LineRead::TooLong)
+            } else {
+                Ok(LineRead::Eof)
+            };
+        }
+        // EOF mid-line: the client disconnected mid-write
+        return Ok(LineRead::Eof);
+    }
+    Ok(LineRead::Line)
+}
+
 fn handle_conn(
     stream: TcpStream,
     handle: CoordinatorHandle,
@@ -1299,42 +1400,13 @@ fn handle_conn(
     let mut line = String::new();
     loop {
         line.clear();
-        let n = loop {
-            // cap the buffered line: one extra byte distinguishes
-            // "exactly at the cap" from "over it"
-            let budget = (MAX_LINE_BYTES + 1 - line.len()) as u64;
-            match (&mut reader).take(budget).read_line(&mut line) {
-                Ok(n) => break n,
-                Err(e)
-                    if matches!(
-                        e.kind(),
-                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-                    ) =>
-                {
-                    if stop.load(Ordering::Relaxed) {
-                        return Ok(());
-                    }
-                    // keep any partial line already buffered and retry
-                }
-                Err(e) => return Err(e),
-            }
-        };
-        if n == 0 {
-            return Ok(()); // client closed
-        }
-        if !line.ends_with('\n') {
-            if line.len() > MAX_LINE_BYTES {
-                // oversized request: refuse it, discard through the
-                // next newline, keep serving the connection
+        match read_protocol_line(&mut reader, &mut line, &stop)? {
+            LineRead::Eof => return Ok(()),
+            LineRead::TooLong => {
                 stream.write_all(b"err line too long\n")?;
-                if !discard_to_newline(&mut reader, &stop)? {
-                    return Ok(());
-                }
                 continue;
             }
-            // EOF mid-line: the client disconnected mid-write — drop
-            // the partial request instead of serving half a line
-            return Ok(());
+            LineRead::Line => {}
         }
         let (reply, write_metrics) = respond_line(&line, &handle);
         let t_write = if obs::enabled() && write_metrics.is_some() {
@@ -1387,8 +1459,12 @@ fn discard_to_newline(
 /// `stats events`/`metrics` verbs; a bare `<model> <bits>` is legacy
 /// shorthand for `infer`). Returns the reply plus, for infer replies,
 /// the route's metrics handle so the caller can attribute the Write
-/// stage to the route.
-fn respond_line(line: &str, handle: &CoordinatorHandle) -> (String, Option<Arc<Metrics>>) {
+/// stage to the route. Crate-visible so the cluster node's connection
+/// loop ([`crate::cluster::node`]) serves the identical base protocol.
+pub(crate) fn respond_line(
+    line: &str,
+    handle: &CoordinatorHandle,
+) -> (String, Option<Arc<Metrics>>) {
     let trimmed = line.trim();
     if trimmed == "metrics" {
         return (handle.prometheus(), None);
@@ -1560,6 +1636,9 @@ fn stats_line(model: &str, st: &RouteStats) -> String {
             .map(|d| d.to_string())
             .unwrap_or_else(|| "-".to_string()),
     );
+    // server-wide connection-cap rejections (same value on every
+    // route's line — the cap fires before routing)
+    let _ = write!(out, " conn_rejected={}", m.conn_rejected);
     out.push('\n');
     out
 }
@@ -2165,6 +2244,7 @@ mod tests {
             " publish_lag=",
             " feedback_recent_acc=",
             " digest=",
+            " conn_rejected=",
         ] {
             let at = line.find(key).unwrap_or_else(|| panic!("missing {key}"));
             assert!(at > p99, "{key} must append after p99_us");
@@ -2515,12 +2595,18 @@ mod tests {
         r1.read_line(&mut reply).unwrap();
         assert!(reply.starts_with("ok "), "reply: {reply}");
 
-        // second connection is refused with err busy
+        // second connection is refused with err busy — and the
+        // rejection is visible to observability, not just the client
+        let rejected_before = conn_rejected_total();
         let c2 = TcpStream::connect(addr).unwrap();
         let mut r2 = BufReader::new(c2);
         reply.clear();
         r2.read_line(&mut reply).unwrap();
         assert!(reply.starts_with("err busy"), "reply: {reply}");
+        assert!(
+            conn_rejected_total() > rejected_before,
+            "cap rejection did not bump conn_rejected"
+        );
 
         // free the slot; the server reaps the finished thread and
         // accepts again (poll: reaping happens on the next accept)

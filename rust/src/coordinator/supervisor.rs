@@ -1,4 +1,5 @@
-//! Worker supervision: bounded panic-restart with exponential backoff.
+//! Worker supervision: panic-restart bounded by a sliding window, with
+//! exponential backoff.
 //!
 //! A serving worker that panics — a poisoned dependency, a bug in a
 //! backend, the fault-injection harness — used to take its whole route
@@ -11,23 +12,32 @@
 //! channels unwound with the stack — but everything queued behind it
 //! survives to be served by the restarted worker.
 //!
-//! Restarts are *bounded*: a worker that keeps dying (a deterministic
-//! panic on every batch would otherwise spin forever, failing one batch
-//! per restart) exhausts its budget and exits, at which point the
-//! normal last-worker-guard close-and-drain takes over.
+//! Restarts are *rate*-bounded, not lifetime-bounded: the budget is
+//! `max_restarts` per [`RestartPolicy::window`] (default 5 per 60 s).
+//! A deterministic panic on every batch still exhausts the window and
+//! exits — at which point the normal last-worker-guard close-and-drain
+//! takes over — but a long-lived worker that panics rarely keeps
+//! recovering forever instead of being permanently killed by the
+//! accumulated lifetime count.
 
+use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::obs::{journal, EventKind};
 
 /// Restart budget and backoff schedule for one worker thread.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct RestartPolicy {
-    /// Restarts allowed per worker before it stays down.
+    /// Restarts allowed within any trailing [`RestartPolicy::window`]
+    /// before the worker stays down.
     pub max_restarts: u32,
-    /// Delay before the first restart; doubles per consecutive restart.
+    /// Sliding window the budget applies over. Panics older than this
+    /// no longer count against the worker.
+    pub window: Duration,
+    /// Delay before the first restart; doubles per restart currently
+    /// inside the window.
     pub backoff: Duration,
     /// Backoff ceiling.
     pub max_backoff: Duration,
@@ -37,6 +47,7 @@ impl Default for RestartPolicy {
     fn default() -> Self {
         RestartPolicy {
             max_restarts: 5,
+            window: Duration::from_secs(60),
             backoff: Duration::from_millis(10),
             max_backoff: Duration::from_secs(1),
         }
@@ -64,41 +75,77 @@ impl RestartPolicy {
     }
 }
 
+/// Sliding-window restart bookkeeping shared by [`supervise`] and the
+/// factory-route worker loop: remembers when each restart happened and
+/// admits a new one only while fewer than `max_restarts` land inside
+/// the trailing window.
+#[derive(Debug, Default)]
+pub(crate) struct RestartWindow {
+    times: VecDeque<Instant>,
+}
+
+impl RestartWindow {
+    pub(crate) fn new() -> RestartWindow {
+        RestartWindow::default()
+    }
+
+    /// Try to book a restart now. `Some(backoff)` admits it — sleep
+    /// that long, then re-enter the worker body; the backoff doubles
+    /// with the number of restarts currently inside the window, so an
+    /// isolated panic after a quiet spell restarts promptly again.
+    /// `None` means the window budget is exhausted.
+    pub(crate) fn admit(&mut self, policy: &RestartPolicy) -> Option<Duration> {
+        let now = Instant::now();
+        while let Some(&t) = self.times.front() {
+            if now.duration_since(t) > policy.window {
+                self.times.pop_front();
+            } else {
+                break;
+            }
+        }
+        if self.times.len() >= policy.max_restarts as usize {
+            return None;
+        }
+        self.times.push_back(now);
+        Some(policy.backoff_for(self.times.len() as u32))
+    }
+}
+
 /// How a supervised worker ended.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SupervisedExit {
     /// `body` returned normally (queue closed and drained).
     Clean,
-    /// `body` panicked more than `max_restarts` times.
+    /// `body` panicked more than `max_restarts` times within one
+    /// [`RestartPolicy::window`].
     RestartsExhausted,
 }
 
 /// Run one worker "life" repeatedly: `body` returning means clean
-/// shutdown; `body` panicking consumes one restart from the budget
-/// (recorded in `restarts` and as a `worker_restart` event in the
-/// process [`journal`] under `route`), sleeps the backoff, and
-/// re-enters.
+/// shutdown; `body` panicking consumes one restart from the sliding
+/// window budget (recorded in `restarts` and as a `worker_restart`
+/// event in the process [`journal`] under `route`), sleeps the
+/// backoff, and re-enters.
 pub fn supervise(
     policy: &RestartPolicy,
     restarts: &AtomicU64,
     route: &str,
     mut body: impl FnMut(),
 ) -> SupervisedExit {
-    let mut attempts: u32 = 0;
+    let mut window = RestartWindow::new();
     loop {
         match catch_unwind(AssertUnwindSafe(&mut body)) {
             Ok(()) => return SupervisedExit::Clean,
             Err(_panic) => {
-                attempts += 1;
-                if attempts > policy.max_restarts {
+                let Some(backoff) = window.admit(policy) else {
                     return SupervisedExit::RestartsExhausted;
-                }
+                };
                 let total = restarts.fetch_add(1, Ordering::Relaxed) + 1;
                 journal().emit(EventKind::WorkerRestart {
                     route: route.to_string(),
                     restarts: total,
                 });
-                std::thread::sleep(policy.backoff_for(attempts));
+                std::thread::sleep(backoff);
             }
         }
     }
@@ -124,6 +171,7 @@ mod tests {
             max_restarts: 5,
             backoff: Duration::from_micros(50),
             max_backoff: Duration::from_millis(1),
+            ..RestartPolicy::default()
         };
         let restarts = AtomicU64::new(0);
         let mut runs = 0;
@@ -151,6 +199,7 @@ mod tests {
             max_restarts: 2,
             backoff: Duration::from_micros(50),
             max_backoff: Duration::from_millis(1),
+            ..RestartPolicy::default()
         };
         let restarts = AtomicU64::new(0);
         let mut runs = 0;
@@ -162,6 +211,66 @@ mod tests {
         // budget of 2 restarts = 3 lives total
         assert_eq!(runs, 3);
         assert_eq!(restarts.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn rare_panics_outlive_a_lifetime_budget() {
+        // Regression for the lifetime-budget bug: 6 panics spaced
+        // wider than the window must all be forgiven even though the
+        // lifetime total is triple the per-window budget. Sleeps only
+        // ever get longer under load, which keeps the spacing above
+        // the window — the test cannot flake toward the old behavior.
+        let policy = RestartPolicy {
+            max_restarts: 2,
+            window: Duration::from_millis(40),
+            backoff: Duration::from_micros(50),
+            max_backoff: Duration::from_millis(1),
+        };
+        let restarts = AtomicU64::new(0);
+        let mut runs = 0;
+        let exit = supervise(&policy, &restarts, "sup-test-window", || {
+            runs += 1;
+            if runs <= 6 {
+                std::thread::sleep(Duration::from_millis(45));
+                panic!("rare");
+            }
+        });
+        assert_eq!(exit, SupervisedExit::Clean);
+        assert_eq!(runs, 7, "a rare-panic worker was permanently killed");
+        assert_eq!(restarts.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn burst_still_exhausts_within_the_window() {
+        // A tight panic loop must still die: window budget of 2, three
+        // immediate panics — the third finds the window full.
+        let policy = RestartPolicy {
+            max_restarts: 2,
+            window: Duration::from_secs(60),
+            backoff: Duration::from_micros(50),
+            max_backoff: Duration::from_millis(1),
+        };
+        let mut window = RestartWindow::new();
+        assert!(window.admit(&policy).is_some());
+        assert!(window.admit(&policy).is_some());
+        assert!(window.admit(&policy).is_none());
+    }
+
+    #[test]
+    fn window_drains_and_readmits() {
+        let policy = RestartPolicy {
+            max_restarts: 1,
+            window: Duration::from_millis(20),
+            backoff: Duration::from_millis(3),
+            max_backoff: Duration::from_secs(1),
+        };
+        let mut window = RestartWindow::new();
+        assert_eq!(window.admit(&policy), Some(Duration::from_millis(3)));
+        assert!(window.admit(&policy).is_none());
+        std::thread::sleep(Duration::from_millis(25));
+        // the old entry aged out; backoff restarts from the base since
+        // only one restart is inside the window again
+        assert_eq!(window.admit(&policy), Some(Duration::from_millis(3)));
     }
 
     #[test]
@@ -183,6 +292,7 @@ mod tests {
             max_restarts: 10,
             backoff: Duration::from_millis(10),
             max_backoff: Duration::from_millis(65),
+            ..RestartPolicy::default()
         };
         assert_eq!(p.backoff_for(1), Duration::from_millis(10));
         assert_eq!(p.backoff_for(2), Duration::from_millis(20));

@@ -33,6 +33,11 @@
 //!   bag-of-words).
 //! * [`runtime`] — PJRT executor loading AOT-compiled XLA artifacts
 //!   produced by `python/compile/aot.py` (Layer 1/2 of the stack).
+//! * [`cluster`] — scale-out serving: a deterministic consistent-hash
+//!   ring, a heartbeat/replication control plane (`tmi control`), line
+//!   protocol nodes (`tmi serve --node-id`), and a deadline/failover
+//!   request router (`tmi route`), all speaking the existing protocol
+//!   and reusing the registry's checksummed images for replication.
 //! * [`coordinator`] — serving layer (std::thread + condvar queues):
 //!   hot-swap snapshot registry, bounded queues with load shedding,
 //!   dynamic batcher workers, CPU-indexed and XLA backends, metrics,
@@ -52,6 +57,7 @@
 //!   timing helpers (no external deps on the hot path).
 
 pub mod bench_harness;
+pub mod cluster;
 pub mod coordinator;
 pub mod data;
 pub mod engine;

@@ -26,6 +26,10 @@ use anyhow::{bail, ensure, Context, Result};
 
 use tsetlin_index::bench_harness::figures::write_figures;
 use tsetlin_index::bench_harness::tables::{run_table, Scale, TableId};
+use tsetlin_index::cluster::{
+    serve_control, serve_node, serve_router, ControlConfig, ControlPlane, NodeOptions, NodeSpec,
+    NodeState, Router, RouterConfig,
+};
 use tsetlin_index::coordinator::online::{replay_feedback, reseed_seed};
 use tsetlin_index::coordinator::server::{serve_metrics_http_with, serve_tcp_with};
 use tsetlin_index::coordinator::{
@@ -460,6 +464,9 @@ fn parse_online_config(args: &Args) -> Result<OnlineConfig> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    if args.get("node-id").is_some() {
+        return cmd_serve_node(args);
+    }
     if args.get("registry").is_some() {
         return cmd_serve_registry(args);
     }
@@ -666,6 +673,161 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     coord.shutdown();
     dump_journal_on_shutdown("serve loop stopped");
+    eprintln!("shutdown complete");
+    Ok(())
+}
+
+/// `tmi serve --node-id <id>`: a cluster serving node. Starts empty
+/// (routes arrive as `replicate` pushes from the control plane) or
+/// pre-seeded from `--model`; everything else on the port is the
+/// ordinary line protocol.
+fn cmd_serve_node(args: &Args) -> Result<()> {
+    let id = args.get("node-id").unwrap().to_string();
+    if args.get("registry").is_some() {
+        bail!(
+            "--node-id and --registry are mutually exclusive: in cluster mode the \
+             control plane owns the registry and replicates it to nodes"
+        );
+    }
+    if args.has_flag("feedback") || args.has_flag("watch") {
+        bail!(
+            "--node-id is incompatible with --feedback/--watch: the control \
+             plane is the route publisher in cluster mode"
+        );
+    }
+    let workers: usize = args.parse_or("workers", 1)?;
+    let queue_cap: usize = args.parse_or("queue-cap", 1024)?;
+    let route_config = RouteConfig {
+        policy: BatchPolicy::default(),
+        workers,
+        queue_cap,
+        ..RouteConfig::default()
+    };
+    let mut coord = Coordinator::new();
+    if let Some(model_path) = args.get("model") {
+        let tm = io::load(model_path)?;
+        let infer_mode = parse_infer_mode(args)?;
+        let snap = Arc::new(ModelSnapshot::with_mode(tm, 1, infer_mode));
+        coord.register_model("cpu", snap, route_config);
+        eprintln!("node '{id}': pre-seeded route 'cpu' from {model_path}");
+    }
+    let mut node_opts = NodeOptions::new(id.as_str());
+    node_opts.route_config = route_config;
+    let node = Arc::new(NodeState::new(coord, node_opts));
+    let listen = args.get_or("listen", "127.0.0.1:7070");
+    let listener =
+        std::net::TcpListener::bind(&listen).with_context(|| format!("binding {listen}"))?;
+    let opts = parse_serve_options(args)?;
+    let handle = node.handle();
+    let stop = shutdown_flag();
+    setup_observability(args, &handle, &stop, opts)?;
+    eprintln!(
+        "cluster node '{id}' on {listen}: {} route(s); replication protocol live \
+         ({} worker(s)/route, queue bound {queue_cap})",
+        handle.models().len(),
+        workers.max(1),
+    );
+    serve_node(listener, Arc::clone(&node), Arc::clone(&stop), opts)?;
+    eprintln!("shutdown: stopped accepting; draining queues");
+    node.shutdown();
+    dump_journal_on_shutdown("node serve loop stopped");
+    eprintln!("shutdown complete");
+    Ok(())
+}
+
+/// `tmi control`: the cluster control plane — heartbeat every node,
+/// evict on missed beats, re-admit on recovery, replicate the
+/// registry's published snapshots to each route's owners, and serve
+/// the `cluster` / `metrics` verbs.
+fn cmd_control(args: &Args) -> Result<()> {
+    let nodes = NodeSpec::parse_list(
+        args.get("nodes")
+            .context("--nodes id@host:port[,id@host:port ...] required")?,
+    )
+    .map_err(anyhow::Error::msg)?;
+    let dir = PathBuf::from(
+        args.get("registry")
+            .context("--registry <dir> required (the replication source)")?,
+    );
+    let mut cfg = ControlConfig::new(nodes, dir.clone());
+    cfg.heartbeat = std::time::Duration::from_millis(args.parse_or("heartbeat-ms", 500u64)?);
+    cfg.miss_threshold = args.parse_or("miss-threshold", 3u32)?;
+    cfg.replicas = args.parse_or("replicas", 2usize)?;
+    cfg.probe_timeout =
+        std::time::Duration::from_millis(args.parse_or("probe-timeout-ms", 500u64)?);
+    ensure!(cfg.miss_threshold >= 1, "--miss-threshold must be at least 1");
+    ensure!(cfg.replicas >= 1, "--replicas must be at least 1");
+    let listen = args.get_or("listen", "127.0.0.1:7090");
+    let listener =
+        std::net::TcpListener::bind(&listen).with_context(|| format!("binding {listen}"))?;
+    let mut plane = ControlPlane::new(cfg.clone());
+    let view = plane.shared_view();
+    let stop = shutdown_flag();
+    let stop_plane = Arc::clone(&stop);
+    let runner = std::thread::Builder::new()
+        .name("tmi-control".into())
+        .spawn(move || plane.run(&stop_plane))
+        .context("spawning control-plane thread")?;
+    eprintln!(
+        "control plane on {listen}: {} node(s), replicas={}, heartbeat {}ms, \
+         evict after {} missed beat(s), registry {}",
+        cfg.nodes.len(),
+        cfg.replicas,
+        cfg.heartbeat.as_millis(),
+        cfg.miss_threshold,
+        dir.display(),
+    );
+    serve_control(listener, view, Arc::clone(&stop))?;
+    stop.store(true, Ordering::SeqCst);
+    runner.join().ok();
+    dump_journal_on_shutdown("control plane stopped");
+    eprintln!("shutdown complete");
+    Ok(())
+}
+
+/// `tmi route`: the request router — forwards client lines to the
+/// owning node with a per-request deadline, backed-off failover across
+/// replicas, and `err unavailable` degradation.
+fn cmd_route(args: &Args) -> Result<()> {
+    let static_nodes = match args.get("nodes") {
+        Some(spec) => NodeSpec::parse_list(spec).map_err(anyhow::Error::msg)?,
+        None => Vec::new(),
+    };
+    let control = args.get("control").map(str::to_string);
+    ensure!(
+        control.is_some() || !static_nodes.is_empty(),
+        "--nodes id@host:port,... and/or --control host:port required"
+    );
+    let mut cfg = RouterConfig::new(static_nodes);
+    cfg.control = control;
+    cfg.deadline = std::time::Duration::from_millis(args.parse_or("deadline-ms", 2000u64)?);
+    cfg.poll = std::time::Duration::from_millis(args.parse_or("poll-ms", 500u64)?);
+    let listen = args.get_or("listen", "127.0.0.1:7080");
+    let listener =
+        std::net::TcpListener::bind(&listen).with_context(|| format!("binding {listen}"))?;
+    let router = Arc::new(Router::new(cfg.clone()));
+    // seed membership from the control plane before accepting traffic
+    // (a failed first poll just keeps the static seed)
+    router.poll_membership();
+    let stop = shutdown_flag();
+    if cfg.control.is_some() {
+        let poll_router = Arc::clone(&router);
+        let stop_poll = Arc::clone(&stop);
+        std::thread::Builder::new()
+            .name("tmi-route-poll".into())
+            .spawn(move || poll_router.run_membership_poll(&stop_poll))
+            .context("spawning membership poll thread")?;
+    }
+    eprintln!(
+        "router on {listen}: deadline {}ms, membership {}",
+        cfg.deadline.as_millis(),
+        match &cfg.control {
+            Some(c) => format!("polled from control plane {c} every {}ms", cfg.poll.as_millis()),
+            None => format!("static ({} node(s))", cfg.nodes.len()),
+        },
+    );
+    serve_router(listener, router, Arc::clone(&stop))?;
+    dump_journal_on_shutdown("router stopped");
     eprintln!("shutdown complete");
     Ok(())
 }
@@ -1233,8 +1395,19 @@ fn cmd_registry(action: &str, args: &Args) -> Result<()> {
 }
 
 fn cmd_loadgen(args: &Args) -> Result<()> {
+    let targets: Vec<String> = args
+        .get("targets")
+        .map(|t| {
+            t.split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(str::to_string)
+                .collect()
+        })
+        .unwrap_or_default();
     let cfg = LoadgenConfig {
         addr: args.get_or("addr", "127.0.0.1:7070"),
+        targets,
         model: args.get_or("model", "cpu"),
         connections: args.parse_or("connections", 4)?,
         rate: args.parse_or("rate", 0.0)?,
@@ -1258,7 +1431,11 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             String::new()
         },
         cfg.duration.as_secs_f64(),
-        cfg.addr,
+        if cfg.targets.is_empty() {
+            cfg.addr.clone()
+        } else {
+            cfg.targets.join(",")
+        },
         cfg.model,
     );
     let report = tsetlin_index::coordinator::loadgen::run(&cfg)?;
@@ -1414,7 +1591,7 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: tmi <train|eval|table|work-ratio|serve|loadgen|promcheck|registry|info> [--key value ...]
+const USAGE: &str = "usage: tmi <train|eval|table|work-ratio|serve|control|route|loadgen|promcheck|registry|info> [--key value ...]
   train      --dataset mnist|fashion|imdb [--levels N|--features N] --clauses N
              --epochs N [--backend naive|bitpacked|indexed] [--out model.tm]
              [--registry DIR [--route NAME] [--retain K]]  (publish the trained
@@ -1477,7 +1654,38 @@ const USAGE: &str = "usage: tmi <train|eval|table|work-ratio|serve|loadgen|promc
              [--obs on|off]   (per-request stage tracing; off removes the
                                per-request clock reads, keeping batch-wise
                                probes and the event journal; default on)
+             [--node-id ID]   (cluster node mode: adds 'ping' liveness and
+                               'replicate' snapshot pushes to the protocol;
+                               starts empty — or pre-seeded via --model — and
+                               receives routes from `tmi control`; exclusive
+                               with --registry/--feedback/--watch)
+  control    --nodes id@host:port,...  --registry DIR  [--listen host:port]
+             (cluster control plane: heartbeats every node, evicts after
+              --miss-threshold missed beats, re-admits on recovery, and
+              replicates each route's published registry snapshot — the
+              checksummed v3 image, CRC-verified again on the node — to its
+              --replicas owners on the consistent-hash ring; serves the
+              'cluster', 'ping', and per-node-label 'metrics' verbs)
+             [--heartbeat-ms N]    (probe cadence, default 500)
+             [--miss-threshold N]  (missed beats before eviction, default 3)
+             [--replicas N]        (owners per route, default 2)
+             [--probe-timeout-ms N] (per-probe timeout, default 500)
+  route      [--nodes id@host:port,...] [--control host:port]
+             [--listen host:port]
+             (request router: forwards protocol lines to the route's owning
+              node, retrying the next replica with capped exponential backoff
+              on connect failure / timeout / 'err busy'; degrades to a
+              complete 'err unavailable' line when every replica is down —
+              never a hang, never a torn reply. Membership is polled from
+              --control when given (last-known assignment keeps serving
+              through a control-plane partition), else static --nodes)
+             [--deadline-ms N]  (whole-request deadline, default 2000)
+             [--poll-ms N]      (membership poll cadence, default 500)
   loadgen    --features N (model's raw feature width) [--addr host:port]
+             [--targets host:port,...]  (cluster mode: spread closed-loop
+                               connections across nodes; a connection whose
+                               node dies fails over to the next target and
+                               the run continues — reported as failovers=N)
              [--model cpu] [--connections N] [--duration SECS]
              [--rate R]   (total offered req/s, open loop; 0 = closed loop)
              [--feedback-rate F]  (fraction of requests sent as 'feedback'
@@ -1529,6 +1737,8 @@ fn main() -> Result<()> {
         "table" => cmd_table(&args),
         "work-ratio" => cmd_work_ratio(&args),
         "serve" => cmd_serve(&args),
+        "control" => cmd_control(&args),
+        "route" => cmd_route(&args),
         "loadgen" => cmd_loadgen(&args),
         "promcheck" => cmd_promcheck(&args),
         "info" => cmd_info(&args),

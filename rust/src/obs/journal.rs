@@ -74,6 +74,25 @@ pub enum EventKind {
     },
     /// The serve loop began draining (signal or shutdown).
     Drain { reason: String },
+    /// Control plane: a node answered a heartbeat after being down (or
+    /// was seen for the first time) — admitted to the serving set.
+    NodeUp { node: String },
+    /// Control plane: a node missed a heartbeat while in the serving
+    /// set (early warning; eviction follows at the missed-beat
+    /// threshold).
+    NodeDown { node: String, missed: u64 },
+    /// Control plane: a node crossed the missed-beat threshold and was
+    /// evicted from the serving set until it answers again.
+    NodeEvict { node: String, missed: u64 },
+    /// A snapshot replication landed: the control plane pushed
+    /// `route`@`version` to `node` and the node installed it (CRC
+    /// verified). Emitted on both ends — route-scoped so it shows in
+    /// the route's `stats events`.
+    Replicate {
+        node: String,
+        route: String,
+        version: u64,
+    },
 }
 
 impl EventKind {
@@ -92,6 +111,10 @@ impl EventKind {
             EventKind::FeedbackPublish { .. } => "feedback_publish",
             EventKind::WalReplay { .. } => "wal_replay",
             EventKind::Drain { .. } => "drain",
+            EventKind::NodeUp { .. } => "node_up",
+            EventKind::NodeDown { .. } => "node_down",
+            EventKind::NodeEvict { .. } => "node_evict",
+            EventKind::Replicate { .. } => "replicate",
         }
     }
 
@@ -108,8 +131,12 @@ impl EventKind {
             | EventKind::WatchReload { route, .. }
             | EventKind::WatchFallback { route, .. }
             | EventKind::FeedbackPublish { route, .. }
-            | EventKind::WalReplay { route, .. } => Some(route),
-            EventKind::Drain { .. } => None,
+            | EventKind::WalReplay { route, .. }
+            | EventKind::Replicate { route, .. } => Some(route),
+            EventKind::Drain { .. }
+            | EventKind::NodeUp { .. }
+            | EventKind::NodeDown { .. }
+            | EventKind::NodeEvict { .. } => None,
         }
     }
 
@@ -166,6 +193,15 @@ impl EventKind {
             }
             EventKind::Drain { reason } => {
                 let _ = write!(out, " reason={}", quote(reason));
+            }
+            EventKind::NodeUp { node } => {
+                let _ = write!(out, " node={node}");
+            }
+            EventKind::NodeDown { node, missed } | EventKind::NodeEvict { node, missed } => {
+                let _ = write!(out, " node={node} missed={missed}");
+            }
+            EventKind::Replicate { node, version, .. } => {
+                let _ = write!(out, " node={node} version={version}");
             }
         }
     }
@@ -408,6 +444,35 @@ mod tests {
         assert!(evs[1]
             .to_line()
             .contains("kind=wal_replay route=cpu records=12 stale=3 skipped=1"));
+    }
+
+    #[test]
+    fn cluster_events_render_their_fields() {
+        let j = Journal::new(8);
+        j.emit(EventKind::NodeUp { node: "n1".into() });
+        j.emit(EventKind::NodeDown {
+            node: "n1".into(),
+            missed: 1,
+        });
+        j.emit(EventKind::NodeEvict {
+            node: "n1".into(),
+            missed: 3,
+        });
+        j.emit(EventKind::Replicate {
+            node: "n2".into(),
+            route: "cpu".into(),
+            version: 4,
+        });
+        let evs = j.snapshot();
+        assert!(evs[0].to_line().contains("kind=node_up node=n1"));
+        assert!(evs[1].to_line().contains("kind=node_down node=n1 missed=1"));
+        assert!(evs[2].to_line().contains("kind=node_evict node=n1 missed=3"));
+        // node liveness is process-wide; replication is route-scoped
+        assert_eq!(evs[2].kind.route(), None);
+        assert_eq!(evs[3].kind.route(), Some("cpu"));
+        assert!(evs[3]
+            .to_line()
+            .contains("kind=replicate route=cpu node=n2 version=4"));
     }
 
     #[test]

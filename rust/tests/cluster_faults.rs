@@ -1,0 +1,475 @@
+//! Cluster fault-injection harness: the three headline scenarios plus
+//! liveness bookkeeping, all driven through real TCP (subprocess nodes
+//! where kill -9 matters, the [`faultnet`] chaos proxy where byte-level
+//! damage matters).
+//!
+//! 1. kill -9 one node under client load → the router re-homes every
+//!    request; zero torn replies, zero errors surface to clients.
+//! 2. partition the control plane → the router and nodes keep serving
+//!    the last-known assignment.
+//! 3. corrupt / truncate the replication stream mid-transfer → the
+//!    node's CRC check quarantines the push while the old version
+//!    keeps serving; a clean retry installs it.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use tsetlin_index::cluster::faultnet::{ChaosProxy, FaultPlan};
+use tsetlin_index::cluster::{
+    push_snapshot, serve_control, serve_node, ControlConfig, ControlPlane, NodeOptions, NodeSpec,
+    NodeState, Router, RouterConfig,
+};
+use tsetlin_index::coordinator::{Coordinator, RouteConfig, ServeOptions};
+use tsetlin_index::engine::{InferMode, ModelSnapshot};
+use tsetlin_index::eval::Backend;
+use tsetlin_index::obs::journal;
+use tsetlin_index::registry::Registry;
+use tsetlin_index::tm::classifier::MultiClassTM;
+use tsetlin_index::tm::io as model_io;
+use tsetlin_index::tm::params::TMParams;
+use tsetlin_index::tm::trainer::Trainer;
+use tsetlin_index::util::{BitVec, Rng};
+
+fn tmi() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_tmi"))
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "tmi-cluster-{tag}-{}-{}",
+        std::process::id(),
+        std::thread::current().name().unwrap_or("t").replace("::", "-")
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A small real model: 10 features, 2 classes (the registry_faults
+/// fixture). Infer lines carry 10 feature bits.
+fn trained(seed: u64) -> MultiClassTM {
+    let params = TMParams::new(2, 8, 10).with_seed(seed);
+    let mut tr = Trainer::new(params, Backend::Indexed);
+    let mut rng = Rng::new(seed ^ 0xfau64);
+    let samples: Vec<(BitVec, usize)> = (0..100)
+        .map(|_| {
+            let y = rng.bern(0.5) as usize;
+            let bits: Vec<bool> = (0..10)
+                .map(|k| if k == 0 { y == 1 } else { rng.bern(0.4) })
+                .collect();
+            let mut lits = bits.clone();
+            lits.extend(bits.iter().map(|b| !b));
+            (BitVec::from_bools(&lits), y)
+        })
+        .collect();
+    for _ in 0..3 {
+        tr.train_epoch(samples.iter().map(|(l, y)| (l, *y)));
+    }
+    tr.tm
+}
+
+fn free_addr() -> String {
+    let l = TcpListener::bind("127.0.0.1:0").unwrap();
+    l.local_addr().unwrap().to_string()
+}
+
+/// Spawn a subprocess cluster node (`tmi serve --node-id`), empty.
+fn spawn_node_proc(id: &str, addr: &str) -> Child {
+    tmi()
+        .args(["serve", "--node-id", id, "--listen", addr])
+        .spawn()
+        .expect("spawning tmi node")
+}
+
+/// One request/one reply over a fresh connection. `None` on any
+/// transport failure or torn (newline-less) reply.
+fn ask(addr: &str, line: &str) -> Option<String> {
+    let stream = TcpStream::connect(addr).ok()?;
+    stream.set_read_timeout(Some(Duration::from_secs(5))).ok()?;
+    let mut reader = BufReader::new(stream.try_clone().ok()?);
+    let mut stream = stream;
+    stream.write_all(line.as_bytes()).ok()?;
+    let mut reply = String::new();
+    reader.read_line(&mut reply).ok()?;
+    reply.ends_with('\n').then_some(reply)
+}
+
+fn wait_until(what: &str, deadline: Duration, mut pred: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !pred() {
+        assert!(t0.elapsed() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+/// Start an in-process node (listener thread + NodeState) serving a
+/// pre-registered `cpu` route at `version`.
+fn inproc_node(
+    id: &str,
+    tm: &MultiClassTM,
+    version: u64,
+) -> (Arc<NodeState>, String, Arc<AtomicBool>) {
+    let mut coord = Coordinator::new();
+    let snap = Arc::new(ModelSnapshot::with_mode(tm.clone(), version, InferMode::Auto));
+    coord.register_model("cpu", snap, RouteConfig::default());
+    let node = Arc::new(NodeState::new(coord, NodeOptions::new(id)));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let (node2, stop2) = (Arc::clone(&node), Arc::clone(&stop));
+    std::thread::spawn(move || {
+        let _ = serve_node(listener, node2, stop2, ServeOptions::default());
+    });
+    (node, addr, stop)
+}
+
+fn router_over(specs: Vec<NodeSpec>, deadline: Duration) -> Router {
+    let mut cfg = RouterConfig::new(specs);
+    cfg.deadline = deadline;
+    cfg.backoff_base = Duration::from_millis(5);
+    cfg.backoff_cap = Duration::from_millis(50);
+    Router::new(cfg)
+}
+
+/// Scenario 1 — kill -9 a node under load: every reply the clients see
+/// is complete and successful; the router re-homes to the survivor.
+#[test]
+fn killing_a_node_under_load_reroutes_with_zero_torn_replies() {
+    let dir = temp_dir("kill");
+    let tm = trained(21);
+    {
+        let mut reg = Registry::open(&dir, 4).unwrap();
+        assert_eq!(reg.publish("cpu", &tm, InferMode::Auto).unwrap(), 1);
+    }
+    let (addr1, addr2) = (free_addr(), free_addr());
+    let mut n1 = KillOnDrop(spawn_node_proc("n1", &addr1));
+    let _n2 = KillOnDrop(spawn_node_proc("n2", &addr2));
+
+    // control plane replicates cpu to both nodes (replicas=2)
+    let mut cfg = ControlConfig::new(
+        vec![
+            NodeSpec::parse(&format!("n1@{addr1}")).unwrap(),
+            NodeSpec::parse(&format!("n2@{addr2}")).unwrap(),
+        ],
+        &dir,
+    );
+    cfg.heartbeat = Duration::from_millis(100);
+    cfg.probe_timeout = Duration::from_millis(300);
+    let mut plane = ControlPlane::new(cfg);
+    let stop_plane = Arc::new(AtomicBool::new(false));
+    let plane_thread = {
+        let stop = Arc::clone(&stop_plane);
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                plane.tick();
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        })
+    };
+    // both nodes must hold the route before load starts
+    for addr in [&addr1, &addr2] {
+        wait_until("replication to both nodes", Duration::from_secs(30), || {
+            ask(addr, "stats cpu\n").is_some_and(|r| r.starts_with("ok model=cpu"))
+        });
+    }
+
+    let router = Arc::new(router_over(
+        vec![
+            NodeSpec::parse(&format!("n1@{addr1}")).unwrap(),
+            NodeSpec::parse(&format!("n2@{addr2}")).unwrap(),
+        ],
+        Duration::from_secs(5),
+    ));
+    let run = Arc::new(AtomicBool::new(true));
+    let clients: Vec<_> = (0..3)
+        .map(|c| {
+            let router = Arc::clone(&router);
+            let run = Arc::clone(&run);
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(c as u64 + 7);
+                let (mut ok, mut torn, mut errs) = (0u64, 0u64, 0u64);
+                while run.load(Ordering::Relaxed) {
+                    let bits: String =
+                        (0..10).map(|_| if rng.bern(0.5) { '1' } else { '0' }).collect();
+                    let reply = router.respond(&format!("infer cpu {bits}\n"));
+                    if !reply.ends_with('\n')
+                        || !(reply.starts_with("ok ") || reply.starts_with("err "))
+                    {
+                        torn += 1;
+                    } else if reply.starts_with("ok ") {
+                        ok += 1;
+                    } else {
+                        errs += 1;
+                    }
+                }
+                (ok, torn, errs)
+            })
+        })
+        .collect();
+
+    std::thread::sleep(Duration::from_millis(400));
+    n1.0.kill().expect("kill -9 n1"); // SIGKILL: no drain, no goodbye
+    n1.0.wait().unwrap();
+    std::thread::sleep(Duration::from_millis(800));
+    run.store(false, Ordering::Relaxed);
+    let (mut ok, mut torn, mut errs) = (0u64, 0u64, 0u64);
+    for c in clients {
+        let (o, t, e) = c.join().unwrap();
+        ok += o;
+        torn += t;
+        errs += e;
+    }
+    stop_plane.store(true, Ordering::Relaxed);
+    plane_thread.join().unwrap();
+    assert_eq!(torn, 0, "client saw a torn reply across the kill");
+    assert_eq!(errs, 0, "client saw an error; failover must absorb the kill");
+    assert!(ok > 50, "load should have flowed throughout (ok={ok})");
+    // the survivor alone still answers
+    let reply = ask(&addr2, "infer cpu 1010101010\n").expect("survivor must serve");
+    assert!(reply.starts_with("ok "), "survivor reply: {reply:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Scenario 2 — control-plane partition: the router's last-known
+/// assignment keeps the data path alive with the control plane gone.
+#[test]
+fn control_plane_partition_keeps_last_known_assignment_serving() {
+    let tm = trained(22);
+    let (_node, node_addr, node_stop) = inproc_node("n1", &tm, 1);
+
+    // a live control plane the router learns membership from
+    let control_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let control_addr = control_listener.local_addr().unwrap().to_string();
+    let dir = temp_dir("partition"); // empty registry: nothing to replicate
+    let mut ccfg =
+        ControlConfig::new(vec![NodeSpec::parse(&format!("n1@{node_addr}")).unwrap()], &dir);
+    ccfg.heartbeat = Duration::from_millis(100);
+    ccfg.probe_timeout = Duration::from_millis(200);
+    let mut plane = ControlPlane::new(ccfg);
+    plane.tick(); // one real heartbeat so the view is honest
+    let view = plane.shared_view();
+    let control_stop = Arc::new(AtomicBool::new(false));
+    let control_thread = {
+        let stop = Arc::clone(&control_stop);
+        std::thread::spawn(move || {
+            let _ = serve_control(control_listener, view, stop);
+        })
+    };
+
+    let mut rcfg = RouterConfig::new(vec![]);
+    rcfg.control = Some(control_addr.clone());
+    rcfg.deadline = Duration::from_secs(2);
+    let router = Router::new(rcfg);
+    router.poll_membership();
+    let before = router.respond("cluster\n");
+    assert!(before.contains("nodes=1"), "membership poll failed: {before:?}");
+    assert!(
+        router.respond("infer cpu 1010101010\n").starts_with("ok "),
+        "data path must work with the control plane up"
+    );
+
+    // partition: the control plane vanishes entirely
+    control_stop.store(true, Ordering::Relaxed);
+    control_thread.join().unwrap();
+    router.poll_membership(); // must keep last-known on failure
+    for _ in 0..20 {
+        let reply = router.respond("infer cpu 1010101010\n");
+        assert!(
+            reply.starts_with("ok "),
+            "last-known assignment must keep serving through the partition: {reply:?}"
+        );
+    }
+    let after = router.respond("cluster\n");
+    assert!(
+        after.contains("id=n1"),
+        "last-known membership must survive the partition: {after:?}"
+    );
+    node_stop.store(true, Ordering::Relaxed);
+}
+
+/// Scenario 3 — corrupted replication stream: the CRC check refuses
+/// the transfer (quarantine journaled), the old version keeps serving,
+/// and a clean retry installs the new version.
+#[test]
+fn corrupt_replication_stream_is_quarantined_and_old_version_serves() {
+    let v1 = trained(23);
+    let v2 = trained(24);
+    let (node, node_addr, node_stop) = inproc_node("n1", &v1, 1);
+    let proxy = ChaosProxy::spawn(node_addr.as_str()).unwrap();
+    let image = model_io::serialize(&v2);
+
+    // flip one byte mid-stream (after the replicate header would have
+    // passed; offsets are absolute over the client->node byte stream)
+    proxy.set(FaultPlan {
+        corrupt_at: Some(64 + image.len() as u64 / 2),
+        ..FaultPlan::default()
+    });
+    let err = push_snapshot(
+        proxy.addr(),
+        "cpu",
+        2,
+        InferMode::Auto,
+        &image,
+        Duration::from_secs(10),
+    )
+    .expect_err("a corrupted stream must be refused");
+    assert!(err.contains("corrupt"), "refusal must name the CRC failure: {err}");
+    let stats = ask(&node_addr, "stats cpu\n").unwrap();
+    assert!(stats.contains("version=1"), "old version must keep serving: {stats}");
+    assert!(
+        ask(&node_addr, "infer cpu 1010101010\n").unwrap().starts_with("ok "),
+        "route must keep answering after a refused push"
+    );
+    let quarantines = journal()
+        .events_for("cpu")
+        .iter()
+        .filter(|e| e.kind.name() == "quarantine")
+        .count();
+    assert!(quarantines >= 1, "the refusal must be journaled as a quarantine");
+
+    // truncation mid-body: refused the same way
+    proxy.set(FaultPlan {
+        truncate_after: Some(64 + image.len() as u64 / 3),
+        ..FaultPlan::default()
+    });
+    let err = push_snapshot(
+        proxy.addr(),
+        "cpu",
+        3,
+        InferMode::Auto,
+        &image,
+        Duration::from_secs(10),
+    )
+    .expect_err("a truncated stream must be refused");
+    // whether the node's "err truncated" verdict survives the proxy
+    // tearing both directions down is racy; the binding guarantees are
+    // the refusal itself and that nothing was installed
+    assert!(!err.is_empty());
+    let stats = ask(&node_addr, "stats cpu\n").unwrap();
+    assert!(stats.contains("version=1"), "old version must still serve: {stats}");
+
+    // healed proxy: the retry lands and v2 serves
+    proxy.heal();
+    let okay = push_snapshot(
+        proxy.addr(),
+        "cpu",
+        2,
+        InferMode::Auto,
+        &image,
+        Duration::from_secs(10),
+    )
+    .expect("clean retry must install");
+    assert!(okay.contains("version=2"), "install ack: {okay}");
+    let stats = ask(&node_addr, "stats cpu\n").unwrap();
+    assert!(stats.contains("version=2"), "new version must serve after retry: {stats}");
+    assert_eq!(node.handle().models(), vec!["cpu".to_string()]);
+    proxy.shutdown();
+    node_stop.store(true, Ordering::Relaxed);
+}
+
+/// Heartbeats: missed beats evict, recovery re-admits, and the
+/// replication cache is cleared so the re-admitted node is resynced.
+#[test]
+fn missed_beats_evict_and_recovery_readmits_with_resync() {
+    let dir = temp_dir("evict");
+    let tm = trained(25);
+    {
+        let mut reg = Registry::open(&dir, 4).unwrap();
+        assert_eq!(reg.publish("cpu", &tm, InferMode::Auto).unwrap(), 1);
+    }
+    let (node, node_addr, node_stop) = inproc_node("n1", &tm, 0);
+    let proxy = ChaosProxy::spawn(node_addr.as_str()).unwrap();
+
+    let mut cfg = ControlConfig::new(
+        vec![NodeSpec::parse(&format!("n1@{}", proxy.addr())).unwrap()],
+        &dir,
+    );
+    cfg.miss_threshold = 2;
+    cfg.probe_timeout = Duration::from_millis(200);
+    let mut plane = ControlPlane::new(cfg);
+
+    plane.tick(); // probe ok + replicate v1
+    let v = plane.view();
+    assert!(v.nodes[0].alive);
+    assert_eq!(v.nodes[0].replications, 1, "first tick must replicate: {v:?}");
+    assert_eq!(v.routes.len(), 1);
+    assert_eq!(v.routes[0].owners, vec!["n1".to_string()]);
+
+    proxy.set(FaultPlan {
+        blackhole: true,
+        ..FaultPlan::default()
+    });
+    plane.tick();
+    assert!(plane.view().nodes[0].alive, "one miss must not evict at threshold 2");
+    plane.tick();
+    let v = plane.view();
+    assert!(!v.nodes[0].alive, "threshold crossed: evicted");
+    assert!(v.routes[0].owners.is_empty(), "an evicted node owns nothing");
+    let names: Vec<&str> = journal()
+        .events_for("") // process-wide events only
+        .iter()
+        .map(|e| e.kind.name())
+        .filter(|n| n.starts_with("node_"))
+        .collect();
+    assert!(names.contains(&"node_down"), "journal: {names:?}");
+    assert!(names.contains(&"node_evict"), "journal: {names:?}");
+
+    proxy.heal();
+    plane.tick();
+    let v = plane.view();
+    assert!(v.nodes[0].alive, "recovery must re-admit");
+    assert_eq!(
+        v.nodes[0].replications,
+        2,
+        "re-admission must resync the route (pushed-cache cleared): {v:?}"
+    );
+    assert_eq!(v.routes[0].owners, vec!["n1".to_string()]);
+    proxy.shutdown();
+    node_stop.store(true, Ordering::Relaxed);
+    drop(node);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Degradation: when every replica is blackholed the router answers a
+/// complete `err unavailable` line within the deadline — no hang, no
+/// torn reply.
+#[test]
+fn blackholed_replicas_degrade_to_err_unavailable_within_deadline() {
+    let tm = trained(26);
+    let (_node, node_addr, node_stop) = inproc_node("n1", &tm, 1);
+    let proxy = ChaosProxy::spawn(node_addr.as_str()).unwrap();
+    proxy.set(FaultPlan {
+        blackhole: true,
+        ..FaultPlan::default()
+    });
+    let router = router_over(
+        vec![NodeSpec::parse(&format!("n1@{}", proxy.addr())).unwrap()],
+        Duration::from_millis(600),
+    );
+    let t0 = Instant::now();
+    let reply = router.respond("infer cpu 1010101010\n");
+    let took = t0.elapsed();
+    assert!(reply.starts_with("err unavailable:"), "got {reply:?}");
+    assert!(reply.ends_with('\n'), "degraded reply must be complete");
+    assert!(
+        took < Duration::from_secs(3),
+        "deadline must bound the hang: took {took:?}"
+    );
+    proxy.shutdown();
+    node_stop.store(true, Ordering::Relaxed);
+}
+
+/// RAII kill for subprocess nodes so a failing assert doesn't leak
+/// listeners across test runs.
+struct KillOnDrop(Child);
+
+impl Drop for KillOnDrop {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
