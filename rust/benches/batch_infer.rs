@@ -1,7 +1,13 @@
 //! Batch inference bench: class-fused engine vs the per-sample,
-//! per-class indexed path, swept over batch size × thread count on an
-//! MNIST-shaped synthetic workload (10 classes, 784 features, 200
-//! clauses/class, learned-length-58 clauses — the §3 Remarks regime).
+//! per-class indexed path, swept over batch size × thread count ×
+//! SIMD lane width on an MNIST-shaped synthetic workload (10 classes,
+//! 784 features, 200 clauses/class, learned-length-58 clauses — the
+//! §3 Remarks regime).
+//!
+//! The lanes dimension compares `--simd scalar` (reference walk) with
+//! `--simd wide` (clause-plane OR + popcount walk); nightly CI exports
+//! `TMI_ASSERT_MIN_SIMD_SPEEDUP` to fail the run when the
+//! single-thread wide/scalar ratio drops below the floor.
 //!
 //! Emits a machine-readable report to `BENCH_batch_infer.json` at the
 //! repository root via `bench_harness::report::write_json`, so the
@@ -21,7 +27,7 @@ use tsetlin_index::eval::Evaluator;
 use tsetlin_index::index::IndexedEval;
 use tsetlin_index::tm::classifier::MultiClassTM;
 use tsetlin_index::tm::params::TMParams;
-use tsetlin_index::util::{BitVec, Json, Rng};
+use tsetlin_index::util::{BitVec, Json, Rng, SimdMode};
 
 const CLASSES: usize = 10;
 const CLAUSES_PER_CLASS: usize = 200;
@@ -76,7 +82,7 @@ fn score_all_per_class(evals: &mut [IndexedEval], tm: &MultiClassTM, samples: &[
 
 fn main() {
     let mut rng = Rng::new(0x2004_3188);
-    let tm = make_machine(&mut rng);
+    let mut tm = make_machine(&mut rng);
     let samples = make_samples(&mut rng);
     let params = tm.params.clone();
 
@@ -98,8 +104,22 @@ fn main() {
     }
     let mut engine4 = FusedEngine::from_machine(&tm, 4);
     assert_eq!(engine4.score_batch(&samples), fused, "sharding changed scores");
+    tm.set_simd(SimdMode::Scalar);
+    let mut scalar_engine = FusedEngine::from_machine(&tm, 1);
+    assert_eq!(
+        scalar_engine.score_batch(&samples),
+        fused,
+        "simd=scalar changed scores"
+    );
+    tm.set_simd(SimdMode::Wide);
+    let mut wide_engine = FusedEngine::from_machine(&tm, 1);
+    assert_eq!(
+        wide_engine.score_batch(&samples),
+        fused,
+        "simd=wide changed scores"
+    );
     println!(
-        "bit-identity: fused/sharded == per-class indexed on {} samples x {} classes\n",
+        "bit-identity: fused/sharded/scalar-lane/wide-lane == per-class indexed on {} samples x {} classes\n",
         SAMPLES, CLASSES
     );
 
@@ -113,37 +133,74 @@ fn main() {
         SAMPLES
     );
 
-    // -- sweep: batch size x thread count --------------------------------
+    // -- sweep: simd lanes x thread count x batch size -------------------
     let mut results: Vec<Json> = Vec::new();
-    println!("\n{:<28} {:>14} {:>10}", "config", "samples/s", "speedup");
-    for &threads in &[1usize, 2, 4] {
-        let mut eng = FusedEngine::from_machine(&tm, threads);
-        for &batch in &[1usize, 16, 64, 256] {
-            let mut out = vec![0i32; batch.min(SAMPLES) * CLASSES];
-            let (min_s, _) = bench(2, 5, || {
-                let mut acc = 0i64;
-                for chunk in samples.chunks(batch) {
-                    let flat = &mut out[..chunk.len() * CLASSES];
-                    eng.score_batch_into(chunk, flat);
-                    acc = acc.wrapping_add(flat[0] as i64);
+    // single-thread full-batch rate per lane width, for the simd gate
+    let mut lane_rates: Vec<(SimdMode, f64)> = Vec::new();
+    println!("\n{:<36} {:>14} {:>10}", "config", "samples/s", "speedup");
+    for &simd in &[SimdMode::Scalar, SimdMode::Wide] {
+        tm.set_simd(simd);
+        for &threads in &[1usize, 2, 4] {
+            let mut eng = FusedEngine::from_machine(&tm, threads);
+            for &batch in &[1usize, 16, 64, 256] {
+                let mut out = vec![0i32; batch.min(SAMPLES) * CLASSES];
+                let (min_s, _) = bench(2, 5, || {
+                    let mut acc = 0i64;
+                    for chunk in samples.chunks(batch) {
+                        let flat = &mut out[..chunk.len() * CLASSES];
+                        eng.score_batch_into(chunk, flat);
+                        acc = acc.wrapping_add(flat[0] as i64);
+                    }
+                    acc
+                });
+                let rate = SAMPLES as f64 / min_s;
+                let speedup = rate / base_rate;
+                println!(
+                    "{:<36} {:>14.0} {:>9.2}x",
+                    format!("fused simd={} threads={threads} batch={batch}", simd.name()),
+                    rate,
+                    speedup
+                );
+                if threads == 1 && batch == 256 {
+                    lane_rates.push((simd, rate));
                 }
-                acc
-            });
-            let rate = SAMPLES as f64 / min_s;
-            let speedup = rate / base_rate;
-            println!(
-                "{:<28} {:>14.0} {:>9.2}x",
-                format!("fused threads={threads} batch={batch}"),
-                rate,
-                speedup
-            );
-            results.push(Json::obj([
-                ("threads", Json::num(threads as f64)),
-                ("batch", Json::num(batch as f64)),
-                ("samples_per_s", Json::num(rate)),
-                ("speedup_vs_single_sample_indexed", Json::num(speedup)),
-            ]));
+                results.push(Json::obj([
+                    ("simd", Json::str(simd.name())),
+                    ("threads", Json::num(threads as f64)),
+                    ("batch", Json::num(batch as f64)),
+                    ("samples_per_s", Json::num(rate)),
+                    ("speedup_vs_single_sample_indexed", Json::num(speedup)),
+                ]));
+            }
         }
+    }
+
+    // -- simd gate: single-thread wide vs scalar -------------------------
+    let scalar_rate = lane_rates
+        .iter()
+        .find(|(m, _)| *m == SimdMode::Scalar)
+        .map(|&(_, r)| r)
+        .unwrap();
+    let wide_rate = lane_rates
+        .iter()
+        .find(|(m, _)| *m == SimdMode::Wide)
+        .map(|&(_, r)| r)
+        .unwrap();
+    let simd_speedup = wide_rate / scalar_rate;
+    println!(
+        "\nwide vs scalar (1 thread, batch 256, {} literals): {:.2}x",
+        2 * FEATURES,
+        simd_speedup
+    );
+    if let Ok(raw) = std::env::var("TMI_ASSERT_MIN_SIMD_SPEEDUP") {
+        let floor: f64 = raw
+            .parse()
+            .expect("TMI_ASSERT_MIN_SIMD_SPEEDUP must be a float");
+        assert!(
+            simd_speedup >= floor,
+            "simd speedup gate: wide/scalar {simd_speedup:.2}x < floor {floor:.2}x"
+        );
+        println!("simd speedup gate passed (floor {floor:.2}x)");
     }
 
     let report = Json::obj([
@@ -164,6 +221,10 @@ fn main() {
             Json::num(base_rate),
         ),
         ("bit_identical_to_indexed_eval", Json::Bool(true)),
+        (
+            "wide_vs_scalar_single_thread_speedup",
+            Json::num(simd_speedup),
+        ),
         ("results", Json::Arr(results)),
     ]);
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))

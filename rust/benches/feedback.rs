@@ -1,6 +1,12 @@
 //! Learning-side feedback bench: bit-sliced TA banks (word-parallel
 //! Type I/II feedback, geometric-skip Bernoulli masks) vs the scalar
-//! per-byte layout, swept over clauses × literals × specificity `s`.
+//! per-byte layout, swept over clauses × literals × specificity `s`,
+//! with a lanes dimension comparing the sliced layout's scalar
+//! word-at-a-time loops against the 4-wide SIMD group kernels
+//! (`--simd wide`: ripple-carry over 32 plane words at a time plus the
+//! lane-folded Bernoulli fill). Nightly CI can export
+//! `TMI_ASSERT_MIN_SIMD_FEEDBACK_SPEEDUP` to gate the wide/scalar-lane
+//! ratio at 1024 literals.
 //!
 //! Both layouts consume the *same* skip-sampled mask stream (the shared
 //! RNG contract `rust/tests/feedback_equiv.rs` proves bit-exact), so
@@ -25,7 +31,7 @@ use tsetlin_index::bench_harness::report::write_json;
 use tsetlin_index::eval::traits::NoopSink;
 use tsetlin_index::tm::bank::{ClauseBank, TaLayout};
 use tsetlin_index::tm::feedback::{update_clause_range, FeedbackCtx, FeedbackScratch};
-use tsetlin_index::util::{BitVec, Json, Rng};
+use tsetlin_index::util::{BitVec, Json, Rng, SimdLanes};
 
 /// (clauses, n_literals, s) sweep. 1024 literals × s >= 4 is the
 /// acceptance config (>= 3x single-thread feedback throughput).
@@ -100,34 +106,53 @@ fn feedback_pass(
 fn main() {
     let mut results = Vec::new();
     let mut acceptance: Option<f64> = None;
+    let mut lane_acceptance: Option<f64> = None;
 
     println!(
-        "{:>8} {:>10} {:>6} {:>16} {:>16} {:>9}",
-        "clauses", "literals", "s", "scalar upd/s", "sliced upd/s", "speedup"
+        "{:>8} {:>10} {:>6} {:>16} {:>16} {:>9} {:>16} {:>9}",
+        "clauses", "literals", "s", "scalar upd/s", "sliced upd/s", "speedup", "wide upd/s", "lanes"
     );
     for &(clauses, n_lit, s) in CONFIGS {
         let ctx = FeedbackCtx::new(s, true, false);
         let samples = make_samples(clauses, n_lit, 0xbeef);
 
         // differential pre-check: one pass, shared RNG seed, states must
-        // agree bit-exactly before we trust the timings
+        // agree bit-exactly across layouts AND lane widths before we
+        // trust the timings
         let mut scratch = FeedbackScratch::new(n_lit);
+        let mut wide_scratch = FeedbackScratch::with_simd(n_lit, SimdLanes::Wide);
         let mut check_scalar = make_bank(TaLayout::Scalar, clauses, n_lit, 7);
         let mut check_sliced = make_bank(TaLayout::Sliced, clauses, n_lit, 7);
+        let mut check_wide = make_bank(TaLayout::Sliced, clauses, n_lit, 7);
+        check_wide.set_simd(SimdLanes::Wide);
         let ua = feedback_pass(&mut check_scalar, &mut Rng::new(99), &ctx, &samples, &mut scratch);
         let ub = feedback_pass(&mut check_sliced, &mut Rng::new(99), &ctx, &samples, &mut scratch);
+        let uc = feedback_pass(&mut check_wide, &mut Rng::new(99), &ctx, &samples, &mut wide_scratch);
         assert_eq!(ua, ub);
+        assert_eq!(ua, uc);
         assert_eq!(
             check_scalar.states(),
             check_sliced.states(),
             "layouts diverged at {clauses}x{n_lit} s={s}"
         );
+        assert_eq!(
+            check_sliced.states(),
+            check_wide.states(),
+            "lane widths diverged at {clauses}x{n_lit} s={s}"
+        );
 
-        // timed: same seeds per layout => identical update trajectories,
-        // so both layouts do the same logical work
-        let mut rates = [0f64; 2];
-        for (slot, layout) in [TaLayout::Scalar, TaLayout::Sliced].into_iter().enumerate() {
+        // timed: same seeds per variant => identical update
+        // trajectories, so every variant does the same logical work
+        let variants: [(TaLayout, SimdLanes); 3] = [
+            (TaLayout::Scalar, SimdLanes::Scalar),
+            (TaLayout::Sliced, SimdLanes::Scalar),
+            (TaLayout::Sliced, SimdLanes::Wide),
+        ];
+        let mut rates = [0f64; 3];
+        for (slot, &(layout, lanes)) in variants.iter().enumerate() {
             let mut bank = make_bank(layout, clauses, n_lit, 7);
+            bank.set_simd(lanes);
+            let mut scratch = FeedbackScratch::with_simd(n_lit, lanes);
             let mut rng = Rng::new(1234);
             let updates_per_pass = clauses as u64 * SAMPLES as u64;
             let (min_s, _mean_s) = bench(WARMUP, REPS, || {
@@ -142,12 +167,15 @@ fn main() {
             rates[slot] = updates_per_pass as f64 / min_s;
         }
         let speedup = rates[1] / rates[0];
+        let lane_speedup = rates[2] / rates[1];
         println!(
-            "{:>8} {:>10} {:>6.1} {:>16.0} {:>16.0} {:>8.2}x",
-            clauses, n_lit, s, rates[0], rates[1], speedup
+            "{:>8} {:>10} {:>6.1} {:>16.0} {:>16.0} {:>8.2}x {:>16.0} {:>8.2}x",
+            clauses, n_lit, s, rates[0], rates[1], speedup, rates[2], lane_speedup
         );
         if n_lit == 1024 && s >= 4.0 {
             acceptance = Some(acceptance.map_or(speedup, |a: f64| a.min(speedup)));
+            lane_acceptance =
+                Some(lane_acceptance.map_or(lane_speedup, |a: f64| a.min(lane_speedup)));
         }
         results.push(Json::obj([
             ("clauses", Json::num(clauses as f64)),
@@ -155,7 +183,9 @@ fn main() {
             ("s", Json::num(s)),
             ("scalar_updates_per_s", Json::num(rates[0])),
             ("sliced_updates_per_s", Json::num(rates[1])),
+            ("sliced_wide_updates_per_s", Json::num(rates[2])),
             ("speedup_sliced_vs_scalar", Json::num(speedup)),
+            ("speedup_wide_vs_scalar_lanes", Json::num(lane_speedup)),
         ]));
     }
 
@@ -165,6 +195,19 @@ fn main() {
             s >= 3.0,
             "acceptance: expected >= 3x sliced feedback throughput at 1024 literals, got {s:.2}x"
         );
+    }
+    if let Some(ls) = lane_acceptance {
+        println!("worst wide-lane speedup at 1024 literals, s >= 4: {ls:.2}x");
+        if let Ok(raw) = std::env::var("TMI_ASSERT_MIN_SIMD_FEEDBACK_SPEEDUP") {
+            let floor: f64 = raw
+                .parse()
+                .expect("TMI_ASSERT_MIN_SIMD_FEEDBACK_SPEEDUP must be a float");
+            assert!(
+                ls >= floor,
+                "simd feedback gate: wide/scalar-lane {ls:.2}x < floor {floor:.2}x"
+            );
+            println!("simd feedback gate passed (floor {floor:.2}x)");
+        }
     }
 
     let report = Json::obj([
@@ -183,6 +226,13 @@ fn main() {
         (
             "min_speedup_at_1024_literals",
             match acceptance {
+                Some(s) => Json::num(s),
+                None => Json::Null,
+            },
+        ),
+        (
+            "min_wide_lane_speedup_at_1024_literals",
+            match lane_acceptance {
                 Some(s) => Json::num(s),
                 None => Json::Null,
             },

@@ -16,7 +16,9 @@ use crate::bench_harness::tables::{TableId, TableResult};
 /// Which time series a figure plots.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Phase {
+    /// Training-epoch timing figure.
     Train,
+    /// Inference timing figure.
     Inference,
 }
 

@@ -17,16 +17,24 @@ use crate::util::Rng;
 /// One experiment cell.
 #[derive(Clone, Debug)]
 pub struct ExpConfig {
+    /// Experiment label in the emitted table.
     pub name: String,
+    /// Total clauses across every class.
     pub total_clauses: usize,
+    /// Vote clamp threshold `T`.
     pub threshold: u32,
+    /// Specificity `s`.
     pub s: f64,
+    /// RNG seed shared by both backends' runs.
     pub seed: u64,
+    /// Untimed warm-up epochs before measurement.
     pub warmup_epochs: usize,
+    /// Timed epochs averaged into the result.
     pub timed_epochs: usize,
 }
 
 impl ExpConfig {
+    /// Paper-default experiment config for the given shape.
     pub fn new(name: impl Into<String>, total_clauses: usize) -> Self {
         ExpConfig {
             name: name.into(),
@@ -54,10 +62,15 @@ pub struct BackendTimes {
 /// One full cell: a backend pair and the derived speedups.
 #[derive(Clone, Debug)]
 pub struct SpeedupResult {
+    /// Experiment label.
     pub name: String,
+    /// Raw boolean features of the workload.
     pub features: usize,
+    /// Total clauses across every class.
     pub total_clauses: usize,
+    /// Timings for the non-indexed baseline backend.
     pub baseline: BackendTimes,
+    /// Timings for the clause-indexed backend.
     pub indexed: BackendTimes,
     /// `baseline.train / indexed.train` (paper's "Train" columns).
     pub train_speedup: f64,

@@ -33,6 +33,7 @@ pub enum TableId {
 }
 
 impl TableId {
+    /// The table's caption in the paper.
     pub fn title(self) -> &'static str {
         match self {
             TableId::Mnist => "Table 1: indexing speedup on MNIST",
@@ -45,14 +46,19 @@ impl TableId {
 /// Grid scaling.
 #[derive(Clone, Debug)]
 pub struct Scale {
+    /// Training samples per cell.
     pub train_samples: usize,
+    /// Held-out samples per cell.
     pub test_samples: usize,
+    /// Clause counts forming the table rows.
     pub clause_grid: Vec<usize>,
     /// Image grey levels (Tables 1/3) — paper: 1..=4.
     pub image_levels: Vec<usize>,
     /// BoW vocabulary sizes (Table 2) — paper: 5k/10k/15k/20k.
     pub bow_features: Vec<usize>,
+    /// Untimed warm-up epochs before measurement.
     pub warmup_epochs: usize,
+    /// Timed epochs averaged into each cell.
     pub timed_epochs: usize,
 }
 
@@ -110,18 +116,24 @@ impl Scale {
 /// One feature configuration (a column pair of the table).
 #[derive(Clone, Debug)]
 pub struct FeatureCol {
+    /// Column header (feature count or dataset variant).
     pub label: String,
+    /// Training split for this column.
     pub train: Dataset,
+    /// Held-out split for this column.
     pub test: Dataset,
 }
 
 /// All cells of one table.
 #[derive(Clone, Debug)]
 pub struct TableResult {
+    /// Which paper table this reproduces.
     pub id: TableId,
     /// `cells[col][row]` — column = feature config, row = clause count.
     pub cells: Vec<Vec<SpeedupResult>>,
+    /// Column headers, aligned with `cells` columns.
     pub col_labels: Vec<String>,
+    /// Clause counts, aligned with `cells` rows.
     pub clause_grid: Vec<usize>,
 }
 

@@ -38,7 +38,9 @@ use crate::util::crc32;
 /// One configured node: `id@host:port` on the CLI.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct NodeSpec {
+    /// Node id (stable across restarts; hashes onto the ring).
     pub id: String,
+    /// `host:port` the node's line protocol listens on.
     pub addr: String,
 }
 
@@ -74,6 +76,7 @@ impl NodeSpec {
 /// Control-plane knobs.
 #[derive(Clone, Debug)]
 pub struct ControlConfig {
+    /// The static fleet membership.
     pub nodes: Vec<NodeSpec>,
     /// Registry directory replication reads from.
     pub registry_dir: PathBuf,
@@ -92,6 +95,7 @@ pub struct ControlConfig {
 }
 
 impl ControlConfig {
+    /// Config with the default heartbeat/replication cadence.
     pub fn new(nodes: Vec<NodeSpec>, registry_dir: impl Into<PathBuf>) -> ControlConfig {
         ControlConfig {
             nodes,
@@ -109,7 +113,9 @@ impl ControlConfig {
 /// One node's health as the control plane sees it.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct NodeView {
+    /// Node id.
     pub id: String,
+    /// `host:port` of the node.
     pub addr: String,
     /// In the serving set (answering heartbeats).
     pub alive: bool,
@@ -128,6 +134,7 @@ pub struct NodeView {
 /// One route's placement.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct RouteView {
+    /// Route (model) name.
     pub name: String,
     /// Published version being replicated.
     pub version: u64,
@@ -139,13 +146,16 @@ pub struct RouteView {
 /// control plane's `metrics` exposition.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct ClusterView {
+    /// Every configured node with its liveness state.
     pub nodes: Vec<NodeView>,
+    /// Every registry route with its current owner set.
     pub routes: Vec<RouteView>,
     /// Registry manifest generation last replicated from.
     pub generation: u64,
 }
 
 impl ClusterView {
+    /// Number of nodes currently considered up.
     pub fn alive(&self) -> usize {
         self.nodes.iter().filter(|n| n.alive).count()
     }
@@ -372,6 +382,7 @@ pub struct ControlPlane {
 }
 
 impl ControlPlane {
+    /// Control plane over the given config (not yet heartbeating).
     pub fn new(cfg: ControlConfig) -> ControlPlane {
         let ids: Vec<&str> = cfg.nodes.iter().map(|n| n.id.as_str()).collect();
         let ring = Ring::with_vnodes(&ids, cfg.vnodes);

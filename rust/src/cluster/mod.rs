@@ -1,6 +1,9 @@
 //! Clustered serving: control plane + N nodes speaking the existing
 //! line protocol.
 //!
+//! The wire protocol every role speaks — verbs, error lines, timeout
+//! and idempotency semantics — is specified in `docs/PROTOCOL.md`.
+//!
 //! The single-process server scales out without changing the client
 //! protocol or the on-disk formats:
 //!

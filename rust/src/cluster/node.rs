@@ -46,6 +46,7 @@ pub struct NodeOptions {
 }
 
 impl NodeOptions {
+    /// Options with defaults for everything but the node id.
     pub fn new(id: impl Into<String>) -> NodeOptions {
         NodeOptions {
             id: id.into(),
@@ -69,7 +70,9 @@ pub struct NodeState {
 /// What a successful [`NodeState::install`] did.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Installed {
+    /// Route the image was installed under.
     pub route: String,
+    /// Registry version of the installed image.
     pub version: u64,
     /// Route swap generation after the install (0 = fresh route).
     pub generation: u64,
@@ -87,6 +90,7 @@ impl NodeState {
         }
     }
 
+    /// This node's id.
     pub fn id(&self) -> &str {
         &self.opts.id
     }

@@ -86,14 +86,17 @@ impl Ring {
         &self.nodes
     }
 
+    /// Number of member nodes.
     pub fn len(&self) -> usize {
         self.nodes.len()
     }
 
+    /// True if the ring has no members.
     pub fn is_empty(&self) -> bool {
         self.nodes.is_empty()
     }
 
+    /// True if `node` is a member.
     pub fn contains(&self, node: &str) -> bool {
         self.nodes.iter().any(|n| n == node)
     }

@@ -2,7 +2,9 @@
 //! to clients and forwards each request to the node that owns its
 //! route, with a per-request deadline, capped exponential-backoff
 //! retries against the next replica, and graceful degradation to
-//! `err unavailable` when nobody can answer.
+//! `err unavailable` when nobody can answer. The verb grammar and the
+//! idempotent-vs-write retry rules are specified in
+//! `docs/PROTOCOL.md`.
 //!
 //! Failure semantics, in order of what a client can observe:
 //!
@@ -54,6 +56,7 @@ pub struct RouterConfig {
 }
 
 impl RouterConfig {
+    /// Config with default deadline/backoff for a static node list.
     pub fn new(nodes: Vec<NodeSpec>) -> RouterConfig {
         RouterConfig {
             control: None,
@@ -133,6 +136,7 @@ pub struct Router {
 }
 
 impl Router {
+    /// Router over the given config (static or control-plane-backed).
     pub fn new(cfg: RouterConfig) -> Router {
         let membership = Membership::from_specs(&cfg.nodes, cfg.vnodes);
         Router {

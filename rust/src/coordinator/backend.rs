@@ -33,7 +33,9 @@ use crate::util::BitVec;
 /// One scored request.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Scored {
+    /// The argmax class.
     pub prediction: usize,
+    /// Per-class vote sums.
     pub scores: Vec<i32>,
 }
 
@@ -48,6 +50,7 @@ pub trait Backend {
     fn infer_batch(&mut self, batch: &[BitVec]) -> Result<Vec<Scored>>;
     /// Literal width this backend expects.
     fn n_literals(&self) -> usize;
+    /// Backend name (diagnostics, `stats` output).
     fn name(&self) -> String;
 }
 
@@ -70,6 +73,7 @@ pub struct CpuBackend {
 }
 
 impl CpuBackend {
+    /// CPU backend scoring through the chosen evaluation backend.
     pub fn new(tm: MultiClassTM, backend: eval::Backend) -> Self {
         Self::new_parallel(tm, backend, 1)
     }
@@ -140,6 +144,7 @@ pub struct XlaBackend {
 }
 
 impl XlaBackend {
+    /// XLA backend over a compiled executable and uploaded model arrays.
     pub fn new(rt: Runtime, exe: TmExecutable, model: &DenseModel) -> Result<Self> {
         let prepared = rt.prepare_model(&exe, model)?;
         Ok(XlaBackend {

@@ -19,7 +19,9 @@ use crate::coordinator::queue::{BoundedQueue, PopTimeout};
 /// Size/deadline batching policy.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct BatchPolicy {
+    /// Maximum requests fused into one engine call.
     pub max_batch: usize,
+    /// Longest a request may wait for batch-mates before dispatch.
     pub max_wait: Duration,
 }
 
@@ -36,6 +38,7 @@ impl Default for BatchPolicy {
 pub enum Collected<T> {
     /// A non-empty batch.
     Batch {
+        /// The collected requests.
         items: Vec<T>,
         /// First pop to batch-ready: the assembly window this batch
         /// actually spent collecting (the observability `batch` stage —

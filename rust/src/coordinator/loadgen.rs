@@ -51,10 +51,12 @@ pub struct LoadgenConfig {
     /// Total offered request rate in req/s across all connections;
     /// `0.0` selects the closed loop.
     pub rate: f64,
+    /// How long to drive load.
     pub duration: Duration,
     /// Raw feature width of the model (the protocol sends feature
     /// bits; the server derives `[x, ¬x]`).
     pub features: usize,
+    /// Seed for the request-pattern RNG.
     pub seed: u64,
     /// Fraction of requests sent as `feedback <model> <label> <bits>`
     /// (online learning); the rest stay `infer`. `0.0` disables the
@@ -67,21 +69,33 @@ pub struct LoadgenConfig {
 /// Aggregated client-side results of one run.
 #[derive(Clone, Debug)]
 pub struct LoadgenReport {
+    /// `"closed"` or `"open"` loop discipline.
     pub mode: &'static str,
+    /// Requests sent.
     pub sent: u64,
+    /// `ok` replies received.
     pub ok: u64,
+    /// `err overloaded` replies (admission sheds).
     pub shed: u64,
+    /// Other `err` replies plus transport failures.
     pub errors: u64,
+    /// Wall-clock duration of the run in seconds.
     pub elapsed_s: f64,
     /// Completed (ok) replies per second.
     pub throughput_rps: f64,
+    /// Fraction of sent requests that were shed.
     pub shed_rate: f64,
+    /// Client-observed p50 latency, microseconds.
     pub p50_us: u64,
+    /// Client-observed p95 latency, microseconds.
     pub p95_us: u64,
+    /// Client-observed p99 latency, microseconds.
     pub p99_us: u64,
+    /// Client-observed mean latency, microseconds.
     pub mean_us: f64,
     /// Feedback requests written / acknowledged `ok` (mixed phase).
     pub feedback_sent: u64,
+    /// `ok applied=` feedback acks received.
     pub feedback_ok: u64,
     /// Torn replies: a reply line with no terminating newline, or one
     /// that is neither `ok …` nor `err …` — a reader observed a
@@ -93,6 +107,7 @@ pub struct LoadgenReport {
     /// Route swap generation from `stats` before/after the run — the
     /// cross-publisher monotonic key (`--assert-monotone-generations`).
     pub generation_start: Option<u64>,
+    /// Route swap generation after the run (from `stats`).
     pub generation_end: Option<u64>,
     /// The server's own `stats <model>` line, fetched after the run.
     pub server_stats: Option<String>,

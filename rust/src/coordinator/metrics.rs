@@ -13,15 +13,20 @@ use crate::obs::{Stage, STAGES};
 /// Shared metrics for one model route.
 #[derive(Debug)]
 pub struct Metrics {
+    /// Requests admitted (completed + shed + errors when drained).
     pub requests: AtomicU64,
+    /// Requests answered with a complete `ok` reply.
     pub completed: AtomicU64,
     /// Requests refused at admission (`err overloaded`).
     pub shed: AtomicU64,
+    /// Requests failed by the backend or a worker panic.
     pub errors: AtomicU64,
     /// Worker restarts performed by the supervisor after a panic
     /// ([`crate::coordinator::supervisor`]).
     pub restarts: AtomicU64,
+    /// Engine dispatches.
     pub batches: AtomicU64,
+    /// Requests carried across all dispatches.
     pub batched_items: AtomicU64,
     /// Requests scored by the dense fused walk (engine probe).
     pub dense_requests: AtomicU64,
@@ -93,14 +98,19 @@ impl Default for Metrics {
 /// Point-in-time copy for reporting.
 #[derive(Clone, Debug, PartialEq)]
 pub struct MetricsSnapshot {
+    /// Requests admitted.
     pub requests: u64,
+    /// Requests answered with a complete `ok` reply.
     pub completed: u64,
     /// Requests shed at admission (queue full).
     pub shed: u64,
+    /// Requests failed by the backend or a worker panic.
     pub errors: u64,
     /// Supervisor-performed worker restarts (0 on healthy routes).
     pub restarts: u64,
+    /// Engine dispatches.
     pub batches: u64,
+    /// Requests carried across all dispatches.
     pub batched_items: u64,
     /// Queue depth at snapshot time. [`Metrics`] does not own the
     /// queue, so [`Metrics::snapshot`] leaves this 0 and the
@@ -112,11 +122,17 @@ pub struct MetricsSnapshot {
     /// [`crate::coordinator::server::conn_rejected_total`], so every
     /// route's snapshot carries the same server total.
     pub conn_rejected: u64,
+    /// Samples scored through the dense fused walk.
     pub dense_requests: u64,
+    /// Samples scored through the sparse-delta walk.
     pub sparse_requests: u64,
+    /// Clause knock-outs performed by the walks.
     pub clauses_falsified: u64,
+    /// Clause evaluations the index avoided.
     pub clauses_skipped: u64,
+    /// False/set literals actually walked.
     pub features_walked: u64,
+    /// Sparse delta-row counter toggles.
     pub sparse_toggles: u64,
     /// Labeled examples the online learner applied.
     pub feedback_applied: u64,
@@ -139,10 +155,12 @@ pub struct MetricsSnapshot {
 }
 
 impl Metrics {
+    /// Fresh zeroed metrics.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record one end-to-end request latency.
     pub fn record_latency(&self, d: Duration) {
         self.latency_us.record_duration(d);
     }
@@ -152,6 +170,7 @@ impl Metrics {
         self.stages[stage as usize].record_duration(d);
     }
 
+    /// Record one engine dispatch of `items` requests.
     pub fn record_batch(&self, items: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_items.fetch_add(items as u64, Ordering::Relaxed);
@@ -209,6 +228,7 @@ impl Metrics {
         self.started.elapsed()
     }
 
+    /// Coherent point-in-time copy of every counter and quantile.
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
@@ -250,6 +270,7 @@ impl MetricsSnapshot {
         &self.stages[s as usize]
     }
 
+    /// Mean requests per engine dispatch.
     pub fn mean_batch_size(&self) -> f64 {
         if self.batches == 0 {
             0.0

@@ -92,13 +92,27 @@ impl Default for OnlineConfig {
 /// Why a feedback submission failed.
 #[derive(Clone, Debug, PartialEq)]
 pub enum FeedbackError {
+    /// No route with that name.
     UnknownModel(String),
     /// The route has no online learner attached.
     Unsupported(String),
-    WrongWidth { expected: usize, got: usize },
-    BadLabel { classes: usize, got: usize },
+    /// Literal width does not match the model.
+    WrongWidth {
+        /// Literal width the model expects.
+        expected: usize,
+        /// Literal width the request carried.
+        got: usize,
+    },
+    /// Label outside the model's class range.
+    BadLabel {
+        /// Number of classes the model has.
+        classes: usize,
+        /// Label the request carried.
+        got: usize,
+    },
     /// Shed: the feedback queue is full.
     Overloaded,
+    /// The server is draining; no new feedback accepted.
     ShuttingDown,
     /// The learner refused the event (e.g. the WAL append failed).
     Rejected(String),

@@ -34,6 +34,7 @@ pub enum PushError<T> {
 /// Outcome of a bounded wait for one item.
 #[derive(Debug)]
 pub enum PopTimeout<T> {
+    /// An item arrived within the deadline.
     Item(T),
     /// The deadline passed with the queue still empty.
     TimedOut,
@@ -69,6 +70,7 @@ impl<T> BoundedQueue<T> {
         self.inner.lock().unwrap_or_else(PoisonError::into_inner)
     }
 
+    /// Bounded queue holding at most `cap` items.
     pub fn new(cap: usize) -> Self {
         BoundedQueue {
             inner: Mutex::new(Inner {
@@ -81,6 +83,7 @@ impl<T> BoundedQueue<T> {
         }
     }
 
+    /// The admission bound.
     pub fn capacity(&self) -> usize {
         self.cap
     }
@@ -91,10 +94,12 @@ impl<T> BoundedQueue<T> {
         self.depth.load(Ordering::Relaxed)
     }
 
+    /// True if no items are waiting.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// True once [`close`](Self::close) has been called.
     pub fn is_closed(&self) -> bool {
         self.lock().closed
     }

@@ -1,6 +1,7 @@
 //! The coordinator: versioned hot-swap model registry, bounded
 //! per-model request queues with admission control, N batcher workers
-//! per route, a routing handle, and a line-oriented TCP front end.
+//! per route, a routing handle, and a line-oriented TCP front end
+//! (wire protocol reference: `docs/PROTOCOL.md`).
 //!
 //! Request flow: `CoordinatorHandle::infer` routes by model name and
 //! **admits** the request into the route's [`BoundedQueue`] — or sheds
@@ -53,18 +54,29 @@ use crate::util::BitVec;
 /// A completed inference.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Prediction {
+    /// The argmax class.
     pub class: usize,
+    /// Per-class vote sums.
     pub scores: Vec<i32>,
 }
 
 /// Why an inference failed.
 #[derive(Clone, Debug, PartialEq)]
 pub enum InferError {
+    /// No route with that name.
     UnknownModel(String),
-    WrongWidth { expected: usize, got: usize },
+    /// Literal width does not match the model.
+    WrongWidth {
+        /// Literal width the model expects.
+        expected: usize,
+        /// Literal width the request carried.
+        got: usize,
+    },
     /// Shed at admission: the route's queue is full.
     Overloaded,
+    /// The backend failed or its worker panicked.
     BackendError(String),
+    /// The server is draining; no new requests accepted.
     ShuttingDown,
 }
 
@@ -89,11 +101,18 @@ impl std::error::Error for InferError {}
 /// Why a hot swap was refused.
 #[derive(Clone, Debug, PartialEq)]
 pub enum SwapError {
+    /// No route with that name.
     UnknownModel(String),
     /// Factory (e.g. XLA) routes serve a thread-pinned backend, not a
     /// swappable snapshot.
     Unsupported(String),
-    WrongWidth { expected: usize, got: usize },
+    /// Snapshot shape does not match the serving route.
+    WrongWidth {
+        /// Literal width the model expects.
+        expected: usize,
+        /// Literal width the request carried.
+        got: usize,
+    },
 }
 
 impl std::fmt::Display for SwapError {
@@ -156,6 +175,7 @@ impl Drop for Request {
 /// restart budget.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct RouteConfig {
+    /// Batch assembly policy for the route's workers.
     pub policy: BatchPolicy,
     /// Batcher workers sharing the route's queue (snapshot routes only;
     /// factory routes are pinned to 1 worker).
@@ -315,6 +335,7 @@ struct Route {
 /// version (snapshot routes only).
 #[derive(Clone, Debug, PartialEq)]
 pub struct RouteStats {
+    /// Counter/latency snapshot for the route.
     pub metrics: MetricsSnapshot,
     /// Publisher-scoped version of the serving snapshot.
     pub version: Option<u64>,
@@ -334,6 +355,7 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
+    /// Empty coordinator with no routes.
     pub fn new() -> Self {
         Coordinator {
             routes: HashMap::new(),
@@ -589,12 +611,14 @@ impl Coordinator {
         swap_route(name, route.n_literals, route.swap.as_ref(), snapshot)
     }
 
+    /// Names of every registered route.
     pub fn models(&self) -> Vec<String> {
         let mut names: Vec<String> = self.routes.keys().cloned().collect();
         names.sort();
         names
     }
 
+    /// Metrics snapshot for `model`, if registered.
     pub fn metrics(&self, model: &str) -> Option<MetricsSnapshot> {
         self.routes
             .get(model)

@@ -7,8 +7,11 @@ use crate::util::{BitVec, Rng};
 /// consumes — the negated half is precomputed once at load time.
 #[derive(Clone, Debug)]
 pub struct Dataset {
+    /// Human-readable dataset name (appears in bench reports).
     pub name: String,
+    /// Number of raw boolean features per sample.
     pub features: usize,
+    /// Number of label classes.
     pub classes: usize,
     samples: Vec<BitVec>,
     labels: Vec<usize>,
@@ -89,15 +92,18 @@ impl Dataset {
         lits
     }
 
+    /// Number of samples.
     pub fn len(&self) -> usize {
         self.samples.len()
     }
 
+    /// True if the dataset holds no samples.
     pub fn is_empty(&self) -> bool {
         self.samples.is_empty()
     }
 
     #[inline]
+    /// The literal vector (`[x, ¬x]`, length `2 × features`) of sample `i`.
     pub fn literals(&self, i: usize) -> &BitVec {
         &self.samples[i]
     }
@@ -110,6 +116,7 @@ impl Dataset {
     }
 
     #[inline]
+    /// The label of sample `i`.
     pub fn label(&self, i: usize) -> usize {
         self.labels[i]
     }

@@ -47,7 +47,9 @@ pub fn parse_idx_labels(bytes: &[u8]) -> Result<Vec<usize>> {
 /// Which split to load.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Split {
+    /// The training split.
     Train,
+    /// The held-out test split.
     Test,
 }
 

@@ -69,6 +69,7 @@ impl SparseSample {
     }
 
     #[inline]
+    /// Number of raw boolean features this sample was built for.
     pub fn features(&self) -> usize {
         self.features
     }
@@ -98,14 +99,18 @@ impl SparseSample {
 /// A labelled k-hot dataset: the sparse twin of [`Dataset`].
 #[derive(Clone, Debug)]
 pub struct SparseDataset {
+    /// Human-readable dataset name (appears in bench reports).
     pub name: String,
+    /// Number of raw boolean features per sample.
     pub features: usize,
+    /// Number of label classes.
     pub classes: usize,
     samples: Vec<SparseSample>,
     labels: Vec<usize>,
 }
 
 impl SparseDataset {
+    /// Build a k-hot dataset from per-sample set-feature lists.
     pub fn new(
         name: impl Into<String>,
         features: usize,
@@ -154,15 +159,18 @@ impl SparseDataset {
         )
     }
 
+    /// Number of samples.
     pub fn len(&self) -> usize {
         self.samples.len()
     }
 
+    /// True if the dataset holds no samples.
     pub fn is_empty(&self) -> bool {
         self.samples.is_empty()
     }
 
     #[inline]
+    /// The k-hot sample `i`.
     pub fn sample(&self, i: usize) -> &SparseSample {
         &self.samples[i]
     }
@@ -175,6 +183,7 @@ impl SparseDataset {
     }
 
     #[inline]
+    /// The label of sample `i`.
     pub fn label(&self, i: usize) -> usize {
         self.labels[i]
     }

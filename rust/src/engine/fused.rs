@@ -32,6 +32,8 @@ use crate::obs::ProbeDelta;
 use crate::tm::bank::ClauseBank;
 use crate::tm::classifier::MultiClassTM;
 use crate::tm::params::TMParams;
+use crate::util::bitvec::words_for;
+use crate::util::simd::{self, SimdMode};
 use crate::util::BitVec;
 
 /// Does the index carry the position matrix needed for O(1) deletes?
@@ -54,6 +56,68 @@ struct ClauseMeta {
     class: u32,
 }
 
+/// Word budget (`u64`s, 16 MiB) for the literal→clause bitmap plane
+/// under [`SimdMode::Auto`]. The plane costs
+/// `n_literals * ceil(total_clauses / 64)` words; within this budget
+/// the wide walk is a clear win (MNIST-scale models sit around half a
+/// megabyte), beyond it `auto` falls back to the scalar CSR walk and
+/// only an explicit `--simd wide` forces the plane.
+pub const AUTO_PLANE_WORD_CAP: usize = 1 << 21;
+
+/// Dense mirror of the CSR lists for the SIMD walk: row `k` is a
+/// `total_clauses`-bit bitmap of the clauses including literal `k`.
+/// The wide [`FusedIndex::score_into`] path ORs the rows of the
+/// sample's false non-empty literals into one falsified-clause bitmap
+/// (no gen-stamp dedup — OR is idempotent) and scores it with masked
+/// popcounts. Kept bit-for-bit in sync with the lists by
+/// [`FusedIndex::insert`] / [`FusedIndex::delete`].
+#[derive(Clone, Debug)]
+struct ClausePlane {
+    /// Words per literal row: `ceil(total_clauses / 64)`.
+    row_words: usize,
+    /// `n_literals * row_words` bitmap words, row-major by literal.
+    bits: Vec<u64>,
+    /// True while every clause's vote equals its polarity (all weights
+    /// 1): scoring is then a signed parity popcount per class
+    /// ([`simd::parity_vote_in_range`]). Conservatively cleared on any
+    /// weight change and recomputed on rebuild; when false, the wide
+    /// path iterates the falsified bitmap's set bits against `meta`.
+    uniform_votes: bool,
+}
+
+impl ClausePlane {
+    #[inline]
+    fn row(&self, k: usize) -> &[u64] {
+        &self.bits[k * self.row_words..(k + 1) * self.row_words]
+    }
+
+    #[inline]
+    fn set(&mut self, k: usize, gid: u32) {
+        self.bits[k * self.row_words + (gid as usize >> 6)] |= 1u64 << (gid & 63);
+    }
+
+    #[inline]
+    fn clear(&mut self, k: usize, gid: u32) {
+        self.bits[k * self.row_words + (gid as usize >> 6)] &= !(1u64 << (gid & 63));
+    }
+}
+
+/// Decide whether a plane is built for this mode and geometry:
+/// `wide` always, `scalar` never, `auto` within the memory budget.
+fn plane_for(simd: SimdMode, total_clauses: usize, n_literals: usize) -> Option<ClausePlane> {
+    let row_words = words_for(total_clauses);
+    let build = match simd {
+        SimdMode::Scalar => false,
+        SimdMode::Wide => true,
+        SimdMode::Auto => n_literals.saturating_mul(row_words) <= AUTO_PLANE_WORD_CAP,
+    };
+    build.then(|| ClausePlane {
+        row_words,
+        bits: vec![0; n_literals * row_words],
+        uniform_votes: true,
+    })
+}
+
 /// The fused index: all classes' inclusion lists in one global-id CSR
 /// layout, plus per-class vote baselines.
 #[derive(Clone, Debug)]
@@ -72,6 +136,11 @@ pub struct FusedIndex {
     vote_alive: Vec<i32>,
     /// Per-global-clause vote + class.
     meta: Vec<ClauseMeta>,
+    /// Requested SIMD mode (from `TMParams::simd`).
+    simd: SimdMode,
+    /// Bitmap mirror for the wide walk — present iff the mode and the
+    /// memory budget allow (see [`plane_for`]).
+    plane: Option<ClausePlane>,
 }
 
 /// Prefetch the cache line at `p` (no-op off x86_64).
@@ -107,6 +176,8 @@ impl FusedIndex {
                     class: (g / params.clauses_per_class) as u32,
                 })
                 .collect(),
+            simd: params.simd,
+            plane: plane_for(params.simd, total, n_lit),
         }
     }
 
@@ -152,6 +223,21 @@ impl FusedIndex {
                 }
             }
         }
+        // mirror the rebuilt lists into the bitmap plane and recompute
+        // the uniform-votes fast-path flag
+        self.plane = plane_for(self.simd, total, n_lit);
+        if let Some(plane) = &mut self.plane {
+            for k in 0..n_lit {
+                for &gid in self.lists.row(k) {
+                    plane.set(k, gid);
+                }
+            }
+            plane.uniform_votes = self
+                .meta
+                .iter()
+                .enumerate()
+                .all(|(g, m)| m.vote == ClauseBank::polarity(g));
+        }
     }
 
     /// Global clause id of `(class, local clause)`.
@@ -161,21 +247,25 @@ impl FusedIndex {
     }
 
     #[inline]
+    /// Number of classes fused into this index.
     pub fn classes(&self) -> usize {
         self.classes
     }
 
     #[inline]
+    /// Clauses per class (uniform across classes).
     pub fn clauses_per_class(&self) -> usize {
         self.clauses_per_class
     }
 
     #[inline]
+    /// Total clauses across every class (the global-id space).
     pub fn total_clauses(&self) -> usize {
         self.classes * self.clauses_per_class
     }
 
     #[inline]
+    /// Number of literals (2 × features) per clause.
     pub fn n_literals(&self) -> usize {
         self.n_literals
     }
@@ -191,6 +281,7 @@ impl FusedIndex {
         self.lists.row(k)
     }
 
+    /// True if the position matrix is kept for O(1) maintenance.
     pub fn is_maintained(&self) -> bool {
         self.pos.is_some()
     }
@@ -218,6 +309,9 @@ impl FusedIndex {
         if p == 0 {
             self.nonempty.set(k as usize);
         }
+        if let Some(plane) = &mut self.plane {
+            plane.set(k as usize, gid);
+        }
         if new_count == 1 {
             let class = self.meta[gid as usize].class as usize;
             self.vote_alive[class] += ClauseBank::polarity(gid as usize) * weight as i32;
@@ -236,6 +330,9 @@ impl FusedIndex {
         if self.lists.lens()[k as usize] == 0 {
             self.nonempty.clear(k as usize);
         }
+        if let Some(plane) = &mut self.plane {
+            plane.clear(k as usize, gid);
+        }
         if new_count == 0 {
             let class = self.meta[gid as usize].class as usize;
             self.vote_alive[class] -= ClauseBank::polarity(gid as usize) * weight as i32;
@@ -249,6 +346,11 @@ impl FusedIndex {
         m.vote += d;
         if nonempty {
             self.vote_alive[m.class as usize] += d;
+        }
+        // conservatively drop the parity-popcount fast path: weights in
+        // play means per-clause votes (rebuild recomputes the flag)
+        if let Some(plane) = &mut self.plane {
+            plane.uniform_votes = false;
         }
     }
 
@@ -289,9 +391,18 @@ impl FusedIndex {
     /// Bit-identical to running [`crate::index::IndexedEval::score`]
     /// per class: `out[c] = vote_alive[c] - Σ votes of c's falsified
     /// non-empty clauses` in exact integer arithmetic.
+    ///
+    /// With a bitmap plane present (see [`plane_for`]) the walk runs
+    /// the wide path instead: OR-accumulate the false non-empty
+    /// literals' clause bitmaps ([`simd::or_accumulate`]) and score the
+    /// falsified set with per-class masked popcounts — identical
+    /// scores and probe counts, integer-exact.
     pub fn score_into(&self, scratch: &mut FusedScratch, literals: &BitVec, out: &mut [i32]) {
         assert_eq!(out.len(), self.classes);
         assert_eq!(literals.len(), self.n_literals);
+        if self.plane.is_some() {
+            return self.score_into_wide(scratch, literals, out);
+        }
         debug_assert_eq!(scratch.gen.len(), self.total_clauses());
         out.copy_from_slice(&self.vote_alive);
         let FusedScratch {
@@ -299,6 +410,7 @@ impl FusedIndex {
             cur_gen,
             walk,
             probes,
+            ..
         } = scratch;
         *cur_gen = cur_gen.wrapping_add(1);
         if *cur_gen == 0 {
@@ -331,6 +443,60 @@ impl FusedIndex {
         probes.features_walked += walk.len() as u64;
         probes.clauses_falsified += falsified;
         probes.clauses_skipped += self.meta.len() as u64 - falsified;
+    }
+
+    /// The SIMD walk: instead of chasing CSR rows clause-by-clause with
+    /// gen-stamp dedup, OR each false non-empty literal's clause bitmap
+    /// into one falsified set (idempotent — no dedup state needed),
+    /// then subtract the falsified vote mass per class: a signed parity
+    /// popcount over the class's gid range when votes are uniform
+    /// (interleaved polarity makes even bits `+1`, odd bits `-1`), or a
+    /// set-bit iteration against `meta` for weighted machines. Probe
+    /// counts match the scalar walk exactly (`clauses_falsified` is the
+    /// popcount of the deduplicated set either way).
+    fn score_into_wide(&self, scratch: &mut FusedScratch, literals: &BitVec, out: &mut [i32]) {
+        let plane = self.plane.as_ref().expect("wide walk requires a plane");
+        out.copy_from_slice(&self.vote_alive);
+        let FusedScratch {
+            walk,
+            falsified,
+            probes,
+            ..
+        } = scratch;
+        if falsified.len() != plane.row_words {
+            falsified.resize(plane.row_words, 0);
+        }
+        falsified.fill(0);
+        walk.clear();
+        walk.extend(self.walk_false_nonempty(literals).map(|k| k as u32));
+        const LOOKAHEAD: usize = 2;
+        for (i, &k) in walk.iter().enumerate() {
+            if let Some(&kn) = walk.get(i + LOOKAHEAD) {
+                prefetch(plane.row(kn as usize).as_ptr() as *const u32);
+            }
+            simd::or_accumulate(falsified, plane.row(k as usize));
+        }
+        let knocked = simd::popcount_words(falsified);
+        if plane.uniform_votes {
+            let cpc = self.clauses_per_class;
+            for (c, slot) in out.iter_mut().enumerate() {
+                *slot -= simd::parity_vote_in_range(falsified, c * cpc, (c + 1) * cpc);
+            }
+        } else {
+            for (wi, &word) in falsified.iter().enumerate() {
+                let mut bits = word;
+                while bits != 0 {
+                    let b = bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    let m = self.meta[wi * 64 + b];
+                    out[m.class as usize] -= m.vote;
+                }
+            }
+        }
+        probes.dense_samples += 1;
+        probes.features_walked += walk.len() as u64;
+        probes.clauses_falsified += knocked;
+        probes.clauses_skipped += self.meta.len() as u64 - knocked;
     }
 
     /// Full structural invariant check against the machine (tests).
@@ -387,6 +553,36 @@ impl FusedIndex {
         if listed != listed_total {
             return Err(format!("listed {listed} != included {listed_total}"));
         }
+        // 3. the bitmap plane (when present) mirrors the lists exactly
+        if let Some(plane) = &self.plane {
+            if plane.row_words != words_for(self.total_clauses()) {
+                return Err("plane row_words out of sync".into());
+            }
+            for k in 0..self.n_literals {
+                let row = plane.row(k);
+                let set: u64 = row.iter().map(|w| w.count_ones() as u64).sum();
+                if set != self.lists.lens()[k] as u64 {
+                    return Err(format!(
+                        "plane row {k} popcount {set} != list len {}",
+                        self.lists.lens()[k]
+                    ));
+                }
+                for &gid in self.lists.row(k) {
+                    if (row[gid as usize >> 6] >> (gid & 63)) & 1 == 0 {
+                        return Err(format!("plane missing bit ({gid},{k})"));
+                    }
+                }
+            }
+            // uniform_votes may be conservatively false, never falsely true
+            let uniform = self
+                .meta
+                .iter()
+                .enumerate()
+                .all(|(g, m)| m.vote == ClauseBank::polarity(g));
+            if plane.uniform_votes && !uniform {
+                return Err("plane claims uniform votes on a weighted machine".into());
+            }
+        }
         Ok(())
     }
 }
@@ -421,17 +617,22 @@ pub struct FusedScratch {
     cur_gen: u32,
     /// Reusable walk-target buffer (enables prefetch lookahead).
     walk: Vec<u32>,
+    /// Falsified-clause bitmap of the wide walk (`row_words` words;
+    /// lazily sized — empty until the first wide evaluation).
+    falsified: Vec<u64>,
     /// Accumulated index-efficiency probe counters (plain adds; drained
     /// with [`FusedScratch::take_probes`]).
     probes: ProbeDelta,
 }
 
 impl FusedScratch {
+    /// Scratch sized for an index of `total_clauses` global ids.
     pub fn new(total_clauses: usize) -> Self {
         FusedScratch {
             gen: vec![0; total_clauses],
             cur_gen: 0,
             walk: Vec::new(),
+            falsified: Vec::new(),
             probes: ProbeDelta::default(),
         }
     }
@@ -442,6 +643,7 @@ impl FusedScratch {
         self.gen.resize(total_clauses, 0);
         self.cur_gen = 0;
         self.walk.clear();
+        self.falsified.clear();
         self.probes = ProbeDelta::default();
     }
 
@@ -617,5 +819,120 @@ mod tests {
         let tm = MultiClassTM::new(TMParams::new(2, 4, 3));
         let mut idx = FusedIndex::from_machine(&tm, Maintenance::Frozen);
         idx.on_include(0, 0, 1, 1);
+    }
+
+    #[test]
+    fn plane_gating_follows_mode_and_budget() {
+        // scalar: never; wide: always; auto: only within the word cap
+        assert!(plane_for(SimdMode::Scalar, 64, 8).is_none());
+        assert!(plane_for(SimdMode::Wide, 64, 8).is_some());
+        assert!(plane_for(SimdMode::Auto, 64, 8).is_some());
+        assert!(plane_for(SimdMode::Auto, 64, AUTO_PLANE_WORD_CAP + 1).is_none());
+        // wide forces the plane past the auto budget (no allocation
+        // concern at this size: 64 clauses -> 1 word rows)
+        assert!(plane_for(SimdMode::Wide, 64, 8).is_some());
+    }
+
+    #[test]
+    fn wide_walk_matches_scalar_walk_scores_and_probes() {
+        let mut rng = Rng::new(46);
+        for trial in 0..30 {
+            // >64 total clauses so the falsified bitmap spans words
+            let mut tm = random_machine(&mut rng, 3, 48, 20);
+            tm.set_simd(SimdMode::Scalar);
+            let scalar_idx = FusedIndex::from_machine(&tm, Maintenance::Frozen);
+            assert!(scalar_idx.plane.is_none());
+            tm.set_simd(SimdMode::Wide);
+            let wide_idx = FusedIndex::from_machine(&tm, Maintenance::Frozen);
+            assert!(wide_idx.plane.is_some());
+            let mut s_scratch = scalar_idx.make_scratch();
+            let mut w_scratch = wide_idx.make_scratch();
+            let mut s_out = vec![0i32; 3];
+            let mut w_out = vec![0i32; 3];
+            for _ in 0..20 {
+                let lits = random_lits(&mut rng, 40);
+                scalar_idx.score_into(&mut s_scratch, &lits, &mut s_out);
+                wide_idx.score_into(&mut w_scratch, &lits, &mut w_out);
+                assert_eq!(s_out, w_out, "trial {trial}");
+            }
+            let sp = s_scratch.take_probes();
+            let wp = w_scratch.take_probes();
+            assert_eq!(sp.dense_samples, wp.dense_samples);
+            assert_eq!(sp.features_walked, wp.features_walked);
+            assert_eq!(sp.clauses_falsified, wp.clauses_falsified);
+            assert_eq!(sp.clauses_skipped, wp.clauses_skipped);
+        }
+    }
+
+    #[test]
+    fn wide_walk_handles_weighted_votes() {
+        // weights break vote uniformity: the wide path must fall back
+        // to per-clause vote subtraction and still match the scalar walk
+        let mut rng = Rng::new(47);
+        let mut tm = MultiClassTM::new(TMParams::new(3, 10, 12).with_weighted(true));
+        for c in 0..3 {
+            let bank = tm.bank_mut(c);
+            for j in 0..10 {
+                for k in 0..24 {
+                    if rng.bern(0.2) {
+                        bank.set_state(j, k, (rng.below(11) as i8) - 5);
+                    }
+                }
+                bank.set_weight(j, 1 + rng.below(5));
+            }
+        }
+        tm.set_simd(SimdMode::Wide);
+        let wide_idx = FusedIndex::from_machine(&tm, Maintenance::Frozen);
+        assert!(!wide_idx.plane.as_ref().unwrap().uniform_votes);
+        tm.set_simd(SimdMode::Scalar);
+        let scalar_idx = FusedIndex::from_machine(&tm, Maintenance::Frozen);
+        let mut s_scratch = scalar_idx.make_scratch();
+        let mut w_scratch = wide_idx.make_scratch();
+        let mut s_out = vec![0i32; 3];
+        let mut w_out = vec![0i32; 3];
+        for _ in 0..40 {
+            let lits = random_lits(&mut rng, 24);
+            scalar_idx.score_into(&mut s_scratch, &lits, &mut s_out);
+            wide_idx.score_into(&mut w_scratch, &lits, &mut w_out);
+            assert_eq!(s_out, w_out);
+            for c in 0..3 {
+                assert_eq!(w_out[c], reference_score(tm.bank(c), &lits, false));
+            }
+        }
+    }
+
+    #[test]
+    fn maintained_wide_index_stays_in_sync_through_flips() {
+        use crate::tm::bank::Flip;
+        let mut rng = Rng::new(48);
+        let mut tm = random_machine(&mut rng, 2, 70, 10); // 140 gids: multi-word rows
+        tm.set_simd(SimdMode::Wide);
+        let mut idx = FusedIndex::from_machine(&tm, Maintenance::Maintained);
+        for _ in 0..6000 {
+            let c = rng.below(2) as usize;
+            let j = rng.below(70) as usize;
+            let k = rng.below(20) as usize;
+            let gid = idx.global_id(c, j);
+            let bank = tm.bank_mut(c);
+            if rng.bern(0.5) {
+                if bank.bump_up(j, k) == Flip::Included {
+                    let (count, weight) = (bank.count(j), bank.weight(j));
+                    idx.on_include(gid, k as u32, count, weight);
+                }
+            } else if bank.bump_down(j, k) == Flip::Excluded {
+                let (count, weight) = (bank.count(j), bank.weight(j));
+                idx.on_exclude(gid, k as u32, count, weight);
+            }
+        }
+        idx.check_invariants(&tm).unwrap();
+        let mut scratch = idx.make_scratch();
+        let mut out = vec![0i32; 2];
+        for _ in 0..10 {
+            let lits = random_lits(&mut rng, 20);
+            idx.score_into(&mut scratch, &lits, &mut out);
+            for c in 0..2 {
+                assert_eq!(out[c], reference_score(tm.bank(c), &lits, false));
+            }
+        }
     }
 }

@@ -89,22 +89,27 @@ impl ModelSnapshot {
         self
     }
 
+    /// Publisher-assigned version of this frozen snapshot.
     pub fn version(&self) -> u64 {
         self.version
     }
 
+    /// Number of classes.
     pub fn classes(&self) -> usize {
         self.tm.classes()
     }
 
+    /// Number of literals (2 × features) per clause.
     pub fn n_literals(&self) -> usize {
         self.tm.params.n_literals()
     }
 
+    /// Number of raw boolean features.
     pub fn features(&self) -> usize {
         self.tm.params.features
     }
 
+    /// The engine-selection policy baked into the snapshot.
     pub fn infer_mode(&self) -> InferMode {
         self.infer_mode
     }

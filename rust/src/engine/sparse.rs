@@ -50,6 +50,7 @@ use crate::obs::ProbeDelta;
 use crate::tm::bank::ClauseBank;
 use crate::tm::classifier::MultiClassTM;
 use crate::tm::params::TMParams;
+use crate::util::simd::SimdLanes;
 use crate::util::BitVec;
 
 /// Which inference engine `Trainer::predict`-side serving uses for the
@@ -68,6 +69,7 @@ pub enum InferMode {
 }
 
 impl InferMode {
+    /// Stable lowercase name used by the CLI, model files, and `stats`.
     pub fn name(self) -> &'static str {
         match self {
             InferMode::Auto => "auto",
@@ -171,6 +173,10 @@ pub struct SparseFusedIndex {
     base_false: Vec<u32>,
     /// Per-class exact inference score of the all-zeros input.
     base_score: Vec<i32>,
+    /// Lane selector resolved from [`TMParams::simd`]: the wide setting
+    /// walks each inclusion-list row in 4-gid quads and prefetches the
+    /// next quad's scratch gather lines (see [`toggle_row`]).
+    simd: SimdLanes,
 }
 
 /// Prefetch the cache line at `p` (no-op off x86_64).
@@ -182,6 +188,72 @@ fn prefetch(p: *const u32) {
     }
     #[cfg(not(target_arch = "x86_64"))]
     let _ = p;
+}
+
+/// One toggle: seed clause `gid`'s falsification counter from
+/// `base_false` on first touch this evaluation (generation stamp), then
+/// move it by `delta` (+1 falsify, -1 un-falsify).
+#[inline(always)]
+fn touch_gid(
+    gid: u32,
+    delta: i32,
+    stamp: u32,
+    base_false: &[u32],
+    gen: &mut [u32],
+    count: &mut [i32],
+    touched: &mut Vec<u32>,
+) {
+    let g = gid as usize;
+    if gen[g] != stamp {
+        gen[g] = stamp;
+        count[g] = base_false[g] as i32;
+        touched.push(gid);
+    }
+    count[g] += delta;
+}
+
+/// Apply one inclusion-list row's toggles to the stamped counters.
+///
+/// The wide variant walks the row in 4-gid quads, issuing prefetches
+/// for the *next* quad's `gen`/`count` gather lines while the current
+/// quad resolves. The toggle loop is a dependent random-access
+/// gather/scatter chain — unlike the dense walk's bitmap OR there is
+/// no data-parallel algebra to vectorize, so the lanes here buy
+/// latency hiding, not wider ALU work. The arithmetic and the touch
+/// order are identical either way: counts, `touched`, probes, and
+/// scores stay bit-exact with the scalar walk
+/// (`rust/tests/simd_equiv.rs`).
+#[inline(always)]
+fn toggle_row(
+    row: &[u32],
+    delta: i32,
+    stamp: u32,
+    wide: bool,
+    base_false: &[u32],
+    gen: &mut [u32],
+    count: &mut [i32],
+    touched: &mut Vec<u32>,
+) {
+    const QUAD: usize = 4;
+    let mut i = 0;
+    if wide {
+        while i + QUAD <= row.len() {
+            if i + 2 * QUAD <= row.len() {
+                for &gn in &row[i + QUAD..i + 2 * QUAD] {
+                    let g = gn as usize;
+                    prefetch(&gen[g] as *const u32);
+                    prefetch(&count[g] as *const i32 as *const u32);
+                }
+            }
+            for &gid in &row[i..i + QUAD] {
+                touch_gid(gid, delta, stamp, base_false, gen, count, touched);
+            }
+            i += QUAD;
+        }
+    }
+    for &gid in &row[i..] {
+        touch_gid(gid, delta, stamp, base_false, gen, count, touched);
+    }
 }
 
 impl SparseFusedIndex {
@@ -207,6 +279,7 @@ impl SparseFusedIndex {
                 .collect(),
             base_false: vec![0; total],
             base_score: vec![0; params.classes],
+            simd: params.simd.resolve(),
         }
     }
 
@@ -262,21 +335,25 @@ impl SparseFusedIndex {
     }
 
     #[inline]
+    /// Number of classes fused into this index.
     pub fn classes(&self) -> usize {
         self.classes
     }
 
     #[inline]
+    /// Number of raw boolean features.
     pub fn features(&self) -> usize {
         self.features
     }
 
     #[inline]
+    /// Number of literals (2 × features) per clause.
     pub fn n_literals(&self) -> usize {
         self.n_literals
     }
 
     #[inline]
+    /// Total clauses across every class (the global-id space).
     pub fn total_clauses(&self) -> usize {
         self.classes * self.clauses_per_class
     }
@@ -286,6 +363,7 @@ impl SparseFusedIndex {
         &self.base_score
     }
 
+    /// True if the position matrix is kept for O(1) maintenance.
     pub fn is_maintained(&self) -> bool {
         self.pos.is_some()
     }
@@ -409,6 +487,7 @@ impl SparseFusedIndex {
         let stamp = *cur_gen;
         touched.clear();
         let o = self.features;
+        let wide = self.simd == SimdLanes::Wide;
         let mut toggles: u64 = 0;
         const LOOKAHEAD: usize = 4;
         for (i, &k) in set.iter().enumerate() {
@@ -419,27 +498,11 @@ impl SparseFusedIndex {
             // negated literal o+k turns false: falsify
             let row = self.lists.row(o + k as usize);
             toggles += row.len() as u64;
-            for &gid in row {
-                let g = gid as usize;
-                if gen[g] != stamp {
-                    gen[g] = stamp;
-                    count[g] = self.base_false[g] as i32;
-                    touched.push(gid);
-                }
-                count[g] += 1;
-            }
+            toggle_row(row, 1, stamp, wide, &self.base_false, gen, count, touched);
             // positive literal k turns true: un-falsify
             let row = self.lists.row(k as usize);
             toggles += row.len() as u64;
-            for &gid in row {
-                let g = gid as usize;
-                if gen[g] != stamp {
-                    gen[g] = stamp;
-                    count[g] = self.base_false[g] as i32;
-                    touched.push(gid);
-                }
-                count[g] -= 1;
-            }
+            toggle_row(row, -1, stamp, wide, &self.base_false, gen, count, touched);
         }
         for &gid in touched.iter() {
             let g = gid as usize;
@@ -629,6 +692,7 @@ pub struct SparseScratch {
 }
 
 impl SparseScratch {
+    /// Scratch sized for an index of `total_clauses` global ids.
     pub fn new(total_clauses: usize) -> Self {
         SparseScratch {
             gen: vec![0; total_clauses],
@@ -1006,6 +1070,41 @@ mod tests {
         for c in 0..3 {
             assert_eq!(out[c], reference_score(tm.bank(c), &lits, false));
         }
+    }
+
+    #[test]
+    fn wide_toggle_walk_matches_scalar_bit_exactly() {
+        use crate::util::simd::SimdMode;
+        let mut rng = Rng::new(149);
+        let mut tm = random_machine(&mut rng, 3, 10, 40);
+        for (mode, lanes) in [
+            (SimdMode::Scalar, SimdLanes::Scalar),
+            (SimdMode::Wide, SimdLanes::Wide),
+        ] {
+            tm.set_simd(mode);
+            let idx = SparseFusedIndex::from_machine(&tm, Maintenance::Frozen);
+            assert_eq!(idx.simd, lanes);
+        }
+        tm.set_simd(SimdMode::Scalar);
+        let scalar = SparseFusedIndex::from_machine(&tm, Maintenance::Frozen);
+        tm.set_simd(SimdMode::Wide);
+        let wide = SparseFusedIndex::from_machine(&tm, Maintenance::Frozen);
+        let mut ss = scalar.make_scratch();
+        let mut ws = wide.make_scratch();
+        for _ in 0..60 {
+            let sample = random_khot(&mut rng, 40, rng.unit_f64());
+            let mut a = vec![0i32; 3];
+            let mut b = vec![0i32; 3];
+            scalar.score_sparse_into(&mut ss, sample.ones(), &mut a);
+            wide.score_sparse_into(&mut ws, sample.ones(), &mut b);
+            assert_eq!(a, b);
+            let lits = sample.to_literals();
+            for c in 0..3 {
+                assert_eq!(a[c], reference_score(tm.bank(c), &lits, false));
+            }
+        }
+        // probes (toggle/touch counts) are part of the contract too
+        assert_eq!(ss.take_probes(), ws.take_probes());
     }
 
     #[test]

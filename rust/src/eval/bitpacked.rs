@@ -22,6 +22,7 @@ pub struct BitPackedEval {
 }
 
 impl BitPackedEval {
+    /// Build a bit-packed evaluator sized for `params`.
     pub fn new(params: &crate::tm::params::TMParams) -> Self {
         BitPackedEval {
             masks: (0..params.clauses_per_class)

@@ -36,6 +36,7 @@ pub enum Backend {
 }
 
 impl Backend {
+    /// Construct the evaluator this backend names, sized for `params`.
     pub fn make(self, params: &TMParams) -> Box<dyn Evaluator + Send> {
         match self {
             Backend::Naive => Box::new(NaiveEval::new(params)),
@@ -44,6 +45,7 @@ impl Backend {
         }
     }
 
+    /// Stable lowercase name used by the CLI and bench reports.
     pub fn name(self) -> &'static str {
         match self {
             Backend::Naive => "naive",
@@ -52,6 +54,7 @@ impl Backend {
         }
     }
 
+    /// Every backend, in ablation order (naive, bitpacked, indexed).
     pub const ALL: [Backend; 3] = [Backend::Naive, Backend::BitPacked, Backend::Indexed];
 }
 

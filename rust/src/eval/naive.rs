@@ -14,6 +14,7 @@ use crate::util::BitVec;
 pub struct NaiveEval;
 
 impl NaiveEval {
+    /// Build the reference exhaustive-scan evaluator.
     pub fn new(_params: &crate::tm::params::TMParams) -> Self {
         NaiveEval
     }

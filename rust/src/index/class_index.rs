@@ -43,6 +43,7 @@ pub struct ClassIndex {
 }
 
 impl ClassIndex {
+    /// Empty index for `clauses` clauses over `n_literals` literals.
     pub fn new(clauses: usize, n_literals: usize) -> Self {
         ClassIndex {
             lists: ListStore::auto(clauses, n_literals),
@@ -123,6 +124,7 @@ impl ClassIndex {
     }
 
     #[inline]
+    /// The inclusion list for literal `k` (clause ids, unordered).
     pub fn list(&self, k: usize) -> &[u32] {
         self.lists.row(k)
     }
@@ -133,18 +135,22 @@ impl ClassIndex {
         self.lists.lens()
     }
 
+    /// Number of literals (2 × features) this index was built for.
     pub fn n_literals(&self) -> usize {
         self.lists.n_literals()
     }
 
+    /// Vote sum contributed by clauses with at least one included literal.
     pub fn vote_alive(&self) -> i32 {
         self.vote_alive
     }
 
+    /// Vote sum over every clause, including empty ones.
     pub fn vote_all(&self) -> i32 {
         self.vote_all
     }
 
+    /// The position matrix backing O(1) insert/delete.
     pub fn position_store(&self) -> &PositionStore {
         &self.pos
     }
@@ -244,6 +250,7 @@ fn prefetch(p: *const u32) {
 }
 
 impl IndexedEval {
+    /// Indexed evaluator for one class, sized for `params`.
     pub fn new(params: &TMParams) -> Self {
         Self::with_shape(params.clauses_per_class, params.n_literals())
     }
@@ -259,6 +266,7 @@ impl IndexedEval {
         }
     }
 
+    /// The underlying falsification index.
     pub fn index(&self) -> &ClassIndex {
         &self.index
     }

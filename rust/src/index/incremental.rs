@@ -72,6 +72,7 @@ impl IncrementalEval {
         &self.literals
     }
 
+    /// Total include/exclude flips applied through the maintenance hook.
     pub fn flips_applied(&self) -> u64 {
         self.flips_applied
     }

@@ -26,12 +26,20 @@ pub const FLAT_BUDGET_BYTES: usize = 256 << 20;
 pub enum ListStore {
     /// Paper-faithful fixed-capacity rows (`cap` = clauses per class).
     Flat {
+        /// Row capacity (clauses per class).
         cap: usize,
+        /// Live length of each literal's row.
         lens: Vec<u32>,
+        /// Row-major `n_literals x cap` clause-id arena.
         entries: Vec<u32>,
     },
     /// Heap-per-list fallback for very large shapes.
-    Nested { lens: Vec<u32>, lists: Vec<Vec<u32>> },
+    Nested {
+        /// Live length of each literal's row.
+        lens: Vec<u32>,
+        /// One clause-id vector per literal.
+        lists: Vec<Vec<u32>>,
+    },
 }
 
 impl ListStore {
@@ -52,6 +60,7 @@ impl ListStore {
     }
 
     #[inline]
+    /// Number of literal rows in the store.
     pub fn n_literals(&self) -> usize {
         match self {
             ListStore::Flat { lens, .. } | ListStore::Nested { lens, .. } => lens.len(),
@@ -138,10 +147,12 @@ impl ListStore {
         }
     }
 
+    /// True while every row still lives in the flat arena (no spills).
     pub fn is_flat(&self) -> bool {
         matches!(self, ListStore::Flat { .. })
     }
 
+    /// Approximate heap footprint of the store, in bytes.
     pub fn footprint_bytes(&self) -> usize {
         match self {
             ListStore::Flat { entries, lens, .. } => (entries.len() + lens.len()) * 4,

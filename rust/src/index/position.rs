@@ -23,7 +23,12 @@ pub const DENSE_BUDGET_BYTES: usize = 256 << 20;
 #[derive(Clone, Debug)]
 pub enum PositionStore {
     /// Dense `clauses x n_literals` u32 matrix (paper-faithful).
-    Dense { pos: Vec<u32>, n_literals: usize },
+    Dense {
+        /// `pos[j * n_literals + k]` = index of clause `j` in `L_k`.
+        pos: Vec<u32>,
+        /// Row stride of `pos`.
+        n_literals: usize,
+    },
     /// Open-addressing map keyed by `(j << 32) | k`.
     Sparse(U64Map),
 }
@@ -43,6 +48,7 @@ impl PositionStore {
         }
     }
 
+    /// Dense position matrix for `clauses` × `n_literals` slots.
     pub fn new_dense(clauses: usize, n_literals: usize) -> Self {
         PositionStore::Dense {
             pos: vec![NA; clauses * n_literals],
@@ -50,6 +56,7 @@ impl PositionStore {
         }
     }
 
+    /// Hash-map-backed position store for sparse occupancy.
     pub fn new_sparse() -> Self {
         PositionStore::Sparse(U64Map::new())
     }
@@ -91,6 +98,7 @@ impl PositionStore {
         }
     }
 
+    /// True if backed by the dense matrix rather than the hash map.
     pub fn is_dense(&self) -> bool {
         matches!(self, PositionStore::Dense { .. })
     }

@@ -33,6 +33,7 @@ pub struct IndexStats {
 }
 
 impl IndexStats {
+    /// Measure index shape (list lengths, memory) for a bank's index.
     pub fn collect(index: &ClassIndex, bank: &ClauseBank) -> Self {
         let n_literals = index.n_literals();
         let clauses = bank.clauses();

@@ -53,8 +53,16 @@
 //!   route table from the manifest alone.
 //! * [`bench_harness`] — regenerates every table and figure of the
 //!   paper's evaluation section.
-//! * [`util`] — deterministic RNG, bit vectors, a compact hash map, and
-//!   timing helpers (no external deps on the hot path).
+//! * [`util`] — deterministic RNG, bit vectors, the 4-wide SIMD kernel
+//!   layer ([`util::simd`]), a compact hash map, and timing helpers (no
+//!   external deps on the hot path).
+//!
+//! `docs/ARCHITECTURE.md` maps these modules onto the system's layer
+//! diagram and states the invariants each boundary guarantees;
+//! `docs/PROTOCOL.md` is the wire-protocol reference and
+//! `docs/TUNING.md` the operator's guide to the performance knobs.
+
+#![warn(missing_docs)]
 
 pub mod bench_harness;
 pub mod cluster;

@@ -53,7 +53,7 @@ use tsetlin_index::tm::classifier::MultiClassTM;
 use tsetlin_index::tm::io::{self, DenseModel};
 use tsetlin_index::tm::params::TMParams;
 use tsetlin_index::tm::trainer::{EpochStats, Trainer};
-use tsetlin_index::util::{BitVec, Rng};
+use tsetlin_index::util::{BitVec, Rng, SimdMode};
 
 /// `--key value` / `--flag` argument bag.
 struct Args {
@@ -151,6 +151,17 @@ fn parse_infer_mode(args: &Args) -> Result<InferMode> {
     args.get_or("infer", "auto").parse().map_err(anyhow::Error::msg)
 }
 
+/// Parse `--simd auto|wide|scalar` (lane width for the bit-plane hot
+/// loops, see `docs/TUNING.md`). Returns `None` when the flag is
+/// absent so model-loading commands can keep the mode stored in the
+/// model file instead of overriding it.
+fn parse_simd_mode(args: &Args) -> Result<Option<SimdMode>> {
+    match args.get("simd") {
+        None => Ok(None),
+        Some(v) => v.parse().map(Some).map_err(anyhow::Error::msg),
+    }
+}
+
 /// One line explaining which inference engine serves this dataset —
 /// the density auto-selection is otherwise invisible.
 fn report_infer_choice(mode: InferMode, resolved: InferMode, density: f64) {
@@ -181,12 +192,17 @@ fn cmd_train(args: &Args) -> Result<()> {
         .get_or("ta-layout", "sliced")
         .parse()
         .map_err(anyhow::Error::msg)?;
+    // --simd auto (default) picks wide lanes where the budget fits;
+    // wide/scalar force them. A dispatch choice, not a hyper-parameter:
+    // training is bit-identical across all three settings.
+    let simd = parse_simd_mode(args)?.unwrap_or_default();
     let params = TMParams::from_total_clauses(train.classes, clauses, train.features)
         .with_threshold(args.parse_or("threshold", 25)?)
         .with_s(args.parse_or("s", 6.0)?)
         .with_seed(args.parse_or("seed", 42)?)
         .with_weighted(args.has_flag("weighted"))
-        .with_ta_layout(ta_layout);
+        .with_ta_layout(ta_layout)
+        .with_simd(simd);
     // --threads 0 = every available core; 1 (default) = the sequential
     // trainer; >= 2 = the clause-sharded parallel trainer.
     let threads = resolve_threads(args.parse_or("threads", 1)?);
@@ -200,7 +216,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         );
     }
     eprintln!(
-        "training {} epochs on {} ({} samples, {} features, {} classes, {} clauses/class, backend={}, threads={}, ta-layout={})",
+        "training {} epochs on {} ({} samples, {} features, {} classes, {} clauses/class, backend={}, threads={}, ta-layout={}, simd={})",
         epochs,
         train.name,
         train.len(),
@@ -209,7 +225,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         params.clauses_per_class,
         backend.name(),
         threads,
-        params.ta_layout.name()
+        params.ta_layout.name(),
+        params.simd.name()
     );
     let infer_mode = parse_infer_mode(args)?;
     let mut order_rng = Rng::new(args.parse_or("seed", 42u64)? ^ 0x0def_ace0);
@@ -306,7 +323,11 @@ impl AnyTrainer {
 
 fn cmd_eval(args: &Args) -> Result<()> {
     let model_path = args.get("model").context("--model required")?;
-    let tm = io::load(model_path)?;
+    let mut tm = io::load(model_path)?;
+    // explicit --simd overrides the mode stored in the model file
+    if let Some(simd) = parse_simd_mode(args)? {
+        tm.set_simd(simd);
+    }
     let test = load_dataset(args, Split::Test)?;
     let backend: Backend = args
         .get_or("backend", "indexed")
@@ -474,7 +495,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .get("model")
         .context("--model required (or --registry <dir>)")?
         .to_string();
-    let tm = io::load(&model_path)?;
+    let mut tm = io::load(&model_path)?;
+    // explicit --simd overrides the mode stored in the model file;
+    // engines built from the machine pick it up via params (and the
+    // --watch reloader re-applies it to every hot-swapped version)
+    let simd_override = parse_simd_mode(args)?;
+    if let Some(simd) = simd_override {
+        tm.set_simd(simd);
+    }
     let backend: Backend = args
         .get_or("backend", "indexed")
         .parse()
@@ -658,7 +686,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let stop_watch = Arc::clone(&stop);
         std::thread::Builder::new()
             .name("tmi-watch".into())
-            .spawn(move || watch_model_file(&path, watch_handle, interval, infer_mode, stop_watch))
+            .spawn(move || {
+                watch_model_file(&path, watch_handle, interval, infer_mode, simd_override, stop_watch)
+            })
             .expect("spawning watch thread");
         eprintln!(
             "watching {model_path} (poll {}ms): republishing 'cpu' on content change",
@@ -705,7 +735,10 @@ fn cmd_serve_node(args: &Args) -> Result<()> {
     };
     let mut coord = Coordinator::new();
     if let Some(model_path) = args.get("model") {
-        let tm = io::load(model_path)?;
+        let mut tm = io::load(model_path)?;
+        if let Some(simd) = parse_simd_mode(args)? {
+            tm.set_simd(simd);
+        }
         let infer_mode = parse_infer_mode(args)?;
         let snap = Arc::new(ModelSnapshot::with_mode(tm, 1, infer_mode));
         coord.register_model("cpu", snap, route_config);
@@ -852,6 +885,7 @@ fn watch_model_file(
     handle: tsetlin_index::coordinator::CoordinatorHandle,
     interval: std::time::Duration,
     infer_mode: InferMode,
+    simd: Option<SimdMode>,
     stop: Arc<AtomicBool>,
 ) {
     let mut last = model_file_stamp(path);
@@ -869,7 +903,12 @@ fn watch_model_file(
         // `stats` stays the cross-publisher monotonic witness.
         let served = handle.stats("cpu").and_then(|s| s.version).unwrap_or(0);
         match io::load(path) {
-            Ok(tm) => {
+            Ok(mut tm) => {
+                // keep the serve command's --simd override sticky
+                // across reloads (the file carries its own mode)
+                if let Some(simd) = simd {
+                    tm.set_simd(simd);
+                }
                 let version = served + 1;
                 let snap = Arc::new(ModelSnapshot::with_mode(tm, version, infer_mode));
                 match handle.swap("cpu", snap) {
@@ -921,6 +960,9 @@ fn cmd_serve_registry(args: &Args) -> Result<()> {
     let retain: usize = args.parse_or("retain", DEFAULT_RETAIN)?;
     let workers: usize = args.parse_or("workers", 1)?;
     let queue_cap: usize = args.parse_or("queue-cap", 1024)?;
+    // explicit --simd overrides whatever mode each published model
+    // carries (applied to every recovered route below)
+    let simd_override = parse_simd_mode(args)?;
     let mut registry = Registry::open(&dir, retain)?;
     let route_names: Vec<String> = registry.routes().map(|(n, _)| n.to_string()).collect();
     if route_names.is_empty() {
@@ -960,6 +1002,9 @@ fn cmd_serve_registry(args: &Args) -> Result<()> {
                     rec.infer.name()
                 );
                 let mut serve_tm = rec.tm;
+                if let Some(simd) = simd_override {
+                    serve_tm.set_simd(simd);
+                }
                 let mut serve_version = rec.version;
                 if feedback_on {
                     // WAL replay closes the kill -9 window *before* the
@@ -1608,8 +1653,14 @@ const USAGE: &str = "usage: tmi <train|eval|table|work-ratio|serve|control|route
              [--ta-layout sliced|scalar]  (TA storage: bit-sliced banks with
                              word-parallel feedback (default) or the portable
                              scalar escape hatch; bit-identical training)
+             [--simd auto|wide|scalar]  (lane width for the bit-plane hot
+                             loops: wide = 4-lane u64 kernels with runtime
+                             AVX2/POPCNT dispatch, scalar = reference loops,
+                             auto (default) = wide where the clause-plane
+                             budget fits; bit-identical either way, see
+                             docs/TUNING.md)
   eval       --model model.tm --dataset ... [--backend B] [--threads N]
-             [--infer auto|dense|sparse]
+             [--infer auto|dense|sparse] [--simd auto|wide|scalar]
   table      --id 1|2|3 [--scale quick|standard|paper] [--out-dir results/]
   work-ratio --dataset ... --clauses N [--epochs N]
   serve      --model model.tm | --registry DIR  [--artifacts artifacts/]
@@ -1646,6 +1697,8 @@ const USAGE: &str = "usage: tmi <train|eval|table|work-ratio|serve|control|route
                                --feedback — the learner is the publisher)
              [--watch-interval-ms N]   (poll period, default 500)
              [--infer auto|dense|sparse]
+             [--simd auto|wide|scalar]  (override the lane width stored in
+                               the model file; sticky across --watch reloads)
              [--backend B] [--parallel N]  (ablation backends serve through a
                                single-worker factory route; no hot swap)
              [--metrics-addr host:port]  (Prometheus text exposition via HTTP

@@ -21,6 +21,7 @@ pub struct Histogram {
 }
 
 impl Histogram {
+    /// Empty histogram; buckets are powers of two up to `u64::MAX`.
     pub fn new() -> Self {
         Self::default()
     }

@@ -27,37 +27,82 @@ pub const DEFAULT_CAPACITY: usize = 1024;
 pub enum EventKind {
     /// A route atomically swapped to a new model snapshot.
     SnapshotSwap {
+        /// Route that swapped.
         route: String,
+        /// Publisher-assigned snapshot version now serving.
         version: u64,
+        /// The route's monotonic swap counter after the swap.
         generation: u64,
     },
     /// The supervisor restarted a panicked worker.
-    WorkerRestart { route: String, restarts: u64 },
+    WorkerRestart {
+        /// Route whose worker restarted.
+        route: String,
+        /// Successful restarts so far for the route.
+        restarts: u64,
+    },
     /// The registry quarantined a torn/corrupt snapshot file.
     Quarantine {
+        /// Route the damaged file belonged to.
         route: String,
+        /// Version of the quarantined file.
         version: u64,
+        /// Why it was quarantined (truncated, corrupt, …).
         reason: String,
     },
     /// A route was recovered (registry manifest / watch reload).
-    RouteRecovered { route: String, version: u64 },
+    RouteRecovered {
+        /// Route that was recovered.
+        route: String,
+        /// Version now being served.
+        version: u64,
+    },
     /// A route failed to load and was skipped or kept on its old
     /// snapshot (the `error` says why).
-    RouteFailed { route: String, error: String },
+    RouteFailed {
+        /// Route that failed to load.
+        route: String,
+        /// Human-readable failure.
+        error: String,
+    },
     /// First shed after a healthy period: a shed episode began.
-    ShedStart { route: String, trace: u64 },
+    ShedStart {
+        /// Route that began shedding.
+        route: String,
+        /// Trace id of the first shed request.
+        trace: u64,
+    },
     /// First successful admission after shedding: episode over.
-    ShedEnd { route: String, shed_total: u64 },
+    ShedEnd {
+        /// Route that recovered.
+        route: String,
+        /// Requests shed during the episode.
+        shed_total: u64,
+    },
     /// `--watch` picked up a changed model file and reloaded it.
-    WatchReload { route: String, version: u64 },
+    WatchReload {
+        /// Route that reloaded.
+        route: String,
+        /// Version picked up from disk.
+        version: u64,
+    },
     /// `--watch` saw a change but kept serving the old snapshot.
-    WatchFallback { route: String, error: String },
+    WatchFallback {
+        /// Route that kept its old snapshot.
+        route: String,
+        /// Why the new file was rejected.
+        error: String,
+    },
     /// The online learner republished after `updates` feedback events
     /// (publish cadence, `--publish-every`/`--publish-interval`).
     FeedbackPublish {
+        /// Route that republished.
         route: String,
+        /// Newly published snapshot version.
         version: u64,
+        /// The route's swap counter after the publish.
         generation: u64,
+        /// Feedback events folded into this publish.
         updates: u64,
     },
     /// Restart replayed `records` feedback-WAL events into the route's
@@ -67,30 +112,53 @@ pub enum EventKind {
     /// foreign/corrupt records (bad label or width — operator-visible
     /// before the log is truncated away).
     WalReplay {
+        /// Route whose WAL was replayed.
         route: String,
+        /// Records applied through the trainer.
         records: u64,
+        /// Records the recovered snapshot already owned (skipped).
         stale: u64,
+        /// Foreign/corrupt records dropped with a warning.
         skipped: u64,
     },
     /// The serve loop began draining (signal or shutdown).
-    Drain { reason: String },
+    Drain {
+        /// What triggered the drain (signal name, shutdown call).
+        reason: String,
+    },
     /// Control plane: a node answered a heartbeat after being down (or
     /// was seen for the first time) — admitted to the serving set.
-    NodeUp { node: String },
+    NodeUp {
+        /// Node id.
+        node: String,
+    },
     /// Control plane: a node missed a heartbeat while in the serving
     /// set (early warning; eviction follows at the missed-beat
     /// threshold).
-    NodeDown { node: String, missed: u64 },
+    NodeDown {
+        /// Node id.
+        node: String,
+        /// Consecutive missed heartbeats so far.
+        missed: u64,
+    },
     /// Control plane: a node crossed the missed-beat threshold and was
     /// evicted from the serving set until it answers again.
-    NodeEvict { node: String, missed: u64 },
+    NodeEvict {
+        /// Node id.
+        node: String,
+        /// Consecutive missed heartbeats at eviction.
+        missed: u64,
+    },
     /// A snapshot replication landed: the control plane pushed
     /// `route`@`version` to `node` and the node installed it (CRC
     /// verified). Emitted on both ends — route-scoped so it shows in
     /// the route's `stats events`.
     Replicate {
+        /// Node the image was pushed to.
         node: String,
+        /// Route the image belongs to.
         route: String,
+        /// Registry version that was installed.
         version: u64,
     },
 }
@@ -236,6 +304,7 @@ pub struct Event {
     pub wall_ms: u64,
     /// Monotonic microseconds since the journal was created.
     pub mono_us: u64,
+    /// What happened (swap, restart, shed episode, …).
     pub kind: EventKind,
 }
 
@@ -273,6 +342,7 @@ pub struct Journal {
 }
 
 impl Journal {
+    /// Ring journal retaining the most recent `capacity` events.
     pub fn new(capacity: usize) -> Self {
         Journal {
             ring: Mutex::new(Ring {
@@ -335,6 +405,7 @@ impl Journal {
         self.lock().events.len()
     }
 
+    /// True if no events have been retained.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -51,10 +51,15 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 ///   plus the `Trainer::train_sample` update (learn-while-serving).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Stage {
+    /// Admission to dequeue.
     Queue = 0,
+    /// Batch assembly.
     Batch = 1,
+    /// Engine scoring.
     Score = 2,
+    /// Reply bytes onto the socket.
     Write = 3,
+    /// Online-learning feedback application.
     Feedback = 4,
 }
 
@@ -62,6 +67,7 @@ pub enum Stage {
 pub const STAGES: usize = 5;
 
 impl Stage {
+    /// All pipeline stages, in request order.
     pub const ALL: [Stage; STAGES] = [
         Stage::Queue,
         Stage::Batch,

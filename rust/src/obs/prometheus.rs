@@ -71,6 +71,7 @@ pub struct PromWriter {
 }
 
 impl PromWriter {
+    /// Fresh writer with an empty exposition buffer.
     pub fn new() -> Self {
         Self::default()
     }

@@ -88,6 +88,7 @@ struct BarrierState {
 }
 
 impl WindowBarrier {
+    /// Barrier rendezvousing `workers` threads once per stale window.
     pub fn new(workers: usize) -> Self {
         WindowBarrier {
             state: Mutex::new(BarrierState {

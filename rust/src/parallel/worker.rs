@@ -68,7 +68,7 @@ impl WorkerState {
         WorkerState {
             out_bufs: (0..2 * window.max(1)).map(|_| BitVec::zeros(len)).collect(),
             negs: vec![0; window.max(1)],
-            scratch: FeedbackScratch::new(params.n_literals()),
+            scratch: FeedbackScratch::with_simd(params.n_literals(), params.simd.resolve()),
             ctx: FeedbackCtx::new(params.s, params.boost_true_positive, params.weighted),
             threshold: params.threshold as i32,
             classes: params.classes,

@@ -23,18 +23,23 @@ use crate::engine::InferMode;
 use crate::registry::store::RegistryError;
 use crate::util::Json;
 
+/// Manifest file name inside a registry directory.
 pub const MANIFEST: &str = "manifest.json";
+/// Scratch name the manifest is written to before the atomic rename.
 pub const MANIFEST_TMP: &str = "manifest.json.tmp";
+/// Name the previous manifest generation is demoted to.
 pub const MANIFEST_BAK: &str = "manifest.json.bak";
 
 /// One retained model file of one route.
 #[derive(Clone, Debug, PartialEq)]
 pub struct VersionEntry {
+    /// Monotonic version number within the route.
     pub version: u64,
     /// Path relative to the registry root (`<route>/v000001.tm`).
     pub file: String,
     /// CRC-32 of the complete file image as written.
     pub crc32: u32,
+    /// Snapshot file size in bytes.
     pub bytes: u64,
 }
 
@@ -42,21 +47,27 @@ pub struct VersionEntry {
 /// retained version list in ascending version order.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RouteEntry {
+    /// Engine-selection policy recorded at publish time.
     pub infer: InferMode,
+    /// Version number currently published (newest intact).
     pub published: u64,
+    /// Retained versions, oldest first.
     pub versions: Vec<VersionEntry>,
 }
 
 /// The whole route table.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Manifest {
+    /// Bumped on every publish; what `--watch` polls.
     pub generation: u64,
+    /// Every route, by name.
     pub routes: BTreeMap<String, RouteEntry>,
 }
 
 /// A manifest load that may have fallen back to the `.bak` generation.
 #[derive(Clone, Debug)]
 pub struct LoadedManifest {
+    /// The parsed manifest.
     pub manifest: Manifest,
     /// True iff `manifest.json` was missing/corrupt and `.bak` was used
     /// — the caller should rewrite the live file.
@@ -64,6 +75,7 @@ pub struct LoadedManifest {
 }
 
 impl Manifest {
+    /// Serialize to the on-disk JSON form.
     pub fn to_json(&self) -> Json {
         let routes: BTreeMap<String, Json> = self
             .routes
@@ -96,6 +108,7 @@ impl Manifest {
         ])
     }
 
+    /// Parse the on-disk JSON form, validating shape.
     pub fn from_json(v: &Json) -> Result<Manifest, String> {
         match v.get("format").and_then(Json::as_usize) {
             Some(1) => {}

@@ -36,15 +36,18 @@ pub const DEFAULT_RETAIN: usize = 4;
 /// Typed registry failure.
 #[derive(Debug)]
 pub enum RegistryError {
+    /// Filesystem failure.
     Io(std::io::Error),
     /// The manifest (and its backup) exists but cannot be parsed.
     CorruptManifest(String),
+    /// No route with that name in the manifest.
     UnknownRoute(String),
     /// Every retained version of the route failed its digest or parse
     /// check; all were quarantined.
     NoIntactVersion(String),
     /// Route names are path components: `[A-Za-z0-9_-]{1,64}` only.
     BadRouteName(String),
+    /// Snapshot file failed checksum or parse (typed model error).
     Model(ModelIoError),
 }
 
@@ -92,8 +95,11 @@ impl From<ModelIoError> for RegistryError {
 /// it.
 #[derive(Debug)]
 pub struct RecoveredModel {
+    /// The recovered machine.
     pub tm: MultiClassTM,
+    /// Registry version the machine was loaded from.
     pub version: u64,
+    /// Engine-selection policy recorded at publish time.
     pub infer: InferMode,
     /// Versions quarantined (newest-first) before an intact one loaded.
     pub quarantined: Vec<u64>,
@@ -102,9 +108,13 @@ pub struct RecoveredModel {
 /// One `verify` finding: a recorded version whose file is damaged.
 #[derive(Clone, Debug, PartialEq)]
 pub struct VerifyIssue {
+    /// Route the damaged file belongs to.
     pub route: String,
+    /// Version of the damaged file.
     pub version: u64,
+    /// File name inside the route directory.
     pub file: String,
+    /// Human-readable diagnosis.
     pub why: String,
 }
 
@@ -152,6 +162,7 @@ impl Registry {
         Ok(reg)
     }
 
+    /// The registry's root directory.
     pub fn dir(&self) -> &Path {
         &self.dir
     }
@@ -161,10 +172,12 @@ impl Registry {
         self.manifest.generation
     }
 
+    /// Every route in the manifest, by name.
     pub fn routes(&self) -> impl Iterator<Item = (&str, &RouteEntry)> {
         self.manifest.routes.iter().map(|(k, v)| (k.as_str(), v))
     }
 
+    /// The manifest entry for `name`, if present.
     pub fn route(&self, name: &str) -> Option<&RouteEntry> {
         self.manifest.routes.get(name)
     }

@@ -70,7 +70,9 @@ pub struct FeedbackRecord {
     /// skips records below the recovered snapshot's version (already
     /// owned by it).
     pub version: u64,
+    /// Label the example was tagged with.
     pub label: u32,
+    /// The example's literal vector.
     pub literals: BitVec,
 }
 
@@ -203,6 +205,7 @@ impl FeedbackWal {
         self.records
     }
 
+    /// Path of the log file.
     pub fn path(&self) -> &Path {
         &self.path
     }

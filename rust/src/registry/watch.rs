@@ -27,7 +27,9 @@ pub fn read_generation(dir: &Path) -> Option<u64> {
 /// served per route.
 #[derive(Clone, Debug, Default)]
 pub struct WatchState {
+    /// Manifest generation last acted on.
     pub generation: u64,
+    /// Published version currently being served, per route.
     pub served: BTreeMap<String, u64>,
 }
 
@@ -36,14 +38,21 @@ pub struct WatchState {
 pub enum SyncEvent {
     /// A newer intact version was recovered and handed to `apply`.
     Published {
+        /// Route that was recovered.
         route: String,
+        /// Version now being served.
         version: u64,
         /// Versions quarantined on the way to the intact one.
         quarantined: Vec<u64>,
     },
     /// Recovery (or the caller's `apply`) failed; the route keeps
     /// serving whatever it served before.
-    Failed { route: String, error: String },
+    Failed {
+        /// Route whose recovery failed.
+        route: String,
+        /// Human-readable failure.
+        error: String,
+    },
 }
 
 /// Reconcile served versions with the registry: for every route whose

@@ -9,16 +9,24 @@ use crate::util::Json;
 /// One AOT-lowered model variant.
 #[derive(Clone, Debug, PartialEq)]
 pub struct VariantMeta {
+    /// Variant name (`serve_b1`, `serve_b64`, …).
     pub name: String,
+    /// HLO file name inside the artifact directory.
     pub file: String,
+    /// Batch size the variant was lowered for.
     pub batch: usize,
+    /// Raw boolean features.
     pub features: usize,
+    /// Total clauses across every class.
     pub clauses: usize,
+    /// Number of classes.
     pub classes: usize,
+    /// True if lowered in the class-fused form.
     pub fused: bool,
 }
 
 impl VariantMeta {
+    /// Number of literals (2 × features).
     pub fn n_literals(&self) -> usize {
         2 * self.features
     }
@@ -50,11 +58,14 @@ impl VariantMeta {
 /// Parsed `artifacts/manifest.json`.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Artifact directory the manifest was read from.
     pub dir: PathBuf,
+    /// Every lowered variant.
     pub variants: Vec<VariantMeta>,
 }
 
 impl Manifest {
+    /// Parse `manifest.json` text produced by the AOT compiler.
     pub fn parse(dir: &Path, text: &str) -> Result<Self> {
         let v = Json::parse(text).context("parsing manifest.json")?;
         match v.get("format").and_then(Json::as_str) {
@@ -82,6 +93,7 @@ impl Manifest {
         Self::parse(dir, &text)
     }
 
+    /// The variant named `name`, if present.
     pub fn by_name(&self, name: &str) -> Option<&VariantMeta> {
         self.variants.iter().find(|v| v.name == name)
     }
@@ -107,6 +119,7 @@ impl Manifest {
             .min_by_key(|v| v.batch)
     }
 
+    /// Absolute path of the variant's HLO file.
     pub fn hlo_path(&self, v: &VariantMeta) -> PathBuf {
         self.dir.join(&v.file)
     }

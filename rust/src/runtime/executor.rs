@@ -29,6 +29,7 @@ impl Runtime {
         Ok(Runtime { client })
     }
 
+    /// The PJRT platform name (for diagnostics).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -89,6 +90,7 @@ impl Runtime {
 /// One compiled model variant.
 pub struct TmExecutable {
     exe: xla::PjRtLoadedExecutable,
+    /// Shape metadata of the loaded variant.
     pub meta: VariantMeta,
 }
 
@@ -106,7 +108,9 @@ pub struct Forward {
     pub scores: Vec<f32>,
     /// Argmax predictions, length `batch`.
     pub predictions: Vec<i32>,
+    /// Batch size scored.
     pub batch: usize,
+    /// Number of classes.
     pub classes: usize,
 }
 

@@ -30,6 +30,7 @@
 
 use crate::eval::traits::FlipSink;
 use crate::util::bitvec::{word_mask, words_for};
+use crate::util::simd::{self, SimdLanes};
 
 /// Result of a TA state bump: did the literal's inclusion change?
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -53,6 +54,7 @@ pub enum TaLayout {
 }
 
 impl TaLayout {
+    /// Stable lowercase name used by the CLI and model files.
     pub fn name(&self) -> &'static str {
         match self {
             TaLayout::Scalar => "scalar",
@@ -76,6 +78,9 @@ impl std::str::FromStr for TaLayout {
 const PLANES: usize = 8;
 /// The sign plane (bit 7): set iff the state is negative (= excluded).
 const SIGN: usize = PLANES - 1;
+
+// the 4-wide group kernel assumes the bank's plane geometry
+const _: () = assert!(PLANES == simd::GROUP_PLANES);
 
 /// Bit-sliced TA states: plane word `p` of word `w` of clause `j` at
 /// `planes[(j * words + w) * 8 + p]`, so one clause-word's 8 planes are
@@ -158,6 +163,9 @@ pub struct ClauseBank {
     /// compression extension the paper cites as [8]). Plain TMs keep
     /// every weight at 1, making weighted voting a strict generalization.
     weights: Vec<u32>,
+    /// Lane width of the sliced-layout `apply_masks` path (bit-exact
+    /// either way; see [`crate::util::simd`]).
+    simd: SimdLanes,
 }
 
 impl ClauseBank {
@@ -169,8 +177,21 @@ impl ClauseBank {
         Self::new_with_layout(clauses, n_literals, TaLayout::Scalar)
     }
 
-    /// Fresh bank in an explicit TA storage layout.
+    /// Fresh bank in an explicit TA storage layout (scalar SIMD lanes;
+    /// see [`ClauseBank::new_with_opts`]).
     pub fn new_with_layout(clauses: usize, n_literals: usize, layout: TaLayout) -> Self {
+        Self::new_with_opts(clauses, n_literals, layout, SimdLanes::Scalar)
+    }
+
+    /// Fresh bank with explicit TA storage layout *and* feedback lane
+    /// width. The lane width is a pure dispatch choice — both settings
+    /// produce bit-identical states and flip streams.
+    pub fn new_with_opts(
+        clauses: usize,
+        n_literals: usize,
+        layout: TaLayout,
+        simd: SimdLanes,
+    ) -> Self {
         let states = match layout {
             TaLayout::Scalar => TaStates::Scalar(vec![-1; clauses * n_literals]),
             TaLayout::Sliced => TaStates::Sliced(SlicedStates::new(clauses, n_literals)),
@@ -181,6 +202,7 @@ impl ClauseBank {
             states,
             include_count: vec![0; clauses],
             weights: vec![1; clauses],
+            simd,
         }
     }
 
@@ -192,10 +214,22 @@ impl ClauseBank {
         }
     }
 
+    /// Lane width used by the sliced-layout [`ClauseBank::apply_masks`].
+    #[inline]
+    pub fn simd(&self) -> SimdLanes {
+        self.simd
+    }
+
+    /// Switch the feedback lane width (a dispatch choice, not state —
+    /// no TA bits change).
+    pub fn set_simd(&mut self, simd: SimdLanes) {
+        self.simd = simd;
+    }
+
     /// Copy the bank into another layout (cold path: model conversion,
     /// differential tests). A no-op copy if the layout already matches.
     pub fn convert_layout(&self, layout: TaLayout) -> ClauseBank {
-        let mut out = ClauseBank::new_with_layout(self.clauses, self.n_literals, layout);
+        let mut out = ClauseBank::new_with_opts(self.clauses, self.n_literals, layout, self.simd);
         for j in 0..self.clauses {
             for k in 0..self.n_literals {
                 out.set_state(j, k, self.state(j, k));
@@ -244,16 +278,19 @@ impl ClauseBank {
         self.weights[j] = w;
     }
 
+    /// Per-clause vote weights (all 1 when weighting is off).
     pub fn weights(&self) -> &[u32] {
         &self.weights
     }
 
     #[inline]
+    /// Number of clauses in the bank.
     pub fn clauses(&self) -> usize {
         self.clauses
     }
 
     #[inline]
+    /// Number of literals (2 × features) per clause.
     pub fn n_literals(&self) -> usize {
         self.n_literals
     }
@@ -265,6 +302,7 @@ impl ClauseBank {
     }
 
     #[inline]
+    /// TA state of clause `j`, literal `k` (any layout; slow path).
     pub fn state(&self, j: usize, k: usize) -> i8 {
         match &self.states {
             TaStates::Scalar(v) => v[j * self.n_literals + k],
@@ -418,6 +456,14 @@ impl ClauseBank {
     /// flips are `sign_before XOR sign_after`. Scalar layout: the same
     /// masks applied lane-at-a-time (still skipping unselected lanes).
     ///
+    /// With [`SimdLanes::Wide`] the sliced ripple runs 4 clause-words
+    /// at a time ([`simd::saturating_step_group`] — the bank's plane
+    /// layout keeps a 4-word group's 32 plane words contiguous), with
+    /// per-lane in-order flip extraction; the tail words fall back to
+    /// the per-word body. Updates on zero-mask lanes are algebraically
+    /// idempotent, so the group path needn't skip them to stay
+    /// bit-exact.
+    ///
     /// [`bump_up`]: ClauseBank::bump_up
     /// [`bump_down`]: ClauseBank::bump_down
     pub fn apply_masks(&mut self, j: usize, up: &[u64], down: &[u64], sink: &mut dyn FlipSink) {
@@ -425,6 +471,7 @@ impl ClauseBank {
         let words = words_for(n);
         debug_assert!(up.len() >= words && down.len() >= words);
         let wj = self.weights[j];
+        let lanes = self.simd;
         let counts = &mut self.include_count;
         match &mut self.states {
             TaStates::Scalar(v) => {
@@ -459,12 +506,49 @@ impl ClauseBank {
                 }
             }
             TaStates::Sliced(sl) => {
-                for w in 0..words {
+                let mut w = 0usize;
+                if lanes == SimdLanes::Wide {
+                    while w + simd::GROUP_LANES <= words {
+                        let u4: [u64; simd::GROUP_LANES] =
+                            std::array::from_fn(|i| up[w + i] & word_mask(n, w + i));
+                        let d4: [u64; simd::GROUP_LANES] =
+                            std::array::from_fn(|i| down[w + i] & word_mask(n, w + i));
+                        debug_assert!(
+                            (0..simd::GROUP_LANES).all(|i| u4[i] & d4[i] == 0),
+                            "up/down masks must be disjoint"
+                        );
+                        if u4.iter().chain(d4.iter()).all(|&m| m == 0) {
+                            w += simd::GROUP_LANES;
+                            continue;
+                        }
+                        let base = sl.base(j, w);
+                        let pl = &mut sl.planes[base..base + simd::GROUP_WORDS];
+                        let (before, after) = simd::saturating_step_group(pl, &u4, &d4);
+                        for i in 0..simd::GROUP_LANES {
+                            let mut flipped = before[i] ^ after[i];
+                            while flipped != 0 {
+                                let b = flipped.trailing_zeros() as usize;
+                                flipped &= flipped - 1;
+                                let k = (w + i) * 64 + b;
+                                if (before[i] >> b) & 1 == 1 {
+                                    counts[j] += 1;
+                                    sink.on_include(j as u32, k as u32, counts[j], wj);
+                                } else {
+                                    counts[j] -= 1;
+                                    sink.on_exclude(j as u32, k as u32, counts[j], wj);
+                                }
+                            }
+                        }
+                        w += simd::GROUP_LANES;
+                    }
+                }
+                while w < words {
                     let mask = word_mask(n, w);
                     let u = up[w] & mask;
                     let d = down[w] & mask;
                     debug_assert_eq!(u & d, 0, "up/down masks must be disjoint");
                     if (u | d) == 0 {
+                        w += 1;
                         continue;
                     }
                     let base = sl.base(j, w);
@@ -502,6 +586,7 @@ impl ClauseBank {
                             sink.on_exclude(j as u32, k as u32, counts[j], wj);
                         }
                     }
+                    w += 1;
                 }
             }
         }
@@ -610,6 +695,7 @@ impl ClauseBank {
             states,
             include_count: self.include_count[start..start + len].to_vec(),
             weights: self.weights[start..start + len].to_vec(),
+            simd: self.simd,
         }
     }
 
@@ -925,6 +1011,60 @@ mod tests {
                     assert_eq!(e | b.include_word(j, w), word_mask(130, w));
                 }
             }
+        }
+    }
+
+    /// Wide-lane equivalence at the bank level: the 4-word group path
+    /// must leave identical states, counts, and flip decisions as the
+    /// per-word sliced path and the scalar layout (sink-stream
+    /// equivalence lives in `rust/tests/simd_equiv.rs`).
+    #[test]
+    fn apply_masks_wide_lanes_match_scalar_lanes() {
+        let mut rng = Rng::new(97);
+        // word counts straddling the group width: 1..=5 words incl. tails
+        for n_lit in [40usize, 64, 130, 256, 300] {
+            let words = words_for(n_lit);
+            let mut narrow =
+                ClauseBank::new_with_opts(4, n_lit, TaLayout::Sliced, SimdLanes::Scalar);
+            let mut wide = ClauseBank::new_with_opts(4, n_lit, TaLayout::Sliced, SimdLanes::Wide);
+            let mut scalar =
+                ClauseBank::new_with_opts(4, n_lit, TaLayout::Scalar, SimdLanes::Wide);
+            for j in 0..4 {
+                for k in 0..n_lit {
+                    let v = match rng.below(10) {
+                        0 => i8::MAX,
+                        1 => i8::MIN,
+                        _ => (rng.below(9) as i8) - 4,
+                    };
+                    narrow.set_state(j, k, v);
+                    wide.set_state(j, k, v);
+                    scalar.set_state(j, k, v);
+                }
+            }
+            for step in 0..300 {
+                let j = rng.below(4) as usize;
+                let mut up = vec![0u64; words];
+                let mut down = vec![0u64; words];
+                for w in 0..words {
+                    let a = rng.next_u64() & word_mask(n_lit, w);
+                    let b = rng.next_u64() & word_mask(n_lit, w);
+                    up[w] = a & !b;
+                    down[w] = b & !a;
+                }
+                narrow.apply_masks(j, &up, &down, &mut NoopSink);
+                wide.apply_masks(j, &up, &down, &mut NoopSink);
+                scalar.apply_masks(j, &up, &down, &mut NoopSink);
+                assert_eq!(
+                    narrow.clause_states(j),
+                    wide.clause_states(j),
+                    "n_lit={n_lit} step={step}"
+                );
+                assert_eq!(wide.clause_states(j), scalar.clause_states(j));
+                assert_eq!(narrow.count(j), wide.count(j));
+            }
+            assert!(narrow.check_counts() && wide.check_counts());
+            assert_eq!(narrow.states(), wide.states());
+            assert_eq!(wide.states(), scalar.states());
         }
     }
 

@@ -3,6 +3,7 @@
 
 use crate::tm::bank::ClauseBank;
 use crate::tm::params::TMParams;
+use crate::util::simd::SimdMode;
 
 /// The machine state proper: parameters + per-class TA banks. Evaluation
 /// strategy is deliberately *not* part of this struct — the paper's whole
@@ -11,39 +12,59 @@ use crate::tm::params::TMParams;
 /// the two together.
 #[derive(Clone, Debug)]
 pub struct MultiClassTM {
+    /// Shared hyperparameters (immutable after construction except [`set_simd`](Self::set_simd)).
     pub params: TMParams,
     banks: Vec<ClauseBank>,
 }
 
 impl MultiClassTM {
+    /// Fresh machine: one clause bank per class, all TA states at −1.
     pub fn new(params: TMParams) -> Self {
         params.validate().expect("invalid TM parameters");
         let banks = (0..params.classes)
             .map(|_| {
-                ClauseBank::new_with_layout(
+                ClauseBank::new_with_opts(
                     params.clauses_per_class,
                     params.n_literals(),
                     params.ta_layout,
+                    params.simd.resolve(),
                 )
             })
             .collect();
         MultiClassTM { params, banks }
     }
 
+    /// Switch the machine's SIMD lane selector (CLI `--simd` override
+    /// after loading a model): updates `params.simd` and re-points every
+    /// bank's feedback lane width. A pure dispatch change — no TA state
+    /// moves, and engines built from this machine afterwards (via
+    /// [`crate::engine::ModelSnapshot`] or the trainer) pick it up from
+    /// `params`.
+    pub fn set_simd(&mut self, simd: SimdMode) {
+        self.params.simd = simd;
+        for bank in &mut self.banks {
+            bank.set_simd(simd.resolve());
+        }
+    }
+
     #[inline]
+    /// The clause bank of `class`.
     pub fn bank(&self, class: usize) -> &ClauseBank {
         &self.banks[class]
     }
 
     #[inline]
+    /// Mutable clause bank of `class`.
     pub fn bank_mut(&mut self, class: usize) -> &mut ClauseBank {
         &mut self.banks[class]
     }
 
+    /// All class banks, in class order.
     pub fn banks(&self) -> &[ClauseBank] {
         &self.banks
     }
 
+    /// Number of classes.
     pub fn classes(&self) -> usize {
         self.params.classes
     }
@@ -90,6 +111,17 @@ mod tests {
             assert_eq!(tm.bank(0).layout(), layout);
             assert_eq!(tm.bank(1).layout(), layout);
         }
+    }
+
+    #[test]
+    fn banks_follow_params_simd_and_set_simd_repoints() {
+        use crate::util::simd::SimdLanes;
+        let mut tm = MultiClassTM::new(TMParams::new(2, 4, 8).with_simd(SimdMode::Scalar));
+        assert_eq!(tm.bank(0).simd(), SimdLanes::Scalar);
+        tm.set_simd(SimdMode::Wide);
+        assert_eq!(tm.params.simd, SimdMode::Wide);
+        assert_eq!(tm.bank(0).simd(), SimdLanes::Wide);
+        assert_eq!(tm.bank(1).simd(), SimdLanes::Wide);
     }
 
     #[test]

@@ -23,7 +23,8 @@ use crate::eval::traits::FlipSink;
 use crate::obs::probes::{FEEDBACK_CLAUSE_UPDATES, FEEDBACK_FLIPS};
 use crate::tm::bank::ClauseBank;
 use crate::util::bitvec::words_for;
-use crate::util::rng::{fill_bernoulli_words, prob_to_threshold, Rng};
+use crate::util::rng::{fill_bernoulli_words, fill_bernoulli_words_simd, prob_to_threshold, Rng};
+use crate::util::simd::{self, SimdLanes};
 use crate::util::BitVec;
 
 /// Precomputed Bernoulli thresholds for the specificity `s`.
@@ -76,10 +77,22 @@ pub struct FeedbackScratch {
     up: Vec<u64>,
     /// Lanes bumped toward exclude this update.
     down: Vec<u64>,
+    /// Lane width for mask fills and combines (bit-exact either way).
+    simd: SimdLanes,
 }
 
 impl FeedbackScratch {
+    /// Scalar-lane scratch (the reference path); the trainers build
+    /// theirs via [`FeedbackScratch::with_simd`] from `TMParams::simd`.
     pub fn new(n_literals: usize) -> Self {
+        Self::with_simd(n_literals, SimdLanes::Scalar)
+    }
+
+    /// Scratch with an explicit lane width for the Bernoulli fills and
+    /// mask combines. Both widths draw identical RNG streams and build
+    /// identical masks — the width only changes how many words move per
+    /// instruction.
+    pub fn with_simd(n_literals: usize, simd: SimdLanes) -> Self {
         let words = words_for(n_literals);
         FeedbackScratch {
             n_bits: n_literals,
@@ -87,6 +100,7 @@ impl FeedbackScratch {
             mem_fail: vec![0; words],
             up: vec![0; words],
             down: vec![0; words],
+            simd,
         }
     }
 }
@@ -243,19 +257,28 @@ pub fn type_i_with_scratch(
         sink.on_weight(j as u32, 1, bank.count(j) > 0);
     }
     let n = bank.n_literals();
-    fill_bernoulli_words(rng, ctx.p_forget, &mut scratch.forget, n);
+    let lanes = scratch.simd;
+    fill_bernoulli_words_simd(rng, ctx.p_forget, &mut scratch.forget, n, lanes);
     let lw = literals.words();
     if clause_out {
         if ctx.boost_true_positive {
             scratch.up.copy_from_slice(lw);
         } else {
-            fill_bernoulli_words(rng, ctx.p_forget, &mut scratch.mem_fail, n);
-            for (w, &l) in lw.iter().enumerate() {
-                scratch.up[w] = l & !scratch.mem_fail[w];
+            fill_bernoulli_words_simd(rng, ctx.p_forget, &mut scratch.mem_fail, n, lanes);
+            if lanes == SimdLanes::Wide {
+                simd::and_not_into(&mut scratch.up, lw, &scratch.mem_fail);
+            } else {
+                for (w, &l) in lw.iter().enumerate() {
+                    scratch.up[w] = l & !scratch.mem_fail[w];
+                }
             }
         }
-        for (w, &l) in lw.iter().enumerate() {
-            scratch.down[w] = !l & scratch.forget[w];
+        if lanes == SimdLanes::Wide {
+            simd::not_and_into(&mut scratch.down, lw, &scratch.forget);
+        } else {
+            for (w, &l) in lw.iter().enumerate() {
+                scratch.down[w] = !l & scratch.forget[w];
+            }
         }
     } else {
         scratch.up.fill(0);
@@ -309,9 +332,14 @@ pub fn type_ii_with_scratch(
         }
     }
     bank.fill_exclude_mask(j, &mut scratch.up);
-    for (w, &l) in literals.words().iter().enumerate() {
-        scratch.up[w] &= !l;
-        scratch.down[w] = 0;
+    if scratch.simd == SimdLanes::Wide {
+        simd::and_not_assign(&mut scratch.up, literals.words());
+        scratch.down.fill(0);
+    } else {
+        for (w, &l) in literals.words().iter().enumerate() {
+            scratch.up[w] &= !l;
+            scratch.down[w] = 0;
+        }
     }
     bank.apply_masks(j, &scratch.up, &scratch.down, sink);
 }

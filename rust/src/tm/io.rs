@@ -261,6 +261,7 @@ pub fn save(tm: &MultiClassTM, path: impl AsRef<Path>) -> Result<()> {
     Ok(())
 }
 
+/// Load a model file (v2 or v3), verifying the CRC-32 footer first.
 pub fn load(path: impl AsRef<Path>) -> Result<MultiClassTM, ModelIoError> {
     let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
     load_from(&mut f)
@@ -274,16 +275,24 @@ pub fn load(path: impl AsRef<Path>) -> Result<MultiClassTM, ModelIoError> {
 /// `polarity[jt * classes + class] = ±1`.
 #[derive(Clone, Debug)]
 pub struct DenseModel {
+    /// Number of raw boolean features.
     pub features: usize,
+    /// Number of literals (2 × features).
     pub n_literals: usize,
+    /// Total clauses across every class.
     pub clauses_total: usize,
+    /// Number of classes.
     pub classes: usize,
+    /// Row-major include mask, `clauses_total × n_literals`, 0.0/1.0.
     pub include: Vec<f32>,
+    /// Included-literal count per clause.
     pub count: Vec<f32>,
+    /// Vote polarity per clause (+1.0 even local ids, −1.0 odd).
     pub polarity: Vec<f32>,
 }
 
 impl DenseModel {
+    /// Flatten a machine into the dense array form the XLA path consumes.
     pub fn from_tm(tm: &MultiClassTM) -> Self {
         let m = tm.classes();
         let n = tm.params.clauses_per_class;

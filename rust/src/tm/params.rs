@@ -1,6 +1,7 @@
 //! Hyper-parameters of a multi-class Tsetlin Machine.
 
 use crate::tm::bank::TaLayout;
+use crate::util::simd::SimdMode;
 use crate::util::Json;
 
 /// Hyper-parameters (paper §2). `clauses_per_class` is the paper's `n`;
@@ -35,9 +36,17 @@ pub struct TMParams {
     /// hatch (and the serialized form either way, see
     /// [`crate::tm::io`]).
     pub ta_layout: TaLayout,
+    /// SIMD lane selector for the hot loops (default auto). Like
+    /// `ta_layout`, a *representation/dispatch* choice, not a learning
+    /// hyper-parameter: scalar, wide, and auto produce bit-identical
+    /// machines, scores, flip streams, and RNG positions
+    /// (`rust/tests/simd_equiv.rs`) — only throughput changes. See
+    /// [`crate::util::simd`].
+    pub simd: SimdMode,
 }
 
 impl TMParams {
+    /// Paper-default hyperparameters for the given machine shape.
     pub fn new(classes: usize, clauses_per_class: usize, features: usize) -> Self {
         TMParams {
             classes,
@@ -49,29 +58,41 @@ impl TMParams {
             seed: 42,
             weighted: false,
             ta_layout: TaLayout::default(),
+            simd: SimdMode::default(),
         }
     }
 
+    /// Toggle integer clause weighting (arXiv 1911.12607).
     pub fn with_weighted(mut self, weighted: bool) -> Self {
         self.weighted = weighted;
         self
     }
 
+    /// Select the TA storage layout (bit-sliced default or scalar).
     pub fn with_ta_layout(mut self, layout: TaLayout) -> Self {
         self.ta_layout = layout;
         self
     }
 
+    /// Set the SIMD lane selector (see [`TMParams::simd`]).
+    pub fn with_simd(mut self, simd: SimdMode) -> Self {
+        self.simd = simd;
+        self
+    }
+
+    /// Set the vote clamp threshold `T`.
     pub fn with_threshold(mut self, t: u32) -> Self {
         self.threshold = t;
         self
     }
 
+    /// Set the specificity `s` (feedback forget/memorize ratio).
     pub fn with_s(mut self, s: f64) -> Self {
         self.s = s;
         self
     }
 
+    /// Set the RNG seed that every training stream derives from.
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
@@ -114,9 +135,11 @@ impl TMParams {
             ("seed", Json::num(self.seed as f64)),
             ("weighted", Json::Bool(self.weighted)),
             ("ta_layout", Json::str(self.ta_layout.name())),
+            ("simd", Json::str(self.simd.name())),
         ])
     }
 
+    /// Parse params from the model-file JSON block.
     pub fn from_json(v: &Json) -> Result<Self, String> {
         let field = |name: &str| v.get(name).ok_or_else(|| format!("missing field '{name}'"));
         let p = TMParams {
@@ -140,11 +163,18 @@ impl TMParams {
                 Some(name) => name.parse()?,
                 None => TaLayout::default(),
             },
+            // absent in pre-SIMD model files: auto dispatch (a pure
+            // representation choice, so old models stay bit-identical)
+            simd: match v.get("simd").and_then(Json::as_str) {
+                Some(name) => name.parse()?,
+                None => SimdMode::default(),
+            },
         };
         p.validate()?;
         Ok(p)
     }
 
+    /// Check shape/hyperparameter consistency, returning the first problem.
     pub fn validate(&self) -> Result<(), String> {
         if self.classes < 2 {
             return Err(format!("need >= 2 classes, got {}", self.classes));
@@ -237,6 +267,26 @@ mod tests {
         let mut json = TMParams::new(2, 4, 8).to_json();
         if let Json::Obj(o) = &mut json {
             o.insert("ta_layout".to_string(), Json::str("simd"));
+        }
+        assert!(TMParams::from_json(&json).is_err());
+    }
+
+    #[test]
+    fn simd_json_roundtrip_and_default() {
+        let p = TMParams::new(2, 4, 8).with_simd(SimdMode::Scalar);
+        let q = TMParams::from_json(&p.to_json()).unwrap();
+        assert_eq!(q.simd, SimdMode::Scalar);
+        // pre-SIMD model files (no field) get auto dispatch
+        let mut json = TMParams::new(2, 4, 8).to_json();
+        if let Json::Obj(o) = &mut json {
+            o.remove("simd");
+        }
+        let q = TMParams::from_json(&json).unwrap();
+        assert_eq!(q.simd, SimdMode::Auto);
+        // a bogus lane name is rejected
+        let mut json = TMParams::new(2, 4, 8).to_json();
+        if let Json::Obj(o) = &mut json {
+            o.insert("simd".to_string(), Json::str("avx512"));
         }
         assert!(TMParams::from_json(&json).is_err());
     }

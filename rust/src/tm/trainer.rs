@@ -40,8 +40,11 @@ use crate::util::BitVec;
 /// Per-epoch training statistics.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct EpochStats {
+    /// Samples seen this epoch.
     pub samples: usize,
+    /// Clause-range feedback applications this epoch.
     pub clause_updates: u64,
+    /// Include/exclude flips applied through the index hooks.
     pub flips: u64,
     /// Wall-clock time of the epoch (populated by `train_epoch` on both
     /// the sequential and the parallel path).
@@ -89,6 +92,7 @@ pub fn train_streams(seed: u64, worker: u64) -> (Rng, Rng) {
 /// Binds a [`MultiClassTM`] to an evaluation backend and drives
 /// learning and prediction.
 pub struct Trainer {
+    /// The machine being trained (readable between epochs).
     pub tm: MultiClassTM,
     evals: Vec<Box<dyn Evaluator + Send>>,
     backend: Backend,
@@ -121,6 +125,7 @@ pub struct Trainer {
 }
 
 impl Trainer {
+    /// Trainer over a fresh machine using the given evaluation backend.
     pub fn new(params: TMParams, backend: Backend) -> Self {
         let tm = MultiClassTM::new(params.clone());
         let evals = (0..params.classes)
@@ -129,7 +134,10 @@ impl Trainer {
         let (sample_rng, feedback_rng) = train_streams(params.seed, 0);
         Trainer {
             out_scratch: BitVec::zeros(params.clauses_per_class),
-            feedback_scratch: FeedbackScratch::new(params.n_literals()),
+            feedback_scratch: FeedbackScratch::with_simd(
+                params.n_literals(),
+                params.simd.resolve(),
+            ),
             ctx: FeedbackCtx::new(params.s, params.boost_true_positive, params.weighted),
             evals,
             backend,
@@ -160,7 +168,10 @@ impl Trainer {
         let (sample_rng, feedback_rng) = train_streams(params.seed, 0);
         Trainer {
             out_scratch: BitVec::zeros(params.clauses_per_class),
-            feedback_scratch: FeedbackScratch::new(params.n_literals()),
+            feedback_scratch: FeedbackScratch::with_simd(
+                params.n_literals(),
+                params.simd.resolve(),
+            ),
             ctx: FeedbackCtx::new(params.s, params.boost_true_positive, params.weighted),
             evals,
             backend,
@@ -178,6 +189,7 @@ impl Trainer {
         }
     }
 
+    /// The evaluation backend this trainer was built with.
     pub fn backend(&self) -> Backend {
         self.backend
     }
@@ -201,6 +213,7 @@ impl Trainer {
         }
     }
 
+    /// Worker threads used for batch inference.
     pub fn infer_threads(&self) -> usize {
         self.infer_threads
     }
@@ -217,6 +230,7 @@ impl Trainer {
         self.infer_mode = mode;
     }
 
+    /// The engine-selection policy used by inference calls.
     pub fn infer_mode(&self) -> InferMode {
         self.infer_mode
     }

@@ -75,34 +75,40 @@ impl BitVec {
     }
 
     #[inline]
+    /// Number of bits.
     pub fn len(&self) -> usize {
         self.len
     }
 
     #[inline]
+    /// True if the vector has zero bits.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
 
     #[inline]
+    /// Read bit `i`.
     pub fn get(&self, i: usize) -> bool {
         debug_assert!(i < self.len);
         (self.words[i >> 6] >> (i & 63)) & 1 == 1
     }
 
     #[inline]
+    /// Set bit `i` to 1.
     pub fn set(&mut self, i: usize) {
         debug_assert!(i < self.len);
         self.words[i >> 6] |= 1u64 << (i & 63);
     }
 
     #[inline]
+    /// Clear bit `i` to 0.
     pub fn clear(&mut self, i: usize) {
         debug_assert!(i < self.len);
         self.words[i >> 6] &= !(1u64 << (i & 63));
     }
 
     #[inline]
+    /// Write bit `i`.
     pub fn assign(&mut self, i: usize, v: bool) {
         if v {
             self.set(i)
@@ -122,6 +128,7 @@ impl BitVec {
         self.mask_tail();
     }
 
+    /// Number of set bits.
     pub fn count_ones(&self) -> usize {
         self.words.iter().map(|w| w.count_ones() as usize).sum()
     }

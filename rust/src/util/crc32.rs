@@ -35,10 +35,12 @@ pub struct Crc32 {
 }
 
 impl Crc32 {
+    /// Fresh CRC-32 (IEEE) state.
     pub fn new() -> Self {
         Crc32 { state: 0xFFFF_FFFF }
     }
 
+    /// Fold `bytes` into the running checksum.
     pub fn update(&mut self, bytes: &[u8]) {
         let mut crc = self.state;
         for &b in bytes {
@@ -47,6 +49,7 @@ impl Crc32 {
         self.state = crc;
     }
 
+    /// Finalize and return the checksum.
     pub fn finish(self) -> u32 {
         self.state ^ 0xFFFF_FFFF
     }

@@ -9,15 +9,22 @@ use std::fmt;
 /// A JSON value. Objects use `BTreeMap` for deterministic emission.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// JSON boolean.
     Bool(bool),
+    /// JSON number (stored as `f64`).
     Num(f64),
+    /// JSON string.
     Str(String),
+    /// JSON array.
     Arr(Vec<Json>),
+    /// JSON object with sorted keys (deterministic serialization).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a JSON document, reporting position on error.
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser {
             bytes: text.as_bytes(),
@@ -34,6 +41,7 @@ impl Json {
 
     // -- typed accessors ---------------------------------------------------
 
+    /// Borrow the string value, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -41,6 +49,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -48,10 +57,12 @@ impl Json {
         }
     }
 
+    /// The numeric value as `usize`, if integral and in range.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().filter(|n| *n >= 0.0 && n.fract() == 0.0).map(|n| n as usize)
     }
 
+    /// The boolean value, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -59,6 +70,7 @@ impl Json {
         }
     }
 
+    /// Borrow the elements, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -66,6 +78,7 @@ impl Json {
         }
     }
 
+    /// Look up `key`, if this is an `Obj`.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(o) => o.get(key),
@@ -75,6 +88,7 @@ impl Json {
 
     // -- builders ----------------------------------------------------------
 
+    /// Build an object from key/value pairs.
     pub fn obj(pairs: impl IntoIterator<Item = (&'static str, Json)>) -> Json {
         Json::Obj(
             pairs
@@ -84,10 +98,12 @@ impl Json {
         )
     }
 
+    /// Build a number.
     pub fn num(n: impl Into<f64>) -> Json {
         Json::Num(n.into())
     }
 
+    /// Build a string.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
@@ -96,7 +112,9 @@ impl Json {
 /// Parse error with byte offset.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct JsonError {
+    /// Byte offset of the parse failure.
     pub pos: usize,
+    /// What went wrong.
     pub msg: String,
 }
 

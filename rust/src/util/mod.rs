@@ -1,14 +1,16 @@
 //! Zero-dependency utilities for the hot path.
 //!
 //! Everything the inner training/inference loops touch lives here:
-//! a deterministic splitmix/xoshiro RNG, packed bit vectors, a compact
-//! open-addressing map (used by the sparse position store), and a
-//! monotonic timer.
+//! a deterministic splitmix/xoshiro RNG, packed bit vectors, 4-wide
+//! `u64` SIMD lane kernels with runtime x86_64 dispatch ([`simd`]), a
+//! compact open-addressing map (used by the sparse position store),
+//! and a monotonic timer.
 
 pub mod bitvec;
 pub mod crc32;
 pub mod json;
 pub mod rng;
+pub mod simd;
 pub mod smallmap;
 pub mod timer;
 
@@ -16,5 +18,6 @@ pub use bitvec::BitVec;
 pub use crc32::{crc32, Crc32};
 pub use json::Json;
 pub use rng::Rng;
+pub use simd::{SimdLanes, SimdMode};
 pub use smallmap::U64Map;
 pub use timer::Stopwatch;

@@ -8,6 +8,7 @@
 //! without indexing, so both runs must see identical random streams.
 
 use crate::util::bitvec::{word_mask, words_for};
+use crate::util::simd::{SimdLanes, W4};
 
 /// xoshiro256** generator (public-domain reference algorithm).
 #[derive(Clone, Debug)]
@@ -43,6 +44,7 @@ impl Rng {
     }
 
     #[inline]
+    /// Next 64 uniformly random bits.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
             .wrapping_mul(5)
@@ -59,6 +61,7 @@ impl Rng {
     }
 
     #[inline]
+    /// Next 32 uniformly random bits (high half of [`next_u64`](Self::next_u64)).
     pub fn next_u32(&mut self) -> u32 {
         (self.next_u64() >> 32) as u32
     }
@@ -192,6 +195,74 @@ pub fn fill_bernoulli_words(rng: &mut Rng, threshold: u32, out: &mut [u64], n_bi
         }
         out[words - 1] &= tail_mask;
     }
+}
+
+/// [`fill_bernoulli_words`] with an explicit lane width: the
+/// [`SimdLanes::Wide`] dense path folds 4 output words at a time with
+/// [`crate::util::simd::W4`] lane ops while drawing uniform words in
+/// the *same word-major order* as the scalar fold, so the produced mask
+/// **and** the RNG stream position are bit-identical to the scalar
+/// path for every `(threshold, n_bits)`. The sparse geometric-skip
+/// path and all edge cases are inherently serial and delegate
+/// unchanged.
+pub fn fill_bernoulli_words_simd(
+    rng: &mut Rng,
+    threshold: u32,
+    out: &mut [u64],
+    n_bits: usize,
+    lanes: SimdLanes,
+) {
+    debug_assert!(out.len() * 64 >= n_bits, "mask buffer too small");
+    if lanes == SimdLanes::Scalar || n_bits == 0 || threshold == 0 || threshold == u32::MAX {
+        return fill_bernoulli_words(rng, threshold, out, n_bits);
+    }
+    let words = words_for(n_bits);
+    // same cost model as the scalar fill — identical strategy choice
+    // keeps the draw streams aligned
+    let expansion_bits = 32 - threshold.trailing_zeros();
+    let p = threshold as f64 * (1.0 / 4294967296.0);
+    let skip_draws = n_bits as f64 * p;
+    if skip_draws * 6.0 < (words as u32 * expansion_bits) as f64 {
+        return fill_bernoulli_words(rng, threshold, out, n_bits);
+    }
+    out.fill(0);
+    let tail_mask = word_mask(n_bits, words - 1);
+    let bits = expansion_bits as usize;
+    let tz = threshold.trailing_zeros();
+    // Uniform draws for a 4-word group, in scalar order: all `bits`
+    // draws of word w, then of word w+1, ... — lane-major here.
+    let mut draws = [0u64; 4 * 32];
+    let mut w = 0usize;
+    while w + 4 <= words {
+        for d in draws[..4 * bits].iter_mut() {
+            *d = rng.next_u64();
+        }
+        let mut m = W4::zero();
+        for (i, _) in (tz..32).enumerate() {
+            let r = W4([
+                draws[i],
+                draws[bits + i],
+                draws[2 * bits + i],
+                draws[3 * bits + i],
+            ]);
+            m = if (threshold >> (tz + i as u32)) & 1 == 1 {
+                r.or(m)
+            } else {
+                r.and(m)
+            };
+        }
+        m.store(out, w);
+        w += 4;
+    }
+    for slot in out[w..words].iter_mut() {
+        let mut m = 0u64;
+        for i in tz..32 {
+            let r = rng.next_u64();
+            m = if (threshold >> i) & 1 == 1 { r | m } else { r & m };
+        }
+        *slot = m;
+    }
+    out[words - 1] &= tail_mask;
 }
 
 /// Convert a probability to the u32 threshold used by `bern_threshold`.
@@ -370,6 +441,36 @@ mod tests {
         fill_bernoulli_words(&mut r, prob_to_threshold(1.0), &mut short, 70);
         assert_eq!(short[0], !0u64);
         assert_eq!(short[1], (1u64 << 6) - 1);
+    }
+
+    #[test]
+    fn fill_bernoulli_words_simd_is_bit_and_stream_exact() {
+        // wide fill must match the scalar fill bit-for-bit AND leave
+        // the RNG at the same stream position, across both strategies,
+        // edge thresholds, and non-multiple-of-4 word counts
+        for n_bits in [0usize, 1, 63, 64, 70, 255, 256, 300, 1000, 4096] {
+            for p in [0.0, 1.0, 0.25, 0.3, 0.5, 0.01, 1e-4] {
+                let th = prob_to_threshold(p);
+                let words = n_bits.div_ceil(64).max(1);
+                let mut scalar_rng = Rng::new(0x1234_5678 ^ n_bits as u64);
+                let mut wide_rng = scalar_rng.clone();
+                let mut scalar_out = vec![!0u64; words];
+                let mut wide_out = vec![0xAAu64; words];
+                fill_bernoulli_words(&mut scalar_rng, th, &mut scalar_out, n_bits);
+                fill_bernoulli_words_simd(&mut wide_rng, th, &mut wide_out, n_bits, SimdLanes::Wide);
+                assert_eq!(scalar_out, wide_out, "p={p} n_bits={n_bits}: mask");
+                assert_eq!(
+                    scalar_rng.next_u64(),
+                    wide_rng.next_u64(),
+                    "p={p} n_bits={n_bits}: stream position"
+                );
+                // forced-scalar lanes are the scalar function verbatim
+                let mut forced_rng = Rng::new(0x1234_5678 ^ n_bits as u64);
+                let mut forced_out = vec![0u64; words];
+                fill_bernoulli_words_simd(&mut forced_rng, th, &mut forced_out, n_bits, SimdLanes::Scalar);
+                assert_eq!(scalar_out, forced_out, "p={p} n_bits={n_bits}: forced scalar");
+            }
+        }
     }
 
     #[test]

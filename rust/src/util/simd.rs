@@ -1,0 +1,818 @@
+//! Explicit 4-wide `u64` lane primitives for the bit-plane hot paths.
+//!
+//! The fused falsification walk ([`crate::engine::FusedIndex`]), the
+//! sparse-delta toggle loops ([`crate::engine::SparseFusedIndex`]), the
+//! bit-sliced TA feedback planes ([`crate::tm::bank::ClauseBank`]) and
+//! the Bernoulli mask fills ([`crate::util::rng`]) all reduce to bulk
+//! boolean algebra over `u64` words. This module gives those loops an
+//! explicit SIMD shape:
+//!
+//! * [`W4`] — a portable `[u64; 4]` lane pack (one AVX2 register wide)
+//!   with the boolean ops the kernels need. On its own it compiles to
+//!   whatever the target baseline allows; the dispatched kernels below
+//!   recompile the same code under `#[target_feature]` so LLVM emits
+//!   real 256-bit ops.
+//! * Dispatched kernels — [`or_accumulate`], [`popcount_words`],
+//!   [`parity_vote_in_range`], [`and_not_into`], [`not_and_into`],
+//!   [`and_not_assign`], [`saturating_step_group`] — each checks the
+//!   cached CPU feature level ([`accel`], via
+//!   `is_x86_feature_detected!`) once per call and routes to an
+//!   AVX2/POPCNT specialization or the portable body. Every
+//!   specialization is the *same* kernel recompiled, so results are
+//!   bit-identical by construction on every path.
+//! * [`SimdMode`] / [`SimdLanes`] — the user-facing selector
+//!   (`--simd auto|wide|scalar`, `TMParams::simd`) and its resolved
+//!   form. `scalar` forces the pre-SIMD word-at-a-time loops
+//!   everywhere; `wide` forces the 4-lane paths (including the fused
+//!   index's literal→clause bitmap plane); `auto` picks wide wherever
+//!   the memory trade-off is safe.
+//!
+//! **Bit-exactness contract:** every wide path in the crate must
+//! produce identical observable state to its scalar twin — TA states,
+//! include counts, [`crate::eval::traits::FlipSink`] event streams,
+//! scores, and RNG stream positions. `rust/tests/simd_equiv.rs` proves
+//! it differentially; the unit tests here pin the lane primitives in
+//! isolation.
+
+use crate::util::bitvec::word_mask;
+
+/// User-facing SIMD lane selector (`--simd`, `TMParams::simd`).
+///
+/// A *representation/dispatch* choice, not a learning hyper-parameter:
+/// all three settings produce bit-identical machines, scores, flip
+/// streams and RNG positions. Only throughput (and, for the fused
+/// bitmap plane, memory) changes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Use the 4-wide lane paths wherever their memory cost is safe:
+    /// the fused index builds its literal→clause bitmap plane only
+    /// under [`crate::engine::fused::AUTO_PLANE_WORD_CAP`]; every other
+    /// wide path has no memory cost and is always on.
+    #[default]
+    Auto,
+    /// Force every 4-wide lane path, including the fused bitmap plane
+    /// regardless of size.
+    Wide,
+    /// Force the scalar word-at-a-time reference loops everywhere.
+    Scalar,
+}
+
+impl SimdMode {
+    /// Canonical CLI/JSON name.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdMode::Auto => "auto",
+            SimdMode::Wide => "wide",
+            SimdMode::Scalar => "scalar",
+        }
+    }
+
+    /// Resolve to the lane width the kernels dispatch on. `Auto`
+    /// resolves wide — the portable [`W4`] path is available on every
+    /// arch, so the only auto/wide difference is the fused bitmap
+    /// plane's memory gate (which needs the unresolved mode and is
+    /// handled at index build time).
+    #[inline]
+    pub fn resolve(self) -> SimdLanes {
+        match self {
+            SimdMode::Scalar => SimdLanes::Scalar,
+            SimdMode::Auto | SimdMode::Wide => SimdLanes::Wide,
+        }
+    }
+}
+
+impl std::str::FromStr for SimdMode {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "auto" => Ok(SimdMode::Auto),
+            "wide" => Ok(SimdMode::Wide),
+            "scalar" => Ok(SimdMode::Scalar),
+            other => Err(format!("unknown simd mode '{other}' (auto|wide|scalar)")),
+        }
+    }
+}
+
+/// Resolved lane width ([`SimdMode::resolve`]): what the hot loops
+/// actually branch on.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SimdLanes {
+    /// Scalar word-at-a-time reference loops.
+    Scalar,
+    /// 4-wide `u64` lane kernels (portable, with x86_64 AVX2/POPCNT
+    /// specializations behind runtime detection).
+    #[default]
+    Wide,
+}
+
+/// Runtime-detected x86_64 acceleration level for the dispatched
+/// kernels (cached after the first query; always [`X86Accel::Portable`]
+/// off x86_64).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum X86Accel {
+    /// No specialization: the portable kernel bodies run as compiled
+    /// for the target baseline.
+    Portable,
+    /// POPCNT available: population-count kernels recompiled with
+    /// hardware popcount.
+    Popcnt,
+    /// AVX2 (implies POPCNT on every shipping CPU we detect): boolean
+    /// bulk kernels recompiled to 256-bit ops.
+    Avx2,
+}
+
+impl X86Accel {
+    /// Diagnostic name (`stats`/bench reports).
+    pub fn name(self) -> &'static str {
+        match self {
+            X86Accel::Portable => "portable",
+            X86Accel::Popcnt => "popcnt",
+            X86Accel::Avx2 => "avx2",
+        }
+    }
+}
+
+/// Cached CPU feature detection: 0 = unknown, 1 = portable, 2 = popcnt,
+/// 3 = avx2.
+static ACCEL: std::sync::atomic::AtomicU8 = std::sync::atomic::AtomicU8::new(0);
+
+/// The detected acceleration level (cached; the first call runs
+/// `is_x86_feature_detected!`, later calls are one relaxed load).
+#[inline]
+pub fn accel() -> X86Accel {
+    use std::sync::atomic::Ordering;
+    match ACCEL.load(Ordering::Relaxed) {
+        1 => X86Accel::Portable,
+        2 => X86Accel::Popcnt,
+        3 => X86Accel::Avx2,
+        _ => {
+            let detected = detect();
+            let code = match detected {
+                X86Accel::Portable => 1,
+                X86Accel::Popcnt => 2,
+                X86Accel::Avx2 => 3,
+            };
+            ACCEL.store(code, Ordering::Relaxed);
+            detected
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect() -> X86Accel {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        X86Accel::Avx2
+    } else if std::arch::is_x86_feature_detected!("popcnt") {
+        X86Accel::Popcnt
+    } else {
+        X86Accel::Portable
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect() -> X86Accel {
+    X86Accel::Portable
+}
+
+/// A portable pack of 4 `u64` lanes — one AVX2 register wide. The
+/// boolean methods are plain lane-wise ops; under a `#[target_feature]`
+/// specialization LLVM lowers them to single 256-bit instructions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct W4(pub [u64; 4]);
+
+impl W4 {
+    /// All lanes zero.
+    #[inline(always)]
+    pub fn zero() -> W4 {
+        W4([0; 4])
+    }
+
+    /// Load 4 consecutive words from `src` starting at `at`.
+    #[inline(always)]
+    pub fn load(src: &[u64], at: usize) -> W4 {
+        W4([src[at], src[at + 1], src[at + 2], src[at + 3]])
+    }
+
+    /// Store the lanes to 4 consecutive words of `dst` starting at `at`.
+    #[inline(always)]
+    pub fn store(self, dst: &mut [u64], at: usize) {
+        dst[at..at + 4].copy_from_slice(&self.0);
+    }
+
+    /// Lane-wise AND.
+    #[inline(always)]
+    pub fn and(self, o: W4) -> W4 {
+        W4(std::array::from_fn(|i| self.0[i] & o.0[i]))
+    }
+
+    /// Lane-wise OR.
+    #[inline(always)]
+    pub fn or(self, o: W4) -> W4 {
+        W4(std::array::from_fn(|i| self.0[i] | o.0[i]))
+    }
+
+    /// Lane-wise XOR.
+    #[inline(always)]
+    pub fn xor(self, o: W4) -> W4 {
+        W4(std::array::from_fn(|i| self.0[i] ^ o.0[i]))
+    }
+
+    /// Lane-wise NOT.
+    #[inline(always)]
+    pub fn not(self) -> W4 {
+        W4(std::array::from_fn(|i| !self.0[i]))
+    }
+
+    /// Lane-wise `self & !o` (mask clear).
+    #[inline(always)]
+    pub fn and_not(self, o: W4) -> W4 {
+        W4(std::array::from_fn(|i| self.0[i] & !o.0[i]))
+    }
+
+    /// Sum of `count_ones` over the 4 lanes.
+    #[inline(always)]
+    pub fn popcount(self) -> u32 {
+        self.0.iter().map(|w| w.count_ones()).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatched bulk kernels. Each has one portable `*_kernel` body; the
+// x86_64 wrappers recompile that exact body under `#[target_feature]`
+// so the results are bit-identical on every dispatch path.
+// ---------------------------------------------------------------------------
+
+#[inline(always)]
+fn or_accumulate_kernel(acc: &mut [u64], src: &[u64]) {
+    let n = acc.len().min(src.len());
+    let quads = n / 4;
+    for q in 0..quads {
+        let at = q * 4;
+        W4::load(acc, at).or(W4::load(src, at)).store(acc, at);
+    }
+    for i in quads * 4..n {
+        acc[i] |= src[i];
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn or_accumulate_avx2(acc: &mut [u64], src: &[u64]) {
+    or_accumulate_kernel(acc, src);
+}
+
+/// `acc[i] |= src[i]` over `min(len)` words — the falsified-bitmap
+/// accumulation of the fused wide walk (one OR per 64 clauses per
+/// false literal).
+#[inline]
+pub fn or_accumulate(acc: &mut [u64], src: &[u64]) {
+    #[cfg(target_arch = "x86_64")]
+    if accel() == X86Accel::Avx2 {
+        // SAFETY: AVX2 presence checked at runtime by `accel()`.
+        return unsafe { or_accumulate_avx2(acc, src) };
+    }
+    or_accumulate_kernel(acc, src);
+}
+
+#[inline(always)]
+fn popcount_words_kernel(words: &[u64]) -> u64 {
+    let mut total = 0u64;
+    let quads = words.len() / 4;
+    for q in 0..quads {
+        total += W4::load(words, q * 4).popcount() as u64;
+    }
+    for &w in &words[quads * 4..] {
+        total += w.count_ones() as u64;
+    }
+    total
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "popcnt")]
+unsafe fn popcount_words_popcnt(words: &[u64]) -> u64 {
+    popcount_words_kernel(words)
+}
+
+/// Total set bits over a word slice (hardware POPCNT when detected —
+/// the x86-64 baseline compiles `count_ones` to a software fallback).
+#[inline]
+pub fn popcount_words(words: &[u64]) -> u64 {
+    #[cfg(target_arch = "x86_64")]
+    if accel() != X86Accel::Portable {
+        // SAFETY: POPCNT presence checked at runtime by `accel()`
+        // (Avx2 implies popcnt in `detect()`'s ordering).
+        return unsafe { popcount_words_popcnt(words) };
+    }
+    popcount_words_kernel(words)
+}
+
+/// Mask selecting even bit positions of a word — with interleaved
+/// clause polarity (even global id = vote `+1`), the even lanes of a
+/// falsified-clause bitmap word are exactly its positive-polarity
+/// clauses.
+pub const EVEN_LANES: u64 = 0x5555_5555_5555_5555;
+
+#[inline(always)]
+fn parity_vote_kernel(words: &[u64], lo: usize, hi: usize) -> i32 {
+    // Σ over set bits b in [lo, hi): +1 if b even, -1 if odd
+    //   = 2 * popcount(even bits) - popcount(all bits)
+    if lo >= hi {
+        return 0;
+    }
+    let first = lo / 64;
+    let last = (hi - 1) / 64;
+    let mut even = 0i64;
+    let mut total = 0i64;
+    for (wi, &raw) in words.iter().enumerate().take(last + 1).skip(first) {
+        let mut w = raw;
+        if wi == first {
+            w &= !0u64 << (lo % 64);
+        }
+        if wi == last {
+            w &= word_mask(hi, wi);
+        }
+        even += (w & EVEN_LANES).count_ones() as i64;
+        total += w.count_ones() as i64;
+    }
+    (2 * even - total) as i32
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "popcnt")]
+unsafe fn parity_vote_popcnt(words: &[u64], lo: usize, hi: usize) -> i32 {
+    parity_vote_kernel(words, lo, hi)
+}
+
+/// Signed polarity-vote sum over bit range `[lo, hi)` of a
+/// falsified-clause bitmap: `+1` per set even bit, `-1` per set odd
+/// bit. With interleaved polarity and uniform (weight-1) votes this is
+/// exactly the vote mass a class loses to falsification — the masked
+/// popcount accumulation of the fused wide walk.
+#[inline]
+pub fn parity_vote_in_range(words: &[u64], lo: usize, hi: usize) -> i32 {
+    #[cfg(target_arch = "x86_64")]
+    if accel() != X86Accel::Portable {
+        // SAFETY: POPCNT presence checked at runtime by `accel()`.
+        return unsafe { parity_vote_popcnt(words, lo, hi) };
+    }
+    parity_vote_kernel(words, lo, hi)
+}
+
+#[inline(always)]
+fn and_not_into_kernel(dst: &mut [u64], a: &[u64], b: &[u64]) {
+    let n = dst.len().min(a.len()).min(b.len());
+    let quads = n / 4;
+    for q in 0..quads {
+        let at = q * 4;
+        W4::load(a, at).and_not(W4::load(b, at)).store(dst, at);
+    }
+    for i in quads * 4..n {
+        dst[i] = a[i] & !b[i];
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn and_not_into_avx2(dst: &mut [u64], a: &[u64], b: &[u64]) {
+    and_not_into_kernel(dst, a, b);
+}
+
+/// `dst[i] = a[i] & !b[i]` — the Type I memorize combine
+/// (`up = literals & !mem_fail`).
+#[inline]
+pub fn and_not_into(dst: &mut [u64], a: &[u64], b: &[u64]) {
+    #[cfg(target_arch = "x86_64")]
+    if accel() == X86Accel::Avx2 {
+        // SAFETY: AVX2 presence checked at runtime by `accel()`.
+        return unsafe { and_not_into_avx2(dst, a, b) };
+    }
+    and_not_into_kernel(dst, a, b);
+}
+
+#[inline(always)]
+fn not_and_into_kernel(dst: &mut [u64], a: &[u64], b: &[u64]) {
+    let n = dst.len().min(a.len()).min(b.len());
+    let quads = n / 4;
+    for q in 0..quads {
+        let at = q * 4;
+        W4::load(b, at).and_not(W4::load(a, at)).store(dst, at);
+    }
+    for i in quads * 4..n {
+        dst[i] = !a[i] & b[i];
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn not_and_into_avx2(dst: &mut [u64], a: &[u64], b: &[u64]) {
+    not_and_into_kernel(dst, a, b);
+}
+
+/// `dst[i] = !a[i] & b[i]` — the Type I forget combine
+/// (`down = !literals & forget`).
+#[inline]
+pub fn not_and_into(dst: &mut [u64], a: &[u64], b: &[u64]) {
+    #[cfg(target_arch = "x86_64")]
+    if accel() == X86Accel::Avx2 {
+        // SAFETY: AVX2 presence checked at runtime by `accel()`.
+        return unsafe { not_and_into_avx2(dst, a, b) };
+    }
+    not_and_into_kernel(dst, a, b);
+}
+
+#[inline(always)]
+fn and_not_assign_kernel(dst: &mut [u64], a: &[u64]) {
+    let n = dst.len().min(a.len());
+    let quads = n / 4;
+    for q in 0..quads {
+        let at = q * 4;
+        W4::load(dst, at).and_not(W4::load(a, at)).store(dst, at);
+    }
+    for i in quads * 4..n {
+        dst[i] &= !a[i];
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn and_not_assign_avx2(dst: &mut [u64], a: &[u64]) {
+    and_not_assign_kernel(dst, a);
+}
+
+/// `dst[i] &= !a[i]` — the Type II combine
+/// (`up = exclude_mask & !literals`, built in place).
+#[inline]
+pub fn and_not_assign(dst: &mut [u64], a: &[u64]) {
+    #[cfg(target_arch = "x86_64")]
+    if accel() == X86Accel::Avx2 {
+        // SAFETY: AVX2 presence checked at runtime by `accel()`.
+        return unsafe { and_not_assign_avx2(dst, a) };
+    }
+    and_not_assign_kernel(dst, a);
+}
+
+/// Plane words per 64-literal clause-word in the bit-sliced TA layout
+/// (8-bit two's-complement automata — must equal
+/// `crate::tm::bank::PLANES`).
+pub const GROUP_PLANES: usize = 8;
+/// Clause-words processed per [`saturating_step_group`] call.
+pub const GROUP_LANES: usize = 4;
+/// Plane words consumed by one [`saturating_step_group`] call
+/// (`GROUP_LANES * GROUP_PLANES`).
+pub const GROUP_WORDS: usize = GROUP_LANES * GROUP_PLANES;
+
+#[inline(always)]
+fn saturating_step_group_kernel(
+    pl: &mut [u64],
+    up: &[u64; GROUP_LANES],
+    down: &[u64; GROUP_LANES],
+) -> ([u64; GROUP_LANES], [u64; GROUP_LANES]) {
+    debug_assert!(pl.len() >= GROUP_WORDS);
+    // Transpose-load: plane p of lane (clause-word) i lives at
+    // pl[i * GROUP_PLANES + p] — the bank's contiguous per-word layout.
+    let mut planes: [W4; GROUP_PLANES] = std::array::from_fn(|p| {
+        W4(std::array::from_fn(|i| pl[i * GROUP_PLANES + p]))
+    });
+    let sign = planes[GROUP_PLANES - 1];
+    // saturation lanes: +127 = 0b0111_1111, -128 = 0b1000_0000
+    let low_all = planes[0]
+        .and(planes[1])
+        .and(planes[2])
+        .and(planes[3])
+        .and(planes[4])
+        .and(planes[5])
+        .and(planes[6]);
+    let low_none = planes[0]
+        .or(planes[1])
+        .or(planes[2])
+        .or(planes[3])
+        .or(planes[4])
+        .or(planes[5])
+        .or(planes[6])
+        .not();
+    let add = W4(*up).and_not(low_all.and_not(sign));
+    let sub = W4(*down).and_not(low_none.and(sign));
+    let sign_before = sign;
+    // ripple-carry +1 on `add` lanes (no overflow: +127 excluded)
+    let mut carry = add;
+    for p in planes.iter_mut() {
+        let orig = *p;
+        *p = orig.xor(carry);
+        carry = carry.and(orig);
+    }
+    // borrow-ripple −1 on `sub` lanes (no underflow: −128 excluded)
+    let mut borrow = sub;
+    for p in planes.iter_mut() {
+        let orig = *p;
+        *p = orig.xor(borrow);
+        borrow = borrow.and(orig.not());
+    }
+    for (p, w4) in planes.iter().enumerate() {
+        for (i, &w) in w4.0.iter().enumerate() {
+            pl[i * GROUP_PLANES + p] = w;
+        }
+    }
+    (sign_before.0, planes[GROUP_PLANES - 1].0)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn saturating_step_group_avx2(
+    pl: &mut [u64],
+    up: &[u64; GROUP_LANES],
+    down: &[u64; GROUP_LANES],
+) -> ([u64; GROUP_LANES], [u64; GROUP_LANES]) {
+    saturating_step_group_kernel(pl, up, down)
+}
+
+/// Saturating ±1 over 4 bit-sliced clause-words at once — the 4-wide
+/// form of the ripple-carry/borrow body of
+/// [`crate::tm::bank::ClauseBank::apply_masks`].
+///
+/// `pl` holds the [`GROUP_WORDS`] contiguous plane words of 4
+/// consecutive clause-words (the bank's `(j * words + w) * 8` layout);
+/// `up`/`down` are the per-lane bump masks (already tail-masked and
+/// disjoint). Lanes at `+127` ignore `up`; lanes at `−128` ignore
+/// `down` — identical saturation algebra to the scalar word body.
+/// Returns the per-lane `(sign_before, sign_after)` words; flips are
+/// `sign_before ^ sign_after` with direction read from `sign_before`.
+#[inline]
+pub fn saturating_step_group(
+    pl: &mut [u64],
+    up: &[u64; GROUP_LANES],
+    down: &[u64; GROUP_LANES],
+) -> ([u64; GROUP_LANES], [u64; GROUP_LANES]) {
+    #[cfg(target_arch = "x86_64")]
+    if accel() == X86Accel::Avx2 {
+        // SAFETY: AVX2 presence checked at runtime by `accel()`.
+        return unsafe { saturating_step_group_avx2(pl, up, down) };
+    }
+    saturating_step_group_kernel(pl, up, down)
+}
+
+/// Portable (never-specialized) twins of the dispatched kernels, used
+/// by the dispatch-fallback tests to prove specializations are
+/// bit-identical to the portable bodies.
+#[doc(hidden)]
+pub mod portable {
+    /// Portable [`super::or_accumulate`].
+    pub fn or_accumulate(acc: &mut [u64], src: &[u64]) {
+        super::or_accumulate_kernel(acc, src);
+    }
+    /// Portable [`super::popcount_words`].
+    pub fn popcount_words(words: &[u64]) -> u64 {
+        super::popcount_words_kernel(words)
+    }
+    /// Portable [`super::parity_vote_in_range`].
+    pub fn parity_vote_in_range(words: &[u64], lo: usize, hi: usize) -> i32 {
+        super::parity_vote_kernel(words, lo, hi)
+    }
+    /// Portable [`super::saturating_step_group`].
+    pub fn saturating_step_group(
+        pl: &mut [u64],
+        up: &[u64; super::GROUP_LANES],
+        down: &[u64; super::GROUP_LANES],
+    ) -> ([u64; super::GROUP_LANES], [u64; super::GROUP_LANES]) {
+        super::saturating_step_group_kernel(pl, up, down)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn mode_parse_name_roundtrip_and_defaults() {
+        for mode in [SimdMode::Auto, SimdMode::Wide, SimdMode::Scalar] {
+            assert_eq!(mode.name().parse::<SimdMode>().unwrap(), mode);
+        }
+        assert!("avx512".parse::<SimdMode>().is_err());
+        assert_eq!(SimdMode::default(), SimdMode::Auto);
+        assert_eq!(SimdMode::Auto.resolve(), SimdLanes::Wide);
+        assert_eq!(SimdMode::Wide.resolve(), SimdLanes::Wide);
+        assert_eq!(SimdMode::Scalar.resolve(), SimdLanes::Scalar);
+    }
+
+    #[test]
+    fn accel_detection_is_cached_and_stable() {
+        let a = accel();
+        let b = accel();
+        assert_eq!(a, b);
+        assert!(!a.name().is_empty());
+    }
+
+    #[test]
+    fn w4_boolean_ops_match_scalar() {
+        let mut rng = Rng::new(0x51);
+        for _ in 0..200 {
+            let a: [u64; 4] = std::array::from_fn(|_| rng.next_u64());
+            let b: [u64; 4] = std::array::from_fn(|_| rng.next_u64());
+            let (wa, wb) = (W4(a), W4(b));
+            for i in 0..4 {
+                assert_eq!(wa.and(wb).0[i], a[i] & b[i]);
+                assert_eq!(wa.or(wb).0[i], a[i] | b[i]);
+                assert_eq!(wa.xor(wb).0[i], a[i] ^ b[i]);
+                assert_eq!(wa.not().0[i], !a[i]);
+                assert_eq!(wa.and_not(wb).0[i], a[i] & !b[i]);
+            }
+            let want: u32 = a.iter().map(|w| w.count_ones()).sum();
+            assert_eq!(wa.popcount(), want);
+        }
+    }
+
+    #[test]
+    fn bulk_combines_match_scalar_loops_at_odd_lengths() {
+        let mut rng = Rng::new(0x52);
+        for len in [0usize, 1, 3, 4, 5, 7, 8, 13, 64, 65] {
+            let a: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
+            let b: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
+            let mut dst = vec![0u64; len];
+            and_not_into(&mut dst, &a, &b);
+            assert!(dst.iter().zip(&a).zip(&b).all(|((&d, &x), &y)| d == x & !y));
+            not_and_into(&mut dst, &a, &b);
+            assert!(dst.iter().zip(&a).zip(&b).all(|((&d, &x), &y)| d == !x & y));
+            let mut acc = b.clone();
+            or_accumulate(&mut acc, &a);
+            assert!(acc.iter().zip(&a).zip(&b).all(|((&d, &x), &y)| d == x | y));
+            let mut dst = a.clone();
+            and_not_assign(&mut dst, &b);
+            assert!(dst.iter().zip(&a).zip(&b).all(|((&d, &x), &y)| d == x & !y));
+        }
+    }
+
+    #[test]
+    fn popcount_accumulation_matches_count_ones() {
+        let mut rng = Rng::new(0x53);
+        for len in [0usize, 1, 3, 4, 9, 31, 64, 100] {
+            let words: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
+            let want: u64 = words.iter().map(|w| w.count_ones() as u64).sum();
+            assert_eq!(popcount_words(&words), want);
+            assert_eq!(portable::popcount_words(&words), want);
+        }
+    }
+
+    #[test]
+    fn parity_vote_matches_per_bit_reference() {
+        let mut rng = Rng::new(0x54);
+        let words: Vec<u64> = (0..10).map(|_| rng.next_u64()).collect();
+        let reference = |lo: usize, hi: usize| -> i32 {
+            (lo..hi)
+                .filter(|&b| (words[b / 64] >> (b % 64)) & 1 == 1)
+                .map(|b| if b % 2 == 0 { 1 } else { -1 })
+                .sum()
+        };
+        for &(lo, hi) in &[
+            (0usize, 640usize),
+            (0, 1),
+            (0, 0),
+            (63, 65),
+            (100, 100),
+            (7, 300),
+            (128, 256),
+            (599, 640),
+            (64, 65),
+        ] {
+            assert_eq!(parity_vote_in_range(&words, lo, hi), reference(lo, hi), "[{lo},{hi})");
+            assert_eq!(
+                portable::parity_vote_in_range(&words, lo, hi),
+                reference(lo, hi),
+                "portable [{lo},{hi})"
+            );
+        }
+    }
+
+    /// Reference i8 semantics of one saturating step over 4 clause-words.
+    fn reference_step(
+        states: &mut [i8; 256],
+        up: &[u64; 4],
+        down: &[u64; 4],
+    ) -> ([u64; 4], [u64; 4]) {
+        let before: [u64; 4] = std::array::from_fn(|i| {
+            (0..64).fold(0u64, |acc, b| acc | (((states[i * 64 + b] < 0) as u64) << b))
+        });
+        for i in 0..4 {
+            for b in 0..64 {
+                let s = &mut states[i * 64 + b];
+                if (up[i] >> b) & 1 == 1 && *s != i8::MAX {
+                    *s += 1;
+                } else if (down[i] >> b) & 1 == 1 && *s != i8::MIN {
+                    *s -= 1;
+                }
+            }
+        }
+        let after: [u64; 4] = std::array::from_fn(|i| {
+            (0..64).fold(0u64, |acc, b| acc | (((states[i * 64 + b] < 0) as u64) << b))
+        });
+        (before, after)
+    }
+
+    fn pack_planes(states: &[i8; 256]) -> Vec<u64> {
+        let mut pl = vec![0u64; GROUP_WORDS];
+        for (k, &s) in states.iter().enumerate() {
+            let (lane, bit) = (k / 64, k % 64);
+            for p in 0..GROUP_PLANES {
+                if ((s as u8) >> p) & 1 == 1 {
+                    pl[lane * GROUP_PLANES + p] |= 1u64 << bit;
+                }
+            }
+        }
+        pl
+    }
+
+    fn unpack_planes(pl: &[u64]) -> [i8; 256] {
+        let mut states = [0i8; 256];
+        for (k, slot) in states.iter_mut().enumerate() {
+            let (lane, bit) = (k / 64, k % 64);
+            let mut byte = 0u8;
+            for p in 0..GROUP_PLANES {
+                byte |= (((pl[lane * GROUP_PLANES + p] >> bit) & 1) as u8) << p;
+            }
+            *slot = byte as i8;
+        }
+        states
+    }
+
+    #[test]
+    fn saturating_step_group_matches_i8_reference_with_rails() {
+        let mut rng = Rng::new(0x55);
+        for trial in 0..200 {
+            // seed states with both saturation rails well represented
+            let mut ref_states = [0i8; 256];
+            for s in ref_states.iter_mut() {
+                *s = match rng.below(8) {
+                    0 => i8::MAX,
+                    1 => i8::MIN,
+                    2 => -1,
+                    3 => 0,
+                    _ => (rng.below(41) as i8) - 20,
+                };
+            }
+            let mut pl = pack_planes(&ref_states);
+            let up: [u64; 4] = std::array::from_fn(|_| rng.next_u64());
+            // disjoint by construction
+            let down: [u64; 4] = std::array::from_fn(|i| rng.next_u64() & !up[i]);
+            let (want_before, want_after) = reference_step(&mut ref_states, &up, &down);
+            let (got_before, got_after) = saturating_step_group(&mut pl, &up, &down);
+            assert_eq!(got_before, want_before, "trial {trial}: sign_before");
+            assert_eq!(got_after, want_after, "trial {trial}: sign_after");
+            assert_eq!(unpack_planes(&pl), ref_states, "trial {trial}: states");
+        }
+    }
+
+    #[test]
+    fn saturation_rails_are_pinned() {
+        // every lane at +127 bumped up stays +127; at -128 bumped down
+        // stays -128; and each rail still moves the *other* direction
+        let mut states = [0i8; 256];
+        states[0] = i8::MAX;
+        states[1] = i8::MIN;
+        let mut pl = pack_planes(&states);
+        let up = [0b11u64, 0, 0, 0];
+        let down = [0u64; 4];
+        let (before, after) = saturating_step_group(&mut pl, &up, &down);
+        let got = unpack_planes(&pl);
+        assert_eq!(got[0], i8::MAX, "+127 must saturate");
+        assert_eq!(got[1], i8::MIN + 1, "-128 must still increment");
+        // lane 1 crossed no sign boundary; no flips on lane 0 either
+        assert_eq!(before[0] ^ after[0], 0);
+        let mut pl = pack_planes(&states);
+        let down = [0b11u64, 0, 0, 0];
+        let up = [0u64; 4];
+        let (before, after) = saturating_step_group(&mut pl, &up, &down);
+        let got = unpack_planes(&pl);
+        assert_eq!(got[0], i8::MAX - 1, "+127 must still decrement");
+        assert_eq!(got[1], i8::MIN, "-128 must saturate");
+        assert_eq!(before[0] ^ after[0], 0, "no sign change: 127 -> 126");
+    }
+
+    #[test]
+    fn dispatched_kernels_match_portable_twins() {
+        // whatever accel() detected, the dispatched entry points must be
+        // bit-identical to the never-specialized portable bodies — the
+        // forced-scalar/dispatch-fallback guarantee
+        let mut rng = Rng::new(0x56);
+        for _ in 0..50 {
+            let a: Vec<u64> = (0..37).map(|_| rng.next_u64()).collect();
+            let b: Vec<u64> = (0..37).map(|_| rng.next_u64()).collect();
+            let mut x = a.clone();
+            let mut y = a.clone();
+            or_accumulate(&mut x, &b);
+            portable::or_accumulate(&mut y, &b);
+            assert_eq!(x, y);
+            assert_eq!(popcount_words(&a), portable::popcount_words(&a));
+            assert_eq!(
+                parity_vote_in_range(&a, 5, 2000),
+                portable::parity_vote_in_range(&a, 5, 2000)
+            );
+            let mut pl_a: Vec<u64> = (0..GROUP_WORDS).map(|_| rng.next_u64()).collect();
+            let mut pl_b = pl_a.clone();
+            let up: [u64; 4] = std::array::from_fn(|_| rng.next_u64());
+            let down: [u64; 4] = std::array::from_fn(|i| rng.next_u64() & !up[i]);
+            let ra = saturating_step_group(&mut pl_a, &up, &down);
+            let rb = portable::saturating_step_group(&mut pl_b, &up, &down);
+            assert_eq!(ra, rb);
+            assert_eq!(pl_a, pl_b);
+        }
+    }
+}

@@ -28,10 +28,12 @@ fn hash(key: u64) -> u64 {
 }
 
 impl U64Map {
+    /// Empty map.
     pub fn new() -> Self {
         Self::with_capacity(16)
     }
 
+    /// Empty map with room for `cap` entries before rehashing.
     pub fn with_capacity(cap: usize) -> Self {
         let cap = cap.next_power_of_two().max(8);
         U64Map {
@@ -43,15 +45,18 @@ impl U64Map {
     }
 
     #[inline]
+    /// Number of entries.
     pub fn len(&self) -> usize {
         self.len
     }
 
     #[inline]
+    /// True if the map holds no entries.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
 
+    /// Insert or overwrite `key`.
     pub fn insert(&mut self, key: u64, val: u32) {
         debug_assert_ne!(key, EMPTY);
         if (self.len + 1) * 4 >= self.keys.len() * 3 {
@@ -74,6 +79,7 @@ impl U64Map {
     }
 
     #[inline]
+    /// Look up `key`.
     pub fn get(&self, key: u64) -> Option<u32> {
         let mut i = (hash(key) as usize) & self.mask;
         loop {

@@ -11,6 +11,7 @@ pub struct Stopwatch {
 }
 
 impl Stopwatch {
+    /// Stopped stopwatch with zero accumulated time.
     pub fn new() -> Self {
         Stopwatch {
             total: Duration::ZERO,
@@ -19,18 +20,21 @@ impl Stopwatch {
     }
 
     #[inline]
+    /// Begin (or resume) timing.
     pub fn start(&mut self) {
         debug_assert!(self.started.is_none(), "stopwatch already running");
         self.started = Some(Instant::now());
     }
 
     #[inline]
+    /// Pause timing, accumulating the elapsed span.
     pub fn stop(&mut self) {
         if let Some(t0) = self.started.take() {
             self.total += t0.elapsed();
         }
     }
 
+    /// Total accumulated time (including a running span).
     pub fn elapsed(&self) -> Duration {
         match self.started {
             Some(t0) => self.total + t0.elapsed(),
@@ -38,10 +42,12 @@ impl Stopwatch {
         }
     }
 
+    /// Total accumulated time in seconds.
     pub fn secs(&self) -> f64 {
         self.elapsed().as_secs_f64()
     }
 
+    /// Zero the accumulated time and stop.
     pub fn reset(&mut self) {
         self.total = Duration::ZERO;
         self.started = None;

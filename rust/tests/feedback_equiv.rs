@@ -200,6 +200,50 @@ fn saturation_storms_stay_bit_identical() {
     assert!(scalar.check_counts() && sliced.check_counts());
 }
 
+#[test]
+fn wide_lanes_preserve_cross_layout_equivalence() {
+    // The lane selector composes with the layout swap: a scalar-layout
+    // bank stepped with scalar-lane scratch must match a sliced-layout
+    // bank stepped with wide-lane scratch and wide bank kernels — the
+    // two extremes of the representation/dispatch matrix (the pure
+    // same-layout lane diff lives in tests/simd_equiv.rs).
+    use tsetlin_index::util::SimdLanes;
+    let mut rng = Rng::new(0xc105_5e17);
+    let mut seed = 40_000u64;
+    for &(clauses, n_lit) in &[(6usize, 70usize), (4, 200)] {
+        for &weighted in &[false, true] {
+            let (mut scalar, mut sliced) = random_pair(&mut rng, clauses, n_lit, 0.3, weighted);
+            sliced.set_simd(SimdLanes::Wide);
+            for trial in 0..40 {
+                let ctx = FeedbackCtx::new([1.0, 3.0, 9.0][trial % 3], trial % 2 == 0, weighted);
+                let lits = random_lits(&mut rng, n_lit, 0.5);
+                let outputs = reference_outputs(&scalar, &lits);
+                seed += 1;
+                let mut rec_a = Recorder::default();
+                let mut rec_b = Recorder::default();
+                let mut rng_a = Rng::new(seed);
+                let mut rng_b = Rng::new(seed);
+                let mut scratch_a = FeedbackScratch::with_simd(n_lit, SimdLanes::Scalar);
+                let mut scratch_b = FeedbackScratch::with_simd(n_lit, SimdLanes::Wide);
+                let tag = format!("{clauses}x{n_lit} weighted={weighted} trial={trial}");
+                let ua = update_clause_range(
+                    &mut scalar, &mut rec_a, &mut rng_a, &ctx, &outputs, &lits, u32::MAX,
+                    trial % 2 == 0, &mut scratch_a,
+                );
+                let ub = update_clause_range(
+                    &mut sliced, &mut rec_b, &mut rng_b, &ctx, &outputs, &lits, u32::MAX,
+                    trial % 2 == 0, &mut scratch_b,
+                );
+                assert_eq!(ua, ub, "{tag}: update counts diverge");
+                assert_eq!(rec_a.events, rec_b.events, "{tag}: FlipSink streams diverge");
+                assert_eq!(scalar.states(), sliced.states(), "{tag}: states diverge");
+                assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "{tag}: RNG positions diverge");
+            }
+            assert!(scalar.check_counts() && sliced.check_counts());
+        }
+    }
+}
+
 fn xor_params(weighted: bool, layout: TaLayout) -> TMParams {
     TMParams::new(2, 20, 8)
         .with_threshold(12)

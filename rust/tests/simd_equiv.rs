@@ -1,0 +1,370 @@
+//! Differential suite: wide (4-lane) vs scalar SIMD paths.
+//!
+//! `--simd` selects a dispatch width, not a representation: every wide
+//! kernel must reproduce the scalar reference loops bit-for-bit. This
+//! suite holds the machine, the data, and the RNG seeds fixed and
+//! varies *only* the lane selector, asserting identical
+//!
+//! * TA states, include counts, and clause weights,
+//! * [`FlipSink`] event streams (order, counts, weights) — the
+//!   contract the O(1) index maintenance hangs off,
+//! * inference scores from both batch engines (dense fused walk and
+//!   sparse-delta walk), and
+//! * RNG stream positions (the wide Bernoulli fill must consume
+//!   exactly the draws the scalar fill would).
+//!
+//! over random-machine feedback storms, full sequential and parallel
+//! training runs on `data/synth::noisy_xor`, and batch inference.
+
+use tsetlin_index::data::synth::noisy_xor;
+use tsetlin_index::engine::{BatchScorer, FusedEngine, Maintenance, SparseEngine};
+use tsetlin_index::eval::traits::FlipSink;
+use tsetlin_index::eval::Backend;
+use tsetlin_index::parallel::ParallelTrainer;
+use tsetlin_index::tm::bank::{ClauseBank, TaLayout};
+use tsetlin_index::tm::classifier::MultiClassTM;
+use tsetlin_index::tm::feedback::{update_clause_range, FeedbackCtx, FeedbackScratch};
+use tsetlin_index::tm::params::TMParams;
+use tsetlin_index::tm::trainer::Trainer;
+use tsetlin_index::util::{BitVec, Rng, SimdLanes, SimdMode};
+
+/// Every observable feedback event, in order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum Ev {
+    Inc { j: u32, k: u32, count: u32, weight: u32 },
+    Exc { j: u32, k: u32, count: u32, weight: u32 },
+    Weight { j: u32, delta: i32, nonempty: bool },
+}
+
+#[derive(Default)]
+struct Recorder {
+    events: Vec<Ev>,
+}
+
+impl FlipSink for Recorder {
+    fn on_include(&mut self, j: u32, k: u32, count: u32, weight: u32) {
+        self.events.push(Ev::Inc { j, k, count, weight });
+    }
+    fn on_exclude(&mut self, j: u32, k: u32, count: u32, weight: u32) {
+        self.events.push(Ev::Exc { j, k, count, weight });
+    }
+    fn on_weight(&mut self, j: u32, delta: i32, nonempty: bool) {
+        self.events.push(Ev::Weight { j, delta, nonempty });
+    }
+}
+
+/// A random mid-training bank in `layout` (states include the
+/// saturation extremes), duplicated with scalar and wide lane
+/// selectors.
+fn lane_pair(
+    rng: &mut Rng,
+    clauses: usize,
+    n_lit: usize,
+    layout: TaLayout,
+    weighted: bool,
+) -> (ClauseBank, ClauseBank) {
+    let mut bank = ClauseBank::new_with_layout(clauses, n_lit, layout);
+    for j in 0..clauses {
+        for k in 0..n_lit {
+            if rng.bern(0.3) {
+                let v = match rng.below(12) {
+                    0 => i8::MAX,
+                    1 => i8::MIN,
+                    _ => (rng.below(21) as i8) - 10,
+                };
+                bank.set_state(j, k, v);
+            }
+        }
+        if weighted && rng.bern(0.5) {
+            bank.set_weight(j, 1 + rng.below(6));
+        }
+    }
+    let mut wide = bank.clone();
+    bank.set_simd(SimdLanes::Scalar);
+    wide.set_simd(SimdLanes::Wide);
+    (bank, wide)
+}
+
+fn random_lits(rng: &mut Rng, n: usize, p: f64) -> BitVec {
+    BitVec::from_bools(&(0..n).map(|_| rng.bern(p)).collect::<Vec<_>>())
+}
+
+/// Training-mode clause outputs straight off the documented semantics
+/// (empty clauses output 1 during learning).
+fn reference_outputs(bank: &ClauseBank, lits: &BitVec) -> BitVec {
+    let mut out = BitVec::zeros(bank.clauses());
+    for j in 0..bank.clauses() {
+        let o = bank.count(j) == 0 || bank.included_literals(j).all(|k| lits.get(k));
+        out.assign(j, o);
+    }
+    out
+}
+
+/// One differential feedback step across the lane pair: same RNG seed
+/// in, states + counts + weights + event stream + RNG position
+/// compared out. The scalar side uses a scalar-lane scratch, the wide
+/// side a wide-lane scratch, so both the mask *fill* and the mask
+/// *apply* run their respective kernels.
+#[allow(clippy::too_many_arguments)]
+fn step_lanes(
+    scalar: &mut ClauseBank,
+    wide: &mut ClauseBank,
+    ctx: &FeedbackCtx,
+    lits: &BitVec,
+    p_update: u32,
+    is_target: bool,
+    seed: u64,
+    tag: &str,
+) {
+    let outputs = reference_outputs(scalar, lits);
+    let mut rec_a = Recorder::default();
+    let mut rec_b = Recorder::default();
+    let mut rng_a = Rng::new(seed);
+    let mut rng_b = Rng::new(seed);
+    let mut scratch_a = FeedbackScratch::with_simd(scalar.n_literals(), SimdLanes::Scalar);
+    let mut scratch_b = FeedbackScratch::with_simd(wide.n_literals(), SimdLanes::Wide);
+    let ua = update_clause_range(
+        scalar, &mut rec_a, &mut rng_a, ctx, &outputs, lits, p_update, is_target,
+        &mut scratch_a,
+    );
+    let ub = update_clause_range(
+        wide, &mut rec_b, &mut rng_b, ctx, &outputs, lits, p_update, is_target,
+        &mut scratch_b,
+    );
+    assert_eq!(ua, ub, "{tag}: update counts diverge");
+    assert_eq!(rec_a.events, rec_b.events, "{tag}: FlipSink streams diverge");
+    assert_eq!(scalar.states(), wide.states(), "{tag}: states diverge");
+    assert_eq!(scalar.weights(), wide.weights(), "{tag}: weights diverge");
+    for j in 0..scalar.clauses() {
+        assert_eq!(scalar.count(j), wide.count(j), "{tag}: count({j}) diverges");
+    }
+    // and the two RNG streams consumed the same number of draws
+    assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "{tag}: RNG positions diverge");
+}
+
+#[test]
+fn feedback_storms_are_bit_identical_across_lanes() {
+    let mut rng = Rng::new(0x51d3_ca57);
+    let mut seed = 1u64;
+    // 6x70 exercises a masked tail word; 4x200 spans several wide
+    // groups; 8x256 is group-aligned end to end
+    for &(clauses, n_lit) in &[(4usize, 6usize), (8, 64), (6, 70), (4, 200), (8, 256)] {
+        for &layout in &[TaLayout::Sliced, TaLayout::Scalar] {
+            for &weighted in &[false, true] {
+                let (mut scalar, mut wide) =
+                    lane_pair(&mut rng, clauses, n_lit, layout, weighted);
+                for trial in 0..60 {
+                    let s = [1.0, 2.0, 4.0, 27.0][trial % 4];
+                    let ctx = FeedbackCtx::new(s, trial % 3 != 0, weighted);
+                    let lits = random_lits(&mut rng, n_lit, 0.5);
+                    let p_update = match trial % 3 {
+                        0 => u32::MAX,
+                        1 => rng.next_u32(),
+                        _ => u32::MAX / 2,
+                    };
+                    seed += 1;
+                    step_lanes(
+                        &mut scalar,
+                        &mut wide,
+                        &ctx,
+                        &lits,
+                        p_update,
+                        trial % 2 == 0,
+                        seed,
+                        &format!(
+                            "{clauses}x{n_lit} {layout:?} weighted={weighted} trial={trial}"
+                        ),
+                    );
+                }
+                assert!(scalar.check_counts() && wide.check_counts());
+            }
+        }
+    }
+}
+
+#[test]
+fn saturation_storms_stay_bit_identical_across_lanes() {
+    // s = 1 makes every forget mask full; hammering the same bank
+    // drives states into both saturation rails and back while the
+    // lane widths must agree at every step (tail word exercised: 70).
+    let mut rng = Rng::new(0x5a7a_51d3);
+    let (mut scalar, mut wide) = lane_pair(&mut rng, 6, 70, TaLayout::Sliced, false);
+    for step in 0..400 {
+        let s = if step % 2 == 0 { 1.0 } else { 1e9 };
+        let ctx = FeedbackCtx::new(s, step % 5 == 0, false);
+        let lits = match step % 4 {
+            0 => BitVec::ones(70),
+            1 => BitVec::zeros(70),
+            _ => random_lits(&mut rng, 70, 0.5),
+        };
+        step_lanes(
+            &mut scalar,
+            &mut wide,
+            &ctx,
+            &lits,
+            u32::MAX,
+            step % 2 == 0,
+            9000 + step as u64,
+            &format!("storm step {step}"),
+        );
+    }
+    assert!(scalar.check_counts() && wide.check_counts());
+}
+
+fn xor_params(weighted: bool, layout: TaLayout, simd: SimdMode) -> TMParams {
+    TMParams::new(2, 20, 8)
+        .with_threshold(12)
+        .with_s(4.0)
+        .with_seed(77)
+        .with_weighted(weighted)
+        .with_ta_layout(layout)
+        .with_simd(simd)
+}
+
+#[test]
+fn full_training_runs_are_bit_identical_across_modes() {
+    let train = noisy_xor(8, 800, 0.05, 11);
+    let test = noisy_xor(8, 200, 0.0, 12);
+    for weighted in [false, true] {
+        for backend in Backend::ALL {
+            for layout in [TaLayout::Sliced, TaLayout::Scalar] {
+                let mut machines = vec![];
+                for simd in [SimdMode::Scalar, SimdMode::Wide] {
+                    let mut tr = Trainer::new(xor_params(weighted, layout, simd), backend);
+                    for _ in 0..4 {
+                        tr.train_epoch(train.iter());
+                    }
+                    tr.check_invariants().unwrap();
+                    machines.push(tr);
+                }
+                let [a, b] = &mut machines[..] else { unreachable!() };
+                for c in 0..2 {
+                    assert_eq!(
+                        a.tm.bank(c).states(),
+                        b.tm.bank(c).states(),
+                        "{} {layout:?} weighted={weighted} class {c}: states diverge",
+                        backend.name()
+                    );
+                    assert_eq!(a.tm.bank(c).weights(), b.tm.bank(c).weights());
+                }
+                for (lits, _) in test.iter() {
+                    assert_eq!(a.scores(lits), b.scores(lits));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_training_is_bit_identical_across_modes() {
+    let train = noisy_xor(8, 200, 0.05, 21);
+    for threads in [1usize, 2, 3] {
+        let mut machines = vec![];
+        for simd in [SimdMode::Scalar, SimdMode::Wide] {
+            let mut tr =
+                ParallelTrainer::new(xor_params(false, TaLayout::Sliced, simd), threads)
+                    .with_stale_window(4);
+            for _ in 0..3 {
+                tr.train_epoch(train.iter());
+            }
+            tr.check_invariants().unwrap();
+            machines.push(tr);
+        }
+        let [a, b] = &mut machines[..] else { unreachable!() };
+        for c in 0..2 {
+            assert_eq!(
+                a.tm().bank(c).states(),
+                b.tm().bank(c).states(),
+                "{threads} threads class {c}: states diverge"
+            );
+        }
+    }
+}
+
+/// A random mid-training multi-class machine big enough that the wide
+/// walk's clause bitmap spans several words per literal row.
+fn random_tm(rng: &mut Rng, classes: usize, cpc: usize, features: usize, weighted: bool) -> MultiClassTM {
+    let mut params = TMParams::new(classes, cpc, features);
+    params.weighted = weighted;
+    let mut tm = MultiClassTM::new(params);
+    for c in 0..classes {
+        let bank = tm.bank_mut(c);
+        for j in 0..cpc {
+            for k in 0..2 * features {
+                if rng.bern(0.1) {
+                    bank.set_state(j, k, (rng.below(11) as i8) - 5);
+                }
+            }
+            if weighted && rng.bern(0.4) {
+                bank.set_weight(j, 1 + rng.below(5));
+            }
+        }
+    }
+    tm
+}
+
+#[test]
+fn batch_engines_score_identically_across_modes() {
+    let mut rng = Rng::new(0xba7c_4e97);
+    for weighted in [false, true] {
+        // 3 * 50 = 150 global clauses -> 3-word bitmap rows
+        let mut tm = random_tm(&mut rng, 3, 50, 40, weighted);
+        let batch: Vec<BitVec> = (0..64).map(|_| random_lits(&mut rng, 80, 0.35)).collect();
+        let mut scored = vec![];
+        for mode in [SimdMode::Scalar, SimdMode::Wide] {
+            tm.set_simd(mode);
+            let mut fused = FusedEngine::with_maintenance(&tm, 2, Maintenance::Frozen);
+            let mut out = vec![0i32; batch.len() * 3];
+            fused.score_batch_into(&batch, &mut out);
+            scored.push(out);
+        }
+        assert_eq!(scored[0], scored[1], "fused engine diverges (weighted={weighted})");
+        // sparse engine on complement-structured k-hot literals
+        let khot: Vec<BitVec> = (0..64)
+            .map(|_| {
+                let x = random_lits(&mut rng, 40, 0.15);
+                let mut full = BitVec::zeros(80);
+                for k in 0..40 {
+                    full.assign(k, x.get(k));
+                    full.assign(40 + k, !x.get(k));
+                }
+                full
+            })
+            .collect();
+        let mut scored = vec![];
+        for mode in [SimdMode::Scalar, SimdMode::Wide] {
+            tm.set_simd(mode);
+            let mut sparse = SparseEngine::with_maintenance(&tm, 2, Maintenance::Frozen);
+            let mut out = vec![0i32; khot.len() * 3];
+            sparse.score_batch_into(&khot, &mut out);
+            scored.push(out);
+        }
+        assert_eq!(scored[0], scored[1], "sparse engine diverges (weighted={weighted})");
+    }
+}
+
+#[test]
+fn maintained_wide_engines_track_training_flips() {
+    // Train with wide lanes and a maintained dense index, verifying
+    // the plane mirror stays a bijection of the lists through real
+    // insert/delete/weight traffic; scores must match a scalar train
+    // of the same machine at every epoch.
+    let train = noisy_xor(8, 400, 0.05, 31);
+    let test = noisy_xor(8, 100, 0.0, 32);
+    let mut wide = Trainer::new(
+        xor_params(true, TaLayout::Sliced, SimdMode::Wide),
+        Backend::Indexed,
+    );
+    let mut scalar = Trainer::new(
+        xor_params(true, TaLayout::Sliced, SimdMode::Scalar),
+        Backend::Indexed,
+    );
+    for _ in 0..5 {
+        wide.train_epoch(train.iter());
+        scalar.train_epoch(train.iter());
+        wide.check_invariants().unwrap();
+        for (lits, _) in test.iter() {
+            assert_eq!(wide.scores(lits), scalar.scores(lits));
+        }
+    }
+}

@@ -1,0 +1,84 @@
+#!/usr/bin/env python3
+"""Check that relative links in the markdown docs resolve.
+
+Scans the repo's markdown documentation for `[text](target)` links and
+inline `file.ext` / `dir/file.ext` code references to repo paths, and
+fails if any named target does not exist in the tree. External
+(`http://`, `https://`, `mailto:`) links are skipped, as are pure
+anchors (`#section`). Anchored file links (`FILE.md#section`) check the
+file part only.
+
+Run from the repository root:
+
+    python3 tools/check_doc_links.py
+"""
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# Markdown files whose links must resolve.
+DOC_FILES = [
+    "rust/README.md",
+    "docs/ARCHITECTURE.md",
+    "docs/PROTOCOL.md",
+    "docs/TUNING.md",
+    "ROADMAP.md",
+]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# `path/to/file.rs` or `path/to/file.rs:123` inside backticks
+CODE_PATH_RE = re.compile(r"`([A-Za-z0-9_./-]+\.(?:rs|md|py|json|toml|yml))(?::\d+)?`")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def check_file(relpath: str) -> list[str]:
+    path = ROOT / relpath
+    if not path.exists():
+        return [f"{relpath}: file missing"]
+    errors = []
+    text = path.read_text(encoding="utf-8")
+    targets = set()
+    for m in LINK_RE.finditer(text):
+        targets.add(m.group(1))
+    for m in CODE_PATH_RE.finditer(text):
+        targets.add(m.group(1))
+    for target in sorted(targets):
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        file_part = target.split("#", 1)[0]
+        if not file_part:
+            continue
+        base = file_part.rsplit("/", 1)[-1]
+        # generated artifacts (bench reports, registry state, model
+        # files) and bare file-name mentions are not checkable paths
+        if base.startswith("BENCH_") or base in ("manifest.json", "model.tm"):
+            continue
+        if "/" not in file_part and not file_part.endswith(".md"):
+            continue
+        # resolve relative to the doc's directory, then the repo root,
+        # then the crate root (docs name both repo-rooted paths like
+        # rust/src/... and crate-rooted ones like tests/obs.rs)
+        candidates = [path.parent / file_part, ROOT / file_part, ROOT / "rust" / file_part]
+        if not any(c.exists() for c in candidates):
+            errors.append(f"{relpath}: broken link -> {target}")
+    return errors
+
+
+def main() -> int:
+    errors = []
+    for relpath in DOC_FILES:
+        errors.extend(check_file(relpath))
+    for e in errors:
+        print(e, file=sys.stderr)
+    if errors:
+        print(f"{len(errors)} broken doc link(s)", file=sys.stderr)
+        return 1
+    print(f"doc links ok across {len(DOC_FILES)} file(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,185 @@
+#!/usr/bin/env python3
+"""Heuristic `missing_docs` pre-check for the library crate.
+
+Approximates rustc's `missing_docs` lint without a toolchain: walks
+`rust/src/**/*.rs` (excluding `main.rs`, which is a bin crate), finds
+`pub` items (fn, struct, enum, trait, type, const, static, mod, union,
+macro) plus pub struct fields and enum variants inside documented pub
+containers, and reports any that lack a `///` or `//!` doc comment (or a
+`#[doc = ...]` / `#[doc(hidden)]` attribute) immediately above.
+
+This is a *heuristic*: it understands line structure, not the grammar.
+It intentionally skips items inside `impl`/`fn` bodies by tracking brace
+depth relative to item starts, and skips `#[cfg(test)]` modules.
+
+Run from the repository root:
+
+    python3 tools/check_missing_docs.py
+"""
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+SRC = ROOT / "rust" / "src"
+
+PUB_ITEM_RE = re.compile(
+    r"^\s*pub(?:\((?:crate|super|self|in [^)]*)\))?\s+"
+    r"(?:async\s+|unsafe\s+|extern\s+\"[^\"]*\"\s+|const\s+(?=fn)\s*)*"
+    r"(fn|struct|enum|trait|type|const|static|mod|union|macro)\s+(\w+)"
+)
+FIELD_RE = re.compile(r"^\s*pub(?:\((?:crate|super|self|in [^)]*)\))?\s+(\w+)\s*:")
+VARIANT_RE = re.compile(r"^\s*([A-Z]\w*)\s*(?:[({,]|=|$)")
+
+
+def has_doc(lines: list[str], idx: int) -> bool:
+    """True if the item starting at lines[idx] has a doc comment/attr above."""
+    j = idx - 1
+    while j >= 0:
+        s = lines[j].strip()
+        if s.startswith("///") or s.startswith("//!"):
+            return True
+        if s.startswith("#[doc") or "#[doc(hidden)]" in s:
+            return True
+        # skim other attributes and plain comments
+        if s.startswith("#[") or s.startswith("//") or s.endswith("]"):
+            j -= 1
+            continue
+        return False
+    return False
+
+
+def hidden_above(lines: list[str], idx: int) -> bool:
+    j = idx - 1
+    while j >= 0:
+        s = lines[j].strip()
+        if "#[doc(hidden)]" in s or "#[cfg(test)]" in s:
+            return True
+        if s.startswith("#[") or s.startswith("//") or s.endswith("]"):
+            j -= 1
+            continue
+        return False
+    return False
+
+
+def mod_has_inner_docs(decl_path: Path, name: str) -> bool:
+    """`pub mod name;` is documented if the module file opens with `//!`."""
+    base = decl_path.parent
+    for cand in (base / f"{name}.rs", base / name / "mod.rs"):
+        if cand.exists():
+            for line in cand.read_text(encoding="utf-8").splitlines():
+                s = line.strip()
+                if not s:
+                    continue
+                return s.startswith("//!")
+    return False
+
+
+def check_file(path: Path) -> list[str]:
+    errors = []
+    text = path.read_text(encoding="utf-8")
+    lines = text.splitlines()
+    depth = 0  # brace depth; items at depth 0 (file) or inside pub mods
+    item_depths = []  # depths at which a pub container (struct/enum/mod) opened
+    container_kind = {}  # depth -> "struct" | "enum" | "mod"
+    skip_until_depth = None  # inside fn/impl/test-mod bodies
+    for i, raw in enumerate(lines):
+        line = raw.split("//")[0] if not raw.lstrip().startswith("//") else ""
+        stripped = raw.strip()
+        at_depth = depth
+        opens = line.count("{")
+        closes = line.count("}")
+
+        if skip_until_depth is None:
+            m = PUB_ITEM_RE.match(raw)
+            documentable = at_depth == 0 or container_kind.get(at_depth) == "mod"
+            if container_kind.get(at_depth) == "impl":
+                am = re.match(
+                    r"^\s*pub\s+(?:async\s+|unsafe\s+|const\s+)*(fn|const|type)\s+(\w+)", raw
+                )
+                if am and not hidden_above(lines, i) and not has_doc(lines, i):
+                    errors.append(
+                        f"{path.relative_to(ROOT)}:{i + 1}: assoc {am.group(1)} {am.group(2)}"
+                    )
+                if am and opens > closes:
+                    skip_until_depth = at_depth
+                elif not am and re.match(r"^\s*(?:pub\s+)?(?:async\s+|unsafe\s+|const\s+)*fn[\s<]", raw) and opens > closes:
+                    skip_until_depth = at_depth
+            if m and documentable:
+                kind, name = m.group(1), m.group(2)
+                if (
+                    not hidden_above(lines, i)
+                    and not has_doc(lines, i)
+                    and not (kind == "mod" and mod_has_inner_docs(path, name))
+                ):
+                    errors.append(f"{path.relative_to(ROOT)}:{i + 1}: pub {kind} {name}")
+                if kind in ("struct", "enum") and opens > closes:
+                    container_kind[at_depth + 1] = kind
+                elif kind == "mod" and opens > closes:
+                    container_kind[at_depth + 1] = "mod"
+                elif kind in ("fn",) and opens > closes:
+                    skip_until_depth = at_depth
+            elif documentable and re.match(r"^\s*(?:pub\s+)?(?:unsafe\s+)?(impl|fn)[\s<]", raw):
+                if opens > closes:
+                    # inherent impls expose documentable associated items;
+                    # trait impls (`impl Trait for T`) inherit trait docs
+                    is_impl = re.match(r"^\s*(?:unsafe\s+)?impl[\s<]", raw)
+                    if is_impl and " for " not in line:
+                        container_kind[at_depth + 1] = "impl"
+                    else:
+                        skip_until_depth = at_depth
+            elif re.match(r"^\s*mod\s+tests\b", raw) or "#[cfg(test)]" in raw:
+                if "#[cfg(test)]" in raw:
+                    # the next mod/fn body gets skipped when it opens
+                    pass
+            elif re.match(r"^\s*mod\s+\w+", raw) and opens > closes and hidden_above(lines, i):
+                skip_until_depth = at_depth
+            elif container_kind.get(at_depth) == "struct":
+                fm = FIELD_RE.match(raw)
+                if fm and not has_doc(lines, i) and not hidden_above(lines, i):
+                    errors.append(f"{path.relative_to(ROOT)}:{i + 1}: pub field {fm.group(1)}")
+            elif container_kind.get(at_depth) == "enum":
+                vm = VARIANT_RE.match(raw)
+                if vm and not stripped.startswith("#") and not has_doc(lines, i):
+                    errors.append(f"{path.relative_to(ROOT)}:{i + 1}: variant {vm.group(1)}")
+                if opens > closes:
+                    # braced variant: its named fields are documentable
+                    container_kind[at_depth + 1] = "variant"
+                # single-line braced variant: check inline named fields
+                if vm and "{" in line and "}" in line:
+                    inner = line.split("{", 1)[1].rsplit("}", 1)[0]
+                    for fld in re.finditer(r"(\w+)\s*:", inner):
+                        errors.append(
+                            f"{path.relative_to(ROOT)}:{i + 1}: variant field {fld.group(1)}"
+                        )
+            elif container_kind.get(at_depth) == "variant":
+                fm = re.match(r"^\s*(\w+)\s*:", raw)
+                if fm and not has_doc(lines, i):
+                    errors.append(
+                        f"{path.relative_to(ROOT)}:{i + 1}: variant field {fm.group(1)}"
+                    )
+
+        depth += opens - closes
+        if skip_until_depth is not None and depth <= skip_until_depth:
+            skip_until_depth = None
+        # container bookkeeping: drop kinds above the current depth
+        for d in [d for d in container_kind if d > depth]:
+            del container_kind[d]
+    return errors
+
+
+def main() -> int:
+    errors = []
+    for path in sorted(SRC.rglob("*.rs")):
+        if path.name == "main.rs":
+            continue
+        errors.extend(check_file(path))
+    for e in errors:
+        print(e)
+    print(f"{len(errors)} potential missing_docs item(s)", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
